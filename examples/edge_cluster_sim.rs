@@ -1,0 +1,45 @@
+//! Edge-cluster simulation: an 8-worker, 4-server deployment training all
+//! four paper models — per-model normalized times plus the Fig. 11
+//! scalability curve under server-side bandwidth contention.
+//!
+//! ```sh
+//! cargo run --release --example edge_cluster_sim -- --workers 8
+//! ```
+
+use dynacomm::config::{Strategy, SystemConfig};
+use dynacomm::figures::{self, Pass};
+use dynacomm::models;
+use dynacomm::sim::cluster;
+use dynacomm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = SystemConfig::default().apply_args(&args);
+
+    println!("=== per-model normalized times (batch={}) ===\n", cfg.batch);
+    for pass in [Pass::Forward, Pass::Backward] {
+        let cells = figures::normalized_pass_times(cfg.batch, pass);
+        let label = if pass == Pass::Forward { "forward" } else { "backward" };
+        println!("{}", figures::render_normalized(&cells, label));
+    }
+
+    println!("=== scalability: {}-worker cluster ===\n", cfg.workers);
+    let model = models::by_name(&cfg.model).unwrap();
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12}",
+        "workers", "sequential", "lbl", "ibatch", "dynacomm"
+    );
+    let mut n = 1;
+    while n <= cfg.workers {
+        let mut row = format!("{n:<10}");
+        for s in Strategy::ALL {
+            row.push_str(&format!(
+                " {:>12.2}",
+                cluster::speedup(&model, &cfg, s, n)
+            ));
+        }
+        println!("{row}");
+        n *= 2;
+    }
+    Ok(())
+}

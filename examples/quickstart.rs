@@ -1,0 +1,76 @@
+//! Quickstart: schedule one iteration of ResNet-152 on the paper's default
+//! edge testbed and compare all four strategies.
+//!
+//! ```sh
+//! cargo run --release --example quickstart -- --model resnet152 --batch 32
+//! ```
+
+use dynacomm::config::{Strategy, SystemConfig};
+use dynacomm::models;
+use dynacomm::sim::{self, timeline};
+use dynacomm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = SystemConfig::default().apply_args(&args);
+    let model = models::by_name(&cfg.model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", cfg.model))?;
+    let cv = model.cost_vectors(&cfg);
+
+    println!(
+        "== {} | {} layers | batch {} | {} Gbps nominal | Δt = {:.1} ms ==\n",
+        model.name,
+        model.depth(),
+        cfg.batch,
+        cfg.net.bandwidth_gbps,
+        cv.delta_t
+    );
+
+    let seq_total = sim::simulate_cv(&cv, Strategy::Sequential).total_ms();
+    for s in Strategy::ALL {
+        let r = sim::simulate_cv(&cv, s);
+        println!(
+            "{:<11} segments fwd/bwd = {:>3}/{:<3}  iteration = {:>9.1} ms  \
+             (-{:.1}% vs sequential)",
+            s.name(),
+            r.plan.fwd.num_transmissions(),
+            r.plan.bwd.num_transmissions(),
+            r.total_ms(),
+            100.0 * (1.0 - r.total_ms() / seq_total),
+        );
+    }
+
+    // Show DynaComm's actual forward decomposition as segment ranges.
+    let r = sim::simulate_cv(&cv, Strategy::DynaComm);
+    println!("\nDynaComm forward segments (layer ranges):");
+    let segs = r.plan.fwd.fwd_segments();
+    for chunk in segs.chunks(8) {
+        let row: Vec<String> =
+            chunk.iter().map(|(a, b)| format!("[{a}-{b}]")).collect();
+        println!("  {}", row.join(" "));
+    }
+
+    // And the first few timeline events.
+    println!("\nforward timeline (first 12 events):");
+    let events = timeline::forward_timeline(&cv, &r.plan.fwd);
+    for e in events.iter().take(12) {
+        println!(
+            "  {:>8.1} .. {:>8.1} ms  {:?} layers {}-{}",
+            e.start, e.end, e.kind, e.lo, e.hi
+        );
+    }
+
+    // Fig. 3-style Gantt charts: the baseline vs the dynamic schedule.
+    let seq = sim::simulate_cv(&cv, Strategy::Sequential);
+    println!("\nsequential forward:");
+    print!(
+        "{}",
+        dynacomm::sim::gantt::render(
+            &timeline::forward_timeline(&cv, &seq.plan.fwd),
+            72
+        )
+    );
+    println!("dynacomm forward:");
+    print!("{}", dynacomm::sim::gantt::render(&events, 72));
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Sensitivity exploration (Fig. 9): how the iteration-time-reduced ratio
+//! responds to batch size, bandwidth, and Δt — including the crossovers
+//! the paper discusses (compute-bound beyond ~bs 24-48; comm-bound at
+//! 1 Gbps).
+//!
+//! ```sh
+//! cargo run --release --example schedule_sensitivity -- --model resnet152
+//! ```
+
+use dynacomm::config::{Strategy, SystemConfig};
+use dynacomm::models;
+use dynacomm::sim::{reduced_ratio, sweep};
+use dynacomm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let cfg = SystemConfig::default().apply_args(&args);
+    let model = models::by_name(&cfg.model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{}'", cfg.model))?;
+
+    let rows = sweep::sweep_batch(&model, &cfg, &[4, 8, 16, 24, 32, 48, 64, 96]);
+    println!(
+        "{}",
+        dynacomm::figures::render_sweep(&rows, "batch", "reduced ratio vs batch size")
+    );
+
+    let rows =
+        sweep::sweep_bandwidth(&model, &cfg, &[0.5, 1.0, 2.0, 5.0, 10.0, 20.0]);
+    println!(
+        "{}",
+        dynacomm::figures::render_sweep(&rows, "gbps", "reduced ratio vs bandwidth")
+    );
+
+    // Δt sweep (beyond the paper: ablate the overhead the schedulers trade
+    // against).
+    println!("reduced ratio vs Δt (ms):");
+    println!(
+        "{:<10} {:>11} {:>11} {:>11}",
+        "Δt", "lbl", "ibatch", "dynacomm"
+    );
+    for dt in [0.0, 2.0, 5.0, 9.0, 20.0, 50.0] {
+        let mut c = cfg.clone();
+        c.net.delta_t_ms = dt;
+        let cv = model.cost_vectors(&c);
+        println!(
+            "{:<10} {:>11.4} {:>11.4} {:>11.4}",
+            dt,
+            reduced_ratio(&cv, Strategy::LayerByLayer),
+            reduced_ratio(&cv, Strategy::IBatch),
+            reduced_ratio(&cv, Strategy::DynaComm),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,73 @@
+//! END-TO-END DRIVER: train EdgeCNN on a synthetic 10-class dataset through
+//! the full three-layer stack —
+//!
+//!   L1  Pallas kernels (tiled matmul / im2col conv), AOT-lowered
+//!   L2  layer-wise JAX fwd/bwd artifacts, executed via PJRT
+//!   L3  this Rust coordinator: parameter-server shards + edge workers on
+//!       real loopback TCP through the shaped edge network, with DynaComm
+//!       scheduling the segmented pulls/pushes from live profiles.
+//!
+//! Logs the loss curve and accuracies; the run is recorded in
+//! EXPERIMENTS.md. Requires `make artifacts`.
+//!
+//! ```sh
+//! cargo run --release --example train_edgecnn -- \
+//!     --workers 2 --servers 2 --epochs 4 --iters 10 --strategy dynacomm
+//! ```
+
+use dynacomm::config::Strategy;
+use dynacomm::runtime::artifacts_available;
+use dynacomm::training::{train, TrainConfig};
+use dynacomm::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    if !artifacts_available("artifacts") {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let mut cfg = TrainConfig::default();
+    cfg.workers = args.usize("workers", 2);
+    cfg.servers = args.usize("servers", 2);
+    cfg.epochs = args.usize("epochs", 4);
+    cfg.iters_per_epoch = args.usize("iters", 10);
+    cfg.lr = args.f64("lr", cfg.lr as f64) as f32;
+    cfg.setup_ms = args.f64("setup-ms", 2.0);
+    cfg.latency_ms = args.f64("latency-ms", 1.0);
+    cfg.bytes_per_ms = args.f64("bytes-per-ms", 500_000.0);
+    if let Some(s) = args.get("strategy") {
+        cfg.strategy = Strategy::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --strategy '{s}'"))?;
+    }
+    println!(
+        "training edgecnn: {} workers x {} servers, {} epochs x {} iters, \
+         strategy={}",
+        cfg.workers,
+        cfg.servers,
+        cfg.epochs,
+        cfg.iters_per_epoch,
+        cfg.strategy.name()
+    );
+
+    let r = train(&cfg)?;
+    println!("\n{:<7} {:>10} {:>12} {:>12}", "epoch", "loss", "train-top1", "iter(ms)");
+    for e in 0..r.epoch_loss.len() {
+        println!(
+            "{:<7} {:>10.4} {:>12.3} {:>12.1}",
+            e, r.epoch_loss[e], r.epoch_train_acc[e], r.epoch_iter_ms[e]
+        );
+    }
+    println!(
+        "\nval-top1 = {:.3}   samples/sec/worker = {:.2}",
+        r.val_acc, r.samples_per_sec_per_worker
+    );
+    for (w, rep) in r.per_worker.iter().enumerate() {
+        if let Some((i, f, b)) = rep.plans.last() {
+            println!(
+                "worker {w}: last reschedule @iter {i}: fwd {f} / bwd {b} segments \
+                 (sched {:.3} ms)",
+                rep.sched_ms.last().unwrap_or(&0.0)
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,162 @@
+"""AOT export: lower the layer-wise EdgeCNN to HLO-text artifacts.
+
+This is the only place Python touches the system: ``make artifacts`` runs it
+once, and the Rust coordinator (L3) loads the resulting ``artifacts/`` at
+startup through PJRT. Interchange is HLO **text**, not serialized
+``HloModuleProto`` — jax >= 0.5 emits protos with 64-bit instruction ids
+that the image's xla_extension 0.5.1 rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted per batch size:
+
+* ``<layer>_fwd.hlo.txt``  — ``(w, b, x) -> (y,)``
+* ``<layer>_bwd.hlo.txt``  — ``(w, b, x, gy) -> (gw, gb, gx)``
+* ``loss.hlo.txt``         — ``(logits, onehot) -> (loss, glogits)``
+* ``full_fwd.hlo.txt``     — ``(w1, b1, ..., wL, bL, x) -> (logits,)``
+* ``init/<layer>_{w,b}.bin`` — little-endian f32 initial parameters
+* ``manifest.json``        — everything the Rust side needs to wire it up
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """jitted-and-lowered jax function -> XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _conv_flops(layer: M.LayerDef, batch: int) -> tuple[int, int]:
+    """(fwd, bwd) FLOPs for one layer at the given batch size."""
+    if layer.kind == "conv":
+        h, w, _ = layer.in_shape
+        _, _, cin, cout = layer.w_shape
+        fwd = 2 * 9 * cin * cout * h * w * batch
+    else:
+        fin, fout = layer.w_shape
+        fwd = 2 * fin * fout * batch
+    # backward computes both the input and the weight gradient: ~2x forward.
+    return fwd, 2 * fwd
+
+
+def export(out_dir: str, batch: int, seed: int = 0, tuple1_wrap: bool = True) -> dict:
+    """Lower every artifact into ``out_dir`` and return the manifest dict."""
+    os.makedirs(os.path.join(out_dir, "init"), exist_ok=True)
+    layers = M.edgecnn_layers()
+    params = M.init_params(seed)
+
+    manifest: dict = {
+        "model": "edgecnn",
+        "batch": batch,
+        "seed": seed,
+        "num_classes": 10,
+        "input_shape": list(layers[0].in_shape),
+        "loss": "loss.hlo.txt",
+        "full_fwd": "full_fwd.hlo.txt",
+        "layers": [],
+    }
+
+    for layer, (w, b) in zip(layers, params):
+        fwd = M.make_layer_fwd(layer)
+        bwd = M.make_layer_bwd(layer)
+        x_spec = _spec((batch, *layer.in_shape))
+        gy_spec = _spec((batch, *layer.out_shape))
+        w_spec, b_spec = _spec(layer.w_shape), _spec(layer.b_shape)
+
+        fwd_txt = to_hlo_text(jax.jit(fwd, keep_unused=True).lower(w_spec, b_spec, x_spec))
+        bwd_txt = to_hlo_text(
+            jax.jit(bwd, keep_unused=True).lower(w_spec, b_spec, x_spec, gy_spec)
+        )
+        fwd_file = f"{layer.name}_fwd.hlo.txt"
+        bwd_file = f"{layer.name}_bwd.hlo.txt"
+        with open(os.path.join(out_dir, fwd_file), "w") as f:
+            f.write(fwd_txt)
+        with open(os.path.join(out_dir, bwd_file), "w") as f:
+            f.write(bwd_txt)
+
+        w_file = f"init/{layer.name}_w.bin"
+        b_file = f"init/{layer.name}_b.bin"
+        np.asarray(w, dtype="<f4").tofile(os.path.join(out_dir, w_file))
+        np.asarray(b, dtype="<f4").tofile(os.path.join(out_dir, b_file))
+
+        fwd_flops, bwd_flops = _conv_flops(layer, batch)
+        param_count = int(np.prod(layer.w_shape) + np.prod(layer.b_shape))
+        manifest["layers"].append(
+            {
+                "name": layer.name,
+                "kind": layer.kind,
+                "w_shape": list(layer.w_shape),
+                "b_shape": list(layer.b_shape),
+                "in_shape": list(layer.in_shape),
+                "out_shape": list(layer.out_shape),
+                "pool": layer.pool,
+                "relu": layer.relu,
+                "fwd": fwd_file,
+                "bwd": bwd_file,
+                "w_init": w_file,
+                "b_init": b_file,
+                "param_count": param_count,
+                "param_bytes": 4 * param_count,
+                "fwd_flops": fwd_flops,
+                "bwd_flops": bwd_flops,
+            }
+        )
+
+    # Loss head.
+    logits_spec = _spec((batch, 10))
+    loss_txt = to_hlo_text(jax.jit(M.loss_fwd, keep_unused=True).lower(logits_spec, logits_spec))
+    with open(os.path.join(out_dir, "loss.hlo.txt"), "w") as f:
+        f.write(loss_txt)
+
+    # Fused whole-model forward: used by the Rust integration tests to check
+    # that layer-wise composition reproduces the monolithic lowering.
+    def full(*args):
+        ps = [(args[2 * i], args[2 * i + 1]) for i in range(len(layers))]
+        return M.full_fwd(ps, args[-1])
+
+    specs = []
+    for layer in layers:
+        specs += [_spec(layer.w_shape), _spec(layer.b_shape)]
+    specs.append(_spec((batch, *layers[0].in_shape)))
+    full_txt = to_hlo_text(jax.jit(full, keep_unused=True).lower(*specs))
+    with open(os.path.join(out_dir, "full_fwd.hlo.txt"), "w") as f:
+        f.write(full_txt)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land in its directory")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    manifest = export(out_dir, args.batch, args.seed)
+    n_files = 2 * len(manifest["layers"]) + 2
+    print(f"exported {n_files} HLO artifacts (batch={args.batch}) to {out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""L1: 3x3 SAME conv2d lowered onto the Pallas matmul via im2col.
+
+The TPU-shaped formulation of convolution: instead of a CUDA-style implicit
+GEMM over threadblocks, patches are materialized (im2col — pure data
+movement XLA fuses into the surrounding graph) and the contraction runs on
+the MXU-tiled Pallas matmul from :mod:`.matmul`. Differentiability comes for
+free: im2col is plain jnp (autodiff-able) and the matmul carries a custom
+VJP.
+
+Layout is NHWC for activations and HWIO for weights, matching
+``jax.lax.conv_general_dilated`` in the reference oracle (``ref.py``).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .matmul import matmul
+
+
+def im2col_3x3_same(x):
+    """Extract 3x3 SAME patches: ``(n, h, w, c) -> (n, h, w, 9*c)``.
+
+    Feature order is ``(dy, dx, c)`` row-major, matching a row-major
+    reshape of an HWIO weight tensor ``(3, 3, cin, cout) -> (9*cin, cout)``.
+    """
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)))
+    cols = []
+    for dy in range(3):
+        for dx in range(3):
+            cols.append(xp[:, dy : dy + h, dx : dx + w, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d_3x3_same(x, w):
+    """3x3 stride-1 SAME convolution: ``(n,h,w,cin) * (3,3,cin,cout)``."""
+    n, h, wd, cin = x.shape
+    kh, kw, wcin, cout = w.shape
+    assert (kh, kw) == (3, 3) and wcin == cin, (x.shape, w.shape)
+    patches = im2col_3x3_same(x).reshape(n * h * wd, 9 * cin)
+    wmat = w.reshape(9 * cin, cout)
+    out = matmul(patches, wmat)
+    return out.reshape(n, h, wd, cout)

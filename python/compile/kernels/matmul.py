@@ -1,0 +1,118 @@
+"""L1: tiled matmul as a Pallas kernel (the compute hot-spot).
+
+The paper's testbed is CPU-edge machines; per the session's
+Hardware-Adaptation rule we author the hot-spot the TPU way instead of a
+mechanical port: the matmul is block-tiled for the MXU systolic array
+(128x128x128 f32 tiles by default, VMEM-resident blocks expressed through
+``BlockSpec``), accumulating in f32 with ``preferred_element_type``.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret mode lowers the kernel to plain HLO so the same
+artifact executes under the Rust PJRT client.
+
+The kernel is wrapped in ``jax.custom_vjp`` so the layer-wise backward
+functions in ``model.py`` can differentiate through it (``pallas_call`` has
+no autodiff rule); the backward pass reuses the same Pallas kernel for
+``gx = gy @ w^T`` and ``gw = x^T @ gy``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile, CPU-interpret-tuned (see EXPERIMENTS.md §Perf): interpret
+# mode pays a fixed ~6 ms per grid step, so the fastest CPU execution uses
+# as FEW grid steps as VMEM-equivalent budget allows. The sweep measured
+# 12x speedup going bm 128→2048 on the conv im2col shapes. On a real TPU
+# the same kernel should be built with (128, 128, 128)–(512, 128, 512)
+# MXU-square tiles — blocks here stay within a 4 MiB x-block so the
+# BlockSpec remains VMEM-legal either way (DESIGN.md §Hardware-Adaptation).
+BLOCK_M = 4096
+BLOCK_N = 128
+BLOCK_K = 2048
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; grid axis 2 walks the K blocks."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def _matmul_padded(x, w, bm: int, bn: int, bk: int):
+    """Pallas matmul over inputs already padded to block multiples."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_raw(x, w, *, bm: int = BLOCK_M, bn: int = BLOCK_N, bk: int = BLOCK_K):
+    """``x @ w`` through the Pallas kernel, no autodiff wrapper.
+
+    Shapes need not be multiples of the block sizes; inputs are zero-padded
+    up to block multiples (zeros contribute nothing to the contraction) and
+    the result is sliced back.
+
+    Block sizes adapt downward to the actual dims (8-aligned): padding a
+    27-wide contraction to a 128-wide block would waste ~5x FLOPs — on the
+    small edge models this library targets, shrinking the tile to the
+    workload beats the fixed MXU-square tile. Dims ≥ the requested block
+    keep the full 128 tile (the MXU-shaped choice for large layers). See
+    EXPERIMENTS.md §Perf for the measured effect.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(bm, _ceil_to(m, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    out = _matmul_padded(xp, wp, bm, bn, bk)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable Pallas matmul: ``(m, k) @ (k, n) -> (m, n)`` in f32."""
+    return matmul_raw(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_raw(x, w), (x, w)
+
+
+def _matmul_bwd(res, gy):
+    x, w = res
+    gx = matmul_raw(gy, w.T)
+    gw = matmul_raw(x.T, gy)
+    return gx, gw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)

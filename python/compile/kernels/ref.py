@@ -1,0 +1,34 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and the model.
+
+Everything here must avoid the Pallas path entirely: these are the ground
+truth the kernels and the layer-wise model are tested against at build time
+(pytest + hypothesis).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Ground truth for :func:`..kernels.matmul.matmul`."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def conv2d_3x3_same_ref(x, w):
+    """Ground truth for :func:`..kernels.conv2d.conv2d_3x3_same` (NHWC/HWIO)."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def maxpool2x2_ref(x):
+    """2x2 stride-2 max pool, NHWC."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )

@@ -1,0 +1,161 @@
+"""L2: EdgeCNN — the paper's training workload, expressed layer-wise in JAX.
+
+DynaComm schedules *per-layer* parameter pulls and gradient pushes that
+overlap with *per-layer* compute. To let the Rust worker reproduce that
+execution model faithfully, the model is not exported as one monolithic
+train step: every parameterized layer gets its own forward function
+``fwd(w, b, x) -> y`` and its own backward function
+``bwd(w, b, x, gy) -> (gw, gb, gx)`` (derived with ``jax.vjp``), each lowered
+to an independent HLO artifact. Transformation layers with no parameters
+(pooling, flatten) are folded into the preceding/following parameterized
+layer exactly as the paper prescribes (Section III-A).
+
+EdgeCNN is a CIFAR-10-scale CNN (6 parameterized layers, ~280k params):
+
+    conv1 3->16        (B,32,32,3)  -> (B,32,32,16)
+    conv2 16->16 +pool              -> (B,16,16,16)
+    conv3 16->32                    -> (B,16,16,32)
+    conv4 32->32 +pool              -> (B,8,8,32)
+    fc1   2048->128   (flatten)     -> (B,128)
+    fc2   128->10                   -> (B,10) logits
+
+Convolutions and dense layers run on the L1 Pallas kernels.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.conv2d import conv2d_3x3_same
+from .kernels.matmul import matmul
+from .kernels import ref
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDef:
+    """Static description of one parameterized layer."""
+
+    name: str
+    kind: str  # "conv" | "fc"
+    w_shape: Tuple[int, ...]
+    b_shape: Tuple[int, ...]
+    in_shape: Tuple[int, ...]  # without batch dim
+    out_shape: Tuple[int, ...]  # without batch dim
+    pool: bool = False  # 2x2 maxpool folded after activation
+    relu: bool = True
+
+
+def edgecnn_layers() -> List[LayerDef]:
+    """The 6 parameterized layers of EdgeCNN (shapes without batch dim)."""
+    return [
+        LayerDef("conv1", "conv", (3, 3, 3, 16), (16,), (32, 32, 3), (32, 32, 16)),
+        LayerDef(
+            "conv2", "conv", (3, 3, 16, 16), (16,), (32, 32, 16), (16, 16, 16), pool=True
+        ),
+        LayerDef("conv3", "conv", (3, 3, 16, 32), (32,), (16, 16, 16), (16, 16, 32)),
+        LayerDef(
+            "conv4", "conv", (3, 3, 32, 32), (32,), (16, 16, 32), (8, 8, 32), pool=True
+        ),
+        LayerDef("fc1", "fc", (2048, 128), (128,), (8, 8, 32), (128,)),
+        LayerDef("fc2", "fc", (128, 10), (10,), (128,), (10,), relu=False),
+    ]
+
+
+def _maxpool2x2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def make_layer_fwd(layer: LayerDef, use_ref: bool = False) -> Callable:
+    """Forward function ``(w, b, x) -> y`` for one layer.
+
+    ``use_ref=True`` swaps the Pallas kernels for the pure-jnp oracles —
+    used only by the build-time test suite.
+    """
+    conv = ref.conv2d_3x3_same_ref if use_ref else conv2d_3x3_same
+    mm = ref.matmul_ref if use_ref else matmul
+
+    if layer.kind == "conv":
+
+        def fwd(w, b, x):
+            y = conv(x, w) + b
+            if layer.relu:
+                y = jax.nn.relu(y)
+            if layer.pool:
+                y = _maxpool2x2(y)
+            return y
+
+    elif layer.kind == "fc":
+
+        def fwd(w, b, x):
+            x2 = x.reshape(x.shape[0], -1)  # folds the flatten transform
+            y = mm(x2, w) + b
+            if layer.relu:
+                y = jax.nn.relu(y)
+            return y
+
+    else:  # pragma: no cover - guarded by LayerDef construction
+        raise ValueError(layer.kind)
+
+    return fwd
+
+
+def make_layer_bwd(layer: LayerDef, use_ref: bool = False) -> Callable:
+    """Backward function ``(w, b, x, gy) -> (gw, gb, gx)`` for one layer."""
+    fwd = make_layer_fwd(layer, use_ref=use_ref)
+
+    def bwd(w, b, x, gy):
+        _, vjp = jax.vjp(fwd, w, b, x)
+        gw, gb, gx = vjp(gy)
+        return gw, gb, gx
+
+    return bwd
+
+
+def loss_fwd(logits, onehot):
+    """Softmax cross-entropy head: ``(logits, onehot) -> (loss, glogits)``.
+
+    Returns both the mean loss and its gradient w.r.t. logits so the Rust
+    worker gets the backward seed from a single PJRT call.
+    """
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+    n = logits.shape[0]
+    glogits = (jax.nn.softmax(logits, axis=-1) - onehot) / n
+    return loss, glogits
+
+
+def init_params(seed: int = 0) -> List[Tuple[jnp.ndarray, jnp.ndarray]]:
+    """He-normal initialization for every layer, deterministic in ``seed``."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for layer in edgecnn_layers():
+        key, wk = jax.random.split(key)
+        fan_in = 1
+        for d in layer.w_shape[:-1]:
+            fan_in *= d
+        w = jax.random.normal(wk, layer.w_shape, jnp.float32) * jnp.sqrt(
+            2.0 / fan_in
+        )
+        b = jnp.zeros(layer.b_shape, jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def full_fwd(params, x, use_ref: bool = False):
+    """Whole-model forward (composition of the layer functions) -> logits."""
+    for layer, (w, b) in zip(edgecnn_layers(), params):
+        x = make_layer_fwd(layer, use_ref=use_ref)(w, b, x)
+    return x
+
+
+def full_loss(params, x, onehot, use_ref: bool = False):
+    """Whole-model loss — autodiff ground truth for the layer-wise bwd."""
+    logits = full_fwd(params, x, use_ref=use_ref)
+    loss, _ = loss_fwd(logits, onehot)
+    return loss

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Make `compile` (the build-time package) importable when pytest runs from
+# the `python/` directory or from the repo root.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

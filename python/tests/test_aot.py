@@ -1,0 +1,67 @@
+"""AOT export: manifest integrity and HLO-text validity.
+
+Uses a tiny batch so lowering every layer stays fast; the real artifacts are
+produced by ``make artifacts``.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.export(str(out), batch=2, seed=0)
+    return str(out), manifest
+
+
+def test_manifest_written_and_parses(exported):
+    out, manifest = exported
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    assert on_disk["batch"] == 2
+    assert len(on_disk["layers"]) == 6
+
+
+def test_all_artifact_files_exist(exported):
+    out, manifest = exported
+    files = [manifest["loss"], manifest["full_fwd"]]
+    for layer in manifest["layers"]:
+        files += [layer["fwd"], layer["bwd"], layer["w_init"], layer["b_init"]]
+    for f in files:
+        path = os.path.join(out, f)
+        assert os.path.exists(path), f
+        assert os.path.getsize(path) > 0, f
+
+
+def test_hlo_text_is_parseable_hlo(exported):
+    out, manifest = exported
+    for layer in manifest["layers"]:
+        with open(os.path.join(out, layer["fwd"])) as f:
+            text = f.read()
+        assert "ENTRY" in text and "HloModule" in text, layer["name"]
+
+
+def test_init_bins_match_model_init(exported):
+    out, manifest = exported
+    params = M.init_params(0)
+    for layer, (w, b) in zip(manifest["layers"], params):
+        w_disk = np.fromfile(os.path.join(out, layer["w_init"]), dtype="<f4")
+        np.testing.assert_array_equal(w_disk, np.asarray(w).ravel())
+        b_disk = np.fromfile(os.path.join(out, layer["b_init"]), dtype="<f4")
+        np.testing.assert_array_equal(b_disk, np.asarray(b).ravel())
+
+
+def test_flops_accounting_positive_and_ordered(exported):
+    _, manifest = exported
+    for layer in manifest["layers"]:
+        assert layer["fwd_flops"] > 0
+        assert layer["bwd_flops"] == 2 * layer["fwd_flops"]
+        assert layer["param_bytes"] == 4 * layer["param_count"]

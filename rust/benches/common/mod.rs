@@ -1,0 +1,19 @@
+//! Shared bench plumbing: wall-clock measurement of the figure drivers and
+//! result emission under `results/`.
+
+use std::time::Instant;
+
+#[allow(dead_code)]
+/// Time a closure, printing a one-line bench report.
+pub fn timed<T>(label: &str, f: impl FnOnce() -> T) -> T {
+    let t0 = Instant::now();
+    let out = f();
+    println!("[bench] {label}: {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    out
+}
+
+/// `true` when benches should use reduced iteration counts (CI).
+#[allow(dead_code)]
+pub fn fast_mode() -> bool {
+    std::env::var("DYNACOMM_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}

@@ -1,0 +1,72 @@
+//! Fig. 10 — top-1 accuracy and loss versus epoch, DynaComm vs the
+//! sequential default PS, through the REAL stack: PJRT artifacts (Pallas
+//! kernels inside), the Rust PS framework, and the shaped loopback edge
+//! network. The paper's claim is that the curves coincide — with a single
+//! worker the update sequence is deterministic, so ours coincide exactly.
+//!
+//! Requires `make artifacts`.
+
+mod common;
+
+use dynacomm::config::Strategy;
+use dynacomm::runtime::artifacts_available;
+use dynacomm::training::{train, TrainConfig};
+use dynacomm::util::json::Json;
+
+fn main() {
+    if !artifacts_available("artifacts") {
+        println!("fig10: skipped (run `make artifacts` first)");
+        return;
+    }
+    let (epochs, iters) = if common::fast_mode() { (2, 4) } else { (4, 8) };
+    let mut results = Vec::new();
+    for strategy in [Strategy::Sequential, Strategy::DynaComm] {
+        let cfg = TrainConfig {
+            strategy,
+            workers: 1,
+            servers: 2,
+            epochs,
+            iters_per_epoch: iters,
+            setup_ms: 1.0,
+            latency_ms: 0.5,
+            bytes_per_ms: 1_000_000.0,
+            val_batches: 4,
+            ..TrainConfig::default()
+        };
+        let r = common::timed(&format!("train {}", strategy.name()), || {
+            train(&cfg).expect("training failed")
+        });
+        println!("\nFig. 10 [{}]:", strategy.name());
+        for (e, (loss, acc)) in
+            r.epoch_loss.iter().zip(&r.epoch_train_acc).enumerate()
+        {
+            println!("  epoch {e}: loss={loss:.4} train-top1={acc:.3}");
+        }
+        println!("  val-top1={:.3}", r.val_acc);
+        results.push((strategy, r));
+    }
+    let (_, seq) = &results[0];
+    let (_, dyna) = &results[1];
+    let identical = seq.per_worker[0].losses == dyna.per_worker[0].losses;
+    println!(
+        "\nloss sequences identical across strategies: {identical} \
+         (paper: accuracy untouched)"
+    );
+    let to_json = |r: &dynacomm::training::TrainResult| {
+        Json::obj(vec![
+            ("epoch_loss", Json::arr_f64(&r.epoch_loss)),
+            ("epoch_train_acc", Json::arr_f64(&r.epoch_train_acc)),
+            ("val_acc", Json::Num(r.val_acc)),
+        ])
+    };
+    dynacomm::figures::write_result(
+        "fig10_accuracy",
+        Json::obj(vec![
+            ("sequential", to_json(seq)),
+            ("dynacomm", to_json(dyna)),
+            ("identical", Json::Bool(identical)),
+        ]),
+    )
+    .unwrap();
+    assert!(identical, "scheduling changed the math!");
+}

@@ -1,0 +1,19 @@
+//! Fig. 11 — speedup versus the number of workers (ResNet-152), all
+//! strategies, with server-side bandwidth contention.
+
+mod common;
+
+use dynacomm::figures;
+
+fn main() {
+    let rows = common::timed("fig11 worker sweep", figures::fig11_worker_sweep);
+    println!(
+        "{}",
+        figures::render_sweep(
+            &rows,
+            "workers",
+            "Fig. 11: speedup vs number of workers (ResNet-152)"
+        )
+    );
+    figures::write_result("fig11_scalability", figures::sweep_to_json(&rows)).unwrap();
+}

@@ -1,0 +1,55 @@
+//! Fig. 12 — scheduling-algorithm wall-clock versus network depth on
+//! randomly generated profiling results, DynaComm (O(L^3) DP) vs iBatch
+//! (greedy), forward and backward. Also fits the growth exponent.
+
+mod common;
+
+use dynacomm::figures;
+use dynacomm::util::json::Json;
+use dynacomm::util::stats;
+
+fn main() {
+    let depths: &[usize] = if common::fast_mode() {
+        &[10, 20, 40, 80]
+    } else {
+        &[10, 20, 40, 80, 160, 320]
+    };
+    let reps = if common::fast_mode() { 3 } else { 10 };
+    println!("Fig. 12: scheduling overhead vs number of layers ({reps} reps)");
+    println!(
+        "{:<8} {:>14} {:>14} {:>14} {:>14}",
+        "layers", "dyna-fwd(ms)", "dyna-bwd(ms)", "ibatch-fwd", "ibatch-bwd"
+    );
+    let mut rows = Vec::new();
+    let mut ls = Vec::new();
+    let mut ts = Vec::new();
+    for &depth in depths {
+        let t = common::timed(&format!("depth {depth}"), || {
+            figures::time_schedulers(depth, reps, 42)
+        });
+        println!(
+            "{:<8} {:>14.4} {:>14.4} {:>14.4} {:>14.4}",
+            depth,
+            t.dynacomm_fwd_ms.mean,
+            t.dynacomm_bwd_ms.mean,
+            t.ibatch_fwd_ms.mean,
+            t.ibatch_bwd_ms.mean
+        );
+        ls.push(depth as f64);
+        ts.push(t.dynacomm_fwd_ms.mean.max(1e-6));
+        rows.push(Json::obj(vec![
+            ("layers", Json::Num(depth as f64)),
+            ("dynacomm_fwd_ms", Json::Num(t.dynacomm_fwd_ms.mean)),
+            ("dynacomm_bwd_ms", Json::Num(t.dynacomm_bwd_ms.mean)),
+            ("ibatch_fwd_ms", Json::Num(t.ibatch_fwd_ms.mean)),
+            ("ibatch_bwd_ms", Json::Num(t.ibatch_bwd_ms.mean)),
+        ]));
+    }
+    let k = stats::power_law_exponent(&ls, &ts);
+    println!("\nfitted DynaComm growth exponent: L^{k:.2} (paper: O(L^3))");
+    figures::write_result(
+        "fig12_sched_overhead",
+        Json::obj(vec![("exponent", Json::Num(k)), ("rows", Json::Arr(rows))]),
+    )
+    .unwrap();
+}

@@ -1,0 +1,22 @@
+//! Fig. 5 — normalized execution time of the **forward** propagation,
+//! batch size 32, four models × four strategies, with the
+//! {non-overlapping compute, overlap, non-overlapping comm} split.
+
+mod common;
+
+use dynacomm::figures::{self, Pass};
+
+fn main() {
+    let cells = common::timed("fig5 grid", || {
+        figures::normalized_pass_times(32, Pass::Forward)
+    });
+    println!(
+        "{}",
+        figures::render_normalized(
+            &cells,
+            "Fig. 5: normalized forward execution time (batch=32)"
+        )
+    );
+    figures::write_result("fig5_fwd_bs32", figures::normalized_to_json(&cells))
+        .expect("writing results");
+}

@@ -1,0 +1,21 @@
+//! Fig. 6 — normalized execution time of the **backward** propagation,
+//! batch size 32.
+
+mod common;
+
+use dynacomm::figures::{self, Pass};
+
+fn main() {
+    let cells = common::timed("fig6 grid", || {
+        figures::normalized_pass_times(32, Pass::Backward)
+    });
+    println!(
+        "{}",
+        figures::render_normalized(
+            &cells,
+            "Fig. 6: normalized backward execution time (batch=32)"
+        )
+    );
+    figures::write_result("fig6_bwd_bs32", figures::normalized_to_json(&cells))
+        .expect("writing results");
+}

@@ -1,0 +1,21 @@
+//! Fig. 7 — normalized execution time of the forward propagation, batch
+//! size 16 (halved compute: more exposed communication).
+
+mod common;
+
+use dynacomm::figures::{self, Pass};
+
+fn main() {
+    let cells = common::timed("fig7 grid", || {
+        figures::normalized_pass_times(16, Pass::Forward)
+    });
+    println!(
+        "{}",
+        figures::render_normalized(
+            &cells,
+            "Fig. 7: normalized forward execution time (batch=16)"
+        )
+    );
+    figures::write_result("fig7_fwd_bs16", figures::normalized_to_json(&cells))
+        .expect("writing results");
+}

@@ -1,0 +1,21 @@
+//! Fig. 8 — normalized execution time of the backward propagation, batch
+//! size 16 (balanced comp/comm regime: biggest backward gains).
+
+mod common;
+
+use dynacomm::figures::{self, Pass};
+
+fn main() {
+    let cells = common::timed("fig8 grid", || {
+        figures::normalized_pass_times(16, Pass::Backward)
+    });
+    println!(
+        "{}",
+        figures::render_normalized(
+            &cells,
+            "Fig. 8: normalized backward execution time (batch=16)"
+        )
+    );
+    figures::write_result("fig8_bwd_bs16", figures::normalized_to_json(&cells))
+        .expect("writing results");
+}

@@ -1,0 +1,31 @@
+//! Fig. 9 — sensitivity of the iteration-time-reduced ratio to the
+//! computation/communication balance, ResNet-152:
+//! (a) batch-size sweep at 10 Gbps, (b) bandwidth sweep at batch 32.
+
+mod common;
+
+use dynacomm::figures;
+
+fn main() {
+    let batch = common::timed("fig9a batch sweep", figures::fig9_batch_sweep);
+    println!(
+        "{}",
+        figures::render_sweep(
+            &batch,
+            "batch",
+            "Fig. 9a: iteration time reduced ratio vs batch size (ResNet-152, 10 Gbps)"
+        )
+    );
+    figures::write_result("fig9a_batch", figures::sweep_to_json(&batch)).unwrap();
+
+    let bw = common::timed("fig9b bandwidth sweep", figures::fig9_bandwidth_sweep);
+    println!(
+        "{}",
+        figures::render_sweep(
+            &bw,
+            "gbps",
+            "Fig. 9b: iteration time reduced ratio vs bandwidth (ResNet-152, batch=32)"
+        )
+    );
+    figures::write_result("fig9b_bandwidth", figures::sweep_to_json(&bw)).unwrap();
+}

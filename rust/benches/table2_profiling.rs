@@ -1,0 +1,58 @@
+//! Table II — per-worker training speed (samples/sec) with the real-time
+//! profiling switch on and off, through the real stack.
+//!
+//! Requires `make artifacts`.
+
+mod common;
+
+use dynacomm::runtime::artifacts_available;
+use dynacomm::training::{train, TrainConfig};
+use dynacomm::util::json::Json;
+
+fn main() {
+    if !artifacts_available("artifacts") {
+        println!("table2: skipped (run `make artifacts` first)");
+        return;
+    }
+    let iters = if common::fast_mode() { 4 } else { 10 };
+    let mut rates = Vec::new();
+    // Warm-up pass first (allocator/caches), then measure off→on so any
+    // residual warm-up bias works AGAINST the profiling=on run.
+    for profiling in [false, true] {
+        let cfg = TrainConfig {
+            profiling,
+            workers: 1,
+            servers: 2,
+            epochs: 1,
+            iters_per_epoch: iters,
+            setup_ms: 1.0,
+            latency_ms: 0.5,
+            bytes_per_ms: 1_000_000.0,
+            val_batches: 0,
+            ..TrainConfig::default()
+        };
+        let r = common::timed(&format!("profiling={profiling}"), || {
+            train(&cfg).expect("training failed")
+        });
+        println!(
+            "profiling {}: {:.2} samples/sec/worker",
+            if profiling { "on " } else { "off" },
+            r.samples_per_sec_per_worker
+        );
+        rates.push(r.samples_per_sec_per_worker);
+    }
+    let loss_pct = 100.0 * (1.0 - rates[1] / rates[0]);
+    println!(
+        "\nTable II: profiling costs {loss_pct:.2}% of local training speed \
+         (paper: ≤ 1.33%)"
+    );
+    dynacomm::figures::write_result(
+        "table2_profiling",
+        Json::obj(vec![
+            ("off_samples_per_sec", Json::Num(rates[0])),
+            ("on_samples_per_sec", Json::Num(rates[1])),
+            ("overhead_pct", Json::Num(loss_pct)),
+        ]),
+    )
+    .unwrap();
+}

@@ -1,0 +1,249 @@
+//! Configuration system: every experiment (simulated or real) is described
+//! by a [`SystemConfig`] — network condition, device speed, cluster shape,
+//! model, batch size, and scheduling strategy. Configs load from JSON files
+//! or CLI flags and default to the paper's testbed (Section V-A).
+
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Network condition between the edge devices and the parameter servers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetworkConfig {
+    /// Round-trip time edge<->cloud in milliseconds (paper: ~10 ms avg).
+    pub rtt_ms: f64,
+    /// Per-worker link bandwidth in Gbit/s (paper: up to 10 Gbps).
+    pub bandwidth_gbps: f64,
+    /// Per-mini-procedure setup overhead Δt in milliseconds. The paper
+    /// measures Δt + first-layer costs around 14 ms with ~10 ms RTT
+    /// (Table I); with one-way latency (5 ms) accounted separately, the
+    /// setup/coordination component defaults to 9 ms.
+    pub delta_t_ms: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        NetworkConfig { rtt_ms: 10.0, bandwidth_gbps: 10.0, delta_t_ms: 9.0 }
+    }
+}
+
+impl NetworkConfig {
+    /// Time in ms to move `bytes` over this link once a transmission is in
+    /// flight: latency (one-way) + serialization at the bottleneck rate.
+    pub fn transfer_ms(&self, bytes: f64) -> f64 {
+        self.rtt_ms / 2.0 + bytes * 8.0 / (self.bandwidth_gbps * 1e9) * 1e3
+    }
+
+    /// Full cost of one transmission mini-procedure carrying `bytes`:
+    /// Δt (setup + coordination) plus flight time.
+    pub fn mini_procedure_ms(&self, bytes: f64) -> f64 {
+        self.delta_t_ms + self.transfer_ms(bytes)
+    }
+}
+
+/// Edge-device compute capability.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceConfig {
+    /// Sustained GFLOP/s of one edge device. Calibrated from the paper's
+    /// own Table II: 4.46 VGG-19 samples/s per worker × ~59 GFLOP
+    /// (fwd+bwd) per sample ≈ 275 GFLOP/s sustained with MKL-DNN on the
+    /// 4-core Xeon E3 testbed.
+    pub gflops: f64,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        DeviceConfig { gflops: 275.0 }
+    }
+}
+
+impl DeviceConfig {
+    /// Milliseconds to execute `flops` floating-point operations.
+    pub fn compute_ms(&self, flops: f64) -> f64 {
+        flops / (self.gflops * 1e9) * 1e3
+    }
+}
+
+/// Scheduling strategy selector (Section V-A3 competitors).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Default PS: one transmission per procedure, strictly sequential.
+    Sequential,
+    /// Poseidon-style layer-by-layer transmission (LBL).
+    LayerByLayer,
+    /// iBatch/iPart greedy batching (Wang et al.).
+    IBatch,
+    /// This paper: DP-optimal decomposition.
+    DynaComm,
+}
+
+impl Strategy {
+    pub const ALL: [Strategy; 4] = [
+        Strategy::Sequential,
+        Strategy::LayerByLayer,
+        Strategy::IBatch,
+        Strategy::DynaComm,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Sequential => "sequential",
+            Strategy::LayerByLayer => "lbl",
+            Strategy::IBatch => "ibatch",
+            Strategy::DynaComm => "dynacomm",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s.to_ascii_lowercase().as_str() {
+            "sequential" | "seq" => Some(Strategy::Sequential),
+            "lbl" | "layer-by-layer" | "layerbylayer" => Some(Strategy::LayerByLayer),
+            "ibatch" | "ipart" => Some(Strategy::IBatch),
+            "dynacomm" | "dp" => Some(Strategy::DynaComm),
+            _ => None,
+        }
+    }
+}
+
+/// Complete description of one experiment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub net: NetworkConfig,
+    pub device: DeviceConfig,
+    /// Number of edge devices (paper testbed: 8).
+    pub workers: usize,
+    /// Number of parameter-server shards (paper testbed: 4).
+    pub servers: usize,
+    /// Aggregate server-side ingress/egress bandwidth in Gbit/s; worker
+    /// links contend for it in the scalability model (Fig. 11).
+    pub server_bandwidth_gbps: f64,
+    pub model: String,
+    pub batch: usize,
+    pub strategy: Strategy,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        SystemConfig {
+            net: NetworkConfig::default(),
+            device: DeviceConfig::default(),
+            workers: 8,
+            servers: 4,
+            server_bandwidth_gbps: 40.0,
+            model: "resnet152".to_string(),
+            batch: 32,
+            strategy: Strategy::DynaComm,
+        }
+    }
+}
+
+impl SystemConfig {
+    /// Overlay CLI flags onto the defaults (or a loaded config).
+    pub fn apply_args(mut self, args: &Args) -> SystemConfig {
+        self.net.rtt_ms = args.f64("rtt-ms", self.net.rtt_ms);
+        self.net.bandwidth_gbps = args.f64("bandwidth-gbps", self.net.bandwidth_gbps);
+        self.net.delta_t_ms = args.f64("delta-t-ms", self.net.delta_t_ms);
+        self.device.gflops = args.f64("gflops", self.device.gflops);
+        self.workers = args.usize("workers", self.workers);
+        self.servers = args.usize("servers", self.servers);
+        self.server_bandwidth_gbps =
+            args.f64("server-bandwidth-gbps", self.server_bandwidth_gbps);
+        self.model = args.get_or("model", &self.model);
+        self.batch = args.usize("batch", self.batch);
+        if let Some(s) = args.get("strategy") {
+            self.strategy = Strategy::parse(s)
+                .unwrap_or_else(|| panic!("unknown strategy '{s}'"));
+        }
+        self
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<SystemConfig> {
+        let mut c = SystemConfig::default();
+        let num = |key: &str, dflt: f64| -> f64 {
+            j.get(key).and_then(Json::as_f64).unwrap_or(dflt)
+        };
+        c.net.rtt_ms = num("rtt_ms", c.net.rtt_ms);
+        c.net.bandwidth_gbps = num("bandwidth_gbps", c.net.bandwidth_gbps);
+        c.net.delta_t_ms = num("delta_t_ms", c.net.delta_t_ms);
+        c.device.gflops = num("gflops", c.device.gflops);
+        c.workers = num("workers", c.workers as f64) as usize;
+        c.servers = num("servers", c.servers as f64) as usize;
+        c.server_bandwidth_gbps = num("server_bandwidth_gbps", c.server_bandwidth_gbps);
+        c.batch = num("batch", c.batch as f64) as usize;
+        if let Some(m) = j.get("model").and_then(Json::as_str) {
+            c.model = m.to_string();
+        }
+        if let Some(s) = j.get("strategy").and_then(Json::as_str) {
+            c.strategy = Strategy::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown strategy '{s}'"))?;
+        }
+        Ok(c)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rtt_ms", Json::Num(self.net.rtt_ms)),
+            ("bandwidth_gbps", Json::Num(self.net.bandwidth_gbps)),
+            ("delta_t_ms", Json::Num(self.net.delta_t_ms)),
+            ("gflops", Json::Num(self.device.gflops)),
+            ("workers", Json::Num(self.workers as f64)),
+            ("servers", Json::Num(self.servers as f64)),
+            ("server_bandwidth_gbps", Json::Num(self.server_bandwidth_gbps)),
+            ("model", Json::Str(self.model.clone())),
+            ("batch", Json::Num(self.batch as f64)),
+            ("strategy", Json::Str(self.strategy.name().to_string())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_cost_scales_with_size() {
+        let net = NetworkConfig::default();
+        let small = net.transfer_ms(1e3);
+        let big = net.transfer_ms(1e9);
+        assert!(big > small);
+        // 1 GB over 10 Gbps ~ 800 ms + 5 ms latency.
+        assert!((big - 805.0).abs() < 1.0, "{big}");
+    }
+
+    #[test]
+    fn mini_procedure_includes_delta_t() {
+        let net = NetworkConfig::default();
+        assert!((net.mini_procedure_ms(0.0) - (9.0 + 5.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn strategy_parse_roundtrip() {
+        for s in Strategy::ALL {
+            assert_eq!(Strategy::parse(s.name()), Some(s));
+        }
+        assert_eq!(Strategy::parse("nope"), None);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = SystemConfig::default();
+        c.batch = 16;
+        c.model = "vgg19".into();
+        c.strategy = Strategy::IBatch;
+        let j = c.to_json();
+        let back = SystemConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+    }
+
+    #[test]
+    fn args_overlay() {
+        let args = Args::parse(
+            ["--batch=64", "--strategy", "lbl", "--rtt-ms", "5"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = SystemConfig::default().apply_args(&args);
+        assert_eq!(c.batch, 64);
+        assert_eq!(c.strategy, Strategy::LayerByLayer);
+        assert_eq!(c.net.rtt_ms, 5.0);
+    }
+}

@@ -1,0 +1,311 @@
+//! Experiment drivers that regenerate every table and figure of the
+//! paper's evaluation (Section V). Shared between `cargo bench` harnesses
+//! and the examples; each driver returns printable rows and a JSON record
+//! that benches write under `results/`.
+
+use std::time::Instant;
+
+use crate::config::{Strategy, SystemConfig};
+use crate::models;
+use crate::sched::{self, CostVectors};
+use crate::sim::{self, sweep, workload};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Pass selector for Figs. 5–8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pass {
+    Forward,
+    Backward,
+}
+
+/// One cell of Figs. 5–8: normalized execution-time split for a
+/// (model, strategy) pair.
+#[derive(Debug, Clone)]
+pub struct NormalizedCell {
+    pub model: String,
+    pub strategy: Strategy,
+    pub comp_only: f64,
+    pub overlap: f64,
+    pub comm_only: f64,
+}
+
+impl NormalizedCell {
+    pub fn total(&self) -> f64 {
+        self.comp_only + self.overlap + self.comm_only
+    }
+
+    /// "running time reduced by" vs Sequential = 1 - total.
+    pub fn reduction(&self) -> f64 {
+        1.0 - self.total()
+    }
+}
+
+/// Figs. 5–8: normalized execution time of one pass for all four models and
+/// all four strategies at the given batch size.
+pub fn normalized_pass_times(batch: usize, pass: Pass) -> Vec<NormalizedCell> {
+    let mut cfg = SystemConfig::default();
+    cfg.batch = batch;
+    let mut cells = Vec::new();
+    for model in models::paper_models() {
+        let cv = model.cost_vectors(&cfg);
+        let seq_plan = sched::plan_for(Strategy::Sequential, &cv);
+        let baseline = match pass {
+            Pass::Forward => sched::eval_forward(&cv, &seq_plan.fwd).total,
+            Pass::Backward => sched::eval_backward(&cv, &seq_plan.bwd).total,
+        };
+        for s in Strategy::ALL {
+            let plan = sched::plan_for(s, &cv);
+            let b = match pass {
+                Pass::Forward => sched::eval_forward(&cv, &plan.fwd),
+                Pass::Backward => sched::eval_backward(&cv, &plan.bwd),
+            };
+            let n = sim::normalize(&b, baseline);
+            cells.push(NormalizedCell {
+                model: model.name.clone(),
+                strategy: s,
+                comp_only: n.comp_only,
+                overlap: n.overlap,
+                comm_only: n.comm_only,
+            });
+        }
+    }
+    cells
+}
+
+/// Render Figs. 5–8 cells as an aligned text table.
+pub fn render_normalized(cells: &[NormalizedCell], title: &str) -> String {
+    let mut out = format!("{title}\n");
+    out.push_str(&format!(
+        "{:<14} {:<11} {:>9} {:>9} {:>9} {:>9} {:>10}\n",
+        "model", "strategy", "comp", "overlap", "comm", "total", "reduced"
+    ));
+    for c in cells {
+        out.push_str(&format!(
+            "{:<14} {:<11} {:>9.4} {:>9.4} {:>9.4} {:>9.4} {:>9.2}%\n",
+            c.model,
+            c.strategy.name(),
+            c.comp_only,
+            c.overlap,
+            c.comm_only,
+            c.total(),
+            100.0 * c.reduction()
+        ));
+    }
+    out
+}
+
+pub fn normalized_to_json(cells: &[NormalizedCell]) -> Json {
+    Json::Arr(
+        cells
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("model", Json::Str(c.model.clone())),
+                    ("strategy", Json::Str(c.strategy.name().into())),
+                    ("comp_only", Json::Num(c.comp_only)),
+                    ("overlap", Json::Num(c.overlap)),
+                    ("comm_only", Json::Num(c.comm_only)),
+                    ("reduced", Json::Num(c.reduction())),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Fig. 9: sensitivity sweeps on ResNet-152.
+pub fn fig9_batch_sweep() -> Vec<sweep::SweepRow> {
+    let m = models::by_name("resnet152").unwrap();
+    let cfg = SystemConfig::default();
+    sweep::sweep_batch(&m, &cfg, &[8, 16, 24, 32, 48, 64])
+}
+
+pub fn fig9_bandwidth_sweep() -> Vec<sweep::SweepRow> {
+    let m = models::by_name("resnet152").unwrap();
+    let cfg = SystemConfig::default();
+    sweep::sweep_bandwidth(&m, &cfg, &[1.0, 5.0, 10.0])
+}
+
+/// Fig. 11: speedup vs workers on ResNet-152.
+pub fn fig11_worker_sweep() -> Vec<sweep::SweepRow> {
+    let m = models::by_name("resnet152").unwrap();
+    let cfg = SystemConfig::default();
+    sweep::sweep_workers(&m, &cfg, &[1, 2, 4, 8])
+}
+
+pub fn render_sweep(rows: &[sweep::SweepRow], xlabel: &str, title: &str) -> String {
+    let mut out = format!("{title}\n{:<10}", xlabel);
+    for s in Strategy::ALL {
+        out.push_str(&format!(" {:>11}", s.name()));
+    }
+    out.push('\n');
+    for r in rows {
+        out.push_str(&format!("{:<10}", r.x));
+        for s in Strategy::ALL {
+            out.push_str(&format!(" {:>11.4}", r.get(s)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+pub fn sweep_to_json(rows: &[sweep::SweepRow]) -> Json {
+    Json::Arr(
+        rows.iter()
+            .map(|r| {
+                let mut pairs = vec![("x", Json::Num(r.x))];
+                for (s, v) in &r.values {
+                    pairs.push((s.name(), Json::Num(*v)));
+                }
+                Json::obj(pairs)
+            })
+            .collect(),
+    )
+}
+
+/// One Fig. 12 / Table I measurement: scheduling wall-clock in ms.
+#[derive(Debug, Clone)]
+pub struct SchedTiming {
+    pub depth: usize,
+    pub dynacomm_fwd_ms: stats::Summary,
+    pub dynacomm_bwd_ms: stats::Summary,
+    pub ibatch_fwd_ms: stats::Summary,
+    pub ibatch_bwd_ms: stats::Summary,
+}
+
+/// Measure scheduler wall-clock on random profiles of a given depth
+/// (Fig. 12) — `reps` timed runs each.
+pub fn time_schedulers(depth: usize, reps: usize, seed: u64) -> SchedTiming {
+    let mut rng = Rng::new(seed);
+    let cvs: Vec<CostVectors> = (0..reps)
+        .map(|_| workload::generate(&mut rng, depth, workload::WorkloadParams::default()))
+        .collect();
+    let time_it = |f: &dyn Fn(&CostVectors) -> sched::Decomposition| -> stats::Summary {
+        let samples: Vec<f64> = cvs
+            .iter()
+            .map(|cv| {
+                let t0 = Instant::now();
+                let d = f(cv);
+                let el = t0.elapsed().as_secs_f64() * 1e3;
+                std::hint::black_box(&d);
+                el
+            })
+            .collect();
+        stats::summarize(&samples)
+    };
+    SchedTiming {
+        depth,
+        dynacomm_fwd_ms: time_it(&sched::dynacomm::forward),
+        dynacomm_bwd_ms: time_it(&sched::dynacomm::backward),
+        ibatch_fwd_ms: time_it(&sched::ibatch::forward),
+        ibatch_bwd_ms: time_it(&sched::ibatch::backward),
+    }
+}
+
+/// Table I: scheduler cost vs the idle window (`Δt + gt¹` / `Δt + pt¹`) for
+/// each paper model under the default testbed.
+pub struct Table1Row {
+    pub model: String,
+    pub dynacomm_fwd_ms: stats::Summary,
+    pub ibatch_fwd_ms: stats::Summary,
+    pub idle_fwd_ms: f64, // Δt + gt¹
+    pub dynacomm_bwd_ms: stats::Summary,
+    pub ibatch_bwd_ms: stats::Summary,
+    pub idle_bwd_ms: f64, // Δt + pt¹ of the next iteration
+}
+
+pub fn table1(reps: usize) -> Vec<Table1Row> {
+    let cfg = SystemConfig::default();
+    models::paper_models()
+        .into_iter()
+        .map(|m| {
+            let cv = m.cost_vectors(&cfg);
+            let time_many = |f: &dyn Fn(&CostVectors) -> sched::Decomposition| {
+                let samples: Vec<f64> = (0..reps)
+                    .map(|_| {
+                        let t0 = Instant::now();
+                        std::hint::black_box(f(&cv));
+                        t0.elapsed().as_secs_f64() * 1e3
+                    })
+                    .collect();
+                stats::summarize(&samples)
+            };
+            Table1Row {
+                model: m.name.clone(),
+                dynacomm_fwd_ms: time_many(&sched::dynacomm::forward),
+                ibatch_fwd_ms: time_many(&sched::ibatch::forward),
+                idle_fwd_ms: cv.delta_t + cv.gt[0],
+                dynacomm_bwd_ms: time_many(&sched::dynacomm::backward),
+                ibatch_bwd_ms: time_many(&sched::ibatch::backward),
+                idle_bwd_ms: cv.delta_t + cv.pt[0],
+            }
+        })
+        .collect()
+}
+
+/// Write a JSON result file under `results/`.
+pub fn write_result(name: &str, value: Json) -> std::io::Result<()> {
+    std::fs::create_dir_all("results")?;
+    std::fs::write(format!("results/{name}.json"), value.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_cells_cover_grid() {
+        let cells = normalized_pass_times(32, Pass::Forward);
+        assert_eq!(cells.len(), 16); // 4 models x 4 strategies
+        // Sequential rows normalize to exactly 1.0.
+        for c in cells.iter().filter(|c| c.strategy == Strategy::Sequential) {
+            assert!((c.total() - 1.0).abs() < 1e-9, "{c:?}");
+        }
+        // DynaComm minimal per model.
+        for model in ["vgg19", "googlenet", "inceptionv4", "resnet152"] {
+            let of = |s: Strategy| {
+                cells
+                    .iter()
+                    .find(|c| c.model == model && c.strategy == s)
+                    .unwrap()
+                    .total()
+            };
+            let d = of(Strategy::DynaComm);
+            assert!(d <= of(Strategy::Sequential) + 1e-9, "{model}");
+            assert!(d <= of(Strategy::LayerByLayer) + 1e-9, "{model}");
+            assert!(d <= of(Strategy::IBatch) + 1e-9, "{model}");
+        }
+    }
+
+    #[test]
+    fn render_produces_rows() {
+        let cells = normalized_pass_times(16, Pass::Backward);
+        let text = render_normalized(&cells, "fig8");
+        assert!(text.lines().count() >= 18);
+        assert!(text.contains("dynacomm"));
+    }
+
+    #[test]
+    fn sched_timing_scales_superlinearly() {
+        // O(L^3) vs O(L): 4x depth should cost much more than 4x time.
+        let a = time_schedulers(20, 5, 1);
+        let b = time_schedulers(80, 5, 1);
+        assert!(
+            b.dynacomm_fwd_ms.mean > 4.0 * a.dynacomm_fwd_ms.mean,
+            "20→{:.4} 80→{:.4}",
+            a.dynacomm_fwd_ms.mean,
+            b.dynacomm_fwd_ms.mean
+        );
+    }
+
+    #[test]
+    fn table1_has_all_models() {
+        let rows = table1(3);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.idle_fwd_ms > 0.0);
+            assert!(r.dynacomm_fwd_ms.mean >= 0.0);
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! DynaComm — dynamic communication scheduling for distributed CNN training
+//! between edges and clouds (reproduction of Cai et al., IEEE JSAC 2021).
+//!
+//! The crate is organized as a three-layer system:
+//!
+//! * **Coordinator (Rust, this crate)** — the paper's contribution: the
+//!   [`sched`] module implements the Sequential / layer-by-layer / iBatch /
+//!   DynaComm schedulers over per-layer cost vectors; [`ps`] and [`net`]
+//!   provide the parameter-server framework and the emulated edge network;
+//!   [`sim`] reproduces the paper's evaluation with a discrete-event model;
+//!   [`profiler`] measures real cost vectors at run time.
+//! * **Model (JAX, build time)** — `python/compile/model.py` lowers a
+//!   layer-wise CNN (fwd and bwd per layer) to HLO text artifacts.
+//! * **Kernels (Pallas, build time)** — `python/compile/kernels/` holds the
+//!   tiled-matmul / conv kernels used by the model, checked against a
+//!   pure-jnp oracle.
+//!
+//! The [`runtime`] module loads the HLO artifacts through PJRT so the Rust
+//! hot path never touches Python.
+
+pub mod config;
+pub mod figures;
+pub mod models;
+pub mod net;
+pub mod profiler;
+pub mod ps;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod training;
+pub mod util;

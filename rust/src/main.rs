@@ -1,0 +1,195 @@
+//! `dynacomm` — the launcher.
+//!
+//! Subcommands:
+//!
+//! * `schedule`  — run all four schedulers on a model's cost profile and
+//!                 print the decomposition decisions + timeline breakdowns.
+//! * `simulate`  — normalized pass times for all models (Figs. 5–8 cells).
+//! * `sweep`     — batch / bandwidth / worker sensitivity (Figs. 9, 11).
+//! * `train`     — real end-to-end EdgeCNN training through the PS
+//!                 framework and PJRT artifacts (Fig. 10 / Table II).
+//! * `bench-sched` — scheduler wall-clock vs depth (Fig. 12).
+//!
+//! Common flags: `--model`, `--batch`, `--strategy`, `--workers`,
+//! `--servers`, `--rtt-ms`, `--bandwidth-gbps`, `--delta-t-ms`, `--gflops`.
+
+use anyhow::{Context, Result};
+
+use dynacomm::config::{Strategy, SystemConfig};
+use dynacomm::figures::{self, Pass};
+use dynacomm::models;
+use dynacomm::sim;
+use dynacomm::training::{train, TrainConfig};
+use dynacomm::util::cli::Args;
+use dynacomm::util::log;
+
+fn main() -> Result<()> {
+    log::init_from_env();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "schedule" => cmd_schedule(&args),
+        "simulate" => cmd_simulate(&args),
+        "sweep" => cmd_sweep(&args),
+        "train" => cmd_train(&args),
+        "bench-sched" => cmd_bench_sched(&args),
+        _ => {
+            print!("{HELP}");
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+dynacomm — dynamic communication scheduling for edge CNN training
+
+USAGE: dynacomm <schedule|simulate|sweep|train|bench-sched> [flags]
+
+  schedule     print decomposition decisions + timelines for one model
+  simulate     normalized fwd/bwd execution times (Figs. 5-8)
+  sweep        --kind batch|bandwidth|workers  (Figs. 9a, 9b, 11)
+  train        real EdgeCNN training over the PS framework (Fig. 10)
+  bench-sched  scheduler wall-clock versus network depth (Fig. 12)
+
+FLAGS (defaults = the paper's testbed):
+  --model NAME          vgg19|googlenet|inceptionv4|resnet152|edgecnn
+  --batch N             per-worker batch size (32)
+  --strategy S          sequential|lbl|ibatch|dynacomm
+  --workers N --servers N
+  --rtt-ms F --bandwidth-gbps F --delta-t-ms F --gflops F
+  --epochs N --iters N --lr F --artifacts DIR   (train)
+";
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let cfg = SystemConfig::default().apply_args(args);
+    let model = models::by_name(&cfg.model)
+        .with_context(|| format!("unknown model '{}'", cfg.model))?;
+    let cv = model.cost_vectors(&cfg);
+    println!(
+        "model={} depth={} batch={} Δt={:.2}ms",
+        model.name,
+        model.depth(),
+        cfg.batch,
+        cv.delta_t
+    );
+    for s in Strategy::ALL {
+        let r = sim::simulate_cv(&cv, s);
+        println!(
+            "\n{:<11} fwd segments={:<4} bwd segments={:<4} total={:.1} ms",
+            s.name(),
+            r.plan.fwd.num_transmissions(),
+            r.plan.bwd.num_transmissions(),
+            r.total_ms()
+        );
+        println!(
+            "  fwd: total={:>9.2} comp={:>9.2} overlap={:>9.2} comm={:>9.2}",
+            r.breakdown.fwd.total,
+            r.breakdown.fwd.comp_only,
+            r.breakdown.fwd.overlap,
+            r.breakdown.fwd.comm_only
+        );
+        println!(
+            "  bwd: total={:>9.2} comp={:>9.2} overlap={:>9.2} comm={:>9.2}",
+            r.breakdown.bwd.total,
+            r.breakdown.bwd.comp_only,
+            r.breakdown.bwd.overlap,
+            r.breakdown.bwd.comm_only
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let batch = args.usize("batch", 32);
+    for (pass, name) in [(Pass::Forward, "forward"), (Pass::Backward, "backward")] {
+        let cells = figures::normalized_pass_times(batch, pass);
+        println!(
+            "{}",
+            figures::render_normalized(
+                &cells,
+                &format!("normalized {name} execution time (batch={batch})")
+            )
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    match args.get_or("kind", "batch").as_str() {
+        "batch" => println!(
+            "{}",
+            figures::render_sweep(
+                &figures::fig9_batch_sweep(),
+                "batch",
+                "iteration time reduced ratio vs batch (Fig. 9a)"
+            )
+        ),
+        "bandwidth" => println!(
+            "{}",
+            figures::render_sweep(
+                &figures::fig9_bandwidth_sweep(),
+                "gbps",
+                "iteration time reduced ratio vs bandwidth (Fig. 9b)"
+            )
+        ),
+        "workers" => println!(
+            "{}",
+            figures::render_sweep(
+                &figures::fig11_worker_sweep(),
+                "workers",
+                "speedup vs number of workers (Fig. 11)"
+            )
+        ),
+        k => anyhow::bail!("unknown sweep kind '{k}'"),
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut cfg = TrainConfig::default();
+    cfg.artifacts_dir = args.get_or("artifacts", &cfg.artifacts_dir);
+    cfg.workers = args.usize("workers", cfg.workers);
+    cfg.servers = args.usize("servers", cfg.servers);
+    cfg.epochs = args.usize("epochs", cfg.epochs);
+    cfg.iters_per_epoch = args.usize("iters", cfg.iters_per_epoch);
+    cfg.lr = args.f64("lr", cfg.lr as f64) as f32;
+    cfg.profiling = !args.bool("no-profiling");
+    if let Some(s) = args.get("strategy") {
+        cfg.strategy = Strategy::parse(s).context("bad --strategy")?;
+    }
+    let result = train(&cfg)?;
+    for (e, ((loss, acc), ms)) in result
+        .epoch_loss
+        .iter()
+        .zip(&result.epoch_train_acc)
+        .zip(&result.epoch_iter_ms)
+        .enumerate()
+    {
+        println!("epoch {e}: loss={loss:.4} train-top1={acc:.3} iter={ms:.1} ms");
+    }
+    println!(
+        "val-top1={:.3} samples/sec/worker={:.2}",
+        result.val_acc, result.samples_per_sec_per_worker
+    );
+    Ok(())
+}
+
+fn cmd_bench_sched(args: &Args) -> Result<()> {
+    let reps = args.usize("reps", 5);
+    println!(
+        "{:<8} {:>14} {:>14} {:>14} {:>14}",
+        "layers", "dyna-fwd(ms)", "dyna-bwd(ms)", "ibatch-fwd", "ibatch-bwd"
+    );
+    for depth in [10, 20, 40, 80, 160, 320] {
+        let t = figures::time_schedulers(depth, reps, 42);
+        println!(
+            "{:<8} {:>14.4} {:>14.4} {:>14.4} {:>14.4}",
+            depth,
+            t.dynacomm_fwd_ms.mean,
+            t.dynacomm_bwd_ms.mean,
+            t.ibatch_fwd_ms.mean,
+            t.ibatch_bwd_ms.mean
+        );
+    }
+    Ok(())
+}

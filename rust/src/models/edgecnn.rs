@@ -1,0 +1,55 @@
+//! EdgeCNN — the real training workload exported by `python/compile/`.
+//!
+//! The cost spec here mirrors `python/compile/model.py::edgecnn_layers()`
+//! (and the FLOP accounting in `aot.py`) so the simulator and the real
+//! runtime agree on the model's shape. A unit test cross-checks the Rust
+//! numbers against the manifest whenever artifacts are present.
+
+use super::{conv_layer, fc_layer, ModelSpec};
+
+pub fn edgecnn() -> ModelSpec {
+    ModelSpec {
+        name: "edgecnn".to_string(),
+        layers: vec![
+            conv_layer("conv1", 3, 3, 16, 32, 32),
+            conv_layer("conv2", 3, 16, 16, 32, 32),
+            conv_layer("conv3", 3, 16, 32, 16, 16),
+            conv_layer("conv4", 3, 32, 32, 16, 16),
+            fc_layer("fc1", 2048, 128),
+            fc_layer("fc2", 128, 10),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_and_params() {
+        let m = edgecnn();
+        assert_eq!(m.depth(), 6);
+        // conv params: 448 + 2320 + 4640 + 9248; fc: 262272 + 1290.
+        assert_eq!(m.total_params(), 448 + 2320 + 4640 + 9248 + 262_272 + 1290);
+    }
+
+    #[test]
+    fn layer_params_match_python_export() {
+        let m = edgecnn();
+        let expect = [448, 2320, 4640, 9248, 262_272, 1290];
+        for (l, e) in m.layers.iter().zip(expect) {
+            assert_eq!(l.params, e, "{}", l.name);
+        }
+    }
+
+    #[test]
+    fn flops_match_aot_accounting() {
+        // aot.py: conv fwd = 2*9*cin*cout*h*w per sample; fc = 2*fin*fout.
+        let m = edgecnn();
+        assert_eq!(m.layers[0].fwd_flops, 2.0 * 9.0 * 3.0 * 16.0 * 32.0 * 32.0);
+        assert_eq!(m.layers[4].fwd_flops, 2.0 * 2048.0 * 128.0);
+        for l in &m.layers {
+            assert_eq!(l.bwd_flops, 2.0 * l.fwd_flops, "{}", l.name);
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! GoogLeNet / Inception-v1 (Szegedy et al., CVPR 2015) at 224x224.
+//!
+//! Per the DynaComm depth-merge rule, each Inception module collapses to
+//! two layers: depth 1 holds every 1x1 at the module input (the #1x1
+//! branch, the 3x3/5x5 reduces, and the pool projection), depth 2 holds the
+//! 3x3 and 5x5 convolutions. With the three stem convs and the classifier
+//! this yields the network's canonical "22 layers deep":
+//! 3 + 9·2 + 1 = 22. Auxiliary classifiers are train-time extras the MXNet
+//! example omits; they are omitted here too.
+
+use super::{conv_layer, fc_layer, merge, ModelSpec};
+
+/// Inception module channel spec from Table 1 of the GoogLeNet paper.
+struct Module {
+    name: &'static str,
+    cin: usize,
+    n1x1: usize,
+    red3: usize,
+    n3x3: usize,
+    red5: usize,
+    n5x5: usize,
+    pool_proj: usize,
+    hw: usize,
+}
+
+pub fn googlenet() -> ModelSpec {
+    let mut layers = Vec::with_capacity(22);
+    layers.push(conv_layer("conv1", 7, 3, 64, 112, 112));
+    layers.push(conv_layer("conv2_reduce", 1, 64, 64, 56, 56));
+    layers.push(conv_layer("conv2", 3, 64, 192, 56, 56));
+
+    let modules = [
+        Module { name: "3a", cin: 192, n1x1: 64, red3: 96, n3x3: 128, red5: 16, n5x5: 32, pool_proj: 32, hw: 28 },
+        Module { name: "3b", cin: 256, n1x1: 128, red3: 128, n3x3: 192, red5: 32, n5x5: 96, pool_proj: 64, hw: 28 },
+        Module { name: "4a", cin: 480, n1x1: 192, red3: 96, n3x3: 208, red5: 16, n5x5: 48, pool_proj: 64, hw: 14 },
+        Module { name: "4b", cin: 512, n1x1: 160, red3: 112, n3x3: 224, red5: 24, n5x5: 64, pool_proj: 64, hw: 14 },
+        Module { name: "4c", cin: 512, n1x1: 128, red3: 128, n3x3: 256, red5: 24, n5x5: 64, pool_proj: 64, hw: 14 },
+        Module { name: "4d", cin: 512, n1x1: 112, red3: 144, n3x3: 288, red5: 32, n5x5: 64, pool_proj: 64, hw: 14 },
+        Module { name: "4e", cin: 528, n1x1: 256, red3: 160, n3x3: 320, red5: 32, n5x5: 128, pool_proj: 128, hw: 14 },
+        Module { name: "5a", cin: 832, n1x1: 256, red3: 160, n3x3: 320, red5: 32, n5x5: 128, pool_proj: 128, hw: 7 },
+        Module { name: "5b", cin: 832, n1x1: 384, red3: 192, n3x3: 384, red5: 48, n5x5: 128, pool_proj: 128, hw: 7 },
+    ];
+    for m in modules {
+        // Depth 1: all 1x1 projections at the module input.
+        layers.push(merge(
+            format!("inc{}_proj", m.name),
+            &[
+                conv_layer("b1", 1, m.cin, m.n1x1, m.hw, m.hw),
+                conv_layer("b2r", 1, m.cin, m.red3, m.hw, m.hw),
+                conv_layer("b3r", 1, m.cin, m.red5, m.hw, m.hw),
+                conv_layer("b4p", 1, m.cin, m.pool_proj, m.hw, m.hw),
+            ],
+        ));
+        // Depth 2: the spatial convolutions.
+        layers.push(merge(
+            format!("inc{}_spatial", m.name),
+            &[
+                conv_layer("b2", 3, m.red3, m.n3x3, m.hw, m.hw),
+                conv_layer("b3", 5, m.red5, m.n5x5, m.hw, m.hw),
+            ],
+        ));
+    }
+    layers.push(fc_layer("fc", 1024, 1000));
+    ModelSpec { name: "googlenet".to_string(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_is_22() {
+        assert_eq!(googlenet().depth(), 22);
+    }
+
+    #[test]
+    fn total_params_matches_published() {
+        // Published (no aux classifiers): ~7.0M parameters.
+        let p = googlenet().total_params() as f64 / 1e6;
+        assert!((p - 7.0).abs() < 0.7, "params = {p}M");
+    }
+
+    #[test]
+    fn total_fwd_flops_matches_published() {
+        // Published: ~3.0 GFLOP per 224x224 sample (2 ops/MAC).
+        let g = googlenet().total_fwd_flops() / 1e9;
+        assert!((1.8..4.0).contains(&g), "fwd = {g} GFLOP");
+    }
+
+    #[test]
+    fn compute_heavy_relative_to_comm() {
+        // "GoogLeNet is more computationally expensive while VGG-19's
+        // communication overhead dominates": bytes-per-FLOP must be much
+        // smaller than VGG-19's.
+        let g = googlenet();
+        let v = super::super::vgg::vgg19();
+        let ratio_g = 4.0 * g.total_params() as f64 / g.total_fwd_flops();
+        let ratio_v = 4.0 * v.total_params() as f64 / v.total_fwd_flops();
+        assert!(ratio_g < ratio_v, "g={ratio_g} v={ratio_v}");
+    }
+}

@@ -1,0 +1,211 @@
+//! Inception-v4 (Szegedy et al., AAAI 2017) at 299x299.
+//!
+//! Modules are collapsed depth-wise per the DynaComm branch-merge rule:
+//! every branch layer at the same distance from the module input lands in
+//! one merged layer. Branch lengths differ, so an Inception-B module
+//! contributes 5 depths, Inception-A 3, Inception-C 4, the stem 9, the
+//! reductions 3 and 4 — 76 parameterized depths in total, placing the
+//! network between GoogLeNet (22) and ResNet-152 (152), exactly the
+//! "deeper network" regime where the paper shows greedy iBatch falling
+//! behind.
+
+use super::{fc_layer, merge, LayerSpec, ModelSpec};
+
+/// Rectangular (possibly asymmetric) convolution, 2 ops/MAC.
+fn rect(
+    name: impl Into<String>,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    h: usize,
+    w: usize,
+) -> LayerSpec {
+    let f = 2.0 * (kh * kw * cin * cout * h * w) as f64;
+    LayerSpec {
+        name: name.into(),
+        params: kh * kw * cin * cout + cout,
+        fwd_flops: f,
+        bwd_flops: 2.0 * f,
+    }
+}
+
+pub fn inception_v4() -> ModelSpec {
+    let mut l: Vec<LayerSpec> = Vec::with_capacity(76);
+
+    // ---- Stem (299x299x3 -> 35x35x384), 9 depths ----
+    l.push(rect("stem_conv1", 3, 3, 3, 32, 149, 149));
+    l.push(rect("stem_conv2", 3, 3, 32, 32, 147, 147));
+    l.push(rect("stem_conv3", 3, 3, 32, 64, 147, 147));
+    // parallel {maxpool | conv 3x3/2 96} -> 73x73x160
+    l.push(rect("stem_mixed1", 3, 3, 64, 96, 73, 73));
+    // two parallel towers, aligned depth-wise:
+    l.push(merge(
+        "stem_mixed2_proj",
+        &[
+            rect("a1", 1, 1, 160, 64, 73, 73),
+            rect("b1", 1, 1, 160, 64, 73, 73),
+        ],
+    ));
+    l.push(merge(
+        "stem_mixed2_mid",
+        &[
+            rect("a2", 3, 3, 64, 96, 71, 71),
+            rect("b2", 7, 1, 64, 64, 73, 73),
+        ],
+    ));
+    l.push(rect("stem_mixed2_b3", 1, 7, 64, 64, 73, 73));
+    l.push(rect("stem_mixed2_b4", 3, 3, 64, 96, 71, 71));
+    // parallel {conv 3x3/2 192 | maxpool} -> 35x35x384
+    l.push(rect("stem_mixed3", 3, 3, 192, 192, 35, 35));
+
+    // ---- 4x Inception-A @35x35, cin 384, 3 depths each ----
+    for i in 0..4 {
+        let cin = 384;
+        let hw = 35;
+        l.push(merge(
+            format!("incA{i}_proj"),
+            &[
+                rect("b1", 1, 1, cin, 96, hw, hw),
+                rect("b2r", 1, 1, cin, 64, hw, hw),
+                rect("b3r", 1, 1, cin, 64, hw, hw),
+                rect("b4p", 1, 1, cin, 96, hw, hw),
+            ],
+        ));
+        l.push(merge(
+            format!("incA{i}_mid"),
+            &[
+                rect("b2", 3, 3, 64, 96, hw, hw),
+                rect("b3a", 3, 3, 64, 96, hw, hw),
+            ],
+        ));
+        l.push(rect(format!("incA{i}_tail"), 3, 3, 96, 96, hw, hw));
+    }
+
+    // ---- Reduction-A (35 -> 17), 3 depths ----
+    l.push(merge(
+        "redA_head",
+        &[
+            rect("b1", 3, 3, 384, 384, 17, 17),
+            rect("b2r", 1, 1, 384, 192, 35, 35),
+        ],
+    ));
+    l.push(rect("redA_mid", 3, 3, 192, 224, 35, 35));
+    l.push(rect("redA_tail", 3, 3, 224, 256, 17, 17));
+
+    // ---- 7x Inception-B @17x17, cin 1024, 5 depths each ----
+    for i in 0..7 {
+        let cin = 1024;
+        let hw = 17;
+        l.push(merge(
+            format!("incB{i}_proj"),
+            &[
+                rect("b1", 1, 1, cin, 384, hw, hw),
+                rect("b2r", 1, 1, cin, 192, hw, hw),
+                rect("b3r", 1, 1, cin, 192, hw, hw),
+                rect("b4p", 1, 1, cin, 128, hw, hw),
+            ],
+        ));
+        l.push(merge(
+            format!("incB{i}_d2"),
+            &[
+                rect("b2a", 1, 7, 192, 224, hw, hw),
+                rect("b3a", 7, 1, 192, 192, hw, hw),
+            ],
+        ));
+        l.push(merge(
+            format!("incB{i}_d3"),
+            &[
+                rect("b2b", 7, 1, 224, 256, hw, hw),
+                rect("b3b", 1, 7, 192, 224, hw, hw),
+            ],
+        ));
+        l.push(rect(format!("incB{i}_d4"), 7, 1, 224, 224, hw, hw));
+        l.push(rect(format!("incB{i}_d5"), 1, 7, 224, 256, hw, hw));
+    }
+
+    // ---- Reduction-B (17 -> 8), 4 depths ----
+    l.push(merge(
+        "redB_proj",
+        &[
+            rect("b1r", 1, 1, 1024, 192, 17, 17),
+            rect("b2r", 1, 1, 1024, 256, 17, 17),
+        ],
+    ));
+    l.push(merge(
+        "redB_d2",
+        &[
+            rect("b1", 3, 3, 192, 192, 8, 8),
+            rect("b2a", 1, 7, 256, 256, 17, 17),
+        ],
+    ));
+    l.push(rect("redB_d3", 7, 1, 256, 320, 17, 17));
+    l.push(rect("redB_d4", 3, 3, 320, 320, 8, 8));
+
+    // ---- 3x Inception-C @8x8, cin 1536, 4 depths each ----
+    for i in 0..3 {
+        let cin = 1536;
+        let hw = 8;
+        l.push(merge(
+            format!("incC{i}_proj"),
+            &[
+                rect("b1", 1, 1, cin, 256, hw, hw),
+                rect("b2r", 1, 1, cin, 384, hw, hw),
+                rect("b3r", 1, 1, cin, 384, hw, hw),
+                rect("b4p", 1, 1, cin, 256, hw, hw),
+            ],
+        ));
+        l.push(merge(
+            format!("incC{i}_d2"),
+            &[
+                rect("b2s1", 1, 3, 384, 256, hw, hw),
+                rect("b2s2", 3, 1, 384, 256, hw, hw),
+                rect("b3a", 1, 3, 384, 448, hw, hw),
+            ],
+        ));
+        l.push(rect(format!("incC{i}_d3"), 3, 1, 448, 512, hw, hw));
+        l.push(merge(
+            format!("incC{i}_d4"),
+            &[
+                rect("b3s1", 3, 1, 512, 256, hw, hw),
+                rect("b3s2", 1, 3, 512, 256, hw, hw),
+            ],
+        ));
+    }
+
+    l.push(fc_layer("fc", 1536, 1000));
+    ModelSpec { name: "inceptionv4".to_string(), layers: l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_is_76() {
+        assert_eq!(inception_v4().depth(), 76);
+    }
+
+    #[test]
+    fn depth_sits_between_googlenet_and_resnet() {
+        let d = inception_v4().depth();
+        assert!(d > super::super::googlenet::googlenet().depth());
+        assert!(d < super::super::resnet::resnet152().depth());
+    }
+
+    #[test]
+    fn total_params_near_published() {
+        // Published Inception-v4: ~42.7M parameters. The depth-merge
+        // abstraction keeps every parameterized conv, so totals match to
+        // within the BN/aux bookkeeping differences.
+        let p = inception_v4().total_params() as f64 / 1e6;
+        assert!((30.0..52.0).contains(&p), "params = {p}M");
+    }
+
+    #[test]
+    fn total_fwd_flops_near_published() {
+        // Published: ~24.6 GFLOP per 299x299 sample (2 ops/MAC).
+        let g = inception_v4().total_fwd_flops() / 1e9;
+        assert!((15.0..32.0).contains(&g), "fwd = {g} GFLOP");
+    }
+}

@@ -1,0 +1,253 @@
+//! Layer-wise cost-model zoo for the paper's four evaluation networks plus
+//! the real EdgeCNN workload.
+//!
+//! The scheduling problem only consumes per-layer cost vectors
+//! `(p̄t, f̄c, b̄c, ḡt)` and `Δt` (Section III-B); this module derives them
+//! from published architecture math — per-layer parameter bytes and
+//! forward/backward FLOPs — combined with a [`SystemConfig`] (device
+//! GFLOP/s, link bandwidth, RTT, Δt).
+//!
+//! Following Section III-A: branch layers at the same depth are merged into
+//! one layer (GoogLeNet / Inception-v4 modules), and parameter-free
+//! transformation layers (pooling, flatten, concat) are folded into their
+//! preceding parameterized layer.
+
+pub mod edgecnn;
+pub mod googlenet;
+pub mod inception;
+pub mod resnet;
+pub mod vgg;
+
+use crate::config::SystemConfig;
+use crate::sched::CostVectors;
+
+/// One (depth-merged) parameterized layer of a CNN.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    pub name: String,
+    /// Trainable parameter count (weights + biases, all merged branches).
+    pub params: usize,
+    /// Forward FLOPs for one sample.
+    pub fwd_flops: f64,
+    /// Backward FLOPs for one sample (input + weight gradients; ~2x fwd).
+    pub bwd_flops: f64,
+}
+
+impl LayerSpec {
+    pub fn param_bytes(&self) -> f64 {
+        self.params as f64 * 4.0 // f32
+    }
+}
+
+/// A full model: ordered layers, shallowest first.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+}
+
+impl ModelSpec {
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    pub fn total_fwd_flops(&self) -> f64 {
+        self.layers.iter().map(|l| l.fwd_flops).sum()
+    }
+
+    /// Derive the paper's cost vectors for one iteration at `cfg.batch`.
+    ///
+    /// * `pt[l]` / `gt[l]`: serialization time of layer *l*'s tensor at the
+    ///   effective link rate (latency and setup live in `Δt`, which is paid
+    ///   once per mini-procedure, not per layer).
+    /// * `fc[l]` / `bc[l]`: compute time at the device's sustained rate.
+    /// * `delta_t`: `Δt` = setup/coordination + one-way latency, matching
+    ///   Table I's `Δt + pt¹/gt¹ ≈ 14 ms` at 10 ms RTT.
+    pub fn cost_vectors(&self, cfg: &SystemConfig) -> CostVectors {
+        let bw_bytes_per_ms = effective_bandwidth_bytes_per_ms(cfg);
+        let batch = cfg.batch as f64;
+        let mut pt = Vec::with_capacity(self.depth());
+        let mut fc = Vec::with_capacity(self.depth());
+        let mut bc = Vec::with_capacity(self.depth());
+        let mut gt = Vec::with_capacity(self.depth());
+        for layer in &self.layers {
+            let bytes = layer.param_bytes();
+            pt.push(bytes / bw_bytes_per_ms);
+            gt.push(bytes / bw_bytes_per_ms);
+            fc.push(cfg.device.compute_ms(layer.fwd_flops * batch));
+            bc.push(cfg.device.compute_ms(layer.bwd_flops * batch));
+        }
+        CostVectors {
+            pt,
+            fc,
+            bc,
+            gt,
+            delta_t: cfg.net.delta_t_ms + cfg.net.rtt_ms / 2.0,
+        }
+    }
+}
+
+/// Effective per-worker goodput in bytes/ms.
+///
+/// The paper's nominal "10 Gbps" NICs do not deliver 10 Gbps of parameter
+/// goodput to each worker: 8 workers share 4 server NICs, and the
+/// framework's serialization/coordination path costs more. The paper's own
+/// reported numbers (42.86% forward reduction on VGG-19 at bs=32 implies
+/// `pt ≈ fc` in the forward phase) pin the achieved bytes-per-FLOP ratio;
+/// `GOODPUT_EFFICIENCY` is calibrated so ResNet-152 at bs=32 balances
+/// around 3–5 Gbps nominal — which reproduces the paper's Fig. 9b shape
+/// (comm-bound at 1 Gbps, peak gains near 5 Gbps, compute-bound at
+/// 10 Gbps); see DESIGN.md §3 and EXPERIMENTS.md. Sweeping nominal
+/// bandwidth scales this linearly, preserving the crossover shape.
+pub const GOODPUT_EFFICIENCY: f64 = 0.112;
+
+pub fn effective_bandwidth_bytes_per_ms(cfg: &SystemConfig) -> f64 {
+    cfg.net.bandwidth_gbps * GOODPUT_EFFICIENCY * 1e9 / 8.0 / 1e3
+}
+
+/// Look a model up by name.
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    match name.to_ascii_lowercase().as_str() {
+        "vgg19" | "vgg-19" => Some(vgg::vgg19()),
+        "googlenet" => Some(googlenet::googlenet()),
+        "inceptionv4" | "inception-v4" => Some(inception::inception_v4()),
+        "resnet152" | "resnet-152" => Some(resnet::resnet152()),
+        "edgecnn" => Some(edgecnn::edgecnn()),
+        _ => None,
+    }
+}
+
+/// The four evaluation networks of Section V, in the paper's order.
+pub fn paper_models() -> Vec<ModelSpec> {
+    vec![
+        vgg::vgg19(),
+        googlenet::googlenet(),
+        inception::inception_v4(),
+        resnet::resnet152(),
+    ]
+}
+
+/// FLOPs of a `k x k` convolution producing `h x w x cout` from `cin`
+/// channels (2 ops per MAC).
+pub(crate) fn conv_flops(k: usize, cin: usize, cout: usize, h: usize, w: usize) -> f64 {
+    2.0 * (k * k * cin * cout * h * w) as f64
+}
+
+pub(crate) fn conv_params(k: usize, cin: usize, cout: usize) -> usize {
+    k * k * cin * cout + cout
+}
+
+pub(crate) fn fc_flops(fin: usize, fout: usize) -> f64 {
+    2.0 * (fin * fout) as f64
+}
+
+pub(crate) fn fc_params(fin: usize, fout: usize) -> usize {
+    fin * fout + fout
+}
+
+/// Build a conv LayerSpec; backward ≈ 2x forward (input grad + weight grad).
+pub(crate) fn conv_layer(
+    name: impl Into<String>,
+    k: usize,
+    cin: usize,
+    cout: usize,
+    h: usize,
+    w: usize,
+) -> LayerSpec {
+    let f = conv_flops(k, cin, cout, h, w);
+    LayerSpec {
+        name: name.into(),
+        params: conv_params(k, cin, cout),
+        fwd_flops: f,
+        bwd_flops: 2.0 * f,
+    }
+}
+
+pub(crate) fn fc_layer(name: impl Into<String>, fin: usize, fout: usize) -> LayerSpec {
+    let f = fc_flops(fin, fout);
+    LayerSpec {
+        name: name.into(),
+        params: fc_params(fin, fout),
+        fwd_flops: f,
+        bwd_flops: 2.0 * f,
+    }
+}
+
+/// Merge same-depth branch layers into one LayerSpec (Section III-A).
+pub(crate) fn merge(name: impl Into<String>, parts: &[LayerSpec]) -> LayerSpec {
+    LayerSpec {
+        name: name.into(),
+        params: parts.iter().map(|p| p.params).sum(),
+        fwd_flops: parts.iter().map(|p| p.fwd_flops).sum(),
+        bwd_flops: parts.iter().map(|p| p.bwd_flops).sum(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn zoo_lookup() {
+        for name in ["vgg19", "googlenet", "inceptionv4", "resnet152", "edgecnn"] {
+            let m = by_name(name).unwrap();
+            assert!(!m.layers.is_empty(), "{name}");
+            assert!(m.layers.iter().all(|l| l.params > 0), "{name}");
+            assert!(m.layers.iter().all(|l| l.fwd_flops > 0.0), "{name}");
+        }
+        assert!(by_name("alexnet").is_none());
+    }
+
+    #[test]
+    fn cost_vectors_shape_and_positivity() {
+        let cfg = SystemConfig::default();
+        for m in paper_models() {
+            let cv = m.cost_vectors(&cfg);
+            assert_eq!(cv.pt.len(), m.depth());
+            assert_eq!(cv.fc.len(), m.depth());
+            assert_eq!(cv.bc.len(), m.depth());
+            assert_eq!(cv.gt.len(), m.depth());
+            assert!(cv.delta_t > 0.0);
+            assert!(cv.pt.iter().all(|&x| x > 0.0));
+        }
+    }
+
+    #[test]
+    fn delta_t_matches_table1_regime() {
+        // Table I reports Δt + first-layer transmission ≈ 14 ms at 10 ms RTT.
+        let cfg = SystemConfig::default();
+        let m = by_name("resnet152").unwrap();
+        let cv = m.cost_vectors(&cfg);
+        let dt_plus_pt1 = cv.delta_t + cv.pt[0];
+        assert!(
+            (10.0..20.0).contains(&dt_plus_pt1),
+            "Δt + pt¹ = {dt_plus_pt1} ms, expected ≈14 ms"
+        );
+    }
+
+    #[test]
+    fn batch_scales_compute_not_comm() {
+        let m = by_name("vgg19").unwrap();
+        let mut cfg = SystemConfig::default();
+        cfg.batch = 16;
+        let cv16 = m.cost_vectors(&cfg);
+        cfg.batch = 32;
+        let cv32 = m.cost_vectors(&cfg);
+        assert!((cv32.fc[0] / cv16.fc[0] - 2.0).abs() < 1e-9);
+        assert_eq!(cv32.pt, cv16.pt);
+    }
+
+    #[test]
+    fn bwd_is_heavier_than_fwd() {
+        for m in paper_models() {
+            for l in &m.layers {
+                assert!(l.bwd_flops >= l.fwd_flops, "{}:{}", m.name, l.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! ResNet-152 (He et al., CVPR 2016) at 224x224.
+//!
+//! Bottleneck stages [3, 8, 36, 3]; each bottleneck contributes three
+//! parameterized layers (1x1 reduce, 3x3, 1x1 expand), giving
+//! 1 + 3·(3+8+36+3) + 1 = 152 layers. Projection shortcuts sit at the same
+//! depth as the first conv of their block and are merged into it
+//! (Section III-A branch rule); batch-norm scale/shift parameters ride along
+//! with their conv.
+
+use super::{conv_flops, conv_params, fc_layer, LayerSpec, ModelSpec};
+
+struct Stage {
+    blocks: usize,
+    width: usize, // bottleneck width w; output is 4w
+    hw: usize,    // spatial resolution inside the stage
+}
+
+pub fn resnet152() -> ModelSpec {
+    let mut layers: Vec<LayerSpec> = Vec::with_capacity(152);
+    // conv1: 7x7/2, 64 channels, output 112x112.
+    layers.push(bn_conv("conv1", 7, 3, 64, 112, 112));
+
+    let stages = [
+        Stage { blocks: 3, width: 64, hw: 56 },
+        Stage { blocks: 8, width: 128, hw: 28 },
+        Stage { blocks: 36, width: 256, hw: 14 },
+        Stage { blocks: 3, width: 512, hw: 7 },
+    ];
+    let mut cin = 64; // channels entering the first stage (after maxpool)
+    for (si, st) in stages.iter().enumerate() {
+        for b in 0..st.blocks {
+            let cout = st.width * 4;
+            // 1x1 reduce — merged with the projection shortcut (cin -> 4w,
+            // 1x1) in the first block of each stage.
+            let mut reduce = bn_conv(
+                format!("res{}_{b}a", si + 2),
+                1,
+                cin,
+                st.width,
+                st.hw,
+                st.hw,
+            );
+            if b == 0 {
+                let proj = bn_conv("proj", 1, cin, cout, st.hw, st.hw);
+                reduce.params += proj.params;
+                reduce.fwd_flops += proj.fwd_flops;
+                reduce.bwd_flops += proj.bwd_flops;
+            }
+            layers.push(reduce);
+            layers.push(bn_conv(
+                format!("res{}_{b}b", si + 2),
+                3,
+                st.width,
+                st.width,
+                st.hw,
+                st.hw,
+            ));
+            layers.push(bn_conv(
+                format!("res{}_{b}c", si + 2),
+                1,
+                st.width,
+                cout,
+                st.hw,
+                st.hw,
+            ));
+            cin = cout;
+        }
+    }
+    layers.push(fc_layer("fc", 2048, 1000));
+    ModelSpec { name: "resnet152".to_string(), layers }
+}
+
+/// Conv + batch-norm: BN adds 2·cout parameters and ~4 FLOPs/output element.
+fn bn_conv(
+    name: impl Into<String>,
+    k: usize,
+    cin: usize,
+    cout: usize,
+    h: usize,
+    w: usize,
+) -> LayerSpec {
+    let f = conv_flops(k, cin, cout, h, w) + 4.0 * (cout * h * w) as f64;
+    LayerSpec {
+        name: name.into(),
+        params: conv_params(k, cin, cout) + cout,
+        fwd_flops: f,
+        bwd_flops: 2.0 * f,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_is_152() {
+        assert_eq!(resnet152().depth(), 152);
+    }
+
+    #[test]
+    fn total_params_matches_published() {
+        // Published ResNet-152: ~60.2M parameters.
+        let p = resnet152().total_params() as f64 / 1e6;
+        assert!((p - 60.2).abs() < 1.5, "params = {p}M");
+    }
+
+    #[test]
+    fn total_fwd_flops_matches_published() {
+        // Published: ~11.3 GMACs per 224x224 sample; 2 ops/MAC → ~22.6 GFLOP.
+        let g = resnet152().total_fwd_flops() / 1e9;
+        assert!((g - 22.6).abs() < 2.0, "fwd = {g} GFLOP");
+    }
+
+    #[test]
+    fn final_fc_is_a_large_transmission() {
+        // The paper highlights LBL mishandling the FC tail of ResNet-152:
+        // the last layer holds a disproportionate share of parameter bytes.
+        let m = resnet152();
+        let fc = m.layers.last().unwrap();
+        assert!(fc.params > 2_000_000);
+        let conv_median = {
+            let mut p: Vec<usize> = m.layers[..151].iter().map(|l| l.params).collect();
+            p.sort_unstable();
+            p[p.len() / 2]
+        };
+        assert!(fc.params > 5 * conv_median);
+    }
+}

@@ -1,0 +1,72 @@
+//! VGG-19 (Simonyan & Zisserman, ICLR 2015), configuration E at 224x224.
+//!
+//! 16 convolutional layers + 3 fully connected = 19 parameterized layers.
+//! Max-pool layers carry no parameters and are folded into the preceding
+//! conv (Section III-A of the DynaComm paper).
+
+use super::{conv_layer, fc_layer, LayerSpec, ModelSpec};
+
+pub fn vgg19() -> ModelSpec {
+    let mut layers: Vec<LayerSpec> = Vec::with_capacity(19);
+    // (blocks of (cout, repeats) at spatial resolution hw)
+    let blocks: [(usize, usize, usize); 5] = [
+        (64, 2, 224),
+        (128, 2, 112),
+        (256, 4, 56),
+        (512, 4, 28),
+        (512, 4, 14),
+    ];
+    let mut cin = 3;
+    for (bi, (cout, reps, hw)) in blocks.iter().enumerate() {
+        for r in 0..*reps {
+            layers.push(conv_layer(
+                format!("conv{}_{}", bi + 1, r + 1),
+                3,
+                cin,
+                *cout,
+                *hw,
+                *hw,
+            ));
+            cin = *cout;
+        }
+    }
+    // 512 x 7 x 7 = 25088 after the last pool.
+    layers.push(fc_layer("fc6", 25088, 4096));
+    layers.push(fc_layer("fc7", 4096, 4096));
+    layers.push(fc_layer("fc8", 4096, 1000));
+    ModelSpec { name: "vgg19".to_string(), layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_is_19() {
+        assert_eq!(vgg19().depth(), 19);
+    }
+
+    #[test]
+    fn total_params_matches_published() {
+        // Published VGG-19: ~143.67M parameters.
+        let p = vgg19().total_params() as f64 / 1e6;
+        assert!((p - 143.67).abs() < 0.5, "params = {p}M");
+    }
+
+    #[test]
+    fn total_fwd_flops_matches_published() {
+        // Published: ~19.6 GMACs for one 224x224 sample; we count
+        // 2 ops/MAC, so ~39.3 GFLOP.
+        let g = vgg19().total_fwd_flops() / 1e9;
+        assert!((g - 39.3).abs() < 2.0, "fwd = {g} GFLOP");
+    }
+
+    #[test]
+    fn fc_layers_dominate_params_conv_dominate_flops() {
+        let m = vgg19();
+        let fc_params: usize = m.layers[16..].iter().map(|l| l.params).sum();
+        assert!(fc_params as f64 / m.total_params() as f64 > 0.8);
+        let conv_flops: f64 = m.layers[..16].iter().map(|l| l.fwd_flops).sum();
+        assert!(conv_flops / m.total_fwd_flops() > 0.9);
+    }
+}

@@ -1,0 +1,9 @@
+//! Edge-network substrate: framed TCP transport plus a link shaper that
+//! emulates the paper's edge↔cloud conditions (RTT, bandwidth, per-message
+//! setup cost Δt) on loopback.
+
+pub mod shaper;
+pub mod transport;
+
+pub use shaper::{LinkShaper, ShaperSpec};
+pub use transport::{Connection, Message};

@@ -1,0 +1,134 @@
+//! Link shaping: make loopback behave like the paper's edge↔cloud network.
+//!
+//! Every message through a shaped [`super::Connection`] is delayed by
+//! `setup + one-way latency + bytes/bandwidth` before hitting the socket —
+//! the same cost structure (`Δt` + flight time) the paper's testbed
+//! exhibits, scaled down so hundreds of training iterations stay cheap in
+//! CI. The shaper is shared (Arc) per worker link so that concurrent
+//! senders on the same link serialize, like a real NIC.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Parameters for building per-link shapers (e.g. one downlink per worker
+/// connection on the server side).
+#[derive(Debug, Clone, Copy)]
+pub struct ShaperSpec {
+    pub setup_ms: f64,
+    pub latency_ms: f64,
+    pub bytes_per_ms: f64,
+}
+
+impl ShaperSpec {
+    pub fn build(&self) -> LinkShaper {
+        LinkShaper::new(self.setup_ms, self.latency_ms, self.bytes_per_ms)
+    }
+}
+
+/// Token-bucket-ish serializing shaper for one worker↔cloud link.
+#[derive(Debug, Clone)]
+pub struct LinkShaper {
+    inner: Arc<Mutex<ShaperState>>,
+    /// Per-message setup cost (the Δt the paper models), ms.
+    pub setup_ms: f64,
+    /// One-way latency, ms.
+    pub latency_ms: f64,
+    /// Link rate, bytes per ms.
+    pub bytes_per_ms: f64,
+}
+
+#[derive(Debug)]
+struct ShaperState {
+    /// Time at which the link becomes free (serialization point).
+    free_at: Option<Instant>,
+}
+
+impl LinkShaper {
+    pub fn new(setup_ms: f64, latency_ms: f64, bytes_per_ms: f64) -> LinkShaper {
+        assert!(bytes_per_ms > 0.0);
+        LinkShaper {
+            inner: Arc::new(Mutex::new(ShaperState { free_at: None })),
+            setup_ms,
+            latency_ms,
+            bytes_per_ms,
+        }
+    }
+
+    /// An unshaped link (zero cost) — useful in tests.
+    pub fn unshaped() -> LinkShaper {
+        LinkShaper::new(0.0, 0.0, f64::INFINITY)
+    }
+
+    /// The emulated cost of transmitting `bytes`, in ms.
+    pub fn cost_ms(&self, bytes: usize) -> f64 {
+        self.setup_ms + self.latency_ms + bytes as f64 / self.bytes_per_ms
+    }
+
+    /// Block until the link is free, then occupy it for the message's
+    /// serialization time and sleep through it.
+    pub fn delay_for(&self, bytes: usize) {
+        let cost = self.cost_ms(bytes);
+        if cost <= 0.0 || !cost.is_finite() {
+            return;
+        }
+        let dur = Duration::from_secs_f64(cost / 1e3);
+        let wake = {
+            let mut st = self.inner.lock().unwrap();
+            let now = Instant::now();
+            let start = match st.free_at {
+                Some(t) if t > now => t,
+                _ => now,
+            };
+            let wake = start + dur;
+            st.free_at = Some(wake);
+            wake
+        };
+        let now = Instant::now();
+        if wake > now {
+            std::thread::sleep(wake - now);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_model() {
+        let s = LinkShaper::new(2.0, 5.0, 1000.0);
+        assert!((s.cost_ms(0) - 7.0).abs() < 1e-9);
+        assert!((s.cost_ms(10_000) - 17.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unshaped_is_free() {
+        let s = LinkShaper::unshaped();
+        let t0 = Instant::now();
+        s.delay_for(1 << 20);
+        assert!(t0.elapsed() < Duration::from_millis(5));
+    }
+
+    #[test]
+    fn delay_roughly_matches_cost() {
+        let s = LinkShaper::new(1.0, 2.0, 10_000.0); // 10 MB/s
+        let t0 = Instant::now();
+        s.delay_for(50_000); // 1 + 2 + 5 = 8 ms
+        let el = t0.elapsed().as_secs_f64() * 1e3;
+        assert!((7.0..40.0).contains(&el), "elapsed {el} ms");
+    }
+
+    #[test]
+    fn concurrent_senders_serialize() {
+        // Two 10 ms messages on one link: total ≥ 20 ms even if sent from
+        // two threads at once.
+        let s = LinkShaper::new(0.0, 0.0, 1000.0); // 1 MB/s → 10 KB = 10 ms
+        let s2 = s.clone();
+        let t0 = Instant::now();
+        let h = std::thread::spawn(move || s2.delay_for(10_000));
+        s.delay_for(10_000);
+        h.join().unwrap();
+        let el = t0.elapsed().as_secs_f64() * 1e3;
+        assert!(el >= 19.0, "elapsed {el} ms — link did not serialize");
+    }
+}

@@ -1,0 +1,243 @@
+//! Framed message transport over TCP.
+//!
+//! Wire format: `u32 LE length` (of everything after it) + `u8 opcode` +
+//! payload. Payloads carry layer ranges and f32 tensor data; everything is
+//! little-endian and hand-serialized (no serde in the offline build).
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+/// Protocol messages between edge workers and parameter servers.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker → server: pull parameters of layers `[lo, hi]` for `iter`.
+    Pull { iter: u64, lo: u32, hi: u32 },
+    /// Server → worker: the parameters, layer tensors concatenated
+    /// (weights then bias per layer, ascending).
+    PullReply { iter: u64, lo: u32, hi: u32, data: Vec<f32> },
+    /// Worker → server: push gradients of layers `[lo, hi]` for `iter`.
+    Push { iter: u64, lo: u32, hi: u32, data: Vec<f32> },
+    /// Server → worker: push accepted.
+    PushAck { iter: u64, lo: u32, hi: u32 },
+    /// Worker → server: register with a worker id.
+    Hello { worker: u32 },
+    /// Server → worker: registration accepted; reports cluster size.
+    HelloAck { workers: u32 },
+    /// Either direction: tear the connection down.
+    Shutdown,
+}
+
+impl Message {
+    pub fn opcode(&self) -> u8 {
+        match self {
+            Message::Pull { .. } => 1,
+            Message::PullReply { .. } => 2,
+            Message::Push { .. } => 3,
+            Message::PushAck { .. } => 4,
+            Message::Hello { .. } => 5,
+            Message::HelloAck { .. } => 6,
+            Message::Shutdown => 7,
+        }
+    }
+
+    /// Serialized payload size in bytes (excluding the length prefix).
+    pub fn wire_size(&self) -> usize {
+        1 + match self {
+            Message::Pull { .. } => 8 + 4 + 4,
+            Message::PullReply { data, .. } => 8 + 4 + 4 + 4 + 4 * data.len(),
+            Message::Push { data, .. } => 8 + 4 + 4 + 4 + 4 * data.len(),
+            Message::PushAck { .. } => 8 + 4 + 4,
+            Message::Hello { .. } => 4,
+            Message::HelloAck { .. } => 4,
+            Message::Shutdown => 0,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::with_capacity(4 + self.wire_size());
+        buf.extend_from_slice(&(self.wire_size() as u32).to_le_bytes());
+        buf.push(self.opcode());
+        match self {
+            Message::Pull { iter, lo, hi } => {
+                buf.extend_from_slice(&iter.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&hi.to_le_bytes());
+            }
+            Message::PullReply { iter, lo, hi, data }
+            | Message::Push { iter, lo, hi, data } => {
+                buf.extend_from_slice(&iter.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&hi.to_le_bytes());
+                buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                for v in data {
+                    buf.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            Message::PushAck { iter, lo, hi } => {
+                buf.extend_from_slice(&iter.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&hi.to_le_bytes());
+            }
+            Message::Hello { worker } => buf.extend_from_slice(&worker.to_le_bytes()),
+            Message::HelloAck { workers } => buf.extend_from_slice(&workers.to_le_bytes()),
+            Message::Shutdown => {}
+        }
+        buf
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<Message> {
+        anyhow::ensure!(!payload.is_empty(), "empty frame");
+        let op = payload[0];
+        let mut r = Reader { b: &payload[1..] };
+        let msg = match op {
+            1 => Message::Pull { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
+            2 => {
+                let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
+                let n = r.u32()? as usize;
+                Message::PullReply { iter, lo, hi, data: r.f32s(n)? }
+            }
+            3 => {
+                let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
+                let n = r.u32()? as usize;
+                Message::Push { iter, lo, hi, data: r.f32s(n)? }
+            }
+            4 => Message::PushAck { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
+            5 => Message::Hello { worker: r.u32()? },
+            6 => Message::HelloAck { workers: r.u32()? },
+            7 => Message::Shutdown,
+            _ => bail!("unknown opcode {op}"),
+        };
+        anyhow::ensure!(r.b.is_empty(), "trailing bytes in frame (op {op})");
+        Ok(msg)
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(self.b.len() >= n, "truncated frame");
+        let (head, tail) = self.b.split_at(n);
+        self.b = tail;
+        Ok(head)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+}
+
+/// A framed, optionally shaped, connection.
+pub struct Connection {
+    stream: TcpStream,
+    shaper: Option<crate::net::LinkShaper>,
+}
+
+impl Connection {
+    pub fn new(stream: TcpStream, shaper: Option<crate::net::LinkShaper>) -> Connection {
+        stream.set_nodelay(true).ok();
+        Connection { stream, shaper }
+    }
+
+    /// Send one message. When shaped, sleeps for the emulated serialization
+    /// + latency time before the bytes hit the socket.
+    pub fn send(&mut self, msg: &Message) -> Result<()> {
+        let buf = msg.encode();
+        if let Some(shaper) = &self.shaper {
+            shaper.delay_for(buf.len());
+        }
+        self.stream.write_all(&buf).context("send")?;
+        Ok(())
+    }
+
+    /// Receive one message (blocking).
+    pub fn recv(&mut self) -> Result<Message> {
+        let mut len = [0u8; 4];
+        self.stream.read_exact(&mut len).context("recv length")?;
+        let len = u32::from_le_bytes(len) as usize;
+        anyhow::ensure!(len <= 1 << 30, "frame too large: {len}");
+        let mut payload = vec![0u8; len];
+        self.stream.read_exact(&mut payload).context("recv payload")?;
+        Message::decode(&payload)
+    }
+
+    pub fn try_clone(&self) -> Result<Connection> {
+        Ok(Connection {
+            stream: self.stream.try_clone()?,
+            shaper: self.shaper.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(m: Message) {
+        let enc = m.encode();
+        let len = u32::from_le_bytes(enc[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, enc.len() - 4);
+        assert_eq!(Message::decode(&enc[4..]).unwrap(), m);
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(Message::Pull { iter: 7, lo: 1, hi: 3 });
+        roundtrip(Message::PullReply {
+            iter: 7,
+            lo: 1,
+            hi: 3,
+            data: vec![1.5, -2.0, 0.0],
+        });
+        roundtrip(Message::Push { iter: 0, lo: 6, hi: 6, data: vec![] });
+        roundtrip(Message::PushAck { iter: 1, lo: 2, hi: 4 });
+        roundtrip(Message::Hello { worker: 3 });
+        roundtrip(Message::HelloAck { workers: 8 });
+        roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[99]).is_err());
+        assert!(Message::decode(&[1, 0, 0]).is_err()); // truncated
+        // trailing bytes
+        let mut enc = Message::Hello { worker: 1 }.encode();
+        enc.push(0);
+        assert!(Message::decode(&enc[4..]).is_err());
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut conn = Connection::new(s, None);
+            let m = conn.recv().unwrap();
+            conn.send(&m).unwrap(); // echo
+        });
+        let mut conn =
+            Connection::new(TcpStream::connect(addr).unwrap(), None);
+        let msg = Message::Push { iter: 42, lo: 2, hi: 5, data: vec![3.25; 1000] };
+        conn.send(&msg).unwrap();
+        assert_eq!(conn.recv().unwrap(), msg);
+        t.join().unwrap();
+    }
+}

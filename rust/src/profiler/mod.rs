@@ -1,0 +1,255 @@
+//! Real-time profiling (Section IV-A).
+//!
+//! The worker timestamps every mini-procedure; this module turns the raw
+//! samples into the scheduler's inputs:
+//!
+//! * `fc[l]` / `bc[l]` — EWMA of each layer's measured compute time;
+//! * transmission model — segment transfer samples `(bytes, ms)` are fit
+//!   with least squares, giving `Δt` (the intercept: per-mini-procedure
+//!   setup + latency) and the achieved byte rate (the slope), from which
+//!   `pt[l]` / `gt[l]` are reconstructed per layer;
+//! * an on/off switch (Table II measures its overhead) and the once-per-
+//!   epoch re-scheduling policy (Section IV-C).
+
+use crate::sched::CostVectors;
+use crate::util::stats::linear_fit;
+
+/// Exponentially-weighted moving average.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    value: Option<f64>,
+    alpha: f64,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Ewma {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { value: None, alpha }
+    }
+
+    pub fn update(&mut self, x: f64) {
+        self.value = Some(match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        });
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Transfer-time samples for one direction (pull or push).
+#[derive(Debug, Clone, Default)]
+struct TransferSamples {
+    /// (bytes, ms) per completed segment; bounded ring.
+    samples: Vec<(f64, f64)>,
+}
+
+const MAX_SAMPLES: usize = 512;
+
+impl TransferSamples {
+    fn record(&mut self, bytes: usize, ms: f64) {
+        if self.samples.len() >= MAX_SAMPLES {
+            self.samples.remove(0);
+        }
+        self.samples.push((bytes as f64, ms));
+    }
+
+    /// (Δt ms, ms-per-byte). Falls back to attributing everything to rate
+    /// when there is not enough size diversity to separate the intercept.
+    fn fit(&self) -> Option<(f64, f64)> {
+        if self.samples.len() < 2 {
+            return None;
+        }
+        let xs: Vec<f64> = self.samples.iter().map(|s| s.0).collect();
+        let ys: Vec<f64> = self.samples.iter().map(|s| s.1).collect();
+        let spread = xs.iter().cloned().fold(f64::MIN, f64::max)
+            - xs.iter().cloned().fold(f64::MAX, f64::min);
+        if spread < 1.0 {
+            // All samples the same size: rate unidentifiable; put the mean
+            // entirely into Δt.
+            let mean = ys.iter().sum::<f64>() / ys.len() as f64;
+            return Some((mean, 0.0));
+        }
+        let (slope, intercept) = linear_fit(&xs, &ys);
+        // Clamp to physical values; noise can push either negative.
+        Some((intercept.max(0.0), slope.max(0.0)))
+    }
+}
+
+/// The profiler: all cost-vector state for one worker.
+#[derive(Debug, Clone)]
+pub struct Profiler {
+    /// Parameter bytes per layer (from the manifest) — the sizes the
+    /// transmission model converts into per-layer pt/gt.
+    layer_bytes: Vec<usize>,
+    pub enabled: bool,
+    fc: Vec<Ewma>,
+    bc: Vec<Ewma>,
+    pull: TransferSamples,
+    push: TransferSamples,
+}
+
+impl Profiler {
+    pub fn new(layer_bytes: Vec<usize>) -> Profiler {
+        let depth = layer_bytes.len();
+        Profiler {
+            layer_bytes,
+            enabled: true,
+            fc: vec![Ewma::new(0.3); depth],
+            bc: vec![Ewma::new(0.3); depth],
+            pull: TransferSamples::default(),
+            push: TransferSamples::default(),
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layer_bytes.len()
+    }
+
+    pub fn record_fwd(&mut self, layer: usize, ms: f64) {
+        if self.enabled {
+            self.fc[layer].update(ms);
+        }
+    }
+
+    pub fn record_bwd(&mut self, layer: usize, ms: f64) {
+        if self.enabled {
+            self.bc[layer].update(ms);
+        }
+    }
+
+    pub fn record_pull(&mut self, bytes: usize, ms: f64) {
+        if self.enabled {
+            self.pull.record(bytes, ms);
+        }
+    }
+
+    pub fn record_push(&mut self, bytes: usize, ms: f64) {
+        if self.enabled {
+            self.push.record(bytes, ms);
+        }
+    }
+
+    /// Do we have enough signal to schedule from measurements?
+    pub fn ready(&self) -> bool {
+        self.fc.iter().all(|e| e.get().is_some())
+            && self.bc.iter().all(|e| e.get().is_some())
+            && self.pull.fit().is_some()
+            && self.push.fit().is_some()
+    }
+
+    /// Assemble the scheduler's cost vectors from the current estimates.
+    /// `Δt` is the mean of the pull/push intercepts.
+    pub fn cost_vectors(&self) -> Option<CostVectors> {
+        if !self.ready() {
+            return None;
+        }
+        let (dt_pull, rate_pull) = self.pull.fit()?;
+        let (dt_push, rate_push) = self.push.fit()?;
+        let pt = self
+            .layer_bytes
+            .iter()
+            .map(|&b| b as f64 * rate_pull)
+            .collect();
+        let gt = self
+            .layer_bytes
+            .iter()
+            .map(|&b| b as f64 * rate_push)
+            .collect();
+        Some(CostVectors {
+            pt,
+            fc: self.fc.iter().map(|e| e.get().unwrap()).collect(),
+            bc: self.bc.iter().map(|e| e.get().unwrap()).collect(),
+            gt,
+            delta_t: 0.5 * (dt_pull + dt_push),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_smooths() {
+        let mut e = Ewma::new(0.5);
+        assert!(e.get().is_none());
+        e.update(10.0);
+        assert_eq!(e.get(), Some(10.0));
+        e.update(20.0);
+        assert_eq!(e.get(), Some(15.0));
+    }
+
+    #[test]
+    fn recovers_delta_t_and_rate_from_clean_samples() {
+        // Link: Δt = 14 ms, 1e-4 ms/byte (10 MB/s).
+        let mut p = Profiler::new(vec![1000, 2000, 4000]);
+        for l in 0..3 {
+            p.record_fwd(l, 5.0);
+            p.record_bwd(l, 10.0);
+        }
+        for &bytes in &[1000usize, 2000, 4000, 8000] {
+            let ms = 14.0 + bytes as f64 * 1e-4;
+            p.record_pull(bytes, ms);
+            p.record_push(bytes, ms);
+        }
+        let cv = p.cost_vectors().unwrap();
+        assert!((cv.delta_t - 14.0).abs() < 1e-6, "{}", cv.delta_t);
+        assert!((cv.pt[0] - 0.1).abs() < 1e-6, "{}", cv.pt[0]);
+        assert!((cv.pt[2] - 0.4).abs() < 1e-6);
+        assert_eq!(cv.fc, vec![5.0; 3]);
+        assert_eq!(cv.bc, vec![10.0; 3]);
+    }
+
+    #[test]
+    fn not_ready_without_samples() {
+        let mut p = Profiler::new(vec![100, 100]);
+        assert!(!p.ready());
+        assert!(p.cost_vectors().is_none());
+        p.record_fwd(0, 1.0);
+        assert!(!p.ready());
+    }
+
+    #[test]
+    fn uniform_sizes_fall_back_to_intercept() {
+        let mut p = Profiler::new(vec![500]);
+        p.record_fwd(0, 1.0);
+        p.record_bwd(0, 1.0);
+        for _ in 0..3 {
+            p.record_pull(500, 8.0);
+            p.record_push(500, 8.0);
+        }
+        let cv = p.cost_vectors().unwrap();
+        assert!((cv.delta_t - 8.0).abs() < 1e-9);
+        assert_eq!(cv.pt, vec![0.0]);
+    }
+
+    #[test]
+    fn disabled_profiler_records_nothing() {
+        let mut p = Profiler::new(vec![100]);
+        p.enabled = false;
+        p.record_fwd(0, 1.0);
+        p.record_bwd(0, 1.0);
+        p.record_pull(100, 1.0);
+        p.record_push(100, 1.0);
+        assert!(!p.ready());
+    }
+
+    #[test]
+    fn noisy_fit_stays_physical() {
+        let mut p = Profiler::new(vec![10, 10_000]);
+        p.record_fwd(0, 1.0);
+        p.record_fwd(1, 1.0);
+        p.record_bwd(0, 1.0);
+        p.record_bwd(1, 1.0);
+        // Wildly noisy samples with a negative apparent slope.
+        p.record_pull(10_000, 5.0);
+        p.record_pull(20_000, 3.0);
+        p.record_push(10_000, 5.0);
+        p.record_push(20_000, 3.0);
+        let cv = p.cost_vectors().unwrap();
+        assert!(cv.validate().is_ok());
+    }
+}

@@ -1,0 +1,16 @@
+//! The Parameter-Server framework substrate (Li et al., OSDI'14 — the
+//! system Fig. 1 abstracts): sharded parameter storage on "cloud" servers,
+//! edge workers pulling parameters / pushing gradients layer-wise over the
+//! shaped network, BSP synchronization, and server-side SGD.
+//!
+//! The DynaComm scheduler plugs in at the worker: pulls and pushes are
+//! issued **per decomposition segment**, overlapping with per-layer PJRT
+//! compute exactly as the paper's execution model prescribes.
+
+pub mod server;
+pub mod sharding;
+pub mod worker;
+
+pub use server::{ParamServer, ServerConfig, ServerHandle};
+pub use sharding::ShardMap;
+pub use worker::{EdgeWorker, WorkerConfig, WorkerReport};

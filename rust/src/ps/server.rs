@@ -1,0 +1,305 @@
+//! A parameter-server shard.
+//!
+//! Holds the flat `w‖b` parameter vector for each layer it owns, serves
+//! `Pull`s (blocking until the layer's version reaches the requested
+//! iteration — this is the BSP clock), accumulates `Push`ed gradients, and
+//! applies averaged SGD once every registered worker has contributed.
+
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::net::{Connection, Message, ShaperSpec};
+
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Workers that must push before an update is applied (BSP).
+    pub workers: usize,
+    /// SGD learning rate applied server-side.
+    pub lr: f32,
+}
+
+struct LayerSlot {
+    /// Flat parameters, weights then bias.
+    params: Vec<f32>,
+    /// Number of iterations already applied; a `Pull { iter }` waits until
+    /// `version >= iter`.
+    version: u64,
+    grad_sum: Vec<f32>,
+    grad_count: usize,
+}
+
+struct Shared {
+    cfg: ServerConfig,
+    /// layer id -> guarded slot (only layers this shard owns).
+    slots: HashMap<usize, (Mutex<LayerSlot>, Condvar)>,
+    shutting_down: AtomicBool,
+    connected: AtomicU32,
+}
+
+/// A running shard: background accept loop + handler threads.
+pub struct ParamServer {
+    #[allow(dead_code)]
+    shared: Arc<Shared>,
+    listener_thread: Option<JoinHandle<()>>,
+    addr: std::net::SocketAddr,
+}
+
+/// Cheap handle for clients: address + graceful shutdown.
+#[derive(Clone)]
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    #[allow(dead_code)]
+    shared: Arc<Shared>,
+}
+
+impl ParamServer {
+    /// Start a shard on an ephemeral loopback port. `layers` maps layer id
+    /// to its initial flat parameters. Server→worker replies are shaped
+    /// with a fresh shaper per accepted connection when `shaper` is given
+    /// (the downlink half of each worker's emulated edge link;
+    /// worker→server requests are shaped on the worker side).
+    pub fn start(
+        cfg: ServerConfig,
+        layers: HashMap<usize, Vec<f32>>,
+        shaper: Option<ShaperSpec>,
+    ) -> Result<ParamServer> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
+        let addr = listener.local_addr()?;
+        let slots = layers
+            .into_iter()
+            .map(|(l, params)| {
+                let n = params.len();
+                (
+                    l,
+                    (
+                        Mutex::new(LayerSlot {
+                            params,
+                            version: 0,
+                            grad_sum: vec![0.0; n],
+                            grad_count: 0,
+                        }),
+                        Condvar::new(),
+                    ),
+                )
+            })
+            .collect();
+        let shared = Arc::new(Shared {
+            cfg,
+            slots,
+            shutting_down: AtomicBool::new(false),
+            connected: AtomicU32::new(0),
+        });
+        let shared2 = shared.clone();
+        let listener_thread = std::thread::Builder::new()
+            .name(format!("ps-accept-{}", addr.port()))
+            .spawn(move || accept_loop(listener, shared2, shaper))?;
+        Ok(ParamServer { shared, listener_thread: Some(listener_thread), addr })
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { addr: self.addr, shared: self.shared.clone() }
+    }
+
+    /// Read back the current parameters of a layer (test/eval support).
+    pub fn snapshot(&self, layer: usize) -> Option<Vec<f32>> {
+        let (m, _) = self.shared.slots.get(&layer)?;
+        Some(m.lock().unwrap().params.clone())
+    }
+
+    /// Stop accepting and unblock handler threads.
+    pub fn shutdown(&mut self) {
+        self.shared.shutting_down.store(true, Ordering::SeqCst);
+        // Wake the accept loop with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.listener_thread.take() {
+            let _ = t.join();
+        }
+        // Wake any pull waiting on a version bump.
+        for (m, cv) in self.shared.slots.values() {
+            let _guard = m.lock().unwrap();
+            cv.notify_all();
+            drop(_guard);
+        }
+    }
+}
+
+impl Drop for ParamServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<ShaperSpec>) {
+    let mut handlers = Vec::new();
+    loop {
+        let Ok((stream, _)) = listener.accept() else { break };
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            break;
+        }
+        let shared = shared.clone();
+        let shaper = shaper.map(|s| s.build());
+        handlers.push(std::thread::spawn(move || {
+            let conn = Connection::new(stream, shaper);
+            if let Err(e) = handle_conn(conn, &shared) {
+                crate::debug!("ps", "handler exit: {e:#}");
+            }
+        }));
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
+    loop {
+        let msg = match conn.recv() {
+            Ok(m) => m,
+            // Peer hung up: normal teardown.
+            Err(_) => return Ok(()),
+        };
+        match msg {
+            Message::Hello { worker: _ } => {
+                shared.connected.fetch_add(1, Ordering::SeqCst);
+                conn.send(&Message::HelloAck {
+                    workers: shared.cfg.workers as u32,
+                })?;
+            }
+            Message::Pull { iter, lo, hi } => {
+                let mut data = Vec::new();
+                for l in lo as usize..=hi as usize {
+                    let Some((m, cv)) = shared.slots.get(&l) else { continue };
+                    let mut slot = m.lock().unwrap();
+                    while slot.version < iter
+                        && !shared.shutting_down.load(Ordering::SeqCst)
+                    {
+                        let (s, _timeout) = cv
+                            .wait_timeout(slot, std::time::Duration::from_millis(200))
+                            .unwrap();
+                        slot = s;
+                    }
+                    data.extend_from_slice(&slot.params);
+                }
+                conn.send(&Message::PullReply { iter, lo, hi, data })?;
+            }
+            Message::Push { iter, lo, hi, data } => {
+                let mut off = 0usize;
+                for l in lo as usize..=hi as usize {
+                    let Some((m, cv)) = shared.slots.get(&l) else { continue };
+                    let mut slot = m.lock().unwrap();
+                    let n = slot.params.len();
+                    anyhow::ensure!(
+                        off + n <= data.len(),
+                        "push payload too small for layers {lo}..={hi}"
+                    );
+                    for (g, d) in slot.grad_sum.iter_mut().zip(&data[off..off + n]) {
+                        *g += d;
+                    }
+                    off += n;
+                    slot.grad_count += 1;
+                    if slot.grad_count == shared.cfg.workers {
+                        // Averaged SGD, then advance the BSP clock.
+                        let scale = shared.cfg.lr / shared.cfg.workers as f32;
+                        // Split borrows: update params from grad_sum.
+                        let LayerSlot { params, grad_sum, version, grad_count } =
+                            &mut *slot;
+                        for (w, g) in params.iter_mut().zip(grad_sum.iter()) {
+                            *w -= scale * *g;
+                        }
+                        grad_sum.iter_mut().for_each(|g| *g = 0.0);
+                        *grad_count = 0;
+                        *version = iter + 1;
+                        cv.notify_all();
+                    }
+                }
+                anyhow::ensure!(off == data.len(), "push payload size mismatch");
+                conn.send(&Message::PushAck { iter, lo, hi })?;
+            }
+            Message::Shutdown => return Ok(()),
+            other => anyhow::bail!("unexpected message at server: {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn connect(addr: std::net::SocketAddr) -> Connection {
+        Connection::new(TcpStream::connect(addr).unwrap(), None)
+    }
+
+    fn start_two_layer(workers: usize) -> ParamServer {
+        let mut layers = HashMap::new();
+        layers.insert(0, vec![1.0f32, 2.0]);
+        layers.insert(1, vec![10.0f32]);
+        ParamServer::start(ServerConfig { workers, lr: 0.5 }, layers, None).unwrap()
+    }
+
+    #[test]
+    fn pull_initial_params() {
+        let srv = start_two_layer(1);
+        let mut c = connect(srv.handle().addr);
+        c.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { data, .. } => assert_eq!(data, vec![1.0, 2.0, 10.0]),
+            m => panic!("{m:?}"),
+        }
+    }
+
+    #[test]
+    fn push_applies_averaged_sgd() {
+        let srv = start_two_layer(2);
+        let mut a = connect(srv.handle().addr);
+        let mut b = connect(srv.handle().addr);
+        // Worker A pushes grad [2, 0] for layer 0; worker B pushes [0, 4].
+        a.send(&Message::Push { iter: 0, lo: 0, hi: 0, data: vec![2.0, 0.0] }).unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::PushAck { .. }));
+        // Not applied yet (1 of 2 workers).
+        assert_eq!(srv.snapshot(0).unwrap(), vec![1.0, 2.0]);
+        b.send(&Message::Push { iter: 0, lo: 0, hi: 0, data: vec![0.0, 4.0] }).unwrap();
+        assert!(matches!(b.recv().unwrap(), Message::PushAck { .. }));
+        // w -= 0.5 * avg = 0.5*[1,2] ⇒ [0.5, 1.0].
+        assert_eq!(srv.snapshot(0).unwrap(), vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn pull_blocks_until_version_advances() {
+        let srv = start_two_layer(1);
+        let addr = srv.handle().addr;
+        let t = std::thread::spawn(move || {
+            let mut c = connect(addr);
+            // iteration 1 params are only available after the iter-0 push.
+            c.send(&Message::Pull { iter: 1, lo: 0, hi: 0 }).unwrap();
+            let t0 = std::time::Instant::now();
+            let reply = c.recv().unwrap();
+            (t0.elapsed(), reply)
+        });
+        std::thread::sleep(std::time::Duration::from_millis(120));
+        let mut p = connect(addr);
+        p.send(&Message::Push { iter: 0, lo: 0, hi: 0, data: vec![2.0, 2.0] }).unwrap();
+        p.recv().unwrap();
+        let (elapsed, reply) = t.join().unwrap();
+        assert!(elapsed.as_millis() >= 100, "pull did not block: {elapsed:?}");
+        match reply {
+            Message::PullReply { data, .. } => assert_eq!(data, vec![0.0, 1.0]),
+            m => panic!("{m:?}"),
+        }
+    }
+
+    #[test]
+    fn ignores_unowned_layers_in_range() {
+        // Shard owns layers {0, 1}; a pull of [0, 5] returns only owned data.
+        let srv = start_two_layer(1);
+        let mut c = connect(srv.handle().addr);
+        c.send(&Message::Pull { iter: 0, lo: 0, hi: 5 }).unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { data, .. } => assert_eq!(data.len(), 3),
+            m => panic!("{m:?}"),
+        }
+    }
+}

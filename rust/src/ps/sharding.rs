@@ -1,0 +1,88 @@
+//! Layer → parameter-server shard mapping.
+//!
+//! Layers are striped round-robin across shards (the paper's testbed runs
+//! 4 PS instances). A transmission segment `[lo, hi]` therefore fans out
+//! into at most `min(servers, hi-lo+1)` per-server sub-requests.
+
+/// Round-robin striping of `depth` layers over `servers` shards.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardMap {
+    pub servers: usize,
+    pub depth: usize,
+}
+
+impl ShardMap {
+    pub fn new(servers: usize, depth: usize) -> ShardMap {
+        assert!(servers > 0 && depth > 0);
+        ShardMap { servers, depth }
+    }
+
+    /// Which server owns 0-based layer `l`.
+    pub fn owner(&self, l: usize) -> usize {
+        debug_assert!(l < self.depth);
+        l % self.servers
+    }
+
+    /// The 0-based layers owned by `server`, ascending.
+    pub fn owned_by(&self, server: usize) -> Vec<usize> {
+        (0..self.depth).filter(|l| self.owner(*l) == server).collect()
+    }
+
+    /// Split an inclusive 0-based layer range into per-server layer lists,
+    /// ordered by first layer (the order sub-requests are issued in).
+    pub fn split_range(&self, lo: usize, hi: usize) -> Vec<(usize, Vec<usize>)> {
+        debug_assert!(lo <= hi && hi < self.depth);
+        let mut per: Vec<Vec<usize>> = vec![Vec::new(); self.servers];
+        for l in lo..=hi {
+            per[self.owner(l)].push(l);
+        }
+        let mut out: Vec<(usize, Vec<usize>)> = per
+            .into_iter()
+            .enumerate()
+            .filter(|(_, v)| !v.is_empty())
+            .collect();
+        out.sort_by_key(|(_, v)| v[0]);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin() {
+        let m = ShardMap::new(4, 10);
+        assert_eq!(m.owner(0), 0);
+        assert_eq!(m.owner(5), 1);
+        assert_eq!(m.owned_by(2), vec![2, 6]);
+    }
+
+    #[test]
+    fn split_covers_range_exactly() {
+        let m = ShardMap::new(3, 12);
+        let parts = m.split_range(2, 9);
+        let mut all: Vec<usize> = parts.iter().flat_map(|(_, v)| v.clone()).collect();
+        all.sort_unstable();
+        assert_eq!(all, (2..=9).collect::<Vec<_>>());
+        for (s, layers) in &parts {
+            for l in layers {
+                assert_eq!(m.owner(*l), *s);
+            }
+        }
+    }
+
+    #[test]
+    fn single_server_owns_everything() {
+        let m = ShardMap::new(1, 6);
+        assert_eq!(m.owned_by(0).len(), 6);
+        assert_eq!(m.split_range(0, 5), vec![(0, (0..6).collect())]);
+    }
+
+    #[test]
+    fn more_servers_than_layers() {
+        let m = ShardMap::new(8, 3);
+        assert!(m.owned_by(5).is_empty());
+        assert_eq!(m.split_range(0, 2).len(), 3);
+    }
+}

@@ -1,0 +1,416 @@
+//! The edge worker: executes the paper's iteration
+//! `[pt, fc, bc, gt]` with **segmented, overlapped** communication.
+//!
+//! A puller thread streams parameter segments (per the forward
+//! decomposition `D_f`) while the main thread runs per-layer PJRT forward
+//! compute; a pusher thread flushes gradient segments (per `D_b`) while the
+//! main thread continues backward compute. That is exactly the execution
+//! model of Fig. 2(c) / Fig. 3, with the scheduler deciding the segment
+//! boundaries at run time from profiled cost vectors (Section IV).
+
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::config::Strategy;
+use crate::net::{Connection, LinkShaper, Message};
+use crate::profiler::Profiler;
+use crate::ps::sharding::ShardMap;
+use crate::runtime::{RuntimeClient, Tensor};
+use crate::sched::{self, Decomposition, SchedulePlan};
+
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub id: usize,
+    pub strategy: Strategy,
+    pub artifacts_dir: String,
+    pub server_addrs: Vec<std::net::SocketAddr>,
+    /// Uplink shaper (worker → cloud); cloned per connection so all of this
+    /// worker's traffic serializes on one emulated link.
+    pub shaper: Option<LinkShaper>,
+    /// Profiling switch (Table II measures its cost).
+    pub profiling: bool,
+    /// Re-run the scheduler every this many iterations ("once per epoch",
+    /// Section IV-C).
+    pub reschedule_every: usize,
+}
+
+/// Per-run observability, returned to the trainer.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerReport {
+    pub iter_ms: Vec<f64>,
+    pub losses: Vec<f32>,
+    pub batch_top1: Vec<f64>,
+    /// Scheduler wall-clock per re-plan, ms (Table I).
+    pub sched_ms: Vec<f64>,
+    /// (iteration, fwd segments, bwd segments) whenever the plan changed.
+    pub plans: Vec<(u64, usize, usize)>,
+}
+
+/// One edge device, connected to every shard.
+pub struct EdgeWorker {
+    cfg: WorkerConfig,
+    pub runtime: RuntimeClient,
+    conns: Vec<Connection>,
+    shard: ShardMap,
+    pub profiler: Profiler,
+    plan: SchedulePlan,
+}
+
+impl EdgeWorker {
+    /// Load the runtime, connect to all shards, register.
+    pub fn connect(cfg: WorkerConfig) -> Result<EdgeWorker> {
+        let runtime = RuntimeClient::load(&cfg.artifacts_dir)?;
+        let depth = runtime.manifest.depth();
+        let shard = ShardMap::new(cfg.server_addrs.len(), depth);
+        let mut conns = Vec::with_capacity(cfg.server_addrs.len());
+        for addr in &cfg.server_addrs {
+            let stream = TcpStream::connect(addr)
+                .with_context(|| format!("connecting to shard {addr}"))?;
+            let mut conn = Connection::new(stream, cfg.shaper.clone());
+            conn.send(&Message::Hello { worker: cfg.id as u32 })?;
+            match conn.recv()? {
+                Message::HelloAck { .. } => {}
+                m => anyhow::bail!("bad hello ack: {m:?}"),
+            }
+            conns.push(conn);
+        }
+        let layer_bytes: Vec<usize> =
+            runtime.manifest.layers.iter().map(|l| l.param_bytes()).collect();
+        let mut profiler = Profiler::new(layer_bytes);
+        profiler.enabled = cfg.profiling;
+        // Bootstrap plan: LBL gives size-diverse per-layer transfer samples
+        // for the profiler's Δt/rate fit; fixed strategies start as
+        // themselves.
+        let boot = match cfg.strategy {
+            Strategy::Sequential => Decomposition::sequential(depth),
+            _ => Decomposition::layer_by_layer(depth),
+        };
+        let plan = SchedulePlan { fwd: boot.clone(), bwd: boot };
+        Ok(EdgeWorker { cfg, runtime, conns, shard, profiler, plan })
+    }
+
+    pub fn depth(&self) -> usize {
+        self.runtime.manifest.depth()
+    }
+
+    pub fn plan(&self) -> &SchedulePlan {
+        &self.plan
+    }
+
+    /// Flat `w‖b` sizes per layer.
+    fn layer_len(&self, l: usize) -> usize {
+        let a = &self.runtime.manifest.layers[l];
+        a.w_count() + a.b_count()
+    }
+
+    /// Re-run the scheduler from the latest profile; returns scheduling
+    /// wall-clock in ms, or None if the profiler has no signal yet.
+    pub fn reschedule(&mut self) -> Option<f64> {
+        let cv = self.profiler.cost_vectors()?;
+        let t0 = Instant::now();
+        let plan = sched::plan_for(self.cfg.strategy, &cv);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        self.plan = plan;
+        Some(ms)
+    }
+
+    /// Run `iters` iterations, fetching batches from `next_batch`.
+    pub fn run(
+        &mut self,
+        iters: u64,
+        mut next_batch: impl FnMut(u64) -> (Tensor, Tensor),
+    ) -> Result<WorkerReport> {
+        let mut report = WorkerReport::default();
+        for i in 0..iters {
+            if i > 0 && (i as usize) % self.cfg.reschedule_every == 0 {
+                if let Some(ms) = self.reschedule() {
+                    report.sched_ms.push(ms);
+                    report.plans.push((
+                        i,
+                        self.plan.fwd.num_transmissions(),
+                        self.plan.bwd.num_transmissions(),
+                    ));
+                }
+            }
+            let (x, onehot) = next_batch(i);
+            let t0 = Instant::now();
+            let (loss, top1) = self.iteration(i, &x, &onehot)?;
+            report.iter_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            report.losses.push(loss);
+            report.batch_top1.push(top1);
+        }
+        Ok(report)
+    }
+
+    /// One BSP iteration: segmented pulls + layer-wise fwd, loss,
+    /// layer-wise bwd + segmented pushes.
+    pub fn iteration(&mut self, iter: u64, x: &Tensor, onehot: &Tensor) -> Result<(f32, f64)> {
+        let depth = self.depth();
+        let fwd_segs: Vec<(usize, usize)> = self
+            .plan
+            .fwd
+            .fwd_segments()
+            .iter()
+            .map(|&(a, b)| (a - 1, b - 1)) // to 0-based
+            .collect();
+        let bwd_segs: Vec<(usize, usize)> = self
+            .plan
+            .bwd
+            .bwd_segments()
+            .iter()
+            .map(|&(hi, lo)| (hi - 1, lo - 1))
+            .collect();
+
+        // ---- Forward: puller thread streams segments; main computes. ----
+        let (param_tx, param_rx) = mpsc::channel::<(usize, Vec<f32>)>();
+        let (stat_tx, stat_rx) = mpsc::channel::<(usize, f64)>();
+        let mut puller_conns = Vec::new();
+        for c in &self.conns {
+            puller_conns.push(c.try_clone()?);
+        }
+        let shard = self.shard;
+        let layer_lens: Vec<usize> = (0..depth).map(|l| self.layer_len(l)).collect();
+        let layer_lens_puller = layer_lens.clone();
+        let segs = fwd_segs.clone();
+        let puller = std::thread::Builder::new()
+            .name(format!("puller-{}", self.cfg.id))
+            .spawn(move || -> Result<()> {
+                for (lo, hi) in segs {
+                    let t0 = Instant::now();
+                    let mut per_layer: Vec<Option<Vec<f32>>> = vec![None; hi - lo + 1];
+                    for (srv, layers) in shard.split_range(lo, hi) {
+                        puller_conns[srv].send(&Message::Pull {
+                            iter,
+                            lo: lo as u32,
+                            hi: hi as u32,
+                        })?;
+                        let reply = puller_conns[srv].recv()?;
+                        let Message::PullReply { data, .. } = reply else {
+                            anyhow::bail!("bad pull reply: {reply:?}");
+                        };
+                        let mut off = 0;
+                        for l in layers {
+                            let n = layer_lens_puller[l];
+                            anyhow::ensure!(off + n <= data.len(), "short pull reply");
+                            per_layer[l - lo] = Some(data[off..off + n].to_vec());
+                            off += n;
+                        }
+                    }
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let bytes: usize = (lo..=hi).map(|l| 4 * layer_lens_puller[l]).sum();
+                    let _ = stat_tx.send((bytes, ms));
+                    for (off, p) in per_layer.into_iter().enumerate() {
+                        let p = p.context("server returned no data for layer")?;
+                        let _ = param_tx.send((lo + off, p));
+                    }
+                }
+                Ok(())
+            })?;
+
+        let mut acts: Vec<Tensor> = Vec::with_capacity(depth + 1);
+        acts.push(x.clone());
+        let mut params: Vec<Option<(Tensor, Tensor)>> = vec![None; depth];
+        for l in 0..depth {
+            while params[l].is_none() {
+                let (got, flat) = param_rx
+                    .recv()
+                    .map_err(|_| anyhow::anyhow!("puller died before layer {l}"))?;
+                params[got] = Some(self.split_params(got, flat)?);
+            }
+            let (w, b) = params[l].as_ref().unwrap();
+            let t0 = Instant::now();
+            let y = self.runtime.layer_fwd(l, w, b, &acts[l])?;
+            self.profiler.record_fwd(l, t0.elapsed().as_secs_f64() * 1e3);
+            acts.push(y);
+        }
+        puller
+            .join()
+            .map_err(|_| anyhow::anyhow!("puller panicked"))?
+            .context("puller failed")?;
+        while let Ok((bytes, ms)) = stat_rx.try_recv() {
+            self.profiler.record_pull(bytes, ms);
+        }
+
+        // ---- Loss head. ----
+        let logits = &acts[depth];
+        let (loss, glogits) = self.runtime.loss(logits, onehot)?;
+        let top1 = batch_top1(logits, onehot);
+
+        // ---- Backward: main computes; pusher thread flushes segments. ----
+        let (grad_tx, grad_rx) = mpsc::channel::<(usize, usize, Vec<f32>)>();
+        let mut pusher_conns = Vec::new();
+        for c in &self.conns {
+            pusher_conns.push(c.try_clone()?);
+        }
+        let layer_lens2 = layer_lens.clone();
+        let pusher = std::thread::Builder::new()
+            .name(format!("pusher-{}", self.cfg.id))
+            .spawn(move || -> Result<Vec<(usize, f64)>> {
+                let mut stats = Vec::new();
+                // Receives one message per completed segment: (lo, hi, flat
+                // grads of layers lo..=hi ascending).
+                while let Ok((lo, hi, data)) = grad_rx.recv() {
+                    let t0 = Instant::now();
+                    for (srv, layers) in shard.split_range(lo, hi) {
+                        // Extract this shard's layers from the segment blob.
+                        let mut payload = Vec::new();
+                        for &l in &layers {
+                            let mut off = 0;
+                            for ll in lo..l {
+                                off += layer_lens2[ll];
+                            }
+                            payload.extend_from_slice(&data[off..off + layer_lens2[l]]);
+                        }
+                        pusher_conns[srv].send(&Message::Push {
+                            iter,
+                            lo: lo as u32,
+                            hi: hi as u32,
+                            data: payload,
+                        })?;
+                        match pusher_conns[srv].recv()? {
+                            Message::PushAck { .. } => {}
+                            m => anyhow::bail!("bad push ack: {m:?}"),
+                        }
+                    }
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let bytes: usize = (lo..=hi).map(|l| 4 * layer_lens2[l]).sum();
+                    stats.push((bytes, ms));
+                }
+                Ok(stats)
+            })?;
+
+        let mut gy = glogits;
+        let mut pending: Vec<Option<Vec<f32>>> = vec![None; depth];
+        let mut seg_iter = bwd_segs.iter();
+        let mut cur_seg = seg_iter.next().copied();
+        for l in (0..depth).rev() {
+            let (w, b) = params[l].as_ref().unwrap();
+            let t0 = Instant::now();
+            let gy_shaped = reshape_like_output(&gy, &self.runtime, l);
+            let (gw, gb, gx) = self.runtime.layer_bwd(l, w, b, &acts[l], &gy_shaped)?;
+            self.profiler.record_bwd(l, t0.elapsed().as_secs_f64() * 1e3);
+            let mut flat = gw.data;
+            flat.extend_from_slice(&gb.data);
+            pending[l] = Some(flat);
+            gy = gx;
+            // Segment complete once we've computed down to its low layer.
+            if let Some((hi, lo)) = cur_seg {
+                if l == lo {
+                    let mut blob = Vec::new();
+                    for ll in lo..=hi {
+                        blob.extend_from_slice(pending[ll].as_ref().unwrap());
+                    }
+                    grad_tx
+                        .send((lo, hi, blob))
+                        .map_err(|_| anyhow::anyhow!("pusher died"))?;
+                    cur_seg = seg_iter.next().copied();
+                }
+            }
+        }
+        drop(grad_tx);
+        let stats = pusher
+            .join()
+            .map_err(|_| anyhow::anyhow!("pusher panicked"))?
+            .context("pusher failed")?;
+        for (bytes, ms) in stats {
+            self.profiler.record_push(bytes, ms);
+        }
+        Ok((loss, top1))
+    }
+
+    /// Pull the parameters as of `iter` (blocks until the BSP clock gets
+    /// there) — used for evaluation snapshots.
+    pub fn pull_params(&mut self, iter: u64) -> Result<Vec<(Tensor, Tensor)>> {
+        let depth = self.depth();
+        let mut out = Vec::with_capacity(depth);
+        let mut flats: Vec<Option<Vec<f32>>> = vec![None; depth];
+        for srv in 0..self.shard.servers {
+            self.conns[srv].send(&Message::Pull { iter, lo: 0, hi: depth as u32 - 1 })?;
+            let reply = self.conns[srv].recv()?;
+            let Message::PullReply { data, .. } = reply else {
+                anyhow::bail!("bad pull reply");
+            };
+            let mut off = 0;
+            for l in self.shard.owned_by(srv) {
+                let n = self.layer_len(l);
+                flats[l] = Some(data[off..off + n].to_vec());
+                off += n;
+            }
+        }
+        for (l, f) in flats.into_iter().enumerate() {
+            out.push(self.split_params(l, f.context("missing layer")?)?);
+        }
+        Ok(out)
+    }
+
+    fn split_params(&self, l: usize, flat: Vec<f32>) -> Result<(Tensor, Tensor)> {
+        let a = &self.runtime.manifest.layers[l];
+        let wn = a.w_count();
+        anyhow::ensure!(
+            flat.len() == wn + a.b_count(),
+            "layer {l}: got {} params, want {}",
+            flat.len(),
+            wn + a.b_count()
+        );
+        let w = Tensor::new(a.w_shape.clone(), flat[..wn].to_vec());
+        let b = Tensor::new(a.b_shape.clone(), flat[wn..].to_vec());
+        Ok((w, b))
+    }
+}
+
+/// The gradient flowing back from layer `l+1` arrives with that layer's
+/// input shape; relabel it to layer `l`'s output shape (same element
+/// count — flatten boundaries differ between fc and conv layers).
+fn reshape_like_output(gy: &Tensor, runtime: &RuntimeClient, l: usize) -> Tensor {
+    let a = &runtime.manifest.layers[l];
+    let mut shape = vec![runtime.manifest.batch];
+    shape.extend(&a.out_shape);
+    Tensor::new(shape, gy.data.clone())
+}
+
+/// Fraction of rows whose argmax matches the one-hot label.
+pub fn batch_top1(logits: &Tensor, onehot: &Tensor) -> f64 {
+    let classes = *logits.shape.last().unwrap();
+    let rows = logits.len() / classes;
+    let mut hits = 0;
+    for r in 0..rows {
+        let row = &logits.data[r * classes..(r + 1) * classes];
+        let pred = argmax(row);
+        let label = argmax(&onehot.data[r * classes..(r + 1) * classes]);
+        if pred == label {
+            hits += 1;
+        }
+    }
+    hits as f64 / rows as f64
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in xs.iter().enumerate() {
+        if *v > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_and_top1() {
+        let logits = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 0.5, 0.2, 0.3]);
+        let onehot = Tensor::new(vec![2, 3], vec![0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+        // Row 0 correct (argmax 1), row 1 wrong (argmax 0, label 2).
+        assert!((batch_top1(&logits, &onehot) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_ties_take_first() {
+        assert_eq!(argmax(&[1.0, 1.0, 0.5]), 0);
+    }
+}

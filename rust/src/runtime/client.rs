@@ -1,0 +1,138 @@
+//! The PJRT client: compile HLO-text artifacts once, execute per layer.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format
+//! (xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id serialized protos).
+
+use anyhow::{Context, Result};
+
+use super::manifest::ArtifactManifest;
+use super::tensor::Tensor;
+
+/// A loaded model: one compiled executable per layer direction + loss.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    pub manifest: ArtifactManifest,
+    fwd: Vec<xla::PjRtLoadedExecutable>,
+    bwd: Vec<xla::PjRtLoadedExecutable>,
+    loss: xla::PjRtLoadedExecutable,
+    full_fwd: xla::PjRtLoadedExecutable,
+}
+
+impl RuntimeClient {
+    /// Load and compile every artifact under `dir`.
+    pub fn load(dir: &str) -> Result<RuntimeClient> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |rel: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = manifest.path(rel);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {path:?}"))
+        };
+        let mut fwd = Vec::with_capacity(manifest.depth());
+        let mut bwd = Vec::with_capacity(manifest.depth());
+        for layer in &manifest.layers {
+            fwd.push(compile(&layer.fwd_file)?);
+            bwd.push(compile(&layer.bwd_file)?);
+        }
+        let loss = compile(&manifest.loss_file)?;
+        let full_fwd = compile(&manifest.full_fwd_file)?;
+        Ok(RuntimeClient { client, manifest, fwd, bwd, loss, full_fwd })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Initial parameters from the exported `init/*.bin` files.
+    pub fn initial_params(&self) -> Result<Vec<(Tensor, Tensor)>> {
+        self.manifest
+            .layers
+            .iter()
+            .map(|l| {
+                let w = Tensor::from_bin_file(&self.manifest.path(&l.w_init), l.w_shape.clone())?;
+                let b = Tensor::from_bin_file(&self.manifest.path(&l.b_init), l.b_shape.clone())?;
+                Ok((w, b))
+            })
+            .collect()
+    }
+
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&Tensor],
+    ) -> Result<Vec<xla::Literal>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let out = exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(out.to_tuple()?)
+    }
+
+    /// Layer forward: `(w, b, x) -> y` with `y` of shape `[batch, out..]`.
+    pub fn layer_fwd(&self, idx: usize, w: &Tensor, b: &Tensor, x: &Tensor) -> Result<Tensor> {
+        let layer = &self.manifest.layers[idx];
+        let outs = Self::run(&self.fwd[idx], &[w, b, x])?;
+        anyhow::ensure!(outs.len() == 1, "layer fwd returned {} outputs", outs.len());
+        let mut shape = vec![self.manifest.batch];
+        shape.extend(&layer.out_shape);
+        Tensor::from_literal(&outs[0], shape)
+    }
+
+    /// Layer backward: `(w, b, x, gy) -> (gw, gb, gx)`.
+    pub fn layer_bwd(
+        &self,
+        idx: usize,
+        w: &Tensor,
+        b: &Tensor,
+        x: &Tensor,
+        gy: &Tensor,
+    ) -> Result<(Tensor, Tensor, Tensor)> {
+        let layer = &self.manifest.layers[idx];
+        let outs = Self::run(&self.bwd[idx], &[w, b, x, gy])?;
+        anyhow::ensure!(outs.len() == 3, "layer bwd returned {} outputs", outs.len());
+        let gw = Tensor::from_literal(&outs[0], layer.w_shape.clone())?;
+        let gb = Tensor::from_literal(&outs[1], layer.b_shape.clone())?;
+        let mut xshape = vec![self.manifest.batch];
+        xshape.extend(&layer.in_shape);
+        let gx = Tensor::from_literal(&outs[2], xshape)?;
+        Ok((gw, gb, gx))
+    }
+
+    /// Loss head: `(logits, onehot) -> (loss, glogits)`.
+    pub fn loss(&self, logits: &Tensor, onehot: &Tensor) -> Result<(f32, Tensor)> {
+        let outs = Self::run(&self.loss, &[logits, onehot])?;
+        anyhow::ensure!(outs.len() == 2, "loss returned {} outputs", outs.len());
+        let loss = Tensor::from_literal(&outs[0], vec![])?;
+        let glogits = Tensor::from_literal(
+            &outs[1],
+            vec![self.manifest.batch, self.manifest.num_classes],
+        )?;
+        Ok((loss.data[0], glogits))
+    }
+
+    /// Monolithic forward `(w1, b1, ..., wL, bL, x) -> logits` — used by
+    /// integration tests to check layer-wise composition.
+    pub fn full_fwd(&self, params: &[(Tensor, Tensor)], x: &Tensor) -> Result<Tensor> {
+        let mut inputs: Vec<&Tensor> = Vec::with_capacity(2 * params.len() + 1);
+        for (w, b) in params {
+            inputs.push(w);
+            inputs.push(b);
+        }
+        inputs.push(x);
+        let outs = Self::run(&self.full_fwd, &inputs)?;
+        anyhow::ensure!(outs.len() == 1, "full fwd returned {} outputs", outs.len());
+        Tensor::from_literal(
+            &outs[0],
+            vec![self.manifest.batch, self.manifest.num_classes],
+        )
+    }
+}

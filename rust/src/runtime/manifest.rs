@@ -1,0 +1,192 @@
+//! Artifact manifest parsing (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One exported layer: shapes, artifact files, FLOP accounting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerArtifact {
+    pub name: String,
+    pub kind: String,
+    pub w_shape: Vec<usize>,
+    pub b_shape: Vec<usize>,
+    pub in_shape: Vec<usize>,
+    pub out_shape: Vec<usize>,
+    pub fwd_file: String,
+    pub bwd_file: String,
+    pub w_init: String,
+    pub b_init: String,
+    pub param_count: usize,
+    pub fwd_flops: f64,
+    pub bwd_flops: f64,
+}
+
+impl LayerArtifact {
+    pub fn param_bytes(&self) -> usize {
+        4 * self.param_count
+    }
+
+    pub fn w_count(&self) -> usize {
+        self.w_shape.iter().product()
+    }
+
+    pub fn b_count(&self) -> usize {
+        self.b_shape.iter().product()
+    }
+}
+
+/// The parsed manifest plus its directory.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub batch: usize,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<LayerArtifact>,
+    pub loss_file: String,
+    pub full_fwd_file: String,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactManifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: PathBuf, j: &Json) -> Result<ArtifactManifest> {
+        let str_field = |o: &Json, k: &str| -> Result<String> {
+            Ok(o.get(k)
+                .and_then(Json::as_str)
+                .with_context(|| format!("manifest missing string field '{k}'"))?
+                .to_string())
+        };
+        let usize_field = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest missing numeric field '{k}'"))
+        };
+        let vec_field = |o: &Json, k: &str| -> Result<Vec<usize>> {
+            o.get(k)
+                .and_then(Json::as_usize_vec)
+                .with_context(|| format!("manifest missing array field '{k}'"))
+        };
+
+        let mut layers = Vec::new();
+        for l in j
+            .get("layers")
+            .and_then(Json::as_arr)
+            .context("manifest missing 'layers'")?
+        {
+            layers.push(LayerArtifact {
+                name: str_field(l, "name")?,
+                kind: str_field(l, "kind")?,
+                w_shape: vec_field(l, "w_shape")?,
+                b_shape: vec_field(l, "b_shape")?,
+                in_shape: vec_field(l, "in_shape")?,
+                out_shape: vec_field(l, "out_shape")?,
+                fwd_file: str_field(l, "fwd")?,
+                bwd_file: str_field(l, "bwd")?,
+                w_init: str_field(l, "w_init")?,
+                b_init: str_field(l, "b_init")?,
+                param_count: usize_field(l, "param_count")?,
+                fwd_flops: l.get("fwd_flops").and_then(Json::as_f64).unwrap_or(0.0),
+                bwd_flops: l.get("bwd_flops").and_then(Json::as_f64).unwrap_or(0.0),
+            });
+        }
+        anyhow::ensure!(!layers.is_empty(), "manifest has no layers");
+
+        Ok(ArtifactManifest {
+            dir,
+            model: str_field(j, "model")?,
+            batch: usize_field(j, "batch")?,
+            num_classes: usize_field(j, "num_classes")?,
+            input_shape: vec_field(j, "input_shape")?,
+            layers,
+            loss_file: str_field(j, "loss")?,
+            full_fwd_file: str_field(j, "full_fwd")?,
+        })
+    }
+
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Total parameter count across layers.
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count).sum()
+    }
+
+    /// Path of a manifest-relative file.
+    pub fn path(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "model": "edgecnn", "batch": 2, "seed": 0, "num_classes": 10,
+        "input_shape": [32, 32, 3],
+        "loss": "loss.hlo.txt", "full_fwd": "full_fwd.hlo.txt",
+        "layers": [
+            {"name": "conv1", "kind": "conv",
+             "w_shape": [3,3,3,16], "b_shape": [16],
+             "in_shape": [32,32,3], "out_shape": [32,32,16],
+             "pool": false, "relu": true,
+             "fwd": "conv1_fwd.hlo.txt", "bwd": "conv1_bwd.hlo.txt",
+             "w_init": "init/conv1_w.bin", "b_init": "init/conv1_b.bin",
+             "param_count": 448, "param_bytes": 1792,
+             "fwd_flops": 1769472, "bwd_flops": 3538944}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = ArtifactManifest::from_json(PathBuf::from("/tmp/x"), &j).unwrap();
+        assert_eq!(m.batch, 2);
+        assert_eq!(m.depth(), 1);
+        let l = &m.layers[0];
+        assert_eq!(l.w_shape, vec![3, 3, 3, 16]);
+        assert_eq!(l.param_count, 448);
+        assert_eq!(l.param_bytes(), 1792);
+        assert_eq!(l.w_count(), 432);
+        assert_eq!(l.b_count(), 16);
+        assert_eq!(m.path("loss.hlo.txt"), PathBuf::from("/tmp/x/loss.hlo.txt"));
+    }
+
+    #[test]
+    fn missing_field_is_error() {
+        let j = Json::parse(r#"{"model": "x"}"#).unwrap();
+        assert!(ArtifactManifest::from_json(PathBuf::from("."), &j).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        // Cross-check the Rust cost zoo against the Python export when the
+        // artifacts have been built.
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        if !crate::runtime::artifacts_available(dir) {
+            return;
+        }
+        let m = ArtifactManifest::load(dir).unwrap();
+        assert_eq!(m.model, "edgecnn");
+        let zoo = crate::models::by_name("edgecnn").unwrap();
+        assert_eq!(m.depth(), zoo.depth());
+        for (a, z) in m.layers.iter().zip(&zoo.layers) {
+            assert_eq!(a.param_count, z.params, "{}", a.name);
+            assert_eq!(a.fwd_flops / m.batch as f64, z.fwd_flops, "{}", a.name);
+        }
+    }
+}

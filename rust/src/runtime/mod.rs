@@ -1,0 +1,21 @@
+//! PJRT runtime — loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the Rust hot path.
+//! Python is never on the request path: after `make artifacts`, the
+//! coordinator is self-contained.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::RuntimeClient;
+pub use manifest::{ArtifactManifest, LayerArtifact};
+pub use tensor::Tensor;
+
+/// Default artifact directory relative to the repo root.
+pub const DEFAULT_ARTIFACTS_DIR: &str = "artifacts";
+
+/// True if an artifact manifest exists at `dir` (used by integration tests
+/// and examples to degrade gracefully before `make artifacts`).
+pub fn artifacts_available(dir: &str) -> bool {
+    std::path::Path::new(dir).join("manifest.json").exists()
+}

@@ -1,0 +1,118 @@
+//! Host-side f32 tensors and conversions to/from XLA literals.
+
+use anyhow::Result;
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn scalar(&self) -> f32 {
+        assert_eq!(self.data.len(), 1, "scalar() on non-scalar tensor");
+        self.data[0]
+    }
+
+    /// Convert to an XLA literal with this tensor's shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal, shape: Vec<usize>) -> Result<Tensor> {
+        let data = lit.to_vec::<f32>()?;
+        anyhow::ensure!(
+            data.len() == shape.iter().product::<usize>(),
+            "literal has {} elements, shape {:?} wants {}",
+            data.len(),
+            shape,
+            shape.iter().product::<usize>()
+        );
+        Ok(Tensor { shape, data })
+    }
+
+    /// Flat little-endian f32 file (the `init/*.bin` format aot.py writes).
+    pub fn from_bin_file(path: &std::path::Path, shape: Vec<usize>) -> Result<Tensor> {
+        let bytes = std::fs::read(path)?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "truncated f32 file {path:?}");
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        anyhow::ensure!(
+            data.len() == shape.iter().product::<usize>(),
+            "{path:?} has {} f32s, shape {:?} wants {}",
+            data.len(),
+            shape,
+            shape.iter().product::<usize>()
+        );
+        Ok(Tensor { shape, data })
+    }
+
+    /// In-place SGD step: `self -= lr * grad`.
+    pub fn sgd_step(&mut self, grad: &Tensor, lr: f32) {
+        assert_eq!(self.shape, grad.shape);
+        for (w, g) in self.data.iter_mut().zip(&grad.data) {
+            *w -= lr * g;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checked() {
+        let t = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn sgd_step_moves_against_gradient() {
+        let mut w = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let g = Tensor::new(vec![3], vec![1.0, -1.0, 0.0]);
+        w.sgd_step(&g, 0.5);
+        assert_eq!(w.data, vec![0.5, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn bin_file_roundtrip() {
+        let dir = std::env::temp_dir().join("dynacomm_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.bin");
+        let vals = [1.5f32, -2.25, 3.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, bytes).unwrap();
+        let t = Tensor::from_bin_file(&path, vec![3]).unwrap();
+        assert_eq!(t.data, vals);
+        assert!(Tensor::from_bin_file(&path, vec![4]).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Exact exhaustive search over all `2^(L-1)` decomposition decisions —
+//! the `O(L·2^L)` brute force the paper dismisses as impractical
+//! (Section III-B). It is exactly what makes it valuable here: an
+//! optimality oracle the DP algorithms are property-tested against.
+
+use super::cost::{eval_backward, eval_forward};
+use super::{CostVectors, Decomposition};
+
+/// Practical depth cap: 2^24 evaluations is already seconds of work.
+pub const MAX_DEPTH: usize = 24;
+
+/// Exhaustive optimum for the forward pass: `(best decomposition, time)`.
+pub fn forward(cv: &CostVectors) -> (Decomposition, f64) {
+    search(cv, |cv, d| eval_forward(cv, d).total)
+}
+
+/// Exhaustive optimum for the backward pass.
+pub fn backward(cv: &CostVectors) -> (Decomposition, f64) {
+    search(cv, |cv, d| eval_backward(cv, d).total)
+}
+
+fn search(
+    cv: &CostVectors,
+    eval: impl Fn(&CostVectors, &Decomposition) -> f64,
+) -> (Decomposition, f64) {
+    let l = cv.depth();
+    assert!(
+        l <= MAX_DEPTH,
+        "brute force over {l} layers would need 2^{} evaluations",
+        l - 1
+    );
+    let mut best = Decomposition::sequential(l);
+    let mut best_t = eval(cv, &best);
+    let mut d = Decomposition::sequential(l);
+    for mask in 1u64..(1u64 << (l - 1)) {
+        for (i, c) in d.cuts.iter_mut().enumerate() {
+            *c = mask >> i & 1 == 1;
+        }
+        let t = eval(cv, &d);
+        if t < best_t {
+            best_t = t;
+            best = d.clone();
+        }
+    }
+    (best, best_t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::random_cv;
+    use crate::sched::{dynacomm, ibatch};
+    use crate::util::rng::Rng;
+
+    /// The paper's central claim, tested as a property: the DP schedule is
+    /// *optimal* — it matches exhaustive search on every random instance.
+    #[test]
+    fn dynacomm_forward_is_optimal() {
+        let mut rng = Rng::new(31);
+        for _ in 0..400 {
+            let depth = rng.range(1, 13);
+            let cv = random_cv(&mut rng, depth);
+            let (_, best) = forward(&cv);
+            let dp = super::super::cost::eval_forward(&cv, &dynacomm::forward(&cv)).total;
+            assert!(
+                (dp - best).abs() < 1e-7,
+                "depth={depth} dp={dp} brute={best} cv={cv:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dynacomm_backward_is_optimal() {
+        let mut rng = Rng::new(32);
+        for _ in 0..400 {
+            let depth = rng.range(1, 13);
+            let cv = random_cv(&mut rng, depth);
+            let (_, best) = backward(&cv);
+            let dp = super::super::cost::eval_backward(&cv, &dynacomm::backward(&cv)).total;
+            assert!(
+                (dp - best).abs() < 1e-7,
+                "depth={depth} dp={dp} brute={best} cv={cv:?}"
+            );
+        }
+    }
+
+    /// iBatch is greedy: it must never beat the exhaustive optimum, and on
+    /// some instances it must be strictly worse (otherwise the paper's
+    /// motivation evaporates).
+    #[test]
+    fn ibatch_is_suboptimal_somewhere() {
+        let mut rng = Rng::new(33);
+        let mut strictly_worse_fwd = 0;
+        let mut strictly_worse_bwd = 0;
+        for _ in 0..200 {
+            let depth = rng.range(4, 13);
+            let cv = random_cv(&mut rng, depth);
+            let (_, best_f) = forward(&cv);
+            let ib_f =
+                super::super::cost::eval_forward(&cv, &ibatch::forward(&cv)).total;
+            assert!(ib_f >= best_f - 1e-7, "greedy beat the optimum?!");
+            if ib_f > best_f + 1e-6 {
+                strictly_worse_fwd += 1;
+            }
+            let (_, best_b) = backward(&cv);
+            let ib_b =
+                super::super::cost::eval_backward(&cv, &ibatch::backward(&cv)).total;
+            assert!(ib_b >= best_b - 1e-7);
+            if ib_b > best_b + 1e-6 {
+                strictly_worse_bwd += 1;
+            }
+        }
+        assert!(strictly_worse_fwd > 0, "iBatch fwd was optimal everywhere");
+        assert!(strictly_worse_bwd > 0, "iBatch bwd was optimal everywhere");
+    }
+
+    #[test]
+    #[should_panic]
+    fn depth_cap_enforced() {
+        let mut rng = Rng::new(34);
+        let cv = random_cv(&mut rng, MAX_DEPTH + 1);
+        let _ = forward(&cv);
+    }
+}

@@ -1,0 +1,285 @@
+//! `f_m` — the timeline cost evaluator (Eq. 8) and its overlap breakdown.
+//!
+//! Given the cost vectors and a decomposition decision, this reconstructs
+//! the exact mini-procedure timeline honoring the partial-order constraints
+//! (1)–(7) and returns the iteration-time split the paper plots in
+//! Figs. 5–8: non-overlapping computation / overlapping time /
+//! non-overlapping communication. Evaluation is O(L).
+//!
+//! Timeline semantics (matching Eqs. 13/14):
+//!
+//! * **Forward**: the servers stream every parameter segment back-to-back,
+//!   so segment `j`'s arrival time is `j·Δt + Σ pt` through its last layer.
+//!   Segment `j`'s computation starts at `max(prev compute end, arrival)`.
+//! * **Backward**: computation runs without stalling (it does not depend on
+//!   transmissions); segment `j`'s transmission starts at
+//!   `max(prev transmission end, compute end of its shallowest layer)` and
+//!   then costs `Δt + Σ gt`.
+
+use super::{prefix, CostVectors, Decomposition};
+
+/// One pass (forward or backward) split the way Figs. 5–8 plot it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PassBreakdown {
+    /// Wall-clock of the pass, ms.
+    pub total: f64,
+    /// Time where only computation is running.
+    pub comp_only: f64,
+    /// Time where communication and computation overlap.
+    pub overlap: f64,
+    /// Time where only communication is running.
+    pub comm_only: f64,
+}
+
+impl PassBreakdown {
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-6 * (1.0 + a.abs() + b.abs())
+    }
+
+    /// The three portions must tile the pass (up to idle gaps, which cannot
+    /// occur under these timeline semantics — asserted in tests).
+    pub fn parts_sum(&self) -> f64 {
+        self.comp_only + self.overlap + self.comm_only
+    }
+
+    pub fn is_consistent(&self) -> bool {
+        Self::close(self.total, self.parts_sum())
+    }
+}
+
+/// Forward pass under decomposition `d`.
+pub fn eval_forward(cv: &CostVectors, d: &Decomposition) -> PassBreakdown {
+    assert_eq!(d.depth(), cv.depth());
+    let ppt = prefix(&cv.pt);
+    let pfc = prefix(&cv.fc);
+    let segs = d.fwd_segments();
+
+    // Communication: the link is busy continuously on [0, comm_end].
+    let comm_end = segs.len() as f64 * cv.delta_t + ppt[cv.depth()];
+
+    // Computation: per-segment [start, end) intervals.
+    let mut comp_busy = 0.0; // total compute time
+    let mut overlap = 0.0; // compute time inside [0, comm_end]
+    let mut t: f64 = 0.0; // compute end of the previous segment
+    for (j, (a, b)) in segs.iter().enumerate() {
+        let arrival = (j + 1) as f64 * cv.delta_t + ppt[*b];
+        let start = t.max(arrival);
+        let dur = pfc[*b] - pfc[*a - 1];
+        let end = start + dur;
+        comp_busy += dur;
+        // Intersection of [start, end] with the comm-busy window [0, comm_end].
+        overlap += (end.min(comm_end) - start.min(comm_end)).max(0.0);
+        t = end;
+    }
+    let total = t.max(comm_end);
+    PassBreakdown {
+        total,
+        comp_only: comp_busy - overlap,
+        overlap,
+        comm_only: comm_end - overlap,
+    }
+}
+
+/// Backward pass under decomposition `d`.
+pub fn eval_backward(cv: &CostVectors, d: &Decomposition) -> PassBreakdown {
+    assert_eq!(d.depth(), cv.depth());
+    let depth = cv.depth();
+    // sbc_from[l] = compute end time when layer l's backward is done
+    // (backward runs L, L-1, ..., 1 without stalls).
+    let mut sbc_from = vec![0.0; depth + 2];
+    let mut acc = 0.0;
+    for l in (1..=depth).rev() {
+        acc += cv.bc[l - 1];
+        sbc_from[l] = acc;
+    }
+    let comp_end = acc;
+
+    let pgt = prefix(&cv.gt);
+    let segs = d.bwd_segments();
+    let mut t: f64 = 0.0; // transmission end of the previous segment
+    let mut comm_busy = 0.0;
+    let mut overlap = 0.0;
+    for (hi, lo) in segs {
+        let ready = sbc_from[lo]; // compute of layers hi..lo all done
+        let start = t.max(ready);
+        let dur = cv.delta_t + (pgt[hi] - pgt[lo - 1]);
+        let end = start + dur;
+        comm_busy += dur;
+        overlap += (end.min(comp_end) - start.min(comp_end)).max(0.0);
+        t = end;
+    }
+    let total = t.max(comp_end);
+    PassBreakdown {
+        total,
+        comp_only: comp_end - overlap,
+        overlap,
+        comm_only: comm_busy - overlap,
+    }
+}
+
+/// Whole-iteration breakdown: forward then backward (constraint (3) chains
+/// them; parameter pulls of iteration i+1 are not overlapped with iteration
+/// i, matching the paper's per-iteration accounting).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IterationBreakdown {
+    pub fwd: PassBreakdown,
+    pub bwd: PassBreakdown,
+}
+
+impl IterationBreakdown {
+    pub fn total(&self) -> f64 {
+        self.fwd.total + self.bwd.total
+    }
+}
+
+pub fn eval_iteration(
+    cv: &CostVectors,
+    fwd: &Decomposition,
+    bwd: &Decomposition,
+) -> IterationBreakdown {
+    IterationBreakdown {
+        fwd: eval_forward(cv, fwd),
+        bwd: eval_backward(cv, bwd),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::random_cv;
+    use crate::util::rng::Rng;
+
+    fn cv4() -> CostVectors {
+        CostVectors {
+            pt: vec![1.0, 2.0, 3.0, 4.0],
+            fc: vec![4.0, 3.0, 2.0, 1.0],
+            bc: vec![8.0, 6.0, 4.0, 2.0],
+            gt: vec![1.0, 2.0, 3.0, 4.0],
+            delta_t: 0.5,
+        }
+    }
+
+    #[test]
+    fn forward_sequential_is_sum() {
+        let cv = cv4();
+        let b = eval_forward(&cv, &Decomposition::sequential(4));
+        // One transmission (Δt + Σpt) then all compute.
+        assert!((b.total - (0.5 + 10.0 + 10.0)).abs() < 1e-9);
+        assert_eq!(b.overlap, 0.0);
+        assert!((b.comm_only - 10.5).abs() < 1e-9);
+        assert!((b.comp_only - 10.0).abs() < 1e-9);
+        assert!(b.is_consistent());
+    }
+
+    #[test]
+    fn backward_sequential_is_sum() {
+        let cv = cv4();
+        let b = eval_backward(&cv, &Decomposition::sequential(4));
+        // All compute (20) then one transmission (0.5 + 10).
+        assert!((b.total - 30.5).abs() < 1e-9);
+        assert_eq!(b.overlap, 0.0);
+        assert!(b.is_consistent());
+    }
+
+    #[test]
+    fn forward_lbl_overlaps() {
+        let cv = cv4();
+        let seq = eval_forward(&cv, &Decomposition::sequential(4));
+        let lbl = eval_forward(&cv, &Decomposition::layer_by_layer(4));
+        assert!(lbl.total < seq.total);
+        assert!(lbl.overlap > 0.0);
+        assert!(lbl.is_consistent());
+    }
+
+    #[test]
+    fn forward_lbl_exact_small() {
+        // L=2, Δt=1, pt=[2,2], fc=[3,1].
+        let cv = CostVectors {
+            pt: vec![2.0, 2.0],
+            fc: vec![3.0, 1.0],
+            bc: vec![1.0, 1.0],
+            gt: vec![1.0, 1.0],
+            delta_t: 1.0,
+        };
+        let b = eval_forward(&cv, &Decomposition::layer_by_layer(2));
+        // arrivals: seg1 at 1+2=3, seg2 at 2+4=6.
+        // fc1: 3..6; fc2: max(6,6)..7. comm busy [0,6].
+        assert!((b.total - 7.0).abs() < 1e-9);
+        assert!((b.overlap - 3.0).abs() < 1e-9);
+        assert!((b.comm_only - 3.0).abs() < 1e-9);
+        assert!((b.comp_only - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn backward_lbl_exact_small() {
+        // L=2, Δt=1, bc=[1,4] (layer2 computes first), gt=[2,3].
+        let cv = CostVectors {
+            pt: vec![1.0, 1.0],
+            fc: vec![1.0, 1.0],
+            bc: vec![1.0, 4.0],
+            gt: vec![2.0, 3.0],
+            delta_t: 1.0,
+        };
+        let b = eval_backward(&cv, &Decomposition::layer_by_layer(2));
+        // compute: layer2 done @4, layer1 done @5 (comp_end=5).
+        // seg (2,2): start max(0,4)=4, dur 1+3=4, end 8.
+        // seg (1,1): ready @5, start max(8,5)=8, dur 1+2=3, end 11.
+        assert!((b.total - 11.0).abs() < 1e-9);
+        // overlap: [4,5] of seg1 = 1.0.
+        assert!((b.overlap - 1.0).abs() < 1e-9);
+        assert!((b.comp_only - 4.0).abs() < 1e-9);
+        assert!((b.comm_only - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn breakdown_always_consistent_random() {
+        let mut rng = Rng::new(11);
+        for _ in 0..200 {
+            let depth = rng.range(1, 20);
+            let cv = random_cv(&mut rng, depth);
+            // random decomposition
+            let mut d = Decomposition::sequential(depth);
+            for c in d.cuts.iter_mut() {
+                *c = rng.bool();
+            }
+            let f = eval_forward(&cv, &d);
+            let b = eval_backward(&cv, &d);
+            assert!(f.is_consistent(), "{f:?}");
+            assert!(b.is_consistent(), "{b:?}");
+            assert!(f.total >= f.overlap && b.total >= b.overlap);
+        }
+    }
+
+    #[test]
+    fn lower_bounds_hold_random() {
+        // No schedule can beat max(total comm, total comp) in either pass.
+        let mut rng = Rng::new(13);
+        for _ in 0..100 {
+            let depth = rng.range(2, 16);
+            let cv = random_cv(&mut rng, depth);
+            let comp: f64 = cv.fc.iter().sum();
+            let comm: f64 = cv.pt.iter().sum::<f64>() + cv.delta_t;
+            let mut d = Decomposition::sequential(depth);
+            for c in d.cuts.iter_mut() {
+                *c = rng.bool();
+            }
+            let f = eval_forward(&cv, &d);
+            assert!(f.total >= comp.max(comm) - 1e-9);
+            let bcomp: f64 = cv.bc.iter().sum();
+            let bcomm: f64 = cv.gt.iter().sum::<f64>() + cv.delta_t;
+            let b = eval_backward(&cv, &d);
+            assert!(b.total >= bcomp.max(bcomm) - 1e-9);
+        }
+    }
+
+    #[test]
+    fn more_cuts_cost_more_delta_t_in_comm() {
+        let cv = cv4();
+        let seq = eval_forward(&cv, &Decomposition::sequential(4));
+        let lbl = eval_forward(&cv, &Decomposition::layer_by_layer(4));
+        // Total comm busy time grows by (#segments-1)·Δt.
+        let seq_comm = seq.comm_only + seq.overlap;
+        let lbl_comm = lbl.comm_only + lbl.overlap;
+        assert!((lbl_comm - seq_comm - 3.0 * cv.delta_t).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,275 @@
+//! iBatch / iPart — the greedy competitor (Wang et al., AAAI'19 / TPDS'21),
+//! as specified by the DynaComm paper's Algorithm 1 (forward) and
+//! Algorithm 2 (backward).
+//!
+//! Transcription notes (the pseudocode in the DynaComm paper has two
+//! apparent typos, resolved here the way the surrounding prose demands):
+//!
+//! * Algorithm 1 never advances `n` inside the repeat loop even though the
+//!   coverage test is "next segment's transmission ≥ *current* segment's
+//!   computation"; we advance `n ← m` on every step.
+//! * Algorithm 1 line 4 breaks ties by "minimum Δt + Σ pt over the *first*
+//!   segment", which is constant across the tied pairs; we minimize the
+//!   second segment's transmission instead (the smallest covering batch),
+//!   matching the greedy intuition in the prose.
+//!
+//! The companion right-to-left scan ("the other algorithm does the
+//! opposite", presented only in [16]) is reconstructed as the mirror
+//! greedy: walk from the last layer leftwards, maximizing the computation
+//! a segment hides under its successor's transmission. iBatch keeps the
+//! better of the two candidates by estimated execution time.
+
+use super::cost::{eval_backward, eval_forward};
+use super::{prefix, CostVectors, Decomposition};
+
+/// Greedy forward (parameter-transmission) scheduling: best of the
+/// left-to-right scan (Algorithm 1) and the reconstructed right-to-left
+/// scan.
+pub fn forward(cv: &CostVectors) -> Decomposition {
+    let l = cv.depth();
+    if l < 2 {
+        return Decomposition::sequential(l);
+    }
+    let a = forward_scan(cv);
+    let b = reverse_scan(cv);
+    if eval_forward(cv, &a).total <= eval_forward(cv, &b).total {
+        a
+    } else {
+        b
+    }
+}
+
+/// Algorithm 1: left-to-right greedy batching.
+fn forward_scan(cv: &CostVectors) -> Decomposition {
+    let l = cv.depth();
+    let ppt = prefix(&cv.pt);
+    let pfc = prefix(&cv.fc);
+    let dt = cv.delta_t;
+
+    // Lines 1–4: choose the first two decomposition positions [d1, d2]:
+    // pairs where segment 2's transmission covers segment 1's computation,
+    // maximizing segment 1's computation, then the smallest covering d2.
+    let mut best: Option<(usize, usize)> = None;
+    for d1 in 1..l {
+        for d2 in d1 + 1..=l {
+            let covers = dt + (ppt[d2] - ppt[d1]) >= pfc[d1];
+            if !covers {
+                continue;
+            }
+            best = match best {
+                None => Some((d1, d2)),
+                Some((b1, b2)) => {
+                    // max Σ fc(1..d1)  ⇔  max d1 (prefix sums are monotone);
+                    // tie-break: min covering transmission ⇔ min d2.
+                    if pfc[d1] > pfc[b1] || (pfc[d1] == pfc[b1] && d2 < b2) {
+                        Some((d1, d2))
+                    } else {
+                        Some((b1, b2))
+                    }
+                }
+            };
+        }
+    }
+    let (d1, d2) = match best {
+        Some(p) => p,
+        // No pair can cover the first segment's compute: batching cannot
+        // help the greedy; fall back to the sequential decision.
+        None => return Decomposition::sequential(l),
+    };
+
+    let mut positions = vec![d1, d2];
+    let (mut n, mut m) = (d1, d2);
+    // Lines 6–17: extend segment by segment.
+    while m != l {
+        let need = pfc[m] - pfc[n]; // computation of the current segment
+        let mut chosen = l; // fallback: flush the rest in one batch
+        let mut best_slack = f64::INFINITY;
+        for x in m + 1..=l {
+            let comm = dt + (ppt[x] - ppt[m]);
+            if comm >= need {
+                let slack = comm - need;
+                if slack < best_slack {
+                    best_slack = slack;
+                    chosen = x;
+                }
+            }
+        }
+        positions.push(chosen);
+        n = m;
+        m = chosen;
+    }
+    Decomposition::from_positions(l, &positions)
+}
+
+/// Reconstructed mirror scan: build segments right-to-left, each segment
+/// hiding as much computation as fits under its successor's transmission.
+fn reverse_scan(cv: &CostVectors) -> Decomposition {
+    let l = cv.depth();
+    let ppt = prefix(&cv.pt);
+    let pfc = prefix(&cv.fc);
+    let dt = cv.delta_t;
+
+    let mut positions = Vec::new();
+    let mut hi = l; // current segment is (m+1 ..= hi) for the m we pick
+    while hi > 0 {
+        // Comm budget of the segment ending at hi, for every candidate m:
+        // the segment (m+1..hi) transmits Δt + Σpt(m+1..hi); the *previous*
+        // segment's compute (.. ..= m) should hide under it. Greedy: choose
+        // the smallest m (largest hidden compute) still covered.
+        let mut chosen = hi.saturating_sub(1); // fallback: single step left
+        for m in (0..hi).rev() {
+            let comm = dt + (ppt[hi] - ppt[m]);
+            // compute hidden: the whole previous segment is unknown yet;
+            // approximate greedily with the compute of layers (m..=?) —
+            // use the immediately preceding layer run up to the last cut.
+            let prev_compute = pfc[m]; // everything before this boundary
+            if comm >= prev_compute {
+                chosen = m;
+            } else {
+                break; // prefix sums are monotone; no smaller m can work
+            }
+        }
+        if chosen == 0 {
+            break;
+        }
+        positions.push(chosen);
+        hi = chosen;
+    }
+    Decomposition::from_positions(l, &positions)
+}
+
+/// Algorithm 2: greedy backward (gradient-transmission) scheduling.
+pub fn backward(cv: &CostVectors) -> Decomposition {
+    let l = cv.depth();
+    if l < 2 {
+        return Decomposition::sequential(l);
+    }
+    let dt = cv.delta_t;
+    // Σ gt over layers (x ..= L): suffix in physical layer index.
+    let mut sgt = vec![0.0; l + 2];
+    let mut sbc = vec![0.0; l + 2];
+    for x in (1..=l).rev() {
+        sgt[x] = sgt[x + 1] + cv.gt[x - 1];
+        sbc[x] = sbc[x + 1] + cv.bc[x - 1];
+    }
+
+    let mut best: Option<(Decomposition, f64)> = None;
+    // Line 2: enumerate the first optional boundary n — the first segment
+    // transmits layers L ..= n.
+    for n in 2..=l {
+        let mut boundaries = vec![n];
+        let mut k = 1usize; // transmissions launched so far
+        let mut m = n;
+        while m != 1 {
+            // Options: next boundary x, segment covering (m-1 ..= x);
+            // condition: cumulative comm so far ≥ compute of (m-1 ..= x).
+            let comm = k as f64 * dt + (sgt[m] - sgt[l + 1]);
+            let mut chosen = 1usize; // fallback: flush the rest
+            let mut best_slack = f64::INFINITY;
+            for x in 1..m {
+                let need = sbc[x] - sbc[m]; // Σ bc over (m-1 ..= x)
+                if comm >= need {
+                    let slack = comm - need;
+                    if slack < best_slack {
+                        best_slack = slack;
+                        chosen = x;
+                    }
+                }
+            }
+            boundaries.push(chosen);
+            m = chosen;
+            k += 1;
+        }
+        // Boundaries are "segment starts at layer b": segment (prev-1 ..= b)
+        // means a physical cut between layers b-1 and b — i.e. positions
+        // b-1 in the paper's forward notation — except the terminal 1.
+        let cuts: Vec<usize> = boundaries
+            .iter()
+            .filter(|&&b| b >= 2)
+            .map(|&b| b - 1)
+            .collect();
+        let d = Decomposition::from_positions(l, &cuts);
+        let t = eval_backward(cv, &d).total;
+        match &best {
+            Some((_, bt)) if *bt <= t => {}
+            _ => best = Some((d, t)),
+        }
+    }
+    best.unwrap().0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::random_cv;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forward_valid_decomposition() {
+        let mut rng = Rng::new(41);
+        for _ in 0..200 {
+            let depth = rng.range(1, 30);
+            let cv = random_cv(&mut rng, depth);
+            let d = forward(&cv);
+            assert_eq!(d.depth(), depth);
+            let segs = d.fwd_segments();
+            assert_eq!(segs.first().unwrap().0, 1);
+            assert_eq!(segs.last().unwrap().1, depth);
+        }
+    }
+
+    #[test]
+    fn backward_valid_decomposition() {
+        let mut rng = Rng::new(42);
+        for _ in 0..200 {
+            let depth = rng.range(1, 30);
+            let cv = random_cv(&mut rng, depth);
+            let d = backward(&cv);
+            assert_eq!(d.depth(), depth);
+            let segs = d.bwd_segments();
+            assert_eq!(segs.first().unwrap().0, depth);
+            assert_eq!(segs.last().unwrap().1, 1);
+        }
+    }
+
+    #[test]
+    fn batches_when_delta_t_dominates() {
+        // Huge Δt: greedy must not produce many tiny segments.
+        let cv = CostVectors {
+            pt: vec![0.01; 10],
+            fc: vec![0.01; 10],
+            bc: vec![0.01; 10],
+            gt: vec![0.01; 10],
+            delta_t: 100.0,
+        };
+        assert!(forward(&cv).num_transmissions() <= 2);
+    }
+
+    #[test]
+    fn overlaps_when_costs_are_balanced() {
+        // Zero Δt, balanced costs: greedy should decompose (beat sequential).
+        let cv = CostVectors {
+            pt: vec![1.0; 8],
+            fc: vec![1.0; 8],
+            bc: vec![2.0; 8],
+            gt: vec![1.0; 8],
+            delta_t: 0.0,
+        };
+        let d = forward(&cv);
+        let t = eval_forward(&cv, &d).total;
+        let seq = eval_forward(&cv, &Decomposition::sequential(8)).total;
+        assert!(t < seq, "greedy {t} should beat sequential {seq}");
+        let db = backward(&cv);
+        let tb = eval_backward(&cv, &db).total;
+        let seqb = eval_backward(&cv, &Decomposition::sequential(8)).total;
+        assert!(tb < seqb);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut rng = Rng::new(43);
+        let cv = random_cv(&mut rng, 15);
+        assert_eq!(forward(&cv), forward(&cv));
+        assert_eq!(backward(&cv), backward(&cv));
+    }
+}

@@ -1,0 +1,294 @@
+//! Layer-wise communication scheduling — the paper's contribution.
+//!
+//! Terminology (Section III): an iteration is `[pt, fc, bc, gt]`; each
+//! procedure splits into per-layer mini-procedures. A *decomposition
+//! decision* picks which of the `L-1` optional positions between adjacent
+//! layers start a new transmission mini-procedure. Each enabled
+//! mini-procedure pays the setup overhead `Δt`.
+//!
+//! * [`cost`] — the `f_m` timeline evaluator (Eq. 8) with the
+//!   non-overlapping-compute / overlap / non-overlapping-comm breakdown
+//!   used by Figs. 5–8.
+//! * [`ibatch`] — the greedy competitor (Algorithms 1 and 2).
+//! * [`dynacomm`] — the paper's DP algorithms (Algorithms 3 and 4,
+//!   Eqs. 13/14), O(L^3) time / O(L^2) space.
+//! * [`bruteforce`] — exact `O(L·2^L)` enumeration, used as the optimality
+//!   oracle in tests and benches.
+
+pub mod bruteforce;
+pub mod cost;
+pub mod dynacomm;
+pub mod ibatch;
+pub mod slicing;
+
+use crate::config::Strategy;
+
+pub use cost::{eval_backward, eval_forward, eval_iteration, IterationBreakdown, PassBreakdown};
+
+/// Per-layer cost vectors for one iteration (Section III-B), in ms.
+///
+/// `delta_t` is the per-mini-procedure setup overhead Δt (assumed constant;
+/// Section IV-A derives it by profiling + averaging).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CostVectors {
+    /// Parameter-transmission cost of layer `l` (index `l-1`).
+    pub pt: Vec<f64>,
+    /// Forward-computation cost of layer `l`.
+    pub fc: Vec<f64>,
+    /// Backward-computation cost of layer `l`.
+    pub bc: Vec<f64>,
+    /// Gradient-transmission cost of layer `l`.
+    pub gt: Vec<f64>,
+    /// Δt: per-transmission setup/coordination overhead.
+    pub delta_t: f64,
+}
+
+impl CostVectors {
+    pub fn depth(&self) -> usize {
+        debug_assert_eq!(self.pt.len(), self.fc.len());
+        debug_assert_eq!(self.pt.len(), self.bc.len());
+        debug_assert_eq!(self.pt.len(), self.gt.len());
+        self.pt.len()
+    }
+
+    /// Sanity: all finite, non-negative, consistent lengths.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let l = self.pt.len();
+        anyhow::ensure!(l > 0, "empty cost vectors");
+        anyhow::ensure!(
+            self.fc.len() == l && self.bc.len() == l && self.gt.len() == l,
+            "inconsistent cost vector lengths"
+        );
+        let ok = |v: &[f64]| v.iter().all(|x| x.is_finite() && *x >= 0.0);
+        anyhow::ensure!(
+            ok(&self.pt) && ok(&self.fc) && ok(&self.bc) && ok(&self.gt),
+            "negative or non-finite cost"
+        );
+        anyhow::ensure!(
+            self.delta_t.is_finite() && self.delta_t >= 0.0,
+            "bad delta_t"
+        );
+        Ok(())
+    }
+}
+
+/// A decomposition decision: which of the `L-1` positions between adjacent
+/// layers are enabled. `cuts[i]` is the position between layer `i+1` and
+/// layer `i+2` (1-based layers). The same physical cuts describe a forward
+/// plan (segments ascending from layer 1) or a backward plan (segments
+/// descending from layer L); the paper's `p`/`g` vectors are the forward
+/// and reversed encodings of this.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Decomposition {
+    pub cuts: Vec<bool>,
+}
+
+impl Decomposition {
+    /// No cuts: one transmission for the whole procedure (Sequential).
+    pub fn sequential(depth: usize) -> Decomposition {
+        assert!(depth > 0);
+        Decomposition { cuts: vec![false; depth - 1] }
+    }
+
+    /// Every cut enabled: one transmission per layer (LBL / Poseidon).
+    pub fn layer_by_layer(depth: usize) -> Decomposition {
+        assert!(depth > 0);
+        Decomposition { cuts: vec![true; depth - 1] }
+    }
+
+    /// Build from the paper's forward notation: a position list
+    /// `[0, b1, b2, ..., L]` of enabled decomposition positions.
+    pub fn from_positions(depth: usize, positions: &[usize]) -> Decomposition {
+        let mut d = Decomposition::sequential(depth);
+        for &p in positions {
+            if p >= 1 && p <= depth - 1 {
+                d.cuts[p - 1] = true;
+            }
+        }
+        d
+    }
+
+    pub fn depth(&self) -> usize {
+        self.cuts.len() + 1
+    }
+
+    /// Number of transmission mini-procedures this decomposition induces.
+    pub fn num_transmissions(&self) -> usize {
+        1 + self.cuts.iter().filter(|&&c| c).count()
+    }
+
+    /// Forward segments, ascending: 1-based inclusive `(first, last)` layer
+    /// ranges, each one transmission mini-procedure.
+    pub fn fwd_segments(&self) -> Vec<(usize, usize)> {
+        let depth = self.depth();
+        let mut segs = Vec::with_capacity(self.num_transmissions());
+        let mut start = 1;
+        for l in 1..depth {
+            if self.cuts[l - 1] {
+                segs.push((start, l));
+                start = l + 1;
+            }
+        }
+        segs.push((start, depth));
+        segs
+    }
+
+    /// Backward segments, descending: 1-based inclusive `(hi, lo)` layer
+    /// ranges in transmission order (deepest layers flush first).
+    pub fn bwd_segments(&self) -> Vec<(usize, usize)> {
+        let depth = self.depth();
+        let mut segs = Vec::with_capacity(self.num_transmissions());
+        let mut hi = depth;
+        for l in (1..depth).rev() {
+            // cut between layer l and l+1
+            if self.cuts[l - 1] {
+                segs.push((hi, l + 1));
+                hi = l;
+            }
+        }
+        segs.push((hi, 1));
+        segs
+    }
+}
+
+/// Forward + backward decomposition decisions for one iteration.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SchedulePlan {
+    pub fwd: Decomposition,
+    pub bwd: Decomposition,
+}
+
+/// Produce the plan a strategy would choose for the given costs.
+pub fn plan_for(strategy: Strategy, cv: &CostVectors) -> SchedulePlan {
+    let depth = cv.depth();
+    match strategy {
+        Strategy::Sequential => SchedulePlan {
+            fwd: Decomposition::sequential(depth),
+            bwd: Decomposition::sequential(depth),
+        },
+        Strategy::LayerByLayer => SchedulePlan {
+            fwd: Decomposition::layer_by_layer(depth),
+            bwd: Decomposition::layer_by_layer(depth),
+        },
+        Strategy::IBatch => SchedulePlan {
+            fwd: ibatch::forward(cv),
+            bwd: ibatch::backward(cv),
+        },
+        Strategy::DynaComm => SchedulePlan {
+            fwd: dynacomm::forward(cv),
+            bwd: dynacomm::backward(cv),
+        },
+    }
+}
+
+/// Inclusive prefix sums with a leading 0: `out[m] = Σ_{l=1..m} v[l]`.
+pub fn prefix(v: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(v.len() + 1);
+    out.push(0.0);
+    let mut acc = 0.0;
+    for x in v {
+        acc += x;
+        out.push(acc);
+    }
+    out
+}
+
+/// Suffix sums: `out[m] = Σ over the last m layers = Σ_{l=L-m+1..L} v[l]`.
+pub fn suffix(v: &[f64]) -> Vec<f64> {
+    let mut out = Vec::with_capacity(v.len() + 1);
+    out.push(0.0);
+    let mut acc = 0.0;
+    for x in v.iter().rev() {
+        acc += x;
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::CostVectors;
+    use crate::util::rng::Rng;
+
+    /// Random cost vectors with heavy-tailed layer costs — the regime the
+    /// paper describes (conv layers: big compute / small tensors; fc
+    /// layers: the reverse).
+    pub fn random_cv(rng: &mut Rng, depth: usize) -> CostVectors {
+        let mut pt = Vec::with_capacity(depth);
+        let mut fc = Vec::with_capacity(depth);
+        let mut bc = Vec::with_capacity(depth);
+        let mut gt = Vec::with_capacity(depth);
+        for _ in 0..depth {
+            pt.push(rng.lognormal(0.0, 1.2));
+            fc.push(rng.lognormal(0.0, 1.2));
+            bc.push(rng.lognormal(0.5, 1.2));
+            gt.push(rng.lognormal(0.0, 1.2));
+        }
+        CostVectors { pt, fc, bc, gt, delta_t: rng.range_f64(0.1, 3.0) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_is_one_segment() {
+        let d = Decomposition::sequential(5);
+        assert_eq!(d.num_transmissions(), 1);
+        assert_eq!(d.fwd_segments(), vec![(1, 5)]);
+        assert_eq!(d.bwd_segments(), vec![(5, 1)]);
+    }
+
+    #[test]
+    fn lbl_is_one_segment_per_layer() {
+        let d = Decomposition::layer_by_layer(4);
+        assert_eq!(d.num_transmissions(), 4);
+        assert_eq!(d.fwd_segments(), vec![(1, 1), (2, 2), (3, 3), (4, 4)]);
+        assert_eq!(d.bwd_segments(), vec![(4, 4), (3, 3), (2, 2), (1, 1)]);
+    }
+
+    #[test]
+    fn from_positions_matches_paper_notation() {
+        // [0, 2, 5] over L=5: segments [1..2], [3..5].
+        let d = Decomposition::from_positions(5, &[0, 2, 5]);
+        assert_eq!(d.fwd_segments(), vec![(1, 2), (3, 5)]);
+        assert_eq!(d.bwd_segments(), vec![(5, 3), (2, 1)]);
+    }
+
+    #[test]
+    fn segments_partition_layers() {
+        let d = Decomposition::from_positions(7, &[1, 4, 6]);
+        let fwd = d.fwd_segments();
+        let mut covered = Vec::new();
+        for (a, b) in &fwd {
+            assert!(a <= b);
+            covered.extend(*a..=*b);
+        }
+        assert_eq!(covered, (1..=7).collect::<Vec<_>>());
+        // backward covers the same layers in reverse order.
+        let bwd = d.bwd_segments();
+        let mut covered_b = Vec::new();
+        for (hi, lo) in &bwd {
+            assert!(hi >= lo);
+            let mut seg: Vec<usize> = (*lo..=*hi).collect();
+            seg.reverse();
+            covered_b.extend(seg);
+        }
+        assert_eq!(covered_b, (1..=7).rev().collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn prefix_suffix_sums() {
+        let v = [1.0, 2.0, 3.0];
+        assert_eq!(prefix(&v), vec![0.0, 1.0, 3.0, 6.0]);
+        assert_eq!(suffix(&v), vec![0.0, 3.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn depth_one_has_no_cuts() {
+        let d = Decomposition::sequential(1);
+        assert_eq!(d.num_transmissions(), 1);
+        assert_eq!(d.fwd_segments(), vec![(1, 1)]);
+    }
+}

@@ -1,0 +1,158 @@
+//! P3-style fixed-granularity slicing baseline (Jayarajan et al., SysML'19;
+//! discussed in the paper's Section II-B).
+//!
+//! Instead of batching whole layers, P3 slices every tensor at a fixed
+//! byte granularity and pipelines the slices. Under the paper's layer-wise
+//! cost abstraction that corresponds to cutting the layer sequence so no
+//! segment carries more than `slice_ms` of transmission — paying `Δt` per
+//! slice. It makes the granularity/overhead trade-off explicit: too small
+//! a slice drowns in `Δt` (the "tricky parameter" ByteScheduler later
+//! auto-tunes), too large a slice loses overlap. DynaComm's DP sidesteps
+//! the knob entirely; the `schedule_sensitivity` example ablates it.
+
+use super::{CostVectors, Decomposition};
+
+/// Cut greedily so each segment's transmission payload stays below
+/// `slice_ms` (always cutting at layer boundaries — the finest legal
+/// granularity of the layer-wise model; a single over-size layer becomes
+/// its own segment).
+pub fn forward_slices(cv: &CostVectors, slice_ms: f64) -> Decomposition {
+    slices(&cv.pt, slice_ms)
+}
+
+pub fn backward_slices(cv: &CostVectors, slice_ms: f64) -> Decomposition {
+    // Backward flushes deepest-first; the budgeting walks the transmission
+    // order, i.e. reversed layer order.
+    let rev: Vec<f64> = cv.gt.iter().rev().copied().collect();
+    let d = slices(&rev, slice_ms);
+    // Mirror the cut positions back to physical layer indexing.
+    let mut cuts = d.cuts;
+    cuts.reverse();
+    Decomposition { cuts }
+}
+
+fn slices(costs: &[f64], slice_ms: f64) -> Decomposition {
+    assert!(slice_ms > 0.0);
+    let depth = costs.len();
+    let mut d = Decomposition::sequential(depth);
+    let mut acc = 0.0;
+    for l in 0..depth - 1 {
+        acc += costs[l];
+        if acc + costs[l + 1] > slice_ms {
+            d.cuts[l] = true;
+            acc = 0.0;
+        }
+    }
+    d
+}
+
+/// ByteScheduler-style auto-tuning, reduced to its essence: sweep the
+/// granularity and keep the best by measured cost. Still a one-dimensional
+/// family, so DynaComm (which searches all `2^(L-1)` decompositions in
+/// polynomial time) upper-bounds it.
+pub fn forward_autotuned(cv: &CostVectors) -> (Decomposition, f64) {
+    let total: f64 = cv.pt.iter().sum();
+    let mut best: Option<(Decomposition, f64)> = None;
+    for steps in 1..=cv.depth() {
+        let d = forward_slices(cv, (total / steps as f64).max(1e-9));
+        let t = super::cost::eval_forward(cv, &d).total;
+        if best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
+            best = Some((d, t));
+        }
+    }
+    best.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::cost::{eval_backward, eval_forward};
+    use crate::sched::testutil::random_cv;
+    use crate::sched::{bruteforce, dynacomm};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn huge_slice_is_sequential() {
+        let mut rng = Rng::new(71);
+        let cv = random_cv(&mut rng, 10);
+        let d = forward_slices(&cv, f64::INFINITY);
+        assert_eq!(d.num_transmissions(), 1);
+    }
+
+    #[test]
+    fn tiny_slice_is_layer_by_layer() {
+        let mut rng = Rng::new(72);
+        let cv = random_cv(&mut rng, 10);
+        let d = forward_slices(&cv, 1e-12);
+        assert_eq!(d.num_transmissions(), 10);
+    }
+
+    #[test]
+    fn segments_respect_budget() {
+        let mut rng = Rng::new(73);
+        for _ in 0..50 {
+            let depth = rng.range(2, 30);
+            let cv = random_cv(&mut rng, depth);
+            let budget = rng.range_f64(0.5, 10.0);
+            let d = forward_slices(&cv, budget);
+            for (a, b) in d.fwd_segments() {
+                let payload: f64 = cv.pt[a - 1..b].iter().sum();
+                // Single-layer segments may exceed the budget (cannot split
+                // below a layer); multi-layer segments must respect it.
+                if b > a {
+                    assert!(payload <= budget + 1e-9, "payload {payload} > {budget}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backward_mirrors_forward() {
+        let mut rng = Rng::new(74);
+        let cv = random_cv(&mut rng, 8);
+        let d = backward_slices(&cv, 2.0);
+        // Transmission order is deepest-first; every multi-layer segment's
+        // payload obeys the budget.
+        for (hi, lo) in d.bwd_segments() {
+            if hi > lo {
+                let payload: f64 = cv.gt[lo - 1..hi].iter().sum();
+                assert!(payload <= 2.0 + 1e-9);
+            }
+        }
+    }
+
+    /// DynaComm dominates the whole auto-tuned slicing family — the repo's
+    /// ablation for the paper's Section II-B discussion.
+    #[test]
+    fn dynacomm_dominates_autotuned_slicing() {
+        let mut rng = Rng::new(75);
+        let mut strictly_better = 0;
+        for _ in 0..200 {
+            let depth = rng.range(3, 14);
+            let cv = random_cv(&mut rng, depth);
+            let (_, tuned) = forward_autotuned(&cv);
+            let dp = eval_forward(&cv, &dynacomm::forward(&cv)).total;
+            assert!(dp <= tuned + 1e-7, "slicing beat the DP: {cv:?}");
+            if dp < tuned - 1e-6 {
+                strictly_better += 1;
+            }
+        }
+        assert!(strictly_better > 0, "DP never strictly beat slicing");
+    }
+
+    #[test]
+    fn slicing_valid_against_bruteforce_bounds() {
+        let mut rng = Rng::new(76);
+        for _ in 0..50 {
+            let depth = rng.range(2, 11);
+            let cv = random_cv(&mut rng, depth);
+            let (_, best_f) = bruteforce::forward(&cv);
+            let (_, tuned) = forward_autotuned(&cv);
+            assert!(tuned >= best_f - 1e-9);
+            let d = backward_slices(&cv, 3.0);
+            let t = eval_backward(&cv, &d).total;
+            let (_, best_b) = bruteforce::backward(&cv);
+            assert!(t >= best_b - 1e-9);
+        }
+    }
+}

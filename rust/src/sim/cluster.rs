@@ -1,0 +1,124 @@
+//! Multi-worker BSP cluster model — Fig. 11 scalability.
+//!
+//! Workers run homogeneous iterations and synchronize at a BSP barrier (the
+//! default PS mode the paper evaluates). Growing the cluster keeps each
+//! worker's compute constant but stretches its transmissions: all workers'
+//! pulls/pushes contend for the aggregate server-side bandwidth, and
+//! coordination cost (Δt) grows with fan-in. DynaComm re-runs its DP on the
+//! *contended* cost vectors each time the cluster is resized, which is
+//! exactly why its scalability curve stays above the fixed strategies'.
+
+use crate::config::{Strategy, SystemConfig};
+use crate::models::{effective_bandwidth_bytes_per_ms, ModelSpec};
+use crate::sched::CostVectors;
+use crate::sim::simulate_cv;
+
+/// Per-worker cost vectors once `workers` devices share the servers.
+///
+/// * Bandwidth: each worker gets
+///   `min(own link, server aggregate / workers)`.
+/// * Δt: server-side coordination grows mildly with fan-in
+///   (`·(1 + 0.05·(workers-1))`), modeling request queueing at the shards.
+pub fn contended_cost_vectors(
+    model: &ModelSpec,
+    cfg: &SystemConfig,
+    workers: usize,
+) -> CostVectors {
+    assert!(workers >= 1);
+    let mut cv = model.cost_vectors(cfg);
+    let link = effective_bandwidth_bytes_per_ms(cfg);
+    let server_total = link * (cfg.server_bandwidth_gbps / cfg.net.bandwidth_gbps);
+    let share = server_total / workers as f64;
+    let eff = link.min(share);
+    let stretch = link / eff;
+    for t in cv.pt.iter_mut().chain(cv.gt.iter_mut()) {
+        *t *= stretch;
+    }
+    cv.delta_t *= 1.0 + 0.05 * (workers as f64 - 1.0);
+    cv
+}
+
+/// One point of Fig. 11: throughput-based speedup of an `n`-worker cluster
+/// over "single worker training speed" (paper metric) — a lone device
+/// training locally with no parameter-server traffic, i.e. pure compute.
+///
+/// Speedup(n) = n · T_local / T(n): n workers each process a batch per
+/// iteration, but the iteration stretches under contention. Using the
+/// common compute-only baseline (rather than each strategy's own T(1))
+/// keeps the curves comparable, exactly as the figure plots them.
+pub fn speedup(model: &ModelSpec, cfg: &SystemConfig, strategy: Strategy, workers: usize) -> f64 {
+    let cv = model.cost_vectors(cfg);
+    let t_local: f64 = cv.fc.iter().sum::<f64>() + cv.bc.iter().sum::<f64>();
+    let tn = iteration_ms(model, cfg, strategy, workers);
+    workers as f64 * t_local / tn
+}
+
+/// BSP iteration time of an `n`-worker cluster (slowest worker bounds the
+/// barrier; workers are homogeneous here, so it is the common time).
+pub fn iteration_ms(
+    model: &ModelSpec,
+    cfg: &SystemConfig,
+    strategy: Strategy,
+    workers: usize,
+) -> f64 {
+    let cv = contended_cost_vectors(model, cfg, workers);
+    simulate_cv(&cv, strategy).total_ms()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    fn setup() -> (ModelSpec, SystemConfig) {
+        (models::by_name("resnet152").unwrap(), SystemConfig::default())
+    }
+
+    #[test]
+    fn single_worker_speedup_below_one_and_ranked() {
+        // With PS traffic, a single worker cannot beat local training;
+        // scheduled strategies sit closer to 1.0 than Sequential.
+        let (m, cfg) = setup();
+        for s in Strategy::ALL {
+            let sp = speedup(&m, &cfg, s, 1);
+            assert!(sp <= 1.0 + 1e-9, "{}: {sp}", s.name());
+        }
+        assert!(
+            speedup(&m, &cfg, Strategy::DynaComm, 1)
+                > speedup(&m, &cfg, Strategy::Sequential, 1)
+        );
+    }
+
+    #[test]
+    fn speedup_is_sublinear_under_contention() {
+        let (m, cfg) = setup();
+        for s in Strategy::ALL {
+            let s8 = speedup(&m, &cfg, s, 8);
+            assert!(s8 < 8.0 + 1e-9, "{}: {s8}", s.name());
+            assert!(s8 > 1.0, "{}: {s8}", s.name());
+        }
+    }
+
+    #[test]
+    fn dynacomm_scales_best_at_8_workers() {
+        // Fig. 11: DynaComm 7.2x > iBatch 6.2x > LBL 5.4x > Sequential.
+        let (m, cfg) = setup();
+        let dyna = speedup(&m, &cfg, Strategy::DynaComm, 8);
+        let ibatch = speedup(&m, &cfg, Strategy::IBatch, 8);
+        let lbl = speedup(&m, &cfg, Strategy::LayerByLayer, 8);
+        assert!(
+            dyna >= ibatch - 1e-9 && dyna >= lbl - 1e-9,
+            "dyna={dyna:.2} ibatch={ibatch:.2} lbl={lbl:.2}"
+        );
+    }
+
+    #[test]
+    fn contention_stretches_comm_not_comp() {
+        let (m, cfg) = setup();
+        let cv1 = contended_cost_vectors(&m, &cfg, 1);
+        let cv8 = contended_cost_vectors(&m, &cfg, 8);
+        assert_eq!(cv1.fc, cv8.fc);
+        assert!(cv8.pt[0] >= cv1.pt[0]);
+        assert!(cv8.delta_t > cv1.delta_t);
+    }
+}

@@ -1,0 +1,78 @@
+//! ASCII Gantt rendering of mini-procedure timelines — the textual
+//! equivalent of the paper's Fig. 2 / Fig. 3 diagrams, used by the
+//! quickstart example and handy when debugging schedules.
+
+use super::timeline::{Event, EventKind};
+
+/// Render a two-lane (comm / comp) Gantt chart, `width` characters wide.
+pub fn render(events: &[Event], width: usize) -> String {
+    assert!(width >= 10);
+    let end = events.iter().map(|e| e.end).fold(0.0_f64, f64::max);
+    if end <= 0.0 {
+        return String::new();
+    }
+    let scale = width as f64 / end;
+    let mut comm = vec![' '; width];
+    let mut comp = vec![' '; width];
+    for e in events {
+        let (lane, ch) = match e.kind {
+            EventKind::ParamTx => (&mut comm, '▒'),
+            EventKind::GradTx => (&mut comm, '▓'),
+            EventKind::FwdComp => (&mut comp, '█'),
+            EventKind::BwdComp => (&mut comp, '█'),
+        };
+        let a = ((e.start * scale) as usize).min(width - 1);
+        let b = ((e.end * scale).ceil() as usize).clamp(a + 1, width);
+        for c in lane[a..b].iter_mut() {
+            *c = ch;
+        }
+        // Tick the segment boundary so adjacent segments stay visible.
+        lane[a] = '|';
+    }
+    let mut out = String::new();
+    out.push_str("comm ");
+    out.extend(comm);
+    out.push('\n');
+    out.push_str("comp ");
+    out.extend(comp);
+    out.push('\n');
+    out.push_str(&format!("     0{:>width$.1} ms\n", end, width = width - 1));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::random_cv;
+    use crate::sched::{dynacomm, Decomposition};
+    use crate::sim::timeline::{backward_timeline, forward_timeline};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn renders_two_lanes() {
+        let mut rng = Rng::new(81);
+        let cv = random_cv(&mut rng, 6);
+        let ev = forward_timeline(&cv, &dynacomm::forward(&cv));
+        let g = render(&ev, 60);
+        let lines: Vec<&str> = g.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("comm "));
+        assert!(lines[1].starts_with("comp "));
+        assert!(lines[0].contains('▒'));
+        assert!(lines[1].contains('█'));
+    }
+
+    #[test]
+    fn backward_uses_grad_glyph() {
+        let mut rng = Rng::new(82);
+        let cv = random_cv(&mut rng, 4);
+        let ev = backward_timeline(&cv, &Decomposition::layer_by_layer(4));
+        let g = render(&ev, 40);
+        assert!(g.contains('▓'));
+    }
+
+    #[test]
+    fn empty_events_render_empty() {
+        assert_eq!(render(&[], 40), "");
+    }
+}

@@ -1,0 +1,138 @@
+//! Parameter sweeps — the sensitivity (Fig. 9) and scalability (Fig. 11)
+//! experiment drivers, shared between benches and examples.
+
+use crate::config::{Strategy, SystemConfig};
+use crate::models::ModelSpec;
+use crate::sim::{cluster, reduced_ratio};
+
+/// One sweep row: the x-value plus the reduced ratio (or speedup) per
+/// strategy, in `Strategy::ALL` order.
+#[derive(Debug, Clone)]
+pub struct SweepRow {
+    pub x: f64,
+    pub values: Vec<(Strategy, f64)>,
+}
+
+/// Fig. 9 (a): iteration-time-reduced ratio versus batch size.
+pub fn sweep_batch(model: &ModelSpec, base: &SystemConfig, batches: &[usize]) -> Vec<SweepRow> {
+    batches
+        .iter()
+        .map(|&b| {
+            let mut cfg = base.clone();
+            cfg.batch = b;
+            let cv = model.cost_vectors(&cfg);
+            SweepRow {
+                x: b as f64,
+                values: Strategy::ALL
+                    .iter()
+                    .map(|&s| (s, reduced_ratio(&cv, s)))
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+/// Fig. 9 (b): iteration-time-reduced ratio versus nominal bandwidth.
+pub fn sweep_bandwidth(
+    model: &ModelSpec,
+    base: &SystemConfig,
+    bandwidths_gbps: &[f64],
+) -> Vec<SweepRow> {
+    bandwidths_gbps
+        .iter()
+        .map(|&bw| {
+            let mut cfg = base.clone();
+            cfg.net.bandwidth_gbps = bw;
+            let cv = model.cost_vectors(&cfg);
+            SweepRow {
+                x: bw,
+                values: Strategy::ALL
+                    .iter()
+                    .map(|&s| (s, reduced_ratio(&cv, s)))
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+/// Fig. 11: speedup versus number of workers.
+pub fn sweep_workers(model: &ModelSpec, base: &SystemConfig, workers: &[usize]) -> Vec<SweepRow> {
+    workers
+        .iter()
+        .map(|&n| SweepRow {
+            x: n as f64,
+            values: Strategy::ALL
+                .iter()
+                .map(|&s| (s, cluster::speedup(model, base, s, n)))
+                .collect(),
+        })
+        .collect()
+}
+
+impl SweepRow {
+    pub fn get(&self, s: Strategy) -> f64 {
+        self.values.iter().find(|(k, _)| *k == s).map(|(_, v)| *v).unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+
+    #[test]
+    fn batch_sweep_shows_crossover_shape() {
+        // Fig. 9a: gains rise from small batches, then fall once compute
+        // dominates — the ratio at a very large batch must be below the
+        // peak.
+        let m = models::by_name("resnet152").unwrap();
+        let cfg = SystemConfig::default();
+        let rows = sweep_batch(&m, &cfg, &[4, 8, 16, 24, 32, 48, 64, 96, 128]);
+        let dyna: Vec<f64> = rows.iter().map(|r| r.get(Strategy::DynaComm)).collect();
+        let peak = dyna.iter().cloned().fold(f64::MIN, f64::max);
+        assert!(*dyna.last().unwrap() < peak, "{dyna:?}");
+        assert!(peak > 0.2, "peak reduction too small: {peak}");
+    }
+
+    #[test]
+    fn bandwidth_sweep_peak_in_the_middle() {
+        // Fig. 9b shape: low at comm-bound (1 Gbps), peak at balanced
+        // (5 Gbps), lower again at compute-bound (10 Gbps).
+        let m = models::by_name("resnet152").unwrap();
+        let cfg = SystemConfig::default();
+        let rows = sweep_bandwidth(&m, &cfg, &[1.0, 5.0, 10.0]);
+        let d: Vec<f64> = rows.iter().map(|r| r.get(Strategy::DynaComm)).collect();
+        assert!(d[1] > d[0], "5 Gbps ({}) should beat 1 Gbps ({})", d[1], d[0]);
+        assert!(d[1] > d[2], "5 Gbps ({}) should beat 10 Gbps ({})", d[1], d[2]);
+    }
+
+    #[test]
+    fn worker_sweep_monotone_strategies_ranked() {
+        let m = models::by_name("resnet152").unwrap();
+        let cfg = SystemConfig::default();
+        let rows = sweep_workers(&m, &cfg, &[1, 2, 4, 8]);
+        for r in &rows {
+            assert!(r.get(Strategy::DynaComm) >= r.get(Strategy::LayerByLayer) - 1e-9);
+            assert!(r.get(Strategy::DynaComm) >= r.get(Strategy::Sequential) - 1e-9);
+        }
+        // speedup grows with workers for DynaComm.
+        assert!(rows[3].get(Strategy::DynaComm) > rows[0].get(Strategy::DynaComm));
+    }
+
+    #[test]
+    fn dynacomm_dominates_across_sweeps() {
+        let m = models::by_name("resnet152").unwrap();
+        let cfg = SystemConfig::default();
+        for rows in [
+            sweep_batch(&m, &cfg, &[8, 16, 32, 64]),
+            sweep_bandwidth(&m, &cfg, &[1.0, 2.0, 5.0, 10.0, 20.0]),
+        ] {
+            for r in rows {
+                let d = r.get(Strategy::DynaComm);
+                for s in [Strategy::Sequential, Strategy::LayerByLayer, Strategy::IBatch] {
+                    assert!(d >= r.get(s) - 1e-9, "x={} {}", r.x, s.name());
+                }
+            }
+        }
+    }
+}

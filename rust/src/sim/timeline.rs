@@ -1,0 +1,262 @@
+//! Explicit mini-procedure timelines.
+//!
+//! `sched::cost` computes pass totals in O(L) without materializing events;
+//! this module builds the full event list — every transmission and
+//! computation mini-procedure with its `[start, end)` interval — so that
+//! (a) the partial-order constraints (1)–(7) can be checked mechanically,
+//! (b) examples can print Gantt charts, and (c) the O(L) evaluator is
+//! cross-validated against an independent reconstruction.
+
+use crate::sched::{prefix, CostVectors, Decomposition, PassBreakdown};
+
+/// What a timeline event is doing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Parameter transmission of layers `(a..=b)`.
+    ParamTx,
+    /// Forward computation of layers `(a..=b)`.
+    FwdComp,
+    /// Backward computation of layers `(a..=b)` (descending).
+    BwdComp,
+    /// Gradient transmission of layers `(a..=b)` (descending).
+    GradTx,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Event {
+    pub kind: EventKind,
+    /// Inclusive 1-based layer range; `lo <= hi` always.
+    pub lo: usize,
+    pub hi: usize,
+    pub start: f64,
+    pub end: f64,
+}
+
+impl Event {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+/// The forward-pass timeline under decomposition `d`.
+pub fn forward_timeline(cv: &CostVectors, d: &Decomposition) -> Vec<Event> {
+    let ppt = prefix(&cv.pt);
+    let pfc = prefix(&cv.fc);
+    let segs = d.fwd_segments();
+    let mut events = Vec::with_capacity(2 * segs.len());
+    let mut tx_end = 0.0_f64;
+    let mut comp_end = 0.0_f64;
+    for (a, b) in segs {
+        // Transmission: link busy back-to-back, Δt then payload.
+        let tx_start = tx_end;
+        tx_end = tx_start + cv.delta_t + (ppt[b] - ppt[a - 1]);
+        events.push(Event { kind: EventKind::ParamTx, lo: a, hi: b, start: tx_start, end: tx_end });
+        // Computation: after previous segment compute and own arrival.
+        let start = comp_end.max(tx_end);
+        comp_end = start + (pfc[b] - pfc[a - 1]);
+        events.push(Event { kind: EventKind::FwdComp, lo: a, hi: b, start, end: comp_end });
+    }
+    events
+}
+
+/// The backward-pass timeline under decomposition `d`, shifted to t=0.
+pub fn backward_timeline(cv: &CostVectors, d: &Decomposition) -> Vec<Event> {
+    let depth = cv.depth();
+    let mut events = Vec::new();
+    // Backward compute: layer L down to 1, no stalls.
+    let mut t = 0.0_f64;
+    let mut done_at = vec![0.0_f64; depth + 1];
+    for l in (1..=depth).rev() {
+        let start = t;
+        t += cv.bc[l - 1];
+        events.push(Event { kind: EventKind::BwdComp, lo: l, hi: l, start, end: t });
+        done_at[l] = t;
+    }
+    let pgt = prefix(&cv.gt);
+    let mut tx_end = 0.0_f64;
+    for (hi, lo) in d.bwd_segments() {
+        let ready = done_at[lo];
+        let start = tx_end.max(ready);
+        tx_end = start + cv.delta_t + (pgt[hi] - pgt[lo - 1]);
+        events.push(Event { kind: EventKind::GradTx, lo, hi, start, end: tx_end });
+    }
+    events
+}
+
+/// Recompute a [`PassBreakdown`] from an event list by sweeping interval
+/// boundaries — independent of the O(L) evaluator's arithmetic.
+pub fn breakdown_from_events(events: &[Event], comm: &[EventKind]) -> PassBreakdown {
+    let is_comm = |k: EventKind| comm.contains(&k);
+    let mut points: Vec<f64> = Vec::with_capacity(events.len() * 2);
+    for e in events {
+        points.push(e.start);
+        points.push(e.end);
+    }
+    points.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    points.dedup();
+    let mut comp_only = 0.0;
+    let mut overlap = 0.0;
+    let mut comm_only = 0.0;
+    for w in points.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        let mid = (a + b) / 2.0;
+        let comm_busy = events
+            .iter()
+            .any(|e| is_comm(e.kind) && e.start <= mid && mid < e.end);
+        let comp_busy = events
+            .iter()
+            .any(|e| !is_comm(e.kind) && e.start <= mid && mid < e.end);
+        match (comm_busy, comp_busy) {
+            (true, true) => overlap += b - a,
+            (true, false) => comm_only += b - a,
+            (false, true) => comp_only += b - a,
+            (false, false) => {}
+        }
+    }
+    let total = points.last().copied().unwrap_or(0.0) - points.first().copied().unwrap_or(0.0);
+    PassBreakdown { total, comp_only, overlap, comm_only }
+}
+
+/// Mechanically verify the paper's partial-order constraints (1)–(7) on a
+/// forward timeline.
+pub fn check_forward_constraints(events: &[Event], depth: usize) -> Result<(), String> {
+    let tx: Vec<&Event> = events.iter().filter(|e| e.kind == EventKind::ParamTx).collect();
+    let fc: Vec<&Event> = events.iter().filter(|e| e.kind == EventKind::FwdComp).collect();
+    // (4) transmissions ordered by layer.
+    for w in tx.windows(2) {
+        if w[0].end > w[1].start + 1e-9 {
+            return Err(format!("constraint (4) violated: {:?} {:?}", w[0], w[1]));
+        }
+    }
+    // (5) computations ordered by layer.
+    for w in fc.windows(2) {
+        if w[0].end > w[1].start + 1e-9 {
+            return Err(format!("constraint (5) violated: {:?} {:?}", w[0], w[1]));
+        }
+    }
+    // (1) every layer's pt ends before its fc starts.
+    for l in 1..=depth {
+        let t = tx.iter().find(|e| e.lo <= l && l <= e.hi).ok_or("missing pt")?;
+        let c = fc.iter().find(|e| e.lo <= l && l <= e.hi).ok_or("missing fc")?;
+        if t.end > c.start + 1e-9 {
+            return Err(format!("constraint (1) violated at layer {l}"));
+        }
+    }
+    Ok(())
+}
+
+/// Mechanically verify constraints (2), (6), (7) on a backward timeline.
+pub fn check_backward_constraints(events: &[Event], depth: usize) -> Result<(), String> {
+    let bc: Vec<&Event> = events.iter().filter(|e| e.kind == EventKind::BwdComp).collect();
+    let gt: Vec<&Event> = events.iter().filter(|e| e.kind == EventKind::GradTx).collect();
+    // (6) backward compute descends layer by layer.
+    for w in bc.windows(2) {
+        if w[0].lo != w[1].lo + 1 || w[0].end > w[1].start + 1e-9 {
+            return Err(format!("constraint (6) violated: {:?} {:?}", w[0], w[1]));
+        }
+    }
+    // (7) gradient transmissions descend.
+    for w in gt.windows(2) {
+        if w[0].lo <= w[1].hi || w[0].end > w[1].start + 1e-9 {
+            return Err(format!("constraint (7) violated: {:?} {:?}", w[0], w[1]));
+        }
+    }
+    // (2) every layer's bc ends before its gt starts.
+    for l in 1..=depth {
+        let c = bc.iter().find(|e| e.lo == l).ok_or("missing bc")?;
+        let t = gt.iter().find(|e| e.lo <= l && l <= e.hi).ok_or("missing gt")?;
+        if c.end > t.start + 1e-9 {
+            return Err(format!("constraint (2) violated at layer {l}"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::random_cv;
+    use crate::sched::{dynacomm, eval_backward, eval_forward, ibatch};
+    use crate::util::rng::Rng;
+
+    fn random_decomposition(rng: &mut Rng, depth: usize) -> Decomposition {
+        let mut d = Decomposition::sequential(depth);
+        for c in d.cuts.iter_mut() {
+            *c = rng.bool();
+        }
+        d
+    }
+
+    #[test]
+    fn forward_constraints_hold_for_all_strategies() {
+        let mut rng = Rng::new(51);
+        for _ in 0..100 {
+            let depth = rng.range(1, 20);
+            let cv = random_cv(&mut rng, depth);
+            for d in [
+                Decomposition::sequential(depth),
+                Decomposition::layer_by_layer(depth),
+                ibatch::forward(&cv),
+                dynacomm::forward(&cv),
+                random_decomposition(&mut rng, depth),
+            ] {
+                let ev = forward_timeline(&cv, &d);
+                check_forward_constraints(&ev, depth).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn backward_constraints_hold_for_all_strategies() {
+        let mut rng = Rng::new(52);
+        for _ in 0..100 {
+            let depth = rng.range(1, 20);
+            let cv = random_cv(&mut rng, depth);
+            for d in [
+                Decomposition::sequential(depth),
+                Decomposition::layer_by_layer(depth),
+                ibatch::backward(&cv),
+                dynacomm::backward(&cv),
+                random_decomposition(&mut rng, depth),
+            ] {
+                let ev = backward_timeline(&cv, &d);
+                check_backward_constraints(&ev, depth).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn event_breakdown_matches_o_l_evaluator_forward() {
+        // The independent interval sweep must agree with sched::cost.
+        let mut rng = Rng::new(53);
+        for _ in 0..200 {
+            let depth = rng.range(1, 16);
+            let cv = random_cv(&mut rng, depth);
+            let d = random_decomposition(&mut rng, depth);
+            let fast = eval_forward(&cv, &d);
+            let ev = forward_timeline(&cv, &d);
+            let slow = breakdown_from_events(&ev, &[EventKind::ParamTx]);
+            assert!((fast.total - slow.total).abs() < 1e-6, "{fast:?} {slow:?}");
+            assert!((fast.overlap - slow.overlap).abs() < 1e-6, "{fast:?} {slow:?}");
+            assert!((fast.comp_only - slow.comp_only).abs() < 1e-6);
+            assert!((fast.comm_only - slow.comm_only).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn event_breakdown_matches_o_l_evaluator_backward() {
+        let mut rng = Rng::new(54);
+        for _ in 0..200 {
+            let depth = rng.range(1, 16);
+            let cv = random_cv(&mut rng, depth);
+            let d = random_decomposition(&mut rng, depth);
+            let fast = eval_backward(&cv, &d);
+            let ev = backward_timeline(&cv, &d);
+            let slow = breakdown_from_events(&ev, &[EventKind::GradTx]);
+            assert!((fast.total - slow.total).abs() < 1e-6, "{fast:?} {slow:?}");
+            assert!((fast.overlap - slow.overlap).abs() < 1e-6, "{fast:?} {slow:?}");
+            assert!((fast.comp_only - slow.comp_only).abs() < 1e-6);
+            assert!((fast.comm_only - slow.comm_only).abs() < 1e-6);
+        }
+    }
+}

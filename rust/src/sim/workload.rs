@@ -1,0 +1,75 @@
+//! Random profiling-result generator (Section V-B "we randomly generated a
+//! series of profiling results with different numbers of network layers" —
+//! Fig. 12's input, also used by the property tests).
+
+use crate::sched::CostVectors;
+use crate::util::rng::Rng;
+
+/// Shape of the generated per-layer cost distribution.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadParams {
+    /// Log-space mean of per-layer transmission cost (ms).
+    pub comm_mu: f64,
+    /// Log-space mean of per-layer computation cost (ms).
+    pub comp_mu: f64,
+    /// Log-space sigma — CNN layer costs are heavy-tailed (conv vs fc).
+    pub sigma: f64,
+    /// Δt, ms.
+    pub delta_t: f64,
+}
+
+impl Default for WorkloadParams {
+    fn default() -> Self {
+        // Centered on the paper's regime: layer costs of a few ms,
+        // Δt + latency ≈ 14 ms.
+        WorkloadParams { comm_mu: 0.7, comp_mu: 0.7, sigma: 1.2, delta_t: 14.0 }
+    }
+}
+
+/// Generate a random profile with `depth` layers.
+pub fn generate(rng: &mut Rng, depth: usize, p: WorkloadParams) -> CostVectors {
+    let mut pt = Vec::with_capacity(depth);
+    let mut fc = Vec::with_capacity(depth);
+    let mut bc = Vec::with_capacity(depth);
+    let mut gt = Vec::with_capacity(depth);
+    for _ in 0..depth {
+        let t = rng.lognormal(p.comm_mu, p.sigma);
+        pt.push(t);
+        gt.push(t); // gradients mirror parameter sizes
+        let c = rng.lognormal(p.comp_mu, p.sigma);
+        fc.push(c);
+        bc.push(2.0 * c); // backward ≈ 2x forward
+    }
+    CostVectors { pt, fc, bc, gt, delta_t: p.delta_t }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_requested_depth() {
+        let mut rng = Rng::new(61);
+        for depth in [1, 10, 160, 320] {
+            let cv = generate(&mut rng, depth, WorkloadParams::default());
+            assert_eq!(cv.depth(), depth);
+            cv.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn bwd_is_double_fwd() {
+        let mut rng = Rng::new(62);
+        let cv = generate(&mut rng, 50, WorkloadParams::default());
+        for (f, b) in cv.fc.iter().zip(&cv.bc) {
+            assert!((b / f - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = generate(&mut Rng::new(7), 20, WorkloadParams::default());
+        let b = generate(&mut Rng::new(7), 20, WorkloadParams::default());
+        assert_eq!(a, b);
+    }
+}

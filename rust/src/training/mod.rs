@@ -1,0 +1,10 @@
+//! End-to-end training: synthetic dataset, in-process cluster bootstrap,
+//! and the trainer that drives the real three-layer stack (Pallas/JAX
+//! artifacts under PJRT, orchestrated by the Rust PS framework over the
+//! shaped loopback network).
+
+pub mod data;
+pub mod trainer;
+
+pub use data::SyntheticDataset;
+pub use trainer::{train, TrainConfig, TrainResult};

@@ -1,0 +1,232 @@
+//! The end-to-end trainer: boots parameter-server shards and edge workers
+//! in one process (threads + loopback TCP through the link shaper), trains
+//! EdgeCNN through the PJRT artifacts, and reports loss/accuracy — the
+//! Fig. 10 / Table II driver.
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::config::Strategy;
+use crate::net::{LinkShaper, ShaperSpec};
+use crate::ps::{
+    server::{ParamServer, ServerConfig},
+    sharding::ShardMap,
+    worker::{EdgeWorker, WorkerConfig, WorkerReport},
+};
+use crate::runtime::{ArtifactManifest, RuntimeClient, Tensor};
+use crate::training::data::SyntheticDataset;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifacts_dir: String,
+    pub strategy: Strategy,
+    pub workers: usize,
+    pub servers: usize,
+    pub epochs: usize,
+    pub iters_per_epoch: usize,
+    pub lr: f32,
+    /// Emulated per-message setup cost (Δt), ms. Scaled-down edge network:
+    /// the absolute numbers are smaller than the paper's testbed so a full
+    /// training run stays minutes, but the Δt-vs-transfer structure is the
+    /// same.
+    pub setup_ms: f64,
+    /// Emulated one-way latency, ms.
+    pub latency_ms: f64,
+    /// Emulated link rate, bytes per ms.
+    pub bytes_per_ms: f64,
+    /// Real-time profiling switch (Table II).
+    pub profiling: bool,
+    pub seed: u64,
+    /// Validation batches for the epoch-end accuracy measurement.
+    pub val_batches: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifacts_dir: "artifacts".to_string(),
+            strategy: Strategy::DynaComm,
+            workers: 2,
+            servers: 2,
+            epochs: 3,
+            iters_per_epoch: 30,
+            lr: 0.01,
+            setup_ms: 2.0,
+            latency_ms: 1.0,
+            bytes_per_ms: 100_000.0, // 100 MB/s emulated goodput
+            profiling: true,
+            seed: 0,
+            val_batches: 4,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub per_worker: Vec<WorkerReport>,
+    /// Mean loss per epoch (averaged across workers and iterations).
+    pub epoch_loss: Vec<f64>,
+    /// Mean training-batch top-1 per epoch.
+    pub epoch_train_acc: Vec<f64>,
+    /// Validation top-1 per epoch-end snapshot... final epoch only unless
+    /// val_batches > 0 (computing it requires a monolithic forward pass).
+    pub val_acc: f64,
+    /// Mean iteration wall-clock (ms) per epoch, worker-averaged.
+    pub epoch_iter_ms: Vec<f64>,
+    /// Samples/sec per worker over the whole run (Table II metric).
+    pub samples_per_sec_per_worker: f64,
+    pub final_params: Vec<(Tensor, Tensor)>,
+}
+
+/// Run a full training job; blocks until all workers finish.
+pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
+    let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
+    let depth = manifest.depth();
+    let shard = ShardMap::new(cfg.servers, depth);
+    let batch = manifest.batch;
+
+    // Initial parameters (flat w‖b per layer) from the exported init files.
+    let mut init: Vec<Vec<f32>> = Vec::with_capacity(depth);
+    for l in &manifest.layers {
+        let w = Tensor::from_bin_file(&manifest.path(&l.w_init), l.w_shape.clone())?;
+        let b = Tensor::from_bin_file(&manifest.path(&l.b_init), l.b_shape.clone())?;
+        let mut flat = w.data;
+        flat.extend_from_slice(&b.data);
+        init.push(flat);
+    }
+
+    // Boot one shard per server with its owned layers.
+    let downlink = ShaperSpec {
+        setup_ms: cfg.setup_ms,
+        latency_ms: cfg.latency_ms,
+        bytes_per_ms: cfg.bytes_per_ms,
+    };
+    let mut servers = Vec::with_capacity(cfg.servers);
+    for s in 0..cfg.servers {
+        let layers: HashMap<usize, Vec<f32>> = shard
+            .owned_by(s)
+            .into_iter()
+            .map(|l| (l, init[l].clone()))
+            .collect();
+        servers.push(ParamServer::start(
+            ServerConfig { workers: cfg.workers, lr: cfg.lr },
+            layers,
+            Some(downlink),
+        )?);
+    }
+    let addrs: Vec<std::net::SocketAddr> =
+        servers.iter().map(|s| s.handle().addr).collect();
+
+    let dataset = SyntheticDataset::new(
+        cfg.seed,
+        manifest.input_shape.clone(),
+        manifest.num_classes,
+    );
+    let total_iters = (cfg.epochs * cfg.iters_per_epoch) as u64;
+
+    // Spawn workers. Each thread owns its PJRT client (the xla crate's
+    // client is Rc-based and not Send).
+    let mut handles = Vec::with_capacity(cfg.workers);
+    for w in 0..cfg.workers {
+        let wcfg = WorkerConfig {
+            id: w,
+            strategy: cfg.strategy,
+            artifacts_dir: cfg.artifacts_dir.clone(),
+            server_addrs: addrs.clone(),
+            shaper: Some(LinkShaper::new(
+                cfg.setup_ms,
+                cfg.latency_ms,
+                cfg.bytes_per_ms,
+            )),
+            profiling: cfg.profiling,
+            reschedule_every: cfg.iters_per_epoch,
+        };
+        let ds = dataset.clone();
+        let want_params = w == 0;
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("worker-{w}"))
+                .spawn(move || -> Result<(WorkerReport, Option<Vec<(Tensor, Tensor)>>)> {
+                    let mut worker = EdgeWorker::connect(wcfg)?;
+                    let report = worker
+                        .run(total_iters, |i| ds.batch(w as u64, i, batch))?;
+                    let params = if want_params {
+                        Some(worker.pull_params(total_iters)?)
+                    } else {
+                        None
+                    };
+                    Ok((report, params))
+                })?,
+        );
+    }
+
+    let mut per_worker = Vec::with_capacity(cfg.workers);
+    let mut final_params = None;
+    for h in handles {
+        let (report, params) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("worker thread panicked"))?
+            .context("worker failed")?;
+        per_worker.push(report);
+        if params.is_some() {
+            final_params = params;
+        }
+    }
+    for s in &mut servers {
+        s.shutdown();
+    }
+    let final_params = final_params.context("no worker returned params")?;
+
+    // Aggregate per-epoch metrics.
+    let ipe = cfg.iters_per_epoch;
+    let mut epoch_loss = Vec::with_capacity(cfg.epochs);
+    let mut epoch_train_acc = Vec::with_capacity(cfg.epochs);
+    let mut epoch_iter_ms = Vec::with_capacity(cfg.epochs);
+    for e in 0..cfg.epochs {
+        let (mut l, mut a, mut t, mut n) = (0.0, 0.0, 0.0, 0);
+        for rep in &per_worker {
+            for i in e * ipe..((e + 1) * ipe).min(rep.losses.len()) {
+                l += rep.losses[i] as f64;
+                a += rep.batch_top1[i];
+                t += rep.iter_ms[i];
+                n += 1;
+            }
+        }
+        epoch_loss.push(l / n as f64);
+        epoch_train_acc.push(a / n as f64);
+        epoch_iter_ms.push(t / n as f64);
+    }
+
+    // Validation accuracy on held-out batches via the monolithic forward.
+    let val_acc = if cfg.val_batches > 0 {
+        let rt = RuntimeClient::load(&cfg.artifacts_dir)?;
+        let mut acc = 0.0;
+        for vb in 0..cfg.val_batches {
+            let (x, onehot) = dataset.batch(u64::MAX - 1, vb as u64, batch);
+            let logits = rt.full_fwd(&final_params, &x)?;
+            acc += crate::ps::worker::batch_top1(&logits, &onehot);
+        }
+        acc / cfg.val_batches as f64
+    } else {
+        f64::NAN
+    };
+
+    let total_ms: f64 = per_worker
+        .iter()
+        .map(|r| r.iter_ms.iter().sum::<f64>())
+        .sum::<f64>()
+        / cfg.workers as f64;
+    let samples_per_sec_per_worker =
+        (total_iters as f64 * batch as f64) / (total_ms / 1e3);
+
+    Ok(TrainResult {
+        per_worker,
+        epoch_loss,
+        epoch_train_acc,
+        val_acc,
+        epoch_iter_ms,
+        samples_per_sec_per_worker,
+        final_params,
+    })
+}

@@ -1,0 +1,107 @@
+//! Tiny CLI flag parser (no `clap` offline): `--key value`, `--key=value`,
+//! bare `--flag` booleans, and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: positionals in order plus a key/value flag map.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(stripped) = arg.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got '{v}'")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        // NOTE: a bare flag followed by a non-flag token consumes it as a
+        // value ("--verbose run" ⇒ verbose=run), so boolean flags go last
+        // or use the `--flag=true` form.
+        let a = parse(&["run", "--model", "resnet152", "--batch=32", "--verbose"]);
+        assert_eq!(a.get("model"), Some("resnet152"));
+        assert_eq!(a.usize("batch", 0), 32);
+        assert!(a.bool("verbose"));
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.usize("workers", 8), 8);
+        assert_eq!(a.f64("rtt-ms", 10.0), 10.0);
+        assert!(!a.bool("quiet"));
+    }
+
+    #[test]
+    fn flag_before_flag_is_boolean() {
+        let a = parse(&["--fast", "--model", "vgg19"]);
+        assert!(a.bool("fast"));
+        assert_eq!(a.get("model"), Some("vgg19"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        let a = parse(&["--seed=-5"]);
+        assert_eq!(a.get("seed"), Some("-5"));
+    }
+}

@@ -1,0 +1,87 @@
+//! Leveled stderr logger with a global level, monotonic timestamps, and a
+//! per-line component tag. `DYNACOMM_LOG=debug|info|warn|error` overrides.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn init_from_env() {
+    if let Ok(v) = std::env::var("DYNACOMM_LOG") {
+        match v.to_ascii_lowercase().as_str() {
+            "debug" => set_level(Level::Debug),
+            "info" => set_level(Level::Info),
+            "warn" => set_level(Level::Warn),
+            "error" => set_level(Level::Error),
+            _ => {}
+        }
+    }
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, component: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let tag = match level {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!("[{t:9.3}s {tag} {component}] {msg}");
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($c:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $c, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($c:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $c, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn_log {
+    ($c:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $c, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,9 @@
+//! Hand-rolled substrates. The offline build environment ships only the
+//! `xla` and `anyhow` crates, so everything a framework normally pulls from
+//! crates.io (JSON, PRNG, CLI parsing, stats, logging) is implemented here.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,112 @@
+//! Small statistics helpers used by the bench harnesses and tables:
+//! mean / stddev / percentiles / min / max, and a log-log slope fit used to
+//! verify the O(L^3) complexity claim of Fig. 12 empirically.
+
+/// Summary statistics over a sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize of empty sample");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: percentile_sorted(&sorted, 50.0),
+        p95: percentile_sorted(&sorted, 95.0),
+    }
+}
+
+/// Nearest-rank percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let rank = (p / 100.0 * (sorted.len() as f64 - 1.0)).round() as usize;
+    sorted[rank.min(sorted.len() - 1)]
+}
+
+/// Least-squares slope+intercept of y over x.
+pub fn linear_fit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let sx = x.iter().sum::<f64>();
+    let sy = y.iter().sum::<f64>();
+    let sxx = x.iter().map(|v| v * v).sum::<f64>();
+    let sxy = x.iter().zip(y).map(|(a, b)| a * b).sum::<f64>();
+    let slope = (n * sxy - sx * sy) / (n * sxx - sx * sx);
+    let intercept = (sy - slope * sx) / n;
+    (slope, intercept)
+}
+
+/// Fit `time ~ c * L^k` by regressing log(time) on log(L); returns `k`.
+/// Used by `fig12` to check the scheduling algorithms' growth exponent.
+pub fn power_law_exponent(sizes: &[f64], times: &[f64]) -> f64 {
+    let lx: Vec<f64> = sizes.iter().map(|v| v.ln()).collect();
+    let ly: Vec<f64> = times.iter().map(|v| v.ln()).collect();
+    linear_fit(&lx, &ly).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.std - (2.5f64).sqrt()).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = summarize(&[7.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.p95, 7.0);
+    }
+
+    #[test]
+    fn fit_recovers_line() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [3.0, 5.0, 7.0, 9.0];
+        let (m, b) = linear_fit(&x, &y);
+        assert!((m - 2.0).abs() < 1e-9);
+        assert!((b - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cubic_exponent_detected() {
+        let l: Vec<f64> = (1..=8).map(|i| (i * 40) as f64).collect();
+        let t: Vec<f64> = l.iter().map(|v| 2e-9 * v * v * v).collect();
+        let k = power_law_exponent(&l, &t);
+        assert!((k - 3.0).abs() < 1e-6, "k={k}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_summary_panics() {
+        summarize(&[]);
+    }
+}

@@ -1,0 +1,122 @@
+//! Randomized robustness tests for the hand-rolled substrates: the JSON
+//! parser and the wire protocol must never panic on arbitrary bytes and
+//! must round-trip everything they produce.
+
+use dynacomm::net::Message;
+use dynacomm::util::json::Json;
+use dynacomm::util::rng::Rng;
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bool()),
+        2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+        3 => {
+            let n = rng.below(12);
+            Json::Str(
+                (0..n)
+                    .map(|_| {
+                        let c = rng.below(128) as u8;
+                        if c.is_ascii_graphic() || c == b' ' { c as char } else { 'π' }
+                    })
+                    .collect(),
+            )
+        }
+        4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.below(5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn json_roundtrips_random_values() {
+    let mut rng = Rng::new(1001);
+    for _ in 0..500 {
+        let v = random_json(&mut rng, 4);
+        let text = v.to_string();
+        let back = Json::parse(&text)
+            .unwrap_or_else(|e| panic!("failed to reparse {text}: {e}"));
+        assert_eq!(back, v, "{text}");
+    }
+}
+
+#[test]
+fn json_parser_never_panics_on_garbage() {
+    let mut rng = Rng::new(1002);
+    for _ in 0..2000 {
+        let n = rng.below(64);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        if let Ok(s) = std::str::from_utf8(&bytes) {
+            let _ = Json::parse(s); // must return, not panic
+        }
+    }
+}
+
+#[test]
+fn json_parser_never_panics_on_mutated_valid_input() {
+    let mut rng = Rng::new(1003);
+    let base = r#"{"layers":[{"name":"conv1","w_shape":[3,3,3,16],"x":1.5e-3}]}"#;
+    for _ in 0..2000 {
+        let mut b = base.as_bytes().to_vec();
+        let i = rng.below(b.len());
+        b[i] = rng.below(256) as u8;
+        if let Ok(s) = std::str::from_utf8(&b) {
+            let _ = Json::parse(s);
+        }
+    }
+}
+
+fn random_message(rng: &mut Rng) -> Message {
+    let data: Vec<f32> = (0..rng.below(200)).map(|_| rng.normal() as f32).collect();
+    match rng.below(7) {
+        0 => Message::Pull { iter: rng.next_u64(), lo: rng.below(100) as u32, hi: rng.below(100) as u32 },
+        1 => Message::PullReply { iter: rng.next_u64(), lo: 0, hi: 5, data },
+        2 => Message::Push { iter: rng.next_u64(), lo: 1, hi: 3, data },
+        3 => Message::PushAck { iter: rng.next_u64(), lo: 0, hi: 0 },
+        4 => Message::Hello { worker: rng.below(64) as u32 },
+        5 => Message::HelloAck { workers: rng.below(64) as u32 },
+        _ => Message::Shutdown,
+    }
+}
+
+#[test]
+fn wire_protocol_roundtrips_random_messages() {
+    let mut rng = Rng::new(1004);
+    for _ in 0..1000 {
+        let m = random_message(&mut rng);
+        let enc = m.encode();
+        let len = u32::from_le_bytes(enc[..4].try_into().unwrap()) as usize;
+        assert_eq!(len, enc.len() - 4, "length prefix wrong for {m:?}");
+        assert_eq!(Message::decode(&enc[4..]).unwrap(), m);
+    }
+}
+
+#[test]
+fn wire_decoder_never_panics_on_corruption() {
+    let mut rng = Rng::new(1005);
+    for _ in 0..2000 {
+        let m = random_message(&mut rng);
+        let mut enc = m.encode();
+        // Random single-byte corruption + random truncation.
+        if enc.len() > 4 {
+            let i = 4 + rng.below(enc.len() - 4);
+            enc[i] ^= 1 << rng.below(8);
+            let cut = 4 + rng.below(enc.len() - 4 + 1);
+            let _ = Message::decode(&enc[4..cut.max(5).min(enc.len())]);
+            let _ = Message::decode(&enc[4..]); // must return, not panic
+        }
+    }
+}
+
+#[test]
+fn wire_decoder_never_panics_on_random_bytes() {
+    let mut rng = Rng::new(1006);
+    for _ in 0..2000 {
+        let n = rng.below(128);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        let _ = Message::decode(&bytes);
+    }
+}

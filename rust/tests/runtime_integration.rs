@@ -1,0 +1,121 @@
+//! PJRT runtime integration — requires `make artifacts` (tests no-op with a
+//! notice otherwise, so `cargo test` works in a fresh checkout).
+
+use dynacomm::runtime::{artifacts_available, RuntimeClient, Tensor};
+use dynacomm::util::rng::Rng;
+
+const DIR: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+
+fn client() -> Option<RuntimeClient> {
+    if !artifacts_available(DIR) {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(RuntimeClient::load(DIR).expect("loading artifacts"))
+}
+
+fn random_batch(rt: &RuntimeClient, seed: u64) -> Tensor {
+    let mut rng = Rng::new(seed);
+    let mut shape = vec![rt.manifest.batch];
+    shape.extend(&rt.manifest.input_shape);
+    let n: usize = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.normal() as f32).collect())
+}
+
+/// Layer-wise forward composition must equal the monolithic `full_fwd`
+/// lowering — the composition the PS worker performs is numerically the
+/// same model.
+#[test]
+fn layerwise_composition_matches_monolithic_forward() {
+    let Some(rt) = client() else { return };
+    let params = rt.initial_params().unwrap();
+    let x = random_batch(&rt, 1);
+
+    let mut act = x.clone();
+    for l in 0..rt.manifest.depth() {
+        let (w, b) = &params[l];
+        act = rt.layer_fwd(l, w, b, &act).unwrap();
+    }
+    let mono = rt.full_fwd(&params, &x).unwrap();
+    assert_eq!(act.shape, mono.shape);
+    for (a, m) in act.data.iter().zip(&mono.data) {
+        assert!((a - m).abs() < 1e-3 * (1.0 + m.abs()), "{a} vs {m}");
+    }
+}
+
+/// Uniform logits ⇒ loss = ln(10); glogits rows sum to ~0.
+#[test]
+fn loss_head_sanity() {
+    let Some(rt) = client() else { return };
+    let b = rt.manifest.batch;
+    let logits = Tensor::zeros(vec![b, 10]);
+    let mut onehot = Tensor::zeros(vec![b, 10]);
+    for r in 0..b {
+        onehot.data[r * 10 + r % 10] = 1.0;
+    }
+    let (loss, glogits) = rt.loss(&logits, &onehot).unwrap();
+    assert!((loss - 10f32.ln()).abs() < 1e-4, "{loss}");
+    for r in 0..b {
+        let s: f32 = glogits.data[r * 10..(r + 1) * 10].iter().sum();
+        assert!(s.abs() < 1e-5);
+    }
+}
+
+/// Backward gradients: finite-difference check of the loss through one
+/// layer (fc2 — cheap) against the exported bwd artifact.
+#[test]
+fn layer_bwd_matches_finite_difference() {
+    let Some(rt) = client() else { return };
+    let depth = rt.manifest.depth();
+    let l = depth - 1; // fc2: input (b, 128), small
+    let params = rt.initial_params().unwrap();
+    let (w, b) = &params[l];
+    let mut rng = Rng::new(3);
+    let bsz = rt.manifest.batch;
+    let x = Tensor::new(
+        vec![bsz, 128],
+        (0..bsz * 128).map(|_| rng.normal() as f32 * 0.5).collect(),
+    );
+    let mut onehot = Tensor::zeros(vec![bsz, 10]);
+    for r in 0..bsz {
+        onehot.data[r * 10 + (r * 3) % 10] = 1.0;
+    }
+
+    let loss_of = |w: &Tensor| -> f32 {
+        let y = rt.layer_fwd(l, w, b, &x).unwrap();
+        rt.loss(&y, &onehot).unwrap().0
+    };
+
+    // Analytic gradient through the artifact chain.
+    let y = rt.layer_fwd(l, w, b, &x).unwrap();
+    let (_, glogits) = rt.loss(&y, &onehot).unwrap();
+    let (gw, _, _) = rt.layer_bwd(l, w, b, &x, &glogits).unwrap();
+
+    // Central differences on a few weight entries.
+    let eps = 1e-3f32;
+    for &idx in &[0usize, 77, 500, 1200] {
+        let mut wp = w.clone();
+        wp.data[idx] += eps;
+        let mut wm = w.clone();
+        wm.data[idx] -= eps;
+        let fd = (loss_of(&wp) - loss_of(&wm)) / (2.0 * eps);
+        let an = gw.data[idx];
+        assert!(
+            (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+            "idx {idx}: fd={fd} analytic={an}"
+        );
+    }
+}
+
+/// Initial parameter files parse to the manifest shapes.
+#[test]
+fn initial_params_match_shapes() {
+    let Some(rt) = client() else { return };
+    let params = rt.initial_params().unwrap();
+    assert_eq!(params.len(), rt.manifest.depth());
+    for ((w, b), spec) in params.iter().zip(&rt.manifest.layers) {
+        assert_eq!(w.shape, spec.w_shape, "{}", spec.name);
+        assert_eq!(b.shape, spec.b_shape, "{}", spec.name);
+        assert!(w.data.iter().all(|v| v.is_finite()));
+    }
+}

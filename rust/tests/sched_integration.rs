@@ -1,0 +1,163 @@
+//! Cross-module integration: the cost-model zoo feeding the schedulers,
+//! with timelines validated against the paper's partial-order constraints
+//! and against the exhaustive optimum where tractable.
+
+use dynacomm::config::{Strategy, SystemConfig};
+use dynacomm::models;
+use dynacomm::sched::{self, bruteforce, Decomposition};
+use dynacomm::sim::{self, timeline};
+use dynacomm::util::rng::Rng;
+
+/// Every strategy on every paper model yields a constraint-satisfying
+/// mini-procedure timeline.
+#[test]
+fn all_strategy_timelines_satisfy_constraints_on_paper_models() {
+    let mut cfg = SystemConfig::default();
+    for batch in [16, 32] {
+        cfg.batch = batch;
+        for model in models::paper_models() {
+            let cv = model.cost_vectors(&cfg);
+            for s in Strategy::ALL {
+                let plan = sched::plan_for(s, &cv);
+                let f = timeline::forward_timeline(&cv, &plan.fwd);
+                timeline::check_forward_constraints(&f, cv.depth()).unwrap_or_else(
+                    |e| panic!("{} {} fwd: {e}", model.name, s.name()),
+                );
+                let b = timeline::backward_timeline(&cv, &plan.bwd);
+                timeline::check_backward_constraints(&b, cv.depth()).unwrap_or_else(
+                    |e| panic!("{} {} bwd: {e}", model.name, s.name()),
+                );
+            }
+        }
+    }
+}
+
+/// EdgeCNN is shallow enough (L=6) to brute-force: DynaComm must be exactly
+/// optimal on the real workload's cost profile, across many conditions.
+#[test]
+fn dynacomm_exactly_optimal_on_edgecnn_profiles() {
+    let model = models::by_name("edgecnn").unwrap();
+    let mut cfg = SystemConfig::default();
+    for batch in [4, 16, 64] {
+        for bw in [0.5, 2.0, 10.0] {
+            for dt in [0.5, 5.0, 20.0] {
+                cfg.batch = batch;
+                cfg.net.bandwidth_gbps = bw;
+                cfg.net.delta_t_ms = dt;
+                let cv = model.cost_vectors(&cfg);
+                let plan = sched::plan_for(Strategy::DynaComm, &cv);
+                let (_, best_f) = bruteforce::forward(&cv);
+                let got_f = sched::eval_forward(&cv, &plan.fwd).total;
+                assert!(
+                    (got_f - best_f).abs() < 1e-7,
+                    "bs={batch} bw={bw} dt={dt}: {got_f} vs {best_f}"
+                );
+                let (_, best_b) = bruteforce::backward(&cv);
+                let got_b = sched::eval_backward(&cv, &plan.bwd).total;
+                assert!((got_b - best_b).abs() < 1e-7);
+            }
+        }
+    }
+}
+
+/// The Fig. 5/6 property at both batch sizes: DynaComm ≤ everything, and
+/// Sequential is the normalization baseline.
+#[test]
+fn dynacomm_dominates_paper_grid() {
+    let mut cfg = SystemConfig::default();
+    for batch in [16, 32] {
+        cfg.batch = batch;
+        for model in models::paper_models() {
+            let cv = model.cost_vectors(&cfg);
+            let dyna = sim::simulate_cv(&cv, Strategy::DynaComm);
+            for s in Strategy::ALL {
+                let r = sim::simulate_cv(&cv, s);
+                assert!(
+                    dyna.breakdown.fwd.total <= r.breakdown.fwd.total + 1e-6,
+                    "{} bs={batch} {} fwd",
+                    model.name,
+                    s.name()
+                );
+                assert!(
+                    dyna.breakdown.bwd.total <= r.breakdown.bwd.total + 1e-6,
+                    "{} bs={batch} {} bwd",
+                    model.name,
+                    s.name()
+                );
+            }
+        }
+    }
+}
+
+/// Randomized adversarial sweep: on thousands of profiles the DP never
+/// loses to any competitor and never beats the brute-force optimum.
+#[test]
+fn randomized_cross_validation_sweep() {
+    let mut rng = Rng::new(99);
+    for _ in 0..500 {
+        let depth = rng.range(2, 11);
+        let params = dynacomm::sim::workload::WorkloadParams {
+            comm_mu: rng.range_f64(-1.0, 2.0),
+            comp_mu: rng.range_f64(-1.0, 2.0),
+            sigma: rng.range_f64(0.2, 2.0),
+            delta_t: rng.range_f64(0.0, 30.0),
+        };
+        let cv = dynacomm::sim::workload::generate(&mut rng, depth, params);
+        let (_, best) = bruteforce::forward(&cv);
+        let dyna = sched::eval_forward(&cv, &sched::dynacomm::forward(&cv)).total;
+        assert!((dyna - best).abs() < 1e-7, "fwd suboptimal: {cv:?}");
+        let ib = sched::eval_forward(&cv, &sched::ibatch::forward(&cv)).total;
+        let lbl =
+            sched::eval_forward(&cv, &Decomposition::layer_by_layer(depth)).total;
+        let seq = sched::eval_forward(&cv, &Decomposition::sequential(depth)).total;
+        assert!(dyna <= ib + 1e-7 && dyna <= lbl + 1e-7 && dyna <= seq + 1e-7);
+
+        let (_, best_b) = bruteforce::backward(&cv);
+        let dyna_b = sched::eval_backward(&cv, &sched::dynacomm::backward(&cv)).total;
+        assert!((dyna_b - best_b).abs() < 1e-7, "bwd suboptimal: {cv:?}");
+    }
+}
+
+/// Scheduling decisions must be pure functions of the cost vectors.
+#[test]
+fn plans_deterministic_across_calls() {
+    let cfg = SystemConfig::default();
+    for model in models::paper_models() {
+        let cv = model.cost_vectors(&cfg);
+        for s in Strategy::ALL {
+            let a = sched::plan_for(s, &cv);
+            let b = sched::plan_for(s, &cv);
+            assert_eq!(a.fwd, b.fwd, "{} {}", model.name, s.name());
+            assert_eq!(a.bwd, b.bwd);
+        }
+    }
+}
+
+/// The paper's Fig. 12 claim, verified empirically: DynaComm's scheduling
+/// wall-clock grows as ~L^3.
+#[test]
+fn dp_complexity_is_cubic() {
+    let depths = [40usize, 80, 160, 320];
+    let mut times = Vec::new();
+    let mut rng = Rng::new(7);
+    for &d in &depths {
+        let cv = dynacomm::sim::workload::generate(
+            &mut rng,
+            d,
+            dynacomm::sim::workload::WorkloadParams::default(),
+        );
+        // Warm-up + best-of-3 to de-noise.
+        let mut best = f64::INFINITY;
+        for _ in 0..3 {
+            let t0 = std::time::Instant::now();
+            std::hint::black_box(sched::dynacomm::forward(&cv));
+            best = best.min(t0.elapsed().as_secs_f64());
+        }
+        times.push(best);
+    }
+    let k = dynacomm::util::stats::power_law_exponent(
+        &depths.iter().map(|&d| d as f64).collect::<Vec<_>>(),
+        &times,
+    );
+    assert!((2.0..4.0).contains(&k), "measured exponent {k} (times {times:?})");
+}
