@@ -1,0 +1,125 @@
+//! Wire-path microbench: byte-slab encode/decode versus the seed's
+//! element-wise f32 path, on a 16 MiB `PullReply`.
+//!
+//! The slab pipeline's claim (docs/WIRE.md): serializing a tensor message
+//! is a bulk byte copy, so encode+decode throughput is memcpy-bound
+//! rather than per-element-loop-bound. This bench reconstructs the seed's
+//! per-element encoder/decoder verbatim and races it against
+//! `Message::encode_into`/`Message::decode`, printing MB/s per direction
+//! and the end-to-end speedup.
+
+mod common;
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use dynacomm::net::{slab, Message};
+
+/// 4 Mi f32 elements = 16 MiB of tensor payload.
+const ELEMS: usize = 4 << 20;
+const PAYLOAD_BYTES: usize = 4 * ELEMS;
+
+/// The seed's encoder: header writes plus a per-element
+/// `extend_from_slice(&v.to_le_bytes())` loop over `Vec<f32>` data.
+fn legacy_encode(iter: u64, lo: u32, hi: u32, data: &[f32]) -> Vec<u8> {
+    let wire_size = 1 + 8 + 4 + 4 + 4 + 4 * data.len();
+    let mut buf = Vec::with_capacity(4 + wire_size);
+    buf.extend_from_slice(&(wire_size as u32).to_le_bytes());
+    buf.push(2); // PullReply opcode
+    buf.extend_from_slice(&iter.to_le_bytes());
+    buf.extend_from_slice(&lo.to_le_bytes());
+    buf.extend_from_slice(&hi.to_le_bytes());
+    buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    for v in data {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    buf
+}
+
+/// The seed's decoder tail: element count, then a per-element
+/// `f32::from_le_bytes` collect into a fresh `Vec<f32>`.
+fn legacy_decode(payload: &[u8]) -> (u64, u32, u32, Vec<f32>) {
+    assert_eq!(payload[0], 2);
+    let b = &payload[1..];
+    let iter = u64::from_le_bytes(b[..8].try_into().unwrap());
+    let lo = u32::from_le_bytes(b[8..12].try_into().unwrap());
+    let hi = u32::from_le_bytes(b[12..16].try_into().unwrap());
+    let n = u32::from_le_bytes(b[16..20].try_into().unwrap()) as usize;
+    let data: Vec<f32> = b[20..20 + 4 * n]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    (iter, lo, hi, data)
+}
+
+/// Best-of-`reps` seconds for one full encode+decode round trip.
+fn time_best(reps: usize, mut f: impl FnMut()) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+fn mb_per_s(seconds: f64) -> f64 {
+    PAYLOAD_BYTES as f64 / (1 << 20) as f64 / seconds
+}
+
+fn main() {
+    let reps = if common::fast_mode() { 5 } else { 15 };
+    let values: Vec<f32> = (0..ELEMS).map(|i| (i as f32) * 0.25 - 1000.0).collect();
+
+    // --- Seed path: Vec<f32> payload, per-element encode/decode. ---
+    let legacy_enc = time_best(reps, || {
+        black_box(legacy_encode(7, 0, 5, black_box(&values)));
+    });
+    let frame = legacy_encode(7, 0, 5, &values);
+    let legacy_dec = time_best(reps, || {
+        black_box(legacy_decode(black_box(&frame[4..])));
+    });
+
+    // --- Slab path: Vec<u8> payload, bulk copies, reused scratch. ---
+    let msg = Message::PullReply { iter: 7, lo: 0, hi: 5, data: slab::from_f32s(&values) };
+    let mut scratch = Vec::new();
+    msg.encode_into(&mut scratch); // warm the scratch buffer
+    let slab_enc = time_best(reps, || {
+        msg.encode_into(black_box(&mut scratch));
+        black_box(&scratch);
+    });
+    let slab_dec = time_best(reps, || {
+        black_box(Message::decode(black_box(&scratch[4..])).unwrap());
+    });
+
+    // Cross-check: both paths carry the same 16 MiB of tensor bytes and
+    // decode back to the original values. (The count-field semantics
+    // differ — elements vs bytes — so each frame is decoded by its own
+    // decoder.)
+    assert_eq!(scratch.len(), frame.len(), "frame sizes diverged");
+    assert_eq!(scratch[25..], frame[25..], "tensor bytes diverged");
+    let (_, _, _, legacy_values) = legacy_decode(&frame[4..]);
+    assert_eq!(legacy_values, values);
+    match Message::decode(&scratch[4..]).unwrap() {
+        Message::PullReply { data, .. } => assert_eq!(slab::to_f32s(&data), values),
+        m => panic!("{m:?}"),
+    }
+
+    println!(
+        "[bench] wire_throughput: 16 MiB PullReply, best of {reps} (release build expected)"
+    );
+    println!(
+        "  encode: legacy {:>8.0} MB/s   slab {:>8.0} MB/s   ({:.1}x)",
+        mb_per_s(legacy_enc),
+        mb_per_s(slab_enc),
+        legacy_enc / slab_enc
+    );
+    println!(
+        "  decode: legacy {:>8.0} MB/s   slab {:>8.0} MB/s   ({:.1}x)",
+        mb_per_s(legacy_dec),
+        mb_per_s(slab_dec),
+        legacy_dec / slab_dec
+    );
+    let total_speedup = (legacy_enc + legacy_dec) / (slab_enc + slab_dec);
+    println!("  encode+decode speedup: {total_speedup:.1}x (target ≥ 5x)");
+}

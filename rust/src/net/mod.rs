@@ -1,8 +1,11 @@
 //! Edge-network substrate: framed TCP transport plus a link shaper that
 //! emulates the paper's edge↔cloud conditions (RTT, bandwidth, per-message
-//! setup cost Δt) on loopback.
+//! setup cost Δt) on loopback. Tensor payloads travel as contiguous
+//! little-endian byte slabs ([`slab`]); `docs/WIRE.md` specifies the frame
+//! format.
 
 pub mod shaper;
+pub mod slab;
 pub mod transport;
 
 pub use shaper::{LinkShaper, ShaperSpec};

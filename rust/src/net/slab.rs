@@ -1,0 +1,111 @@
+//! Little-endian f32 ⇄ byte-slab helpers.
+//!
+//! The wire protocol (see `docs/WIRE.md`) moves tensors as contiguous
+//! little-endian f32 byte slabs, so the hot path copies bytes with
+//! `extend_from_slice`/`copy_from_slice` and only materializes `f32`
+//! values where arithmetic actually happens (server-side SGD, gradient
+//! accumulation, tensor handoff to the runtime). These helpers are the
+//! single place that encodes the f32 ⇄ bytes convention; everything is
+//! safe code over 4-byte chunks.
+
+/// Bytes per encoded f32 element.
+pub const ELEM: usize = 4;
+
+/// Number of f32 elements a slab holds. Panics if the slab is misaligned
+/// (decode validates alignment at the protocol boundary).
+pub fn len_f32s(bytes: &[u8]) -> usize {
+    assert!(bytes.len() % ELEM == 0, "slab length {} not f32-aligned", bytes.len());
+    bytes.len() / ELEM
+}
+
+/// Append `src` to `dst` as little-endian bytes.
+pub fn extend_f32s(dst: &mut Vec<u8>, src: &[f32]) {
+    dst.reserve(ELEM * src.len());
+    for v in src {
+        dst.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Encode a fresh slab from f32 values.
+pub fn from_f32s(src: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(ELEM * src.len());
+    extend_f32s(&mut out, src);
+    out
+}
+
+/// Iterate a slab's f32 values without allocating.
+pub fn f32_iter(bytes: &[u8]) -> impl Iterator<Item = f32> + '_ {
+    assert!(bytes.len() % ELEM == 0, "slab length {} not f32-aligned", bytes.len());
+    bytes
+        .chunks_exact(ELEM)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+}
+
+/// Decode a slab into a freshly allocated f32 vector.
+pub fn to_f32s(bytes: &[u8]) -> Vec<f32> {
+    f32_iter(bytes).collect()
+}
+
+/// `acc[i] += slab[i]` — gradient accumulation directly off the wire.
+pub fn add_assign_f32s(acc: &mut [f32], bytes: &[u8]) {
+    assert_eq!(acc.len() * ELEM, bytes.len(), "slab/accumulator length mismatch");
+    for (a, v) in acc.iter_mut().zip(f32_iter(bytes)) {
+        *a += v;
+    }
+}
+
+/// In-place paired transform over a slab: `slab[i] = f(slab[i], other[i])`
+/// through safe chunked f32 views (e.g. the server's SGD step).
+pub fn zip_map_f32s(bytes: &mut [u8], other: &[f32], mut f: impl FnMut(f32, f32) -> f32) {
+    assert_eq!(bytes.len(), ELEM * other.len(), "slab/operand length mismatch");
+    for (chunk, &o) in bytes.chunks_exact_mut(ELEM).zip(other) {
+        let v = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        chunk.copy_from_slice(&f(v, o).to_le_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let vals = [1.5f32, -2.25, 0.0, f32::MIN_POSITIVE, 3.4e38];
+        let slab = from_f32s(&vals);
+        assert_eq!(slab.len(), ELEM * vals.len());
+        assert_eq!(len_f32s(&slab), vals.len());
+        assert_eq!(to_f32s(&slab), vals);
+    }
+
+    #[test]
+    fn explicit_layout_is_little_endian() {
+        assert_eq!(from_f32s(&[1.0]), vec![0x00, 0x00, 0x80, 0x3f]);
+    }
+
+    #[test]
+    fn extend_appends() {
+        let mut slab = from_f32s(&[1.0]);
+        extend_f32s(&mut slab, &[2.0, 3.0]);
+        assert_eq!(to_f32s(&slab), vec![1.0, 2.0, 3.0]);
+    }
+
+    #[test]
+    fn accumulate() {
+        let mut acc = vec![1.0f32, 2.0];
+        add_assign_f32s(&mut acc, &from_f32s(&[0.5, -1.0]));
+        assert_eq!(acc, vec![1.5, 1.0]);
+    }
+
+    #[test]
+    fn zip_map_transforms_in_place() {
+        let mut slab = from_f32s(&[1.0, 2.0, 3.0]);
+        zip_map_f32s(&mut slab, &[1.0, -1.0, 0.0], |w, g| w - 0.5 * g);
+        assert_eq!(to_f32s(&slab), vec![0.5, 2.5, 3.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn misaligned_slab_panics() {
+        let _ = to_f32s(&[0u8, 1, 2]);
+    }
+}

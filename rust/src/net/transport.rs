@@ -1,24 +1,32 @@
 //! Framed message transport over TCP.
 //!
-//! Wire format: `u32 LE length` (of everything after it) + `u8 opcode` +
-//! payload. Payloads carry layer ranges and f32 tensor data; everything is
-//! little-endian and hand-serialized (no serde in the offline build).
+//! Wire format (specified in full in `docs/WIRE.md`): `u32 LE length` (of
+//! everything after it) + `u8 opcode` + payload. Tensor payloads are
+//! opaque little-endian f32 byte slabs ([`crate::net::slab`]) carried in
+//! [`Message::PullReply`] / [`Message::Push`], so encode/decode are bulk
+//! `extend_from_slice`/`copy_from_slice` operations — no per-element f32
+//! loops anywhere on the wire path. Connections keep per-direction scratch
+//! buffers, so steady-state send/recv performs no frame allocations.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
 
 use anyhow::{bail, Context, Result};
 
+/// Hard ceiling on a frame's payload size (corruption guard).
+const MAX_FRAME: usize = 1 << 30;
+
 /// Protocol messages between edge workers and parameter servers.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Worker → server: pull parameters of layers `[lo, hi]` for `iter`.
     Pull { iter: u64, lo: u32, hi: u32 },
-    /// Server → worker: the parameters, layer tensors concatenated
-    /// (weights then bias per layer, ascending).
-    PullReply { iter: u64, lo: u32, hi: u32, data: Vec<f32> },
-    /// Worker → server: push gradients of layers `[lo, hi]` for `iter`.
-    Push { iter: u64, lo: u32, hi: u32, data: Vec<f32> },
+    /// Server → worker: the parameters as one byte slab — each owned
+    /// layer's `w‖b` f32 data, little-endian, ascending layer order.
+    PullReply { iter: u64, lo: u32, hi: u32, data: Vec<u8> },
+    /// Worker → server: gradients of layers `[lo, hi]` for `iter`, as a
+    /// byte slab with the same layout as [`Message::PullReply`].
+    Push { iter: u64, lo: u32, hi: u32, data: Vec<u8> },
     /// Server → worker: push accepted.
     PushAck { iter: u64, lo: u32, hi: u32 },
     /// Worker → server: register with a worker id.
@@ -46,8 +54,8 @@ impl Message {
     pub fn wire_size(&self) -> usize {
         1 + match self {
             Message::Pull { .. } => 8 + 4 + 4,
-            Message::PullReply { data, .. } => 8 + 4 + 4 + 4 + 4 * data.len(),
-            Message::Push { data, .. } => 8 + 4 + 4 + 4 + 4 * data.len(),
+            Message::PullReply { data, .. } => 8 + 4 + 4 + 4 + data.len(),
+            Message::Push { data, .. } => 8 + 4 + 4 + 4 + data.len(),
             Message::PushAck { .. } => 8 + 4 + 4,
             Message::Hello { .. } => 4,
             Message::HelloAck { .. } => 4,
@@ -55,12 +63,16 @@ impl Message {
         }
     }
 
-    pub fn encode(&self) -> Vec<u8> {
-        let mut buf = Vec::with_capacity(4 + self.wire_size());
+    /// Encode the full frame (length prefix included) into a reusable
+    /// buffer. The buffer is cleared first; capacity is retained across
+    /// calls, so a warm buffer makes this allocation-free.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        buf.clear();
+        buf.reserve(4 + self.wire_size());
         buf.extend_from_slice(&(self.wire_size() as u32).to_le_bytes());
         buf.push(self.opcode());
         match self {
-            Message::Pull { iter, lo, hi } => {
+            Message::Pull { iter, lo, hi } | Message::PushAck { iter, lo, hi } => {
                 buf.extend_from_slice(&iter.to_le_bytes());
                 buf.extend_from_slice(&lo.to_le_bytes());
                 buf.extend_from_slice(&hi.to_le_bytes());
@@ -71,19 +83,18 @@ impl Message {
                 buf.extend_from_slice(&lo.to_le_bytes());
                 buf.extend_from_slice(&hi.to_le_bytes());
                 buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
-                for v in data {
-                    buf.extend_from_slice(&v.to_le_bytes());
-                }
-            }
-            Message::PushAck { iter, lo, hi } => {
-                buf.extend_from_slice(&iter.to_le_bytes());
-                buf.extend_from_slice(&lo.to_le_bytes());
-                buf.extend_from_slice(&hi.to_le_bytes());
+                buf.extend_from_slice(data);
             }
             Message::Hello { worker } => buf.extend_from_slice(&worker.to_le_bytes()),
             Message::HelloAck { workers } => buf.extend_from_slice(&workers.to_le_bytes()),
             Message::Shutdown => {}
         }
+    }
+
+    /// Encode into a fresh frame buffer.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.encode_into(&mut buf);
         buf
     }
 
@@ -95,13 +106,11 @@ impl Message {
             1 => Message::Pull { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
             2 => {
                 let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
-                let n = r.u32()? as usize;
-                Message::PullReply { iter, lo, hi, data: r.f32s(n)? }
+                Message::PullReply { iter, lo, hi, data: r.slab()? }
             }
             3 => {
                 let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
-                let n = r.u32()? as usize;
-                Message::Push { iter, lo, hi, data: r.f32s(n)? }
+                Message::Push { iter, lo, hi, data: r.slab()? }
             }
             4 => Message::PushAck { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
             5 => Message::Hello { worker: r.u32()? },
@@ -134,35 +143,41 @@ impl<'a> Reader<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        let raw = self.take(4 * n)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
+    /// Length-prefixed byte slab: one bulk copy, no per-element work.
+    fn slab(&mut self) -> Result<Vec<u8>> {
+        let n = self.u32()? as usize;
+        anyhow::ensure!(n % 4 == 0, "slab length {n} not f32-aligned");
+        Ok(self.take(n)?.to_vec())
     }
 }
 
 /// A framed, optionally shaped, connection.
+///
+/// Each direction owns a scratch buffer (the per-connection scratch pool):
+/// `send` encodes into `send_buf` and `recv` reads the frame into
+/// `recv_buf`, so steady-state traffic reuses warm capacity instead of
+/// allocating per message.
 pub struct Connection {
     stream: TcpStream,
     shaper: Option<crate::net::LinkShaper>,
+    send_buf: Vec<u8>,
+    recv_buf: Vec<u8>,
 }
 
 impl Connection {
     pub fn new(stream: TcpStream, shaper: Option<crate::net::LinkShaper>) -> Connection {
         stream.set_nodelay(true).ok();
-        Connection { stream, shaper }
+        Connection { stream, shaper, send_buf: Vec::new(), recv_buf: Vec::new() }
     }
 
     /// Send one message. When shaped, sleeps for the emulated serialization
     /// + latency time before the bytes hit the socket.
     pub fn send(&mut self, msg: &Message) -> Result<()> {
-        let buf = msg.encode();
+        msg.encode_into(&mut self.send_buf);
         if let Some(shaper) = &self.shaper {
-            shaper.delay_for(buf.len());
+            shaper.delay_for(self.send_buf.len());
         }
-        self.stream.write_all(&buf).context("send")?;
+        self.stream.write_all(&self.send_buf).context("send")?;
         Ok(())
     }
 
@@ -171,16 +186,18 @@ impl Connection {
         let mut len = [0u8; 4];
         self.stream.read_exact(&mut len).context("recv length")?;
         let len = u32::from_le_bytes(len) as usize;
-        anyhow::ensure!(len <= 1 << 30, "frame too large: {len}");
-        let mut payload = vec![0u8; len];
-        self.stream.read_exact(&mut payload).context("recv payload")?;
-        Message::decode(&payload)
+        anyhow::ensure!(len <= MAX_FRAME, "frame too large: {len}");
+        self.recv_buf.resize(len, 0);
+        self.stream.read_exact(&mut self.recv_buf).context("recv payload")?;
+        Message::decode(&self.recv_buf)
     }
 
     pub fn try_clone(&self) -> Result<Connection> {
         Ok(Connection {
             stream: self.stream.try_clone()?,
             shaper: self.shaper.clone(),
+            send_buf: Vec::new(),
+            recv_buf: Vec::new(),
         })
     }
 }
@@ -188,11 +205,13 @@ impl Connection {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::net::slab;
 
     fn roundtrip(m: Message) {
         let enc = m.encode();
         let len = u32::from_le_bytes(enc[..4].try_into().unwrap()) as usize;
         assert_eq!(len, enc.len() - 4);
+        assert_eq!(len, m.wire_size());
         assert_eq!(Message::decode(&enc[4..]).unwrap(), m);
     }
 
@@ -203,13 +222,24 @@ mod tests {
             iter: 7,
             lo: 1,
             hi: 3,
-            data: vec![1.5, -2.0, 0.0],
+            data: slab::from_f32s(&[1.5, -2.0, 0.0]),
         });
-        roundtrip(Message::Push { iter: 0, lo: 6, hi: 6, data: vec![] });
+        roundtrip(Message::Push { iter: 0, lo: 6, hi: 6, data: Vec::new() });
         roundtrip(Message::PushAck { iter: 1, lo: 2, hi: 4 });
         roundtrip(Message::Hello { worker: 3 });
         roundtrip(Message::HelloAck { workers: 8 });
         roundtrip(Message::Shutdown);
+    }
+
+    #[test]
+    fn slab_payload_survives_the_wire_bit_exactly() {
+        let vals: Vec<f32> = (0..1000).map(|i| (i as f32).sin() * 1e3).collect();
+        let m = Message::Push { iter: 1, lo: 0, hi: 9, data: slab::from_f32s(&vals) };
+        let enc = m.encode();
+        match Message::decode(&enc[4..]).unwrap() {
+            Message::Push { data, .. } => assert_eq!(slab::to_f32s(&data), vals),
+            m => panic!("{m:?}"),
+        }
     }
 
     #[test]
@@ -224,6 +254,35 @@ mod tests {
     }
 
     #[test]
+    fn decode_rejects_misaligned_slab() {
+        // A Push whose slab-length field claims 3 bytes: not f32-aligned.
+        let mut enc = Message::Push { iter: 0, lo: 0, hi: 0, data: Vec::new() }.encode();
+        let len_field = 4 + 1 + 8 + 4 + 4; // prefix + op + iter + lo + hi
+        enc[len_field..len_field + 4].copy_from_slice(&3u32.to_le_bytes());
+        enc.extend_from_slice(&[0, 0, 0]);
+        let frame_len = (enc.len() - 4) as u32;
+        enc[..4].copy_from_slice(&frame_len.to_le_bytes());
+        assert!(Message::decode(&enc[4..]).is_err());
+    }
+
+    #[test]
+    fn encode_into_reuses_capacity() {
+        let m = Message::PullReply {
+            iter: 1,
+            lo: 0,
+            hi: 0,
+            data: slab::from_f32s(&[0.5; 256]),
+        };
+        let mut buf = Vec::new();
+        m.encode_into(&mut buf);
+        let cap = buf.capacity();
+        let first = buf.clone();
+        m.encode_into(&mut buf);
+        assert_eq!(buf, first);
+        assert_eq!(buf.capacity(), cap, "warm re-encode must not reallocate");
+    }
+
+    #[test]
     fn tcp_roundtrip() {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -235,7 +294,12 @@ mod tests {
         });
         let mut conn =
             Connection::new(TcpStream::connect(addr).unwrap(), None);
-        let msg = Message::Push { iter: 42, lo: 2, hi: 5, data: vec![3.25; 1000] };
+        let msg = Message::Push {
+            iter: 42,
+            lo: 2,
+            hi: 5,
+            data: slab::from_f32s(&[3.25; 1000]),
+        };
         conn.send(&msg).unwrap();
         assert_eq!(conn.recv().unwrap(), msg);
         t.join().unwrap();

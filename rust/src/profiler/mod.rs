@@ -11,6 +11,8 @@
 //! * an on/off switch (Table II measures its overhead) and the once-per-
 //!   epoch re-scheduling policy (Section IV-C).
 
+use std::collections::VecDeque;
+
 use crate::sched::CostVectors;
 use crate::util::stats::linear_fit;
 
@@ -42,8 +44,10 @@ impl Ewma {
 /// Transfer-time samples for one direction (pull or push).
 #[derive(Debug, Clone, Default)]
 struct TransferSamples {
-    /// (bytes, ms) per completed segment; bounded ring.
-    samples: Vec<(f64, f64)>,
+    /// (bytes, ms) per completed segment; bounded ring buffer — eviction
+    /// is O(1) (`pop_front`), keeping `record` constant-time on the
+    /// worker's hot path.
+    samples: VecDeque<(f64, f64)>,
 }
 
 const MAX_SAMPLES: usize = 512;
@@ -51,9 +55,9 @@ const MAX_SAMPLES: usize = 512;
 impl TransferSamples {
     fn record(&mut self, bytes: usize, ms: f64) {
         if self.samples.len() >= MAX_SAMPLES {
-            self.samples.remove(0);
+            self.samples.pop_front();
         }
-        self.samples.push((bytes as f64, ms));
+        self.samples.push_back((bytes as f64, ms));
     }
 
     /// (Δt ms, ms-per-byte). Falls back to attributing everything to rate
@@ -235,6 +239,26 @@ mod tests {
         p.record_pull(100, 1.0);
         p.record_push(100, 1.0);
         assert!(!p.ready());
+    }
+
+    #[test]
+    fn sample_window_is_bounded_and_evicts_oldest() {
+        let mut s = TransferSamples::default();
+        // Old regime: constant 100 ms; then a new regime at 1 ms. Once the
+        // window is saturated the old samples must age out.
+        for _ in 0..MAX_SAMPLES {
+            s.record(1000, 100.0);
+        }
+        assert_eq!(s.samples.len(), MAX_SAMPLES);
+        for _ in 0..MAX_SAMPLES {
+            s.record(1000, 1.0);
+        }
+        assert_eq!(s.samples.len(), MAX_SAMPLES);
+        assert!(s.samples.iter().all(|&(_, ms)| ms == 1.0), "stale samples kept");
+        // Uniform sizes ⇒ the fit attributes the (new) mean entirely to Δt.
+        let (dt, rate) = s.fit().unwrap();
+        assert!((dt - 1.0).abs() < 1e-9);
+        assert_eq!(rate, 0.0);
     }
 
     #[test]

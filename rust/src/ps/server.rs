@@ -4,16 +4,21 @@
 //! `Pull`s (blocking until the layer's version reaches the requested
 //! iteration — this is the BSP clock), accumulates `Push`ed gradients, and
 //! applies averaged SGD once every registered worker has contributed.
+//!
+//! Parameters live as little-endian f32 byte slabs — the exact bytes a
+//! `PullReply` carries — so serving a pull is a bulk `extend_from_slice`
+//! with zero f32 conversions; gradient accumulation and SGD read/write the
+//! slab through safe 4-byte chunked views (`net::slab`).
 
 use std::collections::HashMap;
-use std::net::{TcpListener, TcpStream};
+use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::net::{Connection, Message, ShaperSpec};
+use crate::net::{slab, Connection, Message, ShaperSpec};
 
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
@@ -24,26 +29,48 @@ pub struct ServerConfig {
 }
 
 struct LayerSlot {
-    /// Flat parameters, weights then bias.
-    params: Vec<f32>,
+    /// Flat parameters (weights then bias) as a little-endian f32 byte
+    /// slab — wire-ready for `PullReply` without conversion.
+    params: Vec<u8>,
     /// Number of iterations already applied; a `Pull { iter }` waits until
     /// `version >= iter`.
     version: u64,
+    /// f32 accumulator for pushed gradient slabs.
     grad_sum: Vec<f32>,
     grad_count: usize,
+}
+
+impl LayerSlot {
+    /// Averaged SGD directly over the slab (`w -= scale * g` through
+    /// `slab`'s chunked f32 views); resets the accumulator.
+    fn apply_sgd(&mut self, scale: f32) {
+        slab::zip_map_f32s(&mut self.params, &self.grad_sum, |w, g| w - scale * g);
+        self.grad_sum.iter_mut().for_each(|g| *g = 0.0);
+        self.grad_count = 0;
+    }
 }
 
 struct Shared {
     cfg: ServerConfig,
     /// layer id -> guarded slot (only layers this shard owns).
     slots: HashMap<usize, (Mutex<LayerSlot>, Condvar)>,
+    /// layer id -> slab size in bytes (immutable; lets pulls pre-size
+    /// their reply buffer without touching the slot locks).
+    layer_bytes: HashMap<usize, usize>,
     shutting_down: AtomicBool,
     connected: AtomicU32,
+    /// Pulls currently parked on a version condvar (observability: lets
+    /// tests and shutdown reason about parked handlers without sleeping).
+    pull_waiters: AtomicU32,
+    /// Live worker sockets (slot per accepted connection; a handler clears
+    /// its slot on exit so fds don't leak across reconnects). Shut down on
+    /// drain so blocked `recv`s return deterministically instead of
+    /// waiting on peers.
+    conns: Mutex<Vec<Option<TcpStream>>>,
 }
 
 /// A running shard: background accept loop + handler threads.
 pub struct ParamServer {
-    #[allow(dead_code)]
     shared: Arc<Shared>,
     listener_thread: Option<JoinHandle<()>>,
     addr: std::net::SocketAddr,
@@ -70,6 +97,8 @@ impl ParamServer {
     ) -> Result<ParamServer> {
         let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
         let addr = listener.local_addr()?;
+        let layer_bytes: HashMap<usize, usize> =
+            layers.iter().map(|(&l, p)| (l, slab::ELEM * p.len())).collect();
         let slots = layers
             .into_iter()
             .map(|(l, params)| {
@@ -78,7 +107,7 @@ impl ParamServer {
                     l,
                     (
                         Mutex::new(LayerSlot {
-                            params,
+                            params: slab::from_f32s(&params),
                             version: 0,
                             grad_sum: vec![0.0; n],
                             grad_count: 0,
@@ -91,8 +120,11 @@ impl ParamServer {
         let shared = Arc::new(Shared {
             cfg,
             slots,
+            layer_bytes,
             shutting_down: AtomicBool::new(false),
             connected: AtomicU32::new(0),
+            pull_waiters: AtomicU32::new(0),
+            conns: Mutex::new(Vec::new()),
         });
         let shared2 = shared.clone();
         let listener_thread = std::thread::Builder::new()
@@ -108,22 +140,36 @@ impl ParamServer {
     /// Read back the current parameters of a layer (test/eval support).
     pub fn snapshot(&self, layer: usize) -> Option<Vec<f32>> {
         let (m, _) = self.shared.slots.get(&layer)?;
-        Some(m.lock().unwrap().params.clone())
+        Some(slab::to_f32s(&m.lock().unwrap().params))
     }
 
-    /// Stop accepting and unblock handler threads.
+    /// Number of pulls currently parked waiting for a version bump.
+    pub fn pull_waiters(&self) -> u32 {
+        self.shared.pull_waiters.load(Ordering::SeqCst)
+    }
+
+    /// Drain and stop: wake parked pulls, kill live worker sockets so
+    /// blocked reads return, then join the accept loop (which joins every
+    /// handler). Condition-based — no timing assumptions.
     pub fn shutdown(&mut self) {
         self.shared.shutting_down.store(true, Ordering::SeqCst);
-        // Wake the accept loop with a dummy connection.
-        let _ = TcpStream::connect(self.addr);
-        if let Some(t) = self.listener_thread.take() {
-            let _ = t.join();
-        }
-        // Wake any pull waiting on a version bump.
+        // Wake every parked pull so its handler observes the flag.
         for (m, cv) in self.shared.slots.values() {
             let _guard = m.lock().unwrap();
             cv.notify_all();
-            drop(_guard);
+        }
+        // Kill live worker connections: blocked recv()s fail immediately
+        // instead of waiting for the peer to hang up.
+        for slot in self.shared.conns.lock().unwrap().iter_mut() {
+            if let Some(stream) = slot.take() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        // Unblock the accept loop with a dummy connection, then join it;
+        // it joins the handler threads, so return == fully drained.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.listener_thread.take() {
+            let _ = t.join();
         }
     }
 }
@@ -138,9 +184,39 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
     let mut handlers = Vec::new();
     loop {
         let Ok((stream, _)) = listener.accept() else { break };
+        // Every handled connection MUST be in the kill registry, or a
+        // quiet peer could block shutdown's join forever; refuse the
+        // connection if the registry clone cannot be made.
+        let Ok(dup) = stream.try_clone() else {
+            drop(stream);
+            continue;
+        };
+        // Register BEFORE checking the flag: shutdown() sets the flag and
+        // then drains the registry, so either the drain sees this entry
+        // (and kills it), or the flag check below observes true (and this
+        // arm kills it) — no window where an unregistered handler can
+        // block shutdown's join. Freed slots are reused so a long-lived
+        // shard doesn't grow the registry per reconnect.
+        let conn_id = {
+            let mut conns = shared.conns.lock().unwrap();
+            match conns.iter_mut().position(|slot| slot.is_none()) {
+                Some(i) => {
+                    conns[i] = Some(dup);
+                    i
+                }
+                None => {
+                    conns.push(Some(dup));
+                    conns.len() - 1
+                }
+            }
+        };
         if shared.shutting_down.load(Ordering::SeqCst) {
+            let _ = stream.shutdown(Shutdown::Both);
             break;
         }
+        // Reap finished handler threads so the handle list stays bounded
+        // by the number of *live* connections.
+        handlers.retain(|h: &std::thread::JoinHandle<()>| !h.is_finished());
         let shared = shared.clone();
         let shaper = shaper.map(|s| s.build());
         handlers.push(std::thread::spawn(move || {
@@ -148,6 +224,8 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
             if let Err(e) = handle_conn(conn, &shared) {
                 crate::debug!("ps", "handler exit: {e:#}");
             }
+            // Free the registry slot (drops the duplicate fd) for reuse.
+            shared.conns.lock().unwrap()[conn_id] = None;
         }));
     }
     for h in handlers {
@@ -159,7 +237,7 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
     loop {
         let msg = match conn.recv() {
             Ok(m) => m,
-            // Peer hung up: normal teardown.
+            // Peer hung up (or shutdown killed the socket): normal teardown.
             Err(_) => return Ok(()),
         };
         match msg {
@@ -170,17 +248,24 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
                 })?;
             }
             Message::Pull { iter, lo, hi } => {
-                let mut data = Vec::new();
+                // Pre-size from the immutable size map: one allocation,
+                // then pure slab appends under the slot locks.
+                let cap: usize = (lo as usize..=hi as usize)
+                    .filter_map(|l| shared.layer_bytes.get(&l))
+                    .sum();
+                let mut data = Vec::with_capacity(cap);
                 for l in lo as usize..=hi as usize {
                     let Some((m, cv)) = shared.slots.get(&l) else { continue };
                     let mut slot = m.lock().unwrap();
                     while slot.version < iter
                         && !shared.shutting_down.load(Ordering::SeqCst)
                     {
-                        let (s, _timeout) = cv
-                            .wait_timeout(slot, std::time::Duration::from_millis(200))
-                            .unwrap();
-                        slot = s;
+                        // Condition-based park: woken by the push that
+                        // advances the version, or by shutdown.
+                        shared.pull_waiters.fetch_add(1, Ordering::SeqCst);
+                        let woken = cv.wait(slot).unwrap();
+                        shared.pull_waiters.fetch_sub(1, Ordering::SeqCst);
+                        slot = woken;
                     }
                     data.extend_from_slice(&slot.params);
                 }
@@ -196,23 +281,15 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
                         off + n <= data.len(),
                         "push payload too small for layers {lo}..={hi}"
                     );
-                    for (g, d) in slot.grad_sum.iter_mut().zip(&data[off..off + n]) {
-                        *g += d;
-                    }
+                    // Accumulate straight off the wire slab.
+                    slab::add_assign_f32s(&mut slot.grad_sum, &data[off..off + n]);
                     off += n;
                     slot.grad_count += 1;
                     if slot.grad_count == shared.cfg.workers {
                         // Averaged SGD, then advance the BSP clock.
                         let scale = shared.cfg.lr / shared.cfg.workers as f32;
-                        // Split borrows: update params from grad_sum.
-                        let LayerSlot { params, grad_sum, version, grad_count } =
-                            &mut *slot;
-                        for (w, g) in params.iter_mut().zip(grad_sum.iter()) {
-                            *w -= scale * *g;
-                        }
-                        grad_sum.iter_mut().for_each(|g| *g = 0.0);
-                        *grad_count = 0;
-                        *version = iter + 1;
+                        slot.apply_sgd(scale);
+                        slot.version = iter + 1;
                         cv.notify_all();
                     }
                 }
@@ -228,6 +305,7 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::{Duration, Instant};
 
     fn connect(addr: std::net::SocketAddr) -> Connection {
         Connection::new(TcpStream::connect(addr).unwrap(), None)
@@ -240,13 +318,25 @@ mod tests {
         ParamServer::start(ServerConfig { workers, lr: 0.5 }, layers, None).unwrap()
     }
 
+    /// Poll a condition with a hard deadline — condition-based waiting
+    /// without the old fixed-sleep timing assumptions.
+    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
     #[test]
     fn pull_initial_params() {
         let srv = start_two_layer(1);
         let mut c = connect(srv.handle().addr);
         c.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
         match c.recv().unwrap() {
-            Message::PullReply { data, .. } => assert_eq!(data, vec![1.0, 2.0, 10.0]),
+            Message::PullReply { data, .. } => {
+                assert_eq!(slab::to_f32s(&data), vec![1.0, 2.0, 10.0])
+            }
             m => panic!("{m:?}"),
         }
     }
@@ -257,11 +347,23 @@ mod tests {
         let mut a = connect(srv.handle().addr);
         let mut b = connect(srv.handle().addr);
         // Worker A pushes grad [2, 0] for layer 0; worker B pushes [0, 4].
-        a.send(&Message::Push { iter: 0, lo: 0, hi: 0, data: vec![2.0, 0.0] }).unwrap();
+        a.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 0,
+            data: slab::from_f32s(&[2.0, 0.0]),
+        })
+        .unwrap();
         assert!(matches!(a.recv().unwrap(), Message::PushAck { .. }));
         // Not applied yet (1 of 2 workers).
         assert_eq!(srv.snapshot(0).unwrap(), vec![1.0, 2.0]);
-        b.send(&Message::Push { iter: 0, lo: 0, hi: 0, data: vec![0.0, 4.0] }).unwrap();
+        b.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 0,
+            data: slab::from_f32s(&[0.0, 4.0]),
+        })
+        .unwrap();
         assert!(matches!(b.recv().unwrap(), Message::PushAck { .. }));
         // w -= 0.5 * avg = 0.5*[1,2] ⇒ [0.5, 1.0].
         assert_eq!(srv.snapshot(0).unwrap(), vec![0.5, 1.0]);
@@ -275,20 +377,46 @@ mod tests {
             let mut c = connect(addr);
             // iteration 1 params are only available after the iter-0 push.
             c.send(&Message::Pull { iter: 1, lo: 0, hi: 0 }).unwrap();
-            let t0 = std::time::Instant::now();
-            let reply = c.recv().unwrap();
-            (t0.elapsed(), reply)
+            c.recv().unwrap()
         });
-        std::thread::sleep(std::time::Duration::from_millis(120));
+        // Condition-based: wait until the server has actually parked the
+        // pull on the version condvar (no fixed sleeps, no timing asserts).
+        wait_until("pull to park", || srv.pull_waiters() > 0);
         let mut p = connect(addr);
-        p.send(&Message::Push { iter: 0, lo: 0, hi: 0, data: vec![2.0, 2.0] }).unwrap();
+        p.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 0,
+            data: slab::from_f32s(&[2.0, 2.0]),
+        })
+        .unwrap();
         p.recv().unwrap();
-        let (elapsed, reply) = t.join().unwrap();
-        assert!(elapsed.as_millis() >= 100, "pull did not block: {elapsed:?}");
-        match reply {
-            Message::PullReply { data, .. } => assert_eq!(data, vec![0.0, 1.0]),
+        match t.join().unwrap() {
+            Message::PullReply { data, .. } => {
+                assert_eq!(slab::to_f32s(&data), vec![0.0, 1.0])
+            }
             m => panic!("{m:?}"),
         }
+    }
+
+    #[test]
+    fn shutdown_drains_parked_pulls_deterministically() {
+        let mut srv = start_two_layer(1);
+        let addr = srv.handle().addr;
+        let t = std::thread::spawn(move || {
+            let mut c = connect(addr);
+            // A pull that can never be satisfied: it parks forever.
+            c.send(&Message::Pull { iter: 99, lo: 0, hi: 1 }).unwrap();
+            c.recv()
+        });
+        wait_until("pull to park", || srv.pull_waiters() > 0);
+        // Shutdown must wake the parked handler and join it — if draining
+        // regresses, this join hangs and the suite times out.
+        srv.shutdown();
+        assert_eq!(srv.pull_waiters(), 0, "handlers drained");
+        // The client either got a (stale) reply or a dead socket — but the
+        // thread must have been released either way.
+        let _ = t.join().unwrap();
     }
 
     #[test]
@@ -298,7 +426,7 @@ mod tests {
         let mut c = connect(srv.handle().addr);
         c.send(&Message::Pull { iter: 0, lo: 0, hi: 5 }).unwrap();
         match c.recv().unwrap() {
-            Message::PullReply { data, .. } => assert_eq!(data.len(), 3),
+            Message::PullReply { data, .. } => assert_eq!(slab::to_f32s(&data).len(), 3),
             m => panic!("{m:?}"),
         }
     }

@@ -2,13 +2,34 @@
 //!
 //! Layers are striped round-robin across shards (the paper's testbed runs
 //! 4 PS instances). A transmission segment `[lo, hi]` therefore fans out
-//! into at most `min(servers, hi-lo+1)` per-server sub-requests.
+//! into at most `min(servers, hi-lo+1)` per-server sub-requests; under
+//! round-robin striping each server's share of a contiguous range is an
+//! arithmetic progression, which [`ShardMap::sub_requests`] exploits to
+//! describe the fan-out without allocating per-layer vectors on the
+//! worker's hot path.
 
 /// Round-robin striping of `depth` layers over `servers` shards.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ShardMap {
     pub servers: usize,
     pub depth: usize,
+}
+
+/// One server's share of an inclusive layer range: the layers
+/// `start, start + step, …` (`count` of them), all owned by `server`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubRange {
+    pub server: usize,
+    pub start: usize,
+    pub step: usize,
+    pub count: usize,
+}
+
+impl SubRange {
+    /// The layers of this sub-request, ascending.
+    pub fn layers(&self) -> impl Iterator<Item = usize> + '_ {
+        (0..self.count).map(move |k| self.start + k * self.step)
+    }
 }
 
 impl ShardMap {
@@ -28,21 +49,28 @@ impl ShardMap {
         (0..self.depth).filter(|l| self.owner(*l) == server).collect()
     }
 
-    /// Split an inclusive 0-based layer range into per-server layer lists,
+    /// The per-server sub-requests of an inclusive 0-based layer range,
     /// ordered by first layer (the order sub-requests are issued in).
-    pub fn split_range(&self, lo: usize, hi: usize) -> Vec<(usize, Vec<usize>)> {
+    /// Allocation-free: each share is an arithmetic progression.
+    pub fn sub_requests(self, lo: usize, hi: usize) -> impl Iterator<Item = SubRange> {
         debug_assert!(lo <= hi && hi < self.depth);
-        let mut per: Vec<Vec<usize>> = vec![Vec::new(); self.servers];
-        for l in lo..=hi {
-            per[self.owner(l)].push(l);
-        }
-        let mut out: Vec<(usize, Vec<usize>)> = per
-            .into_iter()
-            .enumerate()
-            .filter(|(_, v)| !v.is_empty())
-            .collect();
-        out.sort_by_key(|(_, v)| v[0]);
-        out
+        let fan_out = (hi - lo + 1).min(self.servers);
+        (lo..lo + fan_out).map(move |start| SubRange {
+            server: self.owner(start),
+            start,
+            step: self.servers,
+            count: (hi - start) / self.servers + 1,
+        })
+    }
+
+    /// Split an inclusive 0-based layer range into per-server layer lists,
+    /// ordered by first layer. Allocating variant of
+    /// [`ShardMap::sub_requests`], kept for callers that want materialized
+    /// lists.
+    pub fn split_range(&self, lo: usize, hi: usize) -> Vec<(usize, Vec<usize>)> {
+        self.sub_requests(lo, hi)
+            .map(|sub| (sub.server, sub.layers().collect()))
+            .collect()
     }
 }
 
@@ -73,10 +101,64 @@ mod tests {
     }
 
     #[test]
+    fn split_is_ordered_by_first_layer() {
+        let m = ShardMap::new(4, 16);
+        let parts = m.split_range(3, 11);
+        let firsts: Vec<usize> = parts.iter().map(|(_, v)| v[0]).collect();
+        let mut sorted = firsts.clone();
+        sorted.sort_unstable();
+        assert_eq!(firsts, sorted);
+    }
+
+    /// First-principles oracle for the arithmetic-progression fan-out
+    /// (`split_range` is built on `sub_requests`, so it cannot serve as the
+    /// oracle itself): every sub-request's layers must belong to its
+    /// server per `owner()`, the union must cover `[lo, hi]` exactly once,
+    /// and sub-requests must be ordered by first layer.
+    #[test]
+    fn sub_requests_cover_ranges_exactly() {
+        for servers in 1..=6 {
+            for depth in 1..=13 {
+                let m = ShardMap::new(servers, depth);
+                for lo in 0..depth {
+                    for hi in lo..depth {
+                        let ctx = format!("servers={servers} depth={depth} [{lo},{hi}]");
+                        let mut covered = Vec::new();
+                        let mut prev_first = None;
+                        for sub in m.sub_requests(lo, hi) {
+                            let layers: Vec<usize> = sub.layers().collect();
+                            assert!(!layers.is_empty(), "{ctx}: empty sub-request");
+                            assert!(
+                                prev_first < Some(layers[0]),
+                                "{ctx}: sub-requests out of order"
+                            );
+                            prev_first = Some(layers[0]);
+                            for &l in &layers {
+                                assert_eq!(m.owner(l), sub.server, "{ctx}: layer {l}");
+                            }
+                            covered.extend(layers);
+                        }
+                        covered.sort_unstable();
+                        assert_eq!(
+                            covered,
+                            (lo..=hi).collect::<Vec<_>>(),
+                            "{ctx}: coverage"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn single_server_owns_everything() {
         let m = ShardMap::new(1, 6);
         assert_eq!(m.owned_by(0).len(), 6);
         assert_eq!(m.split_range(0, 5), vec![(0, (0..6).collect())]);
+        let subs: Vec<SubRange> = m.sub_requests(0, 5).collect();
+        assert_eq!(subs.len(), 1);
+        assert_eq!(subs[0].count, 6);
+        assert_eq!(subs[0].step, 1);
     }
 
     #[test]
@@ -84,5 +166,6 @@ mod tests {
         let m = ShardMap::new(8, 3);
         assert!(m.owned_by(5).is_empty());
         assert_eq!(m.split_range(0, 2).len(), 3);
+        assert_eq!(m.sub_requests(0, 2).count(), 3);
     }
 }

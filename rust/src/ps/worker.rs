@@ -7,10 +7,17 @@
 //! main thread continues backward compute. That is exactly the execution
 //! model of Fig. 2(c) / Fig. 3, with the scheduler deciding the segment
 //! boundaries at run time from profiled cost vectors (Section IV).
+//!
+//! Tensor traffic stays in wire form (little-endian byte slabs, see
+//! `docs/WIRE.md`) end to end: the puller slices reply slabs into pre-sized
+//! per-layer byte buffers, the backward path encodes each layer's gradient
+//! slab exactly once, and the pusher extracts per-shard payloads by byte
+//! offset — no intermediate `Vec<f32>` allocations anywhere between the
+//! socket and the runtime tensors.
 
 use std::net::TcpStream;
 use std::sync::mpsc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -59,16 +66,39 @@ pub struct EdgeWorker {
     plan: SchedulePlan,
 }
 
+/// Bounded retry-with-backoff for the worker→shard TCP connect: workers
+/// and servers boot concurrently, so a worker may dial a shard whose
+/// accept loop is not listening yet. Exponential backoff from 1 ms,
+/// capped at 100 ms per attempt and ~5 s overall.
+fn connect_with_retry(addr: &std::net::SocketAddr) -> Result<TcpStream> {
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let mut backoff = Duration::from_millis(1);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(stream) => return Ok(stream),
+            Err(e) => {
+                if Instant::now() + backoff >= deadline {
+                    return Err(e).with_context(|| {
+                        format!("connecting to shard {addr} (retries exhausted)")
+                    });
+                }
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
 impl EdgeWorker {
-    /// Load the runtime, connect to all shards, register.
+    /// Load the runtime, connect to all shards (with bounded retry — the
+    /// server accept loop may still be coming up), register.
     pub fn connect(cfg: WorkerConfig) -> Result<EdgeWorker> {
         let runtime = RuntimeClient::load(&cfg.artifacts_dir)?;
         let depth = runtime.manifest.depth();
         let shard = ShardMap::new(cfg.server_addrs.len(), depth);
         let mut conns = Vec::with_capacity(cfg.server_addrs.len());
         for addr in &cfg.server_addrs {
-            let stream = TcpStream::connect(addr)
-                .with_context(|| format!("connecting to shard {addr}"))?;
+            let stream = connect_with_retry(addr)?;
             let mut conn = Connection::new(stream, cfg.shaper.clone());
             conn.send(&Message::Hello { worker: cfg.id as u32 })?;
             match conn.recv()? {
@@ -100,10 +130,10 @@ impl EdgeWorker {
         &self.plan
     }
 
-    /// Flat `w‖b` sizes per layer.
-    fn layer_len(&self, l: usize) -> usize {
+    /// Flat `w‖b` slab size of a layer, in bytes.
+    fn layer_bytes(&self, l: usize) -> usize {
         let a = &self.runtime.manifest.layers[l];
-        a.w_count() + a.b_count()
+        4 * (a.w_count() + a.b_count())
     }
 
     /// Re-run the scheduler from the latest profile; returns scheduling
@@ -164,43 +194,53 @@ impl EdgeWorker {
             .map(|&(hi, lo)| (hi - 1, lo - 1))
             .collect();
 
+        // Byte sizes and prefix offsets of the per-layer slabs: slicing a
+        // segment blob is pure offset arithmetic.
+        let layer_bytes: Vec<usize> = (0..depth).map(|l| self.layer_bytes(l)).collect();
+        let mut byte_off = Vec::with_capacity(depth + 1);
+        byte_off.push(0usize);
+        for l in 0..depth {
+            byte_off.push(byte_off[l] + layer_bytes[l]);
+        }
+
         // ---- Forward: puller thread streams segments; main computes. ----
-        let (param_tx, param_rx) = mpsc::channel::<(usize, Vec<f32>)>();
+        let (param_tx, param_rx) = mpsc::channel::<(usize, Vec<u8>)>();
         let (stat_tx, stat_rx) = mpsc::channel::<(usize, f64)>();
         let mut puller_conns = Vec::new();
         for c in &self.conns {
             puller_conns.push(c.try_clone()?);
         }
         let shard = self.shard;
-        let layer_lens: Vec<usize> = (0..depth).map(|l| self.layer_len(l)).collect();
-        let layer_lens_puller = layer_lens.clone();
+        let layer_bytes_puller = layer_bytes.clone();
         let segs = fwd_segs.clone();
         let puller = std::thread::Builder::new()
             .name(format!("puller-{}", self.cfg.id))
             .spawn(move || -> Result<()> {
                 for (lo, hi) in segs {
                     let t0 = Instant::now();
-                    let mut per_layer: Vec<Option<Vec<f32>>> = vec![None; hi - lo + 1];
-                    for (srv, layers) in shard.split_range(lo, hi) {
-                        puller_conns[srv].send(&Message::Pull {
+                    let mut per_layer: Vec<Option<Vec<u8>>> = vec![None; hi - lo + 1];
+                    for sub in shard.sub_requests(lo, hi) {
+                        puller_conns[sub.server].send(&Message::Pull {
                             iter,
                             lo: lo as u32,
                             hi: hi as u32,
                         })?;
-                        let reply = puller_conns[srv].recv()?;
-                        let Message::PullReply { data, .. } = reply else {
-                            anyhow::bail!("bad pull reply: {reply:?}");
+                        let data = match puller_conns[sub.server].recv()? {
+                            Message::PullReply { data, .. } => data,
+                            m => anyhow::bail!("bad pull reply: {m:?}"),
                         };
+                        // The reply concatenates this shard's owned layers
+                        // ascending; slice it into per-layer slabs.
                         let mut off = 0;
-                        for l in layers {
-                            let n = layer_lens_puller[l];
+                        for l in sub.layers() {
+                            let n = layer_bytes_puller[l];
                             anyhow::ensure!(off + n <= data.len(), "short pull reply");
                             per_layer[l - lo] = Some(data[off..off + n].to_vec());
                             off += n;
                         }
                     }
                     let ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let bytes: usize = (lo..=hi).map(|l| 4 * layer_lens_puller[l]).sum();
+                    let bytes: usize = (lo..=hi).map(|l| layer_bytes_puller[l]).sum();
                     let _ = stat_tx.send((bytes, ms));
                     for (off, p) in per_layer.into_iter().enumerate() {
                         let p = p.context("server returned no data for layer")?;
@@ -218,7 +258,7 @@ impl EdgeWorker {
                 let (got, flat) = param_rx
                     .recv()
                     .map_err(|_| anyhow::anyhow!("puller died before layer {l}"))?;
-                params[got] = Some(self.split_params(got, flat)?);
+                params[got] = Some(self.split_params(got, &flat)?);
             }
             let (w, b) = params[l].as_ref().unwrap();
             let t0 = Instant::now();
@@ -240,50 +280,54 @@ impl EdgeWorker {
         let top1 = batch_top1(logits, onehot);
 
         // ---- Backward: main computes; pusher thread flushes segments. ----
-        let (grad_tx, grad_rx) = mpsc::channel::<(usize, usize, Vec<f32>)>();
+        let (grad_tx, grad_rx) = mpsc::channel::<(usize, usize, Vec<u8>)>();
         let mut pusher_conns = Vec::new();
         for c in &self.conns {
             pusher_conns.push(c.try_clone()?);
         }
-        let layer_lens2 = layer_lens.clone();
+        let layer_bytes_pusher = layer_bytes.clone();
+        let byte_off_pusher = byte_off.clone();
         let pusher = std::thread::Builder::new()
             .name(format!("pusher-{}", self.cfg.id))
             .spawn(move || -> Result<Vec<(usize, f64)>> {
                 let mut stats = Vec::new();
-                // Receives one message per completed segment: (lo, hi, flat
-                // grads of layers lo..=hi ascending).
+                // Receives one message per completed segment: (lo, hi, slab
+                // of layers lo..=hi ascending).
                 while let Ok((lo, hi, data)) = grad_rx.recv() {
                     let t0 = Instant::now();
-                    for (srv, layers) in shard.split_range(lo, hi) {
-                        // Extract this shard's layers from the segment blob.
-                        let mut payload = Vec::new();
-                        for &l in &layers {
-                            let mut off = 0;
-                            for ll in lo..l {
-                                off += layer_lens2[ll];
-                            }
-                            payload.extend_from_slice(&data[off..off + layer_lens2[l]]);
+                    for sub in shard.sub_requests(lo, hi) {
+                        // Extract this shard's layers from the segment
+                        // slab: pre-sized buffer, bulk byte copies indexed
+                        // by the prefix offsets.
+                        let nbytes: usize =
+                            sub.layers().map(|l| layer_bytes_pusher[l]).sum();
+                        let mut payload = Vec::with_capacity(nbytes);
+                        for l in sub.layers() {
+                            let off = byte_off_pusher[l] - byte_off_pusher[lo];
+                            payload.extend_from_slice(
+                                &data[off..off + layer_bytes_pusher[l]],
+                            );
                         }
-                        pusher_conns[srv].send(&Message::Push {
+                        pusher_conns[sub.server].send(&Message::Push {
                             iter,
                             lo: lo as u32,
                             hi: hi as u32,
                             data: payload,
                         })?;
-                        match pusher_conns[srv].recv()? {
+                        match pusher_conns[sub.server].recv()? {
                             Message::PushAck { .. } => {}
                             m => anyhow::bail!("bad push ack: {m:?}"),
                         }
                     }
                     let ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let bytes: usize = (lo..=hi).map(|l| 4 * layer_lens2[l]).sum();
+                    let bytes: usize = (lo..=hi).map(|l| layer_bytes_pusher[l]).sum();
                     stats.push((bytes, ms));
                 }
                 Ok(stats)
             })?;
 
         let mut gy = glogits;
-        let mut pending: Vec<Option<Vec<f32>>> = vec![None; depth];
+        let mut pending: Vec<Option<Vec<u8>>> = vec![None; depth];
         let mut seg_iter = bwd_segs.iter();
         let mut cur_seg = seg_iter.next().copied();
         for l in (0..depth).rev() {
@@ -292,14 +336,17 @@ impl EdgeWorker {
             let gy_shaped = reshape_like_output(&gy, &self.runtime, l);
             let (gw, gb, gx) = self.runtime.layer_bwd(l, w, b, &acts[l], &gy_shaped)?;
             self.profiler.record_bwd(l, t0.elapsed().as_secs_f64() * 1e3);
-            let mut flat = gw.data;
-            flat.extend_from_slice(&gb.data);
+            // Encode the layer's gradient slab once, pre-sized.
+            let mut flat = Vec::with_capacity(layer_bytes[l]);
+            gw.extend_le_bytes(&mut flat);
+            gb.extend_le_bytes(&mut flat);
             pending[l] = Some(flat);
             gy = gx;
             // Segment complete once we've computed down to its low layer.
             if let Some((hi, lo)) = cur_seg {
                 if l == lo {
-                    let mut blob = Vec::new();
+                    let mut blob =
+                        Vec::with_capacity(byte_off[hi + 1] - byte_off[lo]);
                     for ll in lo..=hi {
                         blob.extend_from_slice(pending[ll].as_ref().unwrap());
                     }
@@ -326,37 +373,41 @@ impl EdgeWorker {
     pub fn pull_params(&mut self, iter: u64) -> Result<Vec<(Tensor, Tensor)>> {
         let depth = self.depth();
         let mut out = Vec::with_capacity(depth);
-        let mut flats: Vec<Option<Vec<f32>>> = vec![None; depth];
+        let mut flats: Vec<Option<Vec<u8>>> = vec![None; depth];
         for srv in 0..self.shard.servers {
             self.conns[srv].send(&Message::Pull { iter, lo: 0, hi: depth as u32 - 1 })?;
-            let reply = self.conns[srv].recv()?;
-            let Message::PullReply { data, .. } = reply else {
-                anyhow::bail!("bad pull reply");
+            let data = match self.conns[srv].recv()? {
+                Message::PullReply { data, .. } => data,
+                m => anyhow::bail!("bad pull reply: {m:?}"),
             };
             let mut off = 0;
             for l in self.shard.owned_by(srv) {
-                let n = self.layer_len(l);
+                let n = self.layer_bytes(l);
+                anyhow::ensure!(off + n <= data.len(), "short pull reply");
                 flats[l] = Some(data[off..off + n].to_vec());
                 off += n;
             }
         }
         for (l, f) in flats.into_iter().enumerate() {
-            out.push(self.split_params(l, f.context("missing layer")?)?);
+            out.push(self.split_params(l, &f.context("missing layer")?)?);
         }
         Ok(out)
     }
 
-    fn split_params(&self, l: usize, flat: Vec<f32>) -> Result<(Tensor, Tensor)> {
+    /// Split a layer's `w‖b` byte slab into its weight and bias tensors —
+    /// the only f32 materialization on the pull path, directly into the
+    /// final buffers.
+    fn split_params(&self, l: usize, flat: &[u8]) -> Result<(Tensor, Tensor)> {
         let a = &self.runtime.manifest.layers[l];
-        let wn = a.w_count();
+        let wb = 4 * a.w_count();
         anyhow::ensure!(
-            flat.len() == wn + a.b_count(),
-            "layer {l}: got {} params, want {}",
+            flat.len() == wb + 4 * a.b_count(),
+            "layer {l}: got {} param bytes, want {}",
             flat.len(),
-            wn + a.b_count()
+            wb + 4 * a.b_count()
         );
-        let w = Tensor::new(a.w_shape.clone(), flat[..wn].to_vec());
-        let b = Tensor::new(a.b_shape.clone(), flat[wn..].to_vec());
+        let w = Tensor::from_le_bytes(a.w_shape.clone(), &flat[..wb])?;
+        let b = Tensor::from_le_bytes(a.b_shape.clone(), &flat[wb..])?;
         Ok((w, b))
     }
 }
@@ -412,5 +463,45 @@ mod tests {
     #[test]
     fn argmax_ties_take_first() {
         assert_eq!(argmax(&[1.0, 1.0, 0.5]), 0);
+    }
+
+    #[test]
+    fn connect_retries_until_listener_appears() {
+        // Reserve a port, drop the listener (connects now fail), and only
+        // bring the real listener up after a delay: the retry loop must
+        // bridge the gap — this is the worker/server startup race.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            std::net::TcpListener::bind(addr)
+                .ok()
+                .and_then(|l| l.accept().ok())
+        });
+        let stream = connect_with_retry(&addr);
+        let accepted = t.join().unwrap();
+        // The rebind can race another process grabbing the port; only
+        // assert when the listener actually came back.
+        if accepted.is_some() {
+            assert!(stream.is_ok(), "retry failed: {:?}", stream.err());
+        }
+    }
+
+    #[test]
+    fn connect_retry_gives_up_eventually() {
+        // A port with nothing listening: bounded retry must return an
+        // error rather than spin forever.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let t0 = Instant::now();
+        let r = connect_with_retry(&addr);
+        // Either some other process reused the port (fine), or we erred
+        // out within the deadline window.
+        if let Err(e) = r {
+            assert!(t0.elapsed() < Duration::from_secs(30), "unbounded retry");
+            assert!(format!("{e:#}").contains("retries exhausted"), "{e:#}");
+        }
     }
 }

@@ -1,6 +1,9 @@
-//! Host-side f32 tensors and conversions to/from XLA literals.
+//! Host-side f32 tensors and conversions to/from XLA literals and the wire
+//! format's little-endian byte slabs.
 
 use anyhow::Result;
+
+use crate::net::slab;
 
 /// A dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,6 +36,29 @@ impl Tensor {
         self.data[0]
     }
 
+    /// Decode a tensor from a little-endian f32 byte slab (the wire and
+    /// `init/*.bin` representation). The slab length must match the shape.
+    pub fn from_le_bytes(shape: Vec<usize>, bytes: &[u8]) -> Result<Tensor> {
+        anyhow::ensure!(
+            bytes.len() % slab::ELEM == 0,
+            "slab of {} bytes is not f32-aligned",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            bytes.len() / slab::ELEM == shape.iter().product::<usize>(),
+            "slab has {} f32s, shape {:?} wants {}",
+            bytes.len() / slab::ELEM,
+            shape,
+            shape.iter().product::<usize>()
+        );
+        Ok(Tensor { data: slab::to_f32s(bytes), shape })
+    }
+
+    /// Append this tensor's data to a byte slab, little-endian.
+    pub fn extend_le_bytes(&self, dst: &mut Vec<u8>) {
+        slab::extend_f32s(dst, &self.data);
+    }
+
     /// Convert to an XLA literal with this tensor's shape.
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
@@ -56,18 +82,8 @@ impl Tensor {
     pub fn from_bin_file(path: &std::path::Path, shape: Vec<usize>) -> Result<Tensor> {
         let bytes = std::fs::read(path)?;
         anyhow::ensure!(bytes.len() % 4 == 0, "truncated f32 file {path:?}");
-        let data: Vec<f32> = bytes
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect();
-        anyhow::ensure!(
-            data.len() == shape.iter().product::<usize>(),
-            "{path:?} has {} f32s, shape {:?} wants {}",
-            data.len(),
-            shape,
-            shape.iter().product::<usize>()
-        );
-        Ok(Tensor { shape, data })
+        Tensor::from_le_bytes(shape, &bytes)
+            .map_err(|e| e.context(format!("reading {path:?}")))
     }
 
     /// In-place SGD step: `self -= lr * grad`.
@@ -101,6 +117,17 @@ mod tests {
         let g = Tensor::new(vec![3], vec![1.0, -1.0, 0.0]);
         w.sgd_step(&g, 0.5);
         assert_eq!(w.data, vec![0.5, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn le_bytes_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, -0.5, 2.5, 1e-8]);
+        let mut slab = Vec::new();
+        t.extend_le_bytes(&mut slab);
+        let back = Tensor::from_le_bytes(vec![2, 2], &slab).unwrap();
+        assert_eq!(back, t);
+        assert!(Tensor::from_le_bytes(vec![5], &slab).is_err());
+        assert!(Tensor::from_le_bytes(vec![4], &slab[..15]).is_err());
     }
 
     #[test]

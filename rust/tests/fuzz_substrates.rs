@@ -70,7 +70,10 @@ fn json_parser_never_panics_on_mutated_valid_input() {
 }
 
 fn random_message(rng: &mut Rng) -> Message {
-    let data: Vec<f32> = (0..rng.below(200)).map(|_| rng.normal() as f32).collect();
+    // Tensor payloads are opaque byte slabs on the wire; the only protocol
+    // invariant is f32 alignment (length divisible by 4).
+    let n = 4 * rng.below(200);
+    let data: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
     match rng.below(7) {
         0 => Message::Pull { iter: rng.next_u64(), lo: rng.below(100) as u32, hi: rng.below(100) as u32 },
         1 => Message::PullReply { iter: rng.next_u64(), lo: 0, hi: 5, data },

@@ -1,0 +1,222 @@
+//! Offline stub of the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The coordinator only needs two things from the XLA crate:
+//!
+//! 1. [`Literal`] — a host-side f32 tensor value used to marshal inputs
+//!    and outputs. This is implemented for real (vec1 / reshape / to_vec /
+//!    tuples), so everything that moves data around works offline.
+//! 2. The PJRT compile/execute surface ([`PjRtClient`],
+//!    [`HloModuleProto`], [`XlaComputation`], [`PjRtLoadedExecutable`],
+//!    [`PjRtBuffer`]) — stubbed to return a descriptive [`Error`]. Callers
+//!    already gate the real-runtime paths on `artifacts_available()`, so
+//!    tests and figures degrade gracefully until a real `xla_extension`
+//!    build is wired back in.
+
+use std::fmt;
+
+/// Error type mirroring the binding crate's error surface.
+#[derive(Debug, Clone)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+
+    fn unavailable(what: &str) -> Error {
+        Error::new(format!(
+            "{what}: the XLA/PJRT runtime is not available in this offline \
+             build (vendor a real xla_extension to enable it)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Sized {
+    fn from_f32(v: f32) -> Self;
+}
+
+impl NativeType for f32 {
+    fn from_f32(v: f32) -> f32 {
+        v
+    }
+}
+
+impl NativeType for f64 {
+    fn from_f32(v: f32) -> f64 {
+        v as f64
+    }
+}
+
+/// A host-side tensor value: dense f32 data plus dimensions, or a tuple of
+/// literals (XLA computations with `return_tuple=True` produce tuples).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+    tuple: Option<Vec<Literal>>,
+}
+
+impl Literal {
+    /// A rank-1 literal over the given values.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64], tuple: None }
+    }
+
+    /// A tuple literal.
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { data: Vec::new(), dims: Vec::new(), tuple: Some(elements) }
+    }
+
+    /// Reinterpret the data with new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.data.len() {
+            return Err(Error::new(format!(
+                "reshape: cannot view {} elements as {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec(), tuple: None })
+    }
+
+    /// Read the data back as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if self.tuple.is_some() {
+            return Err(Error::new("to_vec on a tuple literal"));
+        }
+        Ok(self.data.iter().map(|&v| T::from_f32(v)).collect())
+    }
+
+    /// Unpack a tuple literal; a non-tuple unpacks to a 1-tuple of itself.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.tuple {
+            Some(elements) => Ok(elements),
+            None => Ok(vec![self]),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// PJRT client handle (stub: construction fails offline).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub: parsing fails offline).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("HloModuleProto::from_text_file({path})")))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// A compiled executable (stub: execution fails offline).
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// A device buffer (stub).
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[7]).is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[3.5]).reshape(&[]).unwrap();
+        assert_eq!(l.dims(), &[] as &[i64]);
+        assert_eq!(l.element_count(), 1);
+    }
+
+    #[test]
+    fn tuples_unpack() {
+        let t = Literal::tuple(vec![Literal::vec1(&[1.0]), Literal::vec1(&[2.0])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        // Non-tuples unpack to themselves (return_tuple=False artifacts).
+        let single = Literal::vec1(&[9.0]);
+        assert_eq!(single.clone().to_tuple().unwrap(), vec![single]);
+    }
+
+    #[test]
+    fn runtime_entry_points_error_offline() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
