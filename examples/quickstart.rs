@@ -33,8 +33,8 @@ fn main() -> anyhow::Result<()> {
             "{:<11} segments fwd/bwd = {:>3}/{:<3}  iteration = {:>9.1} ms  \
              (-{:.1}% vs sequential)",
             s.name(),
-            r.plan.fwd.num_transmissions(),
-            r.plan.bwd.num_transmissions(),
+            r.sched.plan.fwd.num_transmissions(),
+            r.sched.plan.bwd.num_transmissions(),
             r.total_ms(),
             100.0 * (1.0 - r.total_ms() / seq_total),
         );
@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
     // Show DynaComm's actual forward decomposition as segment ranges.
     let r = sim::simulate_cv(&cv, Strategy::DynaComm);
     println!("\nDynaComm forward segments (layer ranges):");
-    let segs = r.plan.fwd.fwd_segments();
+    let segs = r.sched.plan.fwd.fwd_segments();
     for chunk in segs.chunks(8) {
         let row: Vec<String> =
             chunk.iter().map(|(a, b)| format!("[{a}-{b}]")).collect();
@@ -52,7 +52,7 @@ fn main() -> anyhow::Result<()> {
 
     // And the first few timeline events.
     println!("\nforward timeline (first 12 events):");
-    let events = timeline::forward_timeline(&cv, &r.plan.fwd);
+    let events = timeline::forward_timeline(&cv, &r.sched.plan.fwd);
     for e in events.iter().take(12) {
         println!(
             "  {:>8.1} .. {:>8.1} ms  {:?} layers {}-{}",
@@ -66,7 +66,7 @@ fn main() -> anyhow::Result<()> {
     print!(
         "{}",
         dynacomm::sim::gantt::render(
-            &timeline::forward_timeline(&cv, &seq.plan.fwd),
+            &timeline::forward_timeline(&cv, &seq.sched.plan.fwd),
             72
         )
     );

@@ -34,6 +34,7 @@ fn main() -> anyhow::Result<()> {
     cfg.setup_ms = args.f64("setup-ms", 2.0);
     cfg.latency_ms = args.f64("latency-ms", 1.0);
     cfg.bytes_per_ms = args.f64("bytes-per-ms", 500_000.0);
+    cfg.gain_threshold_ms = args.f64("gain-threshold-ms", cfg.gain_threshold_ms);
     if let Some(s) = args.get("strategy") {
         cfg.strategy = Strategy::parse(s)
             .ok_or_else(|| anyhow::anyhow!("bad --strategy '{s}'"))?;
@@ -61,11 +62,17 @@ fn main() -> anyhow::Result<()> {
         r.val_acc, r.samples_per_sec_per_worker
     );
     for (w, rep) in r.per_worker.iter().enumerate() {
-        if let Some((i, f, b)) = rep.plans.last() {
+        if let Some(p) = rep.plans.last() {
             println!(
-                "worker {w}: last reschedule @iter {i}: fwd {f} / bwd {b} segments \
-                 (sched {:.3} ms)",
-                rep.sched_ms.last().unwrap_or(&0.0)
+                "worker {w}: last plan change @iter {}: fwd {} / bwd {} segments \
+                 (that re-plan took {:.3} ms; {} of {} re-plan calls reused the \
+                 cached plan)",
+                p.iter,
+                p.fwd_segments,
+                p.bwd_segments,
+                p.sched_ms,
+                rep.sched_reused,
+                rep.sched_ms.len(),
             );
         }
     }

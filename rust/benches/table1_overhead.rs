@@ -46,4 +46,27 @@ fn main() {
         ]));
     }
     figures::write_result("table1_overhead", Json::Arr(json_rows)).unwrap();
+
+    // Companion table: scheduling-cost savings from gain-thresholded
+    // re-planning (the cached DynaComm plan short-circuits the O(L^3) DP).
+    let calls = if common::fast_mode() { 10 } else { 40 };
+    let sav = common::timed("gain threshold savings", || {
+        figures::gain_threshold_savings(152, calls, 42, &[0.0, 1.0, 5.0, 25.0])
+    });
+    println!("\ngain-thresholded re-planning ({calls} re-profilings, 152 layers)");
+    println!("{:<14} {:>14} {:>10}", "threshold(ms)", "plan(ms)", "reused");
+    let mut json_rows = Vec::new();
+    for r in &sav {
+        println!(
+            "{:<14} {:>7.4}±{:<6.4} {:>6}/{}",
+            r.threshold_ms, r.plan_ms.mean, r.plan_ms.std, r.reused, r.calls
+        );
+        json_rows.push(Json::obj(vec![
+            ("threshold_ms", Json::Num(r.threshold_ms)),
+            ("plan_ms", Json::Num(r.plan_ms.mean)),
+            ("reused", Json::Num(r.reused as f64)),
+            ("calls", Json::Num(r.calls as f64)),
+        ]));
+    }
+    figures::write_result("table1_gain_threshold", Json::Arr(json_rows)).unwrap();
 }

@@ -64,6 +64,12 @@ impl DeviceConfig {
 }
 
 /// Scheduling strategy selector (Section V-A3 competitors).
+///
+/// This enum is a thin **parse/name shim** for configs and CLI flags: the
+/// actual strategies live behind the `sched::Scheduler` trait and are
+/// instantiated through `sched::registry` (which also hosts entries this
+/// enum never had, e.g. `slicing`). Keep it in sync with
+/// `sched::registry::NAMES`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Strategy {
     /// Default PS: one transmission per procedure, strictly sequential.
@@ -119,6 +125,10 @@ pub struct SystemConfig {
     pub model: String,
     pub batch: usize,
     pub strategy: Strategy,
+    /// DynaComm re-plan gain threshold, ms (see
+    /// `sched::dynacomm::DynaCommScheduler`): 0 re-plans on every
+    /// scheduler call.
+    pub gain_threshold_ms: f64,
 }
 
 impl Default for SystemConfig {
@@ -132,11 +142,20 @@ impl Default for SystemConfig {
             model: "resnet152".to_string(),
             batch: 32,
             strategy: Strategy::DynaComm,
+            gain_threshold_ms: 0.0,
         }
     }
 }
 
 impl SystemConfig {
+    /// Scheduler tuning knobs carried by this config, in the form
+    /// `sched::registry::create_for_with` consumes.
+    pub fn scheduler_params(&self) -> crate::sched::registry::SchedulerParams {
+        crate::sched::registry::SchedulerParams {
+            gain_threshold_ms: self.gain_threshold_ms,
+        }
+    }
+
     /// Overlay CLI flags onto the defaults (or a loaded config).
     pub fn apply_args(mut self, args: &Args) -> SystemConfig {
         self.net.rtt_ms = args.f64("rtt-ms", self.net.rtt_ms);
@@ -149,6 +168,7 @@ impl SystemConfig {
             args.f64("server-bandwidth-gbps", self.server_bandwidth_gbps);
         self.model = args.get_or("model", &self.model);
         self.batch = args.usize("batch", self.batch);
+        self.gain_threshold_ms = args.f64("gain-threshold-ms", self.gain_threshold_ms);
         if let Some(s) = args.get("strategy") {
             self.strategy = Strategy::parse(s)
                 .unwrap_or_else(|| panic!("unknown strategy '{s}'"));
@@ -169,6 +189,7 @@ impl SystemConfig {
         c.servers = num("servers", c.servers as f64) as usize;
         c.server_bandwidth_gbps = num("server_bandwidth_gbps", c.server_bandwidth_gbps);
         c.batch = num("batch", c.batch as f64) as usize;
+        c.gain_threshold_ms = num("gain_threshold_ms", c.gain_threshold_ms);
         if let Some(m) = j.get("model").and_then(Json::as_str) {
             c.model = m.to_string();
         }
@@ -191,6 +212,7 @@ impl SystemConfig {
             ("model", Json::Str(self.model.clone())),
             ("batch", Json::Num(self.batch as f64)),
             ("strategy", Json::Str(self.strategy.name().to_string())),
+            ("gain_threshold_ms", Json::Num(self.gain_threshold_ms)),
         ])
     }
 }
@@ -229,6 +251,7 @@ mod tests {
         c.batch = 16;
         c.model = "vgg19".into();
         c.strategy = Strategy::IBatch;
+        c.gain_threshold_ms = 3.5;
         let j = c.to_json();
         let back = SystemConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back, c);
@@ -237,7 +260,7 @@ mod tests {
     #[test]
     fn args_overlay() {
         let args = Args::parse(
-            ["--batch=64", "--strategy", "lbl", "--rtt-ms", "5"]
+            ["--batch=64", "--strategy", "lbl", "--rtt-ms", "5", "--gain-threshold-ms", "2.5"]
                 .iter()
                 .map(|s| s.to_string()),
         );
@@ -245,5 +268,7 @@ mod tests {
         assert_eq!(c.batch, 64);
         assert_eq!(c.strategy, Strategy::LayerByLayer);
         assert_eq!(c.net.rtt_ms, 5.0);
+        assert_eq!(c.gain_threshold_ms, 2.5);
+        assert_eq!(c.scheduler_params().gain_threshold_ms, 2.5);
     }
 }

@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use crate::config::{Strategy, SystemConfig};
 use crate::models;
-use crate::sched::{self, CostVectors};
+use crate::sched::{self, CostVectors, Scheduler};
 use crate::sim::{self, sweep, workload};
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -50,16 +50,19 @@ pub fn normalized_pass_times(batch: usize, pass: Pass) -> Vec<NormalizedCell> {
     let mut cells = Vec::new();
     for model in models::paper_models() {
         let cv = model.cost_vectors(&cfg);
-        let seq_plan = sched::plan_for(Strategy::Sequential, &cv);
+        // Sequential's own predicted pass time is the normalization
+        // baseline (its prediction equals the timeline evaluation — the
+        // ScheduledPlan contract).
+        let seq = sched::registry::create_for(Strategy::Sequential).plan(&cv);
         let baseline = match pass {
-            Pass::Forward => sched::eval_forward(&cv, &seq_plan.fwd).total,
-            Pass::Backward => sched::eval_backward(&cv, &seq_plan.bwd).total,
+            Pass::Forward => seq.predicted_fwd_ms,
+            Pass::Backward => seq.predicted_bwd_ms,
         };
         for s in Strategy::ALL {
-            let plan = sched::plan_for(s, &cv);
+            let sp = sched::registry::create_for(s).plan(&cv);
             let b = match pass {
-                Pass::Forward => sched::eval_forward(&cv, &plan.fwd),
-                Pass::Backward => sched::eval_backward(&cv, &plan.bwd),
+                Pass::Forward => sched::eval_forward(&cv, &sp.plan.fwd),
+                Pass::Backward => sched::eval_backward(&cv, &sp.plan.bwd),
             };
             let n = sim::normalize(&b, baseline);
             cells.push(NormalizedCell {
@@ -244,6 +247,79 @@ pub fn table1(reps: usize) -> Vec<Table1Row> {
         .collect()
 }
 
+/// One row of the Table-I companion: full `Scheduler::plan` wall-clock at
+/// a given DynaComm gain threshold over a drifting profile sequence.
+#[derive(Debug, Clone)]
+pub struct GainThresholdRow {
+    pub threshold_ms: f64,
+    /// Wall-clock of the `plan` call itself (reused calls included — that
+    /// is where the savings appear).
+    pub plan_ms: stats::Summary,
+    /// Calls answered from the cache.
+    pub reused: usize,
+    pub calls: usize,
+}
+
+/// Measure the scheduling-cost savings of gain-thresholded re-planning:
+/// one stateful DynaComm scheduler per threshold, fed `calls` noisy
+/// re-profilings of the same comm-dominated workload (the regime where the
+/// cached plan stays provably near-optimal, so reuse can trigger).
+pub fn gain_threshold_savings(
+    depth: usize,
+    calls: usize,
+    seed: u64,
+    thresholds: &[f64],
+) -> Vec<GainThresholdRow> {
+    let mut rng = Rng::new(seed);
+    let params = workload::WorkloadParams {
+        comm_mu: 2.0,
+        comp_mu: -1.0,
+        sigma: 0.8,
+        delta_t: 5.0,
+    };
+    let base = workload::generate(&mut rng, depth, params);
+    // Pre-generate the drifting sequence so every threshold sees the exact
+    // same profiles (±5% multiplicative jitter, like epoch-to-epoch noise).
+    let profiles: Vec<CostVectors> = (0..calls)
+        .map(|_| {
+            let mut cv = base.clone();
+            for v in cv
+                .pt
+                .iter_mut()
+                .chain(cv.fc.iter_mut())
+                .chain(cv.bc.iter_mut())
+                .chain(cv.gt.iter_mut())
+            {
+                *v *= 1.0 + 0.05 * rng.normal();
+                *v = v.max(0.0);
+            }
+            cv
+        })
+        .collect();
+    thresholds
+        .iter()
+        .map(|&threshold_ms| {
+            let mut s = sched::dynacomm::DynaCommScheduler::new(threshold_ms);
+            let mut samples = Vec::with_capacity(calls);
+            let mut reused = 0;
+            for cv in &profiles {
+                let t0 = Instant::now();
+                let sp = s.plan(cv);
+                samples.push(t0.elapsed().as_secs_f64() * 1e3);
+                if sp.reused {
+                    reused += 1;
+                }
+            }
+            GainThresholdRow {
+                threshold_ms,
+                plan_ms: stats::summarize(&samples),
+                reused,
+                calls,
+            }
+        })
+        .collect()
+}
+
 /// Write a JSON result file under `results/`.
 pub fn write_result(name: &str, value: Json) -> std::io::Result<()> {
     std::fs::create_dir_all("results")?;
@@ -297,6 +373,18 @@ mod tests {
             a.dynacomm_fwd_ms.mean,
             b.dynacomm_fwd_ms.mean
         );
+    }
+
+    #[test]
+    fn gain_threshold_savings_reuse_counts() {
+        let rows = gain_threshold_savings(24, 10, 7, &[0.0, f64::INFINITY]);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].reused, 0, "threshold 0 must always re-plan");
+        assert_eq!(
+            rows[1].reused, 9,
+            "infinite threshold reuses every call after the first"
+        );
+        assert_eq!(rows[1].calls, 10);
     }
 
     #[test]

@@ -54,7 +54,9 @@ USAGE: dynacomm <schedule|simulate|sweep|train|bench-sched> [flags]
 FLAGS (defaults = the paper's testbed):
   --model NAME          vgg19|googlenet|inceptionv4|resnet152|edgecnn
   --batch N             per-worker batch size (32)
-  --strategy S          sequential|lbl|ibatch|dynacomm
+  --strategy S          sequential|lbl|ibatch|dynacomm (registry shim names)
+  --gain-threshold-ms F skip DynaComm's DP re-plan when the predicted gain
+                        is under F ms (0 = re-plan every epoch)
   --workers N --servers N
   --rtt-ms F --bandwidth-gbps F --delta-t-ms F --gflops F
   --epochs N --iters N --lr F --artifacts DIR   (train)
@@ -75,11 +77,13 @@ fn cmd_schedule(args: &Args) -> Result<()> {
     for s in Strategy::ALL {
         let r = sim::simulate_cv(&cv, s);
         println!(
-            "\n{:<11} fwd segments={:<4} bwd segments={:<4} total={:.1} ms",
+            "\n{:<11} fwd segments={:<4} bwd segments={:<4} total={:.1} ms \
+             (scheduler predicted {:.1} ms)",
             s.name(),
-            r.plan.fwd.num_transmissions(),
-            r.plan.bwd.num_transmissions(),
-            r.total_ms()
+            r.sched.plan.fwd.num_transmissions(),
+            r.sched.plan.bwd.num_transmissions(),
+            r.total_ms(),
+            r.sched.predicted_ms()
         );
         println!(
             "  fwd: total={:>9.2} comp={:>9.2} overlap={:>9.2} comm={:>9.2}",
@@ -154,6 +158,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.iters_per_epoch = args.usize("iters", cfg.iters_per_epoch);
     cfg.lr = args.f64("lr", cfg.lr as f64) as f32;
     cfg.profiling = !args.bool("no-profiling");
+    cfg.gain_threshold_ms = args.f64("gain-threshold-ms", cfg.gain_threshold_ms);
     if let Some(s) = args.get("strategy") {
         cfg.strategy = Strategy::parse(s).context("bad --strategy")?;
     }
@@ -171,6 +176,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         "val-top1={:.3} samples/sec/worker={:.2}",
         result.val_acc, result.samples_per_sec_per_worker
     );
+    let calls: usize = result.per_worker.iter().map(|r| r.sched_ms.len()).sum();
+    let reused: usize = result.per_worker.iter().map(|r| r.sched_reused).sum();
+    println!("reschedule calls={calls} cached-plan reuses={reused}");
     Ok(())
 }
 

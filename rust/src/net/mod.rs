@@ -9,4 +9,4 @@ pub mod slab;
 pub mod transport;
 
 pub use shaper::{LinkShaper, ShaperSpec};
-pub use transport::{Connection, Message};
+pub use transport::{Connection, Message, PROTOCOL_VERSION};

@@ -16,6 +16,13 @@ use anyhow::{bail, Context, Result};
 /// Hard ceiling on a frame's payload size (corruption guard).
 const MAX_FRAME: usize = 1 << 30;
 
+/// Version of the wire protocol this build speaks (`docs/WIRE.md`; v1 was
+/// the unversioned slab protocol). Carried in [`Message::Hello`] /
+/// [`Message::HelloAck`] so mixed deployments fail loudly at registration
+/// time instead of corrupting tensors mid-iteration: the server rejects a
+/// mismatched `Hello`, and the worker rejects a mismatched `HelloAck`.
+pub const PROTOCOL_VERSION: u16 = 2;
+
 /// Protocol messages between edge workers and parameter servers.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
@@ -29,10 +36,13 @@ pub enum Message {
     Push { iter: u64, lo: u32, hi: u32, data: Vec<u8> },
     /// Server → worker: push accepted.
     PushAck { iter: u64, lo: u32, hi: u32 },
-    /// Worker → server: register with a worker id.
-    Hello { worker: u32 },
-    /// Server → worker: registration accepted; reports cluster size.
-    HelloAck { workers: u32 },
+    /// Worker → server: register with a worker id, announcing the
+    /// worker's [`PROTOCOL_VERSION`].
+    Hello { worker: u32, version: u16 },
+    /// Server → worker: registration answer; reports cluster size and the
+    /// server's [`PROTOCOL_VERSION`] (sent even on mismatch, so the worker
+    /// can name both versions in its error).
+    HelloAck { workers: u32, version: u16 },
     /// Either direction: tear the connection down.
     Shutdown,
 }
@@ -57,8 +67,8 @@ impl Message {
             Message::PullReply { data, .. } => 8 + 4 + 4 + 4 + data.len(),
             Message::Push { data, .. } => 8 + 4 + 4 + 4 + data.len(),
             Message::PushAck { .. } => 8 + 4 + 4,
-            Message::Hello { .. } => 4,
-            Message::HelloAck { .. } => 4,
+            Message::Hello { .. } => 4 + 2,
+            Message::HelloAck { .. } => 4 + 2,
             Message::Shutdown => 0,
         }
     }
@@ -85,8 +95,14 @@ impl Message {
                 buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
                 buf.extend_from_slice(data);
             }
-            Message::Hello { worker } => buf.extend_from_slice(&worker.to_le_bytes()),
-            Message::HelloAck { workers } => buf.extend_from_slice(&workers.to_le_bytes()),
+            Message::Hello { worker, version } => {
+                buf.extend_from_slice(&worker.to_le_bytes());
+                buf.extend_from_slice(&version.to_le_bytes());
+            }
+            Message::HelloAck { workers, version } => {
+                buf.extend_from_slice(&workers.to_le_bytes());
+                buf.extend_from_slice(&version.to_le_bytes());
+            }
             Message::Shutdown => {}
         }
     }
@@ -113,8 +129,8 @@ impl Message {
                 Message::Push { iter, lo, hi, data: r.slab()? }
             }
             4 => Message::PushAck { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
-            5 => Message::Hello { worker: r.u32()? },
-            6 => Message::HelloAck { workers: r.u32()? },
+            5 => Message::Hello { worker: r.u32()?, version: r.u16()? },
+            6 => Message::HelloAck { workers: r.u32()?, version: r.u16()? },
             7 => Message::Shutdown,
             _ => bail!("unknown opcode {op}"),
         };
@@ -133,6 +149,10 @@ impl<'a> Reader<'a> {
         let (head, tail) = self.b.split_at(n);
         self.b = tail;
         Ok(head)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
     fn u32(&mut self) -> Result<u32> {
@@ -226,8 +246,12 @@ mod tests {
         });
         roundtrip(Message::Push { iter: 0, lo: 6, hi: 6, data: Vec::new() });
         roundtrip(Message::PushAck { iter: 1, lo: 2, hi: 4 });
-        roundtrip(Message::Hello { worker: 3 });
-        roundtrip(Message::HelloAck { workers: 8 });
+        roundtrip(Message::Hello { worker: 3, version: PROTOCOL_VERSION });
+        roundtrip(Message::HelloAck { workers: 8, version: PROTOCOL_VERSION });
+        // Versions other than ours still travel intact — that is what lets
+        // endpoints *name* the mismatched version in their error.
+        roundtrip(Message::Hello { worker: 0, version: 0 });
+        roundtrip(Message::HelloAck { workers: 1, version: u16::MAX });
         roundtrip(Message::Shutdown);
     }
 
@@ -248,9 +272,13 @@ mod tests {
         assert!(Message::decode(&[99]).is_err());
         assert!(Message::decode(&[1, 0, 0]).is_err()); // truncated
         // trailing bytes
-        let mut enc = Message::Hello { worker: 1 }.encode();
+        let mut enc = Message::Hello { worker: 1, version: 1 }.encode();
         enc.push(0);
         assert!(Message::decode(&enc[4..]).is_err());
+        // a pre-versioning (v1) Hello lacks the version field: rejected as
+        // truncated rather than misread.
+        let legacy = [5u8, 1, 0, 0, 0]; // opcode + worker u32 only
+        assert!(Message::decode(&legacy).is_err());
     }
 
     #[test]

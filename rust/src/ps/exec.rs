@@ -1,0 +1,250 @@
+//! Compiled execution plans: a [`crate::sched::SchedulePlan`] bound to a
+//! concrete model (per-layer byte sizes) and cluster (shard map), with
+//! every per-iteration quantity the worker used to recompute — 0-based
+//! segments, prefix byte offsets, per-segment shard sub-requests and the
+//! byte ranges of each layer inside both the segment blob and the shard
+//! payload — materialized **once per re-plan**. `EdgeWorker::iteration`
+//! then runs off pure table lookups.
+
+use std::ops::Deref;
+use std::sync::Arc;
+
+use crate::ps::sharding::ShardMap;
+use crate::sched::SchedulePlan;
+
+/// One layer's byte placement inside a segment and its shard payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecSlice {
+    /// 0-based layer index.
+    pub layer: usize,
+    /// Byte length of the layer's flat `w‖b` slab.
+    pub len: usize,
+    /// Byte offset of this layer inside the segment blob (layers of the
+    /// segment concatenated in ascending order).
+    pub seg_off: usize,
+    /// Byte offset of this layer inside the owning shard's wire payload
+    /// (the shard's owned layers of the segment, ascending).
+    pub reply_off: usize,
+}
+
+/// One shard's share of a segment: the sub-request the worker issues.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecSub {
+    pub server: usize,
+    /// Total payload bytes this shard sends/receives for the segment.
+    pub bytes: usize,
+    /// The shard's owned layers of the segment, ascending.
+    pub slices: Vec<ExecSlice>,
+}
+
+/// One transmission mini-procedure, fully resolved.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecSegment {
+    /// 0-based inclusive layer range, `lo <= hi` (backward segments keep
+    /// their transmission order in [`ExecPlan::bwd`], not in `lo`/`hi`).
+    pub lo: usize,
+    pub hi: usize,
+    /// Total payload bytes of the whole segment.
+    pub bytes: usize,
+    pub subs: Vec<ExecSub>,
+}
+
+/// A schedule compiled against a concrete model and shard map.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExecPlan {
+    pub depth: usize,
+    /// Flat `w‖b` slab size per 0-based layer.
+    pub layer_bytes: Vec<usize>,
+    /// Prefix byte offsets: `byte_off[l]` = bytes of layers `0..l`
+    /// (`depth + 1` entries).
+    pub byte_off: Vec<usize>,
+    /// Forward segments in transmission order (ascending layers).
+    pub fwd: Vec<ExecSegment>,
+    /// Backward segments in transmission order (deepest layers first).
+    pub bwd: Vec<ExecSegment>,
+}
+
+impl ExecPlan {
+    /// Resolve `plan` against the model's per-layer byte sizes and the
+    /// cluster's shard map. O(L) per segment; runs once per re-plan.
+    pub fn compile(plan: &SchedulePlan, layer_bytes: &[usize], shard: ShardMap) -> ExecPlan {
+        let depth = layer_bytes.len();
+        assert_eq!(plan.fwd.depth(), depth, "plan depth != model depth");
+        assert_eq!(plan.bwd.depth(), depth, "plan depth != model depth");
+        assert_eq!(shard.depth, depth, "shard map depth != model depth");
+        let mut byte_off = Vec::with_capacity(depth + 1);
+        byte_off.push(0usize);
+        for l in 0..depth {
+            byte_off.push(byte_off[l] + layer_bytes[l]);
+        }
+
+        let seg = |lo: usize, hi: usize| -> ExecSegment {
+            let subs: Vec<ExecSub> = shard
+                .sub_requests(lo, hi)
+                .map(|sub| {
+                    let mut slices = Vec::with_capacity(sub.count);
+                    let mut reply_off = 0usize;
+                    for layer in sub.layers() {
+                        let len = layer_bytes[layer];
+                        slices.push(ExecSlice {
+                            layer,
+                            len,
+                            seg_off: byte_off[layer] - byte_off[lo],
+                            reply_off,
+                        });
+                        reply_off += len;
+                    }
+                    ExecSub { server: sub.server, bytes: reply_off, slices }
+                })
+                .collect();
+            ExecSegment { lo, hi, bytes: byte_off[hi + 1] - byte_off[lo], subs }
+        };
+
+        let fwd = plan
+            .fwd
+            .fwd_segments()
+            .into_iter()
+            .map(|(a, b)| seg(a - 1, b - 1)) // 1-based inclusive → 0-based
+            .collect();
+        let bwd = plan
+            .bwd
+            .bwd_segments()
+            .into_iter()
+            .map(|(hi, lo)| seg(lo - 1, hi - 1))
+            .collect();
+        ExecPlan { depth, layer_bytes: layer_bytes.to_vec(), byte_off, fwd, bwd }
+    }
+}
+
+/// A shared, immutable view into a wire slab: the puller hands each layer
+/// a slice of the shard reply it arrived in, so the pull path performs no
+/// per-layer copies between the socket and tensor materialization.
+#[derive(Debug, Clone)]
+pub struct SlabSlice {
+    buf: Arc<Vec<u8>>,
+    off: usize,
+    len: usize,
+}
+
+impl SlabSlice {
+    /// Panics if `[off, off + len)` is out of bounds — the `ExecPlan`
+    /// offsets are validated against the reply size before slicing.
+    pub fn new(buf: Arc<Vec<u8>>, off: usize, len: usize) -> SlabSlice {
+        assert!(off + len <= buf.len(), "slab slice out of bounds");
+        SlabSlice { buf, off, len }
+    }
+}
+
+impl Deref for SlabSlice {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{Decomposition, SchedulePlan};
+    use crate::util::rng::Rng;
+
+    fn random_plan(rng: &mut Rng, depth: usize) -> SchedulePlan {
+        let mut fwd = Decomposition::sequential(depth);
+        let mut bwd = Decomposition::sequential(depth);
+        for c in fwd.cuts.iter_mut().chain(bwd.cuts.iter_mut()) {
+            *c = rng.bool();
+        }
+        SchedulePlan { fwd, bwd }
+    }
+
+    fn random_bytes(rng: &mut Rng, depth: usize) -> Vec<usize> {
+        (0..depth).map(|_| 4 * (1 + rng.below(64))).collect()
+    }
+
+    /// Every compiled quantity must agree with a from-scratch
+    /// recomputation: segments partition the layers, slice offsets tile
+    /// both the segment blob and each shard payload exactly, and the
+    /// owning servers match the shard map.
+    #[test]
+    fn compiled_offsets_tile_segments_and_payloads() {
+        let mut rng = Rng::new(91);
+        for _ in 0..100 {
+            let depth = rng.range(1, 20);
+            let servers = rng.range(1, 6);
+            let shard = ShardMap::new(servers, depth);
+            let layer_bytes = random_bytes(&mut rng, depth);
+            let plan = random_plan(&mut rng, depth);
+            let exec = ExecPlan::compile(&plan, &layer_bytes, shard);
+            assert_eq!(exec.byte_off.len(), depth + 1);
+            assert_eq!(exec.byte_off[depth], layer_bytes.iter().sum::<usize>());
+
+            for (segs, ascending) in [(&exec.fwd, true), (&exec.bwd, false)] {
+                // Transmission order: fwd ascends from layer 0, bwd
+                // descends from the last layer.
+                if ascending {
+                    assert_eq!(segs.first().unwrap().lo, 0);
+                    assert_eq!(segs.last().unwrap().hi, depth - 1);
+                } else {
+                    assert_eq!(segs.first().unwrap().hi, depth - 1);
+                    assert_eq!(segs.last().unwrap().lo, 0);
+                }
+                let mut covered = Vec::new();
+                for seg in segs {
+                    assert!(seg.lo <= seg.hi);
+                    covered.extend(seg.lo..=seg.hi);
+                    let seg_bytes: usize =
+                        (seg.lo..=seg.hi).map(|l| layer_bytes[l]).sum();
+                    assert_eq!(seg.bytes, seg_bytes);
+                    assert_eq!(
+                        seg.subs.iter().map(|s| s.bytes).sum::<usize>(),
+                        seg_bytes
+                    );
+                    // Slices tile the segment blob exactly once.
+                    let mut seg_ranges: Vec<(usize, usize)> = Vec::new();
+                    for sub in &seg.subs {
+                        let mut reply_off = 0;
+                        for sl in &sub.slices {
+                            assert_eq!(shard.owner(sl.layer), sub.server);
+                            assert_eq!(sl.len, layer_bytes[sl.layer]);
+                            assert_eq!(sl.reply_off, reply_off);
+                            assert_eq!(
+                                sl.seg_off,
+                                exec.byte_off[sl.layer] - exec.byte_off[seg.lo]
+                            );
+                            reply_off += sl.len;
+                            seg_ranges.push((sl.seg_off, sl.seg_off + sl.len));
+                        }
+                        assert_eq!(sub.bytes, reply_off);
+                    }
+                    seg_ranges.sort_unstable();
+                    let mut expect = 0;
+                    for (a, b) in seg_ranges {
+                        assert_eq!(a, expect, "gap or overlap in segment blob");
+                        expect = b;
+                    }
+                    assert_eq!(expect, seg_bytes);
+                }
+                covered.sort_unstable();
+                assert_eq!(covered, (0..depth).collect::<Vec<_>>());
+            }
+        }
+    }
+
+    #[test]
+    fn slab_slice_views_without_copying() {
+        let buf = Arc::new((0u8..100).collect::<Vec<u8>>());
+        let a = SlabSlice::new(buf.clone(), 10, 20);
+        let b = SlabSlice::new(buf.clone(), 30, 0);
+        assert_eq!(&a[..], &(10u8..30).collect::<Vec<u8>>()[..]);
+        assert!(b.is_empty());
+        assert_eq!(Arc::strong_count(&buf), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn slab_slice_rejects_out_of_bounds() {
+        let buf = Arc::new(vec![0u8; 8]);
+        let _ = SlabSlice::new(buf, 4, 8);
+    }
+}

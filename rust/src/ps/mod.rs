@@ -7,10 +7,12 @@
 //! issued **per decomposition segment**, overlapping with per-layer PJRT
 //! compute exactly as the paper's execution model prescribes.
 
+pub mod exec;
 pub mod server;
 pub mod sharding;
 pub mod worker;
 
+pub use exec::{ExecPlan, ExecSegment, ExecSlice, ExecSub, SlabSlice};
 pub use server::{ParamServer, ServerConfig, ServerHandle};
 pub use sharding::ShardMap;
-pub use worker::{EdgeWorker, WorkerConfig, WorkerReport};
+pub use worker::{EdgeWorker, PlanChange, WorkerConfig, WorkerReport};

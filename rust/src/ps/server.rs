@@ -18,7 +18,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::net::{slab, Connection, Message, ShaperSpec};
+use crate::net::{slab, Connection, Message, ShaperSpec, PROTOCOL_VERSION};
 
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
@@ -241,11 +241,20 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
             Err(_) => return Ok(()),
         };
         match msg {
-            Message::Hello { worker: _ } => {
-                shared.connected.fetch_add(1, Ordering::SeqCst);
+            Message::Hello { worker, version } => {
+                // Always answer with our version — on mismatch the worker
+                // names both sides in its error — then refuse the session
+                // so a mixed deployment cannot corrupt tensors later.
                 conn.send(&Message::HelloAck {
                     workers: shared.cfg.workers as u32,
+                    version: PROTOCOL_VERSION,
                 })?;
+                anyhow::ensure!(
+                    version == PROTOCOL_VERSION,
+                    "protocol version mismatch: worker {worker} speaks \
+                     v{version}, server v{PROTOCOL_VERSION}"
+                );
+                shared.connected.fetch_add(1, Ordering::SeqCst);
             }
             Message::Pull { iter, lo, hi } => {
                 // Pre-size from the immutable size map: one allocation,
@@ -417,6 +426,40 @@ mod tests {
         // The client either got a (stale) reply or a dead socket — but the
         // thread must have been released either way.
         let _ = t.join().unwrap();
+    }
+
+    #[test]
+    fn hello_with_matching_version_registers() {
+        let srv = start_two_layer(1);
+        let mut c = connect(srv.handle().addr);
+        c.send(&Message::Hello { worker: 0, version: PROTOCOL_VERSION }).unwrap();
+        match c.recv().unwrap() {
+            Message::HelloAck { workers, version } => {
+                assert_eq!(workers, 1);
+                assert_eq!(version, PROTOCOL_VERSION);
+            }
+            m => panic!("{m:?}"),
+        }
+        // The session stays usable.
+        c.send(&Message::Pull { iter: 0, lo: 0, hi: 0 }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
+    }
+
+    #[test]
+    fn hello_version_mismatch_is_refused_after_naming_versions() {
+        let srv = start_two_layer(1);
+        let mut c = connect(srv.handle().addr);
+        c.send(&Message::Hello { worker: 7, version: PROTOCOL_VERSION + 1 })
+            .unwrap();
+        // The server still answers with its own version (that is what lets
+        // the worker report "worker v3, server v2")...
+        match c.recv().unwrap() {
+            Message::HelloAck { version, .. } => assert_eq!(version, PROTOCOL_VERSION),
+            m => panic!("{m:?}"),
+        }
+        // ...then tears the session down: no cross-version serving.
+        let _ = c.send(&Message::Pull { iter: 0, lo: 0, hi: 0 });
+        assert!(c.recv().is_err(), "mismatched session must not be served");
     }
 
     #[test]

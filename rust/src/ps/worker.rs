@@ -5,28 +5,33 @@
 //! decomposition `D_f`) while the main thread runs per-layer PJRT forward
 //! compute; a pusher thread flushes gradient segments (per `D_b`) while the
 //! main thread continues backward compute. That is exactly the execution
-//! model of Fig. 2(c) / Fig. 3, with the scheduler deciding the segment
-//! boundaries at run time from profiled cost vectors (Section IV).
+//! model of Fig. 2(c) / Fig. 3, with a pluggable [`Scheduler`] deciding the
+//! segment boundaries at run time from profiled cost vectors (Section IV).
 //!
-//! Tensor traffic stays in wire form (little-endian byte slabs, see
-//! `docs/WIRE.md`) end to end: the puller slices reply slabs into pre-sized
-//! per-layer byte buffers, the backward path encodes each layer's gradient
-//! slab exactly once, and the pusher extracts per-shard payloads by byte
-//! offset — no intermediate `Vec<f32>` allocations anywhere between the
-//! socket and the runtime tensors.
+//! Schedules are consumed in **compiled** form: every re-plan is resolved
+//! once into an [`ExecPlan`] (0-based segments, prefix byte offsets,
+//! per-segment shard sub-requests), so `iteration` performs no segment or
+//! offset arithmetic of its own. Tensor traffic stays in wire form
+//! (little-endian byte slabs, see `docs/WIRE.md`) end to end: the puller
+//! hands each layer a [`SlabSlice`] view of the shard reply it arrived in
+//! (no per-layer copies), the backward path encodes each layer's gradient
+//! slab exactly once, and the pusher extracts per-shard payloads by the
+//! precompiled byte ranges.
 
 use std::net::TcpStream;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::Strategy;
-use crate::net::{Connection, LinkShaper, Message};
+use crate::net::{Connection, LinkShaper, Message, PROTOCOL_VERSION};
 use crate::profiler::Profiler;
+use crate::ps::exec::{ExecPlan, SlabSlice};
 use crate::ps::sharding::ShardMap;
 use crate::runtime::{RuntimeClient, Tensor};
-use crate::sched::{self, Decomposition, SchedulePlan};
+use crate::sched::registry::{self, SchedulerParams};
+use crate::sched::{Decomposition, SchedulePlan, Scheduler};
 
 #[derive(Debug, Clone)]
 pub struct WorkerConfig {
@@ -42,6 +47,10 @@ pub struct WorkerConfig {
     /// Re-run the scheduler every this many iterations ("once per epoch",
     /// Section IV-C).
     pub reschedule_every: usize,
+    /// Gain threshold for DynaComm's cached re-planning, ms: skip the
+    /// O(L^3) DP when a fresh plan cannot gain more than this. `0.0`
+    /// re-plans every time (see `sched::dynacomm::DynaCommScheduler`).
+    pub gain_threshold_ms: f64,
 }
 
 /// Per-run observability, returned to the trainer.
@@ -50,10 +59,47 @@ pub struct WorkerReport {
     pub iter_ms: Vec<f64>,
     pub losses: Vec<f32>,
     pub batch_top1: Vec<f64>,
-    /// Scheduler wall-clock per re-plan, ms (Table I).
+    /// Scheduler wall-clock per re-plan call, ms (Table I) — reused calls
+    /// included, which is where gain-thresholding shows its savings.
     pub sched_ms: Vec<f64>,
-    /// (iteration, fwd segments, bwd segments) whenever the plan changed.
-    pub plans: Vec<(u64, usize, usize)>,
+    /// The scheduler's own predicted iteration finish time per re-plan
+    /// call, ms (aligned with `sched_ms`); compare against the measured
+    /// `iter_ms` to judge the cost model.
+    pub sched_predicted_ms: Vec<f64>,
+    /// One entry per plan change (re-plan calls that reused the cache do
+    /// not appear here — they are counted in `sched_reused`).
+    pub plans: Vec<PlanChange>,
+    /// Re-plan calls answered from the scheduler's cache (predicted gain
+    /// under the threshold): the expensive decision procedure ran only
+    /// `sched_ms.len() - sched_reused` times.
+    pub sched_reused: usize,
+}
+
+/// One recorded plan change, carrying the wall-clock of the re-plan call
+/// that actually produced it (so reporting cannot mis-attribute a cheap
+/// cached-reuse call's time to the call that ran the DP).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlanChange {
+    pub iter: u64,
+    pub fwd_segments: usize,
+    pub bwd_segments: usize,
+    /// Scheduler wall-clock of this specific re-plan, ms.
+    pub sched_ms: f64,
+}
+
+/// Outcome of one [`EdgeWorker::reschedule`] call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Reschedule {
+    /// Scheduler wall-clock, ms.
+    pub sched_ms: f64,
+    /// The cached plan was reused; no new `ExecPlan` was compiled.
+    pub reused: bool,
+    /// A fresh plan actually *differed* from the current one (a fresh
+    /// re-plan can reproduce the same decomposition on a stable profile —
+    /// that is not a plan change).
+    pub changed: bool,
+    /// The scheduler's own predicted iteration finish time, ms.
+    pub predicted_ms: f64,
 }
 
 /// One edge device, connected to every shard.
@@ -63,7 +109,12 @@ pub struct EdgeWorker {
     conns: Vec<Connection>,
     shard: ShardMap,
     pub profiler: Profiler,
+    scheduler: Box<dyn Scheduler>,
     plan: SchedulePlan,
+    /// The current plan compiled against the model + shard map (it also
+    /// owns the per-layer byte-size tables); shared with the puller/pusher
+    /// threads, rebuilt only when the plan changes.
+    exec: Arc<ExecPlan>,
 }
 
 /// Bounded retry-with-backoff for the worker→shard TCP connect: workers
@@ -91,7 +142,8 @@ fn connect_with_retry(addr: &std::net::SocketAddr) -> Result<TcpStream> {
 
 impl EdgeWorker {
     /// Load the runtime, connect to all shards (with bounded retry — the
-    /// server accept loop may still be coming up), register.
+    /// server accept loop may still be coming up), register and check the
+    /// protocol version both ways.
     pub fn connect(cfg: WorkerConfig) -> Result<EdgeWorker> {
         let runtime = RuntimeClient::load(&cfg.artifacts_dir)?;
         let depth = runtime.manifest.depth();
@@ -100,17 +152,28 @@ impl EdgeWorker {
         for addr in &cfg.server_addrs {
             let stream = connect_with_retry(addr)?;
             let mut conn = Connection::new(stream, cfg.shaper.clone());
-            conn.send(&Message::Hello { worker: cfg.id as u32 })?;
+            conn.send(&Message::Hello {
+                worker: cfg.id as u32,
+                version: PROTOCOL_VERSION,
+            })?;
             match conn.recv()? {
-                Message::HelloAck { .. } => {}
+                Message::HelloAck { version, .. } if version == PROTOCOL_VERSION => {}
+                Message::HelloAck { version, .. } => anyhow::bail!(
+                    "protocol version mismatch with shard {addr}: \
+                     worker speaks v{PROTOCOL_VERSION}, server v{version}"
+                ),
                 m => anyhow::bail!("bad hello ack: {m:?}"),
             }
             conns.push(conn);
         }
         let layer_bytes: Vec<usize> =
             runtime.manifest.layers.iter().map(|l| l.param_bytes()).collect();
-        let mut profiler = Profiler::new(layer_bytes);
+        let mut profiler = Profiler::new(layer_bytes.clone());
         profiler.enabled = cfg.profiling;
+        let scheduler = registry::create_for_with(
+            cfg.strategy,
+            SchedulerParams { gain_threshold_ms: cfg.gain_threshold_ms },
+        );
         // Bootstrap plan: LBL gives size-diverse per-layer transfer samples
         // for the profiler's Δt/rate fit; fixed strategies start as
         // themselves.
@@ -119,7 +182,8 @@ impl EdgeWorker {
             _ => Decomposition::layer_by_layer(depth),
         };
         let plan = SchedulePlan { fwd: boot.clone(), bwd: boot };
-        Ok(EdgeWorker { cfg, runtime, conns, shard, profiler, plan })
+        let exec = Arc::new(ExecPlan::compile(&plan, &layer_bytes, shard));
+        Ok(EdgeWorker { cfg, runtime, conns, shard, profiler, scheduler, plan, exec })
     }
 
     pub fn depth(&self) -> usize {
@@ -130,21 +194,32 @@ impl EdgeWorker {
         &self.plan
     }
 
-    /// Flat `w‖b` slab size of a layer, in bytes.
-    fn layer_bytes(&self, l: usize) -> usize {
-        let a = &self.runtime.manifest.layers[l];
-        4 * (a.w_count() + a.b_count())
+    /// The compiled form of [`EdgeWorker::plan`] that `iteration` executes.
+    pub fn exec_plan(&self) -> &ExecPlan {
+        &self.exec
     }
 
-    /// Re-run the scheduler from the latest profile; returns scheduling
-    /// wall-clock in ms, or None if the profiler has no signal yet.
-    pub fn reschedule(&mut self) -> Option<f64> {
+    /// Re-run the scheduler from the latest profile; returns the call's
+    /// outcome, or None if the profiler has no signal yet. When the
+    /// scheduler reuses its cached plan the compiled `ExecPlan` is kept
+    /// as-is (no recompilation).
+    pub fn reschedule(&mut self) -> Option<Reschedule> {
         let cv = self.profiler.cost_vectors()?;
         let t0 = Instant::now();
-        let plan = sched::plan_for(self.cfg.strategy, &cv);
-        let ms = t0.elapsed().as_secs_f64() * 1e3;
-        self.plan = plan;
-        Some(ms)
+        let sp = self.scheduler.plan(&cv);
+        let sched_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let outcome = Reschedule {
+            sched_ms,
+            reused: sp.reused,
+            changed: !sp.reused && sp.plan != self.plan,
+            predicted_ms: sp.predicted_ms(),
+        };
+        if outcome.changed {
+            let exec = ExecPlan::compile(&sp.plan, &self.exec.layer_bytes, self.shard);
+            self.exec = Arc::new(exec);
+            self.plan = sp.plan;
+        }
+        Some(outcome)
     }
 
     /// Run `iters` iterations, fetching batches from `next_batch`.
@@ -156,13 +231,19 @@ impl EdgeWorker {
         let mut report = WorkerReport::default();
         for i in 0..iters {
             if i > 0 && (i as usize) % self.cfg.reschedule_every == 0 {
-                if let Some(ms) = self.reschedule() {
-                    report.sched_ms.push(ms);
-                    report.plans.push((
-                        i,
-                        self.plan.fwd.num_transmissions(),
-                        self.plan.bwd.num_transmissions(),
-                    ));
+                if let Some(r) = self.reschedule() {
+                    report.sched_ms.push(r.sched_ms);
+                    report.sched_predicted_ms.push(r.predicted_ms);
+                    if r.reused {
+                        report.sched_reused += 1;
+                    } else if r.changed {
+                        report.plans.push(PlanChange {
+                            iter: i,
+                            fwd_segments: self.plan.fwd.num_transmissions(),
+                            bwd_segments: self.plan.bwd.num_transmissions(),
+                            sched_ms: r.sched_ms,
+                        });
+                    }
                 }
             }
             let (x, onehot) = next_batch(i);
@@ -176,76 +257,53 @@ impl EdgeWorker {
     }
 
     /// One BSP iteration: segmented pulls + layer-wise fwd, loss,
-    /// layer-wise bwd + segmented pushes.
+    /// layer-wise bwd + segmented pushes — all driven by the precompiled
+    /// [`ExecPlan`], no per-iteration segment or offset recomputation.
     pub fn iteration(&mut self, iter: u64, x: &Tensor, onehot: &Tensor) -> Result<(f32, f64)> {
         let depth = self.depth();
-        let fwd_segs: Vec<(usize, usize)> = self
-            .plan
-            .fwd
-            .fwd_segments()
-            .iter()
-            .map(|&(a, b)| (a - 1, b - 1)) // to 0-based
-            .collect();
-        let bwd_segs: Vec<(usize, usize)> = self
-            .plan
-            .bwd
-            .bwd_segments()
-            .iter()
-            .map(|&(hi, lo)| (hi - 1, lo - 1))
-            .collect();
-
-        // Byte sizes and prefix offsets of the per-layer slabs: slicing a
-        // segment blob is pure offset arithmetic.
-        let layer_bytes: Vec<usize> = (0..depth).map(|l| self.layer_bytes(l)).collect();
-        let mut byte_off = Vec::with_capacity(depth + 1);
-        byte_off.push(0usize);
-        for l in 0..depth {
-            byte_off.push(byte_off[l] + layer_bytes[l]);
-        }
+        let exec = self.exec.clone();
 
         // ---- Forward: puller thread streams segments; main computes. ----
-        let (param_tx, param_rx) = mpsc::channel::<(usize, Vec<u8>)>();
+        let (param_tx, param_rx) = mpsc::channel::<(usize, SlabSlice)>();
         let (stat_tx, stat_rx) = mpsc::channel::<(usize, f64)>();
         let mut puller_conns = Vec::new();
         for c in &self.conns {
             puller_conns.push(c.try_clone()?);
         }
-        let shard = self.shard;
-        let layer_bytes_puller = layer_bytes.clone();
-        let segs = fwd_segs.clone();
+        let exec_pull = exec.clone();
         let puller = std::thread::Builder::new()
             .name(format!("puller-{}", self.cfg.id))
             .spawn(move || -> Result<()> {
-                for (lo, hi) in segs {
+                for seg in &exec_pull.fwd {
                     let t0 = Instant::now();
-                    let mut per_layer: Vec<Option<Vec<u8>>> = vec![None; hi - lo + 1];
-                    for sub in shard.sub_requests(lo, hi) {
+                    for sub in &seg.subs {
                         puller_conns[sub.server].send(&Message::Pull {
                             iter,
-                            lo: lo as u32,
-                            hi: hi as u32,
+                            lo: seg.lo as u32,
+                            hi: seg.hi as u32,
                         })?;
                         let data = match puller_conns[sub.server].recv()? {
                             Message::PullReply { data, .. } => data,
                             m => anyhow::bail!("bad pull reply: {m:?}"),
                         };
-                        // The reply concatenates this shard's owned layers
-                        // ascending; slice it into per-layer slabs.
-                        let mut off = 0;
-                        for l in sub.layers() {
-                            let n = layer_bytes_puller[l];
-                            anyhow::ensure!(off + n <= data.len(), "short pull reply");
-                            per_layer[l - lo] = Some(data[off..off + n].to_vec());
-                            off += n;
+                        anyhow::ensure!(
+                            data.len() == sub.bytes,
+                            "pull reply size mismatch: got {}, want {}",
+                            data.len(),
+                            sub.bytes
+                        );
+                        // Hand each layer a view of the reply it arrived
+                        // in — no per-layer copies on the pull path.
+                        let data = Arc::new(data);
+                        for sl in &sub.slices {
+                            let _ = param_tx.send((
+                                sl.layer,
+                                SlabSlice::new(data.clone(), sl.reply_off, sl.len),
+                            ));
                         }
                     }
                     let ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let bytes: usize = (lo..=hi).map(|l| layer_bytes_puller[l]).sum();
-                    let _ = stat_tx.send((bytes, ms));
-                    for (off, p) in per_layer.into_iter().enumerate() {
-                        let p = p.context("server returned no data for layer")?;
-                        let _ = param_tx.send((lo + off, p));
-                    }
+                    let _ = stat_tx.send((seg.bytes, ms));
                 }
                 Ok(())
             })?;
@@ -280,38 +338,40 @@ impl EdgeWorker {
         let top1 = batch_top1(logits, onehot);
 
         // ---- Backward: main computes; pusher thread flushes segments. ----
-        let (grad_tx, grad_rx) = mpsc::channel::<(usize, usize, Vec<u8>)>();
+        // Channel carries (index into exec.bwd, segment blob).
+        let (grad_tx, grad_rx) = mpsc::channel::<(usize, Vec<u8>)>();
         let mut pusher_conns = Vec::new();
         for c in &self.conns {
             pusher_conns.push(c.try_clone()?);
         }
-        let layer_bytes_pusher = layer_bytes.clone();
-        let byte_off_pusher = byte_off.clone();
+        let exec_push = exec.clone();
         let pusher = std::thread::Builder::new()
             .name(format!("pusher-{}", self.cfg.id))
             .spawn(move || -> Result<Vec<(usize, f64)>> {
                 let mut stats = Vec::new();
-                // Receives one message per completed segment: (lo, hi, slab
-                // of layers lo..=hi ascending).
-                while let Ok((lo, hi, data)) = grad_rx.recv() {
+                while let Ok((si, data)) = grad_rx.recv() {
+                    let seg = &exec_push.bwd[si];
+                    anyhow::ensure!(
+                        data.len() == seg.bytes,
+                        "segment blob size mismatch: got {}, want {}",
+                        data.len(),
+                        seg.bytes
+                    );
                     let t0 = Instant::now();
-                    for sub in shard.sub_requests(lo, hi) {
+                    for sub in &seg.subs {
                         // Extract this shard's layers from the segment
-                        // slab: pre-sized buffer, bulk byte copies indexed
-                        // by the prefix offsets.
-                        let nbytes: usize =
-                            sub.layers().map(|l| layer_bytes_pusher[l]).sum();
-                        let mut payload = Vec::with_capacity(nbytes);
-                        for l in sub.layers() {
-                            let off = byte_off_pusher[l] - byte_off_pusher[lo];
+                        // slab: pre-sized buffer, bulk byte copies at the
+                        // precompiled offsets.
+                        let mut payload = Vec::with_capacity(sub.bytes);
+                        for sl in &sub.slices {
                             payload.extend_from_slice(
-                                &data[off..off + layer_bytes_pusher[l]],
+                                &data[sl.seg_off..sl.seg_off + sl.len],
                             );
                         }
                         pusher_conns[sub.server].send(&Message::Push {
                             iter,
-                            lo: lo as u32,
-                            hi: hi as u32,
+                            lo: seg.lo as u32,
+                            hi: seg.hi as u32,
                             data: payload,
                         })?;
                         match pusher_conns[sub.server].recv()? {
@@ -320,16 +380,15 @@ impl EdgeWorker {
                         }
                     }
                     let ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let bytes: usize = (lo..=hi).map(|l| layer_bytes_pusher[l]).sum();
-                    stats.push((bytes, ms));
+                    stats.push((seg.bytes, ms));
                 }
                 Ok(stats)
             })?;
 
         let mut gy = glogits;
         let mut pending: Vec<Option<Vec<u8>>> = vec![None; depth];
-        let mut seg_iter = bwd_segs.iter();
-        let mut cur_seg = seg_iter.next().copied();
+        let mut seg_iter = exec.bwd.iter().enumerate();
+        let mut cur_seg = seg_iter.next();
         for l in (0..depth).rev() {
             let (w, b) = params[l].as_ref().unwrap();
             let t0 = Instant::now();
@@ -337,23 +396,22 @@ impl EdgeWorker {
             let (gw, gb, gx) = self.runtime.layer_bwd(l, w, b, &acts[l], &gy_shaped)?;
             self.profiler.record_bwd(l, t0.elapsed().as_secs_f64() * 1e3);
             // Encode the layer's gradient slab once, pre-sized.
-            let mut flat = Vec::with_capacity(layer_bytes[l]);
+            let mut flat = Vec::with_capacity(exec.layer_bytes[l]);
             gw.extend_le_bytes(&mut flat);
             gb.extend_le_bytes(&mut flat);
             pending[l] = Some(flat);
             gy = gx;
             // Segment complete once we've computed down to its low layer.
-            if let Some((hi, lo)) = cur_seg {
-                if l == lo {
-                    let mut blob =
-                        Vec::with_capacity(byte_off[hi + 1] - byte_off[lo]);
-                    for ll in lo..=hi {
+            if let Some((si, seg)) = cur_seg {
+                if l == seg.lo {
+                    let mut blob = Vec::with_capacity(seg.bytes);
+                    for ll in seg.lo..=seg.hi {
                         blob.extend_from_slice(pending[ll].as_ref().unwrap());
                     }
                     grad_tx
-                        .send((lo, hi, blob))
+                        .send((si, blob))
                         .map_err(|_| anyhow::anyhow!("pusher died"))?;
-                    cur_seg = seg_iter.next().copied();
+                    cur_seg = seg_iter.next();
                 }
             }
         }
@@ -369,11 +427,12 @@ impl EdgeWorker {
     }
 
     /// Pull the parameters as of `iter` (blocks until the BSP clock gets
-    /// there) — used for evaluation snapshots.
+    /// there) — used for evaluation snapshots. Cold path, but the same
+    /// slicing discipline: layers are split straight out of each shard's
+    /// reply, no intermediate per-layer buffers.
     pub fn pull_params(&mut self, iter: u64) -> Result<Vec<(Tensor, Tensor)>> {
         let depth = self.depth();
-        let mut out = Vec::with_capacity(depth);
-        let mut flats: Vec<Option<Vec<u8>>> = vec![None; depth];
+        let mut out: Vec<Option<(Tensor, Tensor)>> = vec![None; depth];
         for srv in 0..self.shard.servers {
             self.conns[srv].send(&Message::Pull { iter, lo: 0, hi: depth as u32 - 1 })?;
             let data = match self.conns[srv].recv()? {
@@ -382,16 +441,16 @@ impl EdgeWorker {
             };
             let mut off = 0;
             for l in self.shard.owned_by(srv) {
-                let n = self.layer_bytes(l);
+                let n = self.exec.layer_bytes[l];
                 anyhow::ensure!(off + n <= data.len(), "short pull reply");
-                flats[l] = Some(data[off..off + n].to_vec());
+                out[l] = Some(self.split_params(l, &data[off..off + n])?);
                 off += n;
             }
         }
-        for (l, f) in flats.into_iter().enumerate() {
-            out.push(self.split_params(l, &f.context("missing layer")?)?);
-        }
-        Ok(out)
+        out.into_iter()
+            .enumerate()
+            .map(|(l, p)| p.with_context(|| format!("missing layer {l}")))
+            .collect()
     }
 
     /// Split a layer's `w‖b` byte slab into its weight and bias tensors —

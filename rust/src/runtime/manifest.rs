@@ -103,6 +103,19 @@ impl ArtifactManifest {
             });
         }
         anyhow::ensure!(!layers.is_empty(), "manifest has no layers");
+        // The wire pipeline sizes per-layer slabs from `param_count`
+        // (`param_bytes`) while tensor splitting sizes from the shapes;
+        // reject a manifest where the two disagree here, instead of deep
+        // in the pull path as a byte-count mismatch.
+        for a in &layers {
+            anyhow::ensure!(
+                a.param_count == a.w_count() + a.b_count(),
+                "layer {}: param_count {} != w+b element count {}",
+                a.name,
+                a.param_count,
+                a.w_count() + a.b_count()
+            );
+        }
 
         Ok(ArtifactManifest {
             dir,

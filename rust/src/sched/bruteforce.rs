@@ -4,10 +4,22 @@
 //! optimality oracle the DP algorithms are property-tested against.
 
 use super::cost::{eval_backward, eval_forward};
-use super::{CostVectors, Decomposition};
+use super::{CostVectors, Decomposition, SchedulePlan, ScheduledPlan, Scheduler};
 
 /// Practical depth cap: 2^24 evaluations is already seconds of work.
 pub const MAX_DEPTH: usize = 24;
+
+/// Depth up to which the exhaustive search is cheap enough for debug-mode
+/// property tests (≤ 2^12 evaluations, milliseconds). The band
+/// `(TEST_TRACTABLE_DEPTH, MAX_DEPTH]` still *runs* if asked — it is just
+/// too slow to sweep in tests, which skip it via [`intractable_in_tests`].
+pub const TEST_TRACTABLE_DEPTH: usize = 13;
+
+/// True for depths where the enumeration would actually run (≤
+/// [`MAX_DEPTH`], i.e. no DP fallback) but is too slow for test sweeps.
+pub fn intractable_in_tests(depth: usize) -> bool {
+    (TEST_TRACTABLE_DEPTH + 1..=MAX_DEPTH).contains(&depth)
+}
 
 /// Exhaustive optimum for the forward pass: `(best decomposition, time)`.
 pub fn forward(cv: &CostVectors) -> (Decomposition, f64) {
@@ -43,6 +55,42 @@ fn search(
         }
     }
     (best, best_t)
+}
+
+/// The exhaustive oracle behind the [`Scheduler`] API. Beyond
+/// [`MAX_DEPTH`] it falls back to the DP (provably the same optimum, see
+/// the optimality property tests) so registry consumers can never trigger
+/// 2^L work by accident.
+#[derive(Debug, Default)]
+pub struct BruteForceScheduler;
+
+impl BruteForceScheduler {
+    pub fn new() -> BruteForceScheduler {
+        BruteForceScheduler
+    }
+}
+
+impl Scheduler for BruteForceScheduler {
+    fn name(&self) -> &'static str {
+        "bruteforce"
+    }
+
+    fn plan(&mut self, cv: &CostVectors) -> ScheduledPlan {
+        let ((fwd, predicted_fwd_ms), (bwd, predicted_bwd_ms)) = if cv.depth() > MAX_DEPTH {
+            (
+                super::dynacomm::forward_with_value(cv),
+                super::dynacomm::backward_with_value(cv),
+            )
+        } else {
+            (forward(cv), backward(cv))
+        };
+        ScheduledPlan {
+            plan: SchedulePlan { fwd, bwd },
+            predicted_fwd_ms,
+            predicted_bwd_ms,
+            reused: false,
+        }
+    }
 }
 
 #[cfg(test)]

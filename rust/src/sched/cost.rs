@@ -117,6 +117,24 @@ pub fn eval_backward(cv: &CostVectors, d: &Decomposition) -> PassBreakdown {
     }
 }
 
+/// No forward schedule can finish before every parameter crosses the link
+/// (at least one mini-procedure pays `Δt`, and the link serializes all of
+/// `pt`) or before every layer computes: `max(Δt + Σ pt, Σ fc)`. Property-
+/// tested in `lower_bounds_hold_random`; the gain-thresholded DynaComm
+/// scheduler uses it to bound what a fresh DP run could still save.
+pub fn forward_lower_bound(cv: &CostVectors) -> f64 {
+    let comm = cv.delta_t + cv.pt.iter().sum::<f64>();
+    let comp = cv.fc.iter().sum::<f64>();
+    comm.max(comp)
+}
+
+/// Backward twin of [`forward_lower_bound`]: `max(Δt + Σ gt, Σ bc)`.
+pub fn backward_lower_bound(cv: &CostVectors) -> f64 {
+    let comm = cv.delta_t + cv.gt.iter().sum::<f64>();
+    let comp = cv.bc.iter().sum::<f64>();
+    comm.max(comp)
+}
+
 /// Whole-iteration breakdown: forward then backward (constraint (3) chains
 /// them; parameter pulls of iteration i+1 are not overlapped with iteration
 /// i, matching the paper's per-iteration accounting).
@@ -252,24 +270,36 @@ mod tests {
 
     #[test]
     fn lower_bounds_hold_random() {
-        // No schedule can beat max(total comm, total comp) in either pass.
+        // No schedule can beat max(total comm, total comp) in either pass —
+        // the bound forward_lower_bound/backward_lower_bound encode.
         let mut rng = Rng::new(13);
         for _ in 0..100 {
             let depth = rng.range(2, 16);
             let cv = random_cv(&mut rng, depth);
-            let comp: f64 = cv.fc.iter().sum();
-            let comm: f64 = cv.pt.iter().sum::<f64>() + cv.delta_t;
             let mut d = Decomposition::sequential(depth);
             for c in d.cuts.iter_mut() {
                 *c = rng.bool();
             }
             let f = eval_forward(&cv, &d);
-            assert!(f.total >= comp.max(comm) - 1e-9);
-            let bcomp: f64 = cv.bc.iter().sum();
-            let bcomm: f64 = cv.gt.iter().sum::<f64>() + cv.delta_t;
+            assert!(f.total >= forward_lower_bound(&cv) - 1e-9);
             let b = eval_backward(&cv, &d);
-            assert!(b.total >= bcomp.max(bcomm) - 1e-9);
+            assert!(b.total >= backward_lower_bound(&cv) - 1e-9);
         }
+    }
+
+    #[test]
+    fn lower_bounds_are_attained_when_one_side_dominates() {
+        // Pure-comm instance: a single transmission hits the bound exactly.
+        let cv = CostVectors {
+            pt: vec![5.0, 5.0],
+            fc: vec![0.0, 0.0],
+            bc: vec![0.0, 0.0],
+            gt: vec![5.0, 5.0],
+            delta_t: 1.0,
+        };
+        let d = Decomposition::sequential(2);
+        assert!((eval_forward(&cv, &d).total - forward_lower_bound(&cv)).abs() < 1e-9);
+        assert!((eval_backward(&cv, &d).total - backward_lower_bound(&cv)).abs() < 1e-9);
     }
 
     #[test]

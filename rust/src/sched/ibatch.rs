@@ -20,7 +20,7 @@
 //! better of the two candidates by estimated execution time.
 
 use super::cost::{eval_backward, eval_forward};
-use super::{prefix, CostVectors, Decomposition};
+use super::{prefix, CostVectors, Decomposition, SchedulePlan, ScheduledPlan, Scheduler};
 
 /// Greedy forward (parameter-transmission) scheduling: best of the
 /// left-to-right scan (Algorithm 1) and the reconstructed right-to-left
@@ -196,6 +196,35 @@ pub fn backward(cv: &CostVectors) -> Decomposition {
         }
     }
     best.unwrap().0
+}
+
+/// The greedy competitor behind the [`Scheduler`] API. Stateless — both
+/// scans are cheap enough to re-run on every call; predicted finish times
+/// come from the O(L) timeline evaluator (the greedy has no table optimum
+/// of its own).
+#[derive(Debug, Default)]
+pub struct IBatchScheduler;
+
+impl IBatchScheduler {
+    pub fn new() -> IBatchScheduler {
+        IBatchScheduler
+    }
+}
+
+impl Scheduler for IBatchScheduler {
+    fn name(&self) -> &'static str {
+        "ibatch"
+    }
+
+    fn plan(&mut self, cv: &CostVectors) -> ScheduledPlan {
+        let plan = SchedulePlan { fwd: forward(cv), bwd: backward(cv) };
+        ScheduledPlan {
+            predicted_fwd_ms: eval_forward(cv, &plan.fwd).total,
+            predicted_bwd_ms: eval_backward(cv, &plan.bwd).total,
+            plan,
+            reused: false,
+        }
+    }
 }
 
 #[cfg(test)]

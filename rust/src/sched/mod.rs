@@ -14,16 +14,22 @@
 //!   Eqs. 13/14), O(L^3) time / O(L^2) space.
 //! * [`bruteforce`] — exact `O(L·2^L)` enumeration, used as the optimality
 //!   oracle in tests and benches.
+//!
+//! Every strategy is exposed behind the [`Scheduler`] trait and created
+//! through [`registry`]; `docs/SCHEDULER.md` documents the API and how to
+//! add a strategy.
 
 pub mod bruteforce;
 pub mod cost;
 pub mod dynacomm;
 pub mod ibatch;
+pub mod registry;
 pub mod slicing;
 
-use crate::config::Strategy;
-
-pub use cost::{eval_backward, eval_forward, eval_iteration, IterationBreakdown, PassBreakdown};
+pub use cost::{
+    backward_lower_bound, eval_backward, eval_forward, eval_iteration,
+    forward_lower_bound, IterationBreakdown, PassBreakdown,
+};
 
 /// Per-layer cost vectors for one iteration (Section III-B), in ms.
 ///
@@ -158,27 +164,61 @@ pub struct SchedulePlan {
     pub bwd: Decomposition,
 }
 
-/// Produce the plan a strategy would choose for the given costs.
-pub fn plan_for(strategy: Strategy, cv: &CostVectors) -> SchedulePlan {
-    let depth = cv.depth();
-    match strategy {
-        Strategy::Sequential => SchedulePlan {
-            fwd: Decomposition::sequential(depth),
-            bwd: Decomposition::sequential(depth),
-        },
-        Strategy::LayerByLayer => SchedulePlan {
-            fwd: Decomposition::layer_by_layer(depth),
-            bwd: Decomposition::layer_by_layer(depth),
-        },
-        Strategy::IBatch => SchedulePlan {
-            fwd: ibatch::forward(cv),
-            bwd: ibatch::backward(cv),
-        },
-        Strategy::DynaComm => SchedulePlan {
-            fwd: dynacomm::forward(cv),
-            bwd: dynacomm::backward(cv),
-        },
+impl SchedulePlan {
+    /// One transmission per procedure for both passes.
+    pub fn sequential(depth: usize) -> SchedulePlan {
+        let d = Decomposition::sequential(depth);
+        SchedulePlan { fwd: d.clone(), bwd: d }
     }
+
+    /// One transmission per layer for both passes.
+    pub fn layer_by_layer(depth: usize) -> SchedulePlan {
+        let d = Decomposition::layer_by_layer(depth);
+        SchedulePlan { fwd: d.clone(), bwd: d }
+    }
+}
+
+/// What a [`Scheduler::plan`] call returns: the decomposition decisions
+/// plus the strategy's own predicted pass finish times (ms) under the
+/// cost vectors it was handed. For DynaComm the predictions are the DP
+/// table optima (`min_n F[L][n]` / `min_n B[L][n]`); for every other
+/// strategy they come from the O(L) timeline evaluator, so in all cases
+/// `predicted_fwd_ms == eval_forward(cv, &plan.fwd).total` (and likewise
+/// backward) — an invariant the registry conformance tests pin down.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduledPlan {
+    pub plan: SchedulePlan,
+    /// Predicted forward-pass finish time, ms.
+    pub predicted_fwd_ms: f64,
+    /// Predicted backward-pass finish time, ms.
+    pub predicted_bwd_ms: f64,
+    /// True when a stateful scheduler answered from its cache instead of
+    /// re-running its decision procedure (gain-thresholded re-planning).
+    pub reused: bool,
+}
+
+impl ScheduledPlan {
+    /// Predicted whole-iteration finish time, ms.
+    pub fn predicted_ms(&self) -> f64 {
+        self.predicted_fwd_ms + self.predicted_bwd_ms
+    }
+}
+
+/// A layer-wise communication scheduling strategy.
+///
+/// Schedulers are stateful (`&mut self`): a strategy may cache its last
+/// plan and answer [`ScheduledPlan::reused`] when re-planning cannot pay
+/// for itself — the DynaComm scheduler skips its O(L^3) DP this way.
+/// Stateless strategies simply recompute every call. Instances come from
+/// [`registry::create`] (by name) or [`registry::create_for`] (from the
+/// [`crate::config::Strategy`] config shim).
+pub trait Scheduler {
+    /// Registry name of this scheduler (`registry::NAMES` entry).
+    fn name(&self) -> &'static str;
+
+    /// Produce (or reuse) the decomposition decisions for one iteration
+    /// under the given per-layer costs.
+    fn plan(&mut self, cv: &CostVectors) -> ScheduledPlan;
 }
 
 /// Inclusive prefix sums with a leading 0: `out[m] = Σ_{l=1..m} v[l]`.

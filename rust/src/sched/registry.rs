@@ -1,0 +1,158 @@
+//! Scheduler registry: boxed [`Scheduler`] strategies by name.
+//!
+//! The registry is the single place strategies are instantiated — the
+//! worker, trainer, simulator, sweeps, and figure drivers all route through
+//! it, so adding a strategy (e.g. ACE-Sync-style adaptive synchronization
+//! or AccEPT-style compressed slabs, PAPERS.md) means implementing
+//! [`Scheduler`] and registering one more arm here; no call site changes.
+//!
+//! [`crate::config::Strategy`] remains the config/CLI shim for the four
+//! paper strategies; the registry accepts every `Strategy::parse` spelling
+//! plus entries the enum never had (`slicing`, `bruteforce`).
+
+use anyhow::Result;
+
+use super::cost::{eval_backward, eval_forward};
+use super::{CostVectors, SchedulePlan, ScheduledPlan, Scheduler};
+use crate::config::Strategy;
+
+/// Tuning knobs threaded into stateful schedulers at creation time.
+/// The default (`gain_threshold_ms: 0.0`) re-plans on every call.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct SchedulerParams {
+    /// DynaComm: skip the O(L^3) DP when re-planning cannot gain more than
+    /// this many ms over the cached plan. `0.0` re-plans on every call
+    /// (the stateless behavior); see
+    /// [`crate::sched::dynacomm::DynaCommScheduler`].
+    pub gain_threshold_ms: f64,
+}
+
+/// Canonical names of every registry entry, in creation-tested order.
+pub const NAMES: [&str; 6] =
+    ["sequential", "lbl", "ibatch", "dynacomm", "slicing", "bruteforce"];
+
+/// Create a scheduler by name with default [`SchedulerParams`].
+pub fn create(name: &str) -> Result<Box<dyn Scheduler>> {
+    create_with(name, SchedulerParams::default())
+}
+
+/// Create a scheduler by name. Accepts every [`Strategy::parse`] spelling
+/// plus the registry-only entries; unknown names list what is available.
+pub fn create_with(name: &str, params: SchedulerParams) -> Result<Box<dyn Scheduler>> {
+    if let Some(strategy) = Strategy::parse(name) {
+        return Ok(create_for_with(strategy, params));
+    }
+    match name.to_ascii_lowercase().as_str() {
+        "slicing" | "p3" | "bytescheduler" => {
+            Ok(Box::new(super::slicing::SlicingScheduler::new()))
+        }
+        "bruteforce" | "oracle" => {
+            Ok(Box::new(super::bruteforce::BruteForceScheduler::new()))
+        }
+        _ => anyhow::bail!(
+            "unknown scheduler '{name}' (known: {})",
+            NAMES.join(", ")
+        ),
+    }
+}
+
+/// Create the scheduler behind a config [`Strategy`] with default params.
+pub fn create_for(strategy: Strategy) -> Box<dyn Scheduler> {
+    create_for_with(strategy, SchedulerParams::default())
+}
+
+/// Create the scheduler behind a config [`Strategy`].
+pub fn create_for_with(strategy: Strategy, params: SchedulerParams) -> Box<dyn Scheduler> {
+    match strategy {
+        Strategy::Sequential => Box::new(FixedScheduler::sequential()),
+        Strategy::LayerByLayer => Box::new(FixedScheduler::layer_by_layer()),
+        Strategy::IBatch => Box::new(super::ibatch::IBatchScheduler::new()),
+        Strategy::DynaComm => Box::new(super::dynacomm::DynaCommScheduler::new(
+            params.gain_threshold_ms,
+        )),
+    }
+}
+
+/// Sequential / layer-by-layer: fixed decompositions whose predicted
+/// finish times come from the O(L) timeline evaluator.
+pub struct FixedScheduler {
+    name: &'static str,
+    build: fn(usize) -> SchedulePlan,
+}
+
+impl FixedScheduler {
+    pub fn sequential() -> FixedScheduler {
+        FixedScheduler { name: "sequential", build: SchedulePlan::sequential }
+    }
+
+    pub fn layer_by_layer() -> FixedScheduler {
+        FixedScheduler { name: "lbl", build: SchedulePlan::layer_by_layer }
+    }
+}
+
+impl Scheduler for FixedScheduler {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn plan(&mut self, cv: &CostVectors) -> ScheduledPlan {
+        let plan = (self.build)(cv.depth());
+        ScheduledPlan {
+            predicted_fwd_ms: eval_forward(cv, &plan.fwd).total,
+            predicted_bwd_ms: eval_backward(cv, &plan.bwd).total,
+            plan,
+            reused: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::testutil::random_cv;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn every_name_creates_and_reports_itself() {
+        for name in NAMES {
+            let s = create(name).unwrap();
+            assert_eq!(s.name(), name, "canonical name round-trip");
+        }
+        // Alias spellings resolve too.
+        for alias in ["seq", "layer-by-layer", "ipart", "dp", "p3", "oracle"] {
+            assert!(create(alias).is_ok(), "{alias}");
+        }
+        assert!(create("nope").is_err());
+        let err = format!("{:#}", create("nope").unwrap_err());
+        assert!(err.contains("dynacomm"), "error lists known names: {err}");
+    }
+
+    #[test]
+    fn strategy_shim_maps_onto_registry_names() {
+        for s in Strategy::ALL {
+            assert_eq!(create_for(s).name(), s.name());
+        }
+    }
+
+    #[test]
+    fn fixed_schedulers_predict_their_eval_totals() {
+        let mut rng = Rng::new(81);
+        for _ in 0..50 {
+            let depth = rng.range(1, 20);
+            let cv = random_cv(&mut rng, depth);
+            for (mut s, segs) in [
+                (FixedScheduler::sequential(), 1),
+                (FixedScheduler::layer_by_layer(), depth),
+            ] {
+                let sp = s.plan(&cv);
+                assert_eq!(sp.plan.fwd.num_transmissions(), segs);
+                assert!(!sp.reused);
+                let f = eval_forward(&cv, &sp.plan.fwd).total;
+                let b = eval_backward(&cv, &sp.plan.bwd).total;
+                assert!((sp.predicted_fwd_ms - f).abs() < 1e-9);
+                assert!((sp.predicted_bwd_ms - b).abs() < 1e-9);
+                assert!((sp.predicted_ms() - (f + b)).abs() < 1e-9);
+            }
+        }
+    }
+}

@@ -10,7 +10,7 @@
 //! auto-tunes), too large a slice loses overlap. DynaComm's DP sidesteps
 //! the knob entirely; the `schedule_sensitivity` example ablates it.
 
-use super::{CostVectors, Decomposition};
+use super::{CostVectors, Decomposition, SchedulePlan, ScheduledPlan, Scheduler};
 
 /// Cut greedily so each segment's transmission payload stays below
 /// `slice_ms` (always cutting at layer boundaries — the finest legal
@@ -61,6 +61,51 @@ pub fn forward_autotuned(cv: &CostVectors) -> (Decomposition, f64) {
         }
     }
     best.unwrap()
+}
+
+/// Backward twin of [`forward_autotuned`]: sweep the gradient-slice
+/// granularity and keep the best by the backward timeline evaluator.
+pub fn backward_autotuned(cv: &CostVectors) -> (Decomposition, f64) {
+    let total: f64 = cv.gt.iter().sum();
+    let mut best: Option<(Decomposition, f64)> = None;
+    for steps in 1..=cv.depth() {
+        let d = backward_slices(cv, (total / steps as f64).max(1e-9));
+        let t = super::cost::eval_backward(cv, &d).total;
+        if best.as_ref().map(|(_, bt)| t < *bt).unwrap_or(true) {
+            best = Some((d, t));
+        }
+    }
+    best.unwrap()
+}
+
+/// P3/ByteScheduler-style auto-tuned slicing behind the [`Scheduler`] API —
+/// a registry entry the legacy `Strategy` enum never had, exercising the
+/// registry's open extension point. Stateless: the granularity sweep is
+/// O(L^2) and re-runs every call.
+#[derive(Debug, Default)]
+pub struct SlicingScheduler;
+
+impl SlicingScheduler {
+    pub fn new() -> SlicingScheduler {
+        SlicingScheduler
+    }
+}
+
+impl Scheduler for SlicingScheduler {
+    fn name(&self) -> &'static str {
+        "slicing"
+    }
+
+    fn plan(&mut self, cv: &CostVectors) -> ScheduledPlan {
+        let (fwd, predicted_fwd_ms) = forward_autotuned(cv);
+        let (bwd, predicted_bwd_ms) = backward_autotuned(cv);
+        ScheduledPlan {
+            plan: SchedulePlan { fwd, bwd },
+            predicted_fwd_ms,
+            predicted_bwd_ms,
+            reused: false,
+        }
+    }
 }
 
 #[cfg(test)]

@@ -17,26 +17,44 @@ pub mod workload;
 
 use crate::config::{Strategy, SystemConfig};
 use crate::models::ModelSpec;
-use crate::sched::{self, CostVectors, IterationBreakdown, SchedulePlan};
+use crate::sched::{self, CostVectors, IterationBreakdown, ScheduledPlan, Scheduler};
 
 /// Simulate one iteration of `model` under `cfg` with the configured
 /// strategy: derive cost vectors, run the scheduler, evaluate the timeline.
 pub fn simulate(model: &ModelSpec, cfg: &SystemConfig) -> SimResult {
     let cv = model.cost_vectors(cfg);
-    simulate_cv(&cv, cfg.strategy)
+    let mut scheduler =
+        sched::registry::create_for_with(cfg.strategy, cfg.scheduler_params());
+    let (sched, breakdown) = simulate_scheduler(scheduler.as_mut(), &cv);
+    SimResult { strategy: cfg.strategy, sched, breakdown }
 }
 
-/// Same, over externally supplied cost vectors (real profiles, workloads).
+/// Same, over externally supplied cost vectors (real profiles, workloads),
+/// with a fresh default-parameter scheduler from the registry.
 pub fn simulate_cv(cv: &CostVectors, strategy: Strategy) -> SimResult {
-    let plan = sched::plan_for(strategy, cv);
-    let breakdown = sched::eval_iteration(cv, &plan.fwd, &plan.bwd);
-    SimResult { strategy, plan, breakdown }
+    let mut scheduler = sched::registry::create_for(strategy);
+    let (sched, breakdown) = simulate_scheduler(scheduler.as_mut(), cv);
+    SimResult { strategy, sched, breakdown }
+}
+
+/// Core entry: run any [`Scheduler`] (possibly stateful, mid-sequence —
+/// registry-only entries included) and evaluate its plan on the
+/// independent timeline evaluator.
+pub fn simulate_scheduler(
+    scheduler: &mut dyn Scheduler,
+    cv: &CostVectors,
+) -> (ScheduledPlan, IterationBreakdown) {
+    let sched = scheduler.plan(cv);
+    let breakdown = sched::eval_iteration(cv, &sched.plan.fwd, &sched.plan.bwd);
+    (sched, breakdown)
 }
 
 #[derive(Debug, Clone)]
 pub struct SimResult {
     pub strategy: Strategy,
-    pub plan: SchedulePlan,
+    /// The scheduler's decision plus its own predicted finish times.
+    pub sched: ScheduledPlan,
+    /// The independent timeline evaluation of that plan.
     pub breakdown: IterationBreakdown,
 }
 
@@ -101,6 +119,30 @@ mod tests {
                         s.name()
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn scheduler_predictions_match_timeline_eval() {
+        // Every strategy's self-reported predicted finish time must agree
+        // with the independent timeline evaluation of its plan — the
+        // ScheduledPlan contract.
+        let cfg = SystemConfig::default();
+        for m in models::paper_models() {
+            let cv = m.cost_vectors(&cfg);
+            for s in Strategy::ALL {
+                let r = simulate_cv(&cv, s);
+                assert!(
+                    (r.sched.predicted_fwd_ms - r.breakdown.fwd.total).abs() < 1e-6,
+                    "{} {} fwd", m.name, s.name()
+                );
+                assert!(
+                    (r.sched.predicted_bwd_ms - r.breakdown.bwd.total).abs() < 1e-6,
+                    "{} {} bwd", m.name, s.name()
+                );
+                assert!((r.sched.predicted_ms() - r.total_ms()).abs() < 1e-6);
+                assert!(!r.sched.reused, "fresh scheduler cannot reuse");
             }
         }
     }

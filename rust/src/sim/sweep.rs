@@ -1,5 +1,8 @@
 //! Parameter sweeps — the sensitivity (Fig. 9) and scalability (Fig. 11)
-//! experiment drivers, shared between benches and examples.
+//! experiment drivers, shared between benches and examples. Each sweep
+//! point routes through the `sched::Scheduler` registry (via
+//! [`reduced_ratio`] / [`cluster::speedup`]), so registry-only strategies
+//! are a one-line addition to these figures.
 
 use crate::config::{Strategy, SystemConfig};
 use crate::models::ModelSpec;

@@ -176,7 +176,7 @@ pub fn check_backward_constraints(events: &[Event], depth: usize) -> Result<(), 
 mod tests {
     use super::*;
     use crate::sched::testutil::random_cv;
-    use crate::sched::{dynacomm, eval_backward, eval_forward, ibatch};
+    use crate::sched::{bruteforce, eval_backward, eval_forward, registry, Scheduler};
     use crate::util::rng::Rng;
 
     fn random_decomposition(rng: &mut Rng, depth: usize) -> Decomposition {
@@ -187,39 +187,47 @@ mod tests {
         d
     }
 
+    /// Every registry scheduler's plan, plus random decompositions, per
+    /// pass. The exhaustive oracle only runs where it is tractable.
+    fn candidate_plans(
+        rng: &mut Rng,
+        cv: &CostVectors,
+    ) -> Vec<(Decomposition, Decomposition)> {
+        let depth = cv.depth();
+        let mut out = Vec::new();
+        for name in registry::NAMES {
+            if name == "bruteforce" && bruteforce::intractable_in_tests(depth) {
+                continue;
+            }
+            let sp = registry::create(name).unwrap().plan(cv);
+            out.push((sp.plan.fwd, sp.plan.bwd));
+        }
+        let r = random_decomposition(rng, depth);
+        out.push((r.clone(), r));
+        out
+    }
+
     #[test]
-    fn forward_constraints_hold_for_all_strategies() {
+    fn forward_constraints_hold_for_all_schedulers() {
         let mut rng = Rng::new(51);
         for _ in 0..100 {
             let depth = rng.range(1, 20);
             let cv = random_cv(&mut rng, depth);
-            for d in [
-                Decomposition::sequential(depth),
-                Decomposition::layer_by_layer(depth),
-                ibatch::forward(&cv),
-                dynacomm::forward(&cv),
-                random_decomposition(&mut rng, depth),
-            ] {
-                let ev = forward_timeline(&cv, &d);
+            for (fwd, _) in candidate_plans(&mut rng, &cv) {
+                let ev = forward_timeline(&cv, &fwd);
                 check_forward_constraints(&ev, depth).unwrap();
             }
         }
     }
 
     #[test]
-    fn backward_constraints_hold_for_all_strategies() {
+    fn backward_constraints_hold_for_all_schedulers() {
         let mut rng = Rng::new(52);
         for _ in 0..100 {
             let depth = rng.range(1, 20);
             let cv = random_cv(&mut rng, depth);
-            for d in [
-                Decomposition::sequential(depth),
-                Decomposition::layer_by_layer(depth),
-                ibatch::backward(&cv),
-                dynacomm::backward(&cv),
-                random_decomposition(&mut rng, depth),
-            ] {
-                let ev = backward_timeline(&cv, &d);
+            for (_, bwd) in candidate_plans(&mut rng, &cv) {
+                let ev = backward_timeline(&cv, &bwd);
                 check_backward_constraints(&ev, depth).unwrap();
             }
         }

@@ -40,6 +40,10 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Validation batches for the epoch-end accuracy measurement.
     pub val_batches: usize,
+    /// DynaComm re-plan gain threshold, ms: skip the O(L^3) DP at an epoch
+    /// boundary when a fresh plan cannot gain more than this over the
+    /// cached one. 0 re-plans every epoch (the paper's Section IV-C loop).
+    pub gain_threshold_ms: f64,
 }
 
 impl Default for TrainConfig {
@@ -58,6 +62,7 @@ impl Default for TrainConfig {
             profiling: true,
             seed: 0,
             val_batches: 4,
+            gain_threshold_ms: 0.0,
         }
     }
 }
@@ -141,6 +146,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
             )),
             profiling: cfg.profiling,
             reschedule_every: cfg.iters_per_epoch,
+            gain_threshold_ms: cfg.gain_threshold_ms,
         };
         let ds = dataset.clone();
         let want_params = w == 0;

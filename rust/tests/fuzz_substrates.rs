@@ -79,8 +79,14 @@ fn random_message(rng: &mut Rng) -> Message {
         1 => Message::PullReply { iter: rng.next_u64(), lo: 0, hi: 5, data },
         2 => Message::Push { iter: rng.next_u64(), lo: 1, hi: 3, data },
         3 => Message::PushAck { iter: rng.next_u64(), lo: 0, hi: 0 },
-        4 => Message::Hello { worker: rng.below(64) as u32 },
-        5 => Message::HelloAck { workers: rng.below(64) as u32 },
+        4 => Message::Hello {
+            worker: rng.below(64) as u32,
+            version: rng.below(1 << 16) as u16,
+        },
+        5 => Message::HelloAck {
+            workers: rng.below(64) as u32,
+            version: rng.below(1 << 16) as u16,
+        },
         _ => Message::Shutdown,
     }
 }

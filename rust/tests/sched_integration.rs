@@ -4,28 +4,33 @@
 
 use dynacomm::config::{Strategy, SystemConfig};
 use dynacomm::models;
-use dynacomm::sched::{self, bruteforce, Decomposition};
+use dynacomm::sched::{self, bruteforce, registry, Decomposition, Scheduler};
 use dynacomm::sim::{self, timeline};
 use dynacomm::util::rng::Rng;
 
-/// Every strategy on every paper model yields a constraint-satisfying
-/// mini-procedure timeline.
+/// Every registry scheduler on every paper model yields a
+/// constraint-satisfying mini-procedure timeline.
 #[test]
-fn all_strategy_timelines_satisfy_constraints_on_paper_models() {
+fn all_scheduler_timelines_satisfy_constraints_on_paper_models() {
     let mut cfg = SystemConfig::default();
     for batch in [16, 32] {
         cfg.batch = batch;
         for model in models::paper_models() {
             let cv = model.cost_vectors(&cfg);
-            for s in Strategy::ALL {
-                let plan = sched::plan_for(s, &cv);
-                let f = timeline::forward_timeline(&cv, &plan.fwd);
+            for name in registry::NAMES {
+                // The exhaustive oracle is only tractable at small depth;
+                // its DP fallback is exercised by resnet152 (L=152 > cap).
+                if name == "bruteforce" && bruteforce::intractable_in_tests(cv.depth()) {
+                    continue;
+                }
+                let sp = registry::create(name).unwrap().plan(&cv);
+                let f = timeline::forward_timeline(&cv, &sp.plan.fwd);
                 timeline::check_forward_constraints(&f, cv.depth()).unwrap_or_else(
-                    |e| panic!("{} {} fwd: {e}", model.name, s.name()),
+                    |e| panic!("{} {name} fwd: {e}", model.name),
                 );
-                let b = timeline::backward_timeline(&cv, &plan.bwd);
+                let b = timeline::backward_timeline(&cv, &sp.plan.bwd);
                 timeline::check_backward_constraints(&b, cv.depth()).unwrap_or_else(
-                    |e| panic!("{} {} bwd: {e}", model.name, s.name()),
+                    |e| panic!("{} {name} bwd: {e}", model.name),
                 );
             }
         }
@@ -45,15 +50,17 @@ fn dynacomm_exactly_optimal_on_edgecnn_profiles() {
                 cfg.net.bandwidth_gbps = bw;
                 cfg.net.delta_t_ms = dt;
                 let cv = model.cost_vectors(&cfg);
-                let plan = sched::plan_for(Strategy::DynaComm, &cv);
+                let sp = registry::create_for(Strategy::DynaComm).plan(&cv);
                 let (_, best_f) = bruteforce::forward(&cv);
-                let got_f = sched::eval_forward(&cv, &plan.fwd).total;
+                let got_f = sched::eval_forward(&cv, &sp.plan.fwd).total;
                 assert!(
                     (got_f - best_f).abs() < 1e-7,
                     "bs={batch} bw={bw} dt={dt}: {got_f} vs {best_f}"
                 );
+                // The scheduler's own prediction agrees with the oracle.
+                assert!((sp.predicted_fwd_ms - best_f).abs() < 1e-7);
                 let (_, best_b) = bruteforce::backward(&cv);
-                let got_b = sched::eval_backward(&cv, &plan.bwd).total;
+                let got_b = sched::eval_backward(&cv, &sp.plan.bwd).total;
                 assert!((got_b - best_b).abs() < 1e-7);
             }
         }
@@ -118,18 +125,117 @@ fn randomized_cross_validation_sweep() {
     }
 }
 
-/// Scheduling decisions must be pure functions of the cost vectors.
+/// Scheduling decisions must be pure functions of the cost vectors for
+/// fresh schedulers (statefulness only ever *reuses* earlier decisions).
 #[test]
-fn plans_deterministic_across_calls() {
+fn plans_deterministic_across_fresh_schedulers() {
     let cfg = SystemConfig::default();
     for model in models::paper_models() {
         let cv = model.cost_vectors(&cfg);
         for s in Strategy::ALL {
-            let a = sched::plan_for(s, &cv);
-            let b = sched::plan_for(s, &cv);
-            assert_eq!(a.fwd, b.fwd, "{} {}", model.name, s.name());
-            assert_eq!(a.bwd, b.bwd);
+            let a = registry::create_for(s).plan(&cv);
+            let b = registry::create_for(s).plan(&cv);
+            assert_eq!(a.plan, b.plan, "{} {}", model.name, s.name());
+            assert_eq!(a.predicted_fwd_ms, b.predicted_fwd_ms);
+            assert_eq!(a.predicted_bwd_ms, b.predicted_bwd_ms);
         }
+    }
+}
+
+/// Trait conformance over every registry entry: on random cost vectors
+/// each scheduler must return decompositions that partition the layers,
+/// predictions that match the independent timeline evaluator, and DynaComm
+/// must beat-or-tie the fixed strategies.
+#[test]
+fn registry_conformance_on_random_profiles() {
+    let mut rng = Rng::new(181);
+    for _ in 0..60 {
+        let depth = rng.range(1, 12);
+        let params = dynacomm::sim::workload::WorkloadParams {
+            comm_mu: rng.range_f64(-1.0, 2.0),
+            comp_mu: rng.range_f64(-1.0, 2.0),
+            sigma: rng.range_f64(0.2, 1.5),
+            delta_t: rng.range_f64(0.0, 20.0),
+        };
+        let cv = dynacomm::sim::workload::generate(&mut rng, depth, params);
+        let mut by_name = std::collections::HashMap::new();
+        for name in registry::NAMES {
+            let mut s = registry::create(name).unwrap();
+            assert_eq!(s.name(), name);
+            let sp = s.plan(&cv);
+            // Decompositions partition the layers in both passes.
+            for d in [&sp.plan.fwd, &sp.plan.bwd] {
+                assert_eq!(d.depth(), depth, "{name}");
+                let mut covered: Vec<usize> =
+                    d.fwd_segments().iter().flat_map(|&(a, b)| a..=b).collect();
+                covered.sort_unstable();
+                assert_eq!(covered, (1..=depth).collect::<Vec<_>>(), "{name}");
+            }
+            // Predictions match the independent evaluator.
+            let f = sched::eval_forward(&cv, &sp.plan.fwd).total;
+            let b = sched::eval_backward(&cv, &sp.plan.bwd).total;
+            assert!((sp.predicted_fwd_ms - f).abs() < 1e-7, "{name}: {sp:?}");
+            assert!((sp.predicted_bwd_ms - b).abs() < 1e-7, "{name}: {sp:?}");
+            assert!(!sp.reused, "{name}: fresh scheduler reused");
+            by_name.insert(name, sp);
+        }
+        // DynaComm beats-or-ties Sequential and LBL (and the oracle
+        // confirms it at these depths).
+        let dyna = by_name["dynacomm"].predicted_ms();
+        for fixed in ["sequential", "lbl", "ibatch", "slicing"] {
+            assert!(
+                dyna <= by_name[fixed].predicted_ms() + 1e-7,
+                "dynacomm {dyna} lost to {fixed} {}",
+                by_name[fixed].predicted_ms()
+            );
+        }
+        assert!((dyna - by_name["bruteforce"].predicted_ms()).abs() < 1e-7);
+    }
+}
+
+/// The gain-threshold property pair: threshold 0 re-plans every call and
+/// matches the stateless DP exactly; a huge threshold reuses the cached
+/// plan from the second call on.
+#[test]
+fn gain_threshold_replan_vs_reuse() {
+    let mut rng = Rng::new(182);
+    let depth = 14;
+    let profiles: Vec<sched::CostVectors> = (0..12)
+        .map(|_| {
+            dynacomm::sim::workload::generate(
+                &mut rng,
+                depth,
+                dynacomm::sim::workload::WorkloadParams::default(),
+            )
+        })
+        .collect();
+
+    let mut zero = registry::create_with(
+        "dynacomm",
+        registry::SchedulerParams { gain_threshold_ms: 0.0 },
+    )
+    .unwrap();
+    for cv in &profiles {
+        let sp = zero.plan(cv);
+        assert!(!sp.reused, "threshold 0 must always re-plan");
+        assert_eq!(sp.plan.fwd, sched::dynacomm::forward(cv));
+        assert_eq!(sp.plan.bwd, sched::dynacomm::backward(cv));
+    }
+
+    let mut huge = registry::create_with(
+        "dynacomm",
+        registry::SchedulerParams { gain_threshold_ms: f64::INFINITY },
+    )
+    .unwrap();
+    let first = huge.plan(&profiles[0]);
+    assert!(!first.reused);
+    for cv in &profiles[1..] {
+        let sp = huge.plan(cv);
+        assert!(sp.reused, "huge threshold must reuse the cached plan");
+        assert_eq!(sp.plan, first.plan);
+        // Even reused, the prediction reflects the *current* costs.
+        let f = sched::eval_forward(cv, &sp.plan.fwd).total;
+        assert!((sp.predicted_fwd_ms - f).abs() < 1e-9);
     }
 }
 
