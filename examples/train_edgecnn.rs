@@ -34,7 +34,10 @@ fn main() -> anyhow::Result<()> {
     cfg.setup_ms = args.f64("setup-ms", 2.0);
     cfg.latency_ms = args.f64("latency-ms", 1.0);
     cfg.bytes_per_ms = args.f64("bytes-per-ms", 500_000.0);
-    cfg.gain_threshold_ms = args.f64("gain-threshold-ms", cfg.gain_threshold_ms);
+    if let Some(s) = args.get("gain-threshold-ms") {
+        cfg.gain_threshold_ms = dynacomm::config::parse_gain_threshold(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --gain-threshold-ms '{s}'"))?;
+    }
     if let Some(s) = args.get("strategy") {
         cfg.strategy = Strategy::parse(s)
             .ok_or_else(|| anyhow::anyhow!("bad --strategy '{s}'"))?;

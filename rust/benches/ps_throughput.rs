@@ -1,0 +1,295 @@
+//! PS wire-path throughput bench — the perf trajectory's first entry
+//! (`results/BENCH_wire.json`, uploaded by CI on every PR).
+//!
+//! Drives N workers × L layers of full-range pulls through a real loopback
+//! shard and measures aggregate server-side egress two ways:
+//!
+//! * **current path** — shared pull-reply broadcast (assembled once per
+//!   `(iter, segment)`, served to every worker as an `Arc` clone), pooled
+//!   slabs, vectored `[header][slab]` send;
+//! * **legacy path** — the pre-change serve loop, reconstructed verbatim
+//!   in this bench: per-worker slab assembly into a fresh buffer, then a
+//!   full memcpy of the slab into the frame scratch (`encode_into`), then
+//!   `write_all`.
+//!
+//! Alongside bytes/sec it reports the reply-cache hit rate and the pool's
+//! steady-state allocation count (which must be zero after warm-up).
+//! Target: ≥ 2× server-side throughput at 8 workers.
+
+mod common;
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Instant;
+
+use dynacomm::figures;
+use dynacomm::net::{slab, Connection, Message};
+use dynacomm::ps::{ParamServer, ServerConfig};
+use dynacomm::util::json::Json;
+
+const LAYERS: usize = 8;
+/// 256 KiB per layer → 2 MiB per full-range reply.
+const LAYER_F32S: usize = 64 << 10;
+const WORKERS: usize = 8;
+
+fn reply_bytes() -> usize {
+    4 * LAYER_F32S * LAYERS
+}
+
+fn layer_init() -> HashMap<usize, Vec<f32>> {
+    (0..LAYERS).map(|l| (l, vec![l as f32 + 0.5; LAYER_F32S])).collect()
+}
+
+/// `workers` concurrent clients × `reps` full-range pulls of iteration 0
+/// against `addr`; returns the wall-clock seconds of the pull phase.
+fn drive_pulls(addr: std::net::SocketAddr, workers: usize, reps: usize) -> f64 {
+    let barrier = Arc::new(Barrier::new(workers + 1));
+    let mut threads = Vec::new();
+    for _ in 0..workers {
+        let barrier = barrier.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+            barrier.wait();
+            for _ in 0..reps {
+                conn.send(&Message::Pull { iter: 0, lo: 0, hi: LAYERS as u32 - 1 })
+                    .unwrap();
+                match conn.recv().unwrap() {
+                    Message::PullReply { data, .. } => {
+                        assert_eq!(data.len(), reply_bytes())
+                    }
+                    m => panic!("{m:?}"),
+                }
+            }
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for t in threads {
+        t.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// `workers` clients in BSP lockstep over iterations `start..end`: each
+/// pulls the full range at its iteration, then pushes a zero gradient for
+/// it — so the server assembles one fresh reply per iteration (plus
+/// eviction, push accumulation, and version waits), the realistic
+/// steady-state mix rather than the cache-hot broadcast case. Returns
+/// wall-clock seconds.
+fn drive_bsp(addr: std::net::SocketAddr, workers: usize, start: u64, end: u64) -> f64 {
+    let grad = vec![0.0f32; LAYER_F32S * LAYERS];
+    let barrier = Arc::new(Barrier::new(workers + 1));
+    let mut threads = Vec::new();
+    for _ in 0..workers {
+        let barrier = barrier.clone();
+        let grad = grad.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+            barrier.wait();
+            for iter in start..end {
+                conn.send(&Message::Pull { iter, lo: 0, hi: LAYERS as u32 - 1 })
+                    .unwrap();
+                match conn.recv().unwrap() {
+                    Message::PullReply { data, .. } => {
+                        assert_eq!(data.len(), reply_bytes())
+                    }
+                    m => panic!("{m:?}"),
+                }
+                conn.send(&Message::Push {
+                    iter,
+                    lo: 0,
+                    hi: LAYERS as u32 - 1,
+                    data: slab::from_f32s(&grad),
+                })
+                .unwrap();
+                match conn.recv().unwrap() {
+                    Message::PushAck { .. } => {}
+                    m => panic!("{m:?}"),
+                }
+            }
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for t in threads {
+        t.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// One legacy handler: framed recv, per-pull assembly into a **fresh**
+/// buffer, full-copy `encode_into`, `write_all` — the pre-change server's
+/// exact per-byte work.
+fn legacy_conn(mut stream: TcpStream, params: &HashMap<usize, Vec<u8>>) {
+    stream.set_nodelay(true).ok();
+    let mut scratch = Vec::new();
+    let mut recv_buf = Vec::new();
+    loop {
+        let mut len = [0u8; 4];
+        if stream.read_exact(&mut len).is_err() {
+            return;
+        }
+        let len = u32::from_le_bytes(len) as usize;
+        recv_buf.resize(len, 0);
+        if stream.read_exact(&mut recv_buf).is_err() {
+            return;
+        }
+        let Ok(Message::Pull { iter, lo, hi }) = Message::decode(&recv_buf) else {
+            return;
+        };
+        let cap: usize = (lo as usize..=hi as usize)
+            .filter_map(|l| params.get(&l).map(Vec::len))
+            .sum();
+        let mut data = Vec::with_capacity(cap);
+        for l in lo as usize..=hi as usize {
+            if let Some(p) = params.get(&l) {
+                data.extend_from_slice(p);
+            }
+        }
+        Message::PullReply { iter, lo, hi, data }.encode_into(&mut scratch);
+        if stream.write_all(&scratch).is_err() {
+            return;
+        }
+    }
+}
+
+/// The pre-change serve loop as a standalone loopback server.
+fn legacy_server(
+    layers: HashMap<usize, Vec<f32>>,
+) -> (std::net::SocketAddr, Arc<AtomicBool>) {
+    let params: Arc<HashMap<usize, Vec<u8>>> = Arc::new(
+        layers.into_iter().map(|(l, p)| (l, slab::from_f32s(&p))).collect(),
+    );
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    std::thread::spawn(move || loop {
+        let Ok((stream, _)) = listener.accept() else { break };
+        if stop2.load(Ordering::SeqCst) {
+            break;
+        }
+        let params = params.clone();
+        std::thread::spawn(move || legacy_conn(stream, &params));
+    });
+    (addr, stop)
+}
+
+fn main() {
+    let reps = if common::fast_mode() { 40 } else { 300 };
+    let layers = layer_init();
+    let total_pulls = (WORKERS * reps) as u64;
+    let mb = |secs: f64| {
+        total_pulls as f64 * reply_bytes() as f64 / (1 << 20) as f64 / secs
+    };
+
+    // --- Current path: broadcast cache + pool + vectored send. ---
+    let srv = ParamServer::start(
+        ServerConfig { workers: WORKERS, lr: 0.1 },
+        layers.clone(),
+        None,
+    )
+    .unwrap();
+    let addr = srv.handle().addr;
+    drive_pulls(addr, 1, 2); // warm the cache, pool, and page tables
+    let s0 = srv.wire_stats();
+    let secs_new = drive_pulls(addr, WORKERS, reps);
+    let s1 = srv.wire_stats();
+    let hits = s1.reply_cache_hits - s0.reply_cache_hits;
+    let builds = s1.reply_cache_builds - s0.reply_cache_builds;
+    let hit_rate = hits as f64 / total_pulls as f64;
+    let steady_allocs = s1.pool.allocations - s0.pool.allocations;
+    drop(srv);
+
+    // --- BSP lockstep scenario: one assembly per iteration (plus pushes,
+    // eviction, version waits) — the realistic steady-state mix, measured
+    // on the real server so assembly-path regressions are visible.
+    let bsp_iters = (reps / 4).max(4) as u64;
+    let srv = ParamServer::start(
+        ServerConfig { workers: WORKERS, lr: 0.1 },
+        layers.clone(),
+        None,
+    )
+    .unwrap();
+    let baddr = srv.handle().addr;
+    // Three warm-up iterations: the reply-slab rotation (two cached
+    // entries + one in flight) is fully allocated only after the first
+    // eviction, so measuring earlier would count one warm-up allocation.
+    let warmup_iters = 3u64;
+    drive_bsp(baddr, WORKERS, 0, warmup_iters);
+    let b0 = srv.wire_stats();
+    // Continue from where the warm-up's BSP clock stopped.
+    let secs_bsp = drive_bsp(baddr, WORKERS, warmup_iters, warmup_iters + bsp_iters);
+    let b1 = srv.wire_stats();
+    let bsp_pulls = WORKERS as u64 * bsp_iters;
+    let bsp_builds = b1.reply_cache_builds - b0.reply_cache_builds;
+    let bsp_hits = b1.reply_cache_hits - b0.reply_cache_hits;
+    let bsp_allocs = b1.pool.allocations - b0.pool.allocations;
+    let bsp_pull_mb_s = bsp_pulls as f64 * reply_bytes() as f64
+        / (1 << 20) as f64
+        / secs_bsp;
+    drop(srv);
+
+    // --- Legacy path: per-worker assembly + full-copy encode. ---
+    let (laddr, stop) = legacy_server(layers);
+    drive_pulls(laddr, 1, 2);
+    let secs_legacy = drive_pulls(laddr, WORKERS, reps);
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(laddr); // release the accept loop
+
+    let (thr_new, thr_legacy) = (mb(secs_new), mb(secs_legacy));
+    let speedup = thr_new / thr_legacy;
+
+    println!(
+        "[bench] ps_throughput: {WORKERS} workers x {reps} pulls x {:.1} MiB reply",
+        reply_bytes() as f64 / (1 << 20) as f64
+    );
+    println!("  legacy (per-worker assembly + copy): {thr_legacy:>8.0} MB/s");
+    println!("  shared broadcast + vectored send:    {thr_new:>8.0} MB/s");
+    println!("  server-side speedup: {speedup:.2}x (target >= 2x)");
+    println!(
+        "  reply cache: {hits} hits / {builds} builds (hit rate {:.3})",
+        hit_rate
+    );
+    println!(
+        "  pool: {} steady-state allocations over {total_pulls} pulls \
+         (target 0), {:?}",
+        steady_allocs, s1.pool
+    );
+    println!(
+        "  BSP lockstep ({bsp_iters} iters): {bsp_pull_mb_s:.0} MB/s pull \
+         egress, {bsp_builds} builds / {bsp_hits} hits over {bsp_pulls} \
+         pulls, {bsp_allocs} steady-state allocations"
+    );
+
+    let json = Json::obj(vec![
+        ("workers", Json::Num(WORKERS as f64)),
+        ("layers", Json::Num(LAYERS as f64)),
+        ("reply_bytes", Json::Num(reply_bytes() as f64)),
+        ("pulls", Json::Num(total_pulls as f64)),
+        ("server_mb_per_s", Json::Num(thr_new)),
+        ("legacy_mb_per_s", Json::Num(thr_legacy)),
+        ("speedup", Json::Num(speedup)),
+        ("reply_cache_hit_rate", Json::Num(hit_rate)),
+        ("reply_cache_builds", Json::Num(builds as f64)),
+        ("steady_state_allocs", Json::Num(steady_allocs as f64)),
+        (
+            "steady_state_allocs_per_pull",
+            Json::Num(steady_allocs as f64 / total_pulls as f64),
+        ),
+        ("pool_checkouts", Json::Num(s1.pool.checkouts as f64)),
+        ("pool_recycled", Json::Num(s1.pool.recycled as f64)),
+        ("pool_allocations", Json::Num(s1.pool.allocations as f64)),
+        ("bsp_iters", Json::Num(bsp_iters as f64)),
+        ("bsp_pull_mb_per_s", Json::Num(bsp_pull_mb_s)),
+        ("bsp_builds", Json::Num(bsp_builds as f64)),
+        ("bsp_hits", Json::Num(bsp_hits as f64)),
+        ("bsp_steady_state_allocs", Json::Num(bsp_allocs as f64)),
+        ("fast_mode", Json::Num(if common::fast_mode() { 1.0 } else { 0.0 })),
+    ]);
+    figures::write_result("BENCH_wire", json).unwrap();
+    println!("[bench] wrote results/BENCH_wire.json");
+}

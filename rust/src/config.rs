@@ -127,8 +127,21 @@ pub struct SystemConfig {
     pub strategy: Strategy,
     /// DynaComm re-plan gain threshold, ms (see
     /// `sched::dynacomm::DynaCommScheduler`): 0 re-plans on every
-    /// scheduler call.
+    /// scheduler call; negative (the default,
+    /// `sched::dynacomm::GAIN_THRESHOLD_AUTO`, spelled `auto` in configs
+    /// and flags) derives the threshold at run time from the measured DP
+    /// wall-clock vs the comm idle window. An explicit value overrides
+    /// AUTO.
     pub gain_threshold_ms: f64,
+}
+
+/// Parse a `gain-threshold-ms` spelling: `auto` (case-insensitive) or a
+/// millisecond count.
+pub fn parse_gain_threshold(s: &str) -> Option<f64> {
+    if s.eq_ignore_ascii_case("auto") {
+        return Some(crate::sched::dynacomm::GAIN_THRESHOLD_AUTO);
+    }
+    s.parse::<f64>().ok()
 }
 
 impl Default for SystemConfig {
@@ -142,7 +155,7 @@ impl Default for SystemConfig {
             model: "resnet152".to_string(),
             batch: 32,
             strategy: Strategy::DynaComm,
-            gain_threshold_ms: 0.0,
+            gain_threshold_ms: crate::sched::dynacomm::GAIN_THRESHOLD_AUTO,
         }
     }
 }
@@ -153,6 +166,7 @@ impl SystemConfig {
     pub fn scheduler_params(&self) -> crate::sched::registry::SchedulerParams {
         crate::sched::registry::SchedulerParams {
             gain_threshold_ms: self.gain_threshold_ms,
+            ..Default::default()
         }
     }
 
@@ -168,7 +182,10 @@ impl SystemConfig {
             args.f64("server-bandwidth-gbps", self.server_bandwidth_gbps);
         self.model = args.get_or("model", &self.model);
         self.batch = args.usize("batch", self.batch);
-        self.gain_threshold_ms = args.f64("gain-threshold-ms", self.gain_threshold_ms);
+        if let Some(s) = args.get("gain-threshold-ms") {
+            self.gain_threshold_ms = parse_gain_threshold(s)
+                .unwrap_or_else(|| panic!("bad --gain-threshold-ms '{s}'"));
+        }
         if let Some(s) = args.get("strategy") {
             self.strategy = Strategy::parse(s)
                 .unwrap_or_else(|| panic!("unknown strategy '{s}'"));
@@ -189,7 +206,15 @@ impl SystemConfig {
         c.servers = num("servers", c.servers as f64) as usize;
         c.server_bandwidth_gbps = num("server_bandwidth_gbps", c.server_bandwidth_gbps);
         c.batch = num("batch", c.batch as f64) as usize;
-        c.gain_threshold_ms = num("gain_threshold_ms", c.gain_threshold_ms);
+        // Accepts a number or the string "auto".
+        if let Some(g) = j.get("gain_threshold_ms") {
+            if let Some(v) = g.as_f64() {
+                c.gain_threshold_ms = v;
+            } else if let Some(s) = g.as_str() {
+                c.gain_threshold_ms = parse_gain_threshold(s)
+                    .ok_or_else(|| anyhow::anyhow!("bad gain_threshold_ms '{s}'"))?;
+            }
+        }
         if let Some(m) = j.get("model").and_then(Json::as_str) {
             c.model = m.to_string();
         }
@@ -212,7 +237,14 @@ impl SystemConfig {
             ("model", Json::Str(self.model.clone())),
             ("batch", Json::Num(self.batch as f64)),
             ("strategy", Json::Str(self.strategy.name().to_string())),
-            ("gain_threshold_ms", Json::Num(self.gain_threshold_ms)),
+            (
+                "gain_threshold_ms",
+                if self.gain_threshold_ms < 0.0 {
+                    Json::Str("auto".to_string())
+                } else {
+                    Json::Num(self.gain_threshold_ms)
+                },
+            ),
         ])
     }
 }
@@ -270,5 +302,27 @@ mod tests {
         assert_eq!(c.net.rtt_ms, 5.0);
         assert_eq!(c.gain_threshold_ms, 2.5);
         assert_eq!(c.scheduler_params().gain_threshold_ms, 2.5);
+    }
+
+    #[test]
+    fn gain_threshold_auto_spelling() {
+        use crate::sched::dynacomm::GAIN_THRESHOLD_AUTO;
+        // AUTO is the default; "auto" is accepted from flags and JSON; an
+        // explicit number overrides it everywhere.
+        assert_eq!(SystemConfig::default().gain_threshold_ms, GAIN_THRESHOLD_AUTO);
+        assert_eq!(parse_gain_threshold("auto"), Some(GAIN_THRESHOLD_AUTO));
+        assert_eq!(parse_gain_threshold("AUTO"), Some(GAIN_THRESHOLD_AUTO));
+        assert_eq!(parse_gain_threshold("7.25"), Some(7.25));
+        assert_eq!(parse_gain_threshold("nope"), None);
+        let args = Args::parse(
+            ["--gain-threshold-ms", "auto"].iter().map(|s| s.to_string()),
+        );
+        let c = SystemConfig { gain_threshold_ms: 9.0, ..SystemConfig::default() }
+            .apply_args(&args);
+        assert_eq!(c.gain_threshold_ms, GAIN_THRESHOLD_AUTO);
+        // JSON round-trips AUTO as the string "auto".
+        let j = c.to_json();
+        let back = SystemConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.gain_threshold_ms, GAIN_THRESHOLD_AUTO);
     }
 }

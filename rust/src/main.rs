@@ -56,7 +56,9 @@ FLAGS (defaults = the paper's testbed):
   --batch N             per-worker batch size (32)
   --strategy S          sequential|lbl|ibatch|dynacomm (registry shim names)
   --gain-threshold-ms F skip DynaComm's DP re-plan when the predicted gain
-                        is under F ms (0 = re-plan every epoch)
+                        is under F ms (0 = re-plan every epoch; `auto`, the
+                        default, derives F from the measured DP wall-clock
+                        vs the comm idle window)
   --workers N --servers N
   --rtt-ms F --bandwidth-gbps F --delta-t-ms F --gflops F
   --epochs N --iters N --lr F --artifacts DIR   (train)
@@ -158,7 +160,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.iters_per_epoch = args.usize("iters", cfg.iters_per_epoch);
     cfg.lr = args.f64("lr", cfg.lr as f64) as f32;
     cfg.profiling = !args.bool("no-profiling");
-    cfg.gain_threshold_ms = args.f64("gain-threshold-ms", cfg.gain_threshold_ms);
+    if let Some(s) = args.get("gain-threshold-ms") {
+        cfg.gain_threshold_ms = dynacomm::config::parse_gain_threshold(s)
+            .with_context(|| format!("bad --gain-threshold-ms '{s}'"))?;
+    }
     if let Some(s) = args.get("strategy") {
         cfg.strategy = Strategy::parse(s).context("bad --strategy")?;
     }

@@ -1,0 +1,442 @@
+//! Reusable byte-slab pool for the PS wire path.
+//!
+//! Every multi-megabyte buffer on the steady-state path — pull-reply
+//! assembly on the server, per-layer gradient slabs on the worker, received
+//! tensor frames on both — is checked out of a [`SlabPool`] pre-sized from
+//! the byte tables that already exist (`Shared::layer_bytes` server-side,
+//! the compiled `ExecPlan` worker-side) and recycled across iterations, so
+//! after warm-up the wire path performs **zero slab allocations**
+//! ([`PoolStats::allocations`] stays flat — the property the pool tests and
+//! `benches/ps_throughput.rs` pin down).
+//!
+//! Ownership shapes:
+//!
+//! * [`SlabCheckout`] — exclusive, mutable (`DerefMut<Target = Vec<u8>>`);
+//!   returned to the pool on drop.
+//! * [`Arc<PooledSlab>`] — frozen, shared, immutable; returned to the pool
+//!   when the last clone drops. This is what the server's reply cache holds
+//!   and what lets one assembled broadcast slab serve every worker.
+//! * [`SlabSlice`] — a `(slab, offset, len)` view into a shared slab; the
+//!   worker hands each layer a view of the reply frame it arrived in.
+
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Buffers retained by a pool beyond this count are dropped instead of
+/// recycled (bounds worst-case memory when segment shapes change). Callers
+/// with a known working set (e.g. the worker, which holds one gradient
+/// slab per layer) should size the pool explicitly via
+/// [`SlabPool::with_max_retained`].
+const DEFAULT_MAX_RETAINED: usize = 32;
+
+/// A returned buffer whose capacity exceeds this is dropped instead of
+/// parked: one pathological checkout (e.g. a frame near the 1 GiB protocol
+/// cap) must not pin its memory in the pool — the same hygiene the
+/// transport applies to its receive scratch.
+const MAX_RETAINED_BUF_BYTES: usize = 64 << 20;
+
+/// Counters exposed for observability, benches, and the zero-allocation
+/// steady-state tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PoolStats {
+    /// Total checkouts served (recycled + freshly allocated).
+    pub checkouts: u64,
+    /// Checkouts served from the free list without allocating.
+    pub recycled: u64,
+    /// Checkouts that had to allocate a fresh buffer. Flat after warm-up.
+    pub allocations: u64,
+    /// Buffers currently parked on the free list.
+    pub retained: usize,
+}
+
+/// A bounded pool of reusable byte buffers (see module docs).
+pub struct SlabPool {
+    free: Mutex<Vec<Vec<u8>>>,
+    max_retained: usize,
+    checkouts: AtomicU64,
+    recycled: AtomicU64,
+    allocations: AtomicU64,
+}
+
+impl SlabPool {
+    /// A pool retaining up to the default number of warm buffers.
+    pub fn new() -> Arc<SlabPool> {
+        SlabPool::with_max_retained(DEFAULT_MAX_RETAINED)
+    }
+
+    /// A pool retaining at most `max_retained` idle buffers.
+    pub fn with_max_retained(max_retained: usize) -> Arc<SlabPool> {
+        Arc::new(SlabPool {
+            free: Mutex::new(Vec::new()),
+            max_retained,
+            checkouts: AtomicU64::new(0),
+            recycled: AtomicU64::new(0),
+            allocations: AtomicU64::new(0),
+        })
+    }
+
+    /// Best-fit grab: the smallest free buffer whose capacity covers `cap`,
+    /// else a fresh allocation (counted).
+    fn grab(&self, cap: usize) -> Vec<u8> {
+        self.checkouts.fetch_add(1, Ordering::SeqCst);
+        let mut free = self.free.lock().unwrap();
+        let mut best: Option<usize> = None;
+        for (i, b) in free.iter().enumerate() {
+            if b.capacity() < cap {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some(j) => b.capacity() < free[j].capacity(),
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        match best {
+            Some(i) => {
+                self.recycled.fetch_add(1, Ordering::SeqCst);
+                free.swap_remove(i)
+            }
+            None => {
+                drop(free);
+                self.allocations.fetch_add(1, Ordering::SeqCst);
+                Vec::with_capacity(cap)
+            }
+        }
+    }
+
+    /// Check out an **empty** buffer with at least `cap` bytes of capacity
+    /// — for `extend_from_slice`-style assembly (no zero-fill anywhere).
+    pub fn checkout(self: &Arc<Self>, cap: usize) -> SlabCheckout {
+        let mut buf = self.grab(cap);
+        buf.clear();
+        SlabCheckout { buf: Some(buf), pool: Arc::downgrade(self) }
+    }
+
+    /// Check out a buffer of exactly `len` **initialized** bytes whose
+    /// contents are unspecified (possibly stale from a previous checkout) —
+    /// for paths that overwrite every byte, like reading a frame off a
+    /// socket. Only growth past the buffer's previous length zero-fills, so
+    /// a warm pool never re-memsets.
+    pub fn checkout_filled(self: &Arc<Self>, len: usize) -> SlabCheckout {
+        let mut buf = self.grab(len);
+        if buf.len() < len {
+            buf.resize(len, 0);
+        } else {
+            buf.truncate(len);
+        }
+        SlabCheckout { buf: Some(buf), pool: Arc::downgrade(self) }
+    }
+
+    /// Park a buffer back on the free list (its capacity is the asset; the
+    /// length/contents are left as-is so refills skip the memset).
+    /// Oversized buffers are dropped, not parked — see
+    /// [`MAX_RETAINED_BUF_BYTES`].
+    fn put(&self, buf: Vec<u8>) {
+        if buf.capacity() == 0 || buf.capacity() > MAX_RETAINED_BUF_BYTES {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        if free.len() < self.max_retained {
+            free.push(buf);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            checkouts: self.checkouts.load(Ordering::SeqCst),
+            recycled: self.recycled.load(Ordering::SeqCst),
+            allocations: self.allocations.load(Ordering::SeqCst),
+            retained: self.free.lock().unwrap().len(),
+        }
+    }
+}
+
+impl fmt::Debug for SlabPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SlabPool({:?})", self.stats())
+    }
+}
+
+/// An exclusively-owned pooled buffer (`DerefMut<Target = Vec<u8>>`).
+/// Returns to its pool on drop; [`SlabCheckout::freeze`] converts it into a
+/// shared [`PooledSlab`] instead.
+pub struct SlabCheckout {
+    /// `Some` until frozen or dropped.
+    buf: Option<Vec<u8>>,
+    pool: Weak<SlabPool>,
+}
+
+impl SlabCheckout {
+    /// Seal the buffer into a shared, immutable slab. The bytes return to
+    /// the pool when the last `Arc` clone (and every [`SlabSlice`] over it)
+    /// drops.
+    pub fn freeze(mut self) -> Arc<PooledSlab> {
+        let buf = self.buf.take().expect("checkout already consumed");
+        Arc::new(PooledSlab { buf, pool: self.pool.clone() })
+    }
+}
+
+impl Deref for SlabCheckout {
+    type Target = Vec<u8>;
+
+    fn deref(&self) -> &Vec<u8> {
+        self.buf.as_ref().expect("checkout already consumed")
+    }
+}
+
+impl DerefMut for SlabCheckout {
+    fn deref_mut(&mut self) -> &mut Vec<u8> {
+        self.buf.as_mut().expect("checkout already consumed")
+    }
+}
+
+impl Drop for SlabCheckout {
+    fn drop(&mut self) {
+        if let (Some(buf), Some(pool)) = (self.buf.take(), self.pool.upgrade()) {
+            pool.put(buf);
+        }
+    }
+}
+
+impl fmt::Debug for SlabCheckout {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SlabCheckout(len={})", self.buf.as_ref().map_or(0, Vec::len))
+    }
+}
+
+/// A frozen, shared pooled buffer (`Deref<Target = [u8]>`); see
+/// [`SlabCheckout::freeze`]. [`PooledSlab::detached`] wraps a plain vector
+/// with no backing pool (tests, cold paths).
+pub struct PooledSlab {
+    buf: Vec<u8>,
+    pool: Weak<SlabPool>,
+}
+
+impl PooledSlab {
+    /// A shared slab that is not connected to any pool (dropping it simply
+    /// frees the vector).
+    pub fn detached(buf: Vec<u8>) -> Arc<PooledSlab> {
+        Arc::new(PooledSlab { buf, pool: Weak::new() })
+    }
+}
+
+impl Deref for PooledSlab {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl Drop for PooledSlab {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.upgrade() {
+            pool.put(std::mem::take(&mut self.buf));
+        }
+    }
+}
+
+impl fmt::Debug for PooledSlab {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PooledSlab(len={})", self.buf.len())
+    }
+}
+
+/// A shared, immutable `(slab, offset, len)` view into a [`PooledSlab`]:
+/// the puller hands each layer a slice of the reply frame it arrived in,
+/// so the pull path performs no per-layer copies between the socket and
+/// tensor materialization — and the frame returns to the pool when the
+/// last view drops.
+#[derive(Clone)]
+pub struct SlabSlice {
+    buf: Arc<PooledSlab>,
+    off: usize,
+    len: usize,
+}
+
+impl SlabSlice {
+    /// Panics if `[off, off + len)` is out of bounds — callers validate
+    /// offsets (e.g. against the `ExecPlan` tables) before slicing.
+    pub fn new(buf: Arc<PooledSlab>, off: usize, len: usize) -> SlabSlice {
+        assert!(off + len <= buf.len(), "slab slice out of bounds");
+        SlabSlice { buf, off, len }
+    }
+
+    /// Wrap an owned vector as a full-range view (no backing pool).
+    pub fn from_vec(buf: Vec<u8>) -> SlabSlice {
+        let len = buf.len();
+        SlabSlice { buf: PooledSlab::detached(buf), off: 0, len }
+    }
+
+    /// A sub-view relative to this view's range (same backing slab).
+    pub fn slice(&self, off: usize, len: usize) -> SlabSlice {
+        assert!(off + len <= self.len, "slab sub-slice out of bounds");
+        SlabSlice { buf: self.buf.clone(), off: self.off + off, len }
+    }
+}
+
+impl Deref for SlabSlice {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        &self.buf[self.off..self.off + self.len]
+    }
+}
+
+impl fmt::Debug for SlabSlice {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SlabSlice(off={}, len={})", self.off, self.len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_is_empty_with_capacity() {
+        let pool = SlabPool::new();
+        let co = pool.checkout(1024);
+        assert!(co.is_empty());
+        assert!(co.capacity() >= 1024);
+        drop(co);
+        assert_eq!(pool.stats().retained, 1);
+    }
+
+    #[test]
+    fn three_iterations_allocate_only_in_the_first() {
+        // The satellite contract: checkout/return across iterations
+        // performs zero new allocations after warm-up.
+        let pool = SlabPool::new();
+        let sizes = [1024usize, 4096, 256];
+        for iter in 0..3 {
+            // Hold all checkouts live at once, as an iteration does.
+            let mut held = Vec::new();
+            for &s in &sizes {
+                let mut co = pool.checkout(s);
+                co.extend_from_slice(&vec![0xABu8; s]);
+                held.push(co);
+            }
+            drop(held);
+            let st = pool.stats();
+            assert_eq!(
+                st.allocations,
+                sizes.len() as u64,
+                "iteration {iter}: steady state must not allocate"
+            );
+            assert_eq!(st.checkouts, ((iter + 1) * sizes.len()) as u64);
+        }
+        let st = pool.stats();
+        assert_eq!(st.recycled, 2 * sizes.len() as u64);
+        assert_eq!(st.retained, sizes.len());
+    }
+
+    #[test]
+    fn best_fit_prefers_smallest_adequate_buffer() {
+        let pool = SlabPool::new();
+        let (a, b) = (pool.checkout(100), pool.checkout(10_000));
+        drop(a);
+        drop(b);
+        // A 50-byte request must take the 100-capacity buffer, leaving the
+        // big one parked.
+        let co = pool.checkout(50);
+        assert!(co.capacity() < 10_000);
+        let free_caps: Vec<usize> =
+            pool.free.lock().unwrap().iter().map(Vec::capacity).collect();
+        assert_eq!(free_caps.len(), 1);
+        assert!(free_caps[0] >= 10_000);
+    }
+
+    #[test]
+    fn checkout_filled_is_sized_and_grow_only() {
+        let pool = SlabPool::new();
+        let mut co = pool.checkout(64);
+        co.extend_from_slice(&[7u8; 64]);
+        drop(co);
+        // Refill smaller: contents unspecified, but length exact and no
+        // fresh allocation.
+        let co = pool.checkout_filled(16);
+        assert_eq!(co.len(), 16);
+        assert_eq!(pool.stats().allocations, 1);
+        drop(co);
+        // Refill larger than capacity: allocates (or grows) once.
+        let co = pool.checkout_filled(256);
+        assert_eq!(co.len(), 256);
+        drop(co);
+    }
+
+    #[test]
+    fn freeze_returns_to_pool_on_last_view_drop() {
+        let pool = SlabPool::new();
+        let mut co = pool.checkout(100);
+        co.extend_from_slice(&(0u8..100).collect::<Vec<u8>>());
+        let slab = co.freeze();
+        let a = SlabSlice::new(slab.clone(), 10, 20);
+        let b = a.slice(5, 5);
+        assert_eq!(&a[..], &(10u8..30).collect::<Vec<u8>>()[..]);
+        assert_eq!(&b[..], &(15u8..20).collect::<Vec<u8>>()[..]);
+        drop(slab);
+        assert_eq!(pool.stats().retained, 0, "views still hold the slab");
+        drop(a);
+        drop(b);
+        assert_eq!(pool.stats().retained, 1, "slab returned on last drop");
+        // And the returned buffer is recycled by the next checkout.
+        let _co = pool.checkout(50);
+        assert_eq!(pool.stats().recycled, 1);
+    }
+
+    #[test]
+    fn detached_slab_and_from_vec_need_no_pool() {
+        let s = SlabSlice::from_vec(vec![1, 2, 3, 4]);
+        assert_eq!(&s[..], &[1, 2, 3, 4]);
+        assert_eq!(s.slice(1, 2).len(), 2);
+        let d = PooledSlab::detached(vec![9; 8]);
+        assert_eq!(d.len(), 8);
+    }
+
+    #[test]
+    fn checkout_outlives_its_pool() {
+        let pool = SlabPool::new();
+        let co = pool.checkout(10);
+        let slab = {
+            let mut c2 = pool.checkout(10);
+            c2.push(1);
+            c2.freeze()
+        };
+        drop(pool);
+        // Returning to a dead pool is a no-op, not a panic.
+        drop(co);
+        drop(slab);
+    }
+
+    #[test]
+    fn retention_is_bounded() {
+        let pool = SlabPool::with_max_retained(2);
+        let held: Vec<SlabCheckout> = (0..4).map(|_| pool.checkout(64)).collect();
+        drop(held);
+        assert_eq!(pool.stats().retained, 2);
+    }
+
+    #[test]
+    fn oversized_buffers_are_dropped_not_parked() {
+        // One near-cap frame must not pin its memory in the pool.
+        let pool = SlabPool::new();
+        let big = pool.checkout(MAX_RETAINED_BUF_BYTES + 1);
+        drop(big);
+        assert_eq!(pool.stats().retained, 0, "oversized buffer was parked");
+        // Ordinary buffers still recycle.
+        drop(pool.checkout(1024));
+        assert_eq!(pool.stats().retained, 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn slab_slice_rejects_out_of_bounds() {
+        let buf = PooledSlab::detached(vec![0u8; 8]);
+        let _ = SlabSlice::new(buf, 4, 8);
+    }
+}

@@ -3,18 +3,35 @@
 //! Wire format (specified in full in `docs/WIRE.md`): `u32 LE length` (of
 //! everything after it) + `u8 opcode` + payload. Tensor payloads are
 //! opaque little-endian f32 byte slabs ([`crate::net::slab`]) carried in
-//! [`Message::PullReply`] / [`Message::Push`], so encode/decode are bulk
-//! `extend_from_slice`/`copy_from_slice` operations — no per-element f32
-//! loops anywhere on the wire path. Connections keep per-direction scratch
-//! buffers, so steady-state send/recv performs no frame allocations.
+//! [`Message::PullReply`] / [`Message::Push`].
+//!
+//! The hot path is **copy-free around the slab**: [`MessageRef`] borrows
+//! its tensor payload, [`Connection::send_ref`] writes `[header][slab]`
+//! with `write_vectored` (no memcpy of multi-MB slabs into a frame
+//! buffer), [`Connection::recv_ref`] decodes with the slab still borrowed
+//! from the receive scratch, and [`Connection::recv_pooled`] reads the
+//! frame straight into a [`crate::net::pool::SlabPool`] checkout and hands
+//! back [`SlabSlice`] views. The wire bytes are identical to the legacy
+//! contiguous encoding ([`Message::encode_into`]), which is kept as the
+//! reference implementation the property tests compare against — no
+//! protocol bump.
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::TcpStream;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::net::pool::{SlabPool, SlabSlice};
+
 /// Hard ceiling on a frame's payload size (corruption guard).
 const MAX_FRAME: usize = 1 << 30;
+
+/// Warm receive-buffer capacity retained across frames. One oversized
+/// frame (up to the 1 GiB [`MAX_FRAME`] cap) must not pin its capacity for
+/// the life of the connection: the buffer is shrunk back to this bound
+/// before the next smaller frame is read.
+const RECV_RETAIN_MAX: usize = 16 << 20;
 
 /// Version of the wire protocol this build speaks (`docs/WIRE.md`; v1 was
 /// the unversioned slab protocol). Carried in [`Message::Hello`] /
@@ -23,7 +40,8 @@ const MAX_FRAME: usize = 1 << 30;
 /// mismatched `Hello`, and the worker rejects a mismatched `HelloAck`.
 pub const PROTOCOL_VERSION: u16 = 2;
 
-/// Protocol messages between edge workers and parameter servers.
+/// Protocol messages between edge workers and parameter servers (owned
+/// form; [`MessageRef`] is the borrowed-payload twin the hot path uses).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
     /// Worker → server: pull parameters of layers `[lo, hi]` for `iter`.
@@ -49,33 +67,54 @@ pub enum Message {
 
 impl Message {
     pub fn opcode(&self) -> u8 {
-        match self {
-            Message::Pull { .. } => 1,
-            Message::PullReply { .. } => 2,
-            Message::Push { .. } => 3,
-            Message::PushAck { .. } => 4,
-            Message::Hello { .. } => 5,
-            Message::HelloAck { .. } => 6,
-            Message::Shutdown => 7,
-        }
+        self.wire_ref().opcode()
     }
 
     /// Serialized payload size in bytes (excluding the length prefix).
     pub fn wire_size(&self) -> usize {
-        1 + match self {
-            Message::Pull { .. } => 8 + 4 + 4,
-            Message::PullReply { data, .. } => 8 + 4 + 4 + 4 + data.len(),
-            Message::Push { data, .. } => 8 + 4 + 4 + 4 + data.len(),
-            Message::PushAck { .. } => 8 + 4 + 4,
-            Message::Hello { .. } => 4 + 2,
-            Message::HelloAck { .. } => 4 + 2,
-            Message::Shutdown => 0,
+        self.wire_ref().wire_size()
+    }
+
+    /// The borrowed-payload view of this message (same wire encoding).
+    pub fn wire_ref(&self) -> MessageRef<'_> {
+        match self {
+            Message::Pull { iter, lo, hi } => {
+                MessageRef::Pull { iter: *iter, lo: *lo, hi: *hi }
+            }
+            Message::PullReply { iter, lo, hi, data } => MessageRef::PullReply {
+                iter: *iter,
+                lo: *lo,
+                hi: *hi,
+                data: data.as_slice(),
+            },
+            Message::Push { iter, lo, hi, data } => MessageRef::Push {
+                iter: *iter,
+                lo: *lo,
+                hi: *hi,
+                data: data.as_slice(),
+            },
+            Message::PushAck { iter, lo, hi } => {
+                MessageRef::PushAck { iter: *iter, lo: *lo, hi: *hi }
+            }
+            Message::Hello { worker, version } => {
+                MessageRef::Hello { worker: *worker, version: *version }
+            }
+            Message::HelloAck { workers, version } => {
+                MessageRef::HelloAck { workers: *workers, version: *version }
+            }
+            Message::Shutdown => MessageRef::Shutdown,
         }
     }
 
     /// Encode the full frame (length prefix included) into a reusable
     /// buffer. The buffer is cleared first; capacity is retained across
     /// calls, so a warm buffer makes this allocation-free.
+    ///
+    /// This is the **legacy contiguous encoding**: the slab is memcpy'd
+    /// into the frame buffer. The hot path sends with
+    /// [`Connection::send_ref`] (vectored, no slab copy) instead; this
+    /// implementation is kept independent as the byte-exact reference the
+    /// vectored-framing property tests compare against.
     pub fn encode_into(&self, buf: &mut Vec<u8>) {
         buf.clear();
         buf.reserve(4 + self.wire_size());
@@ -115,27 +154,130 @@ impl Message {
     }
 
     pub fn decode(payload: &[u8]) -> Result<Message> {
+        Ok(MessageRef::decode(payload)?.into_owned())
+    }
+}
+
+/// Borrowed-payload twin of [`Message`]: identical wire encoding, but the
+/// tensor slab of `PullReply`/`Push` is a borrowed slice, so sending never
+/// copies it and decoding can hand out views into the receive buffer.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum MessageRef<'a> {
+    Pull { iter: u64, lo: u32, hi: u32 },
+    PullReply { iter: u64, lo: u32, hi: u32, data: &'a [u8] },
+    Push { iter: u64, lo: u32, hi: u32, data: &'a [u8] },
+    PushAck { iter: u64, lo: u32, hi: u32 },
+    Hello { worker: u32, version: u16 },
+    HelloAck { workers: u32, version: u16 },
+    Shutdown,
+}
+
+impl<'a> MessageRef<'a> {
+    pub fn opcode(&self) -> u8 {
+        match self {
+            MessageRef::Pull { .. } => 1,
+            MessageRef::PullReply { .. } => 2,
+            MessageRef::Push { .. } => 3,
+            MessageRef::PushAck { .. } => 4,
+            MessageRef::Hello { .. } => 5,
+            MessageRef::HelloAck { .. } => 6,
+            MessageRef::Shutdown => 7,
+        }
+    }
+
+    /// Serialized payload size in bytes (excluding the length prefix).
+    pub fn wire_size(&self) -> usize {
+        1 + match self {
+            MessageRef::Pull { .. } => 8 + 4 + 4,
+            MessageRef::PullReply { data, .. } => 8 + 4 + 4 + 4 + data.len(),
+            MessageRef::Push { data, .. } => 8 + 4 + 4 + 4 + data.len(),
+            MessageRef::PushAck { .. } => 8 + 4 + 4,
+            MessageRef::Hello { .. } => 4 + 2,
+            MessageRef::HelloAck { .. } => 4 + 2,
+            MessageRef::Shutdown => 0,
+        }
+    }
+
+    /// Encode the length prefix, opcode, fixed fields, and (for tensor
+    /// messages) the slab length field into `buf` — everything **except**
+    /// the slab bytes — and return the borrowed slab to be written after
+    /// it. `buf ‖ returned` is byte-identical to [`Message::encode`].
+    pub fn encode_header_into(&self, buf: &mut Vec<u8>) -> &'a [u8] {
+        match *self {
+            // Tensor frames share one header encoder with
+            // `Connection::send_push_parts` — a single source of truth for
+            // the layout.
+            MessageRef::PullReply { iter, lo, hi, data }
+            | MessageRef::Push { iter, lo, hi, data } => {
+                encode_tensor_header(buf, self.opcode(), iter, lo, hi, data.len());
+                return data;
+            }
+            _ => {}
+        }
+        buf.clear();
+        buf.extend_from_slice(&(self.wire_size() as u32).to_le_bytes());
+        buf.push(self.opcode());
+        match *self {
+            MessageRef::Pull { iter, lo, hi } | MessageRef::PushAck { iter, lo, hi } => {
+                buf.extend_from_slice(&iter.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&hi.to_le_bytes());
+            }
+            MessageRef::Hello { worker, version } => {
+                buf.extend_from_slice(&worker.to_le_bytes());
+                buf.extend_from_slice(&version.to_le_bytes());
+            }
+            MessageRef::HelloAck { workers, version } => {
+                buf.extend_from_slice(&workers.to_le_bytes());
+                buf.extend_from_slice(&version.to_le_bytes());
+            }
+            _ => {}
+        }
+        &[]
+    }
+
+    /// Decode a frame payload, borrowing the tensor slab from it.
+    pub fn decode(payload: &'a [u8]) -> Result<MessageRef<'a>> {
         anyhow::ensure!(!payload.is_empty(), "empty frame");
         let op = payload[0];
         let mut r = Reader { b: &payload[1..] };
         let msg = match op {
-            1 => Message::Pull { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
+            1 => MessageRef::Pull { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
             2 => {
                 let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
-                Message::PullReply { iter, lo, hi, data: r.slab()? }
+                MessageRef::PullReply { iter, lo, hi, data: r.slab()? }
             }
             3 => {
                 let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
-                Message::Push { iter, lo, hi, data: r.slab()? }
+                MessageRef::Push { iter, lo, hi, data: r.slab()? }
             }
-            4 => Message::PushAck { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
-            5 => Message::Hello { worker: r.u32()?, version: r.u16()? },
-            6 => Message::HelloAck { workers: r.u32()?, version: r.u16()? },
-            7 => Message::Shutdown,
+            4 => MessageRef::PushAck { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
+            5 => MessageRef::Hello { worker: r.u32()?, version: r.u16()? },
+            6 => MessageRef::HelloAck { workers: r.u32()?, version: r.u16()? },
+            7 => MessageRef::Shutdown,
             _ => bail!("unknown opcode {op}"),
         };
         anyhow::ensure!(r.b.is_empty(), "trailing bytes in frame (op {op})");
         Ok(msg)
+    }
+
+    /// Copy into the owned form (the only place the slab is cloned).
+    pub fn into_owned(self) -> Message {
+        match self {
+            MessageRef::Pull { iter, lo, hi } => Message::Pull { iter, lo, hi },
+            MessageRef::PullReply { iter, lo, hi, data } => {
+                Message::PullReply { iter, lo, hi, data: data.to_vec() }
+            }
+            MessageRef::Push { iter, lo, hi, data } => {
+                Message::Push { iter, lo, hi, data: data.to_vec() }
+            }
+            MessageRef::PushAck { iter, lo, hi } => Message::PushAck { iter, lo, hi },
+            MessageRef::Hello { worker, version } => Message::Hello { worker, version },
+            MessageRef::HelloAck { workers, version } => {
+                Message::HelloAck { workers, version }
+            }
+            MessageRef::Shutdown => Message::Shutdown,
+        }
     }
 }
 
@@ -163,20 +305,131 @@ impl<'a> Reader<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
-    /// Length-prefixed byte slab: one bulk copy, no per-element work.
-    fn slab(&mut self) -> Result<Vec<u8>> {
+    /// Length-prefixed byte slab, borrowed — no copy, no per-element work.
+    fn slab(&mut self) -> Result<&'a [u8]> {
         let n = self.u32()? as usize;
         anyhow::ensure!(n % 4 == 0, "slab length {n} not f32-aligned");
-        Ok(self.take(n)?.to_vec())
+        self.take(n)
+    }
+}
+
+/// A received message whose tensor payload (if any) is a [`SlabSlice`]
+/// view into a pooled frame buffer — the buffer returns to the pool when
+/// the last view drops. Produced by [`Connection::recv_pooled`].
+#[derive(Debug)]
+pub enum RecvMsg {
+    /// Control frames, owned as usual.
+    Control(Message),
+    /// A `PullReply` whose slab is a pooled view.
+    PullReply { iter: u64, lo: u32, hi: u32, data: SlabSlice },
+    /// A `Push` whose slab is a pooled view.
+    Push { iter: u64, lo: u32, hi: u32, data: SlabSlice },
+}
+
+/// Byte offset of the slab inside a `PullReply`/`Push` frame payload:
+/// opcode + `iter` + `lo` + `hi` + the slab-length field.
+const TENSOR_SLAB_OFF: usize = 1 + 8 + 4 + 4 + 4;
+
+/// Encode a tensor frame's header (length prefix through the slab-length
+/// field) for a slab of `data_len` bytes: the single owner of the
+/// `PullReply`/`Push` layout, shared by [`MessageRef::encode_header_into`]
+/// and [`Connection::send_push_parts`].
+fn encode_tensor_header(
+    buf: &mut Vec<u8>,
+    opcode: u8,
+    iter: u64,
+    lo: u32,
+    hi: u32,
+    data_len: usize,
+) {
+    let wire_size = TENSOR_SLAB_OFF + data_len;
+    buf.clear();
+    buf.extend_from_slice(&(wire_size as u32).to_le_bytes());
+    buf.push(opcode);
+    buf.extend_from_slice(&iter.to_le_bytes());
+    buf.extend_from_slice(&lo.to_le_bytes());
+    buf.extend_from_slice(&hi.to_le_bytes());
+    buf.extend_from_slice(&(data_len as u32).to_le_bytes());
+}
+
+/// The virtual part list of a scattered frame: index 0 is the header,
+/// indices `1..` map onto `parts`.
+fn scattered_part<'a>(head: &'a [u8], parts: &'a [&'a [u8]], i: usize) -> &'a [u8] {
+    if i == 0 {
+        head
+    } else {
+        parts[i - 1]
+    }
+}
+
+/// Write `head` then every slice of `parts`, scatter-gather style, with
+/// correct resumption after partial writes. One frame, no assembly copy.
+fn write_scattered(w: &mut TcpStream, head: &[u8], parts: &[&[u8]]) -> std::io::Result<()> {
+    /// Max iovec entries per `write_vectored` call.
+    const IOV_BATCH: usize = 16;
+    let total = 1 + parts.len();
+    let mut idx = 0usize; // current part
+    let mut off = 0usize; // bytes of the current part already written
+    while idx < total {
+        if off >= scattered_part(head, parts, idx).len() {
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        let mut iov: [IoSlice<'_>; IOV_BATCH] = [IoSlice::new(&[]); IOV_BATCH];
+        let mut n = 0usize;
+        while n < IOV_BATCH && idx + n < total {
+            let p = scattered_part(head, parts, idx + n);
+            iov[n] = IoSlice::new(if n == 0 { &p[off..] } else { p });
+            n += 1;
+        }
+        // Same retry discipline as `Write::write_all`: EINTR restarts the
+        // write instead of tearing the connection down mid-frame.
+        let written = match w.write_vectored(&iov[..n]) {
+            Ok(0) => return Err(std::io::ErrorKind::WriteZero.into()),
+            Ok(written) => written,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        let mut rem = written;
+        while rem > 0 && idx < total {
+            let avail = scattered_part(head, parts, idx).len() - off;
+            if rem >= avail {
+                rem -= avail;
+                idx += 1;
+                off = 0;
+            } else {
+                off += rem;
+                rem = 0;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Size the receive buffer for an incoming `len`-byte frame: grow-only in
+/// steady state (warm capacity is **never** re-zeroed — the socket read
+/// overwrites `[..len]`), and shrink back to [`RECV_RETAIN_MAX`] when a
+/// prior oversized frame left pathological capacity behind.
+fn prepare_frame_buf(buf: &mut Vec<u8>, len: usize) {
+    if buf.capacity() > RECV_RETAIN_MAX && len <= RECV_RETAIN_MAX {
+        buf.clear();
+        buf.shrink_to(RECV_RETAIN_MAX);
+    }
+    if buf.len() < len {
+        // resize zero-fills only the newly grown tail, once; after that the
+        // buffer's length is its high-water mark and refills are memset-free.
+        buf.resize(len, 0);
     }
 }
 
 /// A framed, optionally shaped, connection.
 ///
-/// Each direction owns a scratch buffer (the per-connection scratch pool):
-/// `send` encodes into `send_buf` and `recv` reads the frame into
-/// `recv_buf`, so steady-state traffic reuses warm capacity instead of
-/// allocating per message.
+/// Each direction owns a scratch buffer: `send` encodes the (small) frame
+/// header into `send_buf` — tensor slabs are written borrowed, vectored —
+/// and `recv` reads frames into `recv_buf` (or a pool checkout for
+/// [`Connection::recv_pooled`]), so steady-state traffic reuses warm
+/// capacity instead of allocating per message.
 pub struct Connection {
     stream: TcpStream,
     shaper: Option<crate::net::LinkShaper>,
@@ -190,26 +443,100 @@ impl Connection {
         Connection { stream, shaper, send_buf: Vec::new(), recv_buf: Vec::new() }
     }
 
-    /// Send one message. When shaped, sleeps for the emulated serialization
-    /// + latency time before the bytes hit the socket.
+    /// Send one owned message (delegates to the vectored path).
     pub fn send(&mut self, msg: &Message) -> Result<()> {
-        msg.encode_into(&mut self.send_buf);
-        if let Some(shaper) = &self.shaper {
-            shaper.delay_for(self.send_buf.len());
-        }
-        self.stream.write_all(&self.send_buf).context("send")?;
-        Ok(())
+        self.send_ref(msg.wire_ref())
     }
 
-    /// Receive one message (blocking).
+    /// Send one message with its tensor slab borrowed: the header is
+    /// encoded into the scratch buffer and the frame goes out as
+    /// `[header][slab]` via `write_vectored` — the slab is never copied.
+    /// When shaped, sleeps for the emulated serialization + latency time
+    /// before the bytes hit the socket.
+    pub fn send_ref(&mut self, msg: MessageRef<'_>) -> Result<()> {
+        let payload = msg.encode_header_into(&mut self.send_buf);
+        if let Some(shaper) = &self.shaper {
+            shaper.delay_for(self.send_buf.len() + payload.len());
+        }
+        write_scattered(&mut self.stream, &self.send_buf, &[payload]).context("send")
+    }
+
+    /// Send a `Push` whose slab is scattered across `parts` (e.g. one part
+    /// per layer, straight from the pooled per-layer gradient slabs). The
+    /// frame on the wire is byte-identical to sending the concatenation —
+    /// without ever materializing it.
+    pub fn send_push_parts(
+        &mut self,
+        iter: u64,
+        lo: u32,
+        hi: u32,
+        parts: &[&[u8]],
+    ) -> Result<()> {
+        let data_len: usize = parts.iter().map(|p| p.len()).sum();
+        encode_tensor_header(&mut self.send_buf, 3, iter, lo, hi, data_len);
+        if let Some(shaper) = &self.shaper {
+            shaper.delay_for(self.send_buf.len() + data_len);
+        }
+        write_scattered(&mut self.stream, &self.send_buf, parts).context("send")
+    }
+
+    /// Receive one message (blocking), owned.
     pub fn recv(&mut self) -> Result<Message> {
-        let mut len = [0u8; 4];
-        self.stream.read_exact(&mut len).context("recv length")?;
-        let len = u32::from_le_bytes(len) as usize;
-        anyhow::ensure!(len <= MAX_FRAME, "frame too large: {len}");
-        self.recv_buf.resize(len, 0);
-        self.stream.read_exact(&mut self.recv_buf).context("recv payload")?;
-        Message::decode(&self.recv_buf)
+        Ok(self.recv_ref()?.into_owned())
+    }
+
+    /// Receive one message (blocking) with its tensor slab borrowed from
+    /// the connection's receive scratch — zero payload copies for callers
+    /// that fully consume the message before the next transport call (the
+    /// server's `Push` handling).
+    pub fn recv_ref(&mut self) -> Result<MessageRef<'_>> {
+        let len = read_frame_len(&mut self.stream)?;
+        prepare_frame_buf(&mut self.recv_buf, len);
+        self.stream
+            .read_exact(&mut self.recv_buf[..len])
+            .context("recv payload")?;
+        MessageRef::decode(&self.recv_buf[..len])
+    }
+
+    /// Receive one message (blocking), reading the frame straight into a
+    /// pool checkout: tensor payloads come back as [`SlabSlice`] views of
+    /// the pooled frame (no copy between the socket and the consumer), and
+    /// the frame buffer recycles through `pool` when the last view drops.
+    /// Control frames are returned owned and their checkout is recycled
+    /// immediately.
+    pub fn recv_pooled(&mut self, pool: &Arc<SlabPool>) -> Result<RecvMsg> {
+        /// Decode outcome with the frame borrow already released: tensor
+        /// frames carry only their fixed fields (the slab stays in the
+        /// frame at [`TENSOR_SLAB_OFF`]), control frames are owned.
+        enum Parsed {
+            Tensor { op: u8, iter: u64, lo: u32, hi: u32, len: usize },
+            Control(Message),
+        }
+
+        let len = read_frame_len(&mut self.stream)?;
+        let mut frame = pool.checkout_filled(len);
+        self.stream.read_exact(&mut frame[..]).context("recv payload")?;
+        // One decode, fully validating the frame.
+        let parsed = match MessageRef::decode(&frame[..])? {
+            MessageRef::PullReply { iter, lo, hi, data } => {
+                Parsed::Tensor { op: 2, iter, lo, hi, len: data.len() }
+            }
+            MessageRef::Push { iter, lo, hi, data } => {
+                Parsed::Tensor { op: 3, iter, lo, hi, len: data.len() }
+            }
+            other => Parsed::Control(other.into_owned()),
+        };
+        match parsed {
+            Parsed::Tensor { op, iter, lo, hi, len } => {
+                let data = SlabSlice::new(frame.freeze(), TENSOR_SLAB_OFF, len);
+                Ok(if op == 2 {
+                    RecvMsg::PullReply { iter, lo, hi, data }
+                } else {
+                    RecvMsg::Push { iter, lo, hi, data }
+                })
+            }
+            Parsed::Control(msg) => Ok(RecvMsg::Control(msg)),
+        }
     }
 
     pub fn try_clone(&self) -> Result<Connection> {
@@ -222,10 +549,19 @@ impl Connection {
     }
 }
 
+fn read_frame_len(stream: &mut TcpStream) -> Result<usize> {
+    let mut len = [0u8; 4];
+    stream.read_exact(&mut len).context("recv length")?;
+    let len = u32::from_le_bytes(len) as usize;
+    anyhow::ensure!(len <= MAX_FRAME, "frame too large: {len}");
+    Ok(len)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::net::slab;
+    use crate::util::rng::Rng;
 
     fn roundtrip(m: Message) {
         let enc = m.encode();
@@ -263,6 +599,44 @@ mod tests {
         match Message::decode(&enc[4..]).unwrap() {
             Message::Push { data, .. } => assert_eq!(slab::to_f32s(&data), vals),
             m => panic!("{m:?}"),
+        }
+    }
+
+    fn random_message(rng: &mut Rng) -> Message {
+        let data = |rng: &mut Rng| -> Vec<u8> {
+            let words = rng.below(64);
+            (0..4 * words).map(|_| rng.below(256) as u8).collect()
+        };
+        match rng.below(7) {
+            0 => Message::Pull { iter: rng.below(1 << 20) as u64, lo: 0, hi: 7 },
+            1 => Message::PullReply { iter: 3, lo: 1, hi: 5, data: data(rng) },
+            2 => Message::Push { iter: 9, lo: 0, hi: 2, data: data(rng) },
+            3 => Message::PushAck { iter: 1, lo: 0, hi: 0 },
+            4 => Message::Hello { worker: rng.below(64) as u32, version: 2 },
+            5 => Message::HelloAck { workers: 8, version: 2 },
+            _ => Message::Shutdown,
+        }
+    }
+
+    /// The vectored framing contract: for every message variant, the
+    /// header produced by `encode_header_into` followed by the borrowed
+    /// payload is byte-identical to the legacy contiguous `encode`.
+    #[test]
+    fn vectored_framing_matches_legacy_encode_for_every_variant() {
+        let mut rng = Rng::new(417);
+        let mut hdr = Vec::new();
+        for _ in 0..500 {
+            let m = random_message(&mut rng);
+            let legacy = m.encode();
+            let payload = m.wire_ref().encode_header_into(&mut hdr);
+            let mut vectored = hdr.clone();
+            vectored.extend_from_slice(payload);
+            assert_eq!(vectored, legacy, "framing diverged for {m:?}");
+            // And the borrowed decoder agrees with the owned one.
+            assert_eq!(
+                MessageRef::decode(&legacy[4..]).unwrap().into_owned(),
+                Message::decode(&legacy[4..]).unwrap()
+            );
         }
     }
 
@@ -311,6 +685,29 @@ mod tests {
     }
 
     #[test]
+    fn frame_buf_grows_without_rezeroing_and_sheds_oversize() {
+        let mut buf = Vec::new();
+        prepare_frame_buf(&mut buf, 1024);
+        assert_eq!(buf.len(), 1024);
+        // Poison, then "receive" a smaller frame: the warm region must be
+        // left alone (no memset), only sliced.
+        buf.iter_mut().for_each(|b| *b = 0xEE);
+        prepare_frame_buf(&mut buf, 16);
+        assert_eq!(buf.len(), 1024, "warm length is the high-water mark");
+        assert!(buf.iter().all(|&b| b == 0xEE), "warm bytes were re-zeroed");
+        // One pathological frame must not pin its capacity forever.
+        prepare_frame_buf(&mut buf, RECV_RETAIN_MAX + (4 << 20));
+        assert!(buf.capacity() > RECV_RETAIN_MAX);
+        prepare_frame_buf(&mut buf, 512);
+        assert!(
+            buf.capacity() <= RECV_RETAIN_MAX,
+            "oversized capacity retained: {}",
+            buf.capacity()
+        );
+        assert!(buf.len() >= 512);
+    }
+
+    #[test]
     fn tcp_roundtrip() {
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
@@ -320,8 +717,7 @@ mod tests {
             let m = conn.recv().unwrap();
             conn.send(&m).unwrap(); // echo
         });
-        let mut conn =
-            Connection::new(TcpStream::connect(addr).unwrap(), None);
+        let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
         let msg = Message::Push {
             iter: 42,
             lo: 2,
@@ -331,5 +727,107 @@ mod tests {
         conn.send(&msg).unwrap();
         assert_eq!(conn.recv().unwrap(), msg);
         t.join().unwrap();
+    }
+
+    /// A scattered push (one part per layer slab, including empty parts)
+    /// must arrive byte-identical to the contiguous message.
+    #[test]
+    fn scattered_push_matches_contiguous_over_tcp() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut conn = Connection::new(s, None);
+            conn.recv().unwrap()
+        });
+        let a = slab::from_f32s(&[1.0; 300]);
+        let b: Vec<u8> = Vec::new();
+        let c = slab::from_f32s(&[-2.5; 77]);
+        let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+        conn.send_push_parts(11, 0, 2, &[&a, &b, &c]).unwrap();
+        let mut expect = a.clone();
+        expect.extend_from_slice(&c);
+        assert_eq!(
+            t.join().unwrap(),
+            Message::Push { iter: 11, lo: 0, hi: 2, data: expect }
+        );
+    }
+
+    /// Pooled receive: tensor frames land in pool checkouts, views keep
+    /// them alive, and the buffers recycle once the views drop.
+    #[test]
+    fn recv_pooled_views_and_recycles_frames() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let vals: Vec<f32> = (0..512).map(|i| i as f32 * 0.5).collect();
+        let payload = slab::from_f32s(&vals);
+        let payload2 = payload.clone();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut conn = Connection::new(s, None);
+            for i in 0..2 {
+                conn.send(&Message::PullReply { iter: i, lo: 0, hi: 3, data: payload2.clone() })
+                    .unwrap();
+            }
+            conn.send(&Message::Shutdown).unwrap();
+        });
+        let pool = crate::net::pool::SlabPool::new();
+        let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+        let first = match conn.recv_pooled(&pool).unwrap() {
+            RecvMsg::PullReply { iter, data, .. } => {
+                assert_eq!(iter, 0);
+                assert_eq!(&data[..], &payload[..]);
+                data
+            }
+            m => panic!("{m:?}"),
+        };
+        assert_eq!(pool.stats().allocations, 1);
+        assert_eq!(pool.stats().retained, 0, "view holds the frame");
+        drop(first);
+        assert_eq!(pool.stats().retained, 1, "frame recycled after last view");
+        match conn.recv_pooled(&pool).unwrap() {
+            RecvMsg::PullReply { iter, data, .. } => {
+                assert_eq!(iter, 1);
+                assert_eq!(&data[..], &payload[..]);
+            }
+            m => panic!("{m:?}"),
+        }
+        let st = pool.stats();
+        assert_eq!(st.allocations, 1, "second frame reused the first buffer");
+        assert_eq!(st.recycled, 1);
+        // Control frames come back owned with the checkout recycled.
+        match conn.recv_pooled(&pool).unwrap() {
+            RecvMsg::Control(Message::Shutdown) => {}
+            m => panic!("{m:?}"),
+        }
+        t.join().unwrap();
+    }
+
+    /// The scattered writer must survive many tiny parts (several iovec
+    /// batches) and interleaved empties.
+    #[test]
+    fn scattered_write_handles_many_small_parts() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut conn = Connection::new(s, None);
+            conn.recv().unwrap()
+        });
+        // 50 parts of 4 bytes each → 3+ iovec batches of 16.
+        let layers: Vec<Vec<u8>> = (0..50u8).map(|i| vec![i; 4]).collect();
+        let mut parts: Vec<&[u8]> = Vec::new();
+        let empty: Vec<u8> = Vec::new();
+        for l in &layers {
+            parts.push(l);
+            parts.push(&empty);
+        }
+        let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+        conn.send_push_parts(0, 0, 49, &parts).unwrap();
+        let expect: Vec<u8> = layers.concat();
+        match t.join().unwrap() {
+            Message::Push { data, .. } => assert_eq!(data, expect),
+            m => panic!("{m:?}"),
+        }
     }
 }

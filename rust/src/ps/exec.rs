@@ -5,12 +5,20 @@
 //! byte ranges of each layer inside both the segment blob and the shard
 //! payload — materialized **once per re-plan**. `EdgeWorker::iteration`
 //! then runs off pure table lookups.
+//!
+//! The plan also carries the worker's [`SlabPool`]: since the tables
+//! already know every buffer size the iteration will need, the per-layer
+//! gradient slabs are checked out **pre-sized** through
+//! [`ExecPlan::checkout_layer`] and recycled across iterations — zero
+//! steady-state slab allocations.
 
-use std::ops::Deref;
 use std::sync::Arc;
 
+use crate::net::pool::{SlabCheckout, SlabPool};
 use crate::ps::sharding::ShardMap;
 use crate::sched::SchedulePlan;
+
+pub use crate::net::pool::SlabSlice;
 
 /// One layer's byte placement inside a segment and its shard payload.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -50,7 +58,7 @@ pub struct ExecSegment {
 }
 
 /// A schedule compiled against a concrete model and shard map.
-#[derive(Debug, Clone, PartialEq, Eq)]
+#[derive(Debug, Clone)]
 pub struct ExecPlan {
     pub depth: usize,
     /// Flat `w‖b` slab size per 0-based layer.
@@ -62,12 +70,22 @@ pub struct ExecPlan {
     pub fwd: Vec<ExecSegment>,
     /// Backward segments in transmission order (deepest layers first).
     pub bwd: Vec<ExecSegment>,
+    /// The worker's slab pool; survives re-plans (the same `Arc` is passed
+    /// to every `compile`), so warm buffers carry across plan changes.
+    pub pool: Arc<SlabPool>,
 }
 
 impl ExecPlan {
     /// Resolve `plan` against the model's per-layer byte sizes and the
     /// cluster's shard map. O(L) per segment; runs once per re-plan.
-    pub fn compile(plan: &SchedulePlan, layer_bytes: &[usize], shard: ShardMap) -> ExecPlan {
+    /// `pool` is the buffer pool iteration checkouts draw from — pass the
+    /// worker's long-lived pool so buffers recycle across re-plans too.
+    pub fn compile(
+        plan: &SchedulePlan,
+        layer_bytes: &[usize],
+        shard: ShardMap,
+        pool: Arc<SlabPool>,
+    ) -> ExecPlan {
         let depth = layer_bytes.len();
         assert_eq!(plan.fwd.depth(), depth, "plan depth != model depth");
         assert_eq!(plan.bwd.depth(), depth, "plan depth != model depth");
@@ -112,34 +130,13 @@ impl ExecPlan {
             .into_iter()
             .map(|(hi, lo)| seg(lo - 1, hi - 1))
             .collect();
-        ExecPlan { depth, layer_bytes: layer_bytes.to_vec(), byte_off, fwd, bwd }
+        ExecPlan { depth, layer_bytes: layer_bytes.to_vec(), byte_off, fwd, bwd, pool }
     }
-}
 
-/// A shared, immutable view into a wire slab: the puller hands each layer
-/// a slice of the shard reply it arrived in, so the pull path performs no
-/// per-layer copies between the socket and tensor materialization.
-#[derive(Debug, Clone)]
-pub struct SlabSlice {
-    buf: Arc<Vec<u8>>,
-    off: usize,
-    len: usize,
-}
-
-impl SlabSlice {
-    /// Panics if `[off, off + len)` is out of bounds — the `ExecPlan`
-    /// offsets are validated against the reply size before slicing.
-    pub fn new(buf: Arc<Vec<u8>>, off: usize, len: usize) -> SlabSlice {
-        assert!(off + len <= buf.len(), "slab slice out of bounds");
-        SlabSlice { buf, off, len }
-    }
-}
-
-impl Deref for SlabSlice {
-    type Target = [u8];
-
-    fn deref(&self) -> &[u8] {
-        &self.buf[self.off..self.off + self.len]
+    /// Check out an empty pooled buffer pre-sized for layer `l`'s flat
+    /// `w‖b` gradient slab (the tables know the exact size).
+    pub fn checkout_layer(&self, l: usize) -> SlabCheckout {
+        self.pool.checkout(self.layer_bytes[l])
     }
 }
 
@@ -169,13 +166,14 @@ mod tests {
     #[test]
     fn compiled_offsets_tile_segments_and_payloads() {
         let mut rng = Rng::new(91);
+        let pool = SlabPool::new();
         for _ in 0..100 {
             let depth = rng.range(1, 20);
             let servers = rng.range(1, 6);
             let shard = ShardMap::new(servers, depth);
             let layer_bytes = random_bytes(&mut rng, depth);
             let plan = random_plan(&mut rng, depth);
-            let exec = ExecPlan::compile(&plan, &layer_bytes, shard);
+            let exec = ExecPlan::compile(&plan, &layer_bytes, shard, pool.clone());
             assert_eq!(exec.byte_off.len(), depth + 1);
             assert_eq!(exec.byte_off[depth], layer_bytes.iter().sum::<usize>());
 
@@ -231,20 +229,27 @@ mod tests {
         }
     }
 
+    /// The byte-table-driven checkouts come back empty, pre-sized, and —
+    /// across iterations — recycled rather than re-allocated.
     #[test]
-    fn slab_slice_views_without_copying() {
-        let buf = Arc::new((0u8..100).collect::<Vec<u8>>());
-        let a = SlabSlice::new(buf.clone(), 10, 20);
-        let b = SlabSlice::new(buf.clone(), 30, 0);
-        assert_eq!(&a[..], &(10u8..30).collect::<Vec<u8>>()[..]);
-        assert!(b.is_empty());
-        assert_eq!(Arc::strong_count(&buf), 3);
-    }
-
-    #[test]
-    #[should_panic]
-    fn slab_slice_rejects_out_of_bounds() {
-        let buf = Arc::new(vec![0u8; 8]);
-        let _ = SlabSlice::new(buf, 4, 8);
+    fn plan_checkouts_are_presized_and_recycled() {
+        let pool = SlabPool::new();
+        let layer_bytes = vec![1024usize, 64, 4096];
+        let plan = SchedulePlan::layer_by_layer(3);
+        let exec = ExecPlan::compile(&plan, &layer_bytes, ShardMap::new(2, 3), pool);
+        for iter in 0..3 {
+            let held: Vec<SlabCheckout> =
+                (0..3).map(|l| exec.checkout_layer(l)).collect();
+            for (l, co) in held.iter().enumerate() {
+                assert!(co.is_empty());
+                assert!(co.capacity() >= layer_bytes[l]);
+            }
+            drop(held);
+            assert_eq!(
+                exec.pool.stats().allocations,
+                3,
+                "iteration {iter} allocated instead of recycling"
+            );
+        }
     }
 }

@@ -13,6 +13,6 @@ pub mod sharding;
 pub mod worker;
 
 pub use exec::{ExecPlan, ExecSegment, ExecSlice, ExecSub, SlabSlice};
-pub use server::{ParamServer, ServerConfig, ServerHandle};
+pub use server::{ParamServer, ServerConfig, ServerHandle, WireStats};
 pub use sharding::ShardMap;
 pub use worker::{EdgeWorker, PlanChange, WorkerConfig, WorkerReport};

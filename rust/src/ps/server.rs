@@ -9,16 +9,33 @@
 //! `PullReply` carries — so serving a pull is a bulk `extend_from_slice`
 //! with zero f32 conversions; gradient accumulation and SGD read/write the
 //! slab through safe 4-byte chunked views (`net::slab`).
+//!
+//! The steady-state wire path is copy- and allocation-free (`docs/PERF.md`):
+//!
+//! * **Shared pull-reply broadcast** — under BSP every worker pulls
+//!   byte-identical parameters each iteration, so the reply slab for an
+//!   `(iter, lo, hi)` key is assembled **once** into a pooled `Arc` slab
+//!   (single-flight: concurrent pullers for the same key wait for the one
+//!   assembler) and every worker is served a cheap clone. Server-side
+//!   copies drop from O(workers × bytes) to O(bytes) per iteration; the
+//!   hit counter is exported through [`WireStats`].
+//! * **Vectored send** — the cached slab goes out borrowed via
+//!   `Connection::send_ref` (`[header][slab]` scatter-gather), never
+//!   memcpy'd into a frame buffer.
+//! * **Borrowed receive** — `Push` gradients are accumulated straight out
+//!   of the connection's receive scratch (`Connection::recv_ref`), never
+//!   copied into an owned message.
 
 use std::collections::HashMap;
 use std::net::{Shutdown, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
 use anyhow::{Context, Result};
 
-use crate::net::{slab, Connection, Message, ShaperSpec, PROTOCOL_VERSION};
+use crate::net::pool::{PoolStats, PooledSlab, SlabPool};
+use crate::net::{slab, Connection, Message, MessageRef, ShaperSpec, PROTOCOL_VERSION};
 
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
@@ -50,6 +67,36 @@ impl LayerSlot {
     }
 }
 
+/// State of one reply-cache entry (single-flight assembly).
+enum ReplyState {
+    /// A handler is assembling this reply; others wait on the condvar.
+    Building,
+    /// Assembled; served to every subsequent puller as a cheap clone.
+    Ready(Arc<PooledSlab>),
+}
+
+/// The shared pull-reply broadcast cache, keyed by `(iter, lo, hi)`.
+struct ReplyCache {
+    entries: Mutex<HashMap<(u64, u32, u32), ReplyState>>,
+    /// Signals entry transitions (Building → Ready/removed) and shutdown.
+    ready: Condvar,
+    /// Pulls answered from an already-assembled slab.
+    hits: AtomicU64,
+    /// Successful assemblies (== distinct `(iter, lo, hi)` keys served).
+    builds: AtomicU64,
+}
+
+impl ReplyCache {
+    fn new() -> ReplyCache {
+        ReplyCache {
+            entries: Mutex::new(HashMap::new()),
+            ready: Condvar::new(),
+            hits: AtomicU64::new(0),
+            builds: AtomicU64::new(0),
+        }
+    }
+}
+
 struct Shared {
     cfg: ServerConfig,
     /// layer id -> guarded slot (only layers this shard owns).
@@ -57,6 +104,10 @@ struct Shared {
     /// layer id -> slab size in bytes (immutable; lets pulls pre-size
     /// their reply buffer without touching the slot locks).
     layer_bytes: HashMap<usize, usize>,
+    /// Reusable buffers for reply assembly (and anything else wire-sized).
+    pool: Arc<SlabPool>,
+    /// Assemble-once broadcast cache for BSP pull replies.
+    reply_cache: ReplyCache,
     shutting_down: AtomicBool,
     connected: AtomicU32,
     /// Pulls currently parked on a version condvar (observability: lets
@@ -69,6 +120,20 @@ struct Shared {
     conns: Mutex<Vec<Option<TcpStream>>>,
 }
 
+/// Server-side wire-path counters: the shared-broadcast cache plus the
+/// slab pool — what `benches/ps_throughput.rs` reports into
+/// `BENCH_wire.json` and the steady-state tests assert on.
+#[derive(Debug, Clone, Copy)]
+pub struct WireStats {
+    /// Pulls served from an already-assembled reply slab.
+    pub reply_cache_hits: u64,
+    /// Reply slabs actually assembled.
+    pub reply_cache_builds: u64,
+    /// Entries currently cached (bounded: stale iterations are evicted).
+    pub reply_cache_entries: usize,
+    pub pool: PoolStats,
+}
+
 /// A running shard: background accept loop + handler threads.
 pub struct ParamServer {
     shared: Arc<Shared>,
@@ -76,12 +141,27 @@ pub struct ParamServer {
     addr: std::net::SocketAddr,
 }
 
-/// Cheap handle for clients: address + graceful shutdown.
+/// Cheap handle for clients: address + shared-state observability.
 #[derive(Clone)]
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
-    #[allow(dead_code)]
     shared: Arc<Shared>,
+}
+
+impl ServerHandle {
+    /// Wire-path counters of the shard behind this handle.
+    pub fn wire_stats(&self) -> WireStats {
+        wire_stats(&self.shared)
+    }
+}
+
+fn wire_stats(shared: &Shared) -> WireStats {
+    WireStats {
+        reply_cache_hits: shared.reply_cache.hits.load(Ordering::SeqCst),
+        reply_cache_builds: shared.reply_cache.builds.load(Ordering::SeqCst),
+        reply_cache_entries: shared.reply_cache.entries.lock().unwrap().len(),
+        pool: shared.pool.stats(),
+    }
 }
 
 impl ParamServer {
@@ -121,6 +201,8 @@ impl ParamServer {
             cfg,
             slots,
             layer_bytes,
+            pool: SlabPool::new(),
+            reply_cache: ReplyCache::new(),
             shutting_down: AtomicBool::new(false),
             connected: AtomicU32::new(0),
             pull_waiters: AtomicU32::new(0),
@@ -148,15 +230,26 @@ impl ParamServer {
         self.shared.pull_waiters.load(Ordering::SeqCst)
     }
 
-    /// Drain and stop: wake parked pulls, kill live worker sockets so
-    /// blocked reads return, then join the accept loop (which joins every
-    /// handler). Condition-based — no timing assumptions.
+    /// Wire-path counters (reply cache + pool).
+    pub fn wire_stats(&self) -> WireStats {
+        wire_stats(&self.shared)
+    }
+
+    /// Drain and stop: wake parked pulls and cache waiters, kill live
+    /// worker sockets so blocked reads return, then join the accept loop
+    /// (which joins every handler). Condition-based — no timing
+    /// assumptions.
     pub fn shutdown(&mut self) {
         self.shared.shutting_down.store(true, Ordering::SeqCst);
         // Wake every parked pull so its handler observes the flag.
         for (m, cv) in self.shared.slots.values() {
             let _guard = m.lock().unwrap();
             cv.notify_all();
+        }
+        // Wake pullers waiting on an in-flight reply assembly.
+        {
+            let _entries = self.shared.reply_cache.entries.lock().unwrap();
+            self.shared.reply_cache.ready.notify_all();
         }
         // Kill live worker connections: blocked recv()s fail immediately
         // instead of waiting for the peer to hang up.
@@ -233,15 +326,176 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
     }
 }
 
+/// Assemble the `[lo, hi]` reply slab for `iter` into a pooled buffer,
+/// parking on the version condvars until the BSP clock gets there. Returns
+/// `None` when shutdown interrupts the wait.
+fn assemble_reply(shared: &Shared, iter: u64, lo: u32, hi: u32) -> Option<Arc<PooledSlab>> {
+    // Pre-size from the immutable size map: one pooled checkout, then pure
+    // slab appends under the slot locks.
+    let cap: usize = (lo as usize..=hi as usize)
+        .filter_map(|l| shared.layer_bytes.get(&l))
+        .sum();
+    let mut data = shared.pool.checkout(cap);
+    for l in lo as usize..=hi as usize {
+        let Some((m, cv)) = shared.slots.get(&l) else { continue };
+        let mut slot = m.lock().unwrap();
+        while slot.version < iter {
+            if shared.shutting_down.load(Ordering::SeqCst) {
+                return None;
+            }
+            // Condition-based park: woken by the push that advances the
+            // version, or by shutdown.
+            shared.pull_waiters.fetch_add(1, Ordering::SeqCst);
+            let woken = cv.wait(slot).unwrap();
+            shared.pull_waiters.fetch_sub(1, Ordering::SeqCst);
+            slot = woken;
+        }
+        data.extend_from_slice(&slot.params);
+    }
+    Some(data.freeze())
+}
+
+/// Serve a pull from the shared broadcast cache, assembling at most once
+/// per `(iter, lo, hi)` across all concurrent pullers (single-flight).
+/// Returns `None` only on shutdown.
+fn pull_reply(shared: &Shared, iter: u64, lo: u32, hi: u32) -> Option<Arc<PooledSlab>> {
+    /// Snapshot of a cache entry's state, owned (no borrow spans the
+    /// condvar wait or the insert below).
+    enum Peek {
+        Hit(Arc<PooledSlab>),
+        Wait,
+        Vacant,
+    }
+
+    let key = (iter, lo, hi);
+    let cache = &shared.reply_cache;
+    let mut entries = cache.entries.lock().unwrap();
+    loop {
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            return None;
+        }
+        let peek = match entries.get(&key) {
+            Some(ReplyState::Ready(slab)) => Peek::Hit(slab.clone()),
+            Some(ReplyState::Building) => Peek::Wait,
+            None => Peek::Vacant,
+        };
+        match peek {
+            Peek::Hit(slab) => {
+                cache.hits.fetch_add(1, Ordering::SeqCst);
+                return Some(slab);
+            }
+            Peek::Wait => {
+                // Another handler is assembling this exact reply; wait for
+                // it instead of duplicating the work.
+                entries = cache.ready.wait(entries).unwrap();
+            }
+            Peek::Vacant => {
+                entries.insert(key, ReplyState::Building);
+                drop(entries);
+                let built = assemble_reply(shared, iter, lo, hi);
+                let mut relocked = cache.entries.lock().unwrap();
+                let out = match built {
+                    Some(slab) => {
+                        cache.builds.fetch_add(1, Ordering::SeqCst);
+                        relocked.insert(key, ReplyState::Ready(slab.clone()));
+                        // BSP keeps in-flight pulls within one iteration of
+                        // each other; drop finished iterations' slabs back
+                        // to the pool so the cache stays O(segments).
+                        // `Building` markers are never evicted — removing
+                        // one would break single-flight: its waiters would
+                        // see the slot vacant and start a duplicate
+                        // assembly. A stale `Ready` entry a lagging builder
+                        // re-inserts survives at most until the next build
+                        // sweeps it.
+                        relocked.retain(|k, v| {
+                            matches!(v, ReplyState::Building) || k.0 + 1 >= iter
+                        });
+                        Some(slab)
+                    }
+                    None => {
+                        // Interrupted by shutdown: clear the Building
+                        // marker so waiters don't park forever.
+                        relocked.remove(&key);
+                        None
+                    }
+                };
+                drop(relocked);
+                cache.ready.notify_all();
+                return out;
+            }
+        }
+    }
+}
+
+/// Accumulate a pushed gradient slab (borrowed straight from the receive
+/// scratch) and apply averaged SGD + advance the BSP clock on the last
+/// contribution.
+fn apply_push(shared: &Shared, iter: u64, lo: u32, hi: u32, data: &[u8]) -> Result<()> {
+    let mut off = 0usize;
+    for l in lo as usize..=hi as usize {
+        let Some((m, cv)) = shared.slots.get(&l) else { continue };
+        let mut slot = m.lock().unwrap();
+        let n = slot.params.len();
+        anyhow::ensure!(
+            off + n <= data.len(),
+            "push payload too small for layers {lo}..={hi}"
+        );
+        // Accumulate straight off the wire slab.
+        slab::add_assign_f32s(&mut slot.grad_sum, &data[off..off + n]);
+        off += n;
+        slot.grad_count += 1;
+        if slot.grad_count == shared.cfg.workers {
+            // Averaged SGD, then advance the BSP clock.
+            let scale = shared.cfg.lr / shared.cfg.workers as f32;
+            slot.apply_sgd(scale);
+            slot.version = iter + 1;
+            cv.notify_all();
+        }
+    }
+    anyhow::ensure!(off == data.len(), "push payload size mismatch");
+    Ok(())
+}
+
+/// What a received message asks the handler to do once the receive borrow
+/// is released (replies are sent outside the borrow of the recv scratch).
+enum Action {
+    Hello { worker: u32, version: u16 },
+    Reply(Message),
+    ReplyShared { iter: u64, lo: u32, hi: u32, slab: Arc<PooledSlab> },
+    Close,
+}
+
 fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
     loop {
-        let msg = match conn.recv() {
-            Ok(m) => m,
-            // Peer hung up (or shutdown killed the socket): normal teardown.
-            Err(_) => return Ok(()),
+        let action = {
+            let msg = match conn.recv_ref() {
+                Ok(m) => m,
+                // Peer hung up (or shutdown killed the socket): normal
+                // teardown.
+                Err(_) => return Ok(()),
+            };
+            match msg {
+                MessageRef::Hello { worker, version } => Action::Hello { worker, version },
+                MessageRef::Pull { iter, lo, hi } => {
+                    match pull_reply(shared, iter, lo, hi) {
+                        Some(slab) => Action::ReplyShared { iter, lo, hi, slab },
+                        // Shutting down: no reply, drop the session.
+                        None => Action::Close,
+                    }
+                }
+                MessageRef::Push { iter, lo, hi, data } => {
+                    // Gradients are consumed borrowed — no payload copy.
+                    apply_push(shared, iter, lo, hi, data)?;
+                    Action::Reply(Message::PushAck { iter, lo, hi })
+                }
+                MessageRef::Shutdown => Action::Close,
+                other => {
+                    anyhow::bail!("unexpected message at server: {:?}", other.into_owned())
+                }
+            }
         };
-        match msg {
-            Message::Hello { worker, version } => {
+        match action {
+            Action::Hello { worker, version } => {
                 // Always answer with our version — on mismatch the worker
                 // names both sides in its error — then refuse the session
                 // so a mixed deployment cannot corrupt tensors later.
@@ -256,57 +510,14 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
                 );
                 shared.connected.fetch_add(1, Ordering::SeqCst);
             }
-            Message::Pull { iter, lo, hi } => {
-                // Pre-size from the immutable size map: one allocation,
-                // then pure slab appends under the slot locks.
-                let cap: usize = (lo as usize..=hi as usize)
-                    .filter_map(|l| shared.layer_bytes.get(&l))
-                    .sum();
-                let mut data = Vec::with_capacity(cap);
-                for l in lo as usize..=hi as usize {
-                    let Some((m, cv)) = shared.slots.get(&l) else { continue };
-                    let mut slot = m.lock().unwrap();
-                    while slot.version < iter
-                        && !shared.shutting_down.load(Ordering::SeqCst)
-                    {
-                        // Condition-based park: woken by the push that
-                        // advances the version, or by shutdown.
-                        shared.pull_waiters.fetch_add(1, Ordering::SeqCst);
-                        let woken = cv.wait(slot).unwrap();
-                        shared.pull_waiters.fetch_sub(1, Ordering::SeqCst);
-                        slot = woken;
-                    }
-                    data.extend_from_slice(&slot.params);
-                }
-                conn.send(&Message::PullReply { iter, lo, hi, data })?;
+            Action::Reply(m) => conn.send(&m)?,
+            Action::ReplyShared { iter, lo, hi, slab } => {
+                // The cached slab goes out borrowed, scatter-gather — the
+                // broadcast bytes are written once per worker but copied
+                // zero times.
+                conn.send_ref(MessageRef::PullReply { iter, lo, hi, data: &slab[..] })?;
             }
-            Message::Push { iter, lo, hi, data } => {
-                let mut off = 0usize;
-                for l in lo as usize..=hi as usize {
-                    let Some((m, cv)) = shared.slots.get(&l) else { continue };
-                    let mut slot = m.lock().unwrap();
-                    let n = slot.params.len();
-                    anyhow::ensure!(
-                        off + n <= data.len(),
-                        "push payload too small for layers {lo}..={hi}"
-                    );
-                    // Accumulate straight off the wire slab.
-                    slab::add_assign_f32s(&mut slot.grad_sum, &data[off..off + n]);
-                    off += n;
-                    slot.grad_count += 1;
-                    if slot.grad_count == shared.cfg.workers {
-                        // Averaged SGD, then advance the BSP clock.
-                        let scale = shared.cfg.lr / shared.cfg.workers as f32;
-                        slot.apply_sgd(scale);
-                        slot.version = iter + 1;
-                        cv.notify_all();
-                    }
-                }
-                anyhow::ensure!(off == data.len(), "push payload size mismatch");
-                conn.send(&Message::PushAck { iter, lo, hi })?;
-            }
-            Message::Shutdown => return Ok(()),
-            other => anyhow::bail!("unexpected message at server: {other:?}"),
+            Action::Close => return Ok(()),
         }
     }
 }
@@ -314,6 +525,7 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Barrier;
     use std::time::{Duration, Instant};
 
     fn connect(addr: std::net::SocketAddr) -> Connection {
@@ -408,6 +620,86 @@ mod tests {
         }
     }
 
+    /// The shared-broadcast contract: K concurrent pullers of the same
+    /// `(iter, lo, hi)` trigger exactly one assembly; the other K−1 are
+    /// cache hits, and everyone gets byte-identical data.
+    #[test]
+    fn concurrent_pulls_share_one_assembly() {
+        const K: usize = 4;
+        let srv = start_two_layer(1);
+        let addr = srv.handle().addr;
+        let barrier = Arc::new(Barrier::new(K));
+        let mut threads = Vec::new();
+        for _ in 0..K {
+            let barrier = barrier.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut c = connect(addr);
+                barrier.wait();
+                c.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+                match c.recv().unwrap() {
+                    Message::PullReply { data, .. } => data,
+                    m => panic!("{m:?}"),
+                }
+            }));
+        }
+        let replies: Vec<Vec<u8>> =
+            threads.into_iter().map(|t| t.join().unwrap()).collect();
+        for r in &replies[1..] {
+            assert_eq!(r, &replies[0], "broadcast bytes diverged");
+        }
+        let ws = srv.wire_stats();
+        assert_eq!(ws.reply_cache_builds, 1, "reply assembled more than once");
+        assert_eq!(ws.reply_cache_hits, (K - 1) as u64);
+    }
+
+    /// Steady-state pulls allocate nothing: after the first assembly per
+    /// key, the pool's allocation counter stays flat and repeated pulls of
+    /// the same iteration are pure cache hits.
+    #[test]
+    fn repeated_pulls_are_allocation_free() {
+        let srv = start_two_layer(1);
+        let mut c = connect(srv.handle().addr);
+        for _ in 0..10 {
+            c.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+            let _ = c.recv().unwrap();
+        }
+        let ws = srv.wire_stats();
+        assert_eq!(ws.reply_cache_builds, 1);
+        assert_eq!(ws.reply_cache_hits, 9);
+        assert_eq!(ws.pool.allocations, 1, "pulls allocated past warm-up");
+    }
+
+    /// The cache is bounded: advancing the BSP clock evicts reply slabs of
+    /// finished iterations (they return to the pool for reuse).
+    #[test]
+    fn reply_cache_evicts_finished_iterations() {
+        let srv = start_two_layer(1);
+        let mut c = connect(srv.handle().addr);
+        for iter in 0..4u64 {
+            c.send(&Message::Pull { iter, lo: 0, hi: 1 }).unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
+            c.send(&Message::Push {
+                iter,
+                lo: 0,
+                hi: 1,
+                data: slab::from_f32s(&[0.0, 0.0, 0.0]),
+            })
+            .unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        }
+        let ws = srv.wire_stats();
+        assert_eq!(ws.reply_cache_builds, 4);
+        assert!(
+            ws.reply_cache_entries <= 2,
+            "stale entries retained: {}",
+            ws.reply_cache_entries
+        );
+        // Evicted slabs were recycled, not leaked: the cache retains at
+        // most two iterations, so at most three buffers ever existed (two
+        // cached + one in flight before the first eviction).
+        assert!(ws.pool.allocations <= 3, "allocations: {:?}", ws.pool);
+    }
+
     #[test]
     fn shutdown_drains_parked_pulls_deterministically() {
         let mut srv = start_two_layer(1);
@@ -423,8 +715,8 @@ mod tests {
         // regresses, this join hangs and the suite times out.
         srv.shutdown();
         assert_eq!(srv.pull_waiters(), 0, "handlers drained");
-        // The client either got a (stale) reply or a dead socket — but the
-        // thread must have been released either way.
+        // The client got a dead socket (no stale reply is served on
+        // shutdown) — but the thread must have been released either way.
         let _ = t.join().unwrap();
     }
 

@@ -12,11 +12,15 @@
 //! once into an [`ExecPlan`] (0-based segments, prefix byte offsets,
 //! per-segment shard sub-requests), so `iteration` performs no segment or
 //! offset arithmetic of its own. Tensor traffic stays in wire form
-//! (little-endian byte slabs, see `docs/WIRE.md`) end to end: the puller
-//! hands each layer a [`SlabSlice`] view of the shard reply it arrived in
-//! (no per-layer copies), the backward path encodes each layer's gradient
-//! slab exactly once, and the pusher extracts per-shard payloads by the
-//! precompiled byte ranges.
+//! (little-endian byte slabs, see `docs/WIRE.md`) end to end, through
+//! pooled buffers (`docs/PERF.md`): the puller receives each shard reply
+//! straight into a pool checkout and hands each layer a [`SlabSlice`] view
+//! of it (no copies between the socket and tensor materialization), the
+//! backward path encodes each layer's gradient exactly once into a pooled
+//! slab pre-sized from the plan's byte tables, and the pusher sends each
+//! shard's payload gather-style (`send_push_parts`) straight from those
+//! per-layer slabs — no segment blob, no payload assembly, no steady-state
+//! slab allocations.
 
 use std::net::TcpStream;
 use std::sync::{mpsc, Arc};
@@ -25,7 +29,8 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::config::Strategy;
-use crate::net::{Connection, LinkShaper, Message, PROTOCOL_VERSION};
+use crate::net::pool::{SlabCheckout, SlabPool};
+use crate::net::{Connection, LinkShaper, Message, RecvMsg, PROTOCOL_VERSION};
 use crate::profiler::Profiler;
 use crate::ps::exec::{ExecPlan, SlabSlice};
 use crate::ps::sharding::ShardMap;
@@ -45,11 +50,14 @@ pub struct WorkerConfig {
     /// Profiling switch (Table II measures its cost).
     pub profiling: bool,
     /// Re-run the scheduler every this many iterations ("once per epoch",
-    /// Section IV-C).
+    /// Section IV-C). Also the amortization horizon the AUTO gain
+    /// threshold uses.
     pub reschedule_every: usize,
     /// Gain threshold for DynaComm's cached re-planning, ms: skip the
     /// O(L^3) DP when a fresh plan cannot gain more than this. `0.0`
-    /// re-plans every time (see `sched::dynacomm::DynaCommScheduler`).
+    /// re-plans every time; **negative selects AUTO**, deriving the
+    /// threshold from the measured DP wall-clock vs the iteration's comm
+    /// idle window (see `sched::dynacomm::DynaCommScheduler`).
     pub gain_threshold_ms: f64,
 }
 
@@ -112,9 +120,12 @@ pub struct EdgeWorker {
     scheduler: Box<dyn Scheduler>,
     plan: SchedulePlan,
     /// The current plan compiled against the model + shard map (it also
-    /// owns the per-layer byte-size tables); shared with the puller/pusher
-    /// threads, rebuilt only when the plan changes.
+    /// owns the per-layer byte-size tables and the slab pool); shared with
+    /// the puller/pusher threads, rebuilt only when the plan changes.
     exec: Arc<ExecPlan>,
+    /// The worker's slab pool: reply frames and gradient slabs recycle
+    /// through it across iterations *and* re-plans.
+    pool: Arc<SlabPool>,
 }
 
 /// Bounded retry-with-backoff for the worker→shard TCP connect: workers
@@ -172,7 +183,10 @@ impl EdgeWorker {
         profiler.enabled = cfg.profiling;
         let scheduler = registry::create_for_with(
             cfg.strategy,
-            SchedulerParams { gain_threshold_ms: cfg.gain_threshold_ms },
+            SchedulerParams {
+                gain_threshold_ms: cfg.gain_threshold_ms,
+                replan_horizon_iters: cfg.reschedule_every.max(1),
+            },
         );
         // Bootstrap plan: LBL gives size-diverse per-layer transfer samples
         // for the profiler's Δt/rate fit; fixed strategies start as
@@ -182,8 +196,23 @@ impl EdgeWorker {
             _ => Decomposition::layer_by_layer(depth),
         };
         let plan = SchedulePlan { fwd: boot.clone(), bwd: boot };
-        let exec = Arc::new(ExecPlan::compile(&plan, &layer_bytes, shard));
-        Ok(EdgeWorker { cfg, runtime, conns, shard, profiler, scheduler, plan, exec })
+        // The backward pass holds one gradient slab per layer (plus reply
+        // frames in flight), so the retention bound must scale with depth
+        // or wide-segment plans would re-allocate most slabs every
+        // iteration and silently void the zero-allocation contract.
+        let pool = SlabPool::with_max_retained(depth + 16);
+        let exec = Arc::new(ExecPlan::compile(&plan, &layer_bytes, shard, pool.clone()));
+        Ok(EdgeWorker {
+            cfg,
+            runtime,
+            conns,
+            shard,
+            profiler,
+            scheduler,
+            plan,
+            exec,
+            pool,
+        })
     }
 
     pub fn depth(&self) -> usize {
@@ -199,10 +228,16 @@ impl EdgeWorker {
         &self.exec
     }
 
+    /// Counters of the worker's slab pool (reply frames + gradient slabs).
+    pub fn pool_stats(&self) -> crate::net::pool::PoolStats {
+        self.pool.stats()
+    }
+
     /// Re-run the scheduler from the latest profile; returns the call's
     /// outcome, or None if the profiler has no signal yet. When the
     /// scheduler reuses its cached plan the compiled `ExecPlan` is kept
-    /// as-is (no recompilation).
+    /// as-is (no recompilation). Re-compiles reuse the same slab pool, so
+    /// warm buffers survive plan changes.
     pub fn reschedule(&mut self) -> Option<Reschedule> {
         let cv = self.profiler.cost_vectors()?;
         let t0 = Instant::now();
@@ -215,7 +250,12 @@ impl EdgeWorker {
             predicted_ms: sp.predicted_ms(),
         };
         if outcome.changed {
-            let exec = ExecPlan::compile(&sp.plan, &self.exec.layer_bytes, self.shard);
+            let exec = ExecPlan::compile(
+                &sp.plan,
+                &self.exec.layer_bytes,
+                self.shard,
+                self.pool.clone(),
+            );
             self.exec = Arc::new(exec);
             self.plan = sp.plan;
         }
@@ -258,7 +298,8 @@ impl EdgeWorker {
 
     /// One BSP iteration: segmented pulls + layer-wise fwd, loss,
     /// layer-wise bwd + segmented pushes — all driven by the precompiled
-    /// [`ExecPlan`], no per-iteration segment or offset recomputation.
+    /// [`ExecPlan`], no per-iteration segment or offset recomputation, and
+    /// no slab allocations once the pool is warm.
     pub fn iteration(&mut self, iter: u64, x: &Tensor, onehot: &Tensor) -> Result<(f32, f64)> {
         let depth = self.depth();
         let exec = self.exec.clone();
@@ -271,6 +312,7 @@ impl EdgeWorker {
             puller_conns.push(c.try_clone()?);
         }
         let exec_pull = exec.clone();
+        let pull_pool = self.pool.clone();
         let puller = std::thread::Builder::new()
             .name(format!("puller-{}", self.cfg.id))
             .spawn(move || -> Result<()> {
@@ -282,8 +324,12 @@ impl EdgeWorker {
                             lo: seg.lo as u32,
                             hi: seg.hi as u32,
                         })?;
-                        let data = match puller_conns[sub.server].recv()? {
-                            Message::PullReply { data, .. } => data,
+                        // The reply lands straight in a pooled frame; each
+                        // layer gets a view of it — no copies on the pull
+                        // path, and the frame recycles when the last view
+                        // is consumed.
+                        let data = match puller_conns[sub.server].recv_pooled(&pull_pool)? {
+                            RecvMsg::PullReply { data, .. } => data,
                             m => anyhow::bail!("bad pull reply: {m:?}"),
                         };
                         anyhow::ensure!(
@@ -292,14 +338,9 @@ impl EdgeWorker {
                             data.len(),
                             sub.bytes
                         );
-                        // Hand each layer a view of the reply it arrived
-                        // in — no per-layer copies on the pull path.
-                        let data = Arc::new(data);
                         for sl in &sub.slices {
-                            let _ = param_tx.send((
-                                sl.layer,
-                                SlabSlice::new(data.clone(), sl.reply_off, sl.len),
-                            ));
+                            let _ = param_tx
+                                .send((sl.layer, data.slice(sl.reply_off, sl.len)));
                         }
                     }
                     let ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -338,8 +379,9 @@ impl EdgeWorker {
         let top1 = batch_top1(logits, onehot);
 
         // ---- Backward: main computes; pusher thread flushes segments. ----
-        // Channel carries (index into exec.bwd, segment blob).
-        let (grad_tx, grad_rx) = mpsc::channel::<(usize, Vec<u8>)>();
+        // Channel carries (index into exec.bwd, the segment's per-layer
+        // pooled gradient slabs in ascending layer order).
+        let (grad_tx, grad_rx) = mpsc::channel::<(usize, Vec<SlabCheckout>)>();
         let mut pusher_conns = Vec::new();
         for c in &self.conns {
             pusher_conns.push(c.try_clone()?);
@@ -349,31 +391,37 @@ impl EdgeWorker {
             .name(format!("pusher-{}", self.cfg.id))
             .spawn(move || -> Result<Vec<(usize, f64)>> {
                 let mut stats = Vec::new();
-                while let Ok((si, data)) = grad_rx.recv() {
+                while let Ok((si, slabs)) = grad_rx.recv() {
                     let seg = &exec_push.bwd[si];
                     anyhow::ensure!(
-                        data.len() == seg.bytes,
-                        "segment blob size mismatch: got {}, want {}",
-                        data.len(),
-                        seg.bytes
+                        slabs.len() == seg.hi - seg.lo + 1,
+                        "segment slab count mismatch: got {}, want {}",
+                        slabs.len(),
+                        seg.hi - seg.lo + 1
                     );
                     let t0 = Instant::now();
                     for sub in &seg.subs {
-                        // Extract this shard's layers from the segment
-                        // slab: pre-sized buffer, bulk byte copies at the
-                        // precompiled offsets.
-                        let mut payload = Vec::with_capacity(sub.bytes);
+                        // Gather this shard's layers straight from the
+                        // per-layer slabs: the payload is never assembled,
+                        // it goes out vectored.
+                        let mut parts: Vec<&[u8]> = Vec::with_capacity(sub.slices.len());
                         for sl in &sub.slices {
-                            payload.extend_from_slice(
-                                &data[sl.seg_off..sl.seg_off + sl.len],
+                            let s = &slabs[sl.layer - seg.lo];
+                            anyhow::ensure!(
+                                s.len() == sl.len,
+                                "layer {} grad slab: got {}, want {}",
+                                sl.layer,
+                                s.len(),
+                                sl.len
                             );
+                            parts.push(&s[..]);
                         }
-                        pusher_conns[sub.server].send(&Message::Push {
+                        pusher_conns[sub.server].send_push_parts(
                             iter,
-                            lo: seg.lo as u32,
-                            hi: seg.hi as u32,
-                            data: payload,
-                        })?;
+                            seg.lo as u32,
+                            seg.hi as u32,
+                            &parts,
+                        )?;
                         match pusher_conns[sub.server].recv()? {
                             Message::PushAck { .. } => {}
                             m => anyhow::bail!("bad push ack: {m:?}"),
@@ -381,12 +429,14 @@ impl EdgeWorker {
                     }
                     let ms = t0.elapsed().as_secs_f64() * 1e3;
                     stats.push((seg.bytes, ms));
+                    // `slabs` drops here → gradient buffers return to the
+                    // pool for the next iteration.
                 }
                 Ok(stats)
             })?;
 
         let mut gy = glogits;
-        let mut pending: Vec<Option<Vec<u8>>> = vec![None; depth];
+        let mut pending: Vec<Option<SlabCheckout>> = (0..depth).map(|_| None).collect();
         let mut seg_iter = exec.bwd.iter().enumerate();
         let mut cur_seg = seg_iter.next();
         for l in (0..depth).rev() {
@@ -395,8 +445,9 @@ impl EdgeWorker {
             let gy_shaped = reshape_like_output(&gy, &self.runtime, l);
             let (gw, gb, gx) = self.runtime.layer_bwd(l, w, b, &acts[l], &gy_shaped)?;
             self.profiler.record_bwd(l, t0.elapsed().as_secs_f64() * 1e3);
-            // Encode the layer's gradient slab once, pre-sized.
-            let mut flat = Vec::with_capacity(exec.layer_bytes[l]);
+            // Encode the layer's gradient slab once, into a pooled buffer
+            // pre-sized from the plan's byte tables.
+            let mut flat = exec.checkout_layer(l);
             gw.extend_le_bytes(&mut flat);
             gb.extend_le_bytes(&mut flat);
             pending[l] = Some(flat);
@@ -404,12 +455,11 @@ impl EdgeWorker {
             // Segment complete once we've computed down to its low layer.
             if let Some((si, seg)) = cur_seg {
                 if l == seg.lo {
-                    let mut blob = Vec::with_capacity(seg.bytes);
-                    for ll in seg.lo..=seg.hi {
-                        blob.extend_from_slice(pending[ll].as_ref().unwrap());
-                    }
+                    let slabs: Vec<SlabCheckout> = (seg.lo..=seg.hi)
+                        .map(|ll| pending[ll].take().unwrap())
+                        .collect();
                     grad_tx
-                        .send((si, blob))
+                        .send((si, slabs))
                         .map_err(|_| anyhow::anyhow!("pusher died"))?;
                     cur_seg = seg_iter.next();
                 }

@@ -158,6 +158,40 @@ pub fn backward_with_value(cv: &CostVectors) -> (Decomposition, f64) {
     (d, t_backward)
 }
 
+/// Sentinel for `gain_threshold_ms` selecting **AUTO** mode: the threshold
+/// is derived at run time from the measured DP wall-clock and the
+/// iteration's communication idle window instead of being fixed by hand
+/// (any negative value selects AUTO; this constant is the canonical
+/// spelling, and `--gain-threshold-ms auto` parses to it).
+pub const GAIN_THRESHOLD_AUTO: f64 = -1.0;
+
+/// How the re-plan gain threshold is chosen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ThresholdMode {
+    /// Operator-supplied threshold (the explicit-flag override).
+    Fixed(f64),
+    /// Derived from measurements each call; see [`auto_threshold_ms`].
+    Auto,
+}
+
+/// The AUTO threshold rule. The DP runs on the worker between iterations,
+/// so it is *free* while it fits inside the iteration's communication idle
+/// window (`idle_ms`: time the CPU would sit waiting on transmissions
+/// anyway under the current plan). Any overflow beyond the window delays
+/// training once per re-plan, while a better plan pays off on **every** of
+/// the `horizon` iterations it will serve — so a re-plan is worth running
+/// unless its amortized overflow exceeds the largest gain it could
+/// possibly deliver:
+///
+/// `threshold = max(0, dp_ms − idle_ms) / horizon`
+///
+/// A DP that fits the idle window yields threshold 0 (always re-plan, it
+/// costs nothing); a DP far larger than the window demands a
+/// correspondingly large predicted gain before it is re-run.
+pub fn auto_threshold_ms(dp_ms: f64, idle_ms: f64, horizon: usize) -> f64 {
+    (dp_ms - idle_ms.max(0.0)).max(0.0) / horizon.max(1) as f64
+}
+
 /// The paper's strategy behind the [`Scheduler`] API, made stateful: the
 /// DP's own table optima are the predicted finish times, and the scheduler
 /// caches its last plan so the O(L^3) DP can be *skipped* when re-planning
@@ -169,28 +203,81 @@ pub fn backward_with_value(cv: &CostVectors) -> (Decomposition, f64) {
 /// the pass lower bounds `max(Σ comp, Δt + Σ comm)`
 /// ([`forward_lower_bound`] / [`backward_lower_bound`]), so
 /// `eval(cached) − lower_bound` upper-bounds what a fresh DP could still
-/// gain. When that bound is *strictly below* `gain_threshold_ms` the cached
+/// gain. When that bound is *strictly below* the threshold the cached
 /// plan is returned with [`ScheduledPlan::reused`] set. The comparison
 /// being strict means a zero threshold re-plans on every call — exactly
 /// the stateless behavior, bit-identical plans included.
+///
+/// The threshold itself is either fixed (the `--gain-threshold-ms` flag)
+/// or **auto-tuned** ([`GAIN_THRESHOLD_AUTO`]): the scheduler times its
+/// own DP runs (EWMA) and compares that wall-clock against the comm idle
+/// window measured from the fresh cost vectors — see
+/// [`auto_threshold_ms`] and `docs/SCHEDULER.md`.
 pub struct DynaCommScheduler {
-    gain_threshold_ms: f64,
+    mode: ThresholdMode,
+    /// Iterations a plan serves between re-plan opportunities (the
+    /// worker's `reschedule_every`); amortizes the DP cost in AUTO mode.
+    replan_horizon_iters: usize,
+    /// EWMA of the measured DP wall-clock, ms (`None` until the first run).
+    dp_ms: Option<f64>,
+    /// The threshold the most recent `plan` call applied (observability).
+    last_threshold_ms: f64,
     cached: Option<SchedulePlan>,
 }
 
 impl DynaCommScheduler {
-    /// `gain_threshold_ms = 0.0` disables reuse (always re-plan). The
-    /// threshold is sanitized, never panicking on user input: negative or
-    /// NaN values collapse to 0 (the safe always-re-plan default; a panic
-    /// here would surface as an opaque worker-thread death), +∞ means
-    /// "reuse whenever a cached plan of the right depth exists".
+    /// `gain_threshold_ms = 0.0` disables reuse (always re-plan); a
+    /// negative value selects AUTO ([`GAIN_THRESHOLD_AUTO`]); `+∞` means
+    /// "reuse whenever a cached plan of the right depth exists". The value
+    /// is sanitized, never panicking on user input: NaN collapses to 0
+    /// (the safe always-re-plan default; a panic here would surface as an
+    /// opaque worker-thread death).
     pub fn new(gain_threshold_ms: f64) -> DynaCommScheduler {
-        // f64::max(NaN, 0.0) == 0.0, so this handles NaN too.
-        DynaCommScheduler { gain_threshold_ms: gain_threshold_ms.max(0.0), cached: None }
+        DynaCommScheduler::with_horizon(gain_threshold_ms, 1)
     }
 
+    /// Like [`DynaCommScheduler::new`], with the AUTO-mode amortization
+    /// horizon (iterations per re-plan opportunity; clamped to ≥ 1).
+    pub fn with_horizon(gain_threshold_ms: f64, horizon: usize) -> DynaCommScheduler {
+        let mode = if gain_threshold_ms.is_nan() {
+            ThresholdMode::Fixed(0.0)
+        } else if gain_threshold_ms < 0.0 {
+            ThresholdMode::Auto
+        } else {
+            ThresholdMode::Fixed(gain_threshold_ms)
+        };
+        DynaCommScheduler {
+            mode,
+            replan_horizon_iters: horizon.max(1),
+            dp_ms: None,
+            last_threshold_ms: 0.0,
+            cached: None,
+        }
+    }
+
+    /// The configured threshold: the fixed value, or
+    /// [`GAIN_THRESHOLD_AUTO`] in AUTO mode.
     pub fn gain_threshold_ms(&self) -> f64 {
-        self.gain_threshold_ms
+        match self.mode {
+            ThresholdMode::Fixed(t) => t,
+            ThresholdMode::Auto => GAIN_THRESHOLD_AUTO,
+        }
+    }
+
+    /// Whether the threshold is auto-tuned.
+    pub fn is_auto(&self) -> bool {
+        self.mode == ThresholdMode::Auto
+    }
+
+    /// The threshold applied by the most recent `plan` call (in AUTO mode
+    /// this varies with the measured DP cost and idle window).
+    pub fn last_threshold_ms(&self) -> f64 {
+        self.last_threshold_ms
+    }
+
+    #[cfg(test)]
+    fn force_dp_ms(&mut self, ms: f64) {
+        self.dp_ms = Some(ms);
     }
 }
 
@@ -206,10 +293,27 @@ impl Scheduler for DynaCommScheduler {
                 let b = eval_backward(cv, &cached.bwd).total;
                 let max_gain =
                     (f - forward_lower_bound(cv)) + (b - backward_lower_bound(cv));
+                let threshold = match self.mode {
+                    ThresholdMode::Fixed(t) => t,
+                    ThresholdMode::Auto => {
+                        // Idle window under the *cached* plan at fresh
+                        // costs: pass finish time minus pure compute.
+                        let idle = (f - cv.fc.iter().sum::<f64>()).max(0.0)
+                            + (b - cv.bc.iter().sum::<f64>()).max(0.0);
+                        match self.dp_ms {
+                            Some(dp) => {
+                                auto_threshold_ms(dp, idle, self.replan_horizon_iters)
+                            }
+                            // No DP timing yet: re-plan (and measure).
+                            None => 0.0,
+                        }
+                    }
+                };
+                self.last_threshold_ms = threshold;
                 // Strict comparison plus the explicit zero guard: threshold
                 // 0 must always re-plan even if rounding drives the
                 // (mathematically non-negative) gain bound a hair below 0.
-                if self.gain_threshold_ms > 0.0 && max_gain < self.gain_threshold_ms {
+                if threshold > 0.0 && max_gain < threshold {
                     return ScheduledPlan {
                         plan: cached.clone(),
                         predicted_fwd_ms: f,
@@ -219,8 +323,16 @@ impl Scheduler for DynaCommScheduler {
                 }
             }
         }
+        let t0 = std::time::Instant::now();
         let (fwd, predicted_fwd_ms) = forward_with_value(cv);
         let (bwd, predicted_bwd_ms) = backward_with_value(cv);
+        let dp = t0.elapsed().as_secs_f64() * 1e3;
+        // Smooth the DP wall-clock so one noisy measurement cannot swing
+        // the AUTO threshold.
+        self.dp_ms = Some(match self.dp_ms {
+            None => dp,
+            Some(prev) => 0.5 * dp + 0.5 * prev,
+        });
         let plan = SchedulePlan { fwd, bwd };
         self.cached = Some(plan.clone());
         ScheduledPlan { plan, predicted_fwd_ms, predicted_bwd_ms, reused: false }
@@ -400,13 +512,66 @@ mod tests {
 
     #[test]
     fn threshold_is_sanitized_not_panicking() {
-        // Bad CLI/config values must not kill a worker thread.
-        assert_eq!(DynaCommScheduler::new(-3.0).gain_threshold_ms(), 0.0);
+        // Bad CLI/config values must not kill a worker thread: NaN
+        // collapses to the always-re-plan default, negatives mean AUTO.
+        assert!(!DynaCommScheduler::new(f64::NAN).is_auto());
         assert_eq!(DynaCommScheduler::new(f64::NAN).gain_threshold_ms(), 0.0);
+        assert!(DynaCommScheduler::new(-3.0).is_auto());
+        assert!(DynaCommScheduler::new(GAIN_THRESHOLD_AUTO).is_auto());
         assert_eq!(
             DynaCommScheduler::new(f64::INFINITY).gain_threshold_ms(),
             f64::INFINITY
         );
+    }
+
+    #[test]
+    fn auto_threshold_formula() {
+        // DP inside the idle window: free, threshold 0.
+        assert_eq!(auto_threshold_ms(3.0, 10.0, 1), 0.0);
+        assert_eq!(auto_threshold_ms(10.0, 10.0, 5), 0.0);
+        // Overflow amortized over the horizon.
+        assert_eq!(auto_threshold_ms(25.0, 10.0, 1), 15.0);
+        assert_eq!(auto_threshold_ms(25.0, 10.0, 30), 0.5);
+        // Degenerate inputs stay safe.
+        assert_eq!(auto_threshold_ms(5.0, -3.0, 0), 5.0);
+        assert_eq!(auto_threshold_ms(0.0, 0.0, 10), 0.0);
+    }
+
+    #[test]
+    fn auto_mode_replans_while_dp_is_free() {
+        // Comm-dominated profile: the idle window dwarfs any DP cost, so
+        // AUTO keeps re-planning exactly like threshold 0.
+        let cv = CostVectors {
+            pt: vec![50.0; 8],
+            fc: vec![0.1; 8],
+            bc: vec![0.1; 8],
+            gt: vec![50.0; 8],
+            delta_t: 2.0,
+        };
+        let mut s = DynaCommScheduler::with_horizon(GAIN_THRESHOLD_AUTO, 10);
+        assert!(!s.plan(&cv).reused, "first call always plans");
+        for _ in 0..5 {
+            assert!(!s.plan(&cv).reused, "free DP must re-plan");
+            assert_eq!(s.last_threshold_ms(), 0.0);
+        }
+    }
+
+    #[test]
+    fn auto_mode_reuses_when_dp_overwhelms_the_idle_window() {
+        let mut rng = Rng::new(65);
+        let cv = random_cv(&mut rng, 10);
+        let mut s = DynaCommScheduler::with_horizon(GAIN_THRESHOLD_AUTO, 1);
+        assert!(!s.plan(&cv).reused);
+        // Pretend the DP costs an hour: no conceivable gain can pay for
+        // it, so AUTO must answer from the cache.
+        s.force_dp_ms(3_600_000.0);
+        let sp = s.plan(&cv);
+        assert!(sp.reused, "astronomical DP cost must be skipped");
+        assert!(s.last_threshold_ms() > 0.0);
+        // And dialing the measured cost back to zero re-enables planning.
+        s.force_dp_ms(0.0);
+        assert!(!s.plan(&cv).reused);
+        assert_eq!(s.last_threshold_ms(), 0.0);
     }
 
     #[test]

@@ -18,13 +18,24 @@ use crate::config::Strategy;
 
 /// Tuning knobs threaded into stateful schedulers at creation time.
 /// The default (`gain_threshold_ms: 0.0`) re-plans on every call.
-#[derive(Debug, Clone, Copy, PartialEq, Default)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct SchedulerParams {
     /// DynaComm: skip the O(L^3) DP when re-planning cannot gain more than
     /// this many ms over the cached plan. `0.0` re-plans on every call
-    /// (the stateless behavior); see
-    /// [`crate::sched::dynacomm::DynaCommScheduler`].
+    /// (the stateless behavior); **negative selects AUTO**
+    /// ([`crate::sched::dynacomm::GAIN_THRESHOLD_AUTO`]), deriving the
+    /// threshold from the measured DP wall-clock vs the comm idle window;
+    /// see [`crate::sched::dynacomm::DynaCommScheduler`].
     pub gain_threshold_ms: f64,
+    /// Iterations a plan serves between re-plan opportunities (the
+    /// worker's `reschedule_every`); amortizes the DP cost in AUTO mode.
+    pub replan_horizon_iters: usize,
+}
+
+impl Default for SchedulerParams {
+    fn default() -> Self {
+        SchedulerParams { gain_threshold_ms: 0.0, replan_horizon_iters: 1 }
+    }
 }
 
 /// Canonical names of every registry entry, in creation-tested order.
@@ -67,8 +78,9 @@ pub fn create_for_with(strategy: Strategy, params: SchedulerParams) -> Box<dyn S
         Strategy::Sequential => Box::new(FixedScheduler::sequential()),
         Strategy::LayerByLayer => Box::new(FixedScheduler::layer_by_layer()),
         Strategy::IBatch => Box::new(super::ibatch::IBatchScheduler::new()),
-        Strategy::DynaComm => Box::new(super::dynacomm::DynaCommScheduler::new(
+        Strategy::DynaComm => Box::new(super::dynacomm::DynaCommScheduler::with_horizon(
             params.gain_threshold_ms,
+            params.replan_horizon_iters,
         )),
     }
 }

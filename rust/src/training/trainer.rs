@@ -42,7 +42,10 @@ pub struct TrainConfig {
     pub val_batches: usize,
     /// DynaComm re-plan gain threshold, ms: skip the O(L^3) DP at an epoch
     /// boundary when a fresh plan cannot gain more than this over the
-    /// cached one. 0 re-plans every epoch (the paper's Section IV-C loop).
+    /// cached one. 0 re-plans every epoch (the paper's Section IV-C loop);
+    /// negative (the default, `sched::dynacomm::GAIN_THRESHOLD_AUTO`)
+    /// auto-tunes the threshold from the measured DP wall-clock vs the
+    /// iteration's comm idle window. An explicit value overrides AUTO.
     pub gain_threshold_ms: f64,
 }
 
@@ -62,7 +65,7 @@ impl Default for TrainConfig {
             profiling: true,
             seed: 0,
             val_batches: 4,
-            gain_threshold_ms: 0.0,
+            gain_threshold_ms: crate::sched::dynacomm::GAIN_THRESHOLD_AUTO,
         }
     }
 }

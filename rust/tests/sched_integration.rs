@@ -212,7 +212,7 @@ fn gain_threshold_replan_vs_reuse() {
 
     let mut zero = registry::create_with(
         "dynacomm",
-        registry::SchedulerParams { gain_threshold_ms: 0.0 },
+        registry::SchedulerParams { gain_threshold_ms: 0.0, ..Default::default() },
     )
     .unwrap();
     for cv in &profiles {
@@ -224,7 +224,10 @@ fn gain_threshold_replan_vs_reuse() {
 
     let mut huge = registry::create_with(
         "dynacomm",
-        registry::SchedulerParams { gain_threshold_ms: f64::INFINITY },
+        registry::SchedulerParams {
+            gain_threshold_ms: f64::INFINITY,
+            ..Default::default()
+        },
     )
     .unwrap();
     let first = huge.plan(&profiles[0]);
