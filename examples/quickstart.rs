@@ -18,12 +18,14 @@ fn main() -> anyhow::Result<()> {
     let cv = model.cost_vectors(&cfg);
 
     println!(
-        "== {} | {} layers | batch {} | {} Gbps nominal | Δt = {:.1} ms ==\n",
+        "== {} | {} layers | batch {} | {} Gbps nominal | Δt = {:.1} ms | \
+         codec {} ==\n",
         model.name,
         model.depth(),
         cfg.batch,
         cfg.net.bandwidth_gbps,
-        cv.delta_t
+        cv.delta_t,
+        cfg.codec.name()
     );
 
     let seq_total = sim::simulate_cv(&cv, Strategy::Sequential).total_ms();

@@ -50,5 +50,34 @@ fn main() -> anyhow::Result<()> {
             reduced_ratio(&cv, Strategy::DynaComm),
         );
     }
+
+    // Codec sweep (AccEPT-style compressed transfers): as the wire codec
+    // shrinks pt/gt, DynaComm re-segments — transmissions get cheaper
+    // relative to Δt, so the DP consolidates into fewer, larger segments
+    // while the predicted iteration time drops.
+    println!("\nwire codec sweep (DynaComm re-segmentation):");
+    println!(
+        "{:<8} {:>12} {:>14} {:>14} {:>14}",
+        "codec", "wire-bytes", "fwd-segments", "bwd-segments", "iteration(ms)"
+    );
+    for codec in dynacomm::net::codec::CodecId::ALL {
+        let mut c = cfg.clone();
+        c.codec = codec;
+        let cv = model.cost_vectors(&c);
+        let r = dynacomm::sim::simulate_cv(&cv, Strategy::DynaComm);
+        let wire: f64 = model
+            .layers
+            .iter()
+            .map(|l| codec.wire_bytes_f64(l.param_bytes()))
+            .sum();
+        println!(
+            "{:<8} {:>12.0} {:>14} {:>14} {:>14.1}",
+            codec.name(),
+            wire,
+            r.sched.plan.fwd.num_transmissions(),
+            r.sched.plan.bwd.num_transmissions(),
+            r.total_ms(),
+        );
+    }
     Ok(())
 }

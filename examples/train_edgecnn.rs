@@ -42,14 +42,19 @@ fn main() -> anyhow::Result<()> {
         cfg.strategy = Strategy::parse(s)
             .ok_or_else(|| anyhow::anyhow!("bad --strategy '{s}'"))?;
     }
+    if let Some(s) = args.get("codec") {
+        cfg.codec = dynacomm::net::codec::CodecId::parse(s)
+            .ok_or_else(|| anyhow::anyhow!("bad --codec '{s}' (fp32|fp16|int8)"))?;
+    }
     println!(
         "training edgecnn: {} workers x {} servers, {} epochs x {} iters, \
-         strategy={}",
+         strategy={}, codec={}",
         cfg.workers,
         cfg.servers,
         cfg.epochs,
         cfg.iters_per_epoch,
-        cfg.strategy.name()
+        cfg.strategy.name(),
+        cfg.codec.name()
     );
 
     let r = train(&cfg)?;

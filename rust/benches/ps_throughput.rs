@@ -15,6 +15,14 @@
 //! Alongside bytes/sec it reports the reply-cache hit rate and the pool's
 //! steady-state allocation count (which must be zero after warm-up).
 //! Target: ≥ 2× server-side throughput at 8 workers.
+//!
+//! A **codec matrix** (fp32/fp16/int8 at 8 workers × 2 MiB) drives the
+//! same pull storm through negotiated quantized sessions and reports
+//! per-codec bytes-on-wire (fp16 target: ≥ 45% saved), effective raw
+//! throughput and speedup vs fp32, reply-cache hit rate (must be
+//! unchanged), steady-state allocations (must stay 0), and the server's
+//! measured max quantization error — all recorded as `codec_matrix` rows
+//! in `results/BENCH_wire.json`.
 
 mod common;
 
@@ -26,6 +34,7 @@ use std::sync::{Arc, Barrier};
 use std::time::Instant;
 
 use dynacomm::figures;
+use dynacomm::net::codec::CodecId;
 use dynacomm::net::{slab, Connection, Message};
 use dynacomm::ps::{ParamServer, ServerConfig};
 use dynacomm::util::json::Json;
@@ -44,21 +53,37 @@ fn layer_init() -> HashMap<usize, Vec<f32>> {
 }
 
 /// `workers` concurrent clients × `reps` full-range pulls of iteration 0
-/// against `addr`; returns the wall-clock seconds of the pull phase.
-fn drive_pulls(addr: std::net::SocketAddr, workers: usize, reps: usize) -> f64 {
+/// against `addr`, each session negotiated to `codec`; returns the
+/// wall-clock seconds of the pull phase.
+fn drive_pulls_codec(
+    addr: std::net::SocketAddr,
+    codec: CodecId,
+    workers: usize,
+    reps: usize,
+) -> f64 {
+    // Per-layer encodings concatenated: the full-range reply size.
+    let expect: usize = (0..LAYERS).map(|_| codec.wire_len(4 * LAYER_F32S)).sum();
     let barrier = Arc::new(Barrier::new(workers + 1));
     let mut threads = Vec::new();
     for _ in 0..workers {
         let barrier = barrier.clone();
         threads.push(std::thread::spawn(move || {
             let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+            if codec != CodecId::Fp32 {
+                conn.send(&Message::CodecPropose { pref: codec }).unwrap();
+                match conn.recv().unwrap() {
+                    Message::CodecAgree { codec: agreed } => assert_eq!(agreed, codec),
+                    m => panic!("{m:?}"),
+                }
+            }
             barrier.wait();
             for _ in 0..reps {
                 conn.send(&Message::Pull { iter: 0, lo: 0, hi: LAYERS as u32 - 1 })
                     .unwrap();
                 match conn.recv().unwrap() {
-                    Message::PullReply { data, .. } => {
-                        assert_eq!(data.len(), reply_bytes())
+                    Message::PullReply { codec: got, data, .. } => {
+                        assert_eq!(got, codec);
+                        assert_eq!(data.len(), expect)
                     }
                     m => panic!("{m:?}"),
                 }
@@ -71,6 +96,10 @@ fn drive_pulls(addr: std::net::SocketAddr, workers: usize, reps: usize) -> f64 {
         t.join().unwrap();
     }
     t0.elapsed().as_secs_f64()
+}
+
+fn drive_pulls(addr: std::net::SocketAddr, workers: usize, reps: usize) -> f64 {
+    drive_pulls_codec(addr, CodecId::Fp32, workers, reps)
 }
 
 /// `workers` clients in BSP lockstep over iterations `start..end`: each
@@ -102,6 +131,7 @@ fn drive_bsp(addr: std::net::SocketAddr, workers: usize, start: u64, end: u64) -
                     iter,
                     lo: 0,
                     hi: LAYERS as u32 - 1,
+                    codec: CodecId::Fp32,
                     data: slab::from_f32s(&grad),
                 })
                 .unwrap();
@@ -149,7 +179,8 @@ fn legacy_conn(mut stream: TcpStream, params: &HashMap<usize, Vec<u8>>) {
                 data.extend_from_slice(p);
             }
         }
-        Message::PullReply { iter, lo, hi, data }.encode_into(&mut scratch);
+        Message::PullReply { iter, lo, hi, codec: CodecId::Fp32, data }
+            .encode_into(&mut scratch);
         if stream.write_all(&scratch).is_err() {
             return;
         }
@@ -233,6 +264,52 @@ fn main() {
         / secs_bsp;
     drop(srv);
 
+    // --- Codec matrix: fp32/fp16/int8 at 8 workers × 2 MiB replies. ---
+    // Each codec gets a fresh shard and the same pull storm; rows report
+    // bytes-on-wire, effective (raw-parameter) throughput, speedup vs the
+    // fp32 broadcast path, reply-cache behavior, steady-state allocations,
+    // and the server's measured max quantization error.
+    struct CodecRow {
+        codec: CodecId,
+        wire_reply_bytes: usize,
+        saved_pct: f64,
+        raw_mb_per_s: f64,
+        wire_mb_per_s: f64,
+        hit_rate: f64,
+        steady_allocs: u64,
+        max_quant_error: f64,
+    }
+    let mut codec_rows: Vec<CodecRow> = Vec::new();
+    for codec in CodecId::ALL {
+        let srv = ParamServer::start(
+            ServerConfig { workers: WORKERS, lr: 0.1 },
+            layers.clone(),
+            None,
+        )
+        .unwrap();
+        let caddr = srv.handle().addr;
+        drive_pulls_codec(caddr, codec, 1, 2); // warm cache + pool
+        let c0 = srv.wire_stats();
+        let secs = drive_pulls_codec(caddr, codec, WORKERS, reps);
+        let c1 = srv.wire_stats();
+        let wire_reply_bytes: usize =
+            (0..LAYERS).map(|_| codec.wire_len(4 * LAYER_F32S)).sum();
+        let hits = c1.reply_cache_hits - c0.reply_cache_hits;
+        codec_rows.push(CodecRow {
+            codec,
+            wire_reply_bytes,
+            saved_pct: 100.0 * (1.0 - wire_reply_bytes as f64 / reply_bytes() as f64),
+            raw_mb_per_s: mb(secs),
+            wire_mb_per_s: total_pulls as f64 * wire_reply_bytes as f64
+                / (1 << 20) as f64
+                / secs,
+            hit_rate: hits as f64 / total_pulls as f64,
+            steady_allocs: c1.pool.allocations - c0.pool.allocations,
+            max_quant_error: c1.codec(codec).max_quant_error as f64,
+        });
+        drop(srv);
+    }
+
     // --- Legacy path: per-worker assembly + full-copy encode. ---
     let (laddr, stop) = legacy_server(layers);
     drive_pulls(laddr, 1, 2);
@@ -264,6 +341,25 @@ fn main() {
          egress, {bsp_builds} builds / {bsp_hits} hits over {bsp_pulls} \
          pulls, {bsp_allocs} steady-state allocations"
     );
+    let fp32_raw = codec_rows[0].raw_mb_per_s;
+    println!(
+        "  codec matrix ({WORKERS} workers x {:.1} MiB raw replies):",
+        reply_bytes() as f64 / (1 << 20) as f64
+    );
+    for row in &codec_rows {
+        println!(
+            "    {:<5} wire {:>9} B/reply ({:>5.1}% saved)  raw {:>7.0} MB/s \
+             ({:.2}x vs fp32)  hit-rate {:.3}  allocs {}  max-qerr {:.3e}",
+            row.codec.name(),
+            row.wire_reply_bytes,
+            row.saved_pct,
+            row.raw_mb_per_s,
+            row.raw_mb_per_s / fp32_raw,
+            row.hit_rate,
+            row.steady_allocs,
+            row.max_quant_error,
+        );
+    }
 
     let json = Json::obj(vec![
         ("workers", Json::Num(WORKERS as f64)),
@@ -288,6 +384,31 @@ fn main() {
         ("bsp_builds", Json::Num(bsp_builds as f64)),
         ("bsp_hits", Json::Num(bsp_hits as f64)),
         ("bsp_steady_state_allocs", Json::Num(bsp_allocs as f64)),
+        (
+            "codec_matrix",
+            Json::Arr(
+                codec_rows
+                    .iter()
+                    .map(|row| {
+                        Json::obj(vec![
+                            ("codec", Json::Str(row.codec.name().to_string())),
+                            ("wire_reply_bytes", Json::Num(row.wire_reply_bytes as f64)),
+                            ("raw_reply_bytes", Json::Num(reply_bytes() as f64)),
+                            ("bytes_saved_pct", Json::Num(row.saved_pct)),
+                            ("raw_mb_per_s", Json::Num(row.raw_mb_per_s)),
+                            ("wire_mb_per_s", Json::Num(row.wire_mb_per_s)),
+                            (
+                                "speedup_vs_fp32",
+                                Json::Num(row.raw_mb_per_s / fp32_raw),
+                            ),
+                            ("reply_cache_hit_rate", Json::Num(row.hit_rate)),
+                            ("steady_state_allocs", Json::Num(row.steady_allocs as f64)),
+                            ("max_quant_error", Json::Num(row.max_quant_error)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
         ("fast_mode", Json::Num(if common::fast_mode() { 1.0 } else { 0.0 })),
     ]);
     figures::write_result("BENCH_wire", json).unwrap();

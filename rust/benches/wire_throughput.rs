@@ -81,7 +81,13 @@ fn main() {
     });
 
     // --- Slab path: Vec<u8> payload, bulk copies, reused scratch. ---
-    let msg = Message::PullReply { iter: 7, lo: 0, hi: 5, data: slab::from_f32s(&values) };
+    let msg = Message::PullReply {
+        iter: 7,
+        lo: 0,
+        hi: 5,
+        codec: dynacomm::net::codec::CodecId::Fp32,
+        data: slab::from_f32s(&values),
+    };
     let mut scratch = Vec::new();
     msg.encode_into(&mut scratch); // warm the scratch buffer
     let slab_enc = time_best(reps, || {

@@ -3,6 +3,7 @@
 //! model, batch size, and scheduling strategy. Configs load from JSON files
 //! or CLI flags and default to the paper's testbed (Section V-A).
 
+use crate::net::codec::CodecId;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -133,6 +134,12 @@ pub struct SystemConfig {
     /// wall-clock vs the comm idle window. An explicit value overrides
     /// AUTO.
     pub gain_threshold_ms: f64,
+    /// Wire codec for parameter/gradient transfers (`net::codec`,
+    /// `--codec {fp32,fp16,int8}`): shrinks bytes-on-wire, which both the
+    /// real wire path and the scheduler's transmission-cost model consume
+    /// (compressed transfers widen the overlap window, so the DP
+    /// re-segments).
+    pub codec: CodecId,
 }
 
 /// Parse a `gain-threshold-ms` spelling: `auto` (case-insensitive) or a
@@ -156,6 +163,7 @@ impl Default for SystemConfig {
             batch: 32,
             strategy: Strategy::DynaComm,
             gain_threshold_ms: crate::sched::dynacomm::GAIN_THRESHOLD_AUTO,
+            codec: CodecId::Fp32,
         }
     }
 }
@@ -190,6 +198,10 @@ impl SystemConfig {
             self.strategy = Strategy::parse(s)
                 .unwrap_or_else(|| panic!("unknown strategy '{s}'"));
         }
+        if let Some(s) = args.get("codec") {
+            self.codec = CodecId::parse(s)
+                .unwrap_or_else(|| panic!("unknown codec '{s}' (fp32|fp16|int8)"));
+        }
         self
     }
 
@@ -222,6 +234,10 @@ impl SystemConfig {
             c.strategy = Strategy::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown strategy '{s}'"))?;
         }
+        if let Some(s) = j.get("codec").and_then(Json::as_str) {
+            c.codec = CodecId::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown codec '{s}'"))?;
+        }
         Ok(c)
     }
 
@@ -237,6 +253,7 @@ impl SystemConfig {
             ("model", Json::Str(self.model.clone())),
             ("batch", Json::Num(self.batch as f64)),
             ("strategy", Json::Str(self.strategy.name().to_string())),
+            ("codec", Json::Str(self.codec.name().to_string())),
             (
                 "gain_threshold_ms",
                 if self.gain_threshold_ms < 0.0 {
@@ -284,6 +301,7 @@ mod tests {
         c.model = "vgg19".into();
         c.strategy = Strategy::IBatch;
         c.gain_threshold_ms = 3.5;
+        c.codec = CodecId::Int8;
         let j = c.to_json();
         let back = SystemConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back, c);
@@ -292,9 +310,19 @@ mod tests {
     #[test]
     fn args_overlay() {
         let args = Args::parse(
-            ["--batch=64", "--strategy", "lbl", "--rtt-ms", "5", "--gain-threshold-ms", "2.5"]
-                .iter()
-                .map(|s| s.to_string()),
+            [
+                "--batch=64",
+                "--strategy",
+                "lbl",
+                "--rtt-ms",
+                "5",
+                "--gain-threshold-ms",
+                "2.5",
+                "--codec",
+                "fp16",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
         );
         let c = SystemConfig::default().apply_args(&args);
         assert_eq!(c.batch, 64);
@@ -302,6 +330,9 @@ mod tests {
         assert_eq!(c.net.rtt_ms, 5.0);
         assert_eq!(c.gain_threshold_ms, 2.5);
         assert_eq!(c.scheduler_params().gain_threshold_ms, 2.5);
+        assert_eq!(c.codec, CodecId::Fp16);
+        // Default stays the uncompressed wire format.
+        assert_eq!(SystemConfig::default().codec, CodecId::Fp32);
     }
 
     #[test]

@@ -55,6 +55,8 @@ FLAGS (defaults = the paper's testbed):
   --model NAME          vgg19|googlenet|inceptionv4|resnet152|edgecnn
   --batch N             per-worker batch size (32)
   --strategy S          sequential|lbl|ibatch|dynacomm (registry shim names)
+  --codec C             wire codec fp32|fp16|int8 (compressed transfers;
+                        the scheduler costs transmissions at wire size)
   --gain-threshold-ms F skip DynaComm's DP re-plan when the predicted gain
                         is under F ms (0 = re-plan every epoch; `auto`, the
                         default, derives F from the measured DP wall-clock
@@ -166,6 +168,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     if let Some(s) = args.get("strategy") {
         cfg.strategy = Strategy::parse(s).context("bad --strategy")?;
+    }
+    if let Some(s) = args.get("codec") {
+        cfg.codec = dynacomm::net::codec::CodecId::parse(s).context("bad --codec")?;
     }
     let result = train(&cfg)?;
     for (e, ((loss, acc), ms)) in result

@@ -63,7 +63,9 @@ impl ModelSpec {
     ///
     /// * `pt[l]` / `gt[l]`: serialization time of layer *l*'s tensor at the
     ///   effective link rate (latency and setup live in `Δt`, which is paid
-    ///   once per mini-procedure, not per layer).
+    ///   once per mini-procedure, not per layer), after `cfg.codec`'s wire
+    ///   compression (`sched::cost::transmission_ms`) — so the scheduler's
+    ///   inputs shrink with the codec and the DP re-segments accordingly.
     /// * `fc[l]` / `bc[l]`: compute time at the device's sustained rate.
     /// * `delta_t`: `Δt` = setup/coordination + one-way latency, matching
     ///   Table I's `Δt + pt¹/gt¹ ≈ 14 ms` at 10 ms RTT.
@@ -76,8 +78,9 @@ impl ModelSpec {
         let mut gt = Vec::with_capacity(self.depth());
         for layer in &self.layers {
             let bytes = layer.param_bytes();
-            pt.push(bytes / bw_bytes_per_ms);
-            gt.push(bytes / bw_bytes_per_ms);
+            let ms = crate::sched::cost::transmission_ms(cfg.codec, bytes, bw_bytes_per_ms);
+            pt.push(ms);
+            gt.push(ms);
             fc.push(cfg.device.compute_ms(layer.fwd_flops * batch));
             bc.push(cfg.device.compute_ms(layer.bwd_flops * batch));
         }

@@ -1,0 +1,239 @@
+//! IEEE 754 binary16 wire codec: 2 bytes per element, half the fp32 wire
+//! volume, round-to-nearest-even conversion in safe integer code (no
+//! `half` crate — the container is offline).
+//!
+//! Deviation from a strict IEEE conversion, chosen for training traffic:
+//! **finite** f32 values beyond the fp16 range saturate to ±65504 (the
+//! largest finite half) instead of rounding to infinity, so one stray
+//! large gradient cannot poison the accumulator with `inf`. Infinities and
+//! NaNs propagate unchanged. For `|x| ≤ 65504` the conversion is exactly
+//! round-to-nearest-even, so the roundtrip error is at most half an ULP of
+//! the fp16 result (≤ `|x|·2⁻¹¹` for normals, ≤ `2⁻²⁵` in the subnormal
+//! range) — the bound the property tests pin down.
+
+use anyhow::Result;
+
+use super::{CodecId, WireCodec};
+
+/// f32 → fp16 bit pattern, round-to-nearest-even, saturating (see module
+/// docs).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // Infinity propagates; NaN collapses to a quiet NaN.
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+    let e = exp - 127 + 15; // fp16 biased exponent
+    if e >= 0x1f {
+        return sign | 0x7bff; // finite overflow saturates to ±65504
+    }
+    if e <= 0 {
+        // Subnormal target range. Below half the smallest subnormal
+        // (|x| < 2⁻²⁵) everything rounds to zero.
+        if e < -10 {
+            return sign;
+        }
+        let m = man | 0x0080_0000; // implicit leading bit
+        let shift = (14 - e) as u32; // 14..=24
+        let half = m >> shift;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        let round_up = rem > halfway || (rem == halfway && half & 1 == 1);
+        return sign | (half + u32::from(round_up)) as u16;
+    }
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1fff;
+    let round_up = rem > 0x1000 || (rem == 0x1000 && half & 1 == 1);
+    let rounded = half + u32::from(round_up);
+    if rounded >= 0x7c00 {
+        return sign | 0x7bff; // rounding carried into the infinity slot
+    }
+    sign | rounded as u16
+}
+
+/// fp16 bit pattern → f32 (exact: every half is representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = if exp == 0x1f {
+        if man == 0 {
+            sign | 0x7f80_0000
+        } else {
+            sign | 0x7fc0_0000 | (man << 13)
+        }
+    } else if exp != 0 {
+        sign | ((exp + 112) << 23) | (man << 13)
+    } else if man == 0 {
+        sign
+    } else {
+        // Subnormal: normalize. value = man · 2⁻²⁴.
+        let mut e = 0u32;
+        let mut m = man;
+        while m & 0x400 == 0 {
+            m <<= 1;
+            e += 1;
+        }
+        sign | ((113 - e) << 23) | ((m & 0x3ff) << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// The binary16 wire codec.
+pub struct Fp16Codec;
+
+impl WireCodec for Fp16Codec {
+    fn id(&self) -> CodecId {
+        CodecId::Fp16
+    }
+
+    fn wire_len(&self, raw_len: usize) -> usize {
+        debug_assert!(raw_len % 4 == 0);
+        raw_len / 2
+    }
+
+    fn raw_len(&self, wire_len: usize) -> Result<usize> {
+        anyhow::ensure!(wire_len % 2 == 0, "fp16 slab length {wire_len} not f16-aligned");
+        Ok(wire_len * 2)
+    }
+
+    fn encode(&self, raw: &[u8], dst: &mut Vec<u8>) -> f32 {
+        debug_assert!(raw.len() % 4 == 0);
+        dst.reserve(raw.len() / 2);
+        let mut max_err = 0.0f32;
+        for c in raw.chunks_exact(4) {
+            let x = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            let h = f32_to_f16_bits(x);
+            dst.extend_from_slice(&h.to_le_bytes());
+            let err = (f16_bits_to_f32(h) - x).abs();
+            if err.is_finite() && err > max_err {
+                max_err = err;
+            }
+        }
+        max_err
+    }
+
+    fn decode(&self, wire: &[u8], dst: &mut Vec<u8>) -> Result<()> {
+        self.raw_len(wire.len())?;
+        dst.reserve(wire.len() * 2);
+        for c in wire.chunks_exact(2) {
+            let x = f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+            dst.extend_from_slice(&x.to_le_bytes());
+        }
+        Ok(())
+    }
+
+    fn accumulate(&self, acc: &mut [f32], wire: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            acc.len() * 2 == wire.len(),
+            "fp16 slab/accumulator length mismatch: {} vs {}",
+            wire.len(),
+            acc.len() * 2
+        );
+        for (a, c) in acc.iter_mut().zip(wire.chunks_exact(2)) {
+            *a += f16_bits_to_f32(u16::from_le_bytes([c[0], c[1]]));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn known_bit_patterns() {
+        for (x, h) in [
+            (0.0f32, 0x0000u16),
+            (1.0, 0x3c00),
+            (-1.0, 0xbc00),
+            (0.5, 0x3800),
+            (2.0, 0x4000),
+            (65504.0, 0x7bff),             // largest finite half
+            (6.103_515_6e-5, 0x0400),      // smallest normal (2⁻¹⁴)
+            (5.960_464_5e-8, 0x0001),      // smallest subnormal (2⁻²⁴)
+            (f32::INFINITY, 0x7c00),
+            (f32::NEG_INFINITY, 0xfc00),
+        ] {
+            assert_eq!(f32_to_f16_bits(x), h, "{x}");
+            if x.is_finite() {
+                assert_eq!(f16_bits_to_f32(h), x, "{x}");
+            }
+        }
+        assert_eq!(f16_bits_to_f32(0x8000), -0.0);
+        assert!(f16_bits_to_f32(0x7e00).is_nan());
+        assert!(f32_to_f16_bits(f32::NAN) & 0x7c00 == 0x7c00);
+    }
+
+    #[test]
+    fn ties_round_to_even_and_overflow_saturates() {
+        // 1 + 2⁻¹¹ is exactly halfway between 0x3c00 and 0x3c01 → even.
+        assert_eq!(f32_to_f16_bits(1.0 + f32::powi(2.0, -11)), 0x3c00);
+        // 1 + 3·2⁻¹¹ is halfway between 0x3c01 and 0x3c02 → even (0x3c02).
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * f32::powi(2.0, -11)), 0x3c02);
+        // Anything past the midpoint rounds up.
+        assert_eq!(f32_to_f16_bits(1.0 + 1.1 * f32::powi(2.0, -11)), 0x3c01);
+        // Finite overflow saturates instead of producing infinity.
+        assert_eq!(f32_to_f16_bits(1e9), 0x7bff);
+        assert_eq!(f32_to_f16_bits(-1e9), 0xfbff);
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7bff, "midpoint past max saturates");
+        // Exactly 2⁻²⁵ ties to even zero; just above rounds to 2⁻²⁴.
+        assert_eq!(f32_to_f16_bits(f32::powi(2.0, -25)), 0x0000);
+        assert_eq!(f32_to_f16_bits(1.0001 * f32::powi(2.0, -25)), 0x0001);
+    }
+
+    /// The satellite property: for every finite `|x| ≤ 65504` the
+    /// roundtrip error is at most half an ULP of the fp16 grid —
+    /// `max(|x|·2⁻¹¹, 2⁻²⁵)` — and the result is the *nearest* half (no
+    /// neighbor is closer).
+    #[test]
+    fn roundtrip_error_bounded_by_half_ulp() {
+        let mut rng = Rng::new(1717);
+        for i in 0..20_000 {
+            // Log-uniform magnitudes across the whole fp16 range, plus
+            // exact powers of two and subnormals.
+            let mag = 10f64.powf(rng.range_f64(-8.0, 4.8));
+            let x = (mag * if rng.bool() { -1.0 } else { 1.0 }) as f32;
+            let x = if i % 7 == 0 { x.floor() } else { x };
+            if !x.is_finite() || x.abs() > 65504.0 {
+                continue;
+            }
+            let h = f32_to_f16_bits(x);
+            let rt = f16_bits_to_f32(h);
+            let err = (rt - x).abs();
+            let bound = (x.abs() * f32::powi(2.0, -11)).max(f32::powi(2.0, -25));
+            assert!(
+                err <= bound * (1.0 + 1e-6),
+                "half-ULP bound violated for {x}: rt={rt}, err={err}, bound={bound}"
+            );
+            // Nearest-grid-point check against both neighbors.
+            for nb in [h.wrapping_sub(1), h.wrapping_add(1)] {
+                // Skip wraps across the sign/infinity boundaries.
+                if nb & 0x7c00 == 0x7c00 || (nb ^ h) & 0x8000 != 0 {
+                    continue;
+                }
+                let nv = f16_bits_to_f32(nb);
+                assert!(
+                    err <= (nv - x).abs() + 1e-12,
+                    "{x}: neighbor {nv} closer than {rt}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn every_half_roundtrips_exactly_through_f32() {
+        // f32 represents all 2¹⁶ half patterns exactly, so
+        // half → f32 → half must be the identity (NaNs excluded).
+        for h in 0..=u16::MAX {
+            if h & 0x7c00 == 0x7c00 && h & 0x3ff != 0 {
+                continue; // NaN payloads collapse
+            }
+            assert_eq!(f32_to_f16_bits(f16_bits_to_f32(h)), h, "{h:#06x}");
+        }
+    }
+}

@@ -1,0 +1,274 @@
+//! Per-chunk affine int8 wire codec (AccEPT-style, arXiv 2311.05827).
+//!
+//! The raw f32 slab is split into chunks of [`CHUNK`] elements; each chunk
+//! is quantized independently against its own value range and laid out as
+//!
+//! ```text
+//! +--------------+-------------------+------------------------+
+//! | scale f32 LE | zero-point f32 LE | one u8 per element     |
+//! +--------------+-------------------+------------------------+
+//! ```
+//!
+//! with `x ≈ zero + scale·q`, `scale = (max − min)/255`, `zero = min`.
+//! Asymptotic wire size is `elems + 8·⌈elems/CHUNK⌉` bytes — ~26% of fp32.
+//! Per-chunk rounding keeps the max absolute error at `scale/2 =
+//! range/510`, comfortably inside the `range/254` contract the property
+//! tests assert. A constant chunk (`max == min`) encodes with `scale = 0`
+//! and reproduces exactly; chunks whose range overflows f32 (or contains
+//! no finite value) degrade to the same constant encoding rather than
+//! producing non-finite scales.
+//!
+//! Chunking restarts at every layer slab (codecs apply per layer, see the
+//! parent module), so the layout of a multi-layer payload is computable
+//! from the per-layer byte tables alone.
+
+use anyhow::Result;
+
+use super::{CodecId, WireCodec};
+
+/// f32 elements per quantization chunk.
+pub const CHUNK: usize = 1024;
+
+/// Chunk header bytes: `f32 scale ‖ f32 zero-point`.
+pub const HEADER_BYTES: usize = 8;
+
+/// The per-chunk affine int8 wire codec.
+pub struct Int8Codec;
+
+fn read_f32(b: &[u8]) -> f32 {
+    f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+}
+
+impl WireCodec for Int8Codec {
+    fn id(&self) -> CodecId {
+        CodecId::Int8
+    }
+
+    fn wire_len(&self, raw_len: usize) -> usize {
+        debug_assert!(raw_len % 4 == 0);
+        let elems = raw_len / 4;
+        elems + HEADER_BYTES * ((elems + CHUNK - 1) / CHUNK)
+    }
+
+    fn raw_len(&self, wire_len: usize) -> Result<usize> {
+        if wire_len == 0 {
+            return Ok(0);
+        }
+        // A full chunk occupies HEADER_BYTES + CHUNK; only the last chunk
+        // may be short, so the chunk count is uniquely determined.
+        let per = HEADER_BYTES + CHUNK;
+        let chunks = (wire_len + per - 1) / per;
+        let elems = wire_len
+            .checked_sub(HEADER_BYTES * chunks)
+            .filter(|&e| e > 0 && (e + CHUNK - 1) / CHUNK == chunks)
+            .ok_or_else(|| anyhow::anyhow!("invalid int8 slab length {wire_len}"))?;
+        Ok(4 * elems)
+    }
+
+    fn encode(&self, raw: &[u8], dst: &mut Vec<u8>) -> f32 {
+        debug_assert!(raw.len() % 4 == 0);
+        dst.reserve(self.wire_len(raw.len()));
+        let mut max_err = 0.0f32;
+        for chunk in raw.chunks(4 * CHUNK) {
+            // Finite range of the chunk.
+            let mut lo = f32::INFINITY;
+            let mut hi = f32::NEG_INFINITY;
+            for c in chunk.chunks_exact(4) {
+                let v = read_f32(c);
+                if v.is_finite() {
+                    if v < lo {
+                        lo = v;
+                    }
+                    if v > hi {
+                        hi = v;
+                    }
+                }
+            }
+            let (scale, zero) = if hi > lo && (hi - lo).is_finite() {
+                ((hi - lo) / 255.0, lo)
+            } else if lo.is_finite() {
+                (0.0, lo) // constant chunk: exact
+            } else {
+                (0.0, 0.0) // no finite value at all
+            };
+            dst.extend_from_slice(&scale.to_le_bytes());
+            dst.extend_from_slice(&zero.to_le_bytes());
+            for c in chunk.chunks_exact(4) {
+                let v = read_f32(c);
+                let q = if scale > 0.0 {
+                    ((v - zero) / scale).round().clamp(0.0, 255.0)
+                } else {
+                    0.0
+                };
+                let q = q as u8; // NaN casts to 0, never panics
+                dst.push(q);
+                let err = (zero + scale * q as f32 - v).abs();
+                if err.is_finite() && err > max_err {
+                    max_err = err;
+                }
+            }
+        }
+        max_err
+    }
+
+    fn decode(&self, wire: &[u8], dst: &mut Vec<u8>) -> Result<()> {
+        let raw = self.raw_len(wire.len())?;
+        let mut elems = raw / 4;
+        dst.reserve(raw);
+        let mut off = 0usize;
+        while elems > 0 {
+            let scale = read_f32(&wire[off..off + 4]);
+            let zero = read_f32(&wire[off + 4..off + 8]);
+            off += HEADER_BYTES;
+            let n = elems.min(CHUNK);
+            for &q in &wire[off..off + n] {
+                dst.extend_from_slice(&(zero + scale * q as f32).to_le_bytes());
+            }
+            off += n;
+            elems -= n;
+        }
+        Ok(())
+    }
+
+    fn accumulate(&self, acc: &mut [f32], wire: &[u8]) -> Result<()> {
+        let raw = self.raw_len(wire.len())?;
+        anyhow::ensure!(
+            acc.len() * 4 == raw,
+            "int8 slab/accumulator length mismatch: {} decoded bytes vs {} slots",
+            raw,
+            acc.len()
+        );
+        let mut off = 0usize;
+        let mut i = 0usize;
+        while i < acc.len() {
+            let scale = read_f32(&wire[off..off + 4]);
+            let zero = read_f32(&wire[off + 4..off + 8]);
+            off += HEADER_BYTES;
+            let n = (acc.len() - i).min(CHUNK);
+            for &q in &wire[off..off + n] {
+                acc[i] += zero + scale * q as f32;
+                i += 1;
+            }
+            off += n;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::slab;
+    use crate::util::rng::Rng;
+
+    fn codec() -> Int8Codec {
+        Int8Codec
+    }
+
+    fn roundtrip(vals: &[f32]) -> (Vec<f32>, f32) {
+        let raw = slab::from_f32s(vals);
+        let mut wire = Vec::new();
+        let max_err = codec().encode(&raw, &mut wire);
+        assert_eq!(wire.len(), codec().wire_len(raw.len()));
+        let mut back = Vec::new();
+        codec().decode(&wire, &mut back).unwrap();
+        (slab::to_f32s(&back), max_err)
+    }
+
+    /// The satellite property: per-chunk max abs error ≤ range/254, where
+    /// range is that chunk's own max−min.
+    #[test]
+    fn per_chunk_error_bounded_by_range_over_254() {
+        let mut rng = Rng::new(4242);
+        for _ in 0..60 {
+            let n = 1 + rng.below(3 * CHUNK);
+            let scale = 10f64.powf(rng.range_f64(-6.0, 6.0));
+            let vals: Vec<f32> =
+                (0..n).map(|_| (rng.normal() * scale) as f32).collect();
+            let (back, reported) = roundtrip(&vals);
+            let mut worst = 0.0f32;
+            for (ci, chunk) in vals.chunks(CHUNK).enumerate() {
+                let lo = chunk.iter().cloned().fold(f32::INFINITY, f32::min);
+                let hi = chunk.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let bound = (hi - lo) / 254.0;
+                for (i, (&x, &y)) in
+                    chunk.iter().zip(&back[ci * CHUNK..ci * CHUNK + chunk.len()]).enumerate()
+                {
+                    let err = (y - x).abs();
+                    worst = worst.max(err);
+                    assert!(
+                        err <= bound * (1.0 + 1e-5) + f32::MIN_POSITIVE,
+                        "chunk {ci} elem {i}: err {err} > range/254 = {bound}"
+                    );
+                }
+            }
+            // The encoder's own error report covers the worst element.
+            assert!(reported >= worst * (1.0 - 1e-5), "{reported} < {worst}");
+        }
+    }
+
+    #[test]
+    fn constant_and_empty_slabs_are_exact() {
+        let (back, err) = roundtrip(&[3.25; 2000]);
+        assert_eq!(back, vec![3.25; 2000]);
+        assert_eq!(err, 0.0);
+        let (back, err) = roundtrip(&[]);
+        assert!(back.is_empty());
+        assert_eq!(err, 0.0);
+        // Endpoints of each chunk are reproduced exactly (q = 0 and 255).
+        let mut vals = vec![0.0f32; CHUNK];
+        vals[0] = -7.0;
+        vals[CHUNK - 1] = 9.0;
+        let (back, _) = roundtrip(&vals);
+        assert_eq!(back[0], -7.0);
+        assert_eq!(back[CHUNK - 1], 9.0);
+    }
+
+    #[test]
+    fn non_finite_inputs_never_panic_or_poison_the_frame() {
+        let vals = [1.0f32, f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 2.0];
+        let raw = slab::from_f32s(&vals);
+        let mut wire = Vec::new();
+        codec().encode(&raw, &mut wire);
+        let mut back = Vec::new();
+        codec().decode(&wire, &mut back).unwrap();
+        let back = slab::to_f32s(&back);
+        // Finite values stay close; non-finite ones land somewhere finite
+        // inside the chunk's range instead of emitting inf/NaN bytes.
+        assert!(back.iter().all(|v| v.is_finite()), "{back:?}");
+        assert!((back[0] - 1.0).abs() <= (2.0 - 1.0) / 254.0);
+        assert!((back[4] - 2.0).abs() <= (2.0 - 1.0) / 254.0);
+    }
+
+    #[test]
+    fn wire_len_and_raw_len_are_inverse_and_strict() {
+        let c = codec();
+        for elems in [1usize, 2, CHUNK - 1, CHUNK, CHUNK + 1, 3 * CHUNK + 17] {
+            let raw = 4 * elems;
+            let wire = c.wire_len(raw);
+            assert_eq!(c.raw_len(wire).unwrap(), raw, "{elems} elems");
+        }
+        // Lengths that no raw slab encodes to are refused.
+        for bad in [1usize, HEADER_BYTES, HEADER_BYTES + CHUNK + 1, 2 * HEADER_BYTES] {
+            assert!(c.raw_len(bad).is_err(), "accepted invalid length {bad}");
+        }
+        assert_eq!(c.raw_len(0).unwrap(), 0);
+    }
+
+    #[test]
+    fn chunk_headers_sit_at_computed_offsets() {
+        // Two chunks: elems = CHUNK + 3; second header must start at
+        // HEADER_BYTES + CHUNK.
+        let mut vals = vec![0.5f32; CHUNK + 3];
+        vals[CHUNK] = -1.0;
+        vals[CHUNK + 2] = 1.0;
+        let raw = slab::from_f32s(&vals);
+        let mut wire = Vec::new();
+        codec().encode(&raw, &mut wire);
+        let second = HEADER_BYTES + CHUNK;
+        let scale = f32::from_le_bytes(wire[second..second + 4].try_into().unwrap());
+        let zero = f32::from_le_bytes(wire[second + 4..second + 8].try_into().unwrap());
+        assert_eq!(zero, -1.0);
+        assert!((scale - 2.0 / 255.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,529 @@
+//! Pluggable quantized wire codecs (protocol v3, AccEPT-style — arXiv
+//! 2311.05827).
+//!
+//! DynaComm's overlap gains are bounded by how long each parameter or
+//! gradient slab spends on the wire; shrinking bytes-on-wire directly
+//! widens the overlap window the DP scheduler exploits. A [`WireCodec`]
+//! transforms a **raw slab** (contiguous little-endian f32, the v2 wire
+//! format) into a **wire slab** and back:
+//!
+//! * [`Fp32Codec`] — identity. Byte-for-byte today's format; a v3 fp32
+//!   session puts exactly the v2 bytes on the wire (property-tested).
+//! * [`Fp16Codec`] — IEEE 754 half precision ([`fp16`]), 2 bytes/element
+//!   (50% of fp32). Round-to-nearest-even; finite values past the fp16
+//!   range saturate to ±65504 instead of overflowing to infinity, which is
+//!   the training-friendly choice for stray large gradients.
+//! * [`Int8Codec`] — per-chunk affine quantization ([`int8`]): every
+//!   [`int8::CHUNK`]-element chunk carries an 8-byte `f32 scale ‖ f32
+//!   zero-point` header followed by one `u8` per element
+//!   (`x ≈ zero + scale·q`), ~26% of fp32 asymptotically. Per-chunk max
+//!   absolute error is bounded by `range/254` (actually `range/510`:
+//!   256 levels ⇒ step `range/255`, round-half ⇒ `step/2`).
+//!
+//! Codecs apply **per layer slab** (each layer's flat `w‖b` is encoded
+//! independently and the encodings concatenated), so both endpoints can
+//! compute every offset from the immutable per-layer byte tables —
+//! [`WireCodec::wire_len`] is an exact pure function of the raw size —
+//! and int8 chunking restarts at each layer boundary.
+//!
+//! The codec in effect is negotiated per session at registration time
+//! (`CodecPropose`/`CodecAgree` frames, see `docs/WIRE.md`): the worker
+//! proposes its preference, the server answers with that codec if it
+//! supports it and falls back to [`CodecId::Fp32`] otherwise — every v3
+//! endpoint must support fp32, so any preference pair converges
+//! ([`negotiate`], property-tested). Tensor frames then carry the codec id
+//! in the top 2 bits of the slab-length field, which keeps fp32 frames
+//! byte-identical to v2.
+
+pub mod fp16;
+pub mod int8;
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+
+use anyhow::Result;
+
+/// Identifier of a wire codec; also the 2-bit tag carried in the slab
+/// length field of `PullReply`/`Push` frames (`docs/WIRE.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CodecId {
+    /// Identity: raw little-endian f32 (the v2 format). Tag 0, so fp32
+    /// frames are byte-identical to protocol v2.
+    Fp32,
+    /// IEEE 754 binary16, round-to-nearest-even, saturating.
+    Fp16,
+    /// Per-chunk affine u8 quantization with f32 scale/zero-point headers.
+    Int8,
+}
+
+impl CodecId {
+    /// All codecs, fp32 first (the mandatory fallback).
+    pub const ALL: [CodecId; 3] = [CodecId::Fp32, CodecId::Fp16, CodecId::Int8];
+
+    /// The 2-bit wire tag.
+    pub fn tag(self) -> u8 {
+        match self {
+            CodecId::Fp32 => 0,
+            CodecId::Fp16 => 1,
+            CodecId::Int8 => 2,
+        }
+    }
+
+    /// Parse a wire tag (the top 2 bits of a slab length field).
+    pub fn from_tag(tag: u8) -> Option<CodecId> {
+        match tag {
+            0 => Some(CodecId::Fp32),
+            1 => Some(CodecId::Fp16),
+            2 => Some(CodecId::Int8),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CodecId::Fp32 => "fp32",
+            CodecId::Fp16 => "fp16",
+            CodecId::Int8 => "int8",
+        }
+    }
+
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Option<CodecId> {
+        match s.to_ascii_lowercase().as_str() {
+            "fp32" | "f32" | "none" => Some(CodecId::Fp32),
+            "fp16" | "f16" | "half" => Some(CodecId::Fp16),
+            "int8" | "i8" | "q8" => Some(CodecId::Int8),
+            _ => None,
+        }
+    }
+
+    /// The codec implementation behind this id.
+    pub fn codec(self) -> &'static dyn WireCodec {
+        codec(self)
+    }
+
+    /// Exact wire bytes for a raw f32 slab of `raw_len` bytes.
+    pub fn wire_len(self, raw_len: usize) -> usize {
+        self.codec().wire_len(raw_len)
+    }
+
+    /// Cheap frame-level sanity check for a tensor payload of `len` bytes
+    /// tagged with this codec. A frame carries a **concatenation of
+    /// per-layer encodings**, so only invariants that survive
+    /// concatenation can be checked here: fp32 stays 4-aligned and fp16
+    /// 2-aligned, but int8 slabs (9 bytes minimum each, arbitrary many)
+    /// sum to almost any length — per-layer framing is validated by the
+    /// endpoint that walks the payload with its byte tables
+    /// ([`WireCodec::raw_len`] on each per-layer slice).
+    pub fn valid_frame_len(self, len: usize) -> bool {
+        match self {
+            CodecId::Fp32 => len % 4 == 0,
+            CodecId::Fp16 => len % 2 == 0,
+            CodecId::Int8 => true,
+        }
+    }
+
+    /// [`CodecId::wire_len`] over fractional byte counts — what the
+    /// scheduler cost model feeds its transmission-time estimates
+    /// (`sched::cost::transmission_ms`).
+    pub fn wire_bytes_f64(self, raw_bytes: f64) -> f64 {
+        match self {
+            CodecId::Fp32 => raw_bytes,
+            CodecId::Fp16 => raw_bytes / 2.0,
+            CodecId::Int8 => {
+                let elems = raw_bytes / 4.0;
+                elems + int8::HEADER_BYTES as f64 * (elems / int8::CHUNK as f64).ceil()
+            }
+        }
+    }
+}
+
+/// A wire codec: raw little-endian f32 slab ⇄ wire slab.
+///
+/// `wire_len`/`raw_len` are exact pure functions of the opposite size, so
+/// both endpoints derive every offset from the per-layer byte tables they
+/// already hold and nothing about sizes needs to travel out of band.
+pub trait WireCodec: Send + Sync {
+    fn id(&self) -> CodecId;
+
+    /// Exact encoded size of a raw slab of `raw_len` bytes
+    /// (`raw_len % 4 == 0`).
+    fn wire_len(&self, raw_len: usize) -> usize;
+
+    /// Exact raw size a wire slab of `wire_len` bytes decodes to; `Err` if
+    /// no raw slab encodes to that length (framing validation).
+    fn raw_len(&self, wire_len: usize) -> Result<usize>;
+
+    /// Append the encoding of `raw` (LE f32 slab) to `dst`; returns the
+    /// maximum absolute quantization error over the slab (0 for lossless
+    /// codecs).
+    fn encode(&self, raw: &[u8], dst: &mut Vec<u8>) -> f32;
+
+    /// Append the decoded LE f32 slab to `dst`.
+    fn decode(&self, wire: &[u8], dst: &mut Vec<u8>) -> Result<()>;
+
+    /// `acc[i] += decode(wire)[i]` without materializing the decoded slab
+    /// — the server's gradient-accumulation path.
+    fn accumulate(&self, acc: &mut [f32], wire: &[u8]) -> Result<()>;
+}
+
+/// The identity codec: the wire slab *is* the raw slab.
+pub struct Fp32Codec;
+
+impl WireCodec for Fp32Codec {
+    fn id(&self) -> CodecId {
+        CodecId::Fp32
+    }
+
+    fn wire_len(&self, raw_len: usize) -> usize {
+        raw_len
+    }
+
+    fn raw_len(&self, wire_len: usize) -> Result<usize> {
+        anyhow::ensure!(wire_len % 4 == 0, "fp32 slab length {wire_len} not f32-aligned");
+        Ok(wire_len)
+    }
+
+    fn encode(&self, raw: &[u8], dst: &mut Vec<u8>) -> f32 {
+        debug_assert!(raw.len() % 4 == 0);
+        dst.extend_from_slice(raw);
+        0.0
+    }
+
+    fn decode(&self, wire: &[u8], dst: &mut Vec<u8>) -> Result<()> {
+        self.raw_len(wire.len())?;
+        dst.extend_from_slice(wire);
+        Ok(())
+    }
+
+    fn accumulate(&self, acc: &mut [f32], wire: &[u8]) -> Result<()> {
+        anyhow::ensure!(
+            acc.len() * 4 == wire.len(),
+            "fp32 slab/accumulator length mismatch: {} vs {}",
+            wire.len(),
+            acc.len() * 4
+        );
+        crate::net::slab::add_assign_f32s(acc, wire);
+        Ok(())
+    }
+}
+
+static FP32: Fp32Codec = Fp32Codec;
+static FP16: fp16::Fp16Codec = fp16::Fp16Codec;
+static INT8: int8::Int8Codec = int8::Int8Codec;
+
+/// Look a codec implementation up by id.
+pub fn codec(id: CodecId) -> &'static dyn WireCodec {
+    match id {
+        CodecId::Fp32 => &FP32,
+        CodecId::Fp16 => &FP16,
+        CodecId::Int8 => &INT8,
+    }
+}
+
+/// The codecs this build supports (servers advertise-by-construction).
+pub const SUPPORTED: [CodecId; 3] = CodecId::ALL;
+
+/// Session-codec negotiation: the first of the proposer's `prefs` that the
+/// answerer supports, falling back to [`CodecId::Fp32`] — which every v3
+/// endpoint must support, so any preference pair converges on a codec both
+/// sides speak (property-tested in `tests/codec_train.rs`).
+pub fn negotiate(prefs: &[CodecId], supported: &[CodecId]) -> CodecId {
+    prefs
+        .iter()
+        .copied()
+        .find(|c| supported.contains(c))
+        .unwrap_or(CodecId::Fp32)
+}
+
+/// Per-codec wire-path counters: bytes before/after encoding, time spent
+/// encoding/decoding, and the worst quantization error observed — exported
+/// through `ps::server::WireStats` / `EdgeWorker::codec_stats` and the
+/// `ps_throughput` bench rows in `results/BENCH_wire.json`.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct CodecStats {
+    /// Raw f32 bytes fed into `encode` (or produced by decode paths).
+    pub raw_bytes: u64,
+    /// Encoded bytes that actually hit (or came off) the wire.
+    pub wire_bytes: u64,
+    /// `encode` calls and their total wall-clock.
+    pub encodes: u64,
+    pub encode_ns: u64,
+    /// `decode`/`accumulate` calls and their total wall-clock.
+    pub decodes: u64,
+    pub decode_ns: u64,
+    /// Max absolute quantization error observed by any `encode`.
+    pub max_quant_error: f32,
+}
+
+impl CodecStats {
+    /// Bytes the codec kept off the wire relative to raw fp32.
+    pub fn bytes_saved(&self) -> u64 {
+        self.raw_bytes.saturating_sub(self.wire_bytes)
+    }
+}
+
+#[derive(Default)]
+struct CodecCounters {
+    raw_bytes: AtomicU64,
+    wire_bytes: AtomicU64,
+    encodes: AtomicU64,
+    encode_ns: AtomicU64,
+    decodes: AtomicU64,
+    decode_ns: AtomicU64,
+    /// f32 bits of the max error (non-negative floats order like their
+    /// bit patterns, so a CAS-max over bits is a max over values).
+    max_err_bits: AtomicU32,
+}
+
+impl CodecCounters {
+    fn record_max_err(&self, err: f32) {
+        if !(err > 0.0) {
+            return;
+        }
+        let bits = err.to_bits();
+        let mut cur = self.max_err_bits.load(Ordering::Relaxed);
+        while bits > cur {
+            match self.max_err_bits.compare_exchange_weak(
+                cur,
+                bits,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    fn snapshot(&self) -> CodecStats {
+        CodecStats {
+            raw_bytes: self.raw_bytes.load(Ordering::Relaxed),
+            wire_bytes: self.wire_bytes.load(Ordering::Relaxed),
+            encodes: self.encodes.load(Ordering::Relaxed),
+            encode_ns: self.encode_ns.load(Ordering::Relaxed),
+            decodes: self.decodes.load(Ordering::Relaxed),
+            decode_ns: self.decode_ns.load(Ordering::Relaxed),
+            max_quant_error: f32::from_bits(self.max_err_bits.load(Ordering::Relaxed)),
+        }
+    }
+}
+
+/// Thread-safe per-codec counter table (one row per [`CodecId`]); the
+/// server shard and each worker own one.
+#[derive(Default)]
+pub struct CodecStatsTable {
+    per: [CodecCounters; 3],
+}
+
+impl CodecStatsTable {
+    pub fn new() -> CodecStatsTable {
+        CodecStatsTable::default()
+    }
+
+    fn row(&self, id: CodecId) -> &CodecCounters {
+        &self.per[id.tag() as usize]
+    }
+
+    /// Record one `encode` of `raw_bytes` → `wire_bytes` taking `ns`, with
+    /// the call's max quantization error.
+    pub fn record_encode(
+        &self,
+        id: CodecId,
+        raw_bytes: usize,
+        wire_bytes: usize,
+        ns: u64,
+        max_err: f32,
+    ) {
+        let row = self.row(id);
+        row.raw_bytes.fetch_add(raw_bytes as u64, Ordering::Relaxed);
+        row.wire_bytes.fetch_add(wire_bytes as u64, Ordering::Relaxed);
+        row.encodes.fetch_add(1, Ordering::Relaxed);
+        row.encode_ns.fetch_add(ns, Ordering::Relaxed);
+        row.record_max_err(max_err);
+    }
+
+    /// Record one `decode`/`accumulate` of `wire_bytes` → `raw_bytes`
+    /// taking `ns`. Byte volume is attributed exclusively by
+    /// [`CodecStatsTable::record_encode`] so a table never double-counts a
+    /// slab its endpoint both produced and consumed; decode calls
+    /// contribute their count and wall-clock.
+    pub fn record_decode(&self, id: CodecId, raw_bytes: usize, wire_bytes: usize, ns: u64) {
+        let row = self.row(id);
+        row.decodes.fetch_add(1, Ordering::Relaxed);
+        row.decode_ns.fetch_add(ns, Ordering::Relaxed);
+        let _ = (raw_bytes, wire_bytes);
+    }
+
+    /// Snapshot of every codec's counters, indexed by [`CodecId::tag`].
+    pub fn snapshot(&self) -> [CodecStats; 3] {
+        [
+            self.per[0].snapshot(),
+            self.per[1].snapshot(),
+            self.per[2].snapshot(),
+        ]
+    }
+
+    /// Snapshot of one codec's counters.
+    pub fn get(&self, id: CodecId) -> CodecStats {
+        self.row(id).snapshot()
+    }
+}
+
+impl std::fmt::Debug for CodecStatsTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_map()
+            .entries(CodecId::ALL.iter().map(|&id| (id.name(), self.get(id))))
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::slab;
+    use crate::util::rng::Rng;
+
+    fn random_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.normal() * 10.0) as f32).collect()
+    }
+
+    #[test]
+    fn ids_tags_names_roundtrip() {
+        for id in CodecId::ALL {
+            assert_eq!(CodecId::from_tag(id.tag()), Some(id));
+            assert_eq!(CodecId::parse(id.name()), Some(id));
+            assert_eq!(codec(id).id(), id);
+        }
+        assert_eq!(CodecId::from_tag(3), None);
+        assert_eq!(CodecId::parse("zstd"), None);
+    }
+
+    #[test]
+    fn fp32_is_the_identity() {
+        let mut rng = Rng::new(7);
+        for _ in 0..20 {
+            let n = rng.below(300);
+            let raw = slab::from_f32s(&random_f32s(&mut rng, n));
+            let c = codec(CodecId::Fp32);
+            assert_eq!(c.wire_len(raw.len()), raw.len());
+            assert_eq!(c.raw_len(raw.len()).unwrap(), raw.len());
+            let mut wire = Vec::new();
+            assert_eq!(c.encode(&raw, &mut wire), 0.0);
+            assert_eq!(wire, raw, "fp32 must be byte-identical");
+            let mut back = Vec::new();
+            c.decode(&wire, &mut back).unwrap();
+            assert_eq!(back, raw);
+        }
+        assert!(codec(CodecId::Fp32).raw_len(6).is_err(), "misaligned fp32");
+    }
+
+    /// Every codec: wire_len/raw_len are exact inverses and encode/decode
+    /// produce exactly those sizes.
+    #[test]
+    fn sizes_are_exact_for_every_codec() {
+        let mut rng = Rng::new(8);
+        for id in CodecId::ALL {
+            let c = codec(id);
+            for _ in 0..40 {
+                let n = rng.below(5000);
+                let vals = random_f32s(&mut rng, n);
+                let raw = slab::from_f32s(&vals);
+                let mut wire = Vec::new();
+                c.encode(&raw, &mut wire);
+                assert_eq!(wire.len(), c.wire_len(raw.len()), "{}", id.name());
+                assert_eq!(c.raw_len(wire.len()).unwrap(), raw.len(), "{}", id.name());
+                let mut back = Vec::new();
+                c.decode(&wire, &mut back).unwrap();
+                assert_eq!(back.len(), raw.len(), "{}", id.name());
+            }
+            // The empty slab is valid everywhere.
+            assert_eq!(c.wire_len(0), 0);
+            assert_eq!(c.raw_len(0).unwrap(), 0);
+        }
+    }
+
+    /// accumulate == decode-then-add for every codec.
+    #[test]
+    fn accumulate_matches_decode_then_add() {
+        let mut rng = Rng::new(9);
+        for id in CodecId::ALL {
+            let c = codec(id);
+            let vals = random_f32s(&mut rng, 700);
+            let raw = slab::from_f32s(&vals);
+            let mut wire = Vec::new();
+            c.encode(&raw, &mut wire);
+            let mut decoded = Vec::new();
+            c.decode(&wire, &mut decoded).unwrap();
+            let mut via_acc = vec![1.5f32; vals.len()];
+            c.accumulate(&mut via_acc, &wire).unwrap();
+            let expect: Vec<f32> =
+                slab::to_f32s(&decoded).iter().map(|v| 1.5 + v).collect();
+            assert_eq!(via_acc, expect, "{}", id.name());
+            // Length mismatches are refused, not mis-indexed.
+            let mut short = vec![0.0f32; vals.len() - 1];
+            assert!(c.accumulate(&mut short, &wire).is_err(), "{}", id.name());
+        }
+    }
+
+    #[test]
+    fn wire_bytes_f64_matches_wire_len() {
+        for id in CodecId::ALL {
+            for elems in [0usize, 1, 5, 1023, 1024, 1025, 10_000] {
+                let raw = 4 * elems;
+                assert_eq!(
+                    id.wire_bytes_f64(raw as f64),
+                    id.wire_len(raw) as f64,
+                    "{} at {elems} elems",
+                    id.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn negotiation_converges_and_prefers_the_proposal() {
+        // Any (pref, supported-set) pair lands on a codec the answerer
+        // supports; sets always contain Fp32 (mandatory in v3).
+        let sets: [&[CodecId]; 4] = [
+            &[CodecId::Fp32],
+            &[CodecId::Fp32, CodecId::Fp16],
+            &[CodecId::Fp32, CodecId::Int8],
+            &SUPPORTED,
+        ];
+        for pref in CodecId::ALL {
+            for sup in sets {
+                let got = negotiate(&[pref], sup);
+                assert!(sup.contains(&got), "{} over {sup:?}", pref.name());
+                if sup.contains(&pref) {
+                    assert_eq!(got, pref, "supported preference must win");
+                } else {
+                    assert_eq!(got, CodecId::Fp32, "fallback must be fp32");
+                }
+            }
+        }
+        // Ordered preference lists pick the first supported entry.
+        assert_eq!(
+            negotiate(&[CodecId::Int8, CodecId::Fp16], &[CodecId::Fp32, CodecId::Fp16]),
+            CodecId::Fp16
+        );
+        assert_eq!(negotiate(&[], &SUPPORTED), CodecId::Fp32);
+    }
+
+    #[test]
+    fn stats_table_counts_and_maxes() {
+        let t = CodecStatsTable::new();
+        t.record_encode(CodecId::Int8, 4000, 1032, 10, 0.5);
+        t.record_encode(CodecId::Int8, 4000, 1032, 5, 0.25);
+        t.record_decode(CodecId::Int8, 4000, 1032, 7);
+        let s = t.get(CodecId::Int8);
+        assert_eq!(s.raw_bytes, 8000);
+        assert_eq!(s.wire_bytes, 2064);
+        assert_eq!(s.bytes_saved(), 8000 - 2064);
+        assert_eq!(s.encodes, 2);
+        assert_eq!(s.encode_ns, 15);
+        assert_eq!(s.decodes, 1);
+        assert_eq!(s.decode_ns, 7);
+        assert_eq!(s.max_quant_error, 0.5);
+        assert_eq!(t.get(CodecId::Fp16), CodecStats::default());
+    }
+}

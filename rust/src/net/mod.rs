@@ -1,16 +1,19 @@
 //! Edge-network substrate: framed TCP transport plus a link shaper that
 //! emulates the paper's edge↔cloud conditions (RTT, bandwidth, per-message
 //! setup cost Δt) on loopback. Tensor payloads travel as contiguous
-//! little-endian byte slabs ([`slab`]) carried in pooled, reference-counted
-//! buffers ([`pool`]) and framed with scatter-gather I/O ([`transport`]);
-//! `docs/WIRE.md` specifies the frame format, `docs/PERF.md` the pooling
-//! and copy discipline.
+//! little-endian byte slabs ([`slab`]) — optionally compressed by a
+//! negotiated wire codec ([`codec`]: fp32/fp16/int8) — carried in pooled,
+//! reference-counted buffers ([`pool`]) and framed with scatter-gather I/O
+//! ([`transport`]); `docs/WIRE.md` specifies the frame format and codec
+//! negotiation, `docs/PERF.md` the pooling and copy discipline.
 
+pub mod codec;
 pub mod pool;
 pub mod shaper;
 pub mod slab;
 pub mod transport;
 
+pub use codec::{CodecId, CodecStats, WireCodec};
 pub use pool::{PoolStats, PooledSlab, SlabCheckout, SlabPool, SlabSlice};
 pub use shaper::{LinkShaper, ShaperSpec};
 pub use transport::{Connection, Message, MessageRef, RecvMsg, PROTOCOL_VERSION};

@@ -13,8 +13,12 @@
 //! frame straight into a [`crate::net::pool::SlabPool`] checkout and hands
 //! back [`SlabSlice`] views. The wire bytes are identical to the legacy
 //! contiguous encoding ([`Message::encode_into`]), which is kept as the
-//! reference implementation the property tests compare against — no
-//! protocol bump.
+//! reference implementation the property tests compare against.
+//!
+//! Protocol v3 adds negotiated wire codecs ([`crate::net::codec`]): tensor
+//! slabs may be fp16- or int8-compressed, with the codec id carried in the
+//! top 2 bits of the slab-length field — fp32 sessions stay byte-identical
+//! to v2 on every data-plane frame.
 
 use std::io::{IoSlice, Read, Write};
 use std::net::TcpStream;
@@ -22,10 +26,25 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::net::codec::CodecId;
 use crate::net::pool::{SlabPool, SlabSlice};
 
-/// Hard ceiling on a frame's payload size (corruption guard).
+/// Hard ceiling on a frame's payload size (corruption guard). Also bounds
+/// tensor slabs to 30 bits, which is what frees the top 2 bits of the
+/// slab-length field to carry the codec tag (see [`SLAB_LEN_MASK`]).
 const MAX_FRAME: usize = 1 << 30;
+
+/// Low 30 bits of a tensor frame's slab-length field hold the byte count;
+/// the top 2 bits hold the [`CodecId::tag`] of the codec that encoded the
+/// slab. Tag 0 is fp32, so fp32 frames are byte-identical to protocol v2.
+const SLAB_LEN_MASK: u32 = (1 << 30) - 1;
+
+/// The slab-length field a tensor frame carries for `len` bytes of
+/// `codec`-encoded payload.
+fn slab_len_field(codec: CodecId, len: usize) -> u32 {
+    debug_assert!(len < 1 << 30, "slab of {len} bytes overflows the length field");
+    (len as u32) | ((codec.tag() as u32) << 30)
+}
 
 /// Warm receive-buffer capacity retained across frames. One oversized
 /// frame (up to the 1 GiB [`MAX_FRAME`] cap) must not pin its capacity for
@@ -34,11 +53,14 @@ const MAX_FRAME: usize = 1 << 30;
 const RECV_RETAIN_MAX: usize = 16 << 20;
 
 /// Version of the wire protocol this build speaks (`docs/WIRE.md`; v1 was
-/// the unversioned slab protocol). Carried in [`Message::Hello`] /
-/// [`Message::HelloAck`] so mixed deployments fail loudly at registration
-/// time instead of corrupting tensors mid-iteration: the server rejects a
-/// mismatched `Hello`, and the worker rejects a mismatched `HelloAck`.
-pub const PROTOCOL_VERSION: u16 = 2;
+/// the unversioned slab protocol, v2 added versioned registration). v3
+/// adds negotiated wire codecs: `CodecPropose`/`CodecAgree` registration
+/// frames and a codec tag in the tensor slab-length field — a v3 fp32
+/// session is byte-identical to v2 on every data-plane frame, but v2 peers
+/// would misparse fp16/int8-tagged slabs, so the version is bumped and
+/// mixed deployments fail loudly at registration time: the server rejects
+/// a mismatched `Hello`, and the worker rejects a mismatched `HelloAck`.
+pub const PROTOCOL_VERSION: u16 = 3;
 
 /// Protocol messages between edge workers and parameter servers (owned
 /// form; [`MessageRef`] is the borrowed-payload twin the hot path uses).
@@ -47,13 +69,22 @@ pub enum Message {
     /// Worker → server: pull parameters of layers `[lo, hi]` for `iter`.
     Pull { iter: u64, lo: u32, hi: u32 },
     /// Server → worker: the parameters as one byte slab — each owned
-    /// layer's `w‖b` f32 data, little-endian, ascending layer order.
-    PullReply { iter: u64, lo: u32, hi: u32, data: Vec<u8> },
+    /// layer's `w‖b` data encoded per layer by `codec`
+    /// ([`crate::net::codec`]), concatenated in ascending layer order.
+    PullReply { iter: u64, lo: u32, hi: u32, codec: CodecId, data: Vec<u8> },
     /// Worker → server: gradients of layers `[lo, hi]` for `iter`, as a
     /// byte slab with the same layout as [`Message::PullReply`].
-    Push { iter: u64, lo: u32, hi: u32, data: Vec<u8> },
+    Push { iter: u64, lo: u32, hi: u32, codec: CodecId, data: Vec<u8> },
     /// Server → worker: push accepted.
     PushAck { iter: u64, lo: u32, hi: u32 },
+    /// Worker → server (after a successful `Hello` handshake): propose the
+    /// session's wire codec. The `Hello`/`HelloAck` layouts are frozen
+    /// from v2 on, so negotiation rides in its own frames.
+    CodecPropose { pref: CodecId },
+    /// Server → worker: the codec this session will use — the proposed one
+    /// if the server supports it, [`CodecId::Fp32`] otherwise, so mixed
+    /// fleets keep training.
+    CodecAgree { codec: CodecId },
     /// Worker → server: register with a worker id, announcing the
     /// worker's [`PROTOCOL_VERSION`].
     Hello { worker: u32, version: u16 },
@@ -81,21 +112,25 @@ impl Message {
             Message::Pull { iter, lo, hi } => {
                 MessageRef::Pull { iter: *iter, lo: *lo, hi: *hi }
             }
-            Message::PullReply { iter, lo, hi, data } => MessageRef::PullReply {
+            Message::PullReply { iter, lo, hi, codec, data } => MessageRef::PullReply {
                 iter: *iter,
                 lo: *lo,
                 hi: *hi,
+                codec: *codec,
                 data: data.as_slice(),
             },
-            Message::Push { iter, lo, hi, data } => MessageRef::Push {
+            Message::Push { iter, lo, hi, codec, data } => MessageRef::Push {
                 iter: *iter,
                 lo: *lo,
                 hi: *hi,
+                codec: *codec,
                 data: data.as_slice(),
             },
             Message::PushAck { iter, lo, hi } => {
                 MessageRef::PushAck { iter: *iter, lo: *lo, hi: *hi }
             }
+            Message::CodecPropose { pref } => MessageRef::CodecPropose { pref: *pref },
+            Message::CodecAgree { codec } => MessageRef::CodecAgree { codec: *codec },
             Message::Hello { worker, version } => {
                 MessageRef::Hello { worker: *worker, version: *version }
             }
@@ -126,14 +161,16 @@ impl Message {
                 buf.extend_from_slice(&lo.to_le_bytes());
                 buf.extend_from_slice(&hi.to_le_bytes());
             }
-            Message::PullReply { iter, lo, hi, data }
-            | Message::Push { iter, lo, hi, data } => {
+            Message::PullReply { iter, lo, hi, codec, data }
+            | Message::Push { iter, lo, hi, codec, data } => {
                 buf.extend_from_slice(&iter.to_le_bytes());
                 buf.extend_from_slice(&lo.to_le_bytes());
                 buf.extend_from_slice(&hi.to_le_bytes());
-                buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+                buf.extend_from_slice(&slab_len_field(*codec, data.len()).to_le_bytes());
                 buf.extend_from_slice(data);
             }
+            Message::CodecPropose { pref } => buf.push(pref.tag()),
+            Message::CodecAgree { codec } => buf.push(codec.tag()),
             Message::Hello { worker, version } => {
                 buf.extend_from_slice(&worker.to_le_bytes());
                 buf.extend_from_slice(&version.to_le_bytes());
@@ -164,12 +201,14 @@ impl Message {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum MessageRef<'a> {
     Pull { iter: u64, lo: u32, hi: u32 },
-    PullReply { iter: u64, lo: u32, hi: u32, data: &'a [u8] },
-    Push { iter: u64, lo: u32, hi: u32, data: &'a [u8] },
+    PullReply { iter: u64, lo: u32, hi: u32, codec: CodecId, data: &'a [u8] },
+    Push { iter: u64, lo: u32, hi: u32, codec: CodecId, data: &'a [u8] },
     PushAck { iter: u64, lo: u32, hi: u32 },
     Hello { worker: u32, version: u16 },
     HelloAck { workers: u32, version: u16 },
     Shutdown,
+    CodecPropose { pref: CodecId },
+    CodecAgree { codec: CodecId },
 }
 
 impl<'a> MessageRef<'a> {
@@ -182,6 +221,8 @@ impl<'a> MessageRef<'a> {
             MessageRef::Hello { .. } => 5,
             MessageRef::HelloAck { .. } => 6,
             MessageRef::Shutdown => 7,
+            MessageRef::CodecPropose { .. } => 8,
+            MessageRef::CodecAgree { .. } => 9,
         }
     }
 
@@ -195,6 +236,8 @@ impl<'a> MessageRef<'a> {
             MessageRef::Hello { .. } => 4 + 2,
             MessageRef::HelloAck { .. } => 4 + 2,
             MessageRef::Shutdown => 0,
+            MessageRef::CodecPropose { .. } => 1,
+            MessageRef::CodecAgree { .. } => 1,
         }
     }
 
@@ -207,9 +250,9 @@ impl<'a> MessageRef<'a> {
             // Tensor frames share one header encoder with
             // `Connection::send_push_parts` — a single source of truth for
             // the layout.
-            MessageRef::PullReply { iter, lo, hi, data }
-            | MessageRef::Push { iter, lo, hi, data } => {
-                encode_tensor_header(buf, self.opcode(), iter, lo, hi, data.len());
+            MessageRef::PullReply { iter, lo, hi, codec, data }
+            | MessageRef::Push { iter, lo, hi, codec, data } => {
+                encode_tensor_header(buf, self.opcode(), iter, lo, hi, codec, data.len());
                 return data;
             }
             _ => {}
@@ -231,6 +274,8 @@ impl<'a> MessageRef<'a> {
                 buf.extend_from_slice(&workers.to_le_bytes());
                 buf.extend_from_slice(&version.to_le_bytes());
             }
+            MessageRef::CodecPropose { pref } => buf.push(pref.tag()),
+            MessageRef::CodecAgree { codec } => buf.push(codec.tag()),
             _ => {}
         }
         &[]
@@ -245,16 +290,20 @@ impl<'a> MessageRef<'a> {
             1 => MessageRef::Pull { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
             2 => {
                 let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
-                MessageRef::PullReply { iter, lo, hi, data: r.slab()? }
+                let (codec, data) = r.slab()?;
+                MessageRef::PullReply { iter, lo, hi, codec, data }
             }
             3 => {
                 let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
-                MessageRef::Push { iter, lo, hi, data: r.slab()? }
+                let (codec, data) = r.slab()?;
+                MessageRef::Push { iter, lo, hi, codec, data }
             }
             4 => MessageRef::PushAck { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
             5 => MessageRef::Hello { worker: r.u32()?, version: r.u16()? },
             6 => MessageRef::HelloAck { workers: r.u32()?, version: r.u16()? },
             7 => MessageRef::Shutdown,
+            8 => MessageRef::CodecPropose { pref: r.codec()? },
+            9 => MessageRef::CodecAgree { codec: r.codec()? },
             _ => bail!("unknown opcode {op}"),
         };
         anyhow::ensure!(r.b.is_empty(), "trailing bytes in frame (op {op})");
@@ -265,11 +314,11 @@ impl<'a> MessageRef<'a> {
     pub fn into_owned(self) -> Message {
         match self {
             MessageRef::Pull { iter, lo, hi } => Message::Pull { iter, lo, hi },
-            MessageRef::PullReply { iter, lo, hi, data } => {
-                Message::PullReply { iter, lo, hi, data: data.to_vec() }
+            MessageRef::PullReply { iter, lo, hi, codec, data } => {
+                Message::PullReply { iter, lo, hi, codec, data: data.to_vec() }
             }
-            MessageRef::Push { iter, lo, hi, data } => {
-                Message::Push { iter, lo, hi, data: data.to_vec() }
+            MessageRef::Push { iter, lo, hi, codec, data } => {
+                Message::Push { iter, lo, hi, codec, data: data.to_vec() }
             }
             MessageRef::PushAck { iter, lo, hi } => Message::PushAck { iter, lo, hi },
             MessageRef::Hello { worker, version } => Message::Hello { worker, version },
@@ -277,6 +326,8 @@ impl<'a> MessageRef<'a> {
                 Message::HelloAck { workers, version }
             }
             MessageRef::Shutdown => Message::Shutdown,
+            MessageRef::CodecPropose { pref } => Message::CodecPropose { pref },
+            MessageRef::CodecAgree { codec } => Message::CodecAgree { codec },
         }
     }
 }
@@ -305,11 +356,32 @@ impl<'a> Reader<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// A one-byte codec id (the `CodecPropose`/`CodecAgree` payload).
+    fn codec(&mut self) -> Result<CodecId> {
+        let tag = self.take(1)?[0];
+        CodecId::from_tag(tag)
+            .ok_or_else(|| anyhow::anyhow!("unknown codec tag {tag}"))
+    }
+
     /// Length-prefixed byte slab, borrowed — no copy, no per-element work.
-    fn slab(&mut self) -> Result<&'a [u8]> {
-        let n = self.u32()? as usize;
-        anyhow::ensure!(n % 4 == 0, "slab length {n} not f32-aligned");
-        self.take(n)
+    /// The length field's top 2 bits carry the codec tag; the low 30 bits
+    /// the byte count, checked against the codec's frame-level invariants
+    /// (fp32 4-aligned, fp16 2-aligned). A tensor payload is a
+    /// *concatenation* of per-layer encodings, so per-layer framing — in
+    /// particular int8's chunked layout — is validated by the endpoint
+    /// that slices the payload with its byte tables, not here.
+    fn slab(&mut self) -> Result<(CodecId, &'a [u8])> {
+        let field = self.u32()?;
+        let tag = (field >> 30) as u8;
+        let n = (field & SLAB_LEN_MASK) as usize;
+        let codec = CodecId::from_tag(tag)
+            .ok_or_else(|| anyhow::anyhow!("unknown slab codec tag {tag}"))?;
+        anyhow::ensure!(
+            codec.valid_frame_len(n),
+            "slab length {n} misaligned for codec {}",
+            codec.name()
+        );
+        Ok((codec, self.take(n)?))
     }
 }
 
@@ -321,9 +393,9 @@ pub enum RecvMsg {
     /// Control frames, owned as usual.
     Control(Message),
     /// A `PullReply` whose slab is a pooled view.
-    PullReply { iter: u64, lo: u32, hi: u32, data: SlabSlice },
+    PullReply { iter: u64, lo: u32, hi: u32, codec: CodecId, data: SlabSlice },
     /// A `Push` whose slab is a pooled view.
-    Push { iter: u64, lo: u32, hi: u32, data: SlabSlice },
+    Push { iter: u64, lo: u32, hi: u32, codec: CodecId, data: SlabSlice },
 }
 
 /// Byte offset of the slab inside a `PullReply`/`Push` frame payload:
@@ -340,6 +412,7 @@ fn encode_tensor_header(
     iter: u64,
     lo: u32,
     hi: u32,
+    codec: CodecId,
     data_len: usize,
 ) {
     let wire_size = TENSOR_SLAB_OFF + data_len;
@@ -349,7 +422,7 @@ fn encode_tensor_header(
     buf.extend_from_slice(&iter.to_le_bytes());
     buf.extend_from_slice(&lo.to_le_bytes());
     buf.extend_from_slice(&hi.to_le_bytes());
-    buf.extend_from_slice(&(data_len as u32).to_le_bytes());
+    buf.extend_from_slice(&slab_len_field(codec, data_len).to_le_bytes());
 }
 
 /// The virtual part list of a scattered frame: index 0 is the header,
@@ -470,10 +543,11 @@ impl Connection {
         iter: u64,
         lo: u32,
         hi: u32,
+        codec: CodecId,
         parts: &[&[u8]],
     ) -> Result<()> {
         let data_len: usize = parts.iter().map(|p| p.len()).sum();
-        encode_tensor_header(&mut self.send_buf, 3, iter, lo, hi, data_len);
+        encode_tensor_header(&mut self.send_buf, 3, iter, lo, hi, codec, data_len);
         if let Some(shaper) = &self.shaper {
             shaper.delay_for(self.send_buf.len() + data_len);
         }
@@ -509,7 +583,7 @@ impl Connection {
         /// frames carry only their fixed fields (the slab stays in the
         /// frame at [`TENSOR_SLAB_OFF`]), control frames are owned.
         enum Parsed {
-            Tensor { op: u8, iter: u64, lo: u32, hi: u32, len: usize },
+            Tensor { op: u8, iter: u64, lo: u32, hi: u32, codec: CodecId, len: usize },
             Control(Message),
         }
 
@@ -518,21 +592,21 @@ impl Connection {
         self.stream.read_exact(&mut frame[..]).context("recv payload")?;
         // One decode, fully validating the frame.
         let parsed = match MessageRef::decode(&frame[..])? {
-            MessageRef::PullReply { iter, lo, hi, data } => {
-                Parsed::Tensor { op: 2, iter, lo, hi, len: data.len() }
+            MessageRef::PullReply { iter, lo, hi, codec, data } => {
+                Parsed::Tensor { op: 2, iter, lo, hi, codec, len: data.len() }
             }
-            MessageRef::Push { iter, lo, hi, data } => {
-                Parsed::Tensor { op: 3, iter, lo, hi, len: data.len() }
+            MessageRef::Push { iter, lo, hi, codec, data } => {
+                Parsed::Tensor { op: 3, iter, lo, hi, codec, len: data.len() }
             }
             other => Parsed::Control(other.into_owned()),
         };
         match parsed {
-            Parsed::Tensor { op, iter, lo, hi, len } => {
+            Parsed::Tensor { op, iter, lo, hi, codec, len } => {
                 let data = SlabSlice::new(frame.freeze(), TENSOR_SLAB_OFF, len);
                 Ok(if op == 2 {
-                    RecvMsg::PullReply { iter, lo, hi, data }
+                    RecvMsg::PullReply { iter, lo, hi, codec, data }
                 } else {
-                    RecvMsg::Push { iter, lo, hi, data }
+                    RecvMsg::Push { iter, lo, hi, codec, data }
                 })
             }
             Parsed::Control(msg) => Ok(RecvMsg::Control(msg)),
@@ -578,9 +652,16 @@ mod tests {
             iter: 7,
             lo: 1,
             hi: 3,
+            codec: CodecId::Fp32,
             data: slab::from_f32s(&[1.5, -2.0, 0.0]),
         });
-        roundtrip(Message::Push { iter: 0, lo: 6, hi: 6, data: Vec::new() });
+        roundtrip(Message::Push {
+            iter: 0,
+            lo: 6,
+            hi: 6,
+            codec: CodecId::Fp32,
+            data: Vec::new(),
+        });
         roundtrip(Message::PushAck { iter: 1, lo: 2, hi: 4 });
         roundtrip(Message::Hello { worker: 3, version: PROTOCOL_VERSION });
         roundtrip(Message::HelloAck { workers: 8, version: PROTOCOL_VERSION });
@@ -589,12 +670,101 @@ mod tests {
         roundtrip(Message::Hello { worker: 0, version: 0 });
         roundtrip(Message::HelloAck { workers: 1, version: u16::MAX });
         roundtrip(Message::Shutdown);
+        for id in CodecId::ALL {
+            roundtrip(Message::CodecPropose { pref: id });
+            roundtrip(Message::CodecAgree { codec: id });
+        }
+    }
+
+    /// Codec-tagged tensor frames roundtrip with the tag intact and the
+    /// payload decodable by the tagged codec.
+    #[test]
+    fn codec_tagged_slabs_roundtrip() {
+        let vals: Vec<f32> = (0..300).map(|i| i as f32 * 0.125 - 7.0).collect();
+        let raw = slab::from_f32s(&vals);
+        for id in CodecId::ALL {
+            let mut wire = Vec::new();
+            id.codec().encode(&raw, &mut wire);
+            let m = Message::Push { iter: 4, lo: 0, hi: 2, codec: id, data: wire };
+            roundtrip(m.clone());
+            let enc = m.encode();
+            match Message::decode(&enc[4..]).unwrap() {
+                Message::Push { codec, data, .. } => {
+                    assert_eq!(codec, id);
+                    let mut back = Vec::new();
+                    id.codec().decode(&data, &mut back).unwrap();
+                    assert_eq!(back.len(), raw.len());
+                }
+                m => panic!("{m:?}"),
+            }
+        }
+    }
+
+    /// The acceptance property: every v3 fp32 data-plane frame is
+    /// byte-identical to the v2 encoding (length prefix, opcode, fixed
+    /// fields, untagged slab-length field, raw f32 slab).
+    #[test]
+    fn fp32_frames_are_byte_identical_to_v2() {
+        let vals: Vec<f32> = (0..777).map(|i| (i as f32).cos() * 3.0).collect();
+        let data = slab::from_f32s(&vals);
+        let v2 = |opcode: u8, iter: u64, lo: u32, hi: u32, data: &[u8]| -> Vec<u8> {
+            // The v2 layout, reconstructed independently of the encoder.
+            let wire_size = 1 + 8 + 4 + 4 + 4 + data.len();
+            let mut buf = Vec::with_capacity(4 + wire_size);
+            buf.extend_from_slice(&(wire_size as u32).to_le_bytes());
+            buf.push(opcode);
+            buf.extend_from_slice(&iter.to_le_bytes());
+            buf.extend_from_slice(&lo.to_le_bytes());
+            buf.extend_from_slice(&hi.to_le_bytes());
+            buf.extend_from_slice(&(data.len() as u32).to_le_bytes());
+            buf.extend_from_slice(data);
+            buf
+        };
+        let reply = Message::PullReply {
+            iter: 12,
+            lo: 3,
+            hi: 9,
+            codec: CodecId::Fp32,
+            data: data.clone(),
+        };
+        assert_eq!(reply.encode(), v2(2, 12, 3, 9, &data));
+        let push =
+            Message::Push { iter: 5, lo: 0, hi: 1, codec: CodecId::Fp32, data: data.clone() };
+        assert_eq!(push.encode(), v2(3, 5, 0, 1, &data));
+        // And a v2-shaped frame decodes as an fp32-tagged v3 frame.
+        let enc = v2(3, 5, 0, 1, &data);
+        assert_eq!(Message::decode(&enc[4..]).unwrap(), push);
+        // Non-fp32 codecs tag the slab-length field (and only it).
+        let mut wire = Vec::new();
+        CodecId::Fp16.codec().encode(&data, &mut wire);
+        let tagged = Message::Push {
+            iter: 5,
+            lo: 0,
+            hi: 1,
+            codec: CodecId::Fp16,
+            data: wire.clone(),
+        }
+        .encode();
+        let untagged = v2(3, 5, 0, 1, &wire);
+        assert_eq!(tagged.len(), untagged.len());
+        let field = 4 + 1 + 8 + 4 + 4; // prefix + op + iter + lo + hi
+        assert_eq!(tagged[..field], untagged[..field]);
+        assert_eq!(tagged[field + 4..], untagged[field + 4..]);
+        let f = u32::from_le_bytes(tagged[field..field + 4].try_into().unwrap());
+        assert_eq!(f >> 30, CodecId::Fp16.tag() as u32);
+        assert_eq!((f & SLAB_LEN_MASK) as usize, wire.len());
     }
 
     #[test]
     fn slab_payload_survives_the_wire_bit_exactly() {
         let vals: Vec<f32> = (0..1000).map(|i| (i as f32).sin() * 1e3).collect();
-        let m = Message::Push { iter: 1, lo: 0, hi: 9, data: slab::from_f32s(&vals) };
+        let m = Message::Push {
+            iter: 1,
+            lo: 0,
+            hi: 9,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&vals),
+        };
         let enc = m.encode();
         match Message::decode(&enc[4..]).unwrap() {
             Message::Push { data, .. } => assert_eq!(slab::to_f32s(&data), vals),
@@ -602,18 +772,31 @@ mod tests {
         }
     }
 
+    /// Random codec + a wire-valid payload length for it (contents are
+    /// opaque to the transport).
+    fn random_codec_data(rng: &mut Rng) -> (CodecId, Vec<u8>) {
+        let codec = CodecId::ALL[rng.below(3)];
+        let elems = rng.below(64);
+        let n = codec.wire_len(4 * elems);
+        (codec, (0..n).map(|_| rng.below(256) as u8).collect())
+    }
+
     fn random_message(rng: &mut Rng) -> Message {
-        let data = |rng: &mut Rng| -> Vec<u8> {
-            let words = rng.below(64);
-            (0..4 * words).map(|_| rng.below(256) as u8).collect()
-        };
-        match rng.below(7) {
+        match rng.below(9) {
             0 => Message::Pull { iter: rng.below(1 << 20) as u64, lo: 0, hi: 7 },
-            1 => Message::PullReply { iter: 3, lo: 1, hi: 5, data: data(rng) },
-            2 => Message::Push { iter: 9, lo: 0, hi: 2, data: data(rng) },
+            1 => {
+                let (codec, data) = random_codec_data(rng);
+                Message::PullReply { iter: 3, lo: 1, hi: 5, codec, data }
+            }
+            2 => {
+                let (codec, data) = random_codec_data(rng);
+                Message::Push { iter: 9, lo: 0, hi: 2, codec, data }
+            }
             3 => Message::PushAck { iter: 1, lo: 0, hi: 0 },
-            4 => Message::Hello { worker: rng.below(64) as u32, version: 2 },
-            5 => Message::HelloAck { workers: 8, version: 2 },
+            4 => Message::Hello { worker: rng.below(64) as u32, version: 3 },
+            5 => Message::HelloAck { workers: 8, version: 3 },
+            6 => Message::CodecPropose { pref: CodecId::ALL[rng.below(3)] },
+            7 => Message::CodecAgree { codec: CodecId::ALL[rng.below(3)] },
             _ => Message::Shutdown,
         }
     }
@@ -655,16 +838,55 @@ mod tests {
         assert!(Message::decode(&legacy).is_err());
     }
 
+    /// Rewrite a Push frame's slab-length field and payload, refreshing
+    /// the frame-length prefix.
+    fn forged_push_frame(field: u32, payload: &[u8]) -> Vec<u8> {
+        let mut enc = Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 0,
+            codec: CodecId::Fp32,
+            data: Vec::new(),
+        }
+        .encode();
+        let len_field = 4 + 1 + 8 + 4 + 4; // prefix + op + iter + lo + hi
+        enc[len_field..len_field + 4].copy_from_slice(&field.to_le_bytes());
+        enc.extend_from_slice(payload);
+        let frame_len = (enc.len() - 4) as u32;
+        enc[..4].copy_from_slice(&frame_len.to_le_bytes());
+        enc
+    }
+
     #[test]
     fn decode_rejects_misaligned_slab() {
         // A Push whose slab-length field claims 3 bytes: not f32-aligned.
-        let mut enc = Message::Push { iter: 0, lo: 0, hi: 0, data: Vec::new() }.encode();
-        let len_field = 4 + 1 + 8 + 4 + 4; // prefix + op + iter + lo + hi
-        enc[len_field..len_field + 4].copy_from_slice(&3u32.to_le_bytes());
-        enc.extend_from_slice(&[0, 0, 0]);
-        let frame_len = (enc.len() - 4) as u32;
-        enc[..4].copy_from_slice(&frame_len.to_le_bytes());
+        let enc = forged_push_frame(3, &[0, 0, 0]);
         assert!(Message::decode(&enc[4..]).is_err());
+    }
+
+    #[test]
+    fn decode_rejects_bad_codec_framing() {
+        // Tag 3 is not a codec.
+        let enc = forged_push_frame(4 | (3 << 30), &[0; 4]);
+        assert!(Message::decode(&enc[4..]).is_err(), "tag 3 accepted");
+        // fp16 slabs must be 2-aligned.
+        let enc = forged_push_frame(3 | (1 << 30), &[0; 3]);
+        assert!(Message::decode(&enc[4..]).is_err(), "odd fp16 slab accepted");
+        // int8 payloads are concatenations of per-layer chunked encodings,
+        // so the transport accepts any length — including ones that are
+        // NOT a valid single slab, like 1031 + 9 (layers of 1023 and 1
+        // elements), whose per-layer framing only the endpoint's byte
+        // tables can check.
+        for n in [9usize, 1031 + 9, 7, 8] {
+            let enc = forged_push_frame(n as u32 | (2 << 30), &vec![0u8; n]);
+            match Message::decode(&enc[4..]).unwrap() {
+                Message::Push { codec, data, .. } => {
+                    assert_eq!(codec, CodecId::Int8);
+                    assert_eq!(data.len(), n);
+                }
+                m => panic!("{m:?}"),
+            }
+        }
     }
 
     #[test]
@@ -673,6 +895,7 @@ mod tests {
             iter: 1,
             lo: 0,
             hi: 0,
+            codec: CodecId::Fp32,
             data: slab::from_f32s(&[0.5; 256]),
         };
         let mut buf = Vec::new();
@@ -722,6 +945,7 @@ mod tests {
             iter: 42,
             lo: 2,
             hi: 5,
+            codec: CodecId::Fp32,
             data: slab::from_f32s(&[3.25; 1000]),
         };
         conn.send(&msg).unwrap();
@@ -744,12 +968,12 @@ mod tests {
         let b: Vec<u8> = Vec::new();
         let c = slab::from_f32s(&[-2.5; 77]);
         let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
-        conn.send_push_parts(11, 0, 2, &[&a, &b, &c]).unwrap();
+        conn.send_push_parts(11, 0, 2, CodecId::Fp32, &[&a, &b, &c]).unwrap();
         let mut expect = a.clone();
         expect.extend_from_slice(&c);
         assert_eq!(
             t.join().unwrap(),
-            Message::Push { iter: 11, lo: 0, hi: 2, data: expect }
+            Message::Push { iter: 11, lo: 0, hi: 2, codec: CodecId::Fp32, data: expect }
         );
     }
 
@@ -766,8 +990,14 @@ mod tests {
             let (s, _) = listener.accept().unwrap();
             let mut conn = Connection::new(s, None);
             for i in 0..2 {
-                conn.send(&Message::PullReply { iter: i, lo: 0, hi: 3, data: payload2.clone() })
-                    .unwrap();
+                conn.send(&Message::PullReply {
+                    iter: i,
+                    lo: 0,
+                    hi: 3,
+                    codec: CodecId::Fp32,
+                    data: payload2.clone(),
+                })
+                .unwrap();
             }
             conn.send(&Message::Shutdown).unwrap();
         });
@@ -823,7 +1053,7 @@ mod tests {
             parts.push(&empty);
         }
         let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
-        conn.send_push_parts(0, 0, 49, &parts).unwrap();
+        conn.send_push_parts(0, 0, 49, CodecId::Fp32, &parts).unwrap();
         let expect: Vec<u8> = layers.concat();
         match t.join().unwrap() {
             Message::Push { data, .. } => assert_eq!(data, expect),

@@ -85,8 +85,12 @@ impl TransferSamples {
 /// The profiler: all cost-vector state for one worker.
 #[derive(Debug, Clone)]
 pub struct Profiler {
-    /// Parameter bytes per layer (from the manifest) — the sizes the
-    /// transmission model converts into per-layer pt/gt.
+    /// Per-layer **wire** bytes — the sizes the transmission model
+    /// converts into per-layer pt/gt. The worker passes the session
+    /// codec's encoded sizes (`net::codec`), and records wire byte counts
+    /// with each transfer sample, so the fitted rate and the reconstructed
+    /// pt/gt are codec-aware: when compression shrinks transfers, the
+    /// scheduler re-segments against the compressed costs.
     layer_bytes: Vec<usize>,
     pub enabled: bool,
     fc: Vec<Ewma>,

@@ -11,9 +11,18 @@
 //! gradient slabs are checked out **pre-sized** through
 //! [`ExecPlan::checkout_layer`] and recycled across iterations — zero
 //! steady-state slab allocations.
+//!
+//! Plans are **codec-aware**: the session's negotiated wire codec
+//! ([`crate::net::codec`]) changes every on-wire byte count (compressed
+//! layer sizes differ from `4·elems`), so `compile` resolves a parallel
+//! set of wire tables — `wire_len`/`wire_off` per slice, `wire_bytes` per
+//! sub-request and segment, [`ExecPlan::wire_layer_bytes`] per layer —
+//! once per re-plan, and the iteration's encode/decode paths run off pure
+//! lookups exactly like the raw-byte paths do.
 
 use std::sync::Arc;
 
+use crate::net::codec::CodecId;
 use crate::net::pool::{SlabCheckout, SlabPool};
 use crate::ps::sharding::ShardMap;
 use crate::sched::SchedulePlan;
@@ -25,22 +34,31 @@ pub use crate::net::pool::SlabSlice;
 pub struct ExecSlice {
     /// 0-based layer index.
     pub layer: usize,
-    /// Byte length of the layer's flat `w‖b` slab.
+    /// Byte length of the layer's flat `w‖b` slab (raw f32).
     pub len: usize,
     /// Byte offset of this layer inside the segment blob (layers of the
     /// segment concatenated in ascending order).
     pub seg_off: usize,
-    /// Byte offset of this layer inside the owning shard's wire payload
-    /// (the shard's owned layers of the segment, ascending).
+    /// Byte offset of this layer's **decoded** slab inside the owning
+    /// shard's payload (the shard's owned layers of the segment,
+    /// ascending).
     pub reply_off: usize,
+    /// Byte length of this layer's codec-encoded slab on the wire.
+    pub wire_len: usize,
+    /// Byte offset of this layer's encoding inside the shard's wire
+    /// payload (per-layer encodings concatenated, ascending).
+    pub wire_off: usize,
 }
 
 /// One shard's share of a segment: the sub-request the worker issues.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ExecSub {
     pub server: usize,
-    /// Total payload bytes this shard sends/receives for the segment.
+    /// Total decoded payload bytes this shard sends/receives for the
+    /// segment.
     pub bytes: usize,
+    /// Total codec-encoded bytes of this shard's payload on the wire.
+    pub wire_bytes: usize,
     /// The shard's owned layers of the segment, ascending.
     pub slices: Vec<ExecSlice>,
 }
@@ -52,17 +70,24 @@ pub struct ExecSegment {
     /// their transmission order in [`ExecPlan::bwd`], not in `lo`/`hi`).
     pub lo: usize,
     pub hi: usize,
-    /// Total payload bytes of the whole segment.
+    /// Total decoded payload bytes of the whole segment.
     pub bytes: usize,
+    /// Total codec-encoded bytes of the whole segment on the wire — what
+    /// the profiler's transmission model is fed.
+    pub wire_bytes: usize,
     pub subs: Vec<ExecSub>,
 }
 
-/// A schedule compiled against a concrete model and shard map.
+/// A schedule compiled against a concrete model, cluster and wire codec.
 #[derive(Debug, Clone)]
 pub struct ExecPlan {
     pub depth: usize,
-    /// Flat `w‖b` slab size per 0-based layer.
+    /// The session's negotiated wire codec the tables were resolved for.
+    pub codec: CodecId,
+    /// Flat `w‖b` slab size per 0-based layer (raw f32).
     pub layer_bytes: Vec<usize>,
+    /// Codec-encoded slab size per 0-based layer.
+    pub wire_layer_bytes: Vec<usize>,
     /// Prefix byte offsets: `byte_off[l]` = bytes of layers `0..l`
     /// (`depth + 1` entries).
     pub byte_off: Vec<usize>,
@@ -85,11 +110,14 @@ impl ExecPlan {
         layer_bytes: &[usize],
         shard: ShardMap,
         pool: Arc<SlabPool>,
+        codec: CodecId,
     ) -> ExecPlan {
         let depth = layer_bytes.len();
         assert_eq!(plan.fwd.depth(), depth, "plan depth != model depth");
         assert_eq!(plan.bwd.depth(), depth, "plan depth != model depth");
         assert_eq!(shard.depth, depth, "shard map depth != model depth");
+        let wire_layer_bytes: Vec<usize> =
+            layer_bytes.iter().map(|&b| codec.wire_len(b)).collect();
         let mut byte_off = Vec::with_capacity(depth + 1);
         byte_off.push(0usize);
         for l in 0..depth {
@@ -97,25 +125,43 @@ impl ExecPlan {
         }
 
         let seg = |lo: usize, hi: usize| -> ExecSegment {
+            let mut wire_bytes = 0usize;
             let subs: Vec<ExecSub> = shard
                 .sub_requests(lo, hi)
                 .map(|sub| {
                     let mut slices = Vec::with_capacity(sub.count);
                     let mut reply_off = 0usize;
+                    let mut wire_off = 0usize;
                     for layer in sub.layers() {
                         let len = layer_bytes[layer];
+                        let wire_len = wire_layer_bytes[layer];
                         slices.push(ExecSlice {
                             layer,
                             len,
                             seg_off: byte_off[layer] - byte_off[lo],
                             reply_off,
+                            wire_len,
+                            wire_off,
                         });
                         reply_off += len;
+                        wire_off += wire_len;
                     }
-                    ExecSub { server: sub.server, bytes: reply_off, slices }
+                    wire_bytes += wire_off;
+                    ExecSub {
+                        server: sub.server,
+                        bytes: reply_off,
+                        wire_bytes: wire_off,
+                        slices,
+                    }
                 })
                 .collect();
-            ExecSegment { lo, hi, bytes: byte_off[hi + 1] - byte_off[lo], subs }
+            ExecSegment {
+                lo,
+                hi,
+                bytes: byte_off[hi + 1] - byte_off[lo],
+                wire_bytes,
+                subs,
+            }
         };
 
         let fwd = plan
@@ -130,13 +176,28 @@ impl ExecPlan {
             .into_iter()
             .map(|(hi, lo)| seg(lo - 1, hi - 1))
             .collect();
-        ExecPlan { depth, layer_bytes: layer_bytes.to_vec(), byte_off, fwd, bwd, pool }
+        ExecPlan {
+            depth,
+            codec,
+            layer_bytes: layer_bytes.to_vec(),
+            wire_layer_bytes,
+            byte_off,
+            fwd,
+            bwd,
+            pool,
+        }
     }
 
     /// Check out an empty pooled buffer pre-sized for layer `l`'s flat
     /// `w‖b` gradient slab (the tables know the exact size).
     pub fn checkout_layer(&self, l: usize) -> SlabCheckout {
         self.pool.checkout(self.layer_bytes[l])
+    }
+
+    /// Check out an empty pooled buffer pre-sized for layer `l`'s
+    /// codec-encoded wire slab.
+    pub fn checkout_layer_wire(&self, l: usize) -> SlabCheckout {
+        self.pool.checkout(self.wire_layer_bytes[l])
     }
 }
 
@@ -161,21 +222,26 @@ mod tests {
 
     /// Every compiled quantity must agree with a from-scratch
     /// recomputation: segments partition the layers, slice offsets tile
-    /// both the segment blob and each shard payload exactly, and the
-    /// owning servers match the shard map.
+    /// both the segment blob and each shard payload exactly (raw *and*
+    /// codec-encoded), and the owning servers match the shard map.
     #[test]
     fn compiled_offsets_tile_segments_and_payloads() {
         let mut rng = Rng::new(91);
         let pool = SlabPool::new();
-        for _ in 0..100 {
+        for round in 0..100 {
+            let codec = CodecId::ALL[round % 3];
             let depth = rng.range(1, 20);
             let servers = rng.range(1, 6);
             let shard = ShardMap::new(servers, depth);
             let layer_bytes = random_bytes(&mut rng, depth);
             let plan = random_plan(&mut rng, depth);
-            let exec = ExecPlan::compile(&plan, &layer_bytes, shard, pool.clone());
+            let exec = ExecPlan::compile(&plan, &layer_bytes, shard, pool.clone(), codec);
+            assert_eq!(exec.codec, codec);
             assert_eq!(exec.byte_off.len(), depth + 1);
             assert_eq!(exec.byte_off[depth], layer_bytes.iter().sum::<usize>());
+            for l in 0..depth {
+                assert_eq!(exec.wire_layer_bytes[l], codec.wire_len(layer_bytes[l]));
+            }
 
             for (segs, ascending) in [(&exec.fwd, true), (&exec.bwd, false)] {
                 // Transmission order: fwd ascends from layer 0, bwd
@@ -198,10 +264,15 @@ mod tests {
                         seg.subs.iter().map(|s| s.bytes).sum::<usize>(),
                         seg_bytes
                     );
+                    assert_eq!(
+                        seg.wire_bytes,
+                        seg.subs.iter().map(|s| s.wire_bytes).sum::<usize>()
+                    );
                     // Slices tile the segment blob exactly once.
                     let mut seg_ranges: Vec<(usize, usize)> = Vec::new();
                     for sub in &seg.subs {
                         let mut reply_off = 0;
+                        let mut wire_off = 0;
                         for sl in &sub.slices {
                             assert_eq!(shard.owner(sl.layer), sub.server);
                             assert_eq!(sl.len, layer_bytes[sl.layer]);
@@ -210,10 +281,17 @@ mod tests {
                                 sl.seg_off,
                                 exec.byte_off[sl.layer] - exec.byte_off[seg.lo]
                             );
+                            // Wire offsets tile the encoded payload the
+                            // same way the raw offsets tile the decoded
+                            // one.
+                            assert_eq!(sl.wire_len, codec.wire_len(sl.len));
+                            assert_eq!(sl.wire_off, wire_off);
                             reply_off += sl.len;
+                            wire_off += sl.wire_len;
                             seg_ranges.push((sl.seg_off, sl.seg_off + sl.len));
                         }
                         assert_eq!(sub.bytes, reply_off);
+                        assert_eq!(sub.wire_bytes, wire_off);
                     }
                     seg_ranges.sort_unstable();
                     let mut expect = 0;
@@ -236,7 +314,13 @@ mod tests {
         let pool = SlabPool::new();
         let layer_bytes = vec![1024usize, 64, 4096];
         let plan = SchedulePlan::layer_by_layer(3);
-        let exec = ExecPlan::compile(&plan, &layer_bytes, ShardMap::new(2, 3), pool);
+        let exec = ExecPlan::compile(
+            &plan,
+            &layer_bytes,
+            ShardMap::new(2, 3),
+            pool,
+            CodecId::Fp32,
+        );
         for iter in 0..3 {
             let held: Vec<SlabCheckout> =
                 (0..3).map(|l| exec.checkout_layer(l)).collect();
@@ -251,5 +335,37 @@ mod tests {
                 "iteration {iter} allocated instead of recycling"
             );
         }
+    }
+
+    /// Under a compressing codec the wire tables shrink (and the wire
+    /// checkouts are sized off them), while the raw tables are untouched.
+    #[test]
+    fn wire_tables_shrink_under_compression() {
+        let pool = SlabPool::new();
+        let layer_bytes = vec![8192usize, 256, 40960];
+        let plan = SchedulePlan::layer_by_layer(3);
+        let fp16 = ExecPlan::compile(
+            &plan,
+            &layer_bytes,
+            ShardMap::new(2, 3),
+            pool.clone(),
+            CodecId::Fp16,
+        );
+        assert_eq!(fp16.wire_layer_bytes, vec![4096, 128, 20480]);
+        assert_eq!(fp16.layer_bytes, layer_bytes);
+        for seg in fp16.fwd.iter().chain(&fp16.bwd) {
+            assert_eq!(seg.wire_bytes * 2, seg.bytes);
+        }
+        let co = fp16.checkout_layer_wire(0);
+        assert!(co.is_empty() && co.capacity() >= 4096);
+        // Fp32 wire tables degenerate to the raw ones.
+        let fp32 = ExecPlan::compile(
+            &plan,
+            &layer_bytes,
+            ShardMap::new(2, 3),
+            pool,
+            CodecId::Fp32,
+        );
+        assert_eq!(fp32.wire_layer_bytes, fp32.layer_bytes);
     }
 }

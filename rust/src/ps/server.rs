@@ -25,15 +25,25 @@
 //! * **Borrowed receive** — `Push` gradients are accumulated straight out
 //!   of the connection's receive scratch (`Connection::recv_ref`), never
 //!   copied into an owned message.
+//! * **Negotiated wire codecs** (protocol v3, `net::codec`) — a session
+//!   may speak fp16 or int8 on the wire (`CodecPropose`/`CodecAgree`):
+//!   replies are codec-encoded per layer during assembly (the cache is
+//!   keyed by codec so same-codec broadcasts stay single-flight), pushes
+//!   are decode-accumulated by their frame's codec tag, and per-codec
+//!   counters (bytes saved, encode/decode ns, max quantization error) are
+//!   exported through [`WireStats`]. Un-negotiated sessions are fp32 and
+//!   byte-identical to v2.
 
 use std::collections::HashMap;
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use crate::net::codec::{self, CodecId, CodecStats, CodecStatsTable};
 use crate::net::pool::{PoolStats, PooledSlab, SlabPool};
 use crate::net::{slab, Connection, Message, MessageRef, ShaperSpec, PROTOCOL_VERSION};
 
@@ -75,9 +85,12 @@ enum ReplyState {
     Ready(Arc<PooledSlab>),
 }
 
-/// The shared pull-reply broadcast cache, keyed by `(iter, lo, hi)`.
+/// The shared pull-reply broadcast cache, keyed by `(iter, lo, hi, codec)`
+/// — sessions speaking different codecs need different reply bytes, but
+/// every same-codec puller of a segment still shares one single-flight
+/// assembly.
 struct ReplyCache {
-    entries: Mutex<HashMap<(u64, u32, u32), ReplyState>>,
+    entries: Mutex<HashMap<(u64, u32, u32, CodecId), ReplyState>>,
     /// Signals entry transitions (Building → Ready/removed) and shutdown.
     ready: Condvar,
     /// Pulls answered from an already-assembled slab.
@@ -108,6 +121,9 @@ struct Shared {
     pool: Arc<SlabPool>,
     /// Assemble-once broadcast cache for BSP pull replies.
     reply_cache: ReplyCache,
+    /// Per-codec encode/decode counters (bytes saved, wall-clock, max
+    /// quantization error) — exported through [`WireStats`].
+    codec_stats: CodecStatsTable,
     shutting_down: AtomicBool,
     connected: AtomicU32,
     /// Pulls currently parked on a version condvar (observability: lets
@@ -132,6 +148,16 @@ pub struct WireStats {
     /// Entries currently cached (bounded: stale iterations are evicted).
     pub reply_cache_entries: usize,
     pub pool: PoolStats,
+    /// Per-codec counters, indexed by [`CodecId::tag`]: raw vs wire bytes
+    /// (bytes saved), encode/decode wall-clock, max quantization error.
+    pub codecs: [CodecStats; 3],
+}
+
+impl WireStats {
+    /// One codec's counters.
+    pub fn codec(&self, id: CodecId) -> CodecStats {
+        self.codecs[id.tag() as usize]
+    }
 }
 
 /// A running shard: background accept loop + handler threads.
@@ -161,6 +187,7 @@ fn wire_stats(shared: &Shared) -> WireStats {
         reply_cache_builds: shared.reply_cache.builds.load(Ordering::SeqCst),
         reply_cache_entries: shared.reply_cache.entries.lock().unwrap().len(),
         pool: shared.pool.stats(),
+        codecs: shared.codec_stats.snapshot(),
     }
 }
 
@@ -203,6 +230,7 @@ impl ParamServer {
             layer_bytes,
             pool: SlabPool::new(),
             reply_cache: ReplyCache::new(),
+            codec_stats: CodecStatsTable::new(),
             shutting_down: AtomicBool::new(false),
             connected: AtomicU32::new(0),
             pull_waiters: AtomicU32::new(0),
@@ -326,16 +354,27 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
     }
 }
 
-/// Assemble the `[lo, hi]` reply slab for `iter` into a pooled buffer,
-/// parking on the version condvars until the BSP clock gets there. Returns
-/// `None` when shutdown interrupts the wait.
-fn assemble_reply(shared: &Shared, iter: u64, lo: u32, hi: u32) -> Option<Arc<PooledSlab>> {
+/// Assemble the `[lo, hi]` reply slab for `iter` into a pooled buffer —
+/// each owned layer's params encoded by the session `codec`, concatenated
+/// — parking on the version condvars until the BSP clock gets there.
+/// Returns `None` when shutdown interrupts the wait.
+fn assemble_reply(
+    shared: &Shared,
+    iter: u64,
+    lo: u32,
+    hi: u32,
+    codec_id: CodecId,
+) -> Option<Arc<PooledSlab>> {
     // Pre-size from the immutable size map: one pooled checkout, then pure
-    // slab appends under the slot locks.
+    // per-layer codec appends under the slot locks (fp32 encodes as a bulk
+    // `extend_from_slice`, so the uncompressed path is unchanged).
+    let wc = codec_id.codec();
     let cap: usize = (lo as usize..=hi as usize)
         .filter_map(|l| shared.layer_bytes.get(&l))
+        .map(|&b| wc.wire_len(b))
         .sum();
     let mut data = shared.pool.checkout(cap);
+    let (mut raw_total, mut enc_ns, mut max_err) = (0usize, 0u64, 0.0f32);
     for l in lo as usize..=hi as usize {
         let Some((m, cv)) = shared.slots.get(&l) else { continue };
         let mut slot = m.lock().unwrap();
@@ -350,15 +389,28 @@ fn assemble_reply(shared: &Shared, iter: u64, lo: u32, hi: u32) -> Option<Arc<Po
             shared.pull_waiters.fetch_sub(1, Ordering::SeqCst);
             slot = woken;
         }
-        data.extend_from_slice(&slot.params);
+        let t0 = Instant::now();
+        let err = wc.encode(&slot.params, &mut data);
+        enc_ns += t0.elapsed().as_nanos() as u64;
+        raw_total += slot.params.len();
+        max_err = max_err.max(err);
     }
+    shared
+        .codec_stats
+        .record_encode(codec_id, raw_total, data.len(), enc_ns, max_err);
     Some(data.freeze())
 }
 
 /// Serve a pull from the shared broadcast cache, assembling at most once
-/// per `(iter, lo, hi)` across all concurrent pullers (single-flight).
-/// Returns `None` only on shutdown.
-fn pull_reply(shared: &Shared, iter: u64, lo: u32, hi: u32) -> Option<Arc<PooledSlab>> {
+/// per `(iter, lo, hi, codec)` across all concurrent pullers
+/// (single-flight). Returns `None` only on shutdown.
+fn pull_reply(
+    shared: &Shared,
+    iter: u64,
+    lo: u32,
+    hi: u32,
+    codec_id: CodecId,
+) -> Option<Arc<PooledSlab>> {
     /// Snapshot of a cache entry's state, owned (no borrow spans the
     /// condvar wait or the insert below).
     enum Peek {
@@ -367,7 +419,7 @@ fn pull_reply(shared: &Shared, iter: u64, lo: u32, hi: u32) -> Option<Arc<Pooled
         Vacant,
     }
 
-    let key = (iter, lo, hi);
+    let key = (iter, lo, hi, codec_id);
     let cache = &shared.reply_cache;
     let mut entries = cache.entries.lock().unwrap();
     loop {
@@ -392,7 +444,7 @@ fn pull_reply(shared: &Shared, iter: u64, lo: u32, hi: u32) -> Option<Arc<Pooled
             Peek::Vacant => {
                 entries.insert(key, ReplyState::Building);
                 drop(entries);
-                let built = assemble_reply(shared, iter, lo, hi);
+                let built = assemble_reply(shared, iter, lo, hi, codec_id);
                 let mut relocked = cache.entries.lock().unwrap();
                 let out = match built {
                     Some(slab) => {
@@ -428,20 +480,34 @@ fn pull_reply(shared: &Shared, iter: u64, lo: u32, hi: u32) -> Option<Arc<Pooled
 }
 
 /// Accumulate a pushed gradient slab (borrowed straight from the receive
-/// scratch) and apply averaged SGD + advance the BSP clock on the last
-/// contribution.
-fn apply_push(shared: &Shared, iter: u64, lo: u32, hi: u32, data: &[u8]) -> Result<()> {
+/// scratch, decoded by the codec the frame is tagged with — per layer, so
+/// the offsets come from the immutable size map) and apply averaged SGD +
+/// advance the BSP clock on the last contribution.
+fn apply_push(
+    shared: &Shared,
+    iter: u64,
+    lo: u32,
+    hi: u32,
+    codec_id: CodecId,
+    data: &[u8],
+) -> Result<()> {
+    let wc = codec_id.codec();
     let mut off = 0usize;
+    let (mut raw_total, mut dec_ns) = (0usize, 0u64);
     for l in lo as usize..=hi as usize {
         let Some((m, cv)) = shared.slots.get(&l) else { continue };
         let mut slot = m.lock().unwrap();
-        let n = slot.params.len();
+        let n = wc.wire_len(slot.params.len());
         anyhow::ensure!(
             off + n <= data.len(),
             "push payload too small for layers {lo}..={hi}"
         );
-        // Accumulate straight off the wire slab.
-        slab::add_assign_f32s(&mut slot.grad_sum, &data[off..off + n]);
+        // Decode-accumulate straight off the wire slab (fp32 degenerates
+        // to the bulk add of the uncompressed path).
+        let t0 = Instant::now();
+        wc.accumulate(&mut slot.grad_sum, &data[off..off + n])?;
+        dec_ns += t0.elapsed().as_nanos() as u64;
+        raw_total += slot.params.len();
         off += n;
         slot.grad_count += 1;
         if slot.grad_count == shared.cfg.workers {
@@ -453,6 +519,7 @@ fn apply_push(shared: &Shared, iter: u64, lo: u32, hi: u32, data: &[u8]) -> Resu
         }
     }
     anyhow::ensure!(off == data.len(), "push payload size mismatch");
+    shared.codec_stats.record_decode(codec_id, raw_total, off, dec_ns);
     Ok(())
 }
 
@@ -466,6 +533,11 @@ enum Action {
 }
 
 fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
+    // The session's negotiated wire codec: fp32 until the worker proposes
+    // otherwise (so v3 sessions that never negotiate behave exactly like
+    // v2 ones). Replies are encoded with it; pushes are decoded by the
+    // codec their frame is tagged with.
+    let mut session_codec = CodecId::Fp32;
     loop {
         let action = {
             let msg = match conn.recv_ref() {
@@ -476,16 +548,23 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
             };
             match msg {
                 MessageRef::Hello { worker, version } => Action::Hello { worker, version },
+                MessageRef::CodecPropose { pref } => {
+                    // First supported preference wins; fp32 is the
+                    // mandatory fallback, so mixed fleets keep training.
+                    session_codec = codec::negotiate(&[pref], &codec::SUPPORTED);
+                    Action::Reply(Message::CodecAgree { codec: session_codec })
+                }
                 MessageRef::Pull { iter, lo, hi } => {
-                    match pull_reply(shared, iter, lo, hi) {
+                    match pull_reply(shared, iter, lo, hi, session_codec) {
                         Some(slab) => Action::ReplyShared { iter, lo, hi, slab },
                         // Shutting down: no reply, drop the session.
                         None => Action::Close,
                     }
                 }
-                MessageRef::Push { iter, lo, hi, data } => {
-                    // Gradients are consumed borrowed — no payload copy.
-                    apply_push(shared, iter, lo, hi, data)?;
+                MessageRef::Push { iter, lo, hi, codec, data } => {
+                    // Gradients are consumed borrowed — no payload copy —
+                    // decoded by the frame's own codec tag.
+                    apply_push(shared, iter, lo, hi, codec, data)?;
                     Action::Reply(Message::PushAck { iter, lo, hi })
                 }
                 MessageRef::Shutdown => Action::Close,
@@ -515,7 +594,13 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
                 // The cached slab goes out borrowed, scatter-gather — the
                 // broadcast bytes are written once per worker but copied
                 // zero times.
-                conn.send_ref(MessageRef::PullReply { iter, lo, hi, data: &slab[..] })?;
+                conn.send_ref(MessageRef::PullReply {
+                    iter,
+                    lo,
+                    hi,
+                    codec: session_codec,
+                    data: &slab[..],
+                })?;
             }
             Action::Close => return Ok(()),
         }
@@ -572,6 +657,7 @@ mod tests {
             iter: 0,
             lo: 0,
             hi: 0,
+            codec: CodecId::Fp32,
             data: slab::from_f32s(&[2.0, 0.0]),
         })
         .unwrap();
@@ -582,6 +668,7 @@ mod tests {
             iter: 0,
             lo: 0,
             hi: 0,
+            codec: CodecId::Fp32,
             data: slab::from_f32s(&[0.0, 4.0]),
         })
         .unwrap();
@@ -608,6 +695,7 @@ mod tests {
             iter: 0,
             lo: 0,
             hi: 0,
+            codec: CodecId::Fp32,
             data: slab::from_f32s(&[2.0, 2.0]),
         })
         .unwrap();
@@ -682,6 +770,7 @@ mod tests {
                 iter,
                 lo: 0,
                 hi: 1,
+                codec: CodecId::Fp32,
                 data: slab::from_f32s(&[0.0, 0.0, 0.0]),
             })
             .unwrap();
@@ -762,6 +851,157 @@ mod tests {
         c.send(&Message::Pull { iter: 0, lo: 0, hi: 5 }).unwrap();
         match c.recv().unwrap() {
             Message::PullReply { data, .. } => assert_eq!(slab::to_f32s(&data).len(), 3),
+            m => panic!("{m:?}"),
+        }
+    }
+
+    /// Negotiate a session codec on a fresh connection.
+    fn negotiate_session(c: &mut Connection, pref: CodecId) -> CodecId {
+        c.send(&Message::CodecPropose { pref }).unwrap();
+        match c.recv().unwrap() {
+            Message::CodecAgree { codec } => codec,
+            m => panic!("{m:?}"),
+        }
+    }
+
+    /// A negotiated session is served codec-encoded replies and may push
+    /// codec-encoded gradients; the decoded math matches fp32 up to the
+    /// codec's quantization error.
+    #[test]
+    fn quantized_sessions_pull_and_push() {
+        for pref in [CodecId::Fp16, CodecId::Int8] {
+            let srv = start_two_layer(1);
+            let mut c = connect(srv.handle().addr);
+            assert_eq!(negotiate_session(&mut c, pref), pref);
+            c.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+            let wc = pref.codec();
+            match c.recv().unwrap() {
+                Message::PullReply { codec, data, .. } => {
+                    assert_eq!(codec, pref);
+                    // Per-layer encodings: layer 0 (2 f32s) then 1 (1 f32).
+                    assert_eq!(data.len(), wc.wire_len(8) + wc.wire_len(4));
+                    let mut raw = Vec::new();
+                    wc.decode(&data[..wc.wire_len(8)], &mut raw).unwrap();
+                    wc.decode(&data[wc.wire_len(8)..], &mut raw).unwrap();
+                    let vals = slab::to_f32s(&raw);
+                    assert!((vals[0] - 1.0).abs() < 1e-2, "{vals:?}");
+                    assert!((vals[1] - 2.0).abs() < 1e-2, "{vals:?}");
+                    assert!((vals[2] - 10.0).abs() < 1e-1, "{vals:?}");
+                }
+                m => panic!("{m:?}"),
+            }
+            // Push an encoded gradient for layer 0: w -= 0.5 * [2, 2].
+            let mut wire = Vec::new();
+            wc.encode(&slab::from_f32s(&[2.0, 2.0]), &mut wire);
+            c.send(&Message::Push { iter: 0, lo: 0, hi: 0, codec: pref, data: wire })
+                .unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+            let got = srv.snapshot(0).unwrap();
+            assert!((got[0] - 0.0).abs() < 1e-2, "{got:?}");
+            assert!((got[1] - 1.0).abs() < 1e-2, "{got:?}");
+            // Counters moved: the reply was encoded, the push decoded.
+            let ws = srv.wire_stats();
+            let cs = ws.codec(pref);
+            assert!(cs.encodes >= 1 && cs.decodes >= 1, "{cs:?}");
+            assert_eq!(cs.raw_bytes, 12, "{cs:?}");
+            assert_eq!(cs.wire_bytes, (wc.wire_len(8) + wc.wire_len(4)) as u64);
+            assert!(cs.max_quant_error >= 0.0);
+            // fp32 counters untouched by this session's tensor traffic.
+            assert_eq!(ws.codec(CodecId::Fp32).encodes, 0);
+        }
+    }
+
+    /// Sessions speaking different codecs each get their own single-flight
+    /// reply assembly, but same-codec pullers still share one.
+    #[test]
+    fn reply_cache_is_keyed_per_codec() {
+        let srv = start_two_layer(2);
+        let mut a = connect(srv.handle().addr);
+        let mut b = connect(srv.handle().addr);
+        assert_eq!(negotiate_session(&mut b, CodecId::Int8), CodecId::Int8);
+        for c in [&mut a, &mut b] {
+            c.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
+        }
+        let ws = srv.wire_stats();
+        assert_eq!(ws.reply_cache_builds, 2, "codecs must not share bytes");
+        assert_eq!(ws.reply_cache_hits, 0);
+        // A second int8 puller is a pure cache hit.
+        let mut b2 = connect(srv.handle().addr);
+        assert_eq!(negotiate_session(&mut b2, CodecId::Int8), CodecId::Int8);
+        b2.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+        match b2.recv().unwrap() {
+            Message::PullReply { codec, .. } => assert_eq!(codec, CodecId::Int8),
+            m => panic!("{m:?}"),
+        }
+        let ws = srv.wire_stats();
+        assert_eq!(ws.reply_cache_builds, 2);
+        assert_eq!(ws.reply_cache_hits, 1);
+    }
+
+    /// Regression: an int8 frame carrying several per-layer encodings can
+    /// have a total length that is NOT a valid *single* chunked slab
+    /// (layers of 1023 + 1 elements → 1031 + 9 = 1040 wire bytes, where
+    /// `raw_len(1040)` has no solution). The transport must still accept
+    /// the frame — per-layer framing is the endpoint's job — and the
+    /// decoded layers must roundtrip.
+    #[test]
+    fn int8_multi_layer_frames_with_awkward_total_lengths_survive() {
+        let mut layers = HashMap::new();
+        let big: Vec<f32> = (0..1023).map(|i| i as f32 * 0.01).collect();
+        layers.insert(0, big.clone());
+        layers.insert(1, vec![5.0f32]);
+        let srv =
+            ParamServer::start(ServerConfig { workers: 1, lr: 0.5 }, layers, None).unwrap();
+        let mut c = connect(srv.handle().addr);
+        assert_eq!(negotiate_session(&mut c, CodecId::Int8), CodecId::Int8);
+        let wc = CodecId::Int8.codec();
+        c.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { codec, data, .. } => {
+                assert_eq!(codec, CodecId::Int8);
+                let (n0, n1) = (wc.wire_len(4 * 1023), wc.wire_len(4));
+                assert_eq!(data.len(), n0 + n1);
+                assert!(
+                    wc.raw_len(data.len()).is_err(),
+                    "this regression test needs an invalid single-slab total"
+                );
+                let mut raw = Vec::new();
+                wc.decode(&data[..n0], &mut raw).unwrap();
+                wc.decode(&data[n0..], &mut raw).unwrap();
+                let vals = slab::to_f32s(&raw);
+                let bound = (big[1022] - big[0]) / 254.0;
+                for (a, b) in vals[..1023].iter().zip(&big) {
+                    assert!((a - b).abs() <= bound, "{a} vs {b}");
+                }
+                assert_eq!(vals[1023], 5.0, "single-element layer is exact");
+            }
+            m => panic!("{m:?}"),
+        }
+        // And the awkward-length push direction works too.
+        let mut wire = Vec::new();
+        wc.encode(&slab::from_f32s(&vec![0.0; 1023]), &mut wire);
+        wc.encode(&slab::from_f32s(&[2.0]), &mut wire);
+        c.send(&Message::Push { iter: 0, lo: 0, hi: 1, codec: CodecId::Int8, data: wire })
+            .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        // w1 -= 0.5 * 2.0
+        assert_eq!(srv.snapshot(1).unwrap(), vec![4.0]);
+    }
+
+    /// An un-negotiated v3 session is pure fp32 — same bytes, same cache
+    /// behavior as v2 — and a proposal the server cannot serve falls back
+    /// to fp32 instead of refusing the session.
+    #[test]
+    fn sessions_default_to_fp32() {
+        let srv = start_two_layer(1);
+        let mut c = connect(srv.handle().addr);
+        c.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { codec, data, .. } => {
+                assert_eq!(codec, CodecId::Fp32);
+                assert_eq!(slab::to_f32s(&data), vec![1.0, 2.0, 10.0]);
+            }
             m => panic!("{m:?}"),
         }
     }

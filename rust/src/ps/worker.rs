@@ -20,7 +20,11 @@
 //! slab pre-sized from the plan's byte tables, and the pusher sends each
 //! shard's payload gather-style (`send_push_parts`) straight from those
 //! per-layer slabs — no segment blob, no payload assembly, no steady-state
-//! slab allocations.
+//! slab allocations. Under a negotiated compressing codec (`net::codec`,
+//! protocol v3) the same tables carry wire sizes: pulled replies decode
+//! into pooled scratch, gradients are quantized into pooled wire slabs,
+//! and the profiler is fed *wire* bytes so re-planning sees compressed
+//! transfer costs.
 
 use std::net::TcpStream;
 use std::sync::{mpsc, Arc};
@@ -29,6 +33,7 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::config::Strategy;
+use crate::net::codec::{CodecId, CodecStats, CodecStatsTable};
 use crate::net::pool::{SlabCheckout, SlabPool};
 use crate::net::{Connection, LinkShaper, Message, RecvMsg, PROTOCOL_VERSION};
 use crate::profiler::Profiler;
@@ -59,6 +64,10 @@ pub struct WorkerConfig {
     /// threshold from the measured DP wall-clock vs the iteration's comm
     /// idle window (see `sched::dynacomm::DynaCommScheduler`).
     pub gain_threshold_ms: f64,
+    /// Preferred wire codec (`net::codec`): proposed to every shard at
+    /// registration; the session falls back to fp32 unless all shards
+    /// agree, so mixed fleets keep training.
+    pub codec: CodecId,
 }
 
 /// Per-run observability, returned to the trainer.
@@ -123,9 +132,23 @@ pub struct EdgeWorker {
     /// owns the per-layer byte-size tables and the slab pool); shared with
     /// the puller/pusher threads, rebuilt only when the plan changes.
     exec: Arc<ExecPlan>,
-    /// The worker's slab pool: reply frames and gradient slabs recycle
-    /// through it across iterations *and* re-plans.
+    /// The worker's slab pool: reply frames, gradient slabs, and codec
+    /// decode scratch recycle through it across iterations *and* re-plans.
     pool: Arc<SlabPool>,
+    /// The wire codec every shard agreed to for this session.
+    codec: CodecId,
+    /// Worker-side per-codec counters (gradient encodes, reply decodes).
+    codec_stats: Arc<CodecStatsTable>,
+}
+
+/// Propose a session codec on one shard connection; returns what the
+/// server agreed to (its fallback is always fp32).
+fn propose_codec(conn: &mut Connection, pref: CodecId) -> Result<CodecId> {
+    conn.send(&Message::CodecPropose { pref })?;
+    match conn.recv()? {
+        Message::CodecAgree { codec } => Ok(codec),
+        m => anyhow::bail!("bad codec agreement: {m:?}"),
+    }
 }
 
 /// Bounded retry-with-backoff for the worker→shard TCP connect: workers
@@ -177,9 +200,37 @@ impl EdgeWorker {
             }
             conns.push(conn);
         }
+        // Negotiate the session's wire codec with every shard: all must
+        // agree on the preference, otherwise the whole worker unifies on
+        // the fp32 fallback (a split-codec worker would need per-shard
+        // byte tables for no benefit).
+        let mut codec = cfg.codec;
+        if codec != CodecId::Fp32 {
+            for conn in conns.iter_mut() {
+                if propose_codec(conn, codec)? != codec {
+                    codec = CodecId::Fp32;
+                    break;
+                }
+            }
+            if codec == CodecId::Fp32 {
+                for conn in conns.iter_mut() {
+                    let agreed = propose_codec(conn, CodecId::Fp32)?;
+                    anyhow::ensure!(
+                        agreed == CodecId::Fp32,
+                        "shard refused the mandatory fp32 fallback"
+                    );
+                }
+            }
+        }
         let layer_bytes: Vec<usize> =
             runtime.manifest.layers.iter().map(|l| l.param_bytes()).collect();
-        let mut profiler = Profiler::new(layer_bytes.clone());
+        // The profiler models *transmissions*, so it is fed wire sizes:
+        // its fitted rate is per wire byte and the reconstructed pt/gt are
+        // codec-aware — exactly what the DP scheduler should re-segment
+        // against when compression shrinks transfers.
+        let wire_layer_bytes: Vec<usize> =
+            layer_bytes.iter().map(|&b| codec.wire_len(b)).collect();
+        let mut profiler = Profiler::new(wire_layer_bytes);
         profiler.enabled = cfg.profiling;
         let scheduler = registry::create_for_with(
             cfg.strategy,
@@ -201,7 +252,8 @@ impl EdgeWorker {
         // or wide-segment plans would re-allocate most slabs every
         // iteration and silently void the zero-allocation contract.
         let pool = SlabPool::with_max_retained(depth + 16);
-        let exec = Arc::new(ExecPlan::compile(&plan, &layer_bytes, shard, pool.clone()));
+        let exec =
+            Arc::new(ExecPlan::compile(&plan, &layer_bytes, shard, pool.clone(), codec));
         Ok(EdgeWorker {
             cfg,
             runtime,
@@ -212,7 +264,20 @@ impl EdgeWorker {
             plan,
             exec,
             pool,
+            codec,
+            codec_stats: Arc::new(CodecStatsTable::new()),
         })
+    }
+
+    /// The wire codec this session negotiated with its shards.
+    pub fn codec(&self) -> CodecId {
+        self.codec
+    }
+
+    /// Worker-side per-codec counters (gradient encodes, reply decodes),
+    /// indexed by [`CodecId::tag`].
+    pub fn codec_stats(&self) -> [CodecStats; 3] {
+        self.codec_stats.snapshot()
     }
 
     pub fn depth(&self) -> usize {
@@ -255,6 +320,7 @@ impl EdgeWorker {
                 &self.exec.layer_bytes,
                 self.shard,
                 self.pool.clone(),
+                self.codec,
             );
             self.exec = Arc::new(exec);
             self.plan = sp.plan;
@@ -313,6 +379,7 @@ impl EdgeWorker {
         }
         let exec_pull = exec.clone();
         let pull_pool = self.pool.clone();
+        let pull_stats = self.codec_stats.clone();
         let puller = std::thread::Builder::new()
             .name(format!("puller-{}", self.cfg.id))
             .spawn(move || -> Result<()> {
@@ -328,23 +395,66 @@ impl EdgeWorker {
                         // layer gets a view of it — no copies on the pull
                         // path, and the frame recycles when the last view
                         // is consumed.
-                        let data = match puller_conns[sub.server].recv_pooled(&pull_pool)? {
-                            RecvMsg::PullReply { data, .. } => data,
-                            m => anyhow::bail!("bad pull reply: {m:?}"),
-                        };
+                        let (rcodec, data) =
+                            match puller_conns[sub.server].recv_pooled(&pull_pool)? {
+                                RecvMsg::PullReply { codec, data, .. } => (codec, data),
+                                m => anyhow::bail!("bad pull reply: {m:?}"),
+                            };
                         anyhow::ensure!(
-                            data.len() == sub.bytes,
+                            rcodec == exec_pull.codec,
+                            "pull reply codec mismatch: got {}, session speaks {}",
+                            rcodec.name(),
+                            exec_pull.codec.name()
+                        );
+                        anyhow::ensure!(
+                            data.len() == sub.wire_bytes,
                             "pull reply size mismatch: got {}, want {}",
                             data.len(),
-                            sub.bytes
+                            sub.wire_bytes
                         );
-                        for sl in &sub.slices {
-                            let _ = param_tx
-                                .send((sl.layer, data.slice(sl.reply_off, sl.len)));
+                        if exec_pull.codec == CodecId::Fp32 {
+                            for sl in &sub.slices {
+                                let _ = param_tx
+                                    .send((sl.layer, data.slice(sl.reply_off, sl.len)));
+                            }
+                        } else {
+                            // Compressed reply: decode each layer's
+                            // encoding into one pooled scratch buffer
+                            // (recycled — the decode path stays
+                            // allocation-free once warm), then hand out
+                            // raw-offset views of the frozen scratch.
+                            let wc = exec_pull.codec.codec();
+                            let mut raw = pull_pool.checkout(sub.bytes);
+                            let td = Instant::now();
+                            for sl in &sub.slices {
+                                wc.decode(
+                                    &data[sl.wire_off..sl.wire_off + sl.wire_len],
+                                    &mut raw,
+                                )?;
+                            }
+                            pull_stats.record_decode(
+                                exec_pull.codec,
+                                sub.bytes,
+                                sub.wire_bytes,
+                                td.elapsed().as_nanos() as u64,
+                            );
+                            anyhow::ensure!(
+                                raw.len() == sub.bytes,
+                                "codec decode size mismatch: got {}, want {}",
+                                raw.len(),
+                                sub.bytes
+                            );
+                            let decoded = raw.freeze();
+                            for sl in &sub.slices {
+                                let _ = param_tx.send((
+                                    sl.layer,
+                                    SlabSlice::new(decoded.clone(), sl.reply_off, sl.len),
+                                ));
+                            }
                         }
                     }
                     let ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let _ = stat_tx.send((seg.bytes, ms));
+                    let _ = stat_tx.send((seg.wire_bytes, ms));
                 }
                 Ok(())
             })?;
@@ -402,17 +512,17 @@ impl EdgeWorker {
                     let t0 = Instant::now();
                     for sub in &seg.subs {
                         // Gather this shard's layers straight from the
-                        // per-layer slabs: the payload is never assembled,
-                        // it goes out vectored.
+                        // per-layer (codec-encoded) slabs: the payload is
+                        // never assembled, it goes out vectored.
                         let mut parts: Vec<&[u8]> = Vec::with_capacity(sub.slices.len());
                         for sl in &sub.slices {
                             let s = &slabs[sl.layer - seg.lo];
                             anyhow::ensure!(
-                                s.len() == sl.len,
+                                s.len() == sl.wire_len,
                                 "layer {} grad slab: got {}, want {}",
                                 sl.layer,
                                 s.len(),
-                                sl.len
+                                sl.wire_len
                             );
                             parts.push(&s[..]);
                         }
@@ -420,6 +530,7 @@ impl EdgeWorker {
                             iter,
                             seg.lo as u32,
                             seg.hi as u32,
+                            exec_push.codec,
                             &parts,
                         )?;
                         match pusher_conns[sub.server].recv()? {
@@ -428,7 +539,7 @@ impl EdgeWorker {
                         }
                     }
                     let ms = t0.elapsed().as_secs_f64() * 1e3;
-                    stats.push((seg.bytes, ms));
+                    stats.push((seg.wire_bytes, ms));
                     // `slabs` drops here → gradient buffers return to the
                     // pool for the next iteration.
                 }
@@ -445,12 +556,29 @@ impl EdgeWorker {
             let gy_shaped = reshape_like_output(&gy, &self.runtime, l);
             let (gw, gb, gx) = self.runtime.layer_bwd(l, w, b, &acts[l], &gy_shaped)?;
             self.profiler.record_bwd(l, t0.elapsed().as_secs_f64() * 1e3);
-            // Encode the layer's gradient slab once, into a pooled buffer
-            // pre-sized from the plan's byte tables.
+            // Flatten the layer's gradient once, into a pooled buffer
+            // pre-sized from the plan's byte tables; under a compressing
+            // codec it is then encoded into a second pre-sized checkout
+            // (both recycle — the raw scratch returns to the pool here).
             let mut flat = exec.checkout_layer(l);
             gw.extend_le_bytes(&mut flat);
             gb.extend_le_bytes(&mut flat);
-            pending[l] = Some(flat);
+            pending[l] = Some(if exec.codec == CodecId::Fp32 {
+                flat
+            } else {
+                let wc = exec.codec.codec();
+                let mut wire = exec.checkout_layer_wire(l);
+                let te = Instant::now();
+                let err = wc.encode(&flat, &mut wire);
+                self.codec_stats.record_encode(
+                    exec.codec,
+                    flat.len(),
+                    wire.len(),
+                    te.elapsed().as_nanos() as u64,
+                    err,
+                );
+                wire
+            });
             gy = gx;
             // Segment complete once we've computed down to its low layer.
             if let Some((si, seg)) = cur_seg {
@@ -482,18 +610,34 @@ impl EdgeWorker {
     /// reply, no intermediate per-layer buffers.
     pub fn pull_params(&mut self, iter: u64) -> Result<Vec<(Tensor, Tensor)>> {
         let depth = self.depth();
+        let wc = self.codec.codec();
         let mut out: Vec<Option<(Tensor, Tensor)>> = vec![None; depth];
+        let mut scratch = Vec::new();
         for srv in 0..self.shard.servers {
             self.conns[srv].send(&Message::Pull { iter, lo: 0, hi: depth as u32 - 1 })?;
-            let data = match self.conns[srv].recv()? {
-                Message::PullReply { data, .. } => data,
+            let (rcodec, data) = match self.conns[srv].recv()? {
+                Message::PullReply { codec, data, .. } => (codec, data),
                 m => anyhow::bail!("bad pull reply: {m:?}"),
             };
+            anyhow::ensure!(
+                rcodec == self.codec,
+                "pull reply codec mismatch: got {}, session speaks {}",
+                rcodec.name(),
+                self.codec.name()
+            );
             let mut off = 0;
             for l in self.shard.owned_by(srv) {
-                let n = self.exec.layer_bytes[l];
+                let n = self.exec.wire_layer_bytes[l];
                 anyhow::ensure!(off + n <= data.len(), "short pull reply");
-                out[l] = Some(self.split_params(l, &data[off..off + n])?);
+                out[l] = Some(if self.codec == CodecId::Fp32 {
+                    // Uncompressed: split straight out of the reply, no
+                    // intermediate per-layer buffer.
+                    self.split_params(l, &data[off..off + n])?
+                } else {
+                    scratch.clear();
+                    wc.decode(&data[off..off + n], &mut scratch)?;
+                    self.split_params(l, &scratch)?
+                });
                 off += n;
             }
         }

@@ -117,6 +117,22 @@ pub fn eval_backward(cv: &CostVectors, d: &Decomposition) -> PassBreakdown {
     }
 }
 
+/// Codec-aware transmission-time estimate: milliseconds to move a raw f32
+/// payload of `raw_bytes` over a link shipping `bytes_per_ms`, after the
+/// wire codec's compression ([`crate::net::codec::CodecId::wire_bytes_f64`]
+/// gives the exact encoded size). This is the single place the scheduler's
+/// cost inputs convert bytes into time — `models::ModelSpec::cost_vectors`
+/// builds its pt/gt through it, and the live profiler reaches the same
+/// result by being fed wire byte counts — so when the codec changes, the
+/// DP re-segments against *compressed* transfer costs.
+pub fn transmission_ms(
+    codec: crate::net::codec::CodecId,
+    raw_bytes: f64,
+    bytes_per_ms: f64,
+) -> f64 {
+    codec.wire_bytes_f64(raw_bytes) / bytes_per_ms
+}
+
 /// No forward schedule can finish before every parameter crosses the link
 /// (at least one mini-procedure pays `Δt`, and the link serializes all of
 /// `pt`) or before every layer computes: `max(Δt + Σ pt, Σ fc)`. Property-
@@ -300,6 +316,56 @@ mod tests {
         let d = Decomposition::sequential(2);
         assert!((eval_forward(&cv, &d).total - forward_lower_bound(&cv)).abs() < 1e-9);
         assert!((eval_backward(&cv, &d).total - backward_lower_bound(&cv)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn transmission_ms_scales_with_the_codec() {
+        use crate::net::codec::CodecId;
+        let raw = 4.0 * 1e6; // 1M f32 elements
+        let fp32 = transmission_ms(CodecId::Fp32, raw, 1000.0);
+        let fp16 = transmission_ms(CodecId::Fp16, raw, 1000.0);
+        let int8 = transmission_ms(CodecId::Int8, raw, 1000.0);
+        assert_eq!(fp32, raw / 1000.0);
+        assert_eq!(fp16, fp32 / 2.0);
+        // int8 is ~26% of fp32 (1 byte/elem + 8-byte chunk headers).
+        assert!(int8 < 0.27 * fp32 && int8 > 0.24 * fp32, "{int8} vs {fp32}");
+    }
+
+    /// The acceptance property: feeding the DP *compressed* byte counts
+    /// changes its decomposition on at least one paper model profile (and
+    /// never worsens the predicted pass time — smaller pt/gt can only
+    /// help).
+    #[test]
+    fn int8_compression_re_segments_the_dynacomm_plan() {
+        use crate::config::SystemConfig;
+        use crate::net::codec::CodecId;
+        use crate::sched::dynacomm;
+        let mut changed = 0usize;
+        for model in crate::models::paper_models() {
+            let mut cfg = SystemConfig::default();
+            cfg.codec = CodecId::Fp32;
+            let cv32 = model.cost_vectors(&cfg);
+            cfg.codec = CodecId::Int8;
+            let cv8 = model.cost_vectors(&cfg);
+            // The codec-aware inputs really are compressed.
+            let sum = |v: &[f64]| v.iter().sum::<f64>();
+            assert!(sum(&cv8.pt) < 0.3 * sum(&cv32.pt), "{}", model.name);
+            assert_eq!(cv8.fc, cv32.fc, "compute costs must not change");
+
+            let (f32_plan, f32_t) = dynacomm::forward_with_value(&cv32);
+            let (i8_plan, i8_t) = dynacomm::forward_with_value(&cv8);
+            let (b32_plan, b32_t) = dynacomm::backward_with_value(&cv32);
+            let (b8_plan, b8_t) = dynacomm::backward_with_value(&cv8);
+            assert!(i8_t <= f32_t + 1e-9, "{}: int8 fwd slower", model.name);
+            assert!(b8_t <= b32_t + 1e-9, "{}: int8 bwd slower", model.name);
+            if f32_plan != i8_plan || b32_plan != b8_plan {
+                changed += 1;
+            }
+        }
+        assert!(
+            changed > 0,
+            "int8 never changed a DynaComm segmentation on any paper model"
+        );
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::collections::HashMap;
 use anyhow::{Context, Result};
 
 use crate::config::Strategy;
+use crate::net::codec::CodecId;
 use crate::net::{LinkShaper, ShaperSpec};
 use crate::ps::{
     server::{ParamServer, ServerConfig},
@@ -47,6 +48,10 @@ pub struct TrainConfig {
     /// auto-tunes the threshold from the measured DP wall-clock vs the
     /// iteration's comm idle window. An explicit value overrides AUTO.
     pub gain_threshold_ms: f64,
+    /// Wire codec for parameter/gradient transfers (`--codec`): every
+    /// worker proposes it at registration and the whole fleet falls back
+    /// to fp32 on any mismatch (`net::codec`).
+    pub codec: CodecId,
 }
 
 impl Default for TrainConfig {
@@ -66,6 +71,7 @@ impl Default for TrainConfig {
             seed: 0,
             val_batches: 4,
             gain_threshold_ms: crate::sched::dynacomm::GAIN_THRESHOLD_AUTO,
+            codec: CodecId::Fp32,
         }
     }
 }
@@ -150,6 +156,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
             profiling: cfg.profiling,
             reschedule_every: cfg.iters_per_epoch,
             gain_threshold_ms: cfg.gain_threshold_ms,
+            codec: cfg.codec,
         };
         let ds = dataset.clone();
         let want_params = w == 0;

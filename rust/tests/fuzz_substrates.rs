@@ -2,6 +2,7 @@
 //! parser and the wire protocol must never panic on arbitrary bytes and
 //! must round-trip everything they produce.
 
+use dynacomm::net::codec::CodecId;
 use dynacomm::net::Message;
 use dynacomm::util::json::Json;
 use dynacomm::util::rng::Rng;
@@ -70,14 +71,17 @@ fn json_parser_never_panics_on_mutated_valid_input() {
 }
 
 fn random_message(rng: &mut Rng) -> Message {
-    // Tensor payloads are opaque byte slabs on the wire; the only protocol
-    // invariant is f32 alignment (length divisible by 4).
-    let n = 4 * rng.below(200);
+    // Tensor payloads are opaque byte slabs on the wire; the protocol
+    // invariant is that the slab length is valid for the frame's codec tag
+    // (fp32: 4-aligned, fp16: 2-aligned, int8: valid chunked framing) —
+    // `CodecId::wire_len` produces such a length for any element count.
+    let codec = CodecId::ALL[rng.below(3)];
+    let n = codec.wire_len(4 * rng.below(200));
     let data: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
-    match rng.below(7) {
+    match rng.below(9) {
         0 => Message::Pull { iter: rng.next_u64(), lo: rng.below(100) as u32, hi: rng.below(100) as u32 },
-        1 => Message::PullReply { iter: rng.next_u64(), lo: 0, hi: 5, data },
-        2 => Message::Push { iter: rng.next_u64(), lo: 1, hi: 3, data },
+        1 => Message::PullReply { iter: rng.next_u64(), lo: 0, hi: 5, codec, data },
+        2 => Message::Push { iter: rng.next_u64(), lo: 1, hi: 3, codec, data },
         3 => Message::PushAck { iter: rng.next_u64(), lo: 0, hi: 0 },
         4 => Message::Hello {
             worker: rng.below(64) as u32,
@@ -87,6 +91,8 @@ fn random_message(rng: &mut Rng) -> Message {
             workers: rng.below(64) as u32,
             version: rng.below(1 << 16) as u16,
         },
+        6 => Message::CodecPropose { pref: CodecId::ALL[rng.below(3)] },
+        7 => Message::CodecAgree { codec: CodecId::ALL[rng.below(3)] },
         _ => Message::Shutdown,
     }
 }
