@@ -19,13 +19,25 @@ fn main() -> anyhow::Result<()> {
 
     println!(
         "== {} | {} layers | batch {} | {} Gbps nominal | Δt = {:.1} ms | \
-         codec {} ==\n",
+         codec {} | sync {} ==",
         model.name,
         model.depth(),
         cfg.batch,
         cfg.net.bandwidth_gbps,
         cv.delta_t,
-        cfg.codec.name()
+        cfg.codec.name(),
+        cfg.sync.name()
+    );
+    // Sync modes (`--sync {bsp,ssp,asp}`, docs/SYNC.md): the schedules
+    // below overlap communication *within* one worker's iteration; on a
+    // heterogeneous fleet the synchronization model decides how much one
+    // slow worker stalls the others. bsp is the paper's full barrier, ssp
+    // bounds staleness at `--staleness-bound N` iterations, asp never
+    // gates — sweep them against straggler severity with the
+    // schedule_sensitivity example or `dynacomm train --sync ...`.
+    println!(
+        "   (sync modes: bsp barrier | ssp bounded staleness | asp async — \
+         see docs/SYNC.md)\n"
     );
 
     let seq_total = sim::simulate_cv(&cv, Strategy::Sequential).total_ms();

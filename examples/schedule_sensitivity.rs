@@ -9,6 +9,8 @@
 
 use dynacomm::config::{Strategy, SystemConfig};
 use dynacomm::models;
+use dynacomm::ps::sync::SyncMode;
+use dynacomm::sim::straggler::StragglerCluster;
 use dynacomm::sim::{reduced_ratio, sweep};
 use dynacomm::util::cli::Args;
 
@@ -77,6 +79,39 @@ fn main() -> anyhow::Result<()> {
             r.sched.plan.fwd.num_transmissions(),
             r.sched.plan.bwd.num_transmissions(),
             r.total_ms(),
+        );
+    }
+
+    // Sync-mode × straggler-severity sweep (ps/sync, ACE-Sync-style): the
+    // DP can only re-segment *within* an iteration; when one worker runs
+    // 2-8× slow, the BSP barrier stalls the whole fleet and the remaining
+    // lever is the synchronization model. Cells are iteration-throughput
+    // speedups over BSP on this model's simulated iteration time (8
+    // workers, one straggler, horizon = 8 slowest-iterations, SSP bound
+    // from --staleness-bound, default 4).
+    let iter_ms =
+        dynacomm::sim::simulate_cv(&model.cost_vectors(&cfg), Strategy::DynaComm).total_ms();
+    let bound = if cfg.staleness_bound > 0 { cfg.staleness_bound } else { 4 };
+    let workers = cfg.workers.max(2);
+    println!("\nsync-mode x straggler sweep (speedup vs bsp, {workers} workers):");
+    println!(
+        "{:<10} {:>10} {:>16} {:>10} {:>14}",
+        "slowdown",
+        "bsp",
+        format!("ssp(N={bound})"),
+        "asp",
+        "ssp max-lead"
+    );
+    for severity in [1.0, 2.0, 4.0, 8.0] {
+        let c = StragglerCluster::one_straggler(iter_ms, workers, severity);
+        let ssp = c.throughput(SyncMode::Ssp, bound, 8);
+        println!(
+            "{:<10} {:>10.2} {:>16.2} {:>10.2} {:>14.1}",
+            format!("{severity}x"),
+            c.speedup_vs_bsp(SyncMode::Bsp, 0, 8),
+            c.speedup_vs_bsp(SyncMode::Ssp, bound, 8),
+            c.speedup_vs_bsp(SyncMode::Asp, 0, 8),
+            ssp.max_lead,
         );
     }
     Ok(())

@@ -35,8 +35,9 @@ use std::time::Instant;
 
 use dynacomm::figures;
 use dynacomm::net::codec::CodecId;
-use dynacomm::net::{slab, Connection, Message};
-use dynacomm::ps::{ParamServer, ServerConfig};
+use dynacomm::net::{slab, Connection, Message, PROTOCOL_VERSION};
+use dynacomm::ps::sync::{SyncConfig, SyncMode};
+use dynacomm::ps::{ParamServer, ServerConfig, ServerOptions};
 use dynacomm::util::json::Json;
 
 const LAYERS: usize = 8;
@@ -150,6 +151,99 @@ fn drive_bsp(addr: std::net::SocketAddr, workers: usize, start: u64, end: u64) -
     t0.elapsed().as_secs_f64()
 }
 
+/// One straggler-matrix worker: registered (`Hello` + `SyncPropose`), a
+/// per-iteration compute sleep, full-range pull + zero-gradient push per
+/// iteration. Returns the max staleness observed (`iter − applied`).
+fn straggler_worker(
+    addr: std::net::SocketAddr,
+    worker: u32,
+    mode: SyncMode,
+    bound: u32,
+    iters: u64,
+    compute_ms: u64,
+) -> u64 {
+    let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+    conn.send(&Message::Hello { worker, version: PROTOCOL_VERSION }).unwrap();
+    assert!(matches!(conn.recv().unwrap(), Message::HelloAck { .. }));
+    conn.send(&Message::SyncPropose { mode, bound }).unwrap();
+    assert!(matches!(conn.recv().unwrap(), Message::SyncAgree { .. }));
+    let grad = vec![0.0f32; LAYER_F32S * LAYERS];
+    let mut max_stale = 0u64;
+    for iter in 0..iters {
+        conn.send(&Message::Pull { iter, lo: 0, hi: LAYERS as u32 - 1 }).unwrap();
+        match conn.recv().unwrap() {
+            Message::PullReply { applied, .. } => {
+                max_stale = max_stale.max(iter.saturating_sub(applied));
+            }
+            m => panic!("{m:?}"),
+        }
+        std::thread::sleep(std::time::Duration::from_millis(compute_ms));
+        conn.send(&Message::Push {
+            iter,
+            lo: 0,
+            hi: LAYERS as u32 - 1,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&grad),
+        })
+        .unwrap();
+        assert!(matches!(conn.recv().unwrap(), Message::PushAck { .. }));
+    }
+    max_stale
+}
+
+/// One straggler-matrix cell: `WORKERS` workers with one 4×-slowed
+/// straggler under `mode`. The straggler runs `k_slow` iterations; under
+/// the relaxed modes the fast workers run as far as the mode allows
+/// (`k_slow − 1 + bound` under SSP — the gate's admission horizon once
+/// the straggler's clock stops — and the full 4× multiple under ASP), so
+/// the cell measures exactly what the consistency model recovers.
+/// Returns (aggregate iters/sec, max staleness observed).
+fn drive_straggler(mode: SyncMode, bound: u32, k_slow: u64, fast_ms: u64) -> (f64, u64) {
+    const SLOWDOWN: u64 = 4;
+    let srv = ParamServer::start_with(
+        ServerConfig { workers: WORKERS, lr: 0.1 },
+        layer_init(),
+        None,
+        ServerOptions {
+            sync: SyncConfig::new(mode, bound).unwrap(),
+            ..ServerOptions::default()
+        },
+    )
+    .unwrap();
+    let addr = srv.handle().addr;
+    let fast_iters = match mode {
+        SyncMode::Bsp => k_slow,
+        SyncMode::Ssp => k_slow - 1 + bound as u64,
+        SyncMode::Asp => k_slow * SLOWDOWN,
+    };
+    let barrier = Arc::new(Barrier::new(WORKERS + 1));
+    let mut threads = Vec::new();
+    for w in 0..WORKERS as u32 {
+        let barrier = barrier.clone();
+        threads.push(std::thread::spawn(move || {
+            let (iters, compute) = if w == 0 {
+                (k_slow, fast_ms * SLOWDOWN)
+            } else {
+                (fast_iters, fast_ms)
+            };
+            barrier.wait();
+            (iters, straggler_worker(addr, w, mode, bound, iters, compute))
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    let mut total_iters = 0u64;
+    let mut max_stale = 0u64;
+    for t in threads {
+        let (iters, stale) = t.join().unwrap();
+        total_iters += iters;
+        max_stale = max_stale.max(stale);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    drop(srv);
+    (total_iters as f64 / secs, max_stale)
+}
+
 /// One legacy handler: framed recv, per-pull assembly into a **fresh**
 /// buffer, full-copy `encode_into`, `write_all` — the pre-change server's
 /// exact per-byte work.
@@ -179,7 +273,7 @@ fn legacy_conn(mut stream: TcpStream, params: &HashMap<usize, Vec<u8>>) {
                 data.extend_from_slice(p);
             }
         }
-        Message::PullReply { iter, lo, hi, codec: CodecId::Fp32, data }
+        Message::PullReply { iter, lo, hi, applied: iter, codec: CodecId::Fp32, data }
             .encode_into(&mut scratch);
         if stream.write_all(&scratch).is_err() {
             return;
@@ -310,6 +404,43 @@ fn main() {
         drop(srv);
     }
 
+    // --- Straggler sync matrix: one 4×-slowed worker × {bsp,ssp,asp}. ---
+    // The acceptance row: with one straggler, SSP iteration throughput
+    // must recover ≥ 1.5× BSP while every reply stays within the
+    // staleness bound (checked worker-side off the v4 `applied` field).
+    struct SyncRow {
+        mode: SyncMode,
+        iters_per_sec: f64,
+        speedup_vs_bsp: f64,
+        max_staleness: u64,
+        bound: u32,
+    }
+    let (k_slow, fast_ms) = if common::fast_mode() { (4u64, 8u64) } else { (4, 15) };
+    let ssp_bound = 8u32;
+    let mut sync_rows: Vec<SyncRow> = Vec::new();
+    for mode in SyncMode::ALL {
+        let bound = if mode == SyncMode::Ssp { ssp_bound } else { 0 };
+        let (ips, stale) = drive_straggler(mode, bound, k_slow, fast_ms);
+        let bsp_ips = sync_rows.first().map(|r| r.iters_per_sec).unwrap_or(ips);
+        sync_rows.push(SyncRow {
+            mode,
+            iters_per_sec: ips,
+            speedup_vs_bsp: ips / bsp_ips,
+            max_staleness: stale,
+            bound,
+        });
+    }
+    assert!(
+        sync_rows[1].speedup_vs_bsp >= 1.5,
+        "ssp recovered only {:.2}x over bsp with a 4x straggler",
+        sync_rows[1].speedup_vs_bsp
+    );
+    assert!(
+        sync_rows[1].max_staleness <= ssp_bound as u64,
+        "ssp staleness {} broke the bound {ssp_bound}",
+        sync_rows[1].max_staleness
+    );
+
     // --- Legacy path: per-worker assembly + full-copy encode. ---
     let (laddr, stop) = legacy_server(layers);
     drive_pulls(laddr, 1, 2);
@@ -360,6 +491,21 @@ fn main() {
             row.max_quant_error,
         );
     }
+    println!(
+        "  straggler matrix ({WORKERS} workers, 1 at 4x, {k_slow} straggler \
+         iters, ssp bound {ssp_bound}):"
+    );
+    for row in &sync_rows {
+        println!(
+            "    {:<4} {:>8.1} iters/s  ({:.2}x vs bsp, target ssp >= 1.5x)  \
+             max-staleness {} (bound {})",
+            row.mode.name(),
+            row.iters_per_sec,
+            row.speedup_vs_bsp,
+            row.max_staleness,
+            row.bound,
+        );
+    }
 
     let json = Json::obj(vec![
         ("workers", Json::Num(WORKERS as f64)),
@@ -404,6 +550,24 @@ fn main() {
                             ("reply_cache_hit_rate", Json::Num(row.hit_rate)),
                             ("steady_state_allocs", Json::Num(row.steady_allocs as f64)),
                             ("max_quant_error", Json::Num(row.max_quant_error)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "sync_matrix",
+            Json::Arr(
+                sync_rows
+                    .iter()
+                    .map(|row| {
+                        Json::obj(vec![
+                            ("sync", Json::Str(row.mode.name().to_string())),
+                            ("straggler_slowdown", Json::Num(4.0)),
+                            ("iters_per_sec", Json::Num(row.iters_per_sec)),
+                            ("speedup_vs_bsp", Json::Num(row.speedup_vs_bsp)),
+                            ("max_staleness", Json::Num(row.max_staleness as f64)),
+                            ("staleness_bound", Json::Num(row.bound as f64)),
                         ])
                     })
                     .collect(),

@@ -85,6 +85,7 @@ fn main() {
         iter: 7,
         lo: 0,
         hi: 5,
+        applied: 7,
         codec: dynacomm::net::codec::CodecId::Fp32,
         data: slab::from_f32s(&values),
     };
@@ -100,10 +101,11 @@ fn main() {
 
     // Cross-check: both paths carry the same 16 MiB of tensor bytes and
     // decode back to the original values. (The count-field semantics
-    // differ — elements vs bytes — so each frame is decoded by its own
-    // decoder.)
-    assert_eq!(scratch.len(), frame.len(), "frame sizes diverged");
-    assert_eq!(scratch[25..], frame[25..], "tensor bytes diverged");
+    // differ — elements vs bytes — and the v4 reply header carries the
+    // extra `applied: u64`, so each frame is decoded by its own decoder
+    // and the tensor bytes are compared at their respective offsets.)
+    assert_eq!(scratch.len(), frame.len() + 8, "v4 header adds exactly `applied`");
+    assert_eq!(scratch[33..], frame[25..], "tensor bytes diverged");
     let (_, _, _, legacy_values) = legacy_decode(&frame[4..]);
     assert_eq!(legacy_values, values);
     match Message::decode(&scratch[4..]).unwrap() {

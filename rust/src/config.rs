@@ -4,6 +4,7 @@
 //! or CLI flags and default to the paper's testbed (Section V-A).
 
 use crate::net::codec::CodecId;
+use crate::ps::sync::SyncMode;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -140,6 +141,14 @@ pub struct SystemConfig {
     /// (compressed transfers widen the overlap window, so the DP
     /// re-segments).
     pub codec: CodecId,
+    /// Parameter-server synchronization mode (`ps::sync`,
+    /// `--sync {bsp,ssp,asp}`): BSP is the paper's barrier; SSP/ASP relax
+    /// it for heterogeneous fleets (the straggler model in
+    /// `sim::straggler` scores the trade).
+    pub sync: SyncMode,
+    /// SSP staleness bound (`--staleness-bound`): iterations a worker may
+    /// run ahead of the slowest. Must be 0 outside SSP.
+    pub staleness_bound: u32,
 }
 
 /// Parse a `gain-threshold-ms` spelling: `auto` (case-insensitive) or a
@@ -164,6 +173,8 @@ impl Default for SystemConfig {
             strategy: Strategy::DynaComm,
             gain_threshold_ms: crate::sched::dynacomm::GAIN_THRESHOLD_AUTO,
             codec: CodecId::Fp32,
+            sync: SyncMode::Bsp,
+            staleness_bound: 0,
         }
     }
 }
@@ -202,6 +213,14 @@ impl SystemConfig {
             self.codec = CodecId::parse(s)
                 .unwrap_or_else(|| panic!("unknown codec '{s}' (fp32|fp16|int8)"));
         }
+        if let Some(s) = args.get("sync") {
+            self.sync = SyncMode::parse(s)
+                .unwrap_or_else(|| panic!("unknown sync mode '{s}' (bsp|ssp|asp)"));
+        }
+        self.staleness_bound =
+            args.usize("staleness-bound", self.staleness_bound as usize) as u32;
+        crate::ps::sync::SyncConfig::new(self.sync, self.staleness_bound)
+            .unwrap_or_else(|e| panic!("{e}"));
         self
     }
 
@@ -238,6 +257,12 @@ impl SystemConfig {
             c.codec = CodecId::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown codec '{s}'"))?;
         }
+        if let Some(s) = j.get("sync").and_then(Json::as_str) {
+            c.sync = SyncMode::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown sync mode '{s}'"))?;
+        }
+        c.staleness_bound = num("staleness_bound", c.staleness_bound as f64) as u32;
+        crate::ps::sync::SyncConfig::new(c.sync, c.staleness_bound)?;
         Ok(c)
     }
 
@@ -254,6 +279,8 @@ impl SystemConfig {
             ("batch", Json::Num(self.batch as f64)),
             ("strategy", Json::Str(self.strategy.name().to_string())),
             ("codec", Json::Str(self.codec.name().to_string())),
+            ("sync", Json::Str(self.sync.name().to_string())),
+            ("staleness_bound", Json::Num(self.staleness_bound as f64)),
             (
                 "gain_threshold_ms",
                 if self.gain_threshold_ms < 0.0 {
@@ -333,6 +360,27 @@ mod tests {
         assert_eq!(c.codec, CodecId::Fp16);
         // Default stays the uncompressed wire format.
         assert_eq!(SystemConfig::default().codec, CodecId::Fp32);
+    }
+
+    #[test]
+    fn sync_knobs_roundtrip_and_validate() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.sync, SyncMode::Bsp);
+        assert_eq!(c.staleness_bound, 0);
+        c.sync = SyncMode::Ssp;
+        c.staleness_bound = 4;
+        let j = c.to_json();
+        let back = SystemConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        // Flags overlay.
+        let args = Args::parse(
+            ["--sync", "asp"].iter().map(|s| s.to_string()),
+        );
+        let c = SystemConfig::default().apply_args(&args);
+        assert_eq!(c.sync, SyncMode::Asp);
+        // A bound outside SSP is refused at config load, not at run time.
+        let bad = r#"{"sync":"bsp","staleness_bound":3}"#;
+        assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 
     #[test]

@@ -57,6 +57,16 @@ FLAGS (defaults = the paper's testbed):
   --strategy S          sequential|lbl|ibatch|dynacomm (registry shim names)
   --codec C             wire codec fp32|fp16|int8 (compressed transfers;
                         the scheduler costs transmissions at wire size)
+  --sync M              parameter-server synchronization bsp|ssp|asp
+                        (ps/sync): bsp is the paper's full barrier; ssp
+                        lets workers run up to --staleness-bound N
+                        iterations ahead of the slowest (stragglers stop
+                        stalling the fleet, snapshots stay within N); asp
+                        applies every push immediately, no gating at all
+  --staleness-bound N   ssp staleness window, iterations (0 outside ssp)
+  --handler-threads N   per-shard handler pool cap; extra connections wait
+                        in the accept backlog (backpressure) (train)
+  --no-error-feedback   disable EF-SGD residuals for lossy codecs (train)
   --gain-threshold-ms F skip DynaComm's DP re-plan when the predicted gain
                         is under F ms (0 = re-plan every epoch; `auto`, the
                         default, derives F from the measured DP wall-clock
@@ -172,6 +182,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(s) = args.get("codec") {
         cfg.codec = dynacomm::net::codec::CodecId::parse(s).context("bad --codec")?;
     }
+    if let Some(s) = args.get("sync") {
+        cfg.sync = dynacomm::ps::sync::SyncMode::parse(s).context("bad --sync")?;
+    }
+    cfg.staleness_bound =
+        args.usize("staleness-bound", cfg.staleness_bound as usize) as u32;
+    cfg.handler_threads = args.usize("handler-threads", cfg.handler_threads);
+    cfg.error_feedback = !args.bool("no-error-feedback");
     let result = train(&cfg)?;
     for (e, ((loss, acc), ms)) in result
         .epoch_loss
@@ -189,6 +206,21 @@ fn cmd_train(args: &Args) -> Result<()> {
     let calls: usize = result.per_worker.iter().map(|r| r.sched_ms.len()).sum();
     let reused: usize = result.per_worker.iter().map(|r| r.sched_reused).sum();
     println!("reschedule calls={calls} cached-plan reuses={reused}");
+    if cfg.sync != dynacomm::ps::sync::SyncMode::Bsp {
+        // The consistency cost of the relaxed sync mode, as measured from
+        // the v4 `applied` field on every pull reply.
+        let max_stale: u64 = result
+            .per_worker
+            .iter()
+            .flat_map(|r| r.staleness.iter().copied())
+            .max()
+            .unwrap_or(0);
+        println!(
+            "sync={} staleness-bound={} max-observed-staleness={max_stale}",
+            cfg.sync.name(),
+            cfg.staleness_bound
+        );
+    }
     Ok(())
 }
 

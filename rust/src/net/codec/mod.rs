@@ -26,6 +26,11 @@
 //! [`WireCodec::wire_len`] is an exact pure function of the raw size —
 //! and int8 chunking restarts at each layer boundary.
 //!
+//! Lossy codecs pair with EF-SGD error feedback ([`ef::ErrorFeedback`]):
+//! the worker folds a per-layer residual into each gradient before
+//! quantizing and banks the new quantization error, so rounding bias is
+//! delayed instead of dropped.
+//!
 //! The codec in effect is negotiated per session at registration time
 //! (`CodecPropose`/`CodecAgree` frames, see `docs/WIRE.md`): the worker
 //! proposes its preference, the server answers with that codec if it
@@ -35,6 +40,7 @@
 //! in the top 2 bits of the slab-length field, which keeps fp32 frames
 //! byte-identical to v2.
 
+pub mod ef;
 pub mod fp16;
 pub mod int8;
 

@@ -15,10 +15,15 @@
 //! contiguous encoding ([`Message::encode_into`]), which is kept as the
 //! reference implementation the property tests compare against.
 //!
-//! Protocol v3 adds negotiated wire codecs ([`crate::net::codec`]): tensor
-//! slabs may be fp16- or int8-compressed, with the codec id carried in the
-//! top 2 bits of the slab-length field — fp32 sessions stay byte-identical
-//! to v2 on every data-plane frame.
+//! Protocol v3 added negotiated wire codecs ([`crate::net::codec`]):
+//! tensor slabs may be fp16- or int8-compressed, with the codec id carried
+//! in the top 2 bits of the slab-length field. Protocol v4 adds the
+//! synchronization subsystem's wire surface ([`crate::ps::sync`]):
+//! `PullReply` carries the `applied` iteration of the snapshot it serves
+//! (the staleness signal SSP/ASP workers measure), and the
+//! `SyncPropose`/`SyncAgree` registration frames fail mismatched
+//! worker/server sync configurations loudly. fp32 `Push` frames remain
+//! byte-identical to v2.
 
 use std::io::{IoSlice, Read, Write};
 use std::net::TcpStream;
@@ -28,6 +33,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::net::codec::CodecId;
 use crate::net::pool::{SlabPool, SlabSlice};
+use crate::ps::sync::SyncMode;
 
 /// Hard ceiling on a frame's payload size (corruption guard). Also bounds
 /// tensor slabs to 30 bits, which is what frees the top 2 bits of the
@@ -53,14 +59,16 @@ fn slab_len_field(codec: CodecId, len: usize) -> u32 {
 const RECV_RETAIN_MAX: usize = 16 << 20;
 
 /// Version of the wire protocol this build speaks (`docs/WIRE.md`; v1 was
-/// the unversioned slab protocol, v2 added versioned registration). v3
-/// adds negotiated wire codecs: `CodecPropose`/`CodecAgree` registration
-/// frames and a codec tag in the tensor slab-length field — a v3 fp32
-/// session is byte-identical to v2 on every data-plane frame, but v2 peers
-/// would misparse fp16/int8-tagged slabs, so the version is bumped and
+/// the unversioned slab protocol, v2 added versioned registration, v3
+/// added negotiated wire codecs). v4 adds the pluggable synchronization
+/// subsystem's surface: `PullReply` gains an `applied: u64` field (the
+/// server's applied iteration for the served snapshot — how SSP/ASP
+/// workers measure staleness) and the `SyncPropose`/`SyncAgree`
+/// registration frames carry the sync mode + staleness bound. A v3 peer
+/// would misparse the widened `PullReply`, so the version is bumped and
 /// mixed deployments fail loudly at registration time: the server rejects
 /// a mismatched `Hello`, and the worker rejects a mismatched `HelloAck`.
-pub const PROTOCOL_VERSION: u16 = 3;
+pub const PROTOCOL_VERSION: u16 = 4;
 
 /// Protocol messages between edge workers and parameter servers (owned
 /// form; [`MessageRef`] is the borrowed-payload twin the hot path uses).
@@ -71,7 +79,10 @@ pub enum Message {
     /// Server → worker: the parameters as one byte slab — each owned
     /// layer's `w‖b` data encoded per layer by `codec`
     /// ([`crate::net::codec`]), concatenated in ascending layer order.
-    PullReply { iter: u64, lo: u32, hi: u32, codec: CodecId, data: Vec<u8> },
+    /// `applied` (v4) is the oldest applied iteration among the served
+    /// layers: `== iter` under BSP, and the staleness signal under
+    /// SSP/ASP, where the snapshot is whatever the server last applied.
+    PullReply { iter: u64, lo: u32, hi: u32, applied: u64, codec: CodecId, data: Vec<u8> },
     /// Worker → server: gradients of layers `[lo, hi]` for `iter`, as a
     /// byte slab with the same layout as [`Message::PullReply`].
     Push { iter: u64, lo: u32, hi: u32, codec: CodecId, data: Vec<u8> },
@@ -85,6 +96,14 @@ pub enum Message {
     /// if the server supports it, [`CodecId::Fp32`] otherwise, so mixed
     /// fleets keep training.
     CodecAgree { codec: CodecId },
+    /// Worker → server (v4, after the `Hello` handshake): announce the
+    /// synchronization mode + staleness bound the worker was configured
+    /// for. Unlike codecs there is no safe fallback between consistency
+    /// models, so the server answers with its *own* configuration and the
+    /// worker refuses the session on mismatch.
+    SyncPropose { mode: SyncMode, bound: u32 },
+    /// Server → worker: the shard's authoritative sync configuration.
+    SyncAgree { mode: SyncMode, bound: u32 },
     /// Worker → server: register with a worker id, announcing the
     /// worker's [`PROTOCOL_VERSION`].
     Hello { worker: u32, version: u16 },
@@ -112,13 +131,16 @@ impl Message {
             Message::Pull { iter, lo, hi } => {
                 MessageRef::Pull { iter: *iter, lo: *lo, hi: *hi }
             }
-            Message::PullReply { iter, lo, hi, codec, data } => MessageRef::PullReply {
-                iter: *iter,
-                lo: *lo,
-                hi: *hi,
-                codec: *codec,
-                data: data.as_slice(),
-            },
+            Message::PullReply { iter, lo, hi, applied, codec, data } => {
+                MessageRef::PullReply {
+                    iter: *iter,
+                    lo: *lo,
+                    hi: *hi,
+                    applied: *applied,
+                    codec: *codec,
+                    data: data.as_slice(),
+                }
+            }
             Message::Push { iter, lo, hi, codec, data } => MessageRef::Push {
                 iter: *iter,
                 lo: *lo,
@@ -131,6 +153,12 @@ impl Message {
             }
             Message::CodecPropose { pref } => MessageRef::CodecPropose { pref: *pref },
             Message::CodecAgree { codec } => MessageRef::CodecAgree { codec: *codec },
+            Message::SyncPropose { mode, bound } => {
+                MessageRef::SyncPropose { mode: *mode, bound: *bound }
+            }
+            Message::SyncAgree { mode, bound } => {
+                MessageRef::SyncAgree { mode: *mode, bound: *bound }
+            }
             Message::Hello { worker, version } => {
                 MessageRef::Hello { worker: *worker, version: *version }
             }
@@ -161,8 +189,15 @@ impl Message {
                 buf.extend_from_slice(&lo.to_le_bytes());
                 buf.extend_from_slice(&hi.to_le_bytes());
             }
-            Message::PullReply { iter, lo, hi, codec, data }
-            | Message::Push { iter, lo, hi, codec, data } => {
+            Message::PullReply { iter, lo, hi, applied, codec, data } => {
+                buf.extend_from_slice(&iter.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&hi.to_le_bytes());
+                buf.extend_from_slice(&applied.to_le_bytes());
+                buf.extend_from_slice(&slab_len_field(*codec, data.len()).to_le_bytes());
+                buf.extend_from_slice(data);
+            }
+            Message::Push { iter, lo, hi, codec, data } => {
                 buf.extend_from_slice(&iter.to_le_bytes());
                 buf.extend_from_slice(&lo.to_le_bytes());
                 buf.extend_from_slice(&hi.to_le_bytes());
@@ -171,6 +206,10 @@ impl Message {
             }
             Message::CodecPropose { pref } => buf.push(pref.tag()),
             Message::CodecAgree { codec } => buf.push(codec.tag()),
+            Message::SyncPropose { mode, bound } | Message::SyncAgree { mode, bound } => {
+                buf.push(mode.tag());
+                buf.extend_from_slice(&bound.to_le_bytes());
+            }
             Message::Hello { worker, version } => {
                 buf.extend_from_slice(&worker.to_le_bytes());
                 buf.extend_from_slice(&version.to_le_bytes());
@@ -201,7 +240,7 @@ impl Message {
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum MessageRef<'a> {
     Pull { iter: u64, lo: u32, hi: u32 },
-    PullReply { iter: u64, lo: u32, hi: u32, codec: CodecId, data: &'a [u8] },
+    PullReply { iter: u64, lo: u32, hi: u32, applied: u64, codec: CodecId, data: &'a [u8] },
     Push { iter: u64, lo: u32, hi: u32, codec: CodecId, data: &'a [u8] },
     PushAck { iter: u64, lo: u32, hi: u32 },
     Hello { worker: u32, version: u16 },
@@ -209,6 +248,8 @@ pub enum MessageRef<'a> {
     Shutdown,
     CodecPropose { pref: CodecId },
     CodecAgree { codec: CodecId },
+    SyncPropose { mode: SyncMode, bound: u32 },
+    SyncAgree { mode: SyncMode, bound: u32 },
 }
 
 impl<'a> MessageRef<'a> {
@@ -223,6 +264,8 @@ impl<'a> MessageRef<'a> {
             MessageRef::Shutdown => 7,
             MessageRef::CodecPropose { .. } => 8,
             MessageRef::CodecAgree { .. } => 9,
+            MessageRef::SyncPropose { .. } => 10,
+            MessageRef::SyncAgree { .. } => 11,
         }
     }
 
@@ -230,7 +273,7 @@ impl<'a> MessageRef<'a> {
     pub fn wire_size(&self) -> usize {
         1 + match self {
             MessageRef::Pull { .. } => 8 + 4 + 4,
-            MessageRef::PullReply { data, .. } => 8 + 4 + 4 + 4 + data.len(),
+            MessageRef::PullReply { data, .. } => 8 + 4 + 4 + 8 + 4 + data.len(),
             MessageRef::Push { data, .. } => 8 + 4 + 4 + 4 + data.len(),
             MessageRef::PushAck { .. } => 8 + 4 + 4,
             MessageRef::Hello { .. } => 4 + 2,
@@ -238,6 +281,8 @@ impl<'a> MessageRef<'a> {
             MessageRef::Shutdown => 0,
             MessageRef::CodecPropose { .. } => 1,
             MessageRef::CodecAgree { .. } => 1,
+            MessageRef::SyncPropose { .. } => 1 + 4,
+            MessageRef::SyncAgree { .. } => 1 + 4,
         }
     }
 
@@ -250,9 +295,12 @@ impl<'a> MessageRef<'a> {
             // Tensor frames share one header encoder with
             // `Connection::send_push_parts` — a single source of truth for
             // the layout.
-            MessageRef::PullReply { iter, lo, hi, codec, data }
-            | MessageRef::Push { iter, lo, hi, codec, data } => {
-                encode_tensor_header(buf, self.opcode(), iter, lo, hi, codec, data.len());
+            MessageRef::PullReply { iter, lo, hi, applied, codec, data } => {
+                encode_tensor_header(buf, iter, lo, hi, Some(applied), codec, data.len());
+                return data;
+            }
+            MessageRef::Push { iter, lo, hi, codec, data } => {
+                encode_tensor_header(buf, iter, lo, hi, None, codec, data.len());
                 return data;
             }
             _ => {}
@@ -276,6 +324,10 @@ impl<'a> MessageRef<'a> {
             }
             MessageRef::CodecPropose { pref } => buf.push(pref.tag()),
             MessageRef::CodecAgree { codec } => buf.push(codec.tag()),
+            MessageRef::SyncPropose { mode, bound } | MessageRef::SyncAgree { mode, bound } => {
+                buf.push(mode.tag());
+                buf.extend_from_slice(&bound.to_le_bytes());
+            }
             _ => {}
         }
         &[]
@@ -289,9 +341,9 @@ impl<'a> MessageRef<'a> {
         let msg = match op {
             1 => MessageRef::Pull { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
             2 => {
-                let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
+                let (iter, lo, hi, applied) = (r.u64()?, r.u32()?, r.u32()?, r.u64()?);
                 let (codec, data) = r.slab()?;
-                MessageRef::PullReply { iter, lo, hi, codec, data }
+                MessageRef::PullReply { iter, lo, hi, applied, codec, data }
             }
             3 => {
                 let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
@@ -304,6 +356,14 @@ impl<'a> MessageRef<'a> {
             7 => MessageRef::Shutdown,
             8 => MessageRef::CodecPropose { pref: r.codec()? },
             9 => MessageRef::CodecAgree { codec: r.codec()? },
+            10 => {
+                let (mode, bound) = r.sync()?;
+                MessageRef::SyncPropose { mode, bound }
+            }
+            11 => {
+                let (mode, bound) = r.sync()?;
+                MessageRef::SyncAgree { mode, bound }
+            }
             _ => bail!("unknown opcode {op}"),
         };
         anyhow::ensure!(r.b.is_empty(), "trailing bytes in frame (op {op})");
@@ -314,8 +374,8 @@ impl<'a> MessageRef<'a> {
     pub fn into_owned(self) -> Message {
         match self {
             MessageRef::Pull { iter, lo, hi } => Message::Pull { iter, lo, hi },
-            MessageRef::PullReply { iter, lo, hi, codec, data } => {
-                Message::PullReply { iter, lo, hi, codec, data: data.to_vec() }
+            MessageRef::PullReply { iter, lo, hi, applied, codec, data } => {
+                Message::PullReply { iter, lo, hi, applied, codec, data: data.to_vec() }
             }
             MessageRef::Push { iter, lo, hi, codec, data } => {
                 Message::Push { iter, lo, hi, codec, data: data.to_vec() }
@@ -328,6 +388,8 @@ impl<'a> MessageRef<'a> {
             MessageRef::Shutdown => Message::Shutdown,
             MessageRef::CodecPropose { pref } => Message::CodecPropose { pref },
             MessageRef::CodecAgree { codec } => Message::CodecAgree { codec },
+            MessageRef::SyncPropose { mode, bound } => Message::SyncPropose { mode, bound },
+            MessageRef::SyncAgree { mode, bound } => Message::SyncAgree { mode, bound },
         }
     }
 }
@@ -363,6 +425,23 @@ impl<'a> Reader<'a> {
             .ok_or_else(|| anyhow::anyhow!("unknown codec tag {tag}"))
     }
 
+    /// The `SyncPropose`/`SyncAgree` payload: a one-byte sync mode tag
+    /// followed by the `u32` staleness bound. A bound only means anything
+    /// under SSP, so a non-zero bound on a bsp/asp frame is malformed and
+    /// rejected here rather than silently ignored by the endpoint.
+    fn sync(&mut self) -> Result<(SyncMode, u32)> {
+        let tag = self.take(1)?[0];
+        let mode = SyncMode::from_tag(tag)
+            .ok_or_else(|| anyhow::anyhow!("unknown sync mode tag {tag}"))?;
+        let bound = self.u32()?;
+        anyhow::ensure!(
+            bound == 0 || mode == SyncMode::Ssp,
+            "malformed staleness bound {bound} for sync mode {}",
+            mode.name()
+        );
+        Ok((mode, bound))
+    }
+
     /// Length-prefixed byte slab, borrowed — no copy, no per-element work.
     /// The length field's top 2 bits carry the codec tag; the low 30 bits
     /// the byte count, checked against the codec's frame-level invariants
@@ -393,35 +472,48 @@ pub enum RecvMsg {
     /// Control frames, owned as usual.
     Control(Message),
     /// A `PullReply` whose slab is a pooled view.
-    PullReply { iter: u64, lo: u32, hi: u32, codec: CodecId, data: SlabSlice },
+    PullReply { iter: u64, lo: u32, hi: u32, applied: u64, codec: CodecId, data: SlabSlice },
     /// A `Push` whose slab is a pooled view.
     Push { iter: u64, lo: u32, hi: u32, codec: CodecId, data: SlabSlice },
 }
 
-/// Byte offset of the slab inside a `PullReply`/`Push` frame payload:
-/// opcode + `iter` + `lo` + `hi` + the slab-length field.
-const TENSOR_SLAB_OFF: usize = 1 + 8 + 4 + 4 + 4;
+/// Byte offset of the slab inside a `Push` frame payload: opcode + `iter`
+/// + `lo` + `hi` + the slab-length field.
+const PUSH_SLAB_OFF: usize = 1 + 8 + 4 + 4 + 4;
+
+/// Byte offset of the slab inside a `PullReply` frame payload: the `Push`
+/// layout plus the v4 `applied: u64` field before the slab-length field.
+const PULL_REPLY_SLAB_OFF: usize = 1 + 8 + 4 + 4 + 8 + 4;
 
 /// Encode a tensor frame's header (length prefix through the slab-length
 /// field) for a slab of `data_len` bytes: the single owner of the
 /// `PullReply`/`Push` layout, shared by [`MessageRef::encode_header_into`]
-/// and [`Connection::send_push_parts`].
+/// and [`Connection::send_push_parts`]. `applied` is present exactly for
+/// `PullReply` frames (v4) — which is also what selects the opcode, since
+/// they are the only two tensor frames.
 fn encode_tensor_header(
     buf: &mut Vec<u8>,
-    opcode: u8,
     iter: u64,
     lo: u32,
     hi: u32,
+    applied: Option<u64>,
     codec: CodecId,
     data_len: usize,
 ) {
-    let wire_size = TENSOR_SLAB_OFF + data_len;
+    let (opcode, fixed) = match applied {
+        Some(_) => (2u8, PULL_REPLY_SLAB_OFF),
+        None => (3u8, PUSH_SLAB_OFF),
+    };
+    let wire_size = fixed + data_len;
     buf.clear();
     buf.extend_from_slice(&(wire_size as u32).to_le_bytes());
     buf.push(opcode);
     buf.extend_from_slice(&iter.to_le_bytes());
     buf.extend_from_slice(&lo.to_le_bytes());
     buf.extend_from_slice(&hi.to_le_bytes());
+    if let Some(applied) = applied {
+        buf.extend_from_slice(&applied.to_le_bytes());
+    }
     buf.extend_from_slice(&slab_len_field(codec, data_len).to_le_bytes());
 }
 
@@ -547,7 +639,7 @@ impl Connection {
         parts: &[&[u8]],
     ) -> Result<()> {
         let data_len: usize = parts.iter().map(|p| p.len()).sum();
-        encode_tensor_header(&mut self.send_buf, 3, iter, lo, hi, codec, data_len);
+        encode_tensor_header(&mut self.send_buf, iter, lo, hi, None, codec, data_len);
         if let Some(shaper) = &self.shaper {
             shaper.delay_for(self.send_buf.len() + data_len);
         }
@@ -581,9 +673,17 @@ impl Connection {
     pub fn recv_pooled(&mut self, pool: &Arc<SlabPool>) -> Result<RecvMsg> {
         /// Decode outcome with the frame borrow already released: tensor
         /// frames carry only their fixed fields (the slab stays in the
-        /// frame at [`TENSOR_SLAB_OFF`]), control frames are owned.
+        /// frame at its opcode's slab offset), control frames are owned.
         enum Parsed {
-            Tensor { op: u8, iter: u64, lo: u32, hi: u32, codec: CodecId, len: usize },
+            Tensor {
+                op: u8,
+                iter: u64,
+                lo: u32,
+                hi: u32,
+                applied: u64,
+                codec: CodecId,
+                len: usize,
+            },
             Control(Message),
         }
 
@@ -592,20 +692,21 @@ impl Connection {
         self.stream.read_exact(&mut frame[..]).context("recv payload")?;
         // One decode, fully validating the frame.
         let parsed = match MessageRef::decode(&frame[..])? {
-            MessageRef::PullReply { iter, lo, hi, codec, data } => {
-                Parsed::Tensor { op: 2, iter, lo, hi, codec, len: data.len() }
+            MessageRef::PullReply { iter, lo, hi, applied, codec, data } => {
+                Parsed::Tensor { op: 2, iter, lo, hi, applied, codec, len: data.len() }
             }
             MessageRef::Push { iter, lo, hi, codec, data } => {
-                Parsed::Tensor { op: 3, iter, lo, hi, codec, len: data.len() }
+                Parsed::Tensor { op: 3, iter, lo, hi, applied: 0, codec, len: data.len() }
             }
             other => Parsed::Control(other.into_owned()),
         };
         match parsed {
-            Parsed::Tensor { op, iter, lo, hi, codec, len } => {
-                let data = SlabSlice::new(frame.freeze(), TENSOR_SLAB_OFF, len);
+            Parsed::Tensor { op, iter, lo, hi, applied, codec, len } => {
                 Ok(if op == 2 {
-                    RecvMsg::PullReply { iter, lo, hi, codec, data }
+                    let data = SlabSlice::new(frame.freeze(), PULL_REPLY_SLAB_OFF, len);
+                    RecvMsg::PullReply { iter, lo, hi, applied, codec, data }
                 } else {
+                    let data = SlabSlice::new(frame.freeze(), PUSH_SLAB_OFF, len);
                     RecvMsg::Push { iter, lo, hi, codec, data }
                 })
             }
@@ -652,8 +753,18 @@ mod tests {
             iter: 7,
             lo: 1,
             hi: 3,
+            applied: 7,
             codec: CodecId::Fp32,
             data: slab::from_f32s(&[1.5, -2.0, 0.0]),
+        });
+        // A stale SSP/ASP snapshot: applied differs from the request.
+        roundtrip(Message::PullReply {
+            iter: 9,
+            lo: 0,
+            hi: 0,
+            applied: 6,
+            codec: CodecId::Fp32,
+            data: Vec::new(),
         });
         roundtrip(Message::Push {
             iter: 0,
@@ -673,6 +784,35 @@ mod tests {
         for id in CodecId::ALL {
             roundtrip(Message::CodecPropose { pref: id });
             roundtrip(Message::CodecAgree { codec: id });
+        }
+        for mode in SyncMode::ALL {
+            let bound = if mode == SyncMode::Ssp { 3 } else { 0 };
+            roundtrip(Message::SyncPropose { mode, bound });
+            roundtrip(Message::SyncAgree { mode, bound });
+        }
+    }
+
+    /// The v4 sync frames: layout, and the malformed-staleness-bound
+    /// rejection rules (unknown mode tag; bound outside SSP).
+    #[test]
+    fn sync_frames_validate_mode_and_bound() {
+        // Layout: opcode + mode tag + u32 bound.
+        let enc = Message::SyncPropose { mode: SyncMode::Ssp, bound: 7 }.encode();
+        assert_eq!(&enc[4..], &[10u8, 1, 7, 0, 0, 0]);
+        let enc = Message::SyncAgree { mode: SyncMode::Asp, bound: 0 }.encode();
+        assert_eq!(&enc[4..], &[11u8, 2, 0, 0, 0, 0]);
+        // Unknown mode tag 3 is rejected.
+        assert!(Message::decode(&[10, 3, 0, 0, 0, 0]).is_err());
+        // A non-zero staleness bound is malformed outside SSP.
+        assert!(Message::decode(&[10, 0, 1, 0, 0, 0]).is_err(), "bsp with bound");
+        assert!(Message::decode(&[11, 2, 1, 0, 0, 0]).is_err(), "asp with bound");
+        // ...but fine (any value) under SSP.
+        match Message::decode(&[11, 1, 255, 0, 0, 0]).unwrap() {
+            Message::SyncAgree { mode, bound } => {
+                assert_eq!(mode, SyncMode::Ssp);
+                assert_eq!(bound, 255);
+            }
+            m => panic!("{m:?}"),
         }
     }
 
@@ -700,11 +840,12 @@ mod tests {
         }
     }
 
-    /// The acceptance property: every v3 fp32 data-plane frame is
-    /// byte-identical to the v2 encoding (length prefix, opcode, fixed
-    /// fields, untagged slab-length field, raw f32 slab).
+    /// The fp32 `Push` byte-identity property (unchanged since v2: the v4
+    /// `applied` field rides only on `PullReply`), plus the v4 `PullReply`
+    /// layout: the v2/v3 fields with `applied: u64` inserted before the
+    /// slab-length field.
     #[test]
-    fn fp32_frames_are_byte_identical_to_v2() {
+    fn fp32_push_frames_are_byte_identical_to_v2_and_pull_reply_carries_applied() {
         let vals: Vec<f32> = (0..777).map(|i| (i as f32).cos() * 3.0).collect();
         let data = slab::from_f32s(&vals);
         let v2 = |opcode: u8, iter: u64, lo: u32, hi: u32, data: &[u8]| -> Vec<u8> {
@@ -720,20 +861,33 @@ mod tests {
             buf.extend_from_slice(data);
             buf
         };
+        let push =
+            Message::Push { iter: 5, lo: 0, hi: 1, codec: CodecId::Fp32, data: data.clone() };
+        assert_eq!(push.encode(), v2(3, 5, 0, 1, &data));
+        // And a v2-shaped Push frame decodes as an fp32-tagged frame.
+        let enc = v2(3, 5, 0, 1, &data);
+        assert_eq!(Message::decode(&enc[4..]).unwrap(), push);
+        // v4 PullReply: the v2 reply layout widened by `applied` right
+        // after `hi` — reconstructed independently of the encoder.
         let reply = Message::PullReply {
             iter: 12,
             lo: 3,
             hi: 9,
+            applied: 11,
             codec: CodecId::Fp32,
             data: data.clone(),
         };
-        assert_eq!(reply.encode(), v2(2, 12, 3, 9, &data));
-        let push =
-            Message::Push { iter: 5, lo: 0, hi: 1, codec: CodecId::Fp32, data: data.clone() };
-        assert_eq!(push.encode(), v2(3, 5, 0, 1, &data));
-        // And a v2-shaped frame decodes as an fp32-tagged v3 frame.
-        let enc = v2(3, 5, 0, 1, &data);
-        assert_eq!(Message::decode(&enc[4..]).unwrap(), push);
+        let mut v4 = Vec::new();
+        let wire_size = 1 + 8 + 4 + 4 + 8 + 4 + data.len();
+        v4.extend_from_slice(&(wire_size as u32).to_le_bytes());
+        v4.push(2);
+        v4.extend_from_slice(&12u64.to_le_bytes());
+        v4.extend_from_slice(&3u32.to_le_bytes());
+        v4.extend_from_slice(&9u32.to_le_bytes());
+        v4.extend_from_slice(&11u64.to_le_bytes());
+        v4.extend_from_slice(&(data.len() as u32).to_le_bytes());
+        v4.extend_from_slice(&data);
+        assert_eq!(reply.encode(), v4);
         // Non-fp32 codecs tag the slab-length field (and only it).
         let mut wire = Vec::new();
         CodecId::Fp16.codec().encode(&data, &mut wire);
@@ -781,12 +935,20 @@ mod tests {
         (codec, (0..n).map(|_| rng.below(256) as u8).collect())
     }
 
+    /// Random sync frame payload: any mode, with a bound only under SSP.
+    fn random_sync(rng: &mut Rng) -> (SyncMode, u32) {
+        let mode = SyncMode::ALL[rng.below(3)];
+        let bound = if mode == SyncMode::Ssp { rng.below(16) as u32 } else { 0 };
+        (mode, bound)
+    }
+
     fn random_message(rng: &mut Rng) -> Message {
-        match rng.below(9) {
+        match rng.below(11) {
             0 => Message::Pull { iter: rng.below(1 << 20) as u64, lo: 0, hi: 7 },
             1 => {
                 let (codec, data) = random_codec_data(rng);
-                Message::PullReply { iter: 3, lo: 1, hi: 5, codec, data }
+                let applied = rng.below(10) as u64;
+                Message::PullReply { iter: 3, lo: 1, hi: 5, applied, codec, data }
             }
             2 => {
                 let (codec, data) = random_codec_data(rng);
@@ -797,6 +959,14 @@ mod tests {
             5 => Message::HelloAck { workers: 8, version: 3 },
             6 => Message::CodecPropose { pref: CodecId::ALL[rng.below(3)] },
             7 => Message::CodecAgree { codec: CodecId::ALL[rng.below(3)] },
+            8 => {
+                let (mode, bound) = random_sync(rng);
+                Message::SyncPropose { mode, bound }
+            }
+            9 => {
+                let (mode, bound) = random_sync(rng);
+                Message::SyncAgree { mode, bound }
+            }
             _ => Message::Shutdown,
         }
     }
@@ -895,6 +1065,7 @@ mod tests {
             iter: 1,
             lo: 0,
             hi: 0,
+            applied: 1,
             codec: CodecId::Fp32,
             data: slab::from_f32s(&[0.5; 256]),
         };
@@ -994,6 +1165,7 @@ mod tests {
                     iter: i,
                     lo: 0,
                     hi: 3,
+                    applied: i,
                     codec: CodecId::Fp32,
                     data: payload2.clone(),
                 })
@@ -1004,8 +1176,9 @@ mod tests {
         let pool = crate::net::pool::SlabPool::new();
         let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
         let first = match conn.recv_pooled(&pool).unwrap() {
-            RecvMsg::PullReply { iter, data, .. } => {
+            RecvMsg::PullReply { iter, applied, data, .. } => {
                 assert_eq!(iter, 0);
+                assert_eq!(applied, 0, "v4 applied field survives the pooled path");
                 assert_eq!(&data[..], &payload[..]);
                 data
             }

@@ -29,6 +29,22 @@ use crate::sched::SchedulePlan;
 
 pub use crate::net::pool::SlabSlice;
 
+/// One executed pull segment's outcome, reported by the puller thread to
+/// the profiler: the wire bytes and wall-clock of the transfer plus the
+/// server's `applied` iteration for the served snapshot (protocol v4, min
+/// over the segment's shard sub-requests). The wall-clock is measured
+/// under the live sync policy — under BSP it embeds the real barrier
+/// wait, under SSP/ASP it does not — so the profiler's transmission fit,
+/// and therefore the DynaComm DP, costs the *actual* wait window of the
+/// configured mode instead of assuming a full barrier; `applied` is what
+/// the worker's staleness accounting (and the SSP bound check) reads.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SegmentPull {
+    pub wire_bytes: usize,
+    pub ms: f64,
+    pub applied: u64,
+}
+
 /// One layer's byte placement inside a segment and its shard payload.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ExecSlice {

@@ -10,9 +10,11 @@
 pub mod exec;
 pub mod server;
 pub mod sharding;
+pub mod sync;
 pub mod worker;
 
 pub use exec::{ExecPlan, ExecSegment, ExecSlice, ExecSub, SlabSlice};
-pub use server::{ParamServer, ServerConfig, ServerHandle, WireStats};
+pub use server::{ParamServer, ServerConfig, ServerHandle, ServerOptions, WireStats};
 pub use sharding::ShardMap;
+pub use sync::{SyncConfig, SyncMode, SyncPolicy};
 pub use worker::{EdgeWorker, PlanChange, WorkerConfig, WorkerReport};

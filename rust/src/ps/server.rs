@@ -1,9 +1,16 @@
 //! A parameter-server shard.
 //!
 //! Holds the flat `w‖b` parameter vector for each layer it owns, serves
-//! `Pull`s (blocking until the layer's version reaches the requested
-//! iteration — this is the BSP clock), accumulates `Push`ed gradients, and
-//! applies averaged SGD once every registered worker has contributed.
+//! `Pull`s, accumulates or applies `Push`ed gradients, and runs SGD
+//! server-side. *When* a pull may proceed and *when* a push is applied is
+//! no longer hard-coded BSP: every consistency decision is delegated to a
+//! pluggable [`crate::ps::sync::SyncPolicy`] ([`ServerOptions::sync`],
+//! `docs/SYNC.md`) — `bsp` reproduces the historical barrier exactly
+//! (pulls park on the per-layer version condvars until the requested
+//! iteration is applied; pushes barrier on the full worker count), `ssp`
+//! gates pulls on a bounded staleness window and applies pushes
+//! immediately, `asp` never gates at all. Replies carry the `applied`
+//! iteration of the snapshot they serve (protocol v4).
 //!
 //! Parameters live as little-endian f32 byte slabs — the exact bytes a
 //! `PullReply` carries — so serving a pull is a bulk `extend_from_slice`
@@ -46,13 +53,41 @@ use anyhow::{Context, Result};
 use crate::net::codec::{self, CodecId, CodecStats, CodecStatsTable};
 use crate::net::pool::{PoolStats, PooledSlab, SlabPool};
 use crate::net::{slab, Connection, Message, MessageRef, ShaperSpec, PROTOCOL_VERSION};
+use crate::ps::sync::{self, PullGate, PushApply, SyncConfig, SyncMode, SyncPolicy};
 
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
-    /// Workers that must push before an update is applied (BSP).
+    /// Workers that must push before an update is applied under the BSP
+    /// barrier; SSP/ASP apply each push scaled by `1 / workers` instead.
     pub workers: usize,
     /// SGD learning rate applied server-side.
     pub lr: f32,
+}
+
+/// Tuning knobs beyond the core [`ServerConfig`] — kept separate so every
+/// existing `ParamServer::start` call site keeps its exact shape (and the
+/// BSP default keeps its exact behavior).
+#[derive(Debug, Clone, Copy)]
+pub struct ServerOptions {
+    /// The shard's synchronization policy (`--sync` / `--staleness-bound`).
+    pub sync: SyncConfig,
+    /// Cap on concurrently live connection-handler threads
+    /// (`--handler-threads`). Connections past the cap queue in the kernel
+    /// accept backlog — and are refused by the OS once it fills — until a
+    /// slot frees: backpressure instead of unbounded thread growth.
+    ///
+    /// The effective cap is never below [`ServerConfig::workers`]: every
+    /// registered worker holds one long-lived connection whose handler may
+    /// legitimately park at the barrier, so a smaller cap would deadlock
+    /// the fleet against itself — the backpressure is for connections
+    /// *beyond* the fleet, not the fleet.
+    pub handler_threads: usize,
+}
+
+impl Default for ServerOptions {
+    fn default() -> Self {
+        ServerOptions { sync: SyncConfig::default(), handler_threads: 64 }
+    }
 }
 
 struct LayerSlot {
@@ -81,14 +116,19 @@ impl LayerSlot {
 enum ReplyState {
     /// A handler is assembling this reply; others wait on the condvar.
     Building,
-    /// Assembled; served to every subsequent puller as a cheap clone.
-    Ready(Arc<PooledSlab>),
+    /// Assembled (slab + the snapshot's applied iteration); served to
+    /// every subsequent puller as a cheap clone.
+    Ready(Arc<PooledSlab>, u64),
 }
 
-/// The shared pull-reply broadcast cache, keyed by `(iter, lo, hi, codec)`
-/// — sessions speaking different codecs need different reply bytes, but
-/// every same-codec puller of a segment still shares one single-flight
-/// assembly.
+/// The shared pull-reply broadcast cache, keyed by
+/// `(key_iter, lo, hi, codec)` — sessions speaking different codecs need
+/// different reply bytes, but every same-codec puller of a segment still
+/// shares one single-flight assembly. `key_iter` is the requested
+/// iteration under the BSP barrier (byte-identical replies per iteration,
+/// the historical key) and the shard's apply-event counter under SSP/ASP
+/// (a fresh apply invalidates the broadcast, so "freshest applied
+/// snapshot" and "assemble once per snapshot" coexist).
 struct ReplyCache {
     entries: Mutex<HashMap<(u64, u32, u32, CodecId), ReplyState>>,
     /// Signals entry transitions (Building → Ready/removed) and shutdown.
@@ -112,6 +152,16 @@ impl ReplyCache {
 
 struct Shared {
     cfg: ServerConfig,
+    /// The shard's synchronization policy: every pull-admission and
+    /// push-application decision routes through it (`ps::sync`).
+    sync: Box<dyn SyncPolicy>,
+    /// Cap on live handler threads (see [`ServerOptions`]).
+    handler_threads: usize,
+    /// Immediate-mode apply events (SSP/ASP): the reply cache's version
+    /// key — a new apply invalidates the shared broadcast.
+    apply_events: AtomicU64,
+    /// Handler threads currently alive (bounded by `handler_threads`).
+    live_handlers: AtomicU32,
     /// layer id -> guarded slot (only layers this shard owns).
     slots: HashMap<usize, (Mutex<LayerSlot>, Condvar)>,
     /// layer id -> slab size in bytes (immutable; lets pulls pre-size
@@ -202,6 +252,19 @@ impl ParamServer {
         layers: HashMap<usize, Vec<f32>>,
         shaper: Option<ShaperSpec>,
     ) -> Result<ParamServer> {
+        ParamServer::start_with(cfg, layers, shaper, ServerOptions::default())
+    }
+
+    /// [`ParamServer::start`] with explicit [`ServerOptions`]: the sync
+    /// policy (BSP barrier / bounded-staleness SSP / async ASP) and the
+    /// handler-pool cap.
+    pub fn start_with(
+        cfg: ServerConfig,
+        layers: HashMap<usize, Vec<f32>>,
+        shaper: Option<ShaperSpec>,
+        opts: ServerOptions,
+    ) -> Result<ParamServer> {
+        opts.sync.validate()?;
         let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
         let addr = listener.local_addr()?;
         let layer_bytes: HashMap<usize, usize> =
@@ -226,6 +289,14 @@ impl ParamServer {
             .collect();
         let shared = Arc::new(Shared {
             cfg,
+            sync: sync::create(opts.sync),
+            // Never cap below the registered fleet: `workers` handlers can
+            // all be parked at the barrier at once, and a smaller pool
+            // would wedge training with the rest of the fleet stuck in the
+            // accept backlog (see [`ServerOptions::handler_threads`]).
+            handler_threads: opts.handler_threads.max(cfg.workers).max(1),
+            apply_events: AtomicU64::new(0),
+            live_handlers: AtomicU32::new(0),
             slots,
             layer_bytes,
             pool: SlabPool::new(),
@@ -258,6 +329,34 @@ impl ParamServer {
         self.shared.pull_waiters.load(Ordering::SeqCst)
     }
 
+    /// The shard's synchronization mode.
+    pub fn sync_mode(&self) -> SyncMode {
+        self.shared.sync.mode()
+    }
+
+    /// Pulls currently parked inside the sync policy's staleness gate
+    /// (SSP); 0 elsewhere.
+    pub fn sync_waiters(&self) -> u32 {
+        self.shared.sync.waiters()
+    }
+
+    /// The slowest registered worker's iteration clock, as the sync
+    /// policy tracks it (0 under BSP, which keeps no clocks).
+    pub fn slowest_worker_iter(&self) -> u64 {
+        self.shared.sync.slowest()
+    }
+
+    /// Immediate-mode apply events so far (SSP/ASP; 0 under BSP).
+    pub fn apply_events(&self) -> u64 {
+        self.shared.apply_events.load(Ordering::SeqCst)
+    }
+
+    /// Handler threads currently alive (bounded by
+    /// [`ServerOptions::handler_threads`]).
+    pub fn live_handlers(&self) -> u32 {
+        self.shared.live_handlers.load(Ordering::SeqCst)
+    }
+
     /// Wire-path counters (reply cache + pool).
     pub fn wire_stats(&self) -> WireStats {
         wire_stats(&self.shared)
@@ -274,6 +373,8 @@ impl ParamServer {
             let _guard = m.lock().unwrap();
             cv.notify_all();
         }
+        // Wake pulls parked inside the sync policy's staleness gate.
+        self.shared.sync.interrupt();
         // Wake pullers waiting on an in-flight reply assembly.
         {
             let _entries = self.shared.reply_cache.entries.lock().unwrap();
@@ -304,6 +405,23 @@ impl Drop for ParamServer {
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<ShaperSpec>) {
     let mut handlers = Vec::new();
     loop {
+        // Bounded handler pool: never hold more than `handler_threads`
+        // live handlers. At the cap, stop accepting — further connections
+        // queue in the kernel backlog (and the OS refuses them once it
+        // fills), so an over-subscribed shard pushes back instead of
+        // spawning a thread per peer. The reap below doubles as the slot
+        // wait.
+        loop {
+            // Reap finished handler threads so the handle list stays
+            // bounded by the number of *live* connections.
+            handlers.retain(|h: &std::thread::JoinHandle<()>| !h.is_finished());
+            if handlers.len() < shared.handler_threads
+                || shared.shutting_down.load(Ordering::SeqCst)
+            {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
         let Ok((stream, _)) = listener.accept() else { break };
         // Every handled connection MUST be in the kill registry, or a
         // quiet peer could block shutdown's join forever; refuse the
@@ -335,11 +453,9 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
             let _ = stream.shutdown(Shutdown::Both);
             break;
         }
-        // Reap finished handler threads so the handle list stays bounded
-        // by the number of *live* connections.
-        handlers.retain(|h: &std::thread::JoinHandle<()>| !h.is_finished());
         let shared = shared.clone();
         let shaper = shaper.map(|s| s.build());
+        shared.live_handlers.fetch_add(1, Ordering::SeqCst);
         handlers.push(std::thread::spawn(move || {
             let conn = Connection::new(stream, shaper);
             if let Err(e) = handle_conn(conn, &shared) {
@@ -347,6 +463,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
             }
             // Free the registry slot (drops the duplicate fd) for reuse.
             shared.conns.lock().unwrap()[conn_id] = None;
+            shared.live_handlers.fetch_sub(1, Ordering::SeqCst);
         }));
     }
     for h in handlers {
@@ -354,17 +471,20 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
     }
 }
 
-/// Assemble the `[lo, hi]` reply slab for `iter` into a pooled buffer —
-/// each owned layer's params encoded by the session `codec`, concatenated
-/// — parking on the version condvars until the BSP clock gets there.
-/// Returns `None` when shutdown interrupts the wait.
+/// Assemble the `[lo, hi]` reply slab into a pooled buffer — each owned
+/// layer's params encoded by the session `codec`, concatenated — honoring
+/// the sync policy's `gate`: `WaitFor` parks on the version condvars until
+/// the clock gets there (the BSP barrier), `Fresh` encodes whatever is
+/// applied right now. Returns the slab plus the snapshot's `applied`
+/// iteration (the min applied version among the served layers), or `None`
+/// when shutdown interrupts the wait.
 fn assemble_reply(
     shared: &Shared,
-    iter: u64,
+    gate: PullGate,
     lo: u32,
     hi: u32,
     codec_id: CodecId,
-) -> Option<Arc<PooledSlab>> {
+) -> Option<(Arc<PooledSlab>, u64)> {
     // Pre-size from the immutable size map: one pooled checkout, then pure
     // per-layer codec appends under the slot locks (fp32 encodes as a bulk
     // `extend_from_slice`, so the uncompressed path is unchanged).
@@ -375,51 +495,63 @@ fn assemble_reply(
         .sum();
     let mut data = shared.pool.checkout(cap);
     let (mut raw_total, mut enc_ns, mut max_err) = (0usize, 0u64, 0.0f32);
+    let mut applied = u64::MAX;
     for l in lo as usize..=hi as usize {
         let Some((m, cv)) = shared.slots.get(&l) else { continue };
         let mut slot = m.lock().unwrap();
-        while slot.version < iter {
-            if shared.shutting_down.load(Ordering::SeqCst) {
-                return None;
+        if let PullGate::WaitFor { min } = gate {
+            while slot.version < min {
+                if shared.shutting_down.load(Ordering::SeqCst) {
+                    return None;
+                }
+                // Condition-based park: woken by the push that advances
+                // the version, or by shutdown.
+                shared.pull_waiters.fetch_add(1, Ordering::SeqCst);
+                let woken = cv.wait(slot).unwrap();
+                shared.pull_waiters.fetch_sub(1, Ordering::SeqCst);
+                slot = woken;
             }
-            // Condition-based park: woken by the push that advances the
-            // version, or by shutdown.
-            shared.pull_waiters.fetch_add(1, Ordering::SeqCst);
-            let woken = cv.wait(slot).unwrap();
-            shared.pull_waiters.fetch_sub(1, Ordering::SeqCst);
-            slot = woken;
         }
+        applied = applied.min(slot.version);
         let t0 = Instant::now();
         let err = wc.encode(&slot.params, &mut data);
         enc_ns += t0.elapsed().as_nanos() as u64;
         raw_total += slot.params.len();
         max_err = max_err.max(err);
     }
+    if applied == u64::MAX {
+        // No owned layers in range: report the gate's own clock.
+        applied = match gate {
+            PullGate::WaitFor { min } => min,
+            PullGate::Fresh => 0,
+        };
+    }
     shared
         .codec_stats
         .record_encode(codec_id, raw_total, data.len(), enc_ns, max_err);
-    Some(data.freeze())
+    Some((data.freeze(), applied))
 }
 
 /// Serve a pull from the shared broadcast cache, assembling at most once
-/// per `(iter, lo, hi, codec)` across all concurrent pullers
+/// per `(key_iter, lo, hi, codec)` across all concurrent pullers
 /// (single-flight). Returns `None` only on shutdown.
 fn pull_reply(
     shared: &Shared,
-    iter: u64,
+    key_iter: u64,
+    gate: PullGate,
     lo: u32,
     hi: u32,
     codec_id: CodecId,
-) -> Option<Arc<PooledSlab>> {
+) -> Option<(Arc<PooledSlab>, u64)> {
     /// Snapshot of a cache entry's state, owned (no borrow spans the
     /// condvar wait or the insert below).
     enum Peek {
-        Hit(Arc<PooledSlab>),
+        Hit(Arc<PooledSlab>, u64),
         Wait,
         Vacant,
     }
 
-    let key = (iter, lo, hi, codec_id);
+    let key = (key_iter, lo, hi, codec_id);
     let cache = &shared.reply_cache;
     let mut entries = cache.entries.lock().unwrap();
     loop {
@@ -427,14 +559,14 @@ fn pull_reply(
             return None;
         }
         let peek = match entries.get(&key) {
-            Some(ReplyState::Ready(slab)) => Peek::Hit(slab.clone()),
+            Some(ReplyState::Ready(slab, applied)) => Peek::Hit(slab.clone(), *applied),
             Some(ReplyState::Building) => Peek::Wait,
             None => Peek::Vacant,
         };
         match peek {
-            Peek::Hit(slab) => {
+            Peek::Hit(slab, applied) => {
                 cache.hits.fetch_add(1, Ordering::SeqCst);
-                return Some(slab);
+                return Some((slab, applied));
             }
             Peek::Wait => {
                 // Another handler is assembling this exact reply; wait for
@@ -444,25 +576,25 @@ fn pull_reply(
             Peek::Vacant => {
                 entries.insert(key, ReplyState::Building);
                 drop(entries);
-                let built = assemble_reply(shared, iter, lo, hi, codec_id);
+                let built = assemble_reply(shared, gate, lo, hi, codec_id);
                 let mut relocked = cache.entries.lock().unwrap();
                 let out = match built {
-                    Some(slab) => {
+                    Some((slab, applied)) => {
                         cache.builds.fetch_add(1, Ordering::SeqCst);
-                        relocked.insert(key, ReplyState::Ready(slab.clone()));
-                        // BSP keeps in-flight pulls within one iteration of
-                        // each other; drop finished iterations' slabs back
-                        // to the pool so the cache stays O(segments).
-                        // `Building` markers are never evicted — removing
-                        // one would break single-flight: its waiters would
-                        // see the slot vacant and start a duplicate
-                        // assembly. A stale `Ready` entry a lagging builder
-                        // re-inserts survives at most until the next build
-                        // sweeps it.
+                        relocked.insert(key, ReplyState::Ready(slab.clone(), applied));
+                        // In-flight pulls stay within one key of each other
+                        // (BSP: one iteration; SSP/ASP: one apply event);
+                        // drop finished keys' slabs back to the pool so the
+                        // cache stays O(segments). `Building` markers are
+                        // never evicted — removing one would break
+                        // single-flight: its waiters would see the slot
+                        // vacant and start a duplicate assembly. A stale
+                        // `Ready` entry a lagging builder re-inserts
+                        // survives at most until the next build sweeps it.
                         relocked.retain(|k, v| {
-                            matches!(v, ReplyState::Building) || k.0 + 1 >= iter
+                            matches!(v, ReplyState::Building) || k.0 + 1 >= key_iter
                         });
-                        Some(slab)
+                        Some((slab, applied))
                     }
                     None => {
                         // Interrupted by shutdown: clear the Building
@@ -479,12 +611,39 @@ fn pull_reply(
     }
 }
 
-/// Accumulate a pushed gradient slab (borrowed straight from the receive
+/// The full pull path: ask the sync policy to admit the request (which may
+/// park — the SSP staleness gate), derive the broadcast-cache key its gate
+/// implies, and serve from the shared cache. Returns `None` on shutdown.
+fn serve_pull(
+    shared: &Shared,
+    worker: Option<u32>,
+    iter: u64,
+    lo: u32,
+    hi: u32,
+    codec_id: CodecId,
+) -> Option<(Arc<PooledSlab>, u64)> {
+    let gate = shared.sync.admit_pull(worker, iter, &shared.shutting_down)?;
+    let key_iter = match gate {
+        // The barrier makes replies byte-identical per iteration — the
+        // historical BSP key.
+        PullGate::WaitFor { min } => min,
+        // Fresh snapshots change with every apply: key by the apply-event
+        // counter so pulls between applies still share one assembly.
+        PullGate::Fresh => shared.apply_events.load(Ordering::SeqCst),
+    };
+    pull_reply(shared, key_iter, gate, lo, hi, codec_id)
+}
+
+/// Consume a pushed gradient slab (borrowed straight from the receive
 /// scratch, decoded by the codec the frame is tagged with — per layer, so
-/// the offsets come from the immutable size map) and apply averaged SGD +
-/// advance the BSP clock on the last contribution.
+/// the offsets come from the immutable size map) the way the sync policy
+/// decided: `Barrier` accumulates and applies averaged SGD + advances the
+/// BSP clock on the last contribution; `Immediate` applies this gradient
+/// now (scaled `lr / workers`) and bumps the apply-event counter so the
+/// next fresh pull re-assembles.
 fn apply_push(
     shared: &Shared,
+    apply: PushApply,
     iter: u64,
     lo: u32,
     hi: u32,
@@ -492,6 +651,7 @@ fn apply_push(
     data: &[u8],
 ) -> Result<()> {
     let wc = codec_id.codec();
+    let scale = shared.cfg.lr / shared.cfg.workers as f32;
     let mut off = 0usize;
     let (mut raw_total, mut dec_ns) = (0usize, 0u64);
     for l in lo as usize..=hi as usize {
@@ -509,16 +669,32 @@ fn apply_push(
         dec_ns += t0.elapsed().as_nanos() as u64;
         raw_total += slot.params.len();
         off += n;
-        slot.grad_count += 1;
-        if slot.grad_count == shared.cfg.workers {
-            // Averaged SGD, then advance the BSP clock.
-            let scale = shared.cfg.lr / shared.cfg.workers as f32;
-            slot.apply_sgd(scale);
-            slot.version = iter + 1;
-            cv.notify_all();
+        match apply {
+            PushApply::Barrier => {
+                slot.grad_count += 1;
+                if slot.grad_count == shared.cfg.workers {
+                    // Averaged SGD, then advance the BSP clock.
+                    slot.apply_sgd(scale);
+                    slot.version = iter + 1;
+                    cv.notify_all();
+                }
+            }
+            PushApply::Immediate => {
+                // The accumulator held only this push (it is zeroed by
+                // every apply), so the same averaged step applies it alone.
+                slot.apply_sgd(scale);
+                // Clocks never move backwards: a straggler's late push for
+                // an old iteration still applies, but cannot rewind the
+                // version a faster worker already advanced.
+                slot.version = slot.version.max(iter + 1);
+                cv.notify_all();
+            }
         }
     }
     anyhow::ensure!(off == data.len(), "push payload size mismatch");
+    if apply == PushApply::Immediate {
+        shared.apply_events.fetch_add(1, Ordering::SeqCst);
+    }
     shared.codec_stats.record_decode(codec_id, raw_total, off, dec_ns);
     Ok(())
 }
@@ -528,16 +704,34 @@ fn apply_push(
 enum Action {
     Hello { worker: u32, version: u16 },
     Reply(Message),
-    ReplyShared { iter: u64, lo: u32, hi: u32, slab: Arc<PooledSlab> },
+    ReplyShared { iter: u64, lo: u32, hi: u32, applied: u64, slab: Arc<PooledSlab> },
     Close,
 }
 
 fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
     // The session's negotiated wire codec: fp32 until the worker proposes
-    // otherwise (so v3 sessions that never negotiate behave exactly like
-    // v2 ones). Replies are encoded with it; pushes are decoded by the
-    // codec their frame is tagged with.
+    // otherwise (so sessions that never negotiate behave exactly like v2
+    // ones). Replies are encoded with it; pushes are decoded by the codec
+    // their frame is tagged with.
     let mut session_codec = CodecId::Fp32;
+    // The worker this session registered as (`Hello`): the identity the
+    // sync policy's per-worker clocks key on. Anonymous sessions are
+    // served but never gate anyone.
+    let mut session_worker: Option<u32> = None;
+    let result = handle_conn_inner(&mut conn, shared, &mut session_codec, &mut session_worker);
+    // However the session ends, its clock must stop gating SSP peers.
+    if let Some(w) = session_worker {
+        shared.sync.deregister_worker(w);
+    }
+    result
+}
+
+fn handle_conn_inner(
+    conn: &mut Connection,
+    shared: &Shared,
+    session_codec: &mut CodecId,
+    session_worker: &mut Option<u32>,
+) -> Result<()> {
     loop {
         let action = {
             let msg = match conn.recv_ref() {
@@ -551,20 +745,33 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
                 MessageRef::CodecPropose { pref } => {
                     // First supported preference wins; fp32 is the
                     // mandatory fallback, so mixed fleets keep training.
-                    session_codec = codec::negotiate(&[pref], &codec::SUPPORTED);
-                    Action::Reply(Message::CodecAgree { codec: session_codec })
+                    *session_codec = codec::negotiate(&[pref], &codec::SUPPORTED);
+                    Action::Reply(Message::CodecAgree { codec: *session_codec })
+                }
+                MessageRef::SyncPropose { .. } => {
+                    // Unlike codecs there is no safe fallback between
+                    // consistency models: answer with the shard's own
+                    // configuration and let the worker refuse a mismatch.
+                    Action::Reply(Message::SyncAgree {
+                        mode: shared.sync.mode(),
+                        bound: shared.sync.staleness_bound(),
+                    })
                 }
                 MessageRef::Pull { iter, lo, hi } => {
-                    match pull_reply(shared, iter, lo, hi, session_codec) {
-                        Some(slab) => Action::ReplyShared { iter, lo, hi, slab },
+                    match serve_pull(shared, *session_worker, iter, lo, hi, *session_codec) {
+                        Some((slab, applied)) => {
+                            Action::ReplyShared { iter, lo, hi, applied, slab }
+                        }
                         // Shutting down: no reply, drop the session.
                         None => Action::Close,
                     }
                 }
                 MessageRef::Push { iter, lo, hi, codec, data } => {
                     // Gradients are consumed borrowed — no payload copy —
-                    // decoded by the frame's own codec tag.
-                    apply_push(shared, iter, lo, hi, codec, data)?;
+                    // decoded by the frame's own codec tag, applied as the
+                    // sync policy decides (barrier vs immediate).
+                    let apply = shared.sync.on_push(*session_worker, iter);
+                    apply_push(shared, apply, iter, lo, hi, codec, data)?;
                     Action::Reply(Message::PushAck { iter, lo, hi })
                 }
                 MessageRef::Shutdown => Action::Close,
@@ -587,10 +794,12 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
                     "protocol version mismatch: worker {worker} speaks \
                      v{version}, server v{PROTOCOL_VERSION}"
                 );
+                *session_worker = Some(worker);
+                shared.sync.register_worker(worker);
                 shared.connected.fetch_add(1, Ordering::SeqCst);
             }
             Action::Reply(m) => conn.send(&m)?,
-            Action::ReplyShared { iter, lo, hi, slab } => {
+            Action::ReplyShared { iter, lo, hi, applied, slab } => {
                 // The cached slab goes out borrowed, scatter-gather — the
                 // broadcast bytes are written once per worker but copied
                 // zero times.
@@ -598,7 +807,8 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
                     iter,
                     lo,
                     hi,
-                    codec: session_codec,
+                    applied,
+                    codec: *session_codec,
                     data: &slab[..],
                 })?;
             }
@@ -1004,5 +1214,308 @@ mod tests {
             }
             m => panic!("{m:?}"),
         }
+    }
+
+    // ---- Synchronization subsystem (ps/sync) ----
+
+    fn start_two_layer_with(workers: usize, opts: ServerOptions) -> ParamServer {
+        let mut layers = HashMap::new();
+        layers.insert(0, vec![1.0f32, 2.0]);
+        layers.insert(1, vec![10.0f32]);
+        ParamServer::start_with(ServerConfig { workers, lr: 0.5 }, layers, None, opts)
+            .unwrap()
+    }
+
+    fn ssp_opts(bound: u32) -> ServerOptions {
+        ServerOptions {
+            sync: SyncConfig::new(SyncMode::Ssp, bound).unwrap(),
+            ..ServerOptions::default()
+        }
+    }
+
+    fn asp_opts() -> ServerOptions {
+        ServerOptions {
+            sync: SyncConfig::new(SyncMode::Asp, 0).unwrap(),
+            ..ServerOptions::default()
+        }
+    }
+
+    fn hello(c: &mut Connection, worker: u32) {
+        c.send(&Message::Hello { worker, version: PROTOCOL_VERSION }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::HelloAck { .. }));
+    }
+
+    /// `SyncAgree` reports the shard's own configuration, whatever the
+    /// worker proposed — consistency models have no safe fallback.
+    #[test]
+    fn sync_agree_is_server_authoritative() {
+        let srv = start_two_layer_with(1, ssp_opts(3));
+        assert_eq!(srv.sync_mode(), SyncMode::Ssp);
+        let mut c = connect(srv.handle().addr);
+        c.send(&Message::SyncPropose { mode: SyncMode::Bsp, bound: 0 }).unwrap();
+        match c.recv().unwrap() {
+            Message::SyncAgree { mode, bound } => {
+                assert_eq!(mode, SyncMode::Ssp);
+                assert_eq!(bound, 3);
+            }
+            m => panic!("{m:?}"),
+        }
+        // The default server answers BSP.
+        let srv = start_two_layer(1);
+        let mut c = connect(srv.handle().addr);
+        c.send(&Message::SyncPropose { mode: SyncMode::Asp, bound: 0 }).unwrap();
+        match c.recv().unwrap() {
+            Message::SyncAgree { mode, bound } => {
+                assert_eq!(mode, SyncMode::Bsp);
+                assert_eq!(bound, 0);
+            }
+            m => panic!("{m:?}"),
+        }
+    }
+
+    /// BSP replies name the iteration they serve: `applied == iter`.
+    #[test]
+    fn bsp_replies_carry_the_barrier_iteration() {
+        let srv = start_two_layer(1);
+        let mut c = connect(srv.handle().addr);
+        for iter in 0..3u64 {
+            c.send(&Message::Pull { iter, lo: 0, hi: 1 }).unwrap();
+            match c.recv().unwrap() {
+                Message::PullReply { applied, .. } => assert_eq!(applied, iter),
+                m => panic!("{m:?}"),
+            }
+            c.send(&Message::Push {
+                iter,
+                lo: 0,
+                hi: 1,
+                codec: CodecId::Fp32,
+                data: slab::from_f32s(&[0.0, 0.0, 0.0]),
+            })
+            .unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        }
+    }
+
+    /// ASP applies each push the moment it arrives — no barrier on the
+    /// other worker — scaled `lr / workers`, and serves pulls fresh (no
+    /// version wait, `applied` reporting the snapshot's clock).
+    #[test]
+    fn asp_applies_on_push_and_serves_fresh() {
+        let srv = start_two_layer_with(2, asp_opts());
+        let mut a = connect(srv.handle().addr);
+        hello(&mut a, 0);
+        a.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 0,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&[2.0, 0.0]),
+        })
+        .unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::PushAck { .. }));
+        // Applied immediately with scale lr/workers = 0.25 — under BSP
+        // this would still be parked waiting for worker 1.
+        assert_eq!(srv.snapshot(0).unwrap(), vec![0.5, 2.0]);
+        assert_eq!(srv.apply_events(), 1);
+        // A pull far past the applied clock is served immediately with
+        // the *actual* snapshot iteration, not the requested one.
+        a.send(&Message::Pull { iter: 40, lo: 0, hi: 0 }).unwrap();
+        match a.recv().unwrap() {
+            Message::PullReply { applied, data, .. } => {
+                assert_eq!(applied, 1);
+                assert_eq!(slab::to_f32s(&data), vec![0.5, 2.0]);
+            }
+            m => panic!("{m:?}"),
+        }
+        assert_eq!(srv.pull_waiters(), 0, "asp never parks on versions");
+    }
+
+    /// A straggler's late push still applies under ASP but cannot rewind
+    /// the version clock a faster worker already advanced.
+    #[test]
+    fn asp_late_pushes_apply_without_rewinding_the_clock() {
+        let srv = start_two_layer_with(2, asp_opts());
+        let mut fast = connect(srv.handle().addr);
+        let mut slow = connect(srv.handle().addr);
+        hello(&mut fast, 0);
+        hello(&mut slow, 1);
+        for iter in 0..4u64 {
+            fast.send(&Message::Push {
+                iter,
+                lo: 0,
+                hi: 0,
+                codec: CodecId::Fp32,
+                data: slab::from_f32s(&[0.4, 0.0]),
+            })
+            .unwrap();
+            assert!(matches!(fast.recv().unwrap(), Message::PushAck { .. }));
+        }
+        slow.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 0,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&[0.4, 0.0]),
+        })
+        .unwrap();
+        assert!(matches!(slow.recv().unwrap(), Message::PushAck { .. }));
+        // All five pushes applied: w0 = 1 − 5·0.25·0.4 = 0.5.
+        let got = srv.snapshot(0).unwrap();
+        assert!((got[0] - 0.5).abs() < 1e-6, "{got:?}");
+        // The clock stayed at the fast worker's 4, not the late 1.
+        slow.send(&Message::Pull { iter: 0, lo: 0, hi: 0 }).unwrap();
+        match slow.recv().unwrap() {
+            Message::PullReply { applied, .. } => assert_eq!(applied, 4),
+            m => panic!("{m:?}"),
+        }
+    }
+
+    /// The SSP gate: a pull past `slowest + bound` parks in the policy
+    /// (not on version condvars) until the slowest worker advances; the
+    /// served snapshot is then fresh.
+    #[test]
+    fn ssp_parks_past_the_window_and_releases_on_progress() {
+        let srv = start_two_layer_with(2, ssp_opts(1));
+        let addr = srv.handle().addr;
+        let mut fast = connect(addr);
+        let mut slow = connect(addr);
+        hello(&mut fast, 0);
+        hello(&mut slow, 1);
+        // Within the window: slowest = 0, bound 1 → iter 1 passes.
+        fast.send(&Message::Pull { iter: 1, lo: 0, hi: 1 }).unwrap();
+        assert!(matches!(fast.recv().unwrap(), Message::PullReply { .. }));
+        // Past it: iter 2 > 0 + 1 parks in the sync gate.
+        fast.send(&Message::Pull { iter: 2, lo: 0, hi: 1 }).unwrap();
+        wait_until("ssp gate to park", || srv.sync_waiters() > 0);
+        assert_eq!(srv.pull_waiters(), 0, "ssp parks in the policy, not on versions");
+        // The slow worker pulling iteration 1 moves slowest to 1 → 2 is
+        // admitted.
+        slow.send(&Message::Pull { iter: 1, lo: 0, hi: 1 }).unwrap();
+        assert!(matches!(slow.recv().unwrap(), Message::PullReply { .. }));
+        assert!(matches!(fast.recv().unwrap(), Message::PullReply { .. }));
+        assert_eq!(srv.sync_waiters(), 0);
+        assert_eq!(srv.slowest_worker_iter(), 1);
+    }
+
+    /// A parked SSP pull is released when the straggler's session closes —
+    /// a departed worker must not gate the survivors forever.
+    #[test]
+    fn ssp_departed_worker_releases_the_gate() {
+        let srv = start_two_layer_with(2, ssp_opts(0));
+        let addr = srv.handle().addr;
+        let mut fast = connect(addr);
+        let mut slow = connect(addr);
+        hello(&mut fast, 0);
+        hello(&mut slow, 1);
+        fast.send(&Message::Pull { iter: 3, lo: 0, hi: 0 }).unwrap();
+        wait_until("ssp gate to park", || srv.sync_waiters() > 0);
+        drop(slow); // worker 1 hangs up → deregistered
+        assert!(matches!(fast.recv().unwrap(), Message::PullReply { .. }));
+    }
+
+    /// Shutdown drains pulls parked in the SSP gate deterministically,
+    /// exactly like the BSP version waiters.
+    #[test]
+    fn shutdown_drains_ssp_gate_waiters() {
+        let mut srv = start_two_layer_with(2, ssp_opts(0));
+        let addr = srv.handle().addr;
+        let t = std::thread::spawn(move || {
+            let mut c = connect(addr);
+            hello(&mut c, 0);
+            let mut other = connect(addr);
+            hello(&mut other, 1);
+            c.send(&Message::Pull { iter: 9, lo: 0, hi: 0 }).unwrap();
+            c.recv()
+        });
+        wait_until("ssp gate to park", || srv.sync_waiters() > 0);
+        srv.shutdown();
+        assert_eq!(srv.sync_waiters(), 0, "gate drained");
+        let _ = t.join().unwrap();
+    }
+
+    /// Under immediate-apply modes the broadcast cache is keyed by apply
+    /// events: pulls between applies share one assembly; an apply
+    /// invalidates it.
+    #[test]
+    fn fresh_reply_cache_is_versioned_by_apply_events() {
+        let srv = start_two_layer_with(1, asp_opts());
+        let mut c = connect(srv.handle().addr);
+        hello(&mut c, 0);
+        for iter in [0u64, 1, 2] {
+            c.send(&Message::Pull { iter, lo: 0, hi: 1 }).unwrap();
+            assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
+        }
+        let ws = srv.wire_stats();
+        assert_eq!(ws.reply_cache_builds, 1, "no apply between pulls → one build");
+        assert_eq!(ws.reply_cache_hits, 2);
+        c.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 1,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&[0.0, 0.0, 0.0]),
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        c.send(&Message::Pull { iter: 3, lo: 0, hi: 1 }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PullReply { .. }));
+        let ws = srv.wire_stats();
+        assert_eq!(ws.reply_cache_builds, 2, "the apply must invalidate the broadcast");
+    }
+
+    // ---- Bounded handler pool ----
+
+    /// The pool cap holds: with `handler_threads = 1`, a second connection
+    /// is not served until the first hangs up — backpressure through the
+    /// accept backlog, never a second thread.
+    #[test]
+    fn handler_pool_defers_connections_past_the_cap() {
+        let opts = ServerOptions { handler_threads: 1, ..ServerOptions::default() };
+        let srv = start_two_layer_with(1, opts);
+        let addr = srv.handle().addr;
+        let mut a = connect(addr);
+        a.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+        assert!(matches!(a.recv().unwrap(), Message::PullReply { .. }));
+        assert_eq!(srv.live_handlers(), 1);
+        // Second connection: accepted by the kernel, but no handler slot —
+        // its pull stays unanswered while `a` is alive.
+        let mut b = connect(addr);
+        b.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+        assert_eq!(srv.live_handlers(), 1, "cap exceeded");
+        drop(a);
+        // The freed slot picks `b` up and serves the queued pull.
+        assert!(matches!(b.recv().unwrap(), Message::PullReply { .. }));
+        assert!(srv.live_handlers() <= 1);
+    }
+
+    /// The cap is clamped to the worker count: a fleet larger than the
+    /// configured pool must still be fully served concurrently — `workers`
+    /// handlers can all be parked at the barrier at once, so a smaller
+    /// pool would deadlock training against its own backpressure.
+    #[test]
+    fn handler_pool_never_caps_below_the_fleet() {
+        let opts = ServerOptions { handler_threads: 1, ..ServerOptions::default() };
+        let srv = start_two_layer_with(2, opts);
+        let addr = srv.handle().addr;
+        let mut a = connect(addr);
+        let mut b = connect(addr);
+        // The barrier needs both pushes; with a cap of 1 the second
+        // connection would never be accepted and this would hang.
+        for c in [&mut a, &mut b] {
+            c.send(&Message::Push {
+                iter: 0,
+                lo: 0,
+                hi: 0,
+                codec: CodecId::Fp32,
+                data: slab::from_f32s(&[2.0, 0.0]),
+            })
+            .unwrap();
+        }
+        for c in [&mut a, &mut b] {
+            assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        }
+        // w0 -= (0.5/2) * (2 + 2) = 1; w1 untouched.
+        assert_eq!(srv.snapshot(0).unwrap(), vec![0.0, 2.0]);
+        assert_eq!(srv.live_handlers(), 2, "clamped cap admits the whole fleet");
     }
 }

@@ -1,0 +1,90 @@
+//! Asynchronous parallel: no gating anywhere.
+//!
+//! Every push is applied to the parameters the moment it arrives (scaled
+//! `lr / workers`, so one full round of pushes moves the parameters by the
+//! same total step as a BSP average), and every pull is served the
+//! freshest applied snapshot immediately. Per-worker iteration tags are
+//! still tracked — the `applied` iteration a `PullReply` carries lets the
+//! worker (and the straggler bench) measure the staleness it actually
+//! trained on, and [`SyncPolicy::slowest`] reports the laggard's clock —
+//! but nothing ever blocks on them.
+
+use std::sync::atomic::AtomicBool;
+use std::sync::Mutex;
+
+use super::{ClockTable, PullGate, PushApply, SyncMode, SyncPolicy};
+
+pub struct AspPolicy {
+    /// Observability only: per-worker iteration tags.
+    clocks: Mutex<ClockTable>,
+}
+
+impl AspPolicy {
+    pub fn new() -> AspPolicy {
+        AspPolicy { clocks: Mutex::new(ClockTable::default()) }
+    }
+}
+
+impl Default for AspPolicy {
+    fn default() -> Self {
+        AspPolicy::new()
+    }
+}
+
+impl SyncPolicy for AspPolicy {
+    fn mode(&self) -> SyncMode {
+        SyncMode::Asp
+    }
+
+    fn register_worker(&self, worker: u32) {
+        self.clocks.lock().unwrap().register(worker);
+    }
+
+    fn deregister_worker(&self, worker: u32) {
+        self.clocks.lock().unwrap().deregister(worker);
+    }
+
+    fn admit_pull(
+        &self,
+        worker: Option<u32>,
+        iter: u64,
+        _shutdown: &AtomicBool,
+    ) -> Option<PullGate> {
+        if let Some(w) = worker {
+            self.clocks.lock().unwrap().record(w, iter);
+        }
+        Some(PullGate::Fresh)
+    }
+
+    fn on_push(&self, worker: Option<u32>, iter: u64) -> PushApply {
+        if let Some(w) = worker {
+            // A push for `iter` means the worker finished computing it —
+            // keep the tag moving even if its next pull is far away.
+            self.clocks.lock().unwrap().record(w, iter);
+        }
+        PushApply::Immediate
+    }
+
+    fn slowest(&self) -> u64 {
+        self.clocks.lock().unwrap().slowest().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asp_never_blocks_and_tags_iterations() {
+        let p = AspPolicy::new();
+        let shutdown = AtomicBool::new(false);
+        p.register_worker(0);
+        p.register_worker(1);
+        assert_eq!(p.admit_pull(Some(0), 40, &shutdown), Some(PullGate::Fresh));
+        assert_eq!(p.admit_pull(None, 99, &shutdown), Some(PullGate::Fresh));
+        assert_eq!(p.on_push(Some(1), 3), PushApply::Immediate);
+        assert_eq!(p.slowest(), 3, "laggard's clock reported");
+        assert_eq!(p.waiters(), 0);
+        assert_eq!(p.name(), "asp");
+    }
+}

@@ -1,0 +1,62 @@
+//! Bulk-synchronous parallel — the barrier semantics extracted, unchanged,
+//! from the pre-subsystem `ps/server.rs`.
+//!
+//! A pull for iteration `t` parks on the per-layer version condvars until
+//! every requested layer has `version >= t` (the condvar wait itself lives
+//! in the server's assembly path — this policy only *names* the gate, so
+//! the extraction is behavior-identical and the existing server, worker,
+//! and codec-train suites pass unmodified). A push is accumulated and the
+//! averaged SGD update is applied once every registered worker has
+//! contributed, which is what advances the version clock.
+
+use std::sync::atomic::AtomicBool;
+
+use super::{PullGate, PushApply, SyncMode, SyncPolicy};
+
+/// Stateless: the barrier state (gradient counts, per-layer versions) is
+/// the server's own, exactly as before the extraction.
+pub struct BspPolicy;
+
+impl SyncPolicy for BspPolicy {
+    fn mode(&self) -> SyncMode {
+        SyncMode::Bsp
+    }
+
+    fn admit_pull(
+        &self,
+        _worker: Option<u32>,
+        iter: u64,
+        _shutdown: &AtomicBool,
+    ) -> Option<PullGate> {
+        Some(PullGate::WaitFor { min: iter })
+    }
+
+    fn on_push(&self, _worker: Option<u32>, _iter: u64) -> PushApply {
+        PushApply::Barrier
+    }
+
+    fn slowest(&self) -> u64 {
+        0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bsp_always_gates_on_the_requested_iteration() {
+        let p = BspPolicy;
+        let shutdown = AtomicBool::new(false);
+        for iter in [0u64, 1, 99] {
+            assert_eq!(
+                p.admit_pull(Some(0), iter, &shutdown),
+                Some(PullGate::WaitFor { min: iter })
+            );
+            assert_eq!(p.admit_pull(None, iter, &shutdown), Some(PullGate::WaitFor { min: iter }));
+            assert_eq!(p.on_push(Some(0), iter), PushApply::Barrier);
+        }
+        assert_eq!(p.staleness_bound(), 0);
+        assert_eq!(p.name(), "bsp");
+    }
+}

@@ -1,0 +1,322 @@
+//! Pluggable parameter-server synchronization (ACE-Sync-style adaptive
+//! cloud-edge synchronization — arXiv 2512.18127).
+//!
+//! DynaComm's overlap scheduling was built on a BSP parameter server: every
+//! pull parks at a barrier until the slowest worker's gradients of the
+//! previous iteration are applied. On a heterogeneous edge fleet one
+//! 4×-slowed device therefore stalls *every* worker, and no amount of
+//! transmission re-segmentation can win that time back. This module makes
+//! the consistency model an explicit, pluggable subsystem — a
+//! [`SyncPolicy`] decides, per pull, whether a worker may proceed, must
+//! wait, or is served the freshest applied snapshot, and, per push, when
+//! gradients are applied — with three implementations behind a registry
+//! mirroring `sched::registry`:
+//!
+//! * [`bsp::BspPolicy`] — the extracted barrier semantics, behavior-
+//!   identical to the pre-subsystem server (conformance-tested unchanged);
+//! * [`ssp::SspPolicy`] — stale-synchronous parallel with a bounded
+//!   staleness window (`--staleness-bound N`): a worker within `N`
+//!   iterations of the slowest proceeds immediately against the freshest
+//!   applied snapshot, one beyond it parks until the slowest catches up;
+//!   the slowest worker trivially satisfies its own bound, so it is never
+//!   starved;
+//! * [`asp::AspPolicy`] — fully asynchronous: every push is applied
+//!   immediately (scaled `lr / workers`), every pull is served fresh, and
+//!   per-worker iteration tags are tracked for observability only.
+//!
+//! The policy's choices surface on the wire (protocol v4, `docs/SYNC.md` /
+//! `docs/WIRE.md`): `PullReply` carries the `applied` iteration of the
+//! snapshot it serves, so the worker measures the staleness it actually
+//! observed — and its profiler's transfer samples embed the *actual* wait
+//! window of the active policy, not an assumed full barrier — and a
+//! `SyncPropose`/`SyncAgree` registration exchange fails mismatched
+//! worker/server sync configurations loudly instead of training under two
+//! different consistency models.
+
+pub mod asp;
+pub mod bsp;
+pub mod ssp;
+
+use std::sync::atomic::AtomicBool;
+
+use anyhow::Result;
+
+/// Synchronization model selector; also the 1-byte wire tag carried by the
+/// `SyncPropose`/`SyncAgree` registration frames (`docs/WIRE.md`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SyncMode {
+    /// Bulk-synchronous parallel: full barrier per iteration (the paper's
+    /// evaluation mode, and the default).
+    Bsp,
+    /// Stale-synchronous parallel: bounded staleness window.
+    Ssp,
+    /// Asynchronous parallel: apply-on-push, serve-fresh, no gating.
+    Asp,
+}
+
+impl SyncMode {
+    /// All modes, BSP (the default) first.
+    pub const ALL: [SyncMode; 3] = [SyncMode::Bsp, SyncMode::Ssp, SyncMode::Asp];
+
+    /// The 1-byte wire tag.
+    pub fn tag(self) -> u8 {
+        match self {
+            SyncMode::Bsp => 0,
+            SyncMode::Ssp => 1,
+            SyncMode::Asp => 2,
+        }
+    }
+
+    /// Parse a wire tag.
+    pub fn from_tag(tag: u8) -> Option<SyncMode> {
+        match tag {
+            0 => Some(SyncMode::Bsp),
+            1 => Some(SyncMode::Ssp),
+            2 => Some(SyncMode::Asp),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SyncMode::Bsp => "bsp",
+            SyncMode::Ssp => "ssp",
+            SyncMode::Asp => "asp",
+        }
+    }
+
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Option<SyncMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "bsp" | "sync" | "barrier" => Some(SyncMode::Bsp),
+            "ssp" | "stale" | "bounded" => Some(SyncMode::Ssp),
+            "asp" | "async" => Some(SyncMode::Asp),
+            _ => None,
+        }
+    }
+}
+
+/// Canonical names of every registry entry, in creation-tested order
+/// (mirrors `sched::registry::NAMES`).
+pub const NAMES: [&str; 3] = ["bsp", "ssp", "asp"];
+
+/// A validated (mode, staleness bound) pair — the server shard's sync
+/// configuration and the worker's expectation of it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SyncConfig {
+    pub mode: SyncMode,
+    /// SSP: iterations a worker may run ahead of the slowest registered
+    /// worker. Must be 0 for BSP/ASP ([`SyncConfig::validate`], also
+    /// enforced on the wire).
+    pub staleness_bound: u32,
+}
+
+impl Default for SyncConfig {
+    fn default() -> Self {
+        SyncConfig { mode: SyncMode::Bsp, staleness_bound: 0 }
+    }
+}
+
+impl SyncConfig {
+    pub fn new(mode: SyncMode, staleness_bound: u32) -> Result<SyncConfig> {
+        let cfg = SyncConfig { mode, staleness_bound };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// A staleness bound only means something under SSP; refusing it
+    /// elsewhere keeps `--sync asp --staleness-bound 3` from silently
+    /// training unbounded while the operator believes otherwise.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.staleness_bound == 0 || self.mode == SyncMode::Ssp,
+            "staleness bound {} is invalid for sync mode {} (only ssp is bounded)",
+            self.staleness_bound,
+            self.mode.name()
+        );
+        Ok(())
+    }
+}
+
+/// How a pull must gate on the per-layer applied versions once admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PullGate {
+    /// Park on the version condvars until every requested layer has
+    /// `version >= min` — the BSP barrier.
+    WaitFor { min: u64 },
+    /// Serve the freshest applied snapshot immediately (SSP once inside
+    /// the staleness window, ASP always).
+    Fresh,
+}
+
+/// When a pushed gradient is applied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushApply {
+    /// Accumulate; apply averaged SGD once every registered worker has
+    /// contributed, then advance the clock (BSP).
+    Barrier,
+    /// Apply this gradient now, scaled `lr / workers` (SSP/ASP).
+    Immediate,
+}
+
+/// One shard's synchronization policy. The server consults it on every
+/// pull and push; the policy owns whatever clock state its model needs
+/// (per-worker iteration tags, the staleness gate) and may block inside
+/// [`SyncPolicy::admit_pull`] — which is why shutdown must call
+/// [`SyncPolicy::interrupt`].
+pub trait SyncPolicy: Send + Sync {
+    fn mode(&self) -> SyncMode;
+
+    fn name(&self) -> &'static str {
+        self.mode().name()
+    }
+
+    /// SSP's window; 0 elsewhere.
+    fn staleness_bound(&self) -> u32 {
+        0
+    }
+
+    /// A worker (identified when the session said `Hello`) registered.
+    /// SSP starts its clock at 0 so late boots gate eager peers.
+    fn register_worker(&self, _worker: u32) {}
+
+    /// The worker's session closed; its clock must stop gating others.
+    fn deregister_worker(&self, _worker: u32) {}
+
+    /// Admit a pull for iteration `iter`, advancing the worker's clock.
+    /// May block (SSP parks past-the-window pulls); returns `None` when
+    /// `shutdown` interrupted the wait.
+    fn admit_pull(
+        &self,
+        worker: Option<u32>,
+        iter: u64,
+        shutdown: &AtomicBool,
+    ) -> Option<PullGate>;
+
+    /// Decide what happens to a push for iteration `iter`.
+    fn on_push(&self, worker: Option<u32>, iter: u64) -> PushApply;
+
+    /// The slowest registered worker's iteration clock (0 when none).
+    fn slowest(&self) -> u64;
+
+    /// Pulls currently parked inside [`SyncPolicy::admit_pull`]
+    /// (observability: condition-based tests instead of sleeps).
+    fn waiters(&self) -> u32 {
+        0
+    }
+
+    /// Wake every parked [`SyncPolicy::admit_pull`] so it can observe the
+    /// shutdown flag — called by `ParamServer::shutdown`.
+    fn interrupt(&self) {}
+}
+
+/// Instantiate the policy behind a validated [`SyncConfig`] — the single
+/// place policies are constructed, mirroring `sched::registry`.
+pub fn create(cfg: SyncConfig) -> Box<dyn SyncPolicy> {
+    match cfg.mode {
+        SyncMode::Bsp => Box::new(bsp::BspPolicy),
+        SyncMode::Ssp => Box::new(ssp::SspPolicy::new(cfg.staleness_bound)),
+        SyncMode::Asp => Box::new(asp::AspPolicy::new()),
+    }
+}
+
+/// Instantiate by name (accepts every [`SyncMode::parse`] spelling);
+/// unknown names list what is available.
+pub fn create_by_name(name: &str, staleness_bound: u32) -> Result<Box<dyn SyncPolicy>> {
+    let mode = SyncMode::parse(name).ok_or_else(|| {
+        anyhow::anyhow!("unknown sync mode '{name}' (known: {})", NAMES.join(", "))
+    })?;
+    Ok(create(SyncConfig::new(mode, staleness_bound)?))
+}
+
+/// Per-worker iteration clocks shared by the SSP gate and ASP's
+/// observability: `record` advances a worker's clock to the iteration it
+/// is pulling for, `slowest` is the min over registered workers.
+#[derive(Debug, Default)]
+pub(crate) struct ClockTable {
+    clocks: std::collections::HashMap<u32, u64>,
+}
+
+impl ClockTable {
+    /// Advance `worker`'s clock to at least `iter`; true if it moved.
+    pub fn record(&mut self, worker: u32, iter: u64) -> bool {
+        let c = self.clocks.entry(worker).or_insert(0);
+        if iter > *c {
+            *c = iter;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn register(&mut self, worker: u32) {
+        self.clocks.entry(worker).or_insert(0);
+    }
+
+    /// True if the worker was present (its removal can unblock waiters).
+    pub fn deregister(&mut self, worker: u32) -> bool {
+        self.clocks.remove(&worker).is_some()
+    }
+
+    /// Min clock over registered workers; `None` when none registered.
+    pub fn slowest(&self) -> Option<u64> {
+        self.clocks.values().copied().min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modes_tags_names_roundtrip() {
+        for m in SyncMode::ALL {
+            assert_eq!(SyncMode::from_tag(m.tag()), Some(m));
+            assert_eq!(SyncMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(SyncMode::from_tag(3), None);
+        assert_eq!(SyncMode::parse("gossip"), None);
+        // Alias spellings.
+        assert_eq!(SyncMode::parse("ASYNC"), Some(SyncMode::Asp));
+        assert_eq!(SyncMode::parse("stale"), Some(SyncMode::Ssp));
+        assert_eq!(SyncMode::parse("barrier"), Some(SyncMode::Bsp));
+    }
+
+    #[test]
+    fn every_name_creates_and_reports_itself() {
+        for name in NAMES {
+            let bound = if name == "ssp" { 2 } else { 0 };
+            let p = create_by_name(name, bound).unwrap();
+            assert_eq!(p.name(), name, "canonical name round-trip");
+            assert_eq!(p.staleness_bound(), bound);
+        }
+        let err = format!("{:#}", create_by_name("nope", 0).unwrap_err());
+        assert!(err.contains("ssp"), "error lists known names: {err}");
+    }
+
+    #[test]
+    fn bound_is_rejected_outside_ssp() {
+        assert!(SyncConfig::new(SyncMode::Ssp, 5).is_ok());
+        assert!(SyncConfig::new(SyncMode::Bsp, 0).is_ok());
+        assert!(SyncConfig::new(SyncMode::Bsp, 1).is_err());
+        assert!(SyncConfig::new(SyncMode::Asp, 1).is_err());
+        assert!(create_by_name("asp", 3).is_err());
+    }
+
+    #[test]
+    fn clock_table_tracks_minimum() {
+        let mut t = ClockTable::default();
+        assert_eq!(t.slowest(), None);
+        t.register(3);
+        assert_eq!(t.slowest(), Some(0));
+        assert!(t.record(3, 5));
+        assert!(!t.record(3, 4), "clocks never move backwards");
+        t.register(7);
+        assert_eq!(t.slowest(), Some(0), "late registrant gates at 0");
+        t.record(7, 9);
+        assert_eq!(t.slowest(), Some(5));
+        assert!(t.deregister(3));
+        assert_eq!(t.slowest(), Some(9));
+        assert!(!t.deregister(3));
+    }
+}

@@ -1,0 +1,209 @@
+//! Stale-synchronous parallel: a bounded staleness window over per-worker
+//! iteration clocks.
+//!
+//! Every registered worker carries a clock — the iteration of its latest
+//! pull. A pull for iteration `t` is admitted as soon as
+//! `t <= slowest + bound` (slowest = min clock over registered workers)
+//! and is then served the **freshest applied snapshot** without touching
+//! the per-layer version condvars; a pull past the window parks here, in
+//! the policy, until the slowest worker's clock catches up (or its session
+//! closes). The slowest worker always satisfies `t == slowest`, so it is
+//! admitted unconditionally — **never starved** — and, because pushes are
+//! applied immediately, its gradients land without waiting for anyone.
+//!
+//! The consistency guarantee (property-tested in
+//! `tests/sync_integration.rs`): an admitted pull observes a snapshot
+//! whose applied iteration is at least `slowest`, hence never older than
+//! `t - bound` — no worker ever trains on parameters more than `bound`
+//! iterations behind its own clock.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use super::{ClockTable, PullGate, PushApply, SyncMode, SyncPolicy};
+
+pub struct SspPolicy {
+    bound: u32,
+    clocks: Mutex<ClockTable>,
+    /// Signals clock advances (and interrupts) to parked pulls.
+    advanced: Condvar,
+    waiters: AtomicU32,
+}
+
+impl SspPolicy {
+    pub fn new(bound: u32) -> SspPolicy {
+        SspPolicy {
+            bound,
+            clocks: Mutex::new(ClockTable::default()),
+            advanced: Condvar::new(),
+            waiters: AtomicU32::new(0),
+        }
+    }
+}
+
+impl SyncPolicy for SspPolicy {
+    fn mode(&self) -> SyncMode {
+        SyncMode::Ssp
+    }
+
+    fn staleness_bound(&self) -> u32 {
+        self.bound
+    }
+
+    fn register_worker(&self, worker: u32) {
+        self.clocks.lock().unwrap().register(worker);
+    }
+
+    fn deregister_worker(&self, worker: u32) {
+        if self.clocks.lock().unwrap().deregister(worker) {
+            // A departed straggler must not gate the survivors forever.
+            self.advanced.notify_all();
+        }
+    }
+
+    fn admit_pull(
+        &self,
+        worker: Option<u32>,
+        iter: u64,
+        shutdown: &AtomicBool,
+    ) -> Option<PullGate> {
+        let mut clocks = self.clocks.lock().unwrap();
+        if let Some(w) = worker {
+            // The pull itself is this worker's progress signal; its
+            // advance may be exactly what a parked peer is waiting on.
+            if clocks.record(w, iter) {
+                self.advanced.notify_all();
+            }
+        }
+        // Anonymous sessions (no Hello) carry no clock and gate nothing;
+        // serve them fresh — they cannot participate in the window.
+        if worker.is_some() {
+            // `slowest` includes this worker's just-recorded clock, which
+            // is `>= iter`, so the slowest worker admits itself trivially.
+            while clocks.slowest().is_some_and(|s| iter > s + self.bound as u64) {
+                if shutdown.load(Ordering::SeqCst) {
+                    return None;
+                }
+                self.waiters.fetch_add(1, Ordering::SeqCst);
+                let woken = self.advanced.wait(clocks).unwrap();
+                self.waiters.fetch_sub(1, Ordering::SeqCst);
+                clocks = woken;
+            }
+        }
+        Some(PullGate::Fresh)
+    }
+
+    fn on_push(&self, _worker: Option<u32>, _iter: u64) -> PushApply {
+        PushApply::Immediate
+    }
+
+    fn slowest(&self) -> u64 {
+        self.clocks.lock().unwrap().slowest().unwrap_or(0)
+    }
+
+    fn waiters(&self) -> u32 {
+        self.waiters.load(Ordering::SeqCst)
+    }
+
+    fn interrupt(&self) {
+        // Hold the lock so a racing waiter cannot re-park between its
+        // shutdown check and the wait.
+        let _clocks = self.clocks.lock().unwrap();
+        self.advanced.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    #[test]
+    fn within_window_pulls_are_admitted_fresh() {
+        let p = SspPolicy::new(2);
+        let shutdown = AtomicBool::new(false);
+        p.register_worker(0);
+        p.register_worker(1);
+        // Worker 1 at clock 0; worker 0 may pull up to iteration 2.
+        for iter in [0, 1, 2] {
+            assert_eq!(p.admit_pull(Some(0), iter, &shutdown), Some(PullGate::Fresh));
+        }
+        assert_eq!(p.slowest(), 0);
+        assert_eq!(p.waiters(), 0);
+    }
+
+    #[test]
+    fn past_window_pulls_park_until_the_slowest_advances() {
+        let p = Arc::new(SspPolicy::new(1));
+        p.register_worker(0);
+        p.register_worker(1);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (p2, s2) = (p.clone(), shutdown.clone());
+        let t = std::thread::spawn(move || p2.admit_pull(Some(0), 2, &s2));
+        wait_until("pull to park", || p.waiters() > 0);
+        // Worker 1 advancing to iteration 1 puts 2 within 1 + bound(1).
+        assert_eq!(p.admit_pull(Some(1), 1, &shutdown), Some(PullGate::Fresh));
+        assert_eq!(t.join().unwrap(), Some(PullGate::Fresh));
+        assert_eq!(p.waiters(), 0);
+    }
+
+    #[test]
+    fn the_slowest_worker_is_never_starved() {
+        let p = SspPolicy::new(0);
+        let shutdown = AtomicBool::new(false);
+        p.register_worker(0);
+        p.register_worker(1);
+        // Even at bound 0, the slowest worker's own pulls always pass.
+        for iter in 0..5 {
+            assert_eq!(p.admit_pull(Some(0), iter, &shutdown), Some(PullGate::Fresh));
+            assert_eq!(p.admit_pull(Some(1), iter, &shutdown), Some(PullGate::Fresh));
+        }
+        assert_eq!(p.slowest(), 4);
+    }
+
+    #[test]
+    fn departed_stragglers_release_the_window() {
+        let p = Arc::new(SspPolicy::new(0));
+        p.register_worker(0);
+        p.register_worker(1);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (p2, s2) = (p.clone(), shutdown.clone());
+        let t = std::thread::spawn(move || p2.admit_pull(Some(0), 3, &s2));
+        wait_until("pull to park", || p.waiters() > 0);
+        p.deregister_worker(1);
+        assert_eq!(t.join().unwrap(), Some(PullGate::Fresh));
+    }
+
+    #[test]
+    fn interrupt_releases_parked_pulls_on_shutdown() {
+        let p = Arc::new(SspPolicy::new(0));
+        p.register_worker(0);
+        p.register_worker(1);
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (p2, s2) = (p.clone(), shutdown.clone());
+        let t = std::thread::spawn(move || p2.admit_pull(Some(0), 9, &s2));
+        wait_until("pull to park", || p.waiters() > 0);
+        shutdown.store(true, Ordering::SeqCst);
+        p.interrupt();
+        assert_eq!(t.join().unwrap(), None, "shutdown must interrupt the wait");
+    }
+
+    #[test]
+    fn anonymous_sessions_are_served_fresh_and_never_gate() {
+        let p = SspPolicy::new(0);
+        let shutdown = AtomicBool::new(false);
+        p.register_worker(0);
+        // No worker id: no clock, no parking, whatever the iteration.
+        assert_eq!(p.admit_pull(None, 50, &shutdown), Some(PullGate::Fresh));
+        assert_eq!(p.slowest(), 0, "anonymous pulls leave the clocks alone");
+    }
+}

@@ -33,12 +33,14 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::config::Strategy;
+use crate::net::codec::ef::ErrorFeedback;
 use crate::net::codec::{CodecId, CodecStats, CodecStatsTable};
 use crate::net::pool::{SlabCheckout, SlabPool};
 use crate::net::{Connection, LinkShaper, Message, RecvMsg, PROTOCOL_VERSION};
 use crate::profiler::Profiler;
-use crate::ps::exec::{ExecPlan, SlabSlice};
+use crate::ps::exec::{ExecPlan, SegmentPull, SlabSlice};
 use crate::ps::sharding::ShardMap;
+use crate::ps::sync::SyncMode;
 use crate::runtime::{RuntimeClient, Tensor};
 use crate::sched::registry::{self, SchedulerParams};
 use crate::sched::{Decomposition, SchedulePlan, Scheduler};
@@ -68,6 +70,18 @@ pub struct WorkerConfig {
     /// registration; the session falls back to fp32 unless all shards
     /// agree, so mixed fleets keep training.
     pub codec: CodecId,
+    /// The synchronization mode this worker expects its shards to run
+    /// (`ps::sync`, `--sync`). Proposed to every shard at registration;
+    /// unlike codecs there is no safe fallback between consistency
+    /// models, so a disagreeing shard fails the connect loudly.
+    pub sync: SyncMode,
+    /// Expected SSP staleness bound (`--staleness-bound`); the server's
+    /// answer is authoritative and adopted for the client-side check.
+    pub staleness_bound: u32,
+    /// EF-SGD error feedback (`net::codec::ef`): under a lossy codec,
+    /// carry each layer's quantization error into the next iteration's
+    /// gradient instead of dropping it. On by default; no-op under fp32.
+    pub error_feedback: bool,
 }
 
 /// Per-run observability, returned to the trainer.
@@ -90,6 +104,11 @@ pub struct WorkerReport {
     /// under the threshold): the expensive decision procedure ran only
     /// `sched_ms.len() - sched_reused` times.
     pub sched_reused: usize,
+    /// Max staleness observed per iteration (`iter − applied`, in
+    /// iterations, over the iteration's pull segments): identically 0
+    /// under BSP, bounded by `--staleness-bound` under SSP, and the
+    /// measured consistency cost under ASP.
+    pub staleness: Vec<u64>,
 }
 
 /// One recorded plan change, carrying the wall-clock of the re-plan call
@@ -139,6 +158,16 @@ pub struct EdgeWorker {
     codec: CodecId,
     /// Worker-side per-codec counters (gradient encodes, reply decodes).
     codec_stats: Arc<CodecStatsTable>,
+    /// The synchronization mode every shard confirmed at registration.
+    sync: SyncMode,
+    /// The servers' authoritative SSP staleness bound (0 outside SSP);
+    /// replies are checked against it client-side.
+    staleness_bound: u32,
+    /// EF-SGD residuals, kept iff `error_feedback` and the codec is lossy.
+    ef: Option<ErrorFeedback>,
+    /// Max staleness the latest iteration observed (see
+    /// [`WorkerReport::staleness`]).
+    last_staleness: u64,
 }
 
 /// Propose a session codec on one shard connection; returns what the
@@ -148,6 +177,27 @@ fn propose_codec(conn: &mut Connection, pref: CodecId) -> Result<CodecId> {
     match conn.recv()? {
         Message::CodecAgree { codec } => Ok(codec),
         m => anyhow::bail!("bad codec agreement: {m:?}"),
+    }
+}
+
+/// Announce the worker's expected sync configuration to one shard; the
+/// server answers with its own, which must match the expected mode — two
+/// consistency models cannot train one job, so a mismatch is a loud
+/// connect failure, not a fallback. Returns the server's authoritative
+/// staleness bound.
+fn propose_sync(conn: &mut Connection, mode: SyncMode, bound: u32) -> Result<u32> {
+    conn.send(&Message::SyncPropose { mode, bound })?;
+    match conn.recv()? {
+        Message::SyncAgree { mode: got, bound } => {
+            anyhow::ensure!(
+                got == mode,
+                "sync mode mismatch: worker configured for {}, shard runs {}",
+                mode.name(),
+                got.name()
+            );
+            Ok(bound)
+        }
+        m => anyhow::bail!("bad sync agreement: {m:?}"),
     }
 }
 
@@ -199,6 +249,26 @@ impl EdgeWorker {
                 m => anyhow::bail!("bad hello ack: {m:?}"),
             }
             conns.push(conn);
+        }
+        // Announce the expected sync configuration to every shard (the
+        // flags configure workers and servers from the same source, so a
+        // mismatch is a deployment bug worth failing loudly); the shards'
+        // answer fixes the staleness bound the replies are checked
+        // against — every shard must agree on it, or the single
+        // client-side bound check would be wrong for all but one of them.
+        // Validated first so a bogus bound never hits the wire.
+        let sync_cfg =
+            crate::ps::sync::SyncConfig::new(cfg.sync, cfg.staleness_bound)?;
+        let mut staleness_bound = sync_cfg.staleness_bound;
+        for (i, conn) in conns.iter_mut().enumerate() {
+            let got = propose_sync(conn, sync_cfg.mode, sync_cfg.staleness_bound)?;
+            anyhow::ensure!(
+                i == 0 || got == staleness_bound,
+                "staleness bound disagreement across shards: {} vs {}",
+                staleness_bound,
+                got
+            );
+            staleness_bound = got;
         }
         // Negotiate the session's wire codec with every shard: all must
         // agree on the preference, otherwise the whole worker unifies on
@@ -252,6 +322,14 @@ impl EdgeWorker {
         // or wide-segment plans would re-allocate most slabs every
         // iteration and silently void the zero-allocation contract.
         let pool = SlabPool::with_max_retained(depth + 16);
+        // EF-SGD residuals: only worth carrying under a lossy codec (the
+        // identity codec's error is identically zero).
+        let ef = if cfg.error_feedback && codec != CodecId::Fp32 {
+            let elems: Vec<usize> = layer_bytes.iter().map(|b| b / 4).collect();
+            Some(ErrorFeedback::new(&elems))
+        } else {
+            None
+        };
         let exec =
             Arc::new(ExecPlan::compile(&plan, &layer_bytes, shard, pool.clone(), codec));
         Ok(EdgeWorker {
@@ -266,7 +344,26 @@ impl EdgeWorker {
             pool,
             codec,
             codec_stats: Arc::new(CodecStatsTable::new()),
+            sync: sync_cfg.mode,
+            staleness_bound,
+            ef,
+            last_staleness: 0,
         })
+    }
+
+    /// The synchronization mode every shard confirmed for this session.
+    pub fn sync_mode(&self) -> SyncMode {
+        self.sync
+    }
+
+    /// The servers' authoritative SSP staleness bound (0 outside SSP).
+    pub fn staleness_bound(&self) -> u32 {
+        self.staleness_bound
+    }
+
+    /// Whether EF-SGD residuals are being carried this session.
+    pub fn error_feedback_active(&self) -> bool {
+        self.ef.is_some()
     }
 
     /// The wire codec this session negotiated with its shards.
@@ -358,6 +455,7 @@ impl EdgeWorker {
             report.iter_ms.push(t0.elapsed().as_secs_f64() * 1e3);
             report.losses.push(loss);
             report.batch_top1.push(top1);
+            report.staleness.push(self.last_staleness);
         }
         Ok(report)
     }
@@ -372,7 +470,7 @@ impl EdgeWorker {
 
         // ---- Forward: puller thread streams segments; main computes. ----
         let (param_tx, param_rx) = mpsc::channel::<(usize, SlabSlice)>();
-        let (stat_tx, stat_rx) = mpsc::channel::<(usize, f64)>();
+        let (stat_tx, stat_rx) = mpsc::channel::<SegmentPull>();
         let mut puller_conns = Vec::new();
         for c in &self.conns {
             puller_conns.push(c.try_clone()?);
@@ -385,6 +483,8 @@ impl EdgeWorker {
             .spawn(move || -> Result<()> {
                 for seg in &exec_pull.fwd {
                     let t0 = Instant::now();
+                    // Oldest snapshot served across the segment's shards.
+                    let mut seg_applied = u64::MAX;
                     for sub in &seg.subs {
                         puller_conns[sub.server].send(&Message::Pull {
                             iter,
@@ -395,11 +495,14 @@ impl EdgeWorker {
                         // layer gets a view of it — no copies on the pull
                         // path, and the frame recycles when the last view
                         // is consumed.
-                        let (rcodec, data) =
+                        let (rcodec, applied, data) =
                             match puller_conns[sub.server].recv_pooled(&pull_pool)? {
-                                RecvMsg::PullReply { codec, data, .. } => (codec, data),
+                                RecvMsg::PullReply { codec, applied, data, .. } => {
+                                    (codec, applied, data)
+                                }
                                 m => anyhow::bail!("bad pull reply: {m:?}"),
                             };
+                        seg_applied = seg_applied.min(applied);
                         anyhow::ensure!(
                             rcodec == exec_pull.codec,
                             "pull reply codec mismatch: got {}, session speaks {}",
@@ -454,7 +557,11 @@ impl EdgeWorker {
                         }
                     }
                     let ms = t0.elapsed().as_secs_f64() * 1e3;
-                    let _ = stat_tx.send((seg.wire_bytes, ms));
+                    let _ = stat_tx.send(SegmentPull {
+                        wire_bytes: seg.wire_bytes,
+                        ms,
+                        applied: if seg_applied == u64::MAX { iter } else { seg_applied },
+                    });
                 }
                 Ok(())
             })?;
@@ -479,9 +586,24 @@ impl EdgeWorker {
             .join()
             .map_err(|_| anyhow::anyhow!("puller panicked"))?
             .context("puller failed")?;
-        while let Ok((bytes, ms)) = stat_rx.try_recv() {
-            self.profiler.record_pull(bytes, ms);
+        let mut max_stale = 0u64;
+        while let Ok(sp) = stat_rx.try_recv() {
+            // The sample's wall-clock was measured under the live sync
+            // policy, so the profiler's Δt/rate fit — and the DP that
+            // consumes it — costs the mode's actual wait window.
+            self.profiler.record_pull(sp.wire_bytes, sp.ms);
+            max_stale = max_stale.max(iter.saturating_sub(sp.applied));
         }
+        // Client-side check of the server's staleness contract: under SSP
+        // no admitted pull may be served a snapshot older than the bound.
+        if self.sync == SyncMode::Ssp {
+            anyhow::ensure!(
+                max_stale <= self.staleness_bound as u64,
+                "SSP staleness violated: observed {max_stale} > bound {}",
+                self.staleness_bound
+            );
+        }
+        self.last_staleness = max_stale;
 
         // ---- Loss head. ----
         let logits = &acts[depth];
@@ -569,7 +691,13 @@ impl EdgeWorker {
                 let wc = exec.codec.codec();
                 let mut wire = exec.checkout_layer_wire(l);
                 let te = Instant::now();
-                let err = wc.encode(&flat, &mut wire);
+                // EF-SGD: fold the carried residual into the gradient
+                // before quantizing and bank this step's rounding error
+                // for the next iteration (`net::codec::ef`).
+                let err = match self.ef.as_mut() {
+                    Some(ef) => ef.encode(l, wc, &mut flat[..], &mut wire)?,
+                    None => wc.encode(&flat, &mut wire),
+                };
                 self.codec_stats.record_encode(
                     exec.codec,
                     flat.len(),

@@ -6,11 +6,15 @@
 //!   the examples.
 //! * [`cluster`] — multi-worker BSP model with server-side bandwidth
 //!   contention (Fig. 11 scalability).
+//! * [`straggler`] — per-worker slowdown injection × sync modes
+//!   (`ps::sync`): what BSP loses to a slow worker and how much
+//!   bounded-staleness SSP / async ASP recover.
 //! * [`sweep`] — batch-size / bandwidth / worker sweeps (Fig. 9, Fig. 11).
 //! * [`workload`] — random profile generator (Fig. 12, Table I).
 
 pub mod cluster;
 pub mod gantt;
+pub mod straggler;
 pub mod sweep;
 pub mod timeline;
 pub mod workload;

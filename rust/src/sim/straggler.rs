@@ -1,0 +1,177 @@
+//! Straggler injection: per-worker slowdown factors × sync modes.
+//!
+//! The cluster model in [`crate::sim::cluster`] assumes homogeneous
+//! workers, which is exactly the assumption heterogeneous edge fleets
+//! break — one thermally-throttled device makes every BSP barrier wait for
+//! it. This module scores the synchronization subsystem's trade analytically
+//! so `schedule_sensitivity` can sweep sync modes × straggler severity
+//! without booting a real cluster (the real-wire counterpart is the
+//! straggler matrix in `benches/ps_throughput.rs`):
+//!
+//! * **bsp** — every iteration ends at the slowest worker's pace; the
+//!   fleet completes `n · k` iterations in `k · T_max`.
+//! * **ssp(N)** — over a horizon of `k` slowest-worker iterations, a fast
+//!   worker completes `min(wall / T_i, k + N)`: free-running until the
+//!   staleness window stops it. The bound caps how much heterogeneity SSP
+//!   can absorb — with `N = 0` it degenerates to BSP throughput exactly.
+//! * **asp** — every worker free-runs: `Σ wall / T_i`.
+//!
+//! Iteration *throughput* is what relaxing consistency buys; what it
+//! costs (gradient staleness) is bounded by `N` under SSP and unbounded
+//! under ASP, which is why the sweep prints both.
+
+use crate::ps::sync::SyncMode;
+
+/// A heterogeneous cluster: one base iteration time and per-worker
+/// slowdown factors (1.0 = nominal; 4.0 = the classic 4× straggler).
+#[derive(Debug, Clone)]
+pub struct StragglerCluster {
+    /// Nominal single-worker iteration wall-clock, ms (compute + comm).
+    pub iter_ms: f64,
+    /// Per-worker slowdown factors, all `>= 1`.
+    pub slowdown: Vec<f64>,
+}
+
+/// Outcome of one (cluster, sync mode) cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SyncThroughput {
+    pub mode: SyncMode,
+    /// Cluster-aggregate completed iterations over the horizon.
+    pub iters: f64,
+    /// Horizon wall-clock, ms.
+    pub wall_ms: f64,
+    /// Max iterations any worker ran ahead of the slowest (the staleness
+    /// actually incurred: 0 under BSP, `<= bound` under SSP).
+    pub max_lead: f64,
+}
+
+impl SyncThroughput {
+    /// Completed iterations per second, cluster-aggregate.
+    pub fn iters_per_sec(&self) -> f64 {
+        self.iters / (self.wall_ms / 1e3)
+    }
+}
+
+impl StragglerCluster {
+    /// Uniform fleet with one worker slowed by `factor`.
+    pub fn one_straggler(iter_ms: f64, workers: usize, factor: f64) -> StragglerCluster {
+        assert!(workers >= 1 && factor >= 1.0);
+        let mut slowdown = vec![1.0; workers];
+        slowdown[0] = factor;
+        StragglerCluster { iter_ms, slowdown }
+    }
+
+    fn t_max(&self) -> f64 {
+        self.slowdown.iter().cloned().fold(f64::MIN, f64::max) * self.iter_ms
+    }
+
+    /// Throughput of `mode` over a horizon of `k_slow` slowest-worker
+    /// iterations. `bound` is the SSP staleness window (ignored
+    /// elsewhere).
+    pub fn throughput(&self, mode: SyncMode, bound: u32, k_slow: u64) -> SyncThroughput {
+        assert!(k_slow >= 1);
+        let k = k_slow as f64;
+        let wall_ms = k * self.t_max();
+        let (iters, max_lead) = match mode {
+            SyncMode::Bsp => (self.slowdown.len() as f64 * k, 0.0),
+            SyncMode::Ssp => {
+                let mut total = 0.0;
+                let mut lead = 0.0f64;
+                for s in &self.slowdown {
+                    let free = wall_ms / (s * self.iter_ms);
+                    let done = free.min(k + bound as f64);
+                    total += done;
+                    lead = lead.max(done - k);
+                }
+                (total, lead)
+            }
+            SyncMode::Asp => {
+                let mut total = 0.0;
+                let mut lead = 0.0f64;
+                for s in &self.slowdown {
+                    let done = wall_ms / (s * self.iter_ms);
+                    total += done;
+                    lead = lead.max(done - k);
+                }
+                (total, lead)
+            }
+        };
+        SyncThroughput { mode, iters, wall_ms, max_lead }
+    }
+
+    /// `mode`'s iteration-throughput speedup over BSP on this cluster.
+    pub fn speedup_vs_bsp(&self, mode: SyncMode, bound: u32, k_slow: u64) -> f64 {
+        let bsp = self.throughput(SyncMode::Bsp, 0, k_slow);
+        let it = self.throughput(mode, bound, k_slow);
+        it.iters_per_sec() / bsp.iters_per_sec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() < 1e-9
+    }
+
+    #[test]
+    fn homogeneous_fleet_gains_nothing_from_relaxing() {
+        let c = StragglerCluster { iter_ms: 10.0, slowdown: vec![1.0; 8] };
+        for mode in SyncMode::ALL {
+            assert!(close(c.speedup_vs_bsp(mode, 8, 16), 1.0), "{}", mode.name());
+            assert!(close(c.throughput(mode, 8, 16).max_lead, 0.0));
+        }
+    }
+
+    #[test]
+    fn ssp_with_zero_bound_degenerates_to_bsp() {
+        let c = StragglerCluster::one_straggler(10.0, 8, 4.0);
+        assert!(close(c.speedup_vs_bsp(SyncMode::Ssp, 0, 12), 1.0));
+    }
+
+    #[test]
+    fn relaxation_orders_throughput_bsp_ssp_asp() {
+        let c = StragglerCluster::one_straggler(10.0, 8, 4.0);
+        let bsp = c.throughput(SyncMode::Bsp, 0, 12).iters_per_sec();
+        let ssp = c.throughput(SyncMode::Ssp, 8, 12).iters_per_sec();
+        let asp = c.throughput(SyncMode::Asp, 0, 12).iters_per_sec();
+        assert!(bsp < ssp && ssp < asp, "bsp={bsp} ssp={ssp} asp={asp}");
+        // And SSP throughput is monotone in the bound, capped by ASP.
+        let mut last = bsp;
+        for bound in [0u32, 2, 4, 8, 16, 1 << 20] {
+            let t = c.throughput(SyncMode::Ssp, bound, 12).iters_per_sec();
+            assert!(t >= last - 1e-12, "bound {bound}: {t} < {last}");
+            assert!(t <= asp + 1e-12);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn ssp_respects_its_staleness_bound() {
+        let c = StragglerCluster::one_straggler(10.0, 8, 4.0);
+        for bound in [0u32, 1, 3, 7] {
+            let t = c.throughput(SyncMode::Ssp, bound, 12);
+            assert!(
+                t.max_lead <= bound as f64 + 1e-12,
+                "bound {bound}: lead {}",
+                t.max_lead
+            );
+        }
+        // ASP's lead is unbounded by anything but the horizon.
+        let t = c.throughput(SyncMode::Asp, 0, 12);
+        assert!(t.max_lead > 7.0);
+    }
+
+    /// The acceptance-shaped cell: one 4×-slowed worker in an 8-fleet —
+    /// SSP with a window that merely covers the horizon's skew recovers
+    /// well over 1.5× BSP iteration throughput.
+    #[test]
+    fn four_x_straggler_ssp_recovers_1p5x() {
+        let c = StragglerCluster::one_straggler(10.0, 8, 4.0);
+        let s = c.speedup_vs_bsp(SyncMode::Ssp, 8, 4);
+        assert!(s >= 1.5, "ssp speedup {s}");
+        let a = c.speedup_vs_bsp(SyncMode::Asp, 0, 4);
+        assert!(a >= s);
+    }
+}

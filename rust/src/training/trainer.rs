@@ -11,8 +11,9 @@ use crate::config::Strategy;
 use crate::net::codec::CodecId;
 use crate::net::{LinkShaper, ShaperSpec};
 use crate::ps::{
-    server::{ParamServer, ServerConfig},
+    server::{ParamServer, ServerConfig, ServerOptions},
     sharding::ShardMap,
+    sync::{SyncConfig, SyncMode},
     worker::{EdgeWorker, WorkerConfig, WorkerReport},
 };
 use crate::runtime::{ArtifactManifest, RuntimeClient, Tensor};
@@ -52,6 +53,20 @@ pub struct TrainConfig {
     /// worker proposes it at registration and the whole fleet falls back
     /// to fp32 on any mismatch (`net::codec`).
     pub codec: CodecId,
+    /// Parameter-server synchronization mode (`--sync {bsp,ssp,asp}`,
+    /// `ps::sync`): the shards are started with it and every worker
+    /// verifies it at registration.
+    pub sync: SyncMode,
+    /// SSP staleness bound (`--staleness-bound`, iterations a worker may
+    /// run ahead of the slowest); must be 0 outside SSP.
+    pub staleness_bound: u32,
+    /// Per-shard handler-thread cap (`--handler-threads`): connections
+    /// past it wait in the accept backlog instead of spawning threads.
+    pub handler_threads: usize,
+    /// EF-SGD error feedback for lossy codecs (`--no-error-feedback` to
+    /// disable): workers carry per-layer quantization-error residuals
+    /// into the next iteration's gradient (`net::codec::ef`).
+    pub error_feedback: bool,
 }
 
 impl Default for TrainConfig {
@@ -72,6 +87,10 @@ impl Default for TrainConfig {
             val_batches: 4,
             gain_threshold_ms: crate::sched::dynacomm::GAIN_THRESHOLD_AUTO,
             codec: CodecId::Fp32,
+            sync: SyncMode::Bsp,
+            staleness_bound: 0,
+            handler_threads: ServerOptions::default().handler_threads,
+            error_feedback: true,
         }
     }
 }
@@ -116,6 +135,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
         latency_ms: cfg.latency_ms,
         bytes_per_ms: cfg.bytes_per_ms,
     };
+    let sync = SyncConfig::new(cfg.sync, cfg.staleness_bound)?;
     let mut servers = Vec::with_capacity(cfg.servers);
     for s in 0..cfg.servers {
         let layers: HashMap<usize, Vec<f32>> = shard
@@ -123,10 +143,11 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
             .into_iter()
             .map(|l| (l, init[l].clone()))
             .collect();
-        servers.push(ParamServer::start(
+        servers.push(ParamServer::start_with(
             ServerConfig { workers: cfg.workers, lr: cfg.lr },
             layers,
             Some(downlink),
+            ServerOptions { sync, handler_threads: cfg.handler_threads },
         )?);
     }
     let addrs: Vec<std::net::SocketAddr> =
@@ -157,6 +178,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
             reschedule_every: cfg.iters_per_epoch,
             gain_threshold_ms: cfg.gain_threshold_ms,
             codec: cfg.codec,
+            sync: cfg.sync,
+            staleness_bound: cfg.staleness_bound,
+            error_feedback: cfg.error_feedback,
         };
         let ds = dataset.clone();
         let want_params = w == 0;

@@ -4,6 +4,7 @@
 
 use dynacomm::net::codec::CodecId;
 use dynacomm::net::Message;
+use dynacomm::ps::sync::SyncMode;
 use dynacomm::util::json::Json;
 use dynacomm::util::rng::Rng;
 
@@ -78,9 +79,21 @@ fn random_message(rng: &mut Rng) -> Message {
     let codec = CodecId::ALL[rng.below(3)];
     let n = codec.wire_len(4 * rng.below(200));
     let data: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
-    match rng.below(9) {
+    // v4 sync frames: any mode; a staleness bound only under ssp (the
+    // decoder rejects it elsewhere — covered separately below).
+    let sync_mode = SyncMode::ALL[rng.below(3)];
+    let sync_bound =
+        if sync_mode == SyncMode::Ssp { rng.below(1 << 10) as u32 } else { 0 };
+    match rng.below(11) {
         0 => Message::Pull { iter: rng.next_u64(), lo: rng.below(100) as u32, hi: rng.below(100) as u32 },
-        1 => Message::PullReply { iter: rng.next_u64(), lo: 0, hi: 5, codec, data },
+        1 => Message::PullReply {
+            iter: rng.next_u64(),
+            lo: 0,
+            hi: 5,
+            applied: rng.next_u64(),
+            codec,
+            data,
+        },
         2 => Message::Push { iter: rng.next_u64(), lo: 1, hi: 3, codec, data },
         3 => Message::PushAck { iter: rng.next_u64(), lo: 0, hi: 0 },
         4 => Message::Hello {
@@ -93,6 +106,8 @@ fn random_message(rng: &mut Rng) -> Message {
         },
         6 => Message::CodecPropose { pref: CodecId::ALL[rng.below(3)] },
         7 => Message::CodecAgree { codec: CodecId::ALL[rng.below(3)] },
+        8 => Message::SyncPropose { mode: sync_mode, bound: sync_bound },
+        9 => Message::SyncAgree { mode: sync_mode, bound: sync_bound },
         _ => Message::Shutdown,
     }
 }
@@ -134,4 +149,42 @@ fn wire_decoder_never_panics_on_random_bytes() {
         let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
         let _ = Message::decode(&bytes);
     }
+}
+
+/// v4 sync frames under random payload fuzzing: the decoder accepts
+/// exactly the well-formed (mode, bound) pairs — any bound under ssp, only
+/// 0 under bsp/asp, no mode tag past 2 — and never panics on the rest.
+#[test]
+fn sync_frames_reject_malformed_staleness_bounds() {
+    let mut rng = Rng::new(1007);
+    for _ in 0..4000 {
+        let op = if rng.bool() { 10u8 } else { 11 };
+        let tag = rng.below(5) as u8;
+        let bound = match rng.below(3) {
+            0 => 0u32,
+            1 => rng.below(8) as u32,
+            _ => rng.next_u64() as u32,
+        };
+        let mut frame = vec![op, tag];
+        frame.extend_from_slice(&bound.to_le_bytes());
+        let decoded = Message::decode(&frame); // must return, not panic
+        let well_formed = match SyncMode::from_tag(tag) {
+            Some(SyncMode::Ssp) => true,
+            Some(_) => bound == 0,
+            None => false,
+        };
+        assert_eq!(
+            decoded.is_ok(),
+            well_formed,
+            "op {op} mode tag {tag} bound {bound}: {decoded:?}"
+        );
+        if let Ok(m) = decoded {
+            // Whatever decodes must re-encode to the same bytes.
+            let enc = m.encode();
+            assert_eq!(&enc[4..], &frame[..]);
+        }
+    }
+    // Truncated sync frames fail cleanly too.
+    assert!(Message::decode(&[10, 1]).is_err());
+    assert!(Message::decode(&[11, 1, 0]).is_err());
 }
