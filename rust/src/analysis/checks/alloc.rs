@@ -1,0 +1,201 @@
+//! Check 1 — hot-path allocation lint.
+//!
+//! A function annotated `// dynalint: hot-path` sits on the per-iteration
+//! wire path, where the zero-alloc steady state (pooled slabs, reused
+//! scratch buffers) is a measured property the benches depend on. Inside
+//! such a function every pattern in the manifest `[alloc] banned` list is
+//! a finding unless the line (or the line above) carries
+//! `// dynalint: allow(alloc, reason)`.
+//!
+//! The match is lexical over code tokens: `A::B` path calls, `.m` method
+//! calls (requiring a following `(` or turbofish `::`), and `m!` macros.
+//! Nested items inside a hot function are scanned too — a conservative
+//! over-approximation; hoist genuinely cold helpers out of hot functions.
+
+use super::super::manifest::Manifest;
+use super::super::report::Finding;
+use super::super::source::{find_fn_bodies, SrcFile};
+
+enum Needle {
+    Path(String, String),
+    Method(String),
+    Macro(String),
+}
+
+impl Needle {
+    fn parse(pattern: &str) -> Option<Needle> {
+        if let Some((a, b)) = pattern.split_once("::") {
+            return Some(Needle::Path(a.to_string(), b.to_string()));
+        }
+        if let Some(m) = pattern.strip_prefix('.') {
+            return Some(Needle::Method(m.to_string()));
+        }
+        if let Some(m) = pattern.strip_suffix('!') {
+            return Some(Needle::Macro(m.to_string()));
+        }
+        None
+    }
+
+    fn display(&self) -> String {
+        match self {
+            Needle::Path(a, b) => format!("{a}::{b}"),
+            Needle::Method(m) => format!(".{m}()"),
+            Needle::Macro(m) => format!("{m}!"),
+        }
+    }
+}
+
+pub fn check(files: &[SrcFile], manifest: &Manifest) -> Vec<Finding> {
+    let needles: Vec<Needle> =
+        manifest.banned.iter().filter_map(|p| Needle::parse(p)).collect();
+    let mut out = Vec::new();
+    for file in files {
+        if file.directives.hot_path.is_empty() {
+            continue;
+        }
+        let bodies = find_fn_bodies(&file.code);
+        for &hot_line in &file.directives.hot_path {
+            // The annotation attaches to the next `fn` at or below it.
+            let target = bodies
+                .iter()
+                .filter(|b| file.code[b.fn_idx].line >= hot_line)
+                .min_by_key(|b| file.code[b.fn_idx].line);
+            let Some(body) = target else {
+                out.push(Finding::new(
+                    "alloc",
+                    &file.path,
+                    hot_line,
+                    "dangling `dynalint: hot-path` annotation: no fn follows it"
+                        .to_string(),
+                ));
+                continue;
+            };
+            scan_body(file, body.open, body.close, &body.name, &needles, &mut out);
+        }
+    }
+    out
+}
+
+fn scan_body(
+    file: &SrcFile,
+    open: usize,
+    close: usize,
+    fn_name: &str,
+    needles: &[Needle],
+    out: &mut Vec<Finding>,
+) {
+    let code = &file.code;
+    for j in open..=close {
+        for needle in needles {
+            let hit_line = match needle {
+                Needle::Path(a, b) => {
+                    if code[j].is_ident(a)
+                        && j + 3 <= close
+                        && code[j + 1].is_punct(':')
+                        && code[j + 2].is_punct(':')
+                        && code[j + 3].is_ident(b)
+                    {
+                        Some(code[j].line)
+                    } else {
+                        None
+                    }
+                }
+                Needle::Method(m) => {
+                    if code[j].is_punct('.')
+                        && j + 2 <= close
+                        && code[j + 1].is_ident(m)
+                        && (code[j + 2].is_punct('(') || code[j + 2].is_punct(':'))
+                    {
+                        Some(code[j + 1].line)
+                    } else {
+                        None
+                    }
+                }
+                Needle::Macro(m) => {
+                    if code[j].is_ident(m) && j + 1 <= close && code[j + 1].is_punct('!')
+                    {
+                        Some(code[j].line)
+                    } else {
+                        None
+                    }
+                }
+            };
+            if let Some(line) = hit_line {
+                if file.directives.allowed("alloc", line) {
+                    continue;
+                }
+                out.push(Finding::new(
+                    "alloc",
+                    &file.path,
+                    line,
+                    format!(
+                        "hot-path fn `{fn_name}` uses banned `{}` — hoist it off \
+                         the hot path or justify with \
+                         `// dynalint: allow(alloc, reason)`",
+                        needle.display()
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::manifest::Manifest;
+    use crate::analysis::source::SrcFile;
+
+    fn manifest() -> Manifest {
+        Manifest::from_text(include_str!("../dynalint.toml")).unwrap()
+    }
+
+    fn run_on(src: &str) -> Vec<Finding> {
+        let file = SrcFile::parse("fixture.rs", src.to_string());
+        check(&[file], &manifest())
+    }
+
+    #[test]
+    fn bad_fixture_trips_each_pattern_shape() {
+        let findings = run_on(include_str!("../tests/alloc_bad.rs"));
+        assert_eq!(findings.len(), 3, "{findings:?}");
+        let rendered: Vec<String> = findings.iter().map(|f| f.render()).collect();
+        assert!(rendered.iter().any(|r| r.contains(".clone()")), "{rendered:?}");
+        assert!(rendered.iter().any(|r| r.contains("Vec::new")), "{rendered:?}");
+        assert!(rendered.iter().any(|r| r.contains("format!")), "{rendered:?}");
+        for f in &findings {
+            assert_eq!(f.check, "alloc");
+            assert!(f.line > 0);
+            assert!(f.message.contains("hot_send"), "names the fn: {}", f.message);
+        }
+    }
+
+    #[test]
+    fn good_fixture_is_clean_including_the_allow() {
+        let findings = run_on(include_str!("../tests/alloc_good.rs"));
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn cold_functions_may_allocate() {
+        let findings =
+            run_on("fn cold() -> Vec<u8> { let v = Vec::new(); v.clone() }");
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn dangling_annotation_is_itself_a_finding() {
+        let findings = run_on("fn a() {}\n// dynalint: hot-path\n");
+        assert_eq!(findings.len(), 1);
+        assert!(findings[0].message.contains("dangling"));
+    }
+
+    #[test]
+    fn pattern_strings_in_cold_code_do_not_match() {
+        // The banned patterns appear here only inside a string literal.
+        let findings = run_on(
+            "// dynalint: hot-path\nfn hot() { let s = \"Vec::new .clone() format!\"; drop(s); }",
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

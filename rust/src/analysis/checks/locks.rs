@@ -1,0 +1,440 @@
+//! Check 2 — lock/condvar discipline.
+//!
+//! Three passes over every file except the poisoning-policy helper
+//! (`manifest [locks] policy_file`) and `#[cfg(test)]` modules:
+//!
+//! 1. **Bare sites** — any `.lock()` call, or `.wait()` on a declared
+//!    condvar identifier, must route through `util::sync::{lock_or_die,
+//!    wait_or_die}` so a poisoning abort names the lock.
+//! 2. **Predicate re-check** — every condvar wait (a `wait_or_die(..)`
+//!    call or a bare `cv.wait(..)`) must sit lexically inside a
+//!    `while`/`loop` body: condvar wakeups are spurious by contract.
+//! 3. **Partial order** — an intra-procedural walk tracks which locks are
+//!    held (let-bound guards until their block closes or `drop(guard)`;
+//!    temporaries until the next `;`/`,` at their own nesting depth) and
+//!    flags any nested acquisition that re-takes a held lock or acquires
+//!    against the declared outermost-first order.
+//!
+//! The walk is lexical, not a borrow analysis: guard lifetimes are
+//! approximated (see docs/ANALYSIS.md for the exact rules and their known
+//! over/under-approximations), and nesting across function calls is out
+//! of scope — the declared order is what makes cross-function nesting
+//! safe by construction.
+
+use super::super::manifest::Manifest;
+use super::super::report::Finding;
+use super::super::source::{find_fn_bodies, find_loop_spans, CodeTok, SrcFile};
+use crate::analysis::lexer::TokKind;
+
+pub fn check(files: &[SrcFile], manifest: &Manifest) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for file in files {
+        if file.path == manifest.policy_file {
+            continue;
+        }
+        bare_sites(file, manifest, &mut out);
+        wait_loops(file, manifest, &mut out);
+        order_pass(file, manifest, &mut out);
+    }
+    out
+}
+
+/// Pass 1: flag raw `.lock()` / condvar `.wait()` call sites.
+fn bare_sites(file: &SrcFile, manifest: &Manifest, out: &mut Vec<Finding>) {
+    let code = &file.code;
+    for j in 0..code.len() {
+        if file.in_test(j) {
+            continue;
+        }
+        if j >= 1
+            && code[j].is_ident("lock")
+            && code[j - 1].is_punct('.')
+            && j + 1 < code.len()
+            && code[j + 1].is_punct('(')
+        {
+            let recv = receiver_ident(code, j - 1);
+            let name = recv
+                .and_then(|r| manifest.lock_for_ident(r))
+                .unwrap_or("<lock name>");
+            out.push(Finding::new(
+                "locks",
+                &file.path,
+                code[j].line,
+                format!(
+                    "bare `.lock()` call — route through `util::sync::{}(&.., \
+                     \"{name}\")` so a poisoning abort names the lock",
+                    manifest.lock_helper
+                ),
+            ));
+        }
+        if j >= 2
+            && code[j].is_ident("wait")
+            && code[j - 1].is_punct('.')
+            && j + 1 < code.len()
+            && code[j + 1].is_punct('(')
+        {
+            if let Some(cv) = receiver_ident(code, j - 1) {
+                if manifest.is_condvar(cv) {
+                    out.push(Finding::new(
+                        "locks",
+                        &file.path,
+                        code[j].line,
+                        format!(
+                            "bare `.wait()` on condvar `{cv}` — route through \
+                             `util::sync::{}`",
+                            manifest.wait_helper
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+}
+
+/// The identifier a `.method` chain hangs off: the ident before the dot.
+fn receiver_ident(code: &[CodeTok], dot: usize) -> Option<&str> {
+    if dot == 0 {
+        return None;
+    }
+    let prev = &code[dot - 1];
+    if prev.kind == TokKind::Ident {
+        Some(&prev.text)
+    } else {
+        None
+    }
+}
+
+/// Pass 2: every condvar wait must sit inside a `while`/`loop` body.
+fn wait_loops(file: &SrcFile, manifest: &Manifest, out: &mut Vec<Finding>) {
+    let code = &file.code;
+    let spans = find_loop_spans(code);
+    let inside = |idx: usize| spans.iter().any(|&(open, close)| idx > open && idx < close);
+    for j in 0..code.len() {
+        if file.in_test(j) {
+            continue;
+        }
+        let is_helper_wait = code[j].is_ident(&manifest.wait_helper)
+            && j + 1 < code.len()
+            && code[j + 1].is_punct('(');
+        let is_bare_wait = j >= 2
+            && code[j].is_ident("wait")
+            && code[j - 1].is_punct('.')
+            && j + 1 < code.len()
+            && code[j + 1].is_punct('(')
+            && receiver_ident(code, j - 1).is_some_and(|r| manifest.is_condvar(r));
+        if !(is_helper_wait || is_bare_wait) {
+            continue;
+        }
+        let line = code[j].line;
+        if inside(j) || file.directives.allowed("condvar", line) {
+            continue;
+        }
+        out.push(Finding::new(
+            "locks",
+            &file.path,
+            line,
+            "condvar wait outside a `while`/`loop` predicate re-check body — \
+             wakeups are spurious by contract, re-test the predicate around \
+             the wait"
+                .to_string(),
+        ));
+    }
+}
+
+/// A lock the intra-procedural walk currently believes is held.
+struct Held {
+    name: String,
+    guard: Option<String>,
+    brace: i64,
+    paren: i64,
+    temp: bool,
+    line: u32,
+}
+
+/// Pass 3: nested acquisitions must follow the declared partial order.
+fn order_pass(file: &SrcFile, manifest: &Manifest, out: &mut Vec<Finding>) {
+    let code = &file.code;
+    let bodies = find_fn_bodies(code);
+    for body in &bodies {
+        if file.in_test(body.fn_idx) {
+            continue;
+        }
+        // Skip nested named fns: they run in their own call context.
+        let children: Vec<(usize, usize)> = bodies
+            .iter()
+            .filter(|c| c.fn_idx > body.open && c.close < body.close)
+            .map(|c| (c.fn_idx, c.close))
+            .collect();
+        walk_fn(file, manifest, body.open, body.close, &children, out);
+    }
+}
+
+fn walk_fn(
+    file: &SrcFile,
+    manifest: &Manifest,
+    open: usize,
+    close: usize,
+    skip: &[(usize, usize)],
+    out: &mut Vec<Finding>,
+) {
+    let code = &file.code;
+    let mut held: Vec<Held> = Vec::new();
+    let mut brace = 1i64; // inside the body's `{`
+    let mut paren = 0i64;
+    let mut j = open + 1;
+    while j < close {
+        if let Some(&(_, child_close)) = skip.iter().find(|&&(start, _)| start == j) {
+            j = child_close + 1;
+            continue;
+        }
+        let t = &code[j];
+        if t.is_punct('{') {
+            brace += 1;
+        } else if t.is_punct('}') {
+            brace -= 1;
+            held.retain(|h| h.brace <= brace);
+        } else if t.is_punct('(') || t.is_punct('[') {
+            paren += 1;
+        } else if t.is_punct(')') || t.is_punct(']') {
+            paren -= 1;
+        } else if t.is_punct(';') || t.is_punct(',') {
+            held.retain(|h| !(h.temp && h.brace == brace && h.paren == paren));
+        } else if t.is_ident("drop")
+            && j + 3 < close
+            && code[j + 1].is_punct('(')
+            && code[j + 2].kind == TokKind::Ident
+            && code[j + 3].is_punct(')')
+        {
+            let g = code[j + 2].text.clone();
+            held.retain(|h| h.guard.as_deref() != Some(g.as_str()));
+        } else if let Some(name) = acquisition_at(code, j, close, manifest) {
+            let line = t.line;
+            for h in &held {
+                report_nesting(file, manifest, h, &name, line, out);
+            }
+            let guard = let_bound_guard(code, open, j);
+            held.push(Held {
+                name,
+                temp: guard.is_none(),
+                guard,
+                brace,
+                paren,
+                line,
+            });
+        }
+        j += 1;
+    }
+}
+
+/// If the token at `j` starts a lock acquisition, its canonical name.
+fn acquisition_at(
+    code: &[CodeTok],
+    j: usize,
+    close: usize,
+    manifest: &Manifest,
+) -> Option<String> {
+    // `lock_or_die(&path.to.lock, "canonical.name")` — the string literal
+    // names the lock, no receiver mapping needed.
+    if code[j].is_ident(&manifest.lock_helper)
+        && j + 1 < close
+        && code[j + 1].is_punct('(')
+    {
+        let mut depth = 0i64;
+        for k in j + 1..close {
+            if code[k].is_punct('(') {
+                depth += 1;
+            } else if code[k].is_punct(')') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if code[k].kind == TokKind::Str && depth == 1 {
+                return Some(code[k].text.clone());
+            }
+        }
+        return Some("<unnamed>".to_string());
+    }
+    // Bare `recv.lock(` with a receiver the manifest can name.
+    if j >= 2
+        && code[j].is_ident("lock")
+        && code[j - 1].is_punct('.')
+        && j + 1 < close
+        && code[j + 1].is_punct('(')
+    {
+        if let Some(name) =
+            receiver_ident(code, j - 1).and_then(|r| manifest.lock_for_ident(r))
+        {
+            return Some(name.to_string());
+        }
+    }
+    None
+}
+
+fn report_nesting(
+    file: &SrcFile,
+    manifest: &Manifest,
+    held: &Held,
+    name: &str,
+    line: u32,
+    out: &mut Vec<Finding>,
+) {
+    if file.directives.allowed("lock-order", line) {
+        return;
+    }
+    if held.name == name {
+        out.push(Finding::new(
+            "locks",
+            &file.path,
+            line,
+            format!(
+                "re-acquires `{name}` already held since line {} — self-deadlock",
+                held.line
+            ),
+        ));
+        return;
+    }
+    match (manifest.lock_rank(&held.name), manifest.lock_rank(name)) {
+        (Some(outer), Some(inner)) if inner <= outer => {
+            out.push(Finding::new(
+                "locks",
+                &file.path,
+                line,
+                format!(
+                    "acquires `{name}` while holding `{}` (line {}) — violates \
+                     the declared order {:?}",
+                    held.name, held.line, manifest.lock_order
+                ),
+            ));
+        }
+        (Some(_), Some(_)) => {}
+        _ => {
+            out.push(Finding::new(
+                "locks",
+                &file.path,
+                line,
+                format!(
+                    "nested acquisition of `{name}` under `{}` involves a lock \
+                     missing from the declared order — add it to the manifest",
+                    held.name
+                ),
+            ));
+        }
+    }
+}
+
+/// If the statement enclosing the acquisition at `j` is a simple
+/// `let [mut] guard = …`, the guard identifier.
+fn let_bound_guard(code: &[CodeTok], body_open: usize, j: usize) -> Option<String> {
+    let mut k = j;
+    while k > body_open + 1 {
+        let t = &code[k - 1];
+        if t.is_punct(';') || t.is_punct('{') || t.is_punct('}') || t.is_punct(',') {
+            break;
+        }
+        k -= 1;
+    }
+    if !code[k].is_ident("let") {
+        return None;
+    }
+    let mut g = k + 1;
+    if g < j && code[g].is_ident("mut") {
+        g += 1;
+    }
+    if g + 1 < j && code[g].kind == TokKind::Ident && code[g + 1].is_punct('=') {
+        return Some(code[g].text.clone());
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::manifest::Manifest;
+    use crate::analysis::source::SrcFile;
+
+    fn manifest() -> Manifest {
+        Manifest::from_text(include_str!("../dynalint.toml")).unwrap()
+    }
+
+    fn run_on(src: &str) -> Vec<Finding> {
+        let file = SrcFile::parse("fixture.rs", src.to_string());
+        check(&[file], &manifest())
+    }
+
+    #[test]
+    fn bad_fixture_trips_all_three_passes() {
+        let findings = run_on(include_str!("../tests/locks_bad.rs"));
+        let rendered: Vec<String> = findings.iter().map(|f| f.render()).collect();
+        assert_eq!(findings.len(), 3, "{rendered:?}");
+        assert!(
+            rendered.iter().any(|r| r.contains("violates the declared order")),
+            "{rendered:?}"
+        );
+        assert!(rendered.iter().any(|r| r.contains("bare `.lock()`")), "{rendered:?}");
+        assert!(
+            rendered.iter().any(|r| r.contains("predicate re-check")),
+            "{rendered:?}"
+        );
+    }
+
+    #[test]
+    fn good_fixture_is_clean() {
+        let findings = run_on(include_str!("../tests/locks_good.rs"));
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn reacquisition_of_a_held_lock_is_a_self_deadlock() {
+        let findings = run_on(
+            "fn f(p: &Pool) {\n  let a = lock_or_die(&p.free, \"pool.free\");\n  \
+             let b = lock_or_die(&p.free, \"pool.free\");\n  drop(b); drop(a);\n}\n",
+        );
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("self-deadlock"));
+    }
+
+    #[test]
+    fn drop_releases_the_guard_for_later_acquisitions() {
+        let findings = run_on(
+            "fn f(p: &Pool, s: &Srv) {\n  let free = lock_or_die(&p.free, \"pool.free\");\n  \
+             drop(free);\n  let conns = lock_or_die(&s.conns, \"server.conns\");\n  drop(conns);\n}\n",
+        );
+        assert!(findings.is_empty(), "drop released pool.free: {findings:?}");
+    }
+
+    #[test]
+    fn block_scoped_guards_release_at_the_closing_brace() {
+        let findings = run_on(
+            "fn f(p: &Pool, s: &Srv) {\n  {\n    let free = lock_or_die(&p.free, \"pool.free\");\n    \
+             free.push(1);\n  }\n  let conns = lock_or_die(&s.conns, \"server.conns\");\n  drop(conns);\n}\n",
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn statement_temporaries_release_at_the_semicolon() {
+        let findings = run_on(
+            "fn f(p: &Pool, s: &Srv) {\n  lock_or_die(&p.free, \"pool.free\").push(1);\n  \
+             let conns = lock_or_die(&s.conns, \"server.conns\");\n  drop(conns);\n}\n",
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn cfg_test_modules_are_exempt() {
+        let findings = run_on(
+            "#[cfg(test)]\nmod tests {\n  fn t(p: &Pool) { let g = p.free.lock().unwrap(); drop(g); }\n}\n",
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn an_allow_annotation_suppresses_an_order_finding() {
+        let findings = run_on(
+            "fn f(p: &Pool, s: &Srv) {\n  let free = lock_or_die(&p.free, \"pool.free\");\n  \
+             // dynalint: allow(lock-order, provably unreachable concurrently)\n  \
+             let conns = lock_or_die(&s.conns, \"server.conns\");\n  drop(conns); drop(free);\n}\n",
+        );
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

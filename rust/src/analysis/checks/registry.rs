@@ -1,0 +1,197 @@
+//! Check 4 — registry completeness.
+//!
+//! Every pluggable registry (schedulers, sync policies, wire codecs)
+//! exports a `NAMES` const listing its canonical entries. Each entry must
+//! also appear in the CLI `HELP` banner (so `--help` never lies about what
+//! exists) and on the registry's doc page (so a new entry lands with
+//! documentation). The manifest (`[[registry.entries]]`) maps each
+//! registry to its source file and doc page.
+
+use std::path::Path;
+
+use super::super::manifest::Manifest;
+use super::super::report::Finding;
+use super::super::source::{CodeTok, SrcFile};
+use crate::analysis::lexer::TokKind;
+
+pub fn check(root: &Path, files: &[SrcFile], manifest: &Manifest) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let help = files
+        .iter()
+        .find(|f| f.path == manifest.help_source)
+        .and_then(|f| extract_help(&f.code));
+    if help.is_none() {
+        out.push(Finding::new(
+            "registry",
+            &manifest.help_source,
+            0,
+            "no `const HELP` string found — the banner check cannot run".to_string(),
+        ));
+    }
+    for entry in &manifest.registries {
+        let Some(src) = files.iter().find(|f| f.path == entry.source) else {
+            out.push(Finding::new(
+                "registry",
+                &entry.source,
+                0,
+                format!("registry `{}` source was not scanned", entry.name),
+            ));
+            continue;
+        };
+        let Some((names, line)) = extract_names(&src.code) else {
+            out.push(Finding::new(
+                "registry",
+                &entry.source,
+                0,
+                format!(
+                    "registry `{}` has no `const NAMES` string array",
+                    entry.name
+                ),
+            ));
+            continue;
+        };
+        if names.is_empty() {
+            out.push(Finding::new(
+                "registry",
+                &entry.source,
+                line,
+                format!("registry `{}` NAMES is empty", entry.name),
+            ));
+            continue;
+        }
+        if let Some((help_text, help_line)) = &help {
+            for name in &names {
+                if !help_text.contains(name.as_str()) {
+                    out.push(Finding::new(
+                        "registry",
+                        &manifest.help_source,
+                        *help_line,
+                        format!(
+                            "{} registry entry `{name}` missing from the CLI \
+                             HELP banner",
+                            entry.name
+                        ),
+                    ));
+                }
+            }
+        }
+        match std::fs::read_to_string(root.join(&entry.doc)) {
+            Ok(doc) => {
+                for name in &names {
+                    if !doc.contains(name.as_str()) {
+                        out.push(Finding::new(
+                            "registry",
+                            &entry.doc,
+                            0,
+                            format!(
+                                "{} registry entry `{name}` is undocumented here",
+                                entry.name
+                            ),
+                        ));
+                    }
+                }
+            }
+            Err(_) => out.push(Finding::new(
+                "registry",
+                &entry.doc,
+                0,
+                format!("doc page for registry `{}` is missing", entry.name),
+            )),
+        }
+    }
+    out
+}
+
+/// The string contents of `const NAMES: [&str; N] = ["…", …];` and the
+/// line the const sits on.
+pub fn extract_names(code: &[CodeTok]) -> Option<(Vec<String>, u32)> {
+    for j in 1..code.len() {
+        if !(code[j].is_ident("NAMES") && code[j - 1].is_ident("const")) {
+            continue;
+        }
+        // Skip the type annotation to the `=`, then collect the array.
+        let mut k = j + 1;
+        while k < code.len() && !code[k].is_punct('=') {
+            k += 1;
+        }
+        while k < code.len() && !code[k].is_punct('[') {
+            k += 1;
+        }
+        let mut names = Vec::new();
+        while k < code.len() && !code[k].is_punct(']') {
+            if code[k].kind == TokKind::Str {
+                names.push(code[k].text.clone());
+            }
+            k += 1;
+        }
+        return Some((names, code[j].line));
+    }
+    None
+}
+
+/// The `const HELP: &str = "…";` banner text and its line.
+pub fn extract_help(code: &[CodeTok]) -> Option<(String, u32)> {
+    for j in 1..code.len() {
+        if !(code[j].is_ident("HELP") && code[j - 1].is_ident("const")) {
+            continue;
+        }
+        for k in j + 1..code.len() {
+            if code[k].kind == TokKind::Str {
+                return Some((code[k].text.clone(), code[j].line));
+            }
+            if code[k].is_punct(';') {
+                break;
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::source::SrcFile;
+
+    fn parse(src: &str) -> SrcFile {
+        SrcFile::parse("fixture.rs", src.to_string())
+    }
+
+    #[test]
+    fn good_fixture_names_all_appear_in_its_help() {
+        let f = parse(include_str!("../tests/registry_good.rs"));
+        let (names, _) = extract_names(&f.code).unwrap();
+        assert_eq!(names, vec!["alpha", "beta", "gamma"]);
+        let (help, _) = extract_help(&f.code).unwrap();
+        for name in &names {
+            assert!(help.contains(name.as_str()), "{name} in banner");
+        }
+    }
+
+    #[test]
+    fn bad_fixture_banner_misses_an_entry() {
+        let f = parse(include_str!("../tests/registry_bad.rs"));
+        let (names, _) = extract_names(&f.code).unwrap();
+        let (help, _) = extract_help(&f.code).unwrap();
+        let missing: Vec<&String> =
+            names.iter().filter(|n| !help.contains(n.as_str())).collect();
+        assert_eq!(missing.len(), 1, "exactly the seeded gap");
+        assert_eq!(missing[0], "gamma");
+    }
+
+    #[test]
+    fn extraction_ignores_non_const_uses_of_the_names() {
+        let f = parse(
+            "pub const NAMES: [&str; 2] = [\"a\", \"b\"];\n\
+             fn list() -> String { NAMES.join(\", \") }\n",
+        );
+        let (names, line) = extract_names(&f.code).unwrap();
+        assert_eq!(names, vec!["a", "b"]);
+        assert_eq!(line, 1);
+    }
+
+    #[test]
+    fn missing_consts_are_reported_as_none() {
+        assert!(extract_names(&parse("fn f() {}").code).is_none());
+        assert!(extract_help(&parse("fn f() {}").code).is_none());
+    }
+}

@@ -1,0 +1,417 @@
+//! Check 3 — wire-protocol invariants.
+//!
+//! The v4 frame vocabulary is pinned in the manifest (`[wire.frames]`)
+//! and must agree everywhere it is spelled:
+//!
+//! - `MessageRef::opcode()` arms: unique tags, exactly the manifest table;
+//! - `decode()` arms: one numeric arm per opcode plus a `_ => bail!(..)`
+//!   wildcard, no arm for a tag the protocol does not define;
+//! - `PROTOCOL_VERSION` equals the manifest `protocol_version`;
+//! - `docs/WIRE.md` mentions the current version (`**v{N}**` in its
+//!   version-history table) and every frame name;
+//! - the fuzz generators (`tests/fuzz_substrates.rs`) reference
+//!   `PROTOCOL_VERSION` so version drift breaks a test, not a worker.
+
+use std::path::Path;
+
+use super::super::manifest::Manifest;
+use super::super::report::Finding;
+use super::super::source::{find_fn_bodies, CodeTok, SrcFile};
+use crate::analysis::lexer::TokKind;
+
+pub fn check(root: &Path, files: &[SrcFile], manifest: &Manifest) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(transport) = files.iter().find(|f| f.path == manifest.wire.transport)
+    else {
+        out.push(Finding::new(
+            "wire",
+            &manifest.wire.transport,
+            0,
+            "transport source named in the manifest was not scanned".to_string(),
+        ));
+        return out;
+    };
+    check_transport(transport, manifest, &mut out);
+
+    let doc_path = root.join(&manifest.wire.doc);
+    match std::fs::read_to_string(&doc_path) {
+        Ok(doc) => {
+            let version = manifest.wire.protocol_version;
+            if !doc.contains(&format!("**v{version}**")) {
+                out.push(Finding::new(
+                    "wire",
+                    &manifest.wire.doc,
+                    0,
+                    format!(
+                        "version-history table has no `**v{version}**` entry for \
+                         the current PROTOCOL_VERSION"
+                    ),
+                ));
+            }
+            for (name, tag) in &manifest.wire.frames {
+                if !doc.contains(name.as_str()) {
+                    out.push(Finding::new(
+                        "wire",
+                        &manifest.wire.doc,
+                        0,
+                        format!("frame `{name}` (opcode {tag}) is not documented"),
+                    ));
+                }
+            }
+        }
+        Err(_) => out.push(Finding::new(
+            "wire",
+            &manifest.wire.doc,
+            0,
+            "wire doc named in the manifest is missing".to_string(),
+        )),
+    }
+
+    match std::fs::read_to_string(root.join(&manifest.wire.fuzz)) {
+        Ok(fuzz) => {
+            if !fuzz.contains("PROTOCOL_VERSION") {
+                out.push(Finding::new(
+                    "wire",
+                    &manifest.wire.fuzz,
+                    0,
+                    "fuzz generators never reference PROTOCOL_VERSION — version \
+                     drift would go unfuzzed"
+                        .to_string(),
+                ));
+            }
+        }
+        Err(_) => out.push(Finding::new(
+            "wire",
+            &manifest.wire.fuzz,
+            0,
+            "fuzz substrate named in the manifest is missing".to_string(),
+        )),
+    }
+    out
+}
+
+/// The transport-source portion of the check, separated so fixture tests
+/// can drive it without a fake repo on disk.
+pub fn check_transport(file: &SrcFile, manifest: &Manifest, out: &mut Vec<Finding>) {
+    let code = &file.code;
+    let bodies = find_fn_bodies(code);
+    let mut opcode_arms: Vec<(String, u8, u32)> = Vec::new(); // (variant, tag, line)
+    let mut decode_tags: Vec<(u8, u32)> = Vec::new();
+    let mut wildcard_bails = false;
+    for body in &bodies {
+        if file.in_test(body.fn_idx) {
+            continue;
+        }
+        if body.name == "opcode" {
+            collect_opcode_arms(code, body.open, body.close, &mut opcode_arms);
+        } else if body.name == "decode" {
+            collect_decode_arms(
+                code,
+                body.open,
+                body.close,
+                &mut decode_tags,
+                &mut wildcard_bails,
+            );
+        }
+    }
+
+    // Tag uniqueness in opcode().
+    for (i, (variant, tag, line)) in opcode_arms.iter().enumerate() {
+        if let Some((other, _, _)) =
+            opcode_arms[..i].iter().find(|(_, t, _)| t == tag)
+        {
+            out.push(Finding::new(
+                "wire",
+                &file.path,
+                *line,
+                format!("frame tag {tag} assigned to both `{other}` and `{variant}`"),
+            ));
+        }
+    }
+
+    // opcode() arms ↔ manifest frame table, both directions.
+    for (name, tag) in &manifest.wire.frames {
+        match opcode_arms.iter().find(|(v, _, _)| v == name) {
+            None => out.push(Finding::new(
+                "wire",
+                &file.path,
+                0,
+                format!("declared frame `{name}` (opcode {tag}) has no opcode() arm"),
+            )),
+            Some((_, code_tag, line)) if code_tag != tag => out.push(Finding::new(
+                "wire",
+                &file.path,
+                *line,
+                format!(
+                    "frame `{name}`: opcode() says {code_tag}, manifest says {tag}"
+                ),
+            )),
+            Some(_) => {}
+        }
+    }
+    for (variant, tag, line) in &opcode_arms {
+        if !manifest.wire.frames.iter().any(|(n, _)| n == variant) {
+            out.push(Finding::new(
+                "wire",
+                &file.path,
+                *line,
+                format!(
+                    "opcode() arm `{variant}` => {tag} is not in the manifest \
+                     frame table — declare it (and document it) or remove it"
+                ),
+            ));
+        }
+    }
+
+    // decode() coverage: every defined tag, nothing undefined, a bail arm.
+    if opcode_arms.is_empty() {
+        out.push(Finding::new(
+            "wire",
+            &file.path,
+            0,
+            "no opcode() arms found — the wire check cannot see the frame table"
+                .to_string(),
+        ));
+        return;
+    }
+    let mut defined: Vec<u8> = opcode_arms.iter().map(|(_, t, _)| *t).collect();
+    defined.sort_unstable();
+    defined.dedup();
+    for tag in &defined {
+        if !decode_tags.iter().any(|(t, _)| t == tag) {
+            let name = manifest
+                .wire
+                .frames
+                .iter()
+                .find(|(_, t)| t == tag)
+                .map(|(n, _)| n.as_str())
+                .unwrap_or("?");
+            out.push(Finding::new(
+                "wire",
+                &file.path,
+                0,
+                format!("decode() has no arm for tag {tag} (`{name}`)"),
+            ));
+        }
+    }
+    for (tag, line) in &decode_tags {
+        if !defined.contains(tag) {
+            out.push(Finding::new(
+                "wire",
+                &file.path,
+                *line,
+                format!("decode() arm for tag {tag} which opcode() never produces"),
+            ));
+        }
+    }
+    if !decode_tags.is_empty() && !wildcard_bails {
+        out.push(Finding::new(
+            "wire",
+            &file.path,
+            0,
+            "decode() has no `_ => bail!(..)` wildcard — unknown opcodes must \
+             error, not fall through"
+                .to_string(),
+        ));
+    }
+
+    // PROTOCOL_VERSION const.
+    match protocol_version_const(code) {
+        Some((version, line)) if version != manifest.wire.protocol_version => {
+            out.push(Finding::new(
+                "wire",
+                &file.path,
+                line,
+                format!(
+                    "PROTOCOL_VERSION is {version} but the manifest pins {} — \
+                     bump both (and docs/WIRE.md) together",
+                    manifest.wire.protocol_version
+                ),
+            ));
+        }
+        Some(_) => {}
+        None => out.push(Finding::new(
+            "wire",
+            &file.path,
+            0,
+            "no `PROTOCOL_VERSION: u16 = N` const found".to_string(),
+        )),
+    }
+}
+
+/// `MessageRef::Variant { .. } => N` arms inside an `opcode()` body.
+fn collect_opcode_arms(
+    code: &[CodeTok],
+    open: usize,
+    close: usize,
+    out: &mut Vec<(String, u8, u32)>,
+) {
+    for j in open..close.saturating_sub(2) {
+        if !(code[j].is_punct('=') && code[j + 1].is_punct('>')) {
+            continue;
+        }
+        let num = &code[j + 2];
+        if num.kind != TokKind::Num {
+            continue;
+        }
+        let Ok(tag) = num.text.parse::<u8>() else { continue };
+        // Walk back over the arm pattern for `MessageRef::Variant`.
+        let mut k = j;
+        let mut variant: Option<String> = None;
+        while k > open {
+            k -= 1;
+            let t = &code[k];
+            if t.is_punct(',') || (t.is_punct('{') && k == open) {
+                break;
+            }
+            if t.kind == TokKind::Ident
+                && k >= 3
+                && code[k - 1].is_punct(':')
+                && code[k - 2].is_punct(':')
+                && code[k - 3].is_ident("MessageRef")
+            {
+                variant = Some(t.text.clone());
+                break;
+            }
+        }
+        if let Some(variant) = variant {
+            out.push((variant, tag, num.line));
+        }
+    }
+}
+
+/// `N => …` arms (and the `_ => bail!` wildcard) inside a `decode()` body.
+fn collect_decode_arms(
+    code: &[CodeTok],
+    open: usize,
+    close: usize,
+    out: &mut Vec<(u8, u32)>,
+    wildcard_bails: &mut bool,
+) {
+    let mut has_wildcard = false;
+    let mut has_bail = false;
+    for j in open..close.saturating_sub(2) {
+        if code[j].kind == TokKind::Num
+            && code[j + 1].is_punct('=')
+            && code[j + 2].is_punct('>')
+        {
+            if let Ok(tag) = code[j].text.parse::<u8>() {
+                out.push((tag, code[j].line));
+            }
+        }
+        if code[j].is_ident("_")
+            && code[j + 1].is_punct('=')
+            && code[j + 2].is_punct('>')
+        {
+            has_wildcard = true;
+        }
+        if code[j].is_ident("bail") {
+            has_bail = true;
+        }
+    }
+    if has_wildcard && has_bail {
+        *wildcard_bails = true;
+    }
+}
+
+/// The `pub const PROTOCOL_VERSION: u16 = N;` value and its line.
+fn protocol_version_const(code: &[CodeTok]) -> Option<(u16, u32)> {
+    for j in 0..code.len().saturating_sub(4) {
+        if code[j].is_ident("PROTOCOL_VERSION")
+            && code[j + 1].is_punct(':')
+            && code[j + 2].is_ident("u16")
+            && code[j + 3].is_punct('=')
+            && code[j + 4].kind == TokKind::Num
+        {
+            if let Ok(v) = code[j + 4].text.parse::<u16>() {
+                return Some((v, code[j + 4].line));
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::manifest::Manifest;
+    use crate::analysis::source::SrcFile;
+
+    /// A four-frame manifest matching the wire fixtures.
+    fn fixture_manifest() -> Manifest {
+        let text = include_str!("../dynalint.toml")
+            .lines()
+            .filter(|l| {
+                // Drop the full v4 table; re-pin a minimal one below.
+                let in_frames = ["PullReply", "PushAck", "Hello", "HelloAck", "Codec", "Sync"]
+                    .iter()
+                    .any(|p| l.starts_with(p));
+                !in_frames
+            })
+            .collect::<Vec<_>>()
+            .join("\n");
+        Manifest::from_text(&text).unwrap()
+    }
+
+    fn run_transport(src: &str) -> Vec<Finding> {
+        let file = SrcFile::parse("fixture.rs", src.to_string());
+        let mut out = Vec::new();
+        check_transport(&file, &fixture_manifest(), &mut out);
+        out
+    }
+
+    #[test]
+    fn fixture_manifest_pins_exactly_the_fixture_frames() {
+        let m = fixture_manifest();
+        let names: Vec<&str> =
+            m.wire.frames.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["Pull", "Push", "Shutdown"]);
+    }
+
+    #[test]
+    fn bad_fixture_trips_duplicate_mismatch_coverage_and_version() {
+        let findings = run_transport(include_str!("../tests/wire_bad.rs"));
+        let rendered: Vec<String> = findings.iter().map(|f| f.render()).collect();
+        assert_eq!(findings.len(), 4, "{rendered:?}");
+        assert!(rendered.iter().any(|r| r.contains("assigned to both")), "{rendered:?}");
+        assert!(
+            rendered.iter().any(|r| r.contains("opcode() says 1, manifest says 3")),
+            "{rendered:?}"
+        );
+        assert!(
+            rendered.iter().any(|r| r.contains("no arm for tag 7")),
+            "{rendered:?}"
+        );
+        assert!(
+            rendered.iter().any(|r| r.contains("PROTOCOL_VERSION is 3")),
+            "{rendered:?}"
+        );
+    }
+
+    #[test]
+    fn good_fixture_is_clean() {
+        let findings = run_transport(include_str!("../tests/wire_good.rs"));
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn a_missing_wildcard_is_a_finding() {
+        let src = include_str!("../tests/wire_good.rs")
+            .replace("_ => bail!(\"unknown opcode {op}\"),", "");
+        let findings = run_transport(&src);
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("wildcard"));
+    }
+
+    #[test]
+    fn the_real_tree_satisfies_the_committed_manifest() {
+        let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+        let manifest =
+            Manifest::from_text(include_str!("../dynalint.toml")).unwrap();
+        let path = root.join(&manifest.wire.transport);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let file = SrcFile::parse(&manifest.wire.transport, text);
+        let findings = check(root, &[file], &manifest);
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

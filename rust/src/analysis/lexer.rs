@@ -1,0 +1,435 @@
+//! A lightweight Rust lexer for `dynalint` — no `syn`, no `proc-macro2`.
+//!
+//! The checks in [`crate::analysis::checks`] are token-pattern matchers,
+//! not semantic analyses, so the lexer only needs to classify source text
+//! into the categories that matter for pattern safety: identifiers,
+//! numbers, string/char literals (so a pattern string inside a check's own
+//! source never matches itself), lifetimes, comments (the annotation
+//! carrier), and single-character punctuation. Every token carries the
+//! 1-based line it starts on for `file:line` diagnostics.
+
+/// Token category. Punctuation is one token per character; multi-char
+/// operators (`=>`, `::`, `..=`) are matched as adjacent `Punct` tokens by
+/// the checks, which is unambiguous because the lexer never merges them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    /// String literal (plain, raw, or byte); `text` is the inner content
+    /// with quotes stripped and escape sequences left as written.
+    Str,
+    /// Character or byte-character literal, quotes stripped.
+    CharLit,
+    /// Lifetime such as `'a` or `'static`; `text` excludes the tick.
+    Lifetime,
+    /// Line or block comment; `text` is the content after `//` or between
+    /// `/*` and `*/`.
+    Comment,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Token {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Token {
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == name
+    }
+
+    pub fn is_punct(&self, ch: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(ch)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_continue(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Tokenize `src`. The lexer is total: unrecognized bytes become `Punct`
+/// tokens rather than errors, so a partially exotic file degrades to
+/// weaker checking instead of a crash.
+pub fn lex(src: &str) -> Vec<Token> {
+    let chars: Vec<char> = src.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    let n = chars.len();
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i + 2;
+            let mut j = start;
+            while j < n && chars[j] != '\n' {
+                j += 1;
+            }
+            out.push(Token {
+                kind: TokKind::Comment,
+                text: chars[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            let tok_line = line;
+            let start = i + 2;
+            let mut j = start;
+            let mut depth = 1u32;
+            while j < n && depth > 0 {
+                if chars[j] == '\n' {
+                    line += 1;
+                    j += 1;
+                } else if chars[j] == '/' && j + 1 < n && chars[j + 1] == '*' {
+                    depth += 1;
+                    j += 2;
+                } else if chars[j] == '*' && j + 1 < n && chars[j + 1] == '/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let end = if depth == 0 { j.saturating_sub(2) } else { j };
+            out.push(Token {
+                kind: TokKind::Comment,
+                text: chars[start..end.max(start)].iter().collect(),
+                line: tok_line,
+            });
+            i = j;
+            continue;
+        }
+        // Raw / byte string prefixes: r"..", r#".."#, b"..", br"..".
+        if (c == 'r' || c == 'b') && is_string_prefix(&chars, i) {
+            let (tok, next, lines) = lex_prefixed_string(&chars, i, line);
+            out.push(tok);
+            line += lines;
+            i = next;
+            continue;
+        }
+        if c == '"' {
+            let (tok, next, lines) = lex_plain_string(&chars, i, line);
+            out.push(tok);
+            line += lines;
+            i = next;
+            continue;
+        }
+        if c == '\'' {
+            // Disambiguate char literal from lifetime: a backslash is
+            // always a char literal; otherwise a closing tick right after
+            // one content char marks a literal, anything else a lifetime.
+            let is_char = if i + 1 < n && chars[i + 1] == '\\' {
+                true
+            } else {
+                i + 2 < n && chars[i + 2] == '\''
+            };
+            if is_char {
+                let start = i + 1;
+                let mut j = start;
+                let mut guard = 0;
+                while j < n && guard < 16 {
+                    if chars[j] == '\\' {
+                        j += 2;
+                    } else if chars[j] == '\'' {
+                        break;
+                    } else {
+                        j += 1;
+                    }
+                    guard += 1;
+                }
+                out.push(Token {
+                    kind: TokKind::CharLit,
+                    text: chars[start..j.min(n)].iter().collect(),
+                    line,
+                });
+                i = (j + 1).min(n);
+            } else {
+                let start = i + 1;
+                let mut j = start;
+                while j < n && is_ident_continue(chars[j]) {
+                    j += 1;
+                }
+                out.push(Token {
+                    kind: TokKind::Lifetime,
+                    text: chars[start..j].iter().collect(),
+                    line,
+                });
+                i = j;
+            }
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            let mut j = i;
+            let mut seen_dot = false;
+            while j < n {
+                let d = chars[j];
+                if is_ident_continue(d) {
+                    j += 1;
+                } else if d == '.'
+                    && !seen_dot
+                    && j + 1 < n
+                    && chars[j + 1].is_ascii_digit()
+                {
+                    seen_dot = true;
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            out.push(Token {
+                kind: TokKind::Num,
+                text: chars[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            let start = i;
+            let mut j = i;
+            while j < n && is_ident_continue(chars[j]) {
+                j += 1;
+            }
+            out.push(Token {
+                kind: TokKind::Ident,
+                text: chars[start..j].iter().collect(),
+                line,
+            });
+            i = j;
+            continue;
+        }
+        out.push(Token { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+/// Is the `r`/`b` at `i` the start of a (raw/byte) string or char literal
+/// rather than an ordinary identifier?
+fn is_string_prefix(chars: &[char], i: usize) -> bool {
+    let n = chars.len();
+    let c = chars[i];
+    if c == 'b' {
+        if i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '\'') {
+            return true;
+        }
+        if i + 2 < n && chars[i + 1] == 'r' && (chars[i + 2] == '"' || chars[i + 2] == '#') {
+            return true;
+        }
+        return false;
+    }
+    // c == 'r'
+    if i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '#') {
+        // `r#ident` raw identifiers exist but the repo does not use them;
+        // require the `#`s to be followed by a quote to avoid misfiring.
+        let mut j = i + 1;
+        while j < n && chars[j] == '#' {
+            j += 1;
+        }
+        return j < n && chars[j] == '"';
+    }
+    false
+}
+
+/// Lex a string that begins with an `r`/`b`/`br` prefix at `i`.
+/// Returns (token, index after the literal, newlines consumed).
+fn lex_prefixed_string(chars: &[char], i: usize, line: u32) -> (Token, usize, u32) {
+    let n = chars.len();
+    let mut j = i;
+    let mut raw = false;
+    while j < n && (chars[j] == 'r' || chars[j] == 'b') {
+        if chars[j] == 'r' {
+            raw = true;
+        }
+        j += 1;
+    }
+    if j < n && chars[j] == '\'' {
+        // Byte char literal `b'x'`.
+        let start = j + 1;
+        let mut k = start;
+        while k < n && chars[k] != '\'' {
+            if chars[k] == '\\' {
+                k += 1;
+            }
+            k += 1;
+        }
+        let tok = Token {
+            kind: TokKind::CharLit,
+            text: chars[start..k.min(n)].iter().collect(),
+            line,
+        };
+        return (tok, (k + 1).min(n), 0);
+    }
+    let mut hashes = 0usize;
+    while j < n && chars[j] == '#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j >= n || chars[j] != '"' {
+        // Not actually a string; emit the prefix as an identifier-ish punct.
+        let tok = Token { kind: TokKind::Punct, text: chars[i].to_string(), line };
+        return (tok, i + 1, 0);
+    }
+    let start = j + 1;
+    let mut k = start;
+    let mut newlines = 0u32;
+    while k < n {
+        if chars[k] == '\n' {
+            newlines += 1;
+            k += 1;
+            continue;
+        }
+        if !raw && chars[k] == '\\' {
+            if k + 1 < n && chars[k + 1] == '\n' {
+                newlines += 1;
+            }
+            k += 2;
+            continue;
+        }
+        if chars[k] == '"' {
+            // For raw strings the quote must be followed by `hashes` #s.
+            let mut h = 0usize;
+            while k + 1 + h < n && h < hashes && chars[k + 1 + h] == '#' {
+                h += 1;
+            }
+            if h == hashes {
+                let tok = Token {
+                    kind: TokKind::Str,
+                    text: chars[start..k].iter().collect(),
+                    line,
+                };
+                return (tok, k + 1 + hashes, newlines);
+            }
+        }
+        k += 1;
+    }
+    let tok =
+        Token { kind: TokKind::Str, text: chars[start..n].iter().collect(), line };
+    (tok, n, newlines)
+}
+
+/// Lex a plain `"…"` string starting at the opening quote.
+fn lex_plain_string(chars: &[char], i: usize, line: u32) -> (Token, usize, u32) {
+    let n = chars.len();
+    let start = i + 1;
+    let mut j = start;
+    let mut newlines = 0u32;
+    while j < n {
+        match chars[j] {
+            '\\' => {
+                // Escaped line continuations still advance the line count.
+                if j + 1 < n && chars[j + 1] == '\n' {
+                    newlines += 1;
+                }
+                j += 2;
+            }
+            '\n' => {
+                newlines += 1;
+                j += 1;
+            }
+            '"' => {
+                let tok = Token {
+                    kind: TokKind::Str,
+                    text: chars[start..j].iter().collect(),
+                    line,
+                };
+                return (tok, j + 1, newlines);
+            }
+            _ => j += 1,
+        }
+    }
+    let tok =
+        Token { kind: TokKind::Str, text: chars[start..n].iter().collect(), line };
+    (tok, n, newlines)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn classifies_the_core_categories() {
+        let toks = kinds("fn f(x: u32) -> &'a str { x.clone() }");
+        assert!(toks.contains(&(TokKind::Ident, "fn".into())));
+        assert!(toks.contains(&(TokKind::Lifetime, "a".into())));
+        assert!(toks.contains(&(TokKind::Ident, "clone".into())));
+        assert!(toks.contains(&(TokKind::Punct, ".".into())));
+    }
+
+    #[test]
+    fn pattern_text_inside_strings_is_not_ident_tokens() {
+        let toks = lex("let s = \"Vec::new and .clone()\";");
+        assert!(toks.iter().all(|t| !(t.kind == TokKind::Ident && t.text == "clone")));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Str));
+    }
+
+    #[test]
+    fn comments_carry_their_text_and_line() {
+        let toks = lex("let a = 1;\n// dynalint: hot-path\nfn g() {}\n");
+        let c = toks.iter().find(|t| t.kind == TokKind::Comment).unwrap();
+        assert_eq!(c.text.trim(), "dynalint: hot-path");
+        assert_eq!(c.line, 2);
+        let f = toks.iter().find(|t| t.is_ident("fn")).unwrap();
+        assert_eq!(f.line, 3);
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_disambiguate() {
+        let toks = kinds("let c = 'x'; let t: &'static str = s; let e = '\\n';");
+        assert!(toks.contains(&(TokKind::CharLit, "x".into())));
+        assert!(toks.contains(&(TokKind::Lifetime, "static".into())));
+        assert!(toks.contains(&(TokKind::CharLit, "\\n".into())));
+    }
+
+    #[test]
+    fn raw_and_escaped_strings_terminate_correctly() {
+        let toks = lex("let a = r#\"quote \" inside\"#; let b = \"esc\\\"aped\"; b");
+        let strs: Vec<&Token> =
+            toks.iter().filter(|t| t.kind == TokKind::Str).collect();
+        assert_eq!(strs.len(), 2);
+        assert_eq!(strs[0].text, "quote \" inside");
+        assert_eq!(strs[1].text, "esc\\\"aped");
+        assert!(toks.last().unwrap().is_ident("b"), "lexing continued past strings");
+    }
+
+    #[test]
+    fn block_comments_nest_and_count_lines() {
+        let toks = lex("/* outer /* inner */ still */ fn after() {}\nx");
+        let f = toks.iter().find(|t| t.is_ident("fn"));
+        assert!(f.is_some(), "ident after nested block comment survives");
+        let x = toks.iter().find(|t| t.is_ident("x")).unwrap();
+        assert_eq!(x.line, 2);
+    }
+
+    #[test]
+    fn numbers_absorb_suffixes_and_float_dots() {
+        let toks = kinds("let a = 2u8; let b = 0.125; let r = 0..n;");
+        assert!(toks.contains(&(TokKind::Num, "2u8".into())));
+        assert!(toks.contains(&(TokKind::Num, "0.125".into())));
+        // Range dots stay punctuation.
+        assert!(toks.contains(&(TokKind::Num, "0".into())));
+        assert!(toks.contains(&(TokKind::Ident, "n".into())));
+    }
+}

@@ -1,0 +1,409 @@
+//! Declarative manifest for the dynalint checks.
+//!
+//! The manifest lives at `rust/src/analysis/dynalint.toml` and is parsed
+//! by a hand-rolled TOML-subset reader (the offline build bans crates.io,
+//! so no `toml`/`serde`). The subset is exactly what the manifest needs:
+//!
+//! ```text
+//! # comment
+//! [section]            # nested as [section.sub]
+//! [[section.entries]]  # array-of-tables
+//! key = "string"
+//! key = ["a", "b"]     # single-line string arrays
+//! ```
+//!
+//! Every scalar is a quoted string (numbers included) so the value grammar
+//! stays one rule. See `docs/ANALYSIS.md` for the semantics of each key.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// A parsed `key = value` table.
+pub type Table = BTreeMap<String, Value>;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    List(Vec<String>),
+}
+
+impl Value {
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            Value::List(_) => None,
+        }
+    }
+
+    fn as_list(&self) -> Option<&[String]> {
+        match self {
+            Value::Str(_) => None,
+            Value::List(items) => Some(items),
+        }
+    }
+}
+
+/// Raw parse result: plain tables by dotted path, plus array-of-tables.
+#[derive(Debug, Default)]
+pub struct Toml {
+    pub tables: BTreeMap<String, Table>,
+    pub arrays: BTreeMap<String, Vec<Table>>,
+}
+
+/// Parse the TOML subset. Unknown syntax is an error, not a silent skip —
+/// a typo in the manifest must not quietly disable a check.
+pub fn parse_toml(text: &str) -> Result<Toml> {
+    #[derive(PartialEq)]
+    enum Target {
+        Table(String),
+        Array(String),
+    }
+    let mut out = Toml::default();
+    let mut target = Target::Table(String::new());
+    out.tables.insert(String::new(), Table::new());
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let body = raw.trim();
+        if body.is_empty() || body.starts_with('#') {
+            continue;
+        }
+        if let Some(inner) = body.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let path = inner.trim().to_string();
+            if path.is_empty() {
+                bail!("line {lineno}: empty [[...]] header");
+            }
+            out.arrays.entry(path.clone()).or_default().push(Table::new());
+            target = Target::Array(path);
+            continue;
+        }
+        if let Some(inner) = body.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let path = inner.trim().to_string();
+            if path.is_empty() {
+                bail!("line {lineno}: empty [...] header");
+            }
+            out.tables.entry(path.clone()).or_default();
+            target = Target::Table(path);
+            continue;
+        }
+        let Some((key, value)) = body.split_once('=') else {
+            bail!("line {lineno}: expected `key = value`, got: {body}");
+        };
+        let key = key.trim().trim_matches('"').to_string();
+        if key.is_empty() {
+            bail!("line {lineno}: empty key");
+        }
+        let value = parse_value(value.trim())
+            .with_context(|| format!("line {lineno}: bad value for '{key}'"))?;
+        let table = match &target {
+            Target::Table(path) => out
+                .tables
+                .get_mut(path)
+                .expect("current table always exists"),
+            Target::Array(path) => out
+                .arrays
+                .get_mut(path)
+                .and_then(|v| v.last_mut())
+                .expect("current array entry always exists"),
+        };
+        table.insert(key, value);
+    }
+    Ok(out)
+}
+
+fn parse_value(text: &str) -> Result<Value> {
+    if let Some(inner) = text.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            bail!("arrays must close on the same line");
+        };
+        let mut items = Vec::new();
+        for part in split_top_level_commas(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_quoted(part)?);
+        }
+        return Ok(Value::List(items));
+    }
+    Ok(Value::Str(parse_quoted(text)?))
+}
+
+/// Split on commas that are not inside quotes (values may contain commas).
+fn split_top_level_commas(text: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut escaped = false;
+    for c in text.chars() {
+        if escaped {
+            cur.push(c);
+            escaped = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => {
+                cur.push(c);
+                escaped = true;
+            }
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+fn parse_quoted(text: &str) -> Result<String> {
+    let t = text.trim();
+    let Some(inner) = t.strip_prefix('"').and_then(|s| s.strip_suffix('"')) else {
+        bail!("expected a quoted string, got: {t}");
+    };
+    Ok(inner.to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Typed manifest
+// ---------------------------------------------------------------------------
+
+/// One `[[registry.entries]]` block: a named registry, the source file its
+/// `NAMES` const lives in, and the doc page that must list every entry.
+#[derive(Debug, Clone)]
+pub struct RegistryEntry {
+    pub name: String,
+    pub source: String,
+    pub doc: String,
+}
+
+/// Wire-protocol expectations: the transport source, the frame-name → tag
+/// table the code must match, the pinned protocol version, and the doc and
+/// fuzz files that must track it.
+#[derive(Debug, Clone)]
+pub struct WireManifest {
+    pub transport: String,
+    pub frames: Vec<(String, u8)>,
+    pub protocol_version: u16,
+    pub doc: String,
+    pub fuzz: String,
+}
+
+/// The full typed manifest consumed by the four checks.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Banned call patterns inside hot-path functions. Shape selects the
+    /// matcher: `A::B` path call, `.m` method call, `m!` macro.
+    pub banned: Vec<String>,
+    /// Canonical lock names, outermost-first: a thread holding lock at
+    /// position `i` may only acquire locks at positions `> i`.
+    pub lock_order: Vec<String>,
+    /// Receiver-identifier → canonical lock name, for `ident.lock()` sites
+    /// that predate (or bypass) the `lock_or_die` helper.
+    pub lock_idents: Vec<(String, String)>,
+    /// Condvar identifier → the lock its predicate lives under.
+    pub condvars: Vec<(String, String)>,
+    /// The one file allowed to touch `Mutex::lock`/`Condvar::wait` raw:
+    /// the poisoning-policy helper itself.
+    pub policy_file: String,
+    pub lock_helper: String,
+    pub wait_helper: String,
+    pub wire: WireManifest,
+    pub registries: Vec<RegistryEntry>,
+    /// File holding the CLI `HELP` banner every registry name must appear in.
+    pub help_source: String,
+}
+
+impl Manifest {
+    pub fn load(path: &std::path::Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Manifest::from_text(&text)
+            .with_context(|| format!("parsing manifest {}", path.display()))
+    }
+
+    pub fn from_text(text: &str) -> Result<Manifest> {
+        let toml = parse_toml(text)?;
+        let str_key = |table: &str, key: &str| -> Result<String> {
+            toml.tables
+                .get(table)
+                .and_then(|t| t.get(key))
+                .and_then(Value::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("manifest missing [{table}] {key}"))
+        };
+        let list_key = |table: &str, key: &str| -> Result<Vec<String>> {
+            toml.tables
+                .get(table)
+                .and_then(|t| t.get(key))
+                .and_then(Value::as_list)
+                .map(|v| v.to_vec())
+                .with_context(|| format!("manifest missing [{table}] {key} array"))
+        };
+        let pairs = |table: &str| -> Vec<(String, String)> {
+            toml.tables
+                .get(table)
+                .map(|t| {
+                    t.iter()
+                        .filter_map(|(k, v)| {
+                            v.as_str().map(|s| (k.clone(), s.to_string()))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let mut frames = Vec::new();
+        for (name, value) in pairs("wire.frames") {
+            let tag: u8 = value
+                .parse()
+                .with_context(|| format!("frame {name}: tag '{value}' is not a u8"))?;
+            frames.push((name, tag));
+        }
+        frames.sort_by_key(|(_, tag)| *tag);
+        if frames.is_empty() {
+            bail!("manifest [wire.frames] is empty");
+        }
+        let version_text = str_key("wire", "protocol_version")?;
+        let protocol_version: u16 = version_text
+            .parse()
+            .with_context(|| format!("protocol_version '{version_text}'"))?;
+        let mut registries = Vec::new();
+        for table in toml.arrays.get("registry.entries").map(Vec::as_slice).unwrap_or(&[])
+        {
+            let field = |key: &str| -> Result<String> {
+                table
+                    .get(key)
+                    .and_then(Value::as_str)
+                    .map(str::to_string)
+                    .with_context(|| format!("[[registry.entries]] missing {key}"))
+            };
+            registries.push(RegistryEntry {
+                name: field("name")?,
+                source: field("source")?,
+                doc: field("doc")?,
+            });
+        }
+        if registries.is_empty() {
+            bail!("manifest has no [[registry.entries]]");
+        }
+        Ok(Manifest {
+            banned: list_key("alloc", "banned")?,
+            lock_order: list_key("locks", "order")?,
+            lock_idents: pairs("locks.idents"),
+            condvars: pairs("locks.condvars"),
+            policy_file: str_key("locks", "policy_file")?,
+            lock_helper: str_key("locks", "lock_helper")?,
+            wait_helper: str_key("locks", "wait_helper")?,
+            wire: WireManifest {
+                transport: str_key("wire", "transport")?,
+                frames,
+                protocol_version,
+                doc: str_key("wire", "doc")?,
+                fuzz: str_key("wire", "fuzz")?,
+            },
+            registries,
+            help_source: str_key("registry", "help_source")?,
+        })
+    }
+
+    /// Rank of a canonical lock name in the declared partial order.
+    pub fn lock_rank(&self, name: &str) -> Option<usize> {
+        self.lock_order.iter().position(|n| n == name)
+    }
+
+    /// Canonical lock name for a `.lock()` receiver identifier.
+    pub fn lock_for_ident(&self, ident: &str) -> Option<&str> {
+        self.lock_idents
+            .iter()
+            .find(|(k, _)| k == ident)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Is `ident` a declared condvar?
+    pub fn is_condvar(&self, ident: &str) -> bool {
+        self.condvars.iter().any(|(k, _)| k == ident)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# sample manifest
+[alloc]
+banned = ["Vec::new", ".clone", "format!"]
+
+[locks]
+order = ["a.outer", "b.inner"]
+policy_file = "rust/src/util/sync.rs"
+lock_helper = "lock_or_die"
+wait_helper = "wait_or_die"
+
+[locks.idents]
+conns = "a.outer"
+
+[locks.condvars]
+cv = "b.inner"
+
+[wire]
+transport = "rust/src/net/transport.rs"
+doc = "docs/WIRE.md"
+fuzz = "rust/tests/fuzz_substrates.rs"
+protocol_version = "4"
+
+[wire.frames]
+Pull = "1"
+Push = "3"
+
+[registry]
+help_source = "rust/src/main.rs"
+
+[[registry.entries]]
+name = "sched"
+source = "rust/src/sched/registry.rs"
+doc = "docs/SCHEDULER.md"
+
+[[registry.entries]]
+name = "sync"
+source = "rust/src/ps/sync/mod.rs"
+doc = "docs/SYNC.md"
+"#;
+
+    #[test]
+    fn parses_the_full_shape() {
+        let m = Manifest::from_text(SAMPLE).unwrap();
+        assert_eq!(m.banned, vec!["Vec::new", ".clone", "format!"]);
+        assert_eq!(m.lock_order, vec!["a.outer", "b.inner"]);
+        assert_eq!(m.lock_rank("b.inner"), Some(1));
+        assert_eq!(m.lock_for_ident("conns"), Some("a.outer"));
+        assert!(m.is_condvar("cv"));
+        assert_eq!(m.wire.protocol_version, 4);
+        assert_eq!(m.wire.frames, vec![("Pull".to_string(), 1), ("Push".to_string(), 3)]);
+        assert_eq!(m.registries.len(), 2);
+        assert_eq!(m.registries[1].doc, "docs/SYNC.md");
+    }
+
+    #[test]
+    fn typos_error_instead_of_disabling_checks() {
+        assert!(Manifest::from_text("not a manifest").is_err());
+        assert!(parse_toml("key = [\"unterminated\"").is_err());
+        assert!(parse_toml("key = bare").is_err());
+        let missing = SAMPLE.replace("lock_helper", "lock_helper_typo");
+        assert!(Manifest::from_text(&missing).is_err());
+    }
+
+    #[test]
+    fn the_committed_manifest_parses() {
+        let text = include_str!("dynalint.toml");
+        let m = Manifest::from_text(text).expect("committed manifest is valid");
+        assert_eq!(m.wire.frames.len(), 11, "one frame per v4 opcode");
+        assert_eq!(m.registries.len(), 3, "sched, sync, codec");
+    }
+}

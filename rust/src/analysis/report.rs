@@ -1,0 +1,130 @@
+//! Diagnostics: `file:line` text rendering plus machine-readable JSON.
+
+use crate::util::json::Json;
+
+/// One diagnostic from one check.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Finding {
+    /// Check identifier: `alloc`, `locks`, `wire`, or `registry`.
+    pub check: &'static str,
+    /// Repo-root-relative path with forward slashes.
+    pub file: String,
+    /// 1-based line; 0 when the finding is about a whole file.
+    pub line: u32,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn new(
+        check: &'static str,
+        file: &str,
+        line: u32,
+        message: String,
+    ) -> Finding {
+        Finding { check, file: file.to_string(), line, message }
+    }
+
+    pub fn render(&self) -> String {
+        if self.line == 0 {
+            format!("{}: [{}] {}", self.file, self.check, self.message)
+        } else {
+            format!("{}:{}: [{}] {}", self.file, self.line, self.check, self.message)
+        }
+    }
+}
+
+/// A full run: every finding, plus enough metadata for CI artifacts.
+#[derive(Debug)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub files_scanned: usize,
+    pub checks_run: Vec<&'static str>,
+    pub elapsed_ms: f64,
+}
+
+impl Report {
+    /// Human-readable rendering: one `file:line: [check] message` line per
+    /// finding (sorted for stable diffs), then a one-line summary.
+    pub fn render_text(&self) -> String {
+        let mut sorted: Vec<&Finding> = self.findings.iter().collect();
+        sorted.sort_by(|a, b| {
+            (&a.file, a.line, a.check).cmp(&(&b.file, b.line, b.check))
+        });
+        let mut out = String::new();
+        for f in &sorted {
+            out.push_str(&f.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "dynalint: {} finding(s) across {} file(s), {} check(s) in {:.0} ms\n",
+            self.findings.len(),
+            self.files_scanned,
+            self.checks_run.len(),
+            self.elapsed_ms,
+        ));
+        out
+    }
+
+    /// JSON artifact for CI upload. Schema documented in docs/ANALYSIS.md.
+    pub fn to_json(&self) -> Json {
+        let findings = self
+            .findings
+            .iter()
+            .map(|f| {
+                Json::obj(vec![
+                    ("check", Json::Str(f.check.to_string())),
+                    ("file", Json::Str(f.file.clone())),
+                    ("line", Json::Num(f.line as f64)),
+                    ("message", Json::Str(f.message.clone())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("tool", Json::Str("dynalint".to_string())),
+            ("schema_version", Json::Num(1.0)),
+            ("files_scanned", Json::Num(self.files_scanned as f64)),
+            ("checks_run", Json::arr_str(&self.checks_run)),
+            ("finding_count", Json::Num(self.findings.len() as f64)),
+            ("findings", Json::Arr(findings)),
+            ("elapsed_ms", Json::Num(self.elapsed_ms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            findings: vec![
+                Finding::new("locks", "rust/src/b.rs", 9, "inversion".to_string()),
+                Finding::new("alloc", "rust/src/a.rs", 3, "banned call".to_string()),
+            ],
+            files_scanned: 2,
+            checks_run: vec!["alloc", "locks", "wire", "registry"],
+            elapsed_ms: 12.0,
+        }
+    }
+
+    #[test]
+    fn text_rendering_is_sorted_and_clickable() {
+        let text = sample().render_text();
+        let a = text.find("rust/src/a.rs:3: [alloc] banned call").unwrap();
+        let b = text.find("rust/src/b.rs:9: [locks] inversion").unwrap();
+        assert!(a < b, "findings sorted by file: {text}");
+        assert!(text.contains("2 finding(s)"));
+    }
+
+    #[test]
+    fn json_artifact_round_trips_through_the_parser() {
+        let json = sample().to_json();
+        let back = Json::parse(&json.to_string()).unwrap();
+        assert_eq!(back.get("tool").and_then(Json::as_str), Some("dynalint"));
+        assert_eq!(back.get("finding_count").and_then(Json::as_usize), Some(2));
+        let findings = back.get("findings").and_then(Json::as_arr).unwrap();
+        assert_eq!(findings.len(), 2);
+        assert_eq!(findings[0].get("check").and_then(Json::as_str), Some("locks"));
+        assert_eq!(findings[0].get("line").and_then(Json::as_usize), Some(9));
+    }
+}

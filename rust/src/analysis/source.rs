@@ -1,0 +1,343 @@
+//! Per-file source model: lexed code tokens, dynalint directives pulled
+//! from comments, `#[cfg(test)]` spans, and structural helpers (function
+//! bodies, loop bodies, brace matching) shared by all checks.
+
+use super::lexer::{self, TokKind, Token};
+
+/// A non-comment token. Checks pattern-match over these, so comment
+/// placement can never perturb a match; comments are distilled into
+/// [`Directives`] instead.
+#[derive(Debug, Clone)]
+pub struct CodeTok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl CodeTok {
+    pub fn is_ident(&self, name: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == name
+    }
+
+    pub fn is_punct(&self, ch: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == 1 && self.text.starts_with(ch)
+    }
+}
+
+/// dynalint annotations extracted from comments.
+///
+/// Grammar (anywhere in a `//` comment's own line):
+/// - `dynalint: hot-path` — the next `fn` is allocation-checked.
+/// - `dynalint: allow(<kind>, <reason>)` — suppress a `<kind>` finding on
+///   this line or the line directly below.
+#[derive(Debug, Default)]
+pub struct Directives {
+    /// Lines bearing a `hot-path` annotation.
+    pub hot_path: Vec<u32>,
+    /// `(line, kind)` of each `allow(kind, reason)` annotation.
+    pub allows: Vec<(u32, String)>,
+    /// `(line, text)` of comments that look like directives but parse as
+    /// neither form — surfaced as findings so typos cannot silently
+    /// disable a check.
+    pub malformed: Vec<(u32, String)>,
+}
+
+impl Directives {
+    /// Is a `kind` finding at `line` covered by an allow on the same line
+    /// or the line above?
+    pub fn allowed(&self, kind: &str, line: u32) -> bool {
+        self.allows
+            .iter()
+            .any(|(l, k)| k == kind && (*l == line || *l + 1 == line))
+    }
+}
+
+/// One lexed source file plus its precomputed structure.
+pub struct SrcFile {
+    /// Repo-root-relative path, forward slashes.
+    pub path: String,
+    pub text: String,
+    pub code: Vec<CodeTok>,
+    pub directives: Directives,
+    /// Code-token index ranges `[open, close]` of `#[cfg(test)] mod` bodies.
+    pub test_spans: Vec<(usize, usize)>,
+}
+
+impl SrcFile {
+    pub fn parse(path: &str, text: String) -> SrcFile {
+        let tokens = lexer::lex(&text);
+        let directives = extract_directives(&tokens);
+        let code: Vec<CodeTok> = tokens
+            .into_iter()
+            .filter(|t| t.kind != TokKind::Comment)
+            .map(|t| CodeTok { kind: t.kind, text: t.text, line: t.line })
+            .collect();
+        let test_spans = find_cfg_test_spans(&code);
+        SrcFile { path: path.to_string(), text, code, directives, test_spans }
+    }
+
+    /// Is the code token at `idx` inside a `#[cfg(test)] mod` body?
+    pub fn in_test(&self, idx: usize) -> bool {
+        self.test_spans.iter().any(|&(open, close)| idx >= open && idx <= close)
+    }
+}
+
+fn extract_directives(tokens: &[Token]) -> Directives {
+    let mut out = Directives::default();
+    for t in tokens {
+        if t.kind != TokKind::Comment {
+            continue;
+        }
+        let Some(rest) = t.text.trim().strip_prefix("dynalint:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        if rest == "hot-path" {
+            out.hot_path.push(t.line);
+        } else if let Some(args) =
+            rest.strip_prefix("allow(").and_then(|s| s.strip_suffix(')'))
+        {
+            let kind = args.split(',').next().unwrap_or("").trim();
+            let has_reason =
+                args.split_once(',').map(|(_, r)| !r.trim().is_empty()).unwrap_or(false);
+            if kind.is_empty() || !has_reason {
+                out.malformed.push((t.line, t.text.trim().to_string()));
+            } else {
+                out.allows.push((t.line, kind.to_string()));
+            }
+        } else {
+            out.malformed.push((t.line, t.text.trim().to_string()));
+        }
+    }
+    out
+}
+
+/// Find `#[cfg(test)] mod name { … }` spans over code tokens.
+fn find_cfg_test_spans(code: &[CodeTok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    let mut i = 0usize;
+    while i + 6 < code.len() {
+        let is_attr = code[i].is_punct('#')
+            && code[i + 1].is_punct('[')
+            && code[i + 2].is_ident("cfg")
+            && code[i + 3].is_punct('(')
+            && code[i + 4].is_ident("test")
+            && code[i + 5].is_punct(')')
+            && code[i + 6].is_punct(']');
+        if !is_attr {
+            i += 1;
+            continue;
+        }
+        // Look a short distance past the attribute for `mod name {`;
+        // `#[cfg(test)]` on functions or `mod x;` declarations is skipped.
+        let mut j = i + 7;
+        let limit = (i + 16).min(code.len());
+        while j < limit && !code[j].is_ident("mod") {
+            j += 1;
+        }
+        if j + 2 < code.len()
+            && code[j].is_ident("mod")
+            && code[j + 1].kind == TokKind::Ident
+            && code[j + 2].is_punct('{')
+        {
+            if let Some(close) = match_brace(code, j + 2) {
+                spans.push((j + 2, close));
+                i = close + 1;
+                continue;
+            }
+        }
+        i += 7;
+    }
+    spans
+}
+
+/// Index of the `}` matching the `{` at `open`, or `None` if unbalanced.
+pub fn match_brace(code: &[CodeTok], open: usize) -> Option<usize> {
+    debug_assert!(code[open].is_punct('{'));
+    let mut depth = 0i64;
+    for (i, t) in code.iter().enumerate().skip(open) {
+        if t.is_punct('{') {
+            depth += 1;
+        } else if t.is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return Some(i);
+            }
+        }
+    }
+    None
+}
+
+/// A named `fn` with a body.
+#[derive(Debug, Clone)]
+pub struct FnBody {
+    pub name: String,
+    /// Code-token index of the `fn` keyword.
+    pub fn_idx: usize,
+    /// Code-token indices of the body `{` and its matching `}`.
+    pub open: usize,
+    pub close: usize,
+}
+
+/// Every named function with a body, in source order. Bodyless trait
+/// methods and `fn(...)` pointer types are skipped.
+pub fn find_fn_bodies(code: &[CodeTok]) -> Vec<FnBody> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        if !code[i].is_ident("fn") {
+            i += 1;
+            continue;
+        }
+        let Some(name_tok) = code.get(i + 1) else { break };
+        if name_tok.kind != TokKind::Ident {
+            i += 1; // `fn(usize) -> T` pointer type
+            continue;
+        }
+        let name = name_tok.text.clone();
+        // Scan past generics/params/return type for the body `{` (or `;`
+        // for a bodyless signature) at paren/bracket depth zero.
+        let mut j = i + 2;
+        let mut depth = 0i64;
+        let mut found: Option<usize> = None;
+        while j < code.len() {
+            let t = &code[j];
+            if t.is_punct('(') || t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(')') || t.is_punct(']') {
+                depth -= 1;
+            } else if depth == 0 && t.is_punct(';') {
+                break;
+            } else if depth == 0 && t.is_punct('{') {
+                found = Some(j);
+                break;
+            }
+            j += 1;
+        }
+        match found.and_then(|open| match_brace(code, open).map(|close| (open, close)))
+        {
+            Some((open, close)) => {
+                out.push(FnBody { name, fn_idx: i, open, close });
+                i += 2; // nested fns are discovered by the linear scan
+            }
+            None => i = j.max(i + 2),
+        }
+    }
+    out
+}
+
+/// Code-token spans `[open, close]` of every `while`/`loop` body —
+/// the predicate re-check regions a condvar wait must sit inside.
+pub fn find_loop_spans(code: &[CodeTok]) -> Vec<(usize, usize)> {
+    let mut spans = Vec::new();
+    for i in 0..code.len() {
+        let t = &code[i];
+        if !(t.is_ident("while") || t.is_ident("loop")) {
+            continue;
+        }
+        // Find the body `{` at paren depth 0; a `while` condition may
+        // contain call parens, a `loop` is followed by its brace directly.
+        let mut depth = 0i64;
+        let mut j = i + 1;
+        let mut open: Option<usize> = None;
+        while j < code.len() && j <= i + 256 {
+            let u = &code[j];
+            if u.is_punct('(') || u.is_punct('[') {
+                depth += 1;
+            } else if u.is_punct(')') || u.is_punct(']') {
+                depth -= 1;
+            } else if depth == 0 && u.is_punct('{') {
+                open = Some(j);
+                break;
+            } else if depth == 0 && u.is_punct(';') {
+                break;
+            }
+            j += 1;
+        }
+        if let Some(open) = open {
+            if let Some(close) = match_brace(code, open) {
+                spans.push((open, close));
+            }
+        }
+    }
+    spans
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(src: &str) -> SrcFile {
+        SrcFile::parse("test.rs", src.to_string())
+    }
+
+    #[test]
+    fn directives_parse_and_reject_typos() {
+        let f = parse(
+            "// dynalint: hot-path\nfn a() {}\n\
+             // dynalint: allow(alloc, refcount bump only)\nlet x = 1;\n\
+             // dynalint: allow(alloc)\n// dynalint: hotpath\n",
+        );
+        assert_eq!(f.directives.hot_path, vec![1]);
+        assert_eq!(f.directives.allows, vec![(3, "alloc".to_string())]);
+        assert_eq!(f.directives.malformed.len(), 2, "missing reason + typo flagged");
+        assert!(f.directives.allowed("alloc", 4), "line below the comment");
+        assert!(!f.directives.allowed("alloc", 6));
+        assert!(!f.directives.allowed("lock-order", 4), "kind-scoped");
+    }
+
+    #[test]
+    fn cfg_test_mod_spans_cover_their_bodies() {
+        let f = parse(
+            "fn live() { x.lock(); }\n\
+             #[cfg(test)]\nmod tests {\n    fn t() { y.lock(); }\n}\nfn after() {}\n",
+        );
+        assert_eq!(f.test_spans.len(), 1);
+        let lock_sites: Vec<usize> = f
+            .code
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_ident("lock"))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(lock_sites.len(), 2);
+        assert!(!f.in_test(lock_sites[0]), "live code outside the span");
+        assert!(f.in_test(lock_sites[1]), "test code inside the span");
+        let after = f.code.iter().position(|t| t.is_ident("after")).unwrap();
+        assert!(!f.in_test(after));
+    }
+
+    #[test]
+    fn fn_bodies_skip_signatures_and_pointer_types() {
+        let f = parse(
+            "trait T { fn sig(&self) -> u8; }\n\
+             struct S { build: fn(usize) -> usize }\n\
+             fn real<A>(xs: &[A]) -> usize { xs.len() }\n",
+        );
+        let bodies = find_fn_bodies(&f.code);
+        assert_eq!(bodies.len(), 1);
+        assert_eq!(bodies[0].name, "real");
+        assert!(f.code[bodies[0].open].is_punct('{'));
+        assert!(f.code[bodies[0].close].is_punct('}'));
+    }
+
+    #[test]
+    fn loop_spans_cover_while_and_loop_bodies() {
+        let f = parse(
+            "fn f() {\n  while a.b(c) < d { wait(); }\n  loop { wait(); break; }\n  wait();\n}\n",
+        );
+        let spans = find_loop_spans(&f.code);
+        assert_eq!(spans.len(), 2);
+        let waits: Vec<usize> = f
+            .code
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.is_ident("wait"))
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(waits.len(), 3);
+        let inside = |idx: usize| spans.iter().any(|&(o, c)| idx > o && idx < c);
+        assert!(inside(waits[0]) && inside(waits[1]));
+        assert!(!inside(waits[2]), "the bare wait is outside every loop body");
+    }
+}

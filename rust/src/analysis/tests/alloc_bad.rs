@@ -1,0 +1,13 @@
+// Fixture: a hot-path function with three banned allocation patterns
+// (method call, path call, macro). Never compiled — loaded via
+// include_str! by rust/src/analysis/checks/alloc.rs tests.
+
+// dynalint: hot-path
+fn hot_send(buf: &mut Vec<u8>) -> Vec<u8> {
+    let copy = buf.clone();
+    let mut staged = Vec::new();
+    staged.extend_from_slice(&copy);
+    let label = format!("{} bytes", staged.len());
+    drop(label);
+    staged
+}

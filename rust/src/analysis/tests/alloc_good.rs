@@ -1,0 +1,20 @@
+// Fixture: a hot-path function that stays on pooled buffers, with one
+// justified allow; cold functions below it may allocate freely. Never
+// compiled — loaded via include_str! by the alloc check's tests.
+
+// dynalint: hot-path
+fn hot_send(buf: &[u8], scratch: &mut Vec<u8>, slab: &Arc<PooledSlab>) -> usize {
+    scratch.clear();
+    scratch.extend_from_slice(buf);
+    // dynalint: allow(alloc, Arc refcount bump only — shares the pooled slab)
+    let shared = slab.clone();
+    shared.len() + scratch.len()
+}
+
+fn cold_rebuild(parts: &[Vec<u8>]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for p in parts {
+        out.extend_from_slice(p);
+    }
+    out
+}

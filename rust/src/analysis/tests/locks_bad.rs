@@ -1,0 +1,22 @@
+// Fixture: one violation per locks pass — an order inversion (pool.free
+// is declared inner to server.conns), a bare `.lock()` site, and a
+// condvar wait with no predicate re-check loop. Never compiled — loaded
+// via include_str! by rust/src/analysis/checks/locks.rs tests.
+
+fn nested_inversion(p: &Pool, s: &Server) {
+    let free = lock_or_die(&p.free, "pool.free");
+    let conns = lock_or_die(&s.conns, "server.conns");
+    drop(conns);
+    drop(free);
+}
+
+fn bare_site(s: &Server) {
+    let conns = s.conns.lock().unwrap();
+    drop(conns);
+}
+
+fn naked_wait(s: &Server) {
+    let mut entries = lock_or_die(&s.entries, "reply_cache.entries");
+    entries = wait_or_die(&s.ready, entries, "reply_cache.entries");
+    drop(entries);
+}

@@ -1,0 +1,27 @@
+// Fixture: the disciplined twins of locks_bad.rs — acquisition in the
+// declared order, helper-routed locking, and a predicate re-check loop
+// around the wait. Never compiled — loaded via include_str! by tests.
+
+fn ordered_nesting(p: &Pool, s: &Server) {
+    let conns = lock_or_die(&s.conns, "server.conns");
+    let free = lock_or_die(&p.free, "pool.free");
+    drop(free);
+    drop(conns);
+}
+
+fn guarded_wait(s: &Server) {
+    let mut entries = lock_or_die(&s.entries, "reply_cache.entries");
+    while entries.building() {
+        entries = wait_or_die(&s.ready, entries, "reply_cache.entries");
+    }
+    drop(entries);
+}
+
+fn scoped_then_reacquire(p: &Pool) {
+    {
+        let free = lock_or_die(&p.free, "pool.free");
+        drop(free);
+    }
+    let free = lock_or_die(&p.free, "pool.free");
+    drop(free);
+}

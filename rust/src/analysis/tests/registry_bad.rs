@@ -1,0 +1,10 @@
+// Fixture: the HELP banner advertises only two of the three registry
+// entries — `gamma` is the seeded gap. Never compiled — loaded via
+// include_str! by the registry check's tests.
+
+pub const NAMES: [&str; 3] = ["alpha", "beta", "gamma"];
+
+const HELP: &str = "\
+usage: tool [options]
+  --strategy S   alpha|beta (registry names)
+";

@@ -1,0 +1,9 @@
+// Fixture: a registry whose NAMES all appear in its HELP banner. Never
+// compiled — loaded via include_str! by the registry check's tests.
+
+pub const NAMES: [&str; 3] = ["alpha", "beta", "gamma"];
+
+const HELP: &str = "\
+usage: tool [options]
+  --strategy S   alpha|beta|gamma (registry names)
+";

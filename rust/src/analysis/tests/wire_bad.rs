@@ -1,0 +1,24 @@
+// Fixture: four seeded wire violations against the test manifest
+// (Pull = 1, Push = 3, Shutdown = 7, version 4): a duplicate frame tag,
+// a tag diverging from the manifest, a decoder arm gap, and a stale
+// PROTOCOL_VERSION. Never compiled — loaded via include_str! by tests.
+
+pub const PROTOCOL_VERSION: u16 = 3;
+
+impl MessageRef<'_> {
+    pub fn opcode(&self) -> u8 {
+        match self {
+            MessageRef::Pull { .. } => 1,
+            MessageRef::Push { .. } => 1,
+            MessageRef::Shutdown => 7,
+        }
+    }
+
+    pub fn decode(b: &[u8]) -> Result<MessageRef<'_>> {
+        let op = b[0];
+        Ok(match op {
+            1 => MessageRef::Pull { iter: 0 },
+            _ => bail!("unknown opcode {op}"),
+        })
+    }
+}

@@ -1,0 +1,26 @@
+// Fixture: a consistent three-frame protocol matching the test manifest
+// (Pull = 1, Push = 3, Shutdown = 7, version 4) — unique tags, full
+// decoder coverage with a bail wildcard, aligned PROTOCOL_VERSION.
+// Never compiled — loaded via include_str! by tests.
+
+pub const PROTOCOL_VERSION: u16 = 4;
+
+impl MessageRef<'_> {
+    pub fn opcode(&self) -> u8 {
+        match self {
+            MessageRef::Pull { .. } => 1,
+            MessageRef::Push { .. } => 3,
+            MessageRef::Shutdown => 7,
+        }
+    }
+
+    pub fn decode(b: &[u8]) -> Result<MessageRef<'_>> {
+        let op = b[0];
+        Ok(match op {
+            1 => MessageRef::Pull { iter: 0 },
+            3 => MessageRef::Push { iter: 0 },
+            7 => MessageRef::Shutdown,
+            _ => bail!("unknown opcode {op}"),
+        })
+    }
+}

@@ -1,0 +1,59 @@
+//! `dynalint` — run the in-repo static-analysis pass and gate CI on it.
+//!
+//! Exit status: 0 clean, 1 findings, 2 analyzer error (missing manifest,
+//! unreadable source, malformed manifest TOML).
+//!
+//! ```text
+//! cargo run --release --bin dynalint -- [--root DIR] [--json PATH] [--quiet]
+//! ```
+//!
+//! `--root` defaults to the current directory and must hold `Cargo.toml`
+//! plus the manifest at `rust/src/analysis/dynalint.toml`. `--json` also
+//! writes the machine-readable report (schema in `docs/ANALYSIS.md`) for
+//! CI artifact upload; parent directories are created as needed.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use dynacomm::analysis;
+use dynacomm::util::cli::Args;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    let root = PathBuf::from(args.get_or("root", "."));
+    let quiet = args.bool("quiet");
+
+    let report = match analysis::run(&root) {
+        Ok(report) => report,
+        Err(err) => {
+            eprintln!("dynalint: error: {err:#}");
+            return ExitCode::from(2);
+        }
+    };
+
+    if let Some(json_path) = args.get("json") {
+        if let Err(err) = write_json(Path::new(json_path), &report) {
+            eprintln!("dynalint: error writing {json_path}: {err:#}");
+            return ExitCode::from(2);
+        }
+    }
+
+    if !quiet || !report.findings.is_empty() {
+        print!("{}", report.render_text());
+    }
+    if report.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn write_json(path: &Path, report: &analysis::report::Report) -> anyhow::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, report.to_json().to_string())?;
+    Ok(())
+}

@@ -18,6 +18,7 @@
 //! The [`runtime`] module loads the HLO artifacts through PJRT so the Rust
 //! hot path never touches Python.
 
+pub mod analysis;
 pub mod config;
 pub mod figures;
 pub mod models;

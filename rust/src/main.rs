@@ -54,7 +54,8 @@ USAGE: dynacomm <schedule|simulate|sweep|train|bench-sched> [flags]
 FLAGS (defaults = the paper's testbed):
   --model NAME          vgg19|googlenet|inceptionv4|resnet152|edgecnn
   --batch N             per-worker batch size (32)
-  --strategy S          sequential|lbl|ibatch|dynacomm (registry shim names)
+  --strategy S          sequential|lbl|ibatch|dynacomm|slicing|bruteforce
+                        (registry shim names)
   --codec C             wire codec fp32|fp16|int8 (compressed transfers;
                         the scheduler costs transmissions at wire size)
   --sync M              parameter-server synchronization bsp|ssp|asp

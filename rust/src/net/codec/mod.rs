@@ -229,6 +229,11 @@ pub fn codec(id: CodecId) -> &'static dyn WireCodec {
 /// The codecs this build supports (servers advertise-by-construction).
 pub const SUPPORTED: [CodecId; 3] = CodecId::ALL;
 
+/// Registry names, aligned with [`CodecId::ALL`] — what `--codec` parses,
+/// the CLI help banner advertises, and `docs/WIRE.md` documents (the
+/// `dynalint` registry check pins all three together).
+pub const NAMES: [&str; 3] = ["fp32", "fp16", "int8"];
+
 /// Session-codec negotiation: the first of the proposer's `prefs` that the
 /// answerer supports, falling back to [`CodecId::Fp32`] — which every v3
 /// endpoint must support, so any preference pair converges on a codec both
@@ -388,6 +393,13 @@ mod tests {
     use super::*;
     use crate::net::slab;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn registry_names_align_with_codec_ids() {
+        for (name, id) in NAMES.iter().zip(CodecId::ALL) {
+            assert_eq!(*name, id.name());
+        }
+    }
 
     fn random_f32s(rng: &mut Rng, n: usize) -> Vec<f32> {
         (0..n).map(|_| (rng.normal() * 10.0) as f32).collect()

@@ -24,6 +24,8 @@ use std::ops::{Deref, DerefMut};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
+use crate::util::sync::lock_or_die;
+
 /// Buffers retained by a pool beyond this count are dropped instead of
 /// recycled (bounds worst-case memory when segment shapes change). Callers
 /// with a known working set (e.g. the worker, which holds one gradient
@@ -79,9 +81,10 @@ impl SlabPool {
 
     /// Best-fit grab: the smallest free buffer whose capacity covers `cap`,
     /// else a fresh allocation (counted).
+    // dynalint: hot-path
     fn grab(&self, cap: usize) -> Vec<u8> {
         self.checkouts.fetch_add(1, Ordering::SeqCst);
-        let mut free = self.free.lock().unwrap();
+        let mut free = lock_or_die(&self.free, "pool.free");
         let mut best: Option<usize> = None;
         for (i, b) in free.iter().enumerate() {
             if b.capacity() < cap {
@@ -110,6 +113,7 @@ impl SlabPool {
 
     /// Check out an **empty** buffer with at least `cap` bytes of capacity
     /// — for `extend_from_slice`-style assembly (no zero-fill anywhere).
+    // dynalint: hot-path
     pub fn checkout(self: &Arc<Self>, cap: usize) -> SlabCheckout {
         let mut buf = self.grab(cap);
         buf.clear();
@@ -121,6 +125,7 @@ impl SlabPool {
     /// for paths that overwrite every byte, like reading a frame off a
     /// socket. Only growth past the buffer's previous length zero-fills, so
     /// a warm pool never re-memsets.
+    // dynalint: hot-path
     pub fn checkout_filled(self: &Arc<Self>, len: usize) -> SlabCheckout {
         let mut buf = self.grab(len);
         if buf.len() < len {
@@ -135,11 +140,12 @@ impl SlabPool {
     /// length/contents are left as-is so refills skip the memset).
     /// Oversized buffers are dropped, not parked — see
     /// [`MAX_RETAINED_BUF_BYTES`].
+    // dynalint: hot-path
     fn put(&self, buf: Vec<u8>) {
         if buf.capacity() == 0 || buf.capacity() > MAX_RETAINED_BUF_BYTES {
             return;
         }
-        let mut free = self.free.lock().unwrap();
+        let mut free = lock_or_die(&self.free, "pool.free");
         if free.len() < self.max_retained {
             free.push(buf);
         }
@@ -150,7 +156,7 @@ impl SlabPool {
             checkouts: self.checkouts.load(Ordering::SeqCst),
             recycled: self.recycled.load(Ordering::SeqCst),
             allocations: self.allocations.load(Ordering::SeqCst),
-            retained: self.free.lock().unwrap().len(),
+            retained: lock_or_die(&self.free, "pool.free").len(),
         }
     }
 }
@@ -174,8 +180,10 @@ impl SlabCheckout {
     /// Seal the buffer into a shared, immutable slab. The bytes return to
     /// the pool when the last `Arc` clone (and every [`SlabSlice`] over it)
     /// drops.
+    // dynalint: hot-path
     pub fn freeze(mut self) -> Arc<PooledSlab> {
         let buf = self.buf.take().expect("checkout already consumed");
+        // dynalint: allow(alloc, Weak refcount bump hands the pool pointer over)
         Arc::new(PooledSlab { buf, pool: self.pool.clone() })
     }
 }
@@ -273,8 +281,10 @@ impl SlabSlice {
     }
 
     /// A sub-view relative to this view's range (same backing slab).
+    // dynalint: hot-path
     pub fn slice(&self, off: usize, len: usize) -> SlabSlice {
         assert!(off + len <= self.len, "slab sub-slice out of bounds");
+        // dynalint: allow(alloc, Arc refcount bump shares the backing slab)
         SlabSlice { buf: self.buf.clone(), off: self.off + off, len }
     }
 }

@@ -10,6 +10,8 @@
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::util::sync::lock_or_die;
+
 /// Parameters for building per-link shapers (e.g. one downlink per worker
 /// connection on the server side).
 #[derive(Debug, Clone, Copy)]
@@ -73,7 +75,7 @@ impl LinkShaper {
         }
         let dur = Duration::from_secs_f64(cost / 1e3);
         let wake = {
-            let mut st = self.inner.lock().unwrap();
+            let mut st = lock_or_die(&self.inner, "shaper.state");
             let now = Instant::now();
             let start = match st.free_at {
                 Some(t) if t > now => t,

@@ -290,6 +290,7 @@ impl<'a> MessageRef<'a> {
     /// messages) the slab length field into `buf` — everything **except**
     /// the slab bytes — and return the borrowed slab to be written after
     /// it. `buf ‖ returned` is byte-identical to [`Message::encode`].
+    // dynalint: hot-path
     pub fn encode_header_into(&self, buf: &mut Vec<u8>) -> &'a [u8] {
         match *self {
             // Tensor frames share one header encoder with
@@ -334,6 +335,7 @@ impl<'a> MessageRef<'a> {
     }
 
     /// Decode a frame payload, borrowing the tensor slab from it.
+    // dynalint: hot-path
     pub fn decode(payload: &'a [u8]) -> Result<MessageRef<'a>> {
         anyhow::ensure!(!payload.is_empty(), "empty frame");
         let op = payload[0];
@@ -491,6 +493,7 @@ const PULL_REPLY_SLAB_OFF: usize = 1 + 8 + 4 + 4 + 8 + 4;
 /// and [`Connection::send_push_parts`]. `applied` is present exactly for
 /// `PullReply` frames (v4) — which is also what selects the opcode, since
 /// they are the only two tensor frames.
+// dynalint: hot-path
 fn encode_tensor_header(
     buf: &mut Vec<u8>,
     iter: u64,
@@ -529,6 +532,7 @@ fn scattered_part<'a>(head: &'a [u8], parts: &'a [&'a [u8]], i: usize) -> &'a [u
 
 /// Write `head` then every slice of `parts`, scatter-gather style, with
 /// correct resumption after partial writes. One frame, no assembly copy.
+// dynalint: hot-path
 fn write_scattered(w: &mut TcpStream, head: &[u8], parts: &[&[u8]]) -> std::io::Result<()> {
     /// Max iovec entries per `write_vectored` call.
     const IOV_BATCH: usize = 16;
@@ -576,6 +580,7 @@ fn write_scattered(w: &mut TcpStream, head: &[u8], parts: &[&[u8]]) -> std::io::
 /// steady state (warm capacity is **never** re-zeroed — the socket read
 /// overwrites `[..len]`), and shrink back to [`RECV_RETAIN_MAX`] when a
 /// prior oversized frame left pathological capacity behind.
+// dynalint: hot-path
 fn prepare_frame_buf(buf: &mut Vec<u8>, len: usize) {
     if buf.capacity() > RECV_RETAIN_MAX && len <= RECV_RETAIN_MAX {
         buf.clear();
@@ -618,6 +623,7 @@ impl Connection {
     /// `[header][slab]` via `write_vectored` — the slab is never copied.
     /// When shaped, sleeps for the emulated serialization + latency time
     /// before the bytes hit the socket.
+    // dynalint: hot-path
     pub fn send_ref(&mut self, msg: MessageRef<'_>) -> Result<()> {
         let payload = msg.encode_header_into(&mut self.send_buf);
         if let Some(shaper) = &self.shaper {
@@ -630,6 +636,7 @@ impl Connection {
     /// per layer, straight from the pooled per-layer gradient slabs). The
     /// frame on the wire is byte-identical to sending the concatenation —
     /// without ever materializing it.
+    // dynalint: hot-path
     pub fn send_push_parts(
         &mut self,
         iter: u64,
@@ -655,6 +662,7 @@ impl Connection {
     /// the connection's receive scratch — zero payload copies for callers
     /// that fully consume the message before the next transport call (the
     /// server's `Push` handling).
+    // dynalint: hot-path
     pub fn recv_ref(&mut self) -> Result<MessageRef<'_>> {
         let len = read_frame_len(&mut self.stream)?;
         prepare_frame_buf(&mut self.recv_buf, len);
@@ -670,6 +678,7 @@ impl Connection {
     /// the frame buffer recycles through `pool` when the last view drops.
     /// Control frames are returned owned and their checkout is recycled
     /// immediately.
+    // dynalint: hot-path
     pub fn recv_pooled(&mut self, pool: &Arc<SlabPool>) -> Result<RecvMsg> {
         /// Decode outcome with the frame borrow already released: tensor
         /// frames carry only their fixed fields (the slab stays in the
@@ -724,6 +733,7 @@ impl Connection {
     }
 }
 
+// dynalint: hot-path
 fn read_frame_len(stream: &mut TcpStream) -> Result<usize> {
     let mut len = [0u8; 4];
     stream.read_exact(&mut len).context("recv length")?;

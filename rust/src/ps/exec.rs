@@ -206,12 +206,14 @@ impl ExecPlan {
 
     /// Check out an empty pooled buffer pre-sized for layer `l`'s flat
     /// `w‖b` gradient slab (the tables know the exact size).
+    // dynalint: hot-path
     pub fn checkout_layer(&self, l: usize) -> SlabCheckout {
         self.pool.checkout(self.layer_bytes[l])
     }
 
     /// Check out an empty pooled buffer pre-sized for layer `l`'s
     /// codec-encoded wire slab.
+    // dynalint: hot-path
     pub fn checkout_layer_wire(&self, l: usize) -> SlabCheckout {
         self.pool.checkout(self.wire_layer_bytes[l])
     }

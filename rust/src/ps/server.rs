@@ -54,6 +54,7 @@ use crate::net::codec::{self, CodecId, CodecStats, CodecStatsTable};
 use crate::net::pool::{PoolStats, PooledSlab, SlabPool};
 use crate::net::{slab, Connection, Message, MessageRef, ShaperSpec, PROTOCOL_VERSION};
 use crate::ps::sync::{self, PullGate, PushApply, SyncConfig, SyncMode, SyncPolicy};
+use crate::util::sync::{lock_or_die, wait_or_die};
 
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
@@ -235,7 +236,7 @@ fn wire_stats(shared: &Shared) -> WireStats {
     WireStats {
         reply_cache_hits: shared.reply_cache.hits.load(Ordering::SeqCst),
         reply_cache_builds: shared.reply_cache.builds.load(Ordering::SeqCst),
-        reply_cache_entries: shared.reply_cache.entries.lock().unwrap().len(),
+        reply_cache_entries: lock_or_die(&shared.reply_cache.entries, "reply_cache.entries").len(),
         pool: shared.pool.stats(),
         codecs: shared.codec_stats.snapshot(),
     }
@@ -321,7 +322,7 @@ impl ParamServer {
     /// Read back the current parameters of a layer (test/eval support).
     pub fn snapshot(&self, layer: usize) -> Option<Vec<f32>> {
         let (m, _) = self.shared.slots.get(&layer)?;
-        Some(slab::to_f32s(&m.lock().unwrap().params))
+        Some(slab::to_f32s(&lock_or_die(m, "layer.slot").params))
     }
 
     /// Number of pulls currently parked waiting for a version bump.
@@ -370,19 +371,19 @@ impl ParamServer {
         self.shared.shutting_down.store(true, Ordering::SeqCst);
         // Wake every parked pull so its handler observes the flag.
         for (m, cv) in self.shared.slots.values() {
-            let _guard = m.lock().unwrap();
+            let _guard = lock_or_die(m, "layer.slot");
             cv.notify_all();
         }
         // Wake pulls parked inside the sync policy's staleness gate.
         self.shared.sync.interrupt();
         // Wake pullers waiting on an in-flight reply assembly.
         {
-            let _entries = self.shared.reply_cache.entries.lock().unwrap();
+            let _entries = lock_or_die(&self.shared.reply_cache.entries, "reply_cache.entries");
             self.shared.reply_cache.ready.notify_all();
         }
         // Kill live worker connections: blocked recv()s fail immediately
         // instead of waiting for the peer to hang up.
-        for slot in self.shared.conns.lock().unwrap().iter_mut() {
+        for slot in lock_or_die(&self.shared.conns, "server.conns").iter_mut() {
             if let Some(stream) = slot.take() {
                 let _ = stream.shutdown(Shutdown::Both);
             }
@@ -437,7 +438,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
         // block shutdown's join. Freed slots are reused so a long-lived
         // shard doesn't grow the registry per reconnect.
         let conn_id = {
-            let mut conns = shared.conns.lock().unwrap();
+            let mut conns = lock_or_die(&shared.conns, "server.conns");
             match conns.iter_mut().position(|slot| slot.is_none()) {
                 Some(i) => {
                     conns[i] = Some(dup);
@@ -462,7 +463,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
                 crate::debug!("ps", "handler exit: {e:#}");
             }
             // Free the registry slot (drops the duplicate fd) for reuse.
-            shared.conns.lock().unwrap()[conn_id] = None;
+            lock_or_die(&shared.conns, "server.conns")[conn_id] = None;
             shared.live_handlers.fetch_sub(1, Ordering::SeqCst);
         }));
     }
@@ -478,6 +479,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
 /// applied right now. Returns the slab plus the snapshot's `applied`
 /// iteration (the min applied version among the served layers), or `None`
 /// when shutdown interrupts the wait.
+// dynalint: hot-path
 fn assemble_reply(
     shared: &Shared,
     gate: PullGate,
@@ -498,7 +500,7 @@ fn assemble_reply(
     let mut applied = u64::MAX;
     for l in lo as usize..=hi as usize {
         let Some((m, cv)) = shared.slots.get(&l) else { continue };
-        let mut slot = m.lock().unwrap();
+        let mut slot = lock_or_die(m, "layer.slot");
         if let PullGate::WaitFor { min } = gate {
             while slot.version < min {
                 if shared.shutting_down.load(Ordering::SeqCst) {
@@ -507,7 +509,7 @@ fn assemble_reply(
                 // Condition-based park: woken by the push that advances
                 // the version, or by shutdown.
                 shared.pull_waiters.fetch_add(1, Ordering::SeqCst);
-                let woken = cv.wait(slot).unwrap();
+                let woken = wait_or_die(cv, slot, "layer.slot");
                 shared.pull_waiters.fetch_sub(1, Ordering::SeqCst);
                 slot = woken;
             }
@@ -535,6 +537,7 @@ fn assemble_reply(
 /// Serve a pull from the shared broadcast cache, assembling at most once
 /// per `(key_iter, lo, hi, codec)` across all concurrent pullers
 /// (single-flight). Returns `None` only on shutdown.
+// dynalint: hot-path
 fn pull_reply(
     shared: &Shared,
     key_iter: u64,
@@ -553,12 +556,13 @@ fn pull_reply(
 
     let key = (key_iter, lo, hi, codec_id);
     let cache = &shared.reply_cache;
-    let mut entries = cache.entries.lock().unwrap();
+    let mut entries = lock_or_die(&cache.entries, "reply_cache.entries");
     loop {
         if shared.shutting_down.load(Ordering::SeqCst) {
             return None;
         }
         let peek = match entries.get(&key) {
+            // dynalint: allow(alloc, Arc refcount bump on the cached slab, not a byte copy)
             Some(ReplyState::Ready(slab, applied)) => Peek::Hit(slab.clone(), *applied),
             Some(ReplyState::Building) => Peek::Wait,
             None => Peek::Vacant,
@@ -571,16 +575,17 @@ fn pull_reply(
             Peek::Wait => {
                 // Another handler is assembling this exact reply; wait for
                 // it instead of duplicating the work.
-                entries = cache.ready.wait(entries).unwrap();
+                entries = wait_or_die(&cache.ready, entries, "reply_cache.entries");
             }
             Peek::Vacant => {
                 entries.insert(key, ReplyState::Building);
                 drop(entries);
                 let built = assemble_reply(shared, gate, lo, hi, codec_id);
-                let mut relocked = cache.entries.lock().unwrap();
+                let mut relocked = lock_or_die(&cache.entries, "reply_cache.entries");
                 let out = match built {
                     Some((slab, applied)) => {
                         cache.builds.fetch_add(1, Ordering::SeqCst);
+                        // dynalint: allow(alloc, Arc refcount bump shares the slab with the cache)
                         relocked.insert(key, ReplyState::Ready(slab.clone(), applied));
                         // In-flight pulls stay within one key of each other
                         // (BSP: one iteration; SSP/ASP: one apply event);
@@ -614,6 +619,7 @@ fn pull_reply(
 /// The full pull path: ask the sync policy to admit the request (which may
 /// park — the SSP staleness gate), derive the broadcast-cache key its gate
 /// implies, and serve from the shared cache. Returns `None` on shutdown.
+// dynalint: hot-path
 fn serve_pull(
     shared: &Shared,
     worker: Option<u32>,
@@ -641,6 +647,7 @@ fn serve_pull(
 /// BSP clock on the last contribution; `Immediate` applies this gradient
 /// now (scaled `lr / workers`) and bumps the apply-event counter so the
 /// next fresh pull re-assembles.
+// dynalint: hot-path
 fn apply_push(
     shared: &Shared,
     apply: PushApply,
@@ -656,7 +663,7 @@ fn apply_push(
     let (mut raw_total, mut dec_ns) = (0usize, 0u64);
     for l in lo as usize..=hi as usize {
         let Some((m, cv)) = shared.slots.get(&l) else { continue };
-        let mut slot = m.lock().unwrap();
+        let mut slot = lock_or_die(m, "layer.slot");
         let n = wc.wire_len(slot.params.len());
         anyhow::ensure!(
             off + n <= data.len(),
@@ -726,6 +733,7 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
     result
 }
 
+// dynalint: hot-path
 fn handle_conn_inner(
     conn: &mut Connection,
     shared: &Shared,

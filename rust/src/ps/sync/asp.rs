@@ -13,6 +13,7 @@ use std::sync::atomic::AtomicBool;
 use std::sync::Mutex;
 
 use super::{ClockTable, PullGate, PushApply, SyncMode, SyncPolicy};
+use crate::util::sync::lock_or_die;
 
 pub struct AspPolicy {
     /// Observability only: per-worker iteration tags.
@@ -37,11 +38,11 @@ impl SyncPolicy for AspPolicy {
     }
 
     fn register_worker(&self, worker: u32) {
-        self.clocks.lock().unwrap().register(worker);
+        lock_or_die(&self.clocks, "sync.clocks").register(worker);
     }
 
     fn deregister_worker(&self, worker: u32) {
-        self.clocks.lock().unwrap().deregister(worker);
+        lock_or_die(&self.clocks, "sync.clocks").deregister(worker);
     }
 
     fn admit_pull(
@@ -51,7 +52,7 @@ impl SyncPolicy for AspPolicy {
         _shutdown: &AtomicBool,
     ) -> Option<PullGate> {
         if let Some(w) = worker {
-            self.clocks.lock().unwrap().record(w, iter);
+            lock_or_die(&self.clocks, "sync.clocks").record(w, iter);
         }
         Some(PullGate::Fresh)
     }
@@ -60,13 +61,13 @@ impl SyncPolicy for AspPolicy {
         if let Some(w) = worker {
             // A push for `iter` means the worker finished computing it —
             // keep the tag moving even if its next pull is far away.
-            self.clocks.lock().unwrap().record(w, iter);
+            lock_or_die(&self.clocks, "sync.clocks").record(w, iter);
         }
         PushApply::Immediate
     }
 
     fn slowest(&self) -> u64 {
-        self.clocks.lock().unwrap().slowest().unwrap_or(0)
+        lock_or_die(&self.clocks, "sync.clocks").slowest().unwrap_or(0)
     }
 }
 

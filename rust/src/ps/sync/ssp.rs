@@ -21,6 +21,7 @@ use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use super::{ClockTable, PullGate, PushApply, SyncMode, SyncPolicy};
+use crate::util::sync::{lock_or_die, wait_or_die};
 
 pub struct SspPolicy {
     bound: u32,
@@ -51,11 +52,11 @@ impl SyncPolicy for SspPolicy {
     }
 
     fn register_worker(&self, worker: u32) {
-        self.clocks.lock().unwrap().register(worker);
+        lock_or_die(&self.clocks, "sync.clocks").register(worker);
     }
 
     fn deregister_worker(&self, worker: u32) {
-        if self.clocks.lock().unwrap().deregister(worker) {
+        if lock_or_die(&self.clocks, "sync.clocks").deregister(worker) {
             // A departed straggler must not gate the survivors forever.
             self.advanced.notify_all();
         }
@@ -67,7 +68,7 @@ impl SyncPolicy for SspPolicy {
         iter: u64,
         shutdown: &AtomicBool,
     ) -> Option<PullGate> {
-        let mut clocks = self.clocks.lock().unwrap();
+        let mut clocks = lock_or_die(&self.clocks, "sync.clocks");
         if let Some(w) = worker {
             // The pull itself is this worker's progress signal; its
             // advance may be exactly what a parked peer is waiting on.
@@ -85,7 +86,7 @@ impl SyncPolicy for SspPolicy {
                     return None;
                 }
                 self.waiters.fetch_add(1, Ordering::SeqCst);
-                let woken = self.advanced.wait(clocks).unwrap();
+                let woken = wait_or_die(&self.advanced, clocks, "sync.clocks");
                 self.waiters.fetch_sub(1, Ordering::SeqCst);
                 clocks = woken;
             }
@@ -98,7 +99,7 @@ impl SyncPolicy for SspPolicy {
     }
 
     fn slowest(&self) -> u64 {
-        self.clocks.lock().unwrap().slowest().unwrap_or(0)
+        lock_or_die(&self.clocks, "sync.clocks").slowest().unwrap_or(0)
     }
 
     fn waiters(&self) -> u32 {
@@ -108,7 +109,7 @@ impl SyncPolicy for SspPolicy {
     fn interrupt(&self) {
         // Hold the lock so a racing waiter cannot re-park between its
         // shutdown check and the wait.
-        let _clocks = self.clocks.lock().unwrap();
+        let _clocks = lock_or_die(&self.clocks, "sync.clocks");
         self.advanced.notify_all();
     }
 }

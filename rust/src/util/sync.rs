@@ -1,0 +1,102 @@
+//! The repo-wide lock poisoning policy.
+//!
+//! Every `Mutex` in the server, sync policies, slab pool, and link shaper
+//! guards state that is meaningless after a holder panicked mid-update
+//! (a half-applied gradient, a half-built reply slab, a torn clock table).
+//! Recovery is therefore never attempted: a poisoned lock aborts the
+//! process, but through these helpers the abort message **names the lock**
+//! instead of the anonymous `PoisonError` that `lock().unwrap()` prints.
+//!
+//! `dynalint` (see `docs/ANALYSIS.md`) enforces the policy lexically: any
+//! bare `.lock()` outside this file and `#[cfg(test)]` modules is a
+//! finding, as is any condvar wait that does not route through
+//! [`wait_or_die`] inside a predicate re-check loop.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+/// Acquire `m` or abort with a diagnostic naming the poisoned lock.
+///
+/// `name` is the canonical lock name from the dynalint lock-order manifest
+/// (e.g. `"server.conns"`, `"pool.free"`), so a poisoning abort in a
+/// production log identifies the exact lock without a backtrace.
+pub fn lock_or_die<'a, T>(m: &'a Mutex<T>, name: &str) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(guard) => guard,
+        Err(_) => panic!(
+            "lock '{name}' poisoned: a holder panicked mid-update; \
+             guarded state is unrecoverable by policy"
+        ),
+    }
+}
+
+/// Block on `cv` with `guard` or abort, naming the lock that poisoned.
+///
+/// Callers must re-check their predicate around the wait (condvar wakeups
+/// are spurious by contract); dynalint verifies every call site sits
+/// inside a `while`/`loop` body.
+pub fn wait_or_die<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    name: &str,
+) -> MutexGuard<'a, T> {
+    match cv.wait(guard) {
+        Ok(guard) => guard,
+        Err(_) => panic!(
+            "condvar wait on '{name}': lock poisoned by a panicking holder"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar};
+
+    #[test]
+    fn lock_or_die_passes_through_healthy_locks() {
+        let m = Mutex::new(7);
+        assert_eq!(*lock_or_die(&m, "test.healthy"), 7);
+        *lock_or_die(&m, "test.healthy") = 8;
+        assert_eq!(*lock_or_die(&m, "test.healthy"), 8);
+    }
+
+    #[test]
+    fn lock_or_die_names_the_poisoned_lock() {
+        let m = Arc::new(Mutex::new(0));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _guard = lock_or_die(&m, "test.poisoned");
+        }))
+        .expect_err("poisoned lock must abort");
+        let msg = caught
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(msg.contains("test.poisoned"), "diagnostic names the lock: {msg}");
+    }
+
+    #[test]
+    fn wait_or_die_returns_the_guard_on_notify() {
+        let pair = Arc::new((Mutex::new(false), Condvar::new()));
+        let pair2 = pair.clone();
+        let t = std::thread::spawn(move || {
+            let (m, cv) = &*pair2;
+            let mut ready = lock_or_die(m, "test.pair");
+            while !*ready {
+                ready = wait_or_die(cv, ready, "test.pair");
+            }
+            *ready
+        });
+        {
+            let (m, cv) = &*pair;
+            *lock_or_die(m, "test.pair") = true;
+            cv.notify_all();
+        }
+        assert!(t.join().unwrap());
+    }
+}

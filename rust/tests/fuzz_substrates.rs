@@ -3,7 +3,7 @@
 //! must round-trip everything they produce.
 
 use dynacomm::net::codec::CodecId;
-use dynacomm::net::Message;
+use dynacomm::net::{Message, PROTOCOL_VERSION};
 use dynacomm::ps::sync::SyncMode;
 use dynacomm::util::json::Json;
 use dynacomm::util::rng::Rng;
@@ -148,6 +148,96 @@ fn wire_decoder_never_panics_on_random_bytes() {
         let n = rng.below(128);
         let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
         let _ = Message::decode(&bytes);
+    }
+}
+
+/// One well-formed exemplar per frame tag the protocol defines.
+/// `dynalint`'s wire check pins tag uniqueness and decoder coverage
+/// statically; the properties below drive the same matrix dynamically, so
+/// a new frame variant fails here until it gets an exemplar (the coverage
+/// assertion) and survives the mutation battery.
+fn exemplar_messages() -> Vec<Message> {
+    let codec = CodecId::Fp32;
+    let data = vec![0u8; codec.wire_len(8)];
+    vec![
+        Message::Pull { iter: 7, lo: 0, hi: 3 },
+        Message::PullReply {
+            iter: 7,
+            lo: 0,
+            hi: 3,
+            applied: 7,
+            codec,
+            data: data.clone(),
+        },
+        Message::Push { iter: 7, lo: 0, hi: 3, codec, data },
+        Message::PushAck { iter: 7, lo: 0, hi: 3 },
+        Message::Hello { worker: 0, version: PROTOCOL_VERSION },
+        Message::HelloAck { workers: 1, version: PROTOCOL_VERSION },
+        Message::Shutdown,
+        Message::CodecPropose { pref: CodecId::Fp16 },
+        Message::CodecAgree { codec: CodecId::Int8 },
+        Message::SyncPropose { mode: SyncMode::Ssp, bound: 4 },
+        Message::SyncAgree { mode: SyncMode::Bsp, bound: 0 },
+    ]
+}
+
+/// Every frame tag × {truncated, oversized, bad embedded tag} decodes to
+/// an error — never a panic, never a silent reinterpretation.
+#[test]
+fn decoder_rejects_mutations_of_every_frame_tag() {
+    let msgs = exemplar_messages();
+
+    // Coverage gate: the exemplars span exactly the contiguous tag space
+    // 1..=11 with no duplicates, so adding a frame to the protocol forces
+    // an exemplar (and the mutations below) for it.
+    let mut tags: Vec<u8> = msgs.iter().map(|m| m.opcode()).collect();
+    tags.sort_unstable();
+    tags.dedup();
+    assert_eq!(tags, (1u8..=11).collect::<Vec<u8>>());
+
+    for m in &msgs {
+        let enc = m.encode();
+        let payload = &enc[4..];
+        // Truncated: no strict prefix of a frame is itself a frame.
+        for cut in 0..payload.len() {
+            assert!(
+                Message::decode(&payload[..cut]).is_err(),
+                "{m:?} truncated to {cut} bytes decoded"
+            );
+        }
+        // Oversized: the decoder consumes exactly the frame and rejects
+        // leftovers, even when the tail looks like plausible data.
+        for extra in [1usize, 7] {
+            let mut fat = payload.to_vec();
+            fat.resize(payload.len() + extra, 0xAA);
+            assert!(
+                Message::decode(&fat).is_err(),
+                "{m:?} with {extra} trailing bytes decoded"
+            );
+        }
+    }
+
+    // Bad embedded tags: codec tag 3 and sync mode tag 3 name nothing.
+    // Tensor frames carry the codec tag in the top 2 bits of the slab
+    // length field (payload offset 25 for PullReply, 17 for Push — plus
+    // the 4-byte length prefix and 3 for the little-endian MSB).
+    for (m, off) in [(&msgs[1], 25usize), (&msgs[2], 17)] {
+        let mut enc = m.encode();
+        enc[4 + off + 3] |= 0xC0;
+        assert!(
+            Message::decode(&enc[4..]).is_err(),
+            "{m:?} with forged slab codec tag decoded"
+        );
+    }
+    // CodecPropose/CodecAgree (byte codec tag) and SyncPropose/SyncAgree
+    // (byte mode tag) carry their tag at payload offset 1.
+    for m in [&msgs[7], &msgs[8], &msgs[9], &msgs[10]] {
+        let mut enc = m.encode();
+        enc[5] = 3;
+        assert!(
+            Message::decode(&enc[4..]).is_err(),
+            "{m:?} with forged negotiation tag decoded"
+        );
     }
 }
 
