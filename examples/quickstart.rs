@@ -37,7 +37,16 @@ fn main() -> anyhow::Result<()> {
     // schedule_sensitivity example or `dynacomm train --sync ...`.
     println!(
         "   (sync modes: bsp barrier | ssp bounded staleness | asp async — \
-         see docs/SYNC.md)\n"
+         see docs/SYNC.md)"
+    );
+    // Topology (`--tier {flat,regional}`, docs/TOPOLOGY.md): `regional`
+    // inserts group aggregators between the edge fleet and the cloud
+    // shards — one combined push upstream per group, one shared pull
+    // fan-out downstream, each hop with its own sync mode and codec
+    // (`--group-size`, `--agg-sync`, `--agg-codec`).
+    println!(
+        "   (tiers: flat direct | regional edge->agg->cloud fan-in — \
+         see docs/TOPOLOGY.md)\n"
     );
 
     let seq_total = sim::simulate_cv(&cv, Strategy::Sequential).total_ms();

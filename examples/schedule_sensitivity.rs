@@ -10,7 +10,7 @@
 use dynacomm::config::{Strategy, SystemConfig};
 use dynacomm::models;
 use dynacomm::ps::sync::SyncMode;
-use dynacomm::sim::straggler::StragglerCluster;
+use dynacomm::sim::straggler::{StragglerCluster, TierSpec};
 use dynacomm::sim::{reduced_ratio, sweep};
 use dynacomm::util::cli::Args;
 
@@ -112,6 +112,51 @@ fn main() -> anyhow::Result<()> {
             c.speedup_vs_bsp(SyncMode::Ssp, bound, 8),
             c.speedup_vs_bsp(SyncMode::Asp, 0, 8),
             ssp.max_lead,
+        );
+    }
+
+    // Tier sweep (ps/agg, docs/TOPOLOGY.md): group size × per-hop sync
+    // mode on the same one-straggler cluster. Grouping buys cloud-ingress
+    // reduction (~1/group) unconditionally; its throughput cost depends
+    // on the hop modes — an edge-BSP group locksteps to its slowest
+    // member, so a bigger group captures more victims of the straggler,
+    // while a relaxed regional→cloud hop frees the clean groups. Columns
+    // are edge/cloud mode pairs, speedup vs the flat BSP fleet.
+    println!(
+        "\ntier x per-hop sync sweep ({workers} workers, one 4x straggler, \
+         speedup vs flat bsp):"
+    );
+    println!(
+        "{:<12} {:>14} {:>10} {:>14} {:>18}",
+        "group size",
+        "cloud ingress",
+        "bsp/bsp",
+        format!("bsp/ssp({bound})"),
+        format!("ssp({bound})/ssp({bound})")
+    );
+    let c = StragglerCluster::one_straggler(iter_ms, workers, 4.0);
+    let flat_bsp = c.throughput(SyncMode::Bsp, 0, 8).iters_per_sec();
+    for gs in [1usize, 2, 4, workers] {
+        let cell = |edge: SyncMode, cloud: SyncMode| {
+            c.tiered_throughput(
+                TierSpec {
+                    group_size: gs,
+                    edge_sync: edge,
+                    edge_bound: if edge == SyncMode::Ssp { bound } else { 0 },
+                    cloud_sync: cloud,
+                    cloud_bound: if cloud == SyncMode::Ssp { bound } else { 0 },
+                },
+                8,
+            )
+        };
+        let bb = cell(SyncMode::Bsp, SyncMode::Bsp);
+        println!(
+            "{:<12} {:>14} {:>10.2} {:>14.2} {:>18.2}",
+            gs,
+            format!("x{:.3}", bb.cloud_ingress_ratio),
+            bb.iters_per_sec() / flat_bsp,
+            cell(SyncMode::Bsp, SyncMode::Ssp).iters_per_sec() / flat_bsp,
+            cell(SyncMode::Ssp, SyncMode::Ssp).iters_per_sec() / flat_bsp,
         );
     }
     Ok(())

@@ -23,6 +23,14 @@
 //! unchanged), steady-state allocations (must stay 0), and the server's
 //! measured max quantization error — all recorded as `codec_matrix` rows
 //! in `results/BENCH_wire.json`.
+//!
+//! A **tier matrix** (`ps/agg`, docs/TOPOLOGY.md) runs the same 8-worker
+//! fleet twice against two cloud shards — flat (every worker pushes
+//! straight to the owning shard) and regional (2 groups of 4 behind
+//! regional aggregators that forward one combined push per group) — and
+//! reports the bytes actually crossing the cloud boundary (the shards'
+//! ingress counters), fleet iteration throughput, and the ingress-saved
+//! ratio (target ≥ 3× at group size 4), recorded as `tier_matrix` rows.
 
 mod common;
 
@@ -37,7 +45,9 @@ use dynacomm::figures;
 use dynacomm::net::codec::CodecId;
 use dynacomm::net::{slab, Connection, Message, PROTOCOL_VERSION};
 use dynacomm::ps::sync::{SyncConfig, SyncMode};
-use dynacomm::ps::{ParamServer, ServerConfig, ServerOptions};
+use dynacomm::ps::{
+    AggConfig, ParamServer, RegionalAggregator, ServerConfig, ServerOptions,
+};
 use dynacomm::util::json::Json;
 
 const LAYERS: usize = 8;
@@ -244,6 +254,109 @@ fn drive_straggler(mode: SyncMode, bound: u32, k_slow: u64, fast_ms: u64) -> (f6
     (total_iters as f64 / secs, max_stale)
 }
 
+/// Tier-matrix scale: two cloud shards, each owning one 64 KiB layer
+/// (layer `s` → shard `s`), an 8-worker fleet split into 2 groups of 4.
+const TIER_LAYER_F32S: usize = 16 << 10;
+const TIER_SHARDS: usize = 2;
+const TIER_GROUPS: usize = 2;
+const TIER_GROUP_SIZE: usize = 4;
+
+fn tier_shards() -> Vec<ParamServer> {
+    (0..TIER_SHARDS)
+        .map(|s| {
+            let mut layers = HashMap::new();
+            layers.insert(s, vec![0.5f32; TIER_LAYER_F32S]);
+            ParamServer::start(ServerConfig { workers: WORKERS, lr: 0.1 }, layers, None)
+                .unwrap()
+        })
+        .collect()
+}
+
+/// Flat leg: every worker holds a connection to each shard and, per
+/// iteration, pulls + pushes its owned layer directly — `WORKERS` pushes
+/// per layer per iteration cross the cloud boundary. Returns wall-clock
+/// seconds of the whole fleet run.
+fn drive_tier_flat(addrs: &[std::net::SocketAddr], iters: u64) -> f64 {
+    let grad = slab::from_f32s(&vec![0.0f32; TIER_LAYER_F32S]);
+    let barrier = Arc::new(Barrier::new(WORKERS + 1));
+    let mut threads = Vec::new();
+    for _ in 0..WORKERS {
+        let barrier = barrier.clone();
+        let addrs = addrs.to_vec();
+        let grad = grad.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut conns: Vec<Connection> = addrs
+                .iter()
+                .map(|a| Connection::new(TcpStream::connect(a).unwrap(), None))
+                .collect();
+            barrier.wait();
+            for iter in 0..iters {
+                for (s, conn) in conns.iter_mut().enumerate() {
+                    conn.send(&Message::Pull { iter, lo: s as u32, hi: s as u32 })
+                        .unwrap();
+                    assert!(matches!(conn.recv().unwrap(), Message::PullReply { .. }));
+                    conn.send(&Message::Push {
+                        iter,
+                        lo: s as u32,
+                        hi: s as u32,
+                        codec: CodecId::Fp32,
+                        data: grad.clone(),
+                    })
+                    .unwrap();
+                    assert!(matches!(conn.recv().unwrap(), Message::PushAck { .. }));
+                }
+            }
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for t in threads {
+        t.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
+/// Regional leg: the same fleet behind `TIER_GROUPS` aggregators — each
+/// worker speaks only to its group's aggregator (full range, one session)
+/// and the cloud sees one combined push per group per layer per
+/// iteration. Returns wall-clock seconds of the whole fleet run.
+fn drive_tier_regional(aggs: &[RegionalAggregator], iters: u64) -> f64 {
+    // Both layers are the same size, so the full-range fp32 push payload
+    // is just the two per-layer slabs concatenated.
+    let grad = slab::from_f32s(&vec![0.0f32; TIER_SHARDS * TIER_LAYER_F32S]);
+    let barrier = Arc::new(Barrier::new(WORKERS + 1));
+    let mut threads = Vec::new();
+    for w in 0..WORKERS {
+        let barrier = barrier.clone();
+        let addr = aggs[w / TIER_GROUP_SIZE].addr();
+        let grad = grad.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+            barrier.wait();
+            for iter in 0..iters {
+                conn.send(&Message::Pull { iter, lo: 0, hi: TIER_SHARDS as u32 - 1 })
+                    .unwrap();
+                assert!(matches!(conn.recv().unwrap(), Message::PullReply { .. }));
+                conn.send(&Message::Push {
+                    iter,
+                    lo: 0,
+                    hi: TIER_SHARDS as u32 - 1,
+                    codec: CodecId::Fp32,
+                    data: grad.clone(),
+                })
+                .unwrap();
+                assert!(matches!(conn.recv().unwrap(), Message::PushAck { .. }));
+            }
+        }));
+    }
+    barrier.wait();
+    let t0 = Instant::now();
+    for t in threads {
+        t.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64()
+}
+
 /// One legacy handler: framed recv, per-pull assembly into a **fresh**
 /// buffer, full-copy `encode_into`, `write_all` — the pre-change server's
 /// exact per-byte work.
@@ -441,6 +554,48 @@ fn main() {
         sync_rows[1].max_staleness
     );
 
+    // --- Tier matrix: flat 8-direct vs 2 groups x 4 behind regional
+    // aggregators (ps/agg, docs/TOPOLOGY.md), same fleet and layers. The
+    // cloud-boundary metric is the shards' ingress counters: the tiered
+    // run admits one combined push per group instead of one per worker,
+    // so the bytes crossing into the cloud must shrink by ~group size.
+    let tier_iters = if common::fast_mode() { 8u64 } else { 40 };
+    let shards = tier_shards();
+    let taddrs: Vec<_> = shards.iter().map(|s| s.handle().addr).collect();
+    let secs_flat = drive_tier_flat(&taddrs, tier_iters);
+    let flat_ingress: u64 = shards.iter().map(|s| s.wire_stats().ingress_bytes).sum();
+    drop(shards);
+
+    let shards = tier_shards();
+    let taddrs: Vec<_> = shards.iter().map(|s| s.handle().addr).collect();
+    let aggs: Vec<RegionalAggregator> = (0..TIER_GROUPS)
+        .map(|g| {
+            RegionalAggregator::start(AggConfig {
+                group: 100 + g as u32,
+                workers: TIER_GROUP_SIZE as u32,
+                upstream_addrs: taddrs.clone(),
+                layer_elems: vec![TIER_LAYER_F32S; TIER_SHARDS],
+                downstream_sync: SyncConfig::default(),
+                upstream_sync: SyncConfig::default(),
+                upstream_codec: CodecId::Fp32,
+                handler_threads: TIER_GROUP_SIZE + 2,
+            })
+            .unwrap()
+        })
+        .collect();
+    let secs_tiered = drive_tier_regional(&aggs, tier_iters);
+    let tiered_ingress: u64 = shards.iter().map(|s| s.wire_stats().ingress_bytes).sum();
+    drop(aggs);
+    drop(shards);
+
+    let tier_ratio = flat_ingress as f64 / tiered_ingress as f64;
+    assert!(
+        tier_ratio >= 3.0,
+        "tiered cloud ingress shrank only {tier_ratio:.2}x at group size \
+         {TIER_GROUP_SIZE} (target >= 3x)"
+    );
+    let fleet_ips = |secs: f64| WORKERS as f64 * tier_iters as f64 / secs;
+
     // --- Legacy path: per-worker assembly + full-copy encode. ---
     let (laddr, stop) = legacy_server(layers);
     drive_pulls(laddr, 1, 2);
@@ -506,6 +661,19 @@ fn main() {
             row.bound,
         );
     }
+    println!(
+        "  tier matrix ({WORKERS} workers, {TIER_SHARDS} shards, group size \
+         {TIER_GROUP_SIZE}, {tier_iters} iters):"
+    );
+    println!(
+        "    flat     cloud ingress {flat_ingress:>10} B  {:>7.1} fleet iters/s",
+        fleet_ips(secs_flat)
+    );
+    println!(
+        "    regional cloud ingress {tiered_ingress:>10} B  {:>7.1} fleet \
+         iters/s  ({tier_ratio:.2}x less ingress, target >= 3x)",
+        fleet_ips(secs_tiered)
+    );
 
     let json = Json::obj(vec![
         ("workers", Json::Num(WORKERS as f64)),
@@ -572,6 +740,24 @@ fn main() {
                     })
                     .collect(),
             ),
+        ),
+        (
+            "tier_matrix",
+            Json::Arr(vec![
+                Json::obj(vec![
+                    ("topology", Json::Str("flat".to_string())),
+                    ("cloud_ingress_bytes", Json::Num(flat_ingress as f64)),
+                    ("fleet_iters_per_sec", Json::Num(fleet_ips(secs_flat))),
+                ]),
+                Json::obj(vec![
+                    ("topology", Json::Str("regional".to_string())),
+                    ("group_size", Json::Num(TIER_GROUP_SIZE as f64)),
+                    ("groups", Json::Num(TIER_GROUPS as f64)),
+                    ("cloud_ingress_bytes", Json::Num(tiered_ingress as f64)),
+                    ("fleet_iters_per_sec", Json::Num(fleet_ips(secs_tiered))),
+                    ("ingress_saved_ratio", Json::Num(tier_ratio)),
+                ]),
+            ]),
         ),
         ("fast_mode", Json::Num(if common::fast_mode() { 1.0 } else { 0.0 })),
     ]);

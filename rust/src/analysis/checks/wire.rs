@@ -337,15 +337,16 @@ mod tests {
     use crate::analysis::manifest::Manifest;
     use crate::analysis::source::SrcFile;
 
-    /// A four-frame manifest matching the wire fixtures.
+    /// A three-frame manifest matching the wire fixtures.
     fn fixture_manifest() -> Manifest {
         let text = include_str!("../dynalint.toml")
             .lines()
             .filter(|l| {
-                // Drop the full v4 table; re-pin a minimal one below.
-                let in_frames = ["PullReply", "PushAck", "Hello", "HelloAck", "Codec", "Sync"]
-                    .iter()
-                    .any(|p| l.starts_with(p));
+                // Drop the full v5 table; re-pin a minimal one below.
+                let in_frames =
+                    ["PullReply", "PushAck", "Hello", "HelloAck", "Codec", "Sync", "Agg"]
+                        .iter()
+                        .any(|p| l.starts_with(p));
                 !in_frames
             })
             .collect::<Vec<_>>()
@@ -392,6 +393,20 @@ mod tests {
     fn good_fixture_is_clean() {
         let findings = run_transport(include_str!("../tests/wire_good.rs"));
         assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    /// A frame with opcode and decoder arms but no manifest entry — the
+    /// drift a half-landed protocol bump (like the v5 `AggHello`) leaves
+    /// behind — is exactly one missing-manifest-entry finding.
+    #[test]
+    fn undeclared_frame_is_a_missing_manifest_entry() {
+        let findings = run_transport(include_str!("../tests/wire_bad_agghello.rs"));
+        let rendered: Vec<String> = findings.iter().map(|f| f.render()).collect();
+        assert_eq!(findings.len(), 1, "{rendered:?}");
+        assert!(
+            rendered[0].contains("`AggHello` => 12 is not in the manifest frame table"),
+            "{rendered:?}"
+        );
     }
 
     #[test]

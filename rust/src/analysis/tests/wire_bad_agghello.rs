@@ -1,6 +1,8 @@
-// Fixture: a consistent three-frame protocol matching the test manifest
-// (Pull = 1, Push = 3, Shutdown = 7, version 5) — unique tags, full
-// decoder coverage with a bail wildcard, aligned PROTOCOL_VERSION.
+// Fixture: the wire_good protocol plus an undeclared hierarchical-tier
+// frame — `AggHello` has opcode and decoder arms (tag 12, full coverage,
+// aligned version) but no entry in the test manifest's frame table, the
+// exact drift a half-landed protocol bump leaves behind. Exactly one
+// finding: the missing-manifest-entry report for `AggHello`.
 // Never compiled — loaded via include_str! by tests.
 
 pub const PROTOCOL_VERSION: u16 = 5;
@@ -11,6 +13,7 @@ impl MessageRef<'_> {
             MessageRef::Pull { .. } => 1,
             MessageRef::Push { .. } => 3,
             MessageRef::Shutdown => 7,
+            MessageRef::AggHello { .. } => 12,
         }
     }
 
@@ -20,6 +23,7 @@ impl MessageRef<'_> {
             1 => MessageRef::Pull { iter: 0 },
             3 => MessageRef::Push { iter: 0 },
             7 => MessageRef::Shutdown,
+            12 => MessageRef::AggHello { role: 1 },
             _ => bail!("unknown opcode {op}"),
         })
     }

@@ -112,6 +112,37 @@ impl Strategy {
     }
 }
 
+/// Fleet topology between the edge workers and the cloud shards
+/// (`ps::agg`, docs/TOPOLOGY.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// Every worker speaks directly to the cloud shards.
+    Flat,
+    /// Workers are grouped behind regional aggregators that combine
+    /// pushes and share pulls, with an independently configured
+    /// regional→cloud hop.
+    Regional,
+}
+
+impl Tier {
+    pub const ALL: [Tier; 2] = [Tier::Flat, Tier::Regional];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Flat => "flat",
+            Tier::Regional => "regional",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Tier> {
+        match s.to_ascii_lowercase().as_str() {
+            "flat" | "direct" => Some(Tier::Flat),
+            "regional" | "tiered" => Some(Tier::Regional),
+            _ => None,
+        }
+    }
+}
+
 /// Complete description of one experiment.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
@@ -149,6 +180,20 @@ pub struct SystemConfig {
     /// SSP staleness bound (`--staleness-bound`): iterations a worker may
     /// run ahead of the slowest. Must be 0 outside SSP.
     pub staleness_bound: u32,
+    /// Fleet topology (`--tier {flat,regional}`, docs/TOPOLOGY.md):
+    /// `regional` inserts `⌈workers / group_size⌉` aggregators between
+    /// the edge fleet and the cloud shards.
+    pub tier: Tier,
+    /// Edge workers per regional aggregator (`--group-size`; ignored
+    /// under the flat tier). Must be ≥ 1.
+    pub group_size: usize,
+    /// Regional→cloud hop sync mode (`--agg-sync`); the edge→regional
+    /// hop keeps using `sync`. Under SSP the hop shares
+    /// `staleness_bound`.
+    pub agg_sync: SyncMode,
+    /// Regional→cloud hop wire codec (`--agg-codec`); the edge→regional
+    /// hop keeps using `codec`.
+    pub agg_codec: CodecId,
 }
 
 /// Parse a `gain-threshold-ms` spelling: `auto` (case-insensitive) or a
@@ -175,6 +220,10 @@ impl Default for SystemConfig {
             codec: CodecId::Fp32,
             sync: SyncMode::Bsp,
             staleness_bound: 0,
+            tier: Tier::Flat,
+            group_size: 4,
+            agg_sync: SyncMode::Bsp,
+            agg_codec: CodecId::Fp32,
         }
     }
 }
@@ -221,7 +270,29 @@ impl SystemConfig {
             args.usize("staleness-bound", self.staleness_bound as usize) as u32;
         crate::ps::sync::SyncConfig::new(self.sync, self.staleness_bound)
             .unwrap_or_else(|e| panic!("{e}"));
+        if let Some(s) = args.get("tier") {
+            self.tier = Tier::parse(s)
+                .unwrap_or_else(|| panic!("unknown tier '{s}' (flat|regional)"));
+        }
+        self.group_size = args.usize("group-size", self.group_size);
+        if let Some(s) = args.get("agg-sync") {
+            self.agg_sync = SyncMode::parse(s)
+                .unwrap_or_else(|| panic!("unknown sync mode '{s}' (bsp|ssp|asp)"));
+        }
+        if let Some(s) = args.get("agg-codec") {
+            self.agg_codec = CodecId::parse(s)
+                .unwrap_or_else(|| panic!("unknown codec '{s}' (fp32|fp16|int8)"));
+        }
+        assert!(self.group_size >= 1, "--group-size must be >= 1");
+        self.agg_sync_config().unwrap_or_else(|e| panic!("{e}"));
         self
+    }
+
+    /// The regional→cloud hop's sync configuration: `agg_sync`, sharing
+    /// `staleness_bound` when that hop runs SSP.
+    pub fn agg_sync_config(&self) -> anyhow::Result<crate::ps::sync::SyncConfig> {
+        let bound = if self.agg_sync == SyncMode::Ssp { self.staleness_bound } else { 0 };
+        crate::ps::sync::SyncConfig::new(self.agg_sync, bound)
     }
 
     pub fn from_json(j: &Json) -> anyhow::Result<SystemConfig> {
@@ -263,6 +334,21 @@ impl SystemConfig {
         }
         c.staleness_bound = num("staleness_bound", c.staleness_bound as f64) as u32;
         crate::ps::sync::SyncConfig::new(c.sync, c.staleness_bound)?;
+        if let Some(s) = j.get("tier").and_then(Json::as_str) {
+            c.tier = Tier::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown tier '{s}'"))?;
+        }
+        c.group_size = num("group_size", c.group_size as f64) as usize;
+        if let Some(s) = j.get("agg_sync").and_then(Json::as_str) {
+            c.agg_sync = SyncMode::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown sync mode '{s}'"))?;
+        }
+        if let Some(s) = j.get("agg_codec").and_then(Json::as_str) {
+            c.agg_codec = CodecId::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown codec '{s}'"))?;
+        }
+        anyhow::ensure!(c.group_size >= 1, "group_size must be >= 1");
+        c.agg_sync_config()?;
         Ok(c)
     }
 
@@ -281,6 +367,10 @@ impl SystemConfig {
             ("codec", Json::Str(self.codec.name().to_string())),
             ("sync", Json::Str(self.sync.name().to_string())),
             ("staleness_bound", Json::Num(self.staleness_bound as f64)),
+            ("tier", Json::Str(self.tier.name().to_string())),
+            ("group_size", Json::Num(self.group_size as f64)),
+            ("agg_sync", Json::Str(self.agg_sync.name().to_string())),
+            ("agg_codec", Json::Str(self.agg_codec.name().to_string())),
             (
                 "gain_threshold_ms",
                 if self.gain_threshold_ms < 0.0 {
@@ -380,6 +470,57 @@ mod tests {
         assert_eq!(c.sync, SyncMode::Asp);
         // A bound outside SSP is refused at config load, not at run time.
         let bad = r#"{"sync":"bsp","staleness_bound":3}"#;
+        assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn tier_knobs_parse_roundtrip_and_validate() {
+        for t in Tier::ALL {
+            assert_eq!(Tier::parse(t.name()), Some(t));
+        }
+        assert_eq!(Tier::parse("nope"), None);
+        let mut c = SystemConfig::default();
+        assert_eq!(c.tier, Tier::Flat);
+        assert_eq!(c.group_size, 4);
+        c.tier = Tier::Regional;
+        c.group_size = 2;
+        c.agg_sync = SyncMode::Asp;
+        c.agg_codec = CodecId::Fp16;
+        let j = c.to_json();
+        let back = SystemConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        // Flags overlay.
+        let args = Args::parse(
+            [
+                "--tier",
+                "regional",
+                "--group-size",
+                "2",
+                "--agg-sync",
+                "asp",
+                "--agg-codec",
+                "int8",
+            ]
+            .iter()
+            .map(|s| s.to_string()),
+        );
+        let c = SystemConfig::default().apply_args(&args);
+        assert_eq!(c.tier, Tier::Regional);
+        assert_eq!(c.group_size, 2);
+        assert_eq!(c.agg_sync, SyncMode::Asp);
+        assert_eq!(c.agg_codec, CodecId::Int8);
+        // The upstream hop shares the SSP bound only when it runs SSP.
+        let c = SystemConfig {
+            sync: SyncMode::Ssp,
+            staleness_bound: 4,
+            agg_sync: SyncMode::Ssp,
+            ..SystemConfig::default()
+        };
+        assert_eq!(c.agg_sync_config().unwrap().staleness_bound, 4);
+        let c = SystemConfig { agg_sync: SyncMode::Bsp, ..c };
+        assert_eq!(c.agg_sync_config().unwrap().staleness_bound, 0);
+        // A zero group size is refused at config load.
+        let bad = r#"{"tier":"regional","group_size":0}"#;
         assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
     }
 

@@ -65,6 +65,15 @@ FLAGS (defaults = the paper's testbed):
                         stalling the fleet, snapshots stay within N); asp
                         applies every push immediately, no gating at all
   --staleness-bound N   ssp staleness window, iterations (0 outside ssp)
+  --tier T              fleet topology flat|regional (docs/TOPOLOGY.md):
+                        regional groups workers behind aggregators that
+                        combine pushes and share pulls, cutting cloud
+                        ingress/egress by ~group size (train)
+  --group-size N        edge workers per regional aggregator (4)
+  --agg-sync M          regional->cloud hop sync mode bsp|ssp|asp (the
+                        edge hop keeps --sync; ssp shares --staleness-bound)
+  --agg-codec C         regional->cloud hop wire codec fp32|fp16|int8 (the
+                        edge hop keeps --codec)
   --handler-threads N   per-shard handler pool cap; extra connections wait
                         in the accept backlog (backpressure) (train)
   --no-error-feedback   disable EF-SGD residuals for lossy codecs (train)
@@ -190,6 +199,25 @@ fn cmd_train(args: &Args) -> Result<()> {
         args.usize("staleness-bound", cfg.staleness_bound as usize) as u32;
     cfg.handler_threads = args.usize("handler-threads", cfg.handler_threads);
     cfg.error_feedback = !args.bool("no-error-feedback");
+    if let Some(s) = args.get("tier") {
+        cfg.tier = dynacomm::config::Tier::parse(s).context("bad --tier")?;
+    }
+    cfg.group_size = args.usize("group-size", cfg.group_size);
+    if let Some(s) = args.get("agg-sync") {
+        cfg.agg_sync = dynacomm::ps::sync::SyncMode::parse(s).context("bad --agg-sync")?;
+    }
+    if let Some(s) = args.get("agg-codec") {
+        cfg.agg_codec =
+            dynacomm::net::codec::CodecId::parse(s).context("bad --agg-codec")?;
+    }
+    if cfg.tier == dynacomm::config::Tier::Regional {
+        println!(
+            "tier=regional group-size={} agg-sync={} agg-codec={}",
+            cfg.group_size,
+            cfg.agg_sync.name(),
+            cfg.agg_codec.name()
+        );
+    }
     let result = train(&cfg)?;
     for (e, ((loss, acc), ms)) in result
         .epoch_loss

@@ -16,4 +16,4 @@ pub mod transport;
 pub use codec::{CodecId, CodecStats, WireCodec};
 pub use pool::{PoolStats, PooledSlab, SlabCheckout, SlabPool, SlabSlice};
 pub use shaper::{LinkShaper, ShaperSpec};
-pub use transport::{Connection, Message, MessageRef, RecvMsg, PROTOCOL_VERSION};
+pub use transport::{Connection, Message, MessageRef, PeerRole, RecvMsg, PROTOCOL_VERSION};

@@ -23,7 +23,11 @@
 //! (the staleness signal SSP/ASP workers measure), and the
 //! `SyncPropose`/`SyncAgree` registration frames fail mismatched
 //! worker/server sync configurations loudly. fp32 `Push` frames remain
-//! byte-identical to v2.
+//! byte-identical to v2. Protocol v5 adds the hierarchical aggregation
+//! tier's registration frame ([`crate::ps::agg`], `docs/TOPOLOGY.md`):
+//! `AggHello` carries a [`PeerRole`] plus the number of edge workers the
+//! peer aggregates, so a regional aggregator can register upstream as one
+//! weighted super-worker.
 
 use std::io::{IoSlice, Read, Write};
 use std::net::TcpStream;
@@ -68,7 +72,48 @@ const RECV_RETAIN_MAX: usize = 16 << 20;
 /// would misparse the widened `PullReply`, so the version is bumped and
 /// mixed deployments fail loudly at registration time: the server rejects
 /// a mismatched `Hello`, and the worker rejects a mismatched `HelloAck`.
-pub const PROTOCOL_VERSION: u16 = 4;
+/// v5 adds the hierarchical-tier registration frame: `AggHello` (opcode
+/// 12) identifies an aggregator session and its worker-count weight
+/// (`docs/TOPOLOGY.md`). Every v4 frame is byte-identical under v5, but a
+/// v4 server would reject the unknown opcode, hence the bump.
+pub const PROTOCOL_VERSION: u16 = 5;
+
+/// The role a peer announces in an [`Message::AggHello`] registration
+/// frame (v5): a plain edge worker, or a regional aggregator acting as one
+/// super-worker for `workers` edge devices (`docs/TOPOLOGY.md`). The wire
+/// tag is one byte; tags past [`PeerRole::Regional`] are rejected by the
+/// decoder so a corrupted role can never register with a bogus weight.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerRole {
+    /// A single edge device (weight 1).
+    Edge,
+    /// A regional aggregator speaking for its whole worker group.
+    Regional,
+}
+
+impl PeerRole {
+    pub fn tag(&self) -> u8 {
+        match self {
+            PeerRole::Edge => 0,
+            PeerRole::Regional => 1,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<PeerRole> {
+        match tag {
+            0 => Some(PeerRole::Edge),
+            1 => Some(PeerRole::Regional),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            PeerRole::Edge => "edge",
+            PeerRole::Regional => "regional",
+        }
+    }
+}
 
 /// Protocol messages between edge workers and parameter servers (owned
 /// form; [`MessageRef`] is the borrowed-payload twin the hot path uses).
@@ -107,6 +152,14 @@ pub enum Message {
     /// Worker → server: register with a worker id, announcing the
     /// worker's [`PROTOCOL_VERSION`].
     Hello { worker: u32, version: u16 },
+    /// Peer → server (v5): weighted registration for the hierarchical
+    /// tier (`docs/TOPOLOGY.md`). `group` identifies the registering
+    /// identity (a worker group id for aggregators), `workers` is the
+    /// number of edge devices it speaks for — the weight its pushes carry
+    /// at a barrier. The decoder rejects unknown role tags, a zero
+    /// worker-count, and an `Edge` role claiming more than one worker.
+    /// Answered with the same frozen `HelloAck` as `Hello`.
+    AggHello { role: PeerRole, group: u32, workers: u32, version: u16 },
     /// Server → worker: registration answer; reports cluster size and the
     /// server's [`PROTOCOL_VERSION`] (sent even on mismatch, so the worker
     /// can name both versions in its error).
@@ -162,6 +215,12 @@ impl Message {
             Message::Hello { worker, version } => {
                 MessageRef::Hello { worker: *worker, version: *version }
             }
+            Message::AggHello { role, group, workers, version } => MessageRef::AggHello {
+                role: *role,
+                group: *group,
+                workers: *workers,
+                version: *version,
+            },
             Message::HelloAck { workers, version } => {
                 MessageRef::HelloAck { workers: *workers, version: *version }
             }
@@ -214,6 +273,12 @@ impl Message {
                 buf.extend_from_slice(&worker.to_le_bytes());
                 buf.extend_from_slice(&version.to_le_bytes());
             }
+            Message::AggHello { role, group, workers, version } => {
+                buf.push(role.tag());
+                buf.extend_from_slice(&group.to_le_bytes());
+                buf.extend_from_slice(&workers.to_le_bytes());
+                buf.extend_from_slice(&version.to_le_bytes());
+            }
             Message::HelloAck { workers, version } => {
                 buf.extend_from_slice(&workers.to_le_bytes());
                 buf.extend_from_slice(&version.to_le_bytes());
@@ -244,6 +309,7 @@ pub enum MessageRef<'a> {
     Push { iter: u64, lo: u32, hi: u32, codec: CodecId, data: &'a [u8] },
     PushAck { iter: u64, lo: u32, hi: u32 },
     Hello { worker: u32, version: u16 },
+    AggHello { role: PeerRole, group: u32, workers: u32, version: u16 },
     HelloAck { workers: u32, version: u16 },
     Shutdown,
     CodecPropose { pref: CodecId },
@@ -266,6 +332,7 @@ impl<'a> MessageRef<'a> {
             MessageRef::CodecAgree { .. } => 9,
             MessageRef::SyncPropose { .. } => 10,
             MessageRef::SyncAgree { .. } => 11,
+            MessageRef::AggHello { .. } => 12,
         }
     }
 
@@ -277,6 +344,7 @@ impl<'a> MessageRef<'a> {
             MessageRef::Push { data, .. } => 8 + 4 + 4 + 4 + data.len(),
             MessageRef::PushAck { .. } => 8 + 4 + 4,
             MessageRef::Hello { .. } => 4 + 2,
+            MessageRef::AggHello { .. } => 1 + 4 + 4 + 2,
             MessageRef::HelloAck { .. } => 4 + 2,
             MessageRef::Shutdown => 0,
             MessageRef::CodecPropose { .. } => 1,
@@ -317,6 +385,12 @@ impl<'a> MessageRef<'a> {
             }
             MessageRef::Hello { worker, version } => {
                 buf.extend_from_slice(&worker.to_le_bytes());
+                buf.extend_from_slice(&version.to_le_bytes());
+            }
+            MessageRef::AggHello { role, group, workers, version } => {
+                buf.push(role.tag());
+                buf.extend_from_slice(&group.to_le_bytes());
+                buf.extend_from_slice(&workers.to_le_bytes());
                 buf.extend_from_slice(&version.to_le_bytes());
             }
             MessageRef::HelloAck { workers, version } => {
@@ -366,6 +440,10 @@ impl<'a> MessageRef<'a> {
                 let (mode, bound) = r.sync()?;
                 MessageRef::SyncAgree { mode, bound }
             }
+            12 => {
+                let (role, group, workers, version) = r.agg_hello()?;
+                MessageRef::AggHello { role, group, workers, version }
+            }
             _ => bail!("unknown opcode {op}"),
         };
         anyhow::ensure!(r.b.is_empty(), "trailing bytes in frame (op {op})");
@@ -384,6 +462,9 @@ impl<'a> MessageRef<'a> {
             }
             MessageRef::PushAck { iter, lo, hi } => Message::PushAck { iter, lo, hi },
             MessageRef::Hello { worker, version } => Message::Hello { worker, version },
+            MessageRef::AggHello { role, group, workers, version } => {
+                Message::AggHello { role, group, workers, version }
+            }
             MessageRef::HelloAck { workers, version } => {
                 Message::HelloAck { workers, version }
             }
@@ -442,6 +523,28 @@ impl<'a> Reader<'a> {
             mode.name()
         );
         Ok((mode, bound))
+    }
+
+    /// The `AggHello` payload (v5): a one-byte peer-role tag, the `u32`
+    /// group id, the `u32` worker-count weight, and the sender's protocol
+    /// version. Malformed roles are rejected here — an unknown role tag, a
+    /// zero worker-count (a weightless registration could never satisfy a
+    /// barrier), or an `Edge` role claiming to speak for more than one
+    /// worker — rather than silently registered by the endpoint.
+    fn agg_hello(&mut self) -> Result<(PeerRole, u32, u32, u16)> {
+        let tag = self.take(1)?[0];
+        let role = PeerRole::from_tag(tag)
+            .ok_or_else(|| anyhow::anyhow!("unknown peer role tag {tag}"))?;
+        let group = self.u32()?;
+        let workers = self.u32()?;
+        let version = self.u16()?;
+        anyhow::ensure!(workers > 0, "agg hello with zero worker count");
+        anyhow::ensure!(
+            role == PeerRole::Regional || workers == 1,
+            "malformed worker count {workers} for peer role {}",
+            role.name()
+        );
+        Ok((role, group, workers, version))
     }
 
     /// Length-prefixed byte slab, borrowed — no copy, no per-element work.
@@ -800,6 +903,52 @@ mod tests {
             roundtrip(Message::SyncPropose { mode, bound });
             roundtrip(Message::SyncAgree { mode, bound });
         }
+        roundtrip(Message::AggHello {
+            role: PeerRole::Regional,
+            group: 2,
+            workers: 4,
+            version: PROTOCOL_VERSION,
+        });
+        roundtrip(Message::AggHello {
+            role: PeerRole::Edge,
+            group: 9,
+            workers: 1,
+            version: 0,
+        });
+    }
+
+    /// The v5 aggregator registration frame: layout, and the malformed-
+    /// role rejection rules (unknown role tag; zero worker count; an edge
+    /// role claiming a group's worth of workers).
+    #[test]
+    fn agg_hello_validates_role_and_worker_count() {
+        // Layout: opcode + role tag + u32 group + u32 workers + u16 version.
+        let enc = Message::AggHello {
+            role: PeerRole::Regional,
+            group: 3,
+            workers: 7,
+            version: 5,
+        }
+        .encode();
+        assert_eq!(&enc[4..], &[12u8, 1, 3, 0, 0, 0, 7, 0, 0, 0, 5, 0]);
+        // Unknown role tag 2 is rejected.
+        assert!(Message::decode(&[12, 2, 3, 0, 0, 0, 7, 0, 0, 0, 5, 0]).is_err());
+        // A zero worker count can never satisfy a barrier: malformed.
+        assert!(Message::decode(&[12, 1, 3, 0, 0, 0, 0, 0, 0, 0, 5, 0]).is_err());
+        // An edge role is a single device; workers > 1 is malformed...
+        assert!(Message::decode(&[12, 0, 3, 0, 0, 0, 7, 0, 0, 0, 5, 0]).is_err());
+        // ...while exactly 1 decodes.
+        match Message::decode(&[12, 0, 3, 0, 0, 0, 1, 0, 0, 0, 5, 0]).unwrap() {
+            Message::AggHello { role, group, workers, version } => {
+                assert_eq!(role, PeerRole::Edge);
+                assert_eq!(group, 3);
+                assert_eq!(workers, 1);
+                assert_eq!(version, 5);
+            }
+            m => panic!("{m:?}"),
+        }
+        // Truncated frames fail cleanly.
+        assert!(Message::decode(&[12, 1, 3, 0]).is_err());
     }
 
     /// The v4 sync frames: layout, and the malformed-staleness-bound
@@ -953,7 +1102,7 @@ mod tests {
     }
 
     fn random_message(rng: &mut Rng) -> Message {
-        match rng.below(11) {
+        match rng.below(12) {
             0 => Message::Pull { iter: rng.below(1 << 20) as u64, lo: 0, hi: 7 },
             1 => {
                 let (codec, data) = random_codec_data(rng);
@@ -976,6 +1125,17 @@ mod tests {
             9 => {
                 let (mode, bound) = random_sync(rng);
                 Message::SyncAgree { mode, bound }
+            }
+            10 => {
+                // v5: a regional registration carries any positive worker
+                // count; an edge one exactly 1.
+                let regional = rng.bool();
+                Message::AggHello {
+                    role: if regional { PeerRole::Regional } else { PeerRole::Edge },
+                    group: rng.below(16) as u32,
+                    workers: if regional { 1 + rng.below(64) as u32 } else { 1 },
+                    version: rng.below(1 << 16) as u16,
+                }
             }
             _ => Message::Shutdown,
         }

@@ -1,0 +1,1018 @@
+//! The regional aggregation tier (`docs/TOPOLOGY.md`).
+//!
+//! A [`RegionalAggregator`] sits between a group of edge workers and the
+//! cloud shards (protocol v5). **Downstream** it speaks the full server
+//! surface — `Hello`/`AggHello` registration, `SyncPropose`/`CodecPropose`
+//! negotiation, pulls, pushes — so an edge worker connects to it exactly
+//! as it would to a shard (with `server_addrs = [aggregator]` the worker's
+//! shard map sees one server owning every layer). **Upstream** it is a
+//! single super-worker per shard: it registers with `AggHello { role:
+//! Regional, workers: G }` so its combined pushes carry the group's
+//! barrier weight, sums its group's gradients per layer and forwards
+//! **one** push per layer per iteration, and fans one shared upstream
+//! pull reply out to every group member through the same single-flight
+//! [`ReplyCache`]/pooled-slab seam the server uses. Cloud ingress and
+//! egress therefore shrink by ~group size.
+//!
+//! Each hop negotiates its own sync policy and wire codec independently:
+//! the downstream hop runs the aggregator's own [`SyncPolicy`] and serves
+//! whatever codec each edge session negotiates; the upstream hop proposes
+//! its own mode/codec to the shards (e.g. ASP+int8 edge→regional,
+//! SSP+fp16 regional→cloud). When the two hops agree on a codec, reply
+//! bytes pass through untouched; otherwise each layer is decoded and
+//! re-encoded (a lossy recompression under quantizing codecs — see
+//! `docs/TOPOLOGY.md` for the accuracy note).
+//!
+//! The forwarded push is the **raw sum** of the group's gradients, not an
+//! average: the cloud scales every update by `lr / workers` with
+//! `workers` the *total* edge fleet, so `G` summed gradients carrying
+//! barrier weight `G` reproduce the flat fleet's update bit-for-bit
+//! (`docs/TOPOLOGY.md` has the algebra).
+
+use std::collections::HashMap;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::net::codec::{self, CodecId};
+use crate::net::pool::{PooledSlab, SlabPool};
+use crate::net::{slab, Connection, Message, MessageRef, PeerRole, PROTOCOL_VERSION};
+use crate::ps::reply_cache::{ReplyCache, ReplyState};
+use crate::ps::sharding::ShardMap;
+use crate::ps::sync::{self, PullGate, SyncConfig, SyncPolicy};
+use crate::ps::worker::{connect_with_retry, propose_codec, propose_sync};
+use crate::util::sync::{lock_or_die, wait_or_die};
+
+/// Configuration of one regional aggregator.
+#[derive(Debug, Clone)]
+pub struct AggConfig {
+    /// The group identity this aggregator registers upstream (`AggHello`).
+    /// Must not collide with any identity registering directly at the
+    /// shards — the trainer allocates group ids past the worker ids.
+    pub group: u32,
+    /// Edge workers in the group: the barrier weight of every combined
+    /// push, and the fan-in target per layer per iteration.
+    pub workers: u32,
+    /// The cloud shards, in shard order (the round-robin layer striping
+    /// upstream must match the shards' own).
+    pub upstream_addrs: Vec<std::net::SocketAddr>,
+    /// f32 elements per layer (`w‖b` flat), indexed by layer id — sizes
+    /// every accumulator and wire length without touching the runtime.
+    pub layer_elems: Vec<usize>,
+    /// The edge→regional hop's sync policy (served authoritatively to
+    /// downstream `SyncPropose`s).
+    pub downstream_sync: SyncConfig,
+    /// The regional→cloud hop's expected sync configuration (proposed to
+    /// every shard; a mismatch fails the boot loudly).
+    pub upstream_sync: SyncConfig,
+    /// Preferred regional→cloud wire codec; falls back to fp32 unless
+    /// every upstream session agrees.
+    pub upstream_codec: CodecId,
+    /// Cap on concurrently live downstream handler threads (clamped to
+    /// never sit below `workers`, as on the server).
+    pub handler_threads: usize,
+}
+
+/// Aggregator-side observability counters.
+#[derive(Debug, Clone, Copy)]
+pub struct AggStats {
+    /// Downstream pulls answered from an already-assembled shared reply.
+    pub reply_cache_hits: u64,
+    /// Shared replies actually assembled (== upstream pull rounds).
+    pub reply_cache_builds: u64,
+    /// Combined per-layer pushes forwarded upstream.
+    pub forwarded_pushes: u64,
+    /// Downstream sessions that completed registration.
+    pub connected: u32,
+}
+
+/// Per-layer fan-in accumulator: the group's gradient sum for the
+/// iteration currently in flight.
+struct AccSlot {
+    sum: Vec<f32>,
+    /// Accumulated barrier weight (a stacked sub-aggregator's push
+    /// contributes its own group size).
+    count: usize,
+    /// Iteration of the contributions currently accumulating — stamped on
+    /// the forwarded push.
+    pending_iter: u64,
+}
+
+/// Downstream membership and barrier weights, mirroring the server's
+/// elastic registry: a departed group member shrinks the fan-in target so
+/// the survivors' combined push still goes out.
+struct Registry {
+    peers: HashMap<u32, (u32, u32)>,
+    departed: u32,
+}
+
+/// A completed layer, extracted from its accumulator under the lock and
+/// forwarded upstream outside it.
+struct Completed {
+    layer: usize,
+    iter: u64,
+    sum: Vec<f32>,
+}
+
+struct Shared {
+    workers: u32,
+    /// The downstream hop's synchronization policy.
+    sync: Box<dyn SyncPolicy>,
+    handler_threads: usize,
+    live_handlers: AtomicU32,
+    /// Layer → upstream shard striping (must match the shards' own map).
+    shard: ShardMap,
+    layer_elems: Vec<usize>,
+    /// Per-layer fan-in accumulators, indexed by layer id.
+    acc: Vec<Mutex<AccSlot>>,
+    /// Upstream pull connections, one per shard. Separate from the push
+    /// connections by design: a forwarded pull may park at the cloud
+    /// barrier for as long as the rest of the fleet takes, and a combined
+    /// push must still be able to go out — one shared socket (or one
+    /// mutex over it) would deadlock the group against itself.
+    up_pull: Vec<Mutex<Connection>>,
+    /// Upstream push connections, one per shard.
+    up_push: Vec<Mutex<Connection>>,
+    /// The codec every upstream session agreed to.
+    up_codec: CodecId,
+    pool: Arc<SlabPool>,
+    /// Single-flight shared-reply cache for downstream pulls, keyed
+    /// `(key_iter, lo, hi, downstream codec)`.
+    reply_cache: ReplyCache,
+    registry: Mutex<Registry>,
+    /// Key clock for `Fresh` downstream gates: 1 + the highest iteration
+    /// forwarded upstream, so a fresh pull asks the cloud for a snapshot
+    /// that includes the group's own latest contribution and the shared
+    /// reply invalidates once per forwarded round.
+    fwd_iter: AtomicU64,
+    forwarded: AtomicU64,
+    shutting_down: AtomicBool,
+    connected: AtomicU32,
+    /// Live downstream sockets (kill registry, as on the server).
+    conns: Mutex<Vec<Option<TcpStream>>>,
+}
+
+/// A running regional aggregator: downstream accept loop + handlers, with
+/// registered upstream sessions to every shard.
+pub struct RegionalAggregator {
+    shared: Arc<Shared>,
+    listener_thread: Option<JoinHandle<()>>,
+    addr: std::net::SocketAddr,
+    /// Duplicate fds of the upstream sockets so shutdown can fail any
+    /// in-flight upstream recv deterministically.
+    up_kill: Vec<TcpStream>,
+}
+
+impl RegionalAggregator {
+    /// Bind the downstream listener, connect and register both upstream
+    /// sessions (pull + push) with every shard — `AggHello` carrying the
+    /// group's worker count, the upstream sync mode verified, the
+    /// upstream codec unified (fp32 fallback) — then start serving.
+    pub fn start(cfg: AggConfig) -> Result<RegionalAggregator> {
+        anyhow::ensure!(cfg.workers > 0, "aggregator group must have workers");
+        anyhow::ensure!(!cfg.upstream_addrs.is_empty(), "aggregator needs upstream shards");
+        anyhow::ensure!(!cfg.layer_elems.is_empty(), "aggregator needs layer sizes");
+        cfg.downstream_sync.validate()?;
+        cfg.upstream_sync.validate()?;
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind aggregator")?;
+        let addr = listener.local_addr()?;
+
+        // Both upstream sessions per shard register under the same group
+        // identity, so the shard counts the weight — and the departure —
+        // exactly once (`ps::server`'s registry).
+        let mut up_pull = Vec::with_capacity(cfg.upstream_addrs.len());
+        let mut up_push = Vec::with_capacity(cfg.upstream_addrs.len());
+        let mut up_kill = Vec::new();
+        for shard_addr in &cfg.upstream_addrs {
+            for conns in [&mut up_pull, &mut up_push] {
+                let stream = connect_with_retry(shard_addr)?;
+                up_kill.push(stream.try_clone()?);
+                let mut conn = Connection::new(stream, None);
+                conn.send(&Message::AggHello {
+                    role: PeerRole::Regional,
+                    group: cfg.group,
+                    workers: cfg.workers,
+                    version: PROTOCOL_VERSION,
+                })?;
+                match conn.recv()? {
+                    Message::HelloAck { version, .. } if version == PROTOCOL_VERSION => {}
+                    Message::HelloAck { version, .. } => anyhow::bail!(
+                        "protocol version mismatch with shard {shard_addr}: \
+                         aggregator speaks v{PROTOCOL_VERSION}, server v{version}"
+                    ),
+                    m => anyhow::bail!("bad agg hello ack: {m:?}"),
+                }
+                propose_sync(
+                    &mut conn,
+                    cfg.upstream_sync.mode,
+                    cfg.upstream_sync.staleness_bound,
+                )?;
+                conns.push(conn);
+            }
+        }
+        // Unify the upstream codec across every session (both directions,
+        // all shards): split-codec stitching would need per-shard byte
+        // tables for no benefit, so any disagreement unifies on fp32.
+        let mut up_codec = cfg.upstream_codec;
+        if up_codec != CodecId::Fp32 {
+            for conn in up_pull.iter_mut().chain(up_push.iter_mut()) {
+                if propose_codec(conn, up_codec)? != up_codec {
+                    up_codec = CodecId::Fp32;
+                    break;
+                }
+            }
+            if up_codec == CodecId::Fp32 {
+                for conn in up_pull.iter_mut().chain(up_push.iter_mut()) {
+                    anyhow::ensure!(
+                        propose_codec(conn, CodecId::Fp32)? == CodecId::Fp32,
+                        "shard refused the mandatory fp32 fallback"
+                    );
+                }
+            }
+        }
+
+        let acc = cfg
+            .layer_elems
+            .iter()
+            .map(|&n| Mutex::new(AccSlot { sum: vec![0.0; n], count: 0, pending_iter: 0 }))
+            .collect();
+        let shared = Arc::new(Shared {
+            workers: cfg.workers,
+            sync: sync::create(cfg.downstream_sync),
+            handler_threads: cfg.handler_threads.max(cfg.workers as usize).max(1),
+            live_handlers: AtomicU32::new(0),
+            shard: ShardMap::new(cfg.upstream_addrs.len(), cfg.layer_elems.len()),
+            layer_elems: cfg.layer_elems,
+            acc,
+            up_pull: up_pull.into_iter().map(Mutex::new).collect(),
+            up_push: up_push.into_iter().map(Mutex::new).collect(),
+            up_codec,
+            pool: SlabPool::new(),
+            reply_cache: ReplyCache::new(),
+            registry: Mutex::new(Registry { peers: HashMap::new(), departed: 0 }),
+            fwd_iter: AtomicU64::new(0),
+            forwarded: AtomicU64::new(0),
+            shutting_down: AtomicBool::new(false),
+            connected: AtomicU32::new(0),
+            conns: Mutex::new(Vec::new()),
+        });
+        let shared2 = shared.clone();
+        let listener_thread = std::thread::Builder::new()
+            .name(format!("agg-accept-{}", addr.port()))
+            .spawn(move || accept_loop(listener, shared2))?;
+        Ok(RegionalAggregator { shared, listener_thread: Some(listener_thread), addr, up_kill })
+    }
+
+    /// The downstream address edge workers connect to.
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// The codec every upstream session agreed to.
+    pub fn upstream_codec(&self) -> CodecId {
+        self.shared.up_codec
+    }
+
+    pub fn stats(&self) -> AggStats {
+        AggStats {
+            reply_cache_hits: self.shared.reply_cache.hits.load(Ordering::SeqCst),
+            reply_cache_builds: self.shared.reply_cache.builds.load(Ordering::SeqCst),
+            forwarded_pushes: self.shared.forwarded.load(Ordering::SeqCst),
+            connected: self.shared.connected.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Downstream pulls currently parked inside the sync policy's gate.
+    pub fn sync_waiters(&self) -> u32 {
+        self.shared.sync.waiters()
+    }
+
+    /// Drain and stop: wake parked downstream pulls and cache waiters,
+    /// kill downstream and upstream sockets so blocked reads return, then
+    /// join the accept loop (which joins every handler).
+    pub fn shutdown(&mut self) {
+        self.shared.shutting_down.store(true, Ordering::SeqCst);
+        self.shared.sync.interrupt();
+        {
+            let _entries = lock_or_die(&self.shared.reply_cache.entries, "reply_cache.entries");
+            self.shared.reply_cache.ready.notify_all();
+        }
+        for slot in lock_or_die(&self.shared.conns, "agg.conns").iter_mut() {
+            if let Some(stream) = slot.take() {
+                let _ = stream.shutdown(Shutdown::Both);
+            }
+        }
+        // A handler may be blocked mid-assembly on an upstream reply (a
+        // forwarded pull parked at the cloud barrier): fail those reads
+        // too, or the handler join below would wait on the cloud.
+        for stream in &self.up_kill {
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.listener_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RegionalAggregator {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut handlers = Vec::new();
+    loop {
+        // Bounded handler pool with kernel-backlog backpressure, exactly
+        // as on the server (`ps::server::accept_loop`).
+        loop {
+            handlers.retain(|h: &std::thread::JoinHandle<()>| !h.is_finished());
+            if handlers.len() < shared.handler_threads
+                || shared.shutting_down.load(Ordering::SeqCst)
+            {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        let Ok((stream, _)) = listener.accept() else { break };
+        let Ok(dup) = stream.try_clone() else {
+            drop(stream);
+            continue;
+        };
+        // Register BEFORE the flag check so shutdown either drains this
+        // entry or the check below kills it — no unkillable window.
+        let conn_id = {
+            let mut conns = lock_or_die(&shared.conns, "agg.conns");
+            match conns.iter_mut().position(|slot| slot.is_none()) {
+                Some(i) => {
+                    conns[i] = Some(dup);
+                    i
+                }
+                None => {
+                    conns.push(Some(dup));
+                    conns.len() - 1
+                }
+            }
+        };
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            let _ = stream.shutdown(Shutdown::Both);
+            break;
+        }
+        let shared = shared.clone();
+        shared.live_handlers.fetch_add(1, Ordering::SeqCst);
+        handlers.push(std::thread::spawn(move || {
+            let conn = Connection::new(stream, None);
+            if let Err(e) = handle_conn(conn, &shared) {
+                crate::debug!("agg", "handler exit: {e:#}");
+            }
+            lock_or_die(&shared.conns, "agg.conns")[conn_id] = None;
+            shared.live_handlers.fetch_sub(1, Ordering::SeqCst);
+        }));
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+}
+
+/// The group fan-in target right now: the configured group size minus
+/// every fully departed member's weight, floored at 1.
+fn group_target(shared: &Shared) -> usize {
+    let departed = lock_or_die(&shared.registry, "agg.registry").departed as usize;
+    (shared.workers as usize).saturating_sub(departed).max(1)
+}
+
+/// Record a downstream identity; `true` on its first live session (only
+/// then does the downstream sync policy see a registration).
+fn register_identity(shared: &Shared, id: u32, weight: u32) -> bool {
+    let mut reg = lock_or_die(&shared.registry, "agg.registry");
+    match reg.peers.get_mut(&id) {
+        Some(entry) => {
+            entry.1 += 1;
+            false
+        }
+        None => {
+            reg.departed = reg.departed.saturating_sub(weight);
+            reg.peers.insert(id, (weight, 1));
+            true
+        }
+    }
+}
+
+/// A downstream session ended. On the identity's last session its weight
+/// departs (shrinking the fan-in target) and any layer whose accumulated
+/// weight already meets the new target forwards immediately — a group
+/// member that hung up mid-iteration must not strand the survivors'
+/// gradients at the aggregator.
+fn deregister_identity(shared: &Shared, id: u32) -> Result<()> {
+    let fully_departed = {
+        let mut reg = lock_or_die(&shared.registry, "agg.registry");
+        match reg.peers.get_mut(&id) {
+            Some(entry) if entry.1 > 1 => {
+                entry.1 -= 1;
+                false
+            }
+            Some(_) => {
+                let (weight, _) = reg.peers.remove(&id).expect("entry just matched");
+                reg.departed += weight;
+                true
+            }
+            None => false,
+        }
+    };
+    if fully_departed {
+        shared.sync.deregister_worker(id);
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let target = group_target(shared);
+        let mut done = Vec::new();
+        for (l, m) in shared.acc.iter().enumerate() {
+            let mut slot = lock_or_die(m, "agg.acc");
+            if slot.count > 0 && slot.count >= target {
+                done.push(take_completed(l, &mut slot, shared.layer_elems[l]));
+            }
+        }
+        for c in done {
+            forward_push(shared, c)?;
+        }
+    }
+    Ok(())
+}
+
+/// Extract a completed layer's sum and reset the accumulator (caller
+/// holds the slot lock; the upstream send happens outside it).
+fn take_completed(layer: usize, slot: &mut AccSlot, elems: usize) -> Completed {
+    let sum = std::mem::replace(&mut slot.sum, vec![0.0; elems]);
+    let iter = slot.pending_iter;
+    slot.count = 0;
+    Completed { layer, iter, sum }
+}
+
+/// Accumulate one downstream push into the per-layer fan-in slots;
+/// returns the layers the push completed (fan-in target reached), to be
+/// forwarded outside the accumulator locks.
+fn accumulate_push(
+    shared: &Shared,
+    iter: u64,
+    lo: u32,
+    hi: u32,
+    codec_id: CodecId,
+    data: &[u8],
+    weight: u32,
+) -> Result<Vec<Completed>> {
+    let wc = codec_id.codec();
+    let target = group_target(shared);
+    let mut off = 0usize;
+    let mut done = Vec::new();
+    for l in lo as usize..=hi as usize {
+        let Some(&elems) = shared.layer_elems.get(l) else { continue };
+        let n = wc.wire_len(slab::ELEM * elems);
+        anyhow::ensure!(
+            off + n <= data.len(),
+            "push payload too small for layers {lo}..={hi}"
+        );
+        let mut slot = lock_or_die(&shared.acc[l], "agg.acc");
+        wc.accumulate(&mut slot.sum, &data[off..off + n])?;
+        slot.count += weight as usize;
+        slot.pending_iter = iter;
+        if slot.count >= target {
+            done.push(take_completed(l, &mut slot, elems));
+        }
+        drop(slot);
+        off += n;
+    }
+    anyhow::ensure!(off == data.len(), "push payload size mismatch");
+    Ok(done)
+}
+
+/// Forward one completed layer upstream: encode the group's raw gradient
+/// sum with the upstream codec and push it to the owning shard (send +
+/// ack under that shard's push-connection lock). The push is a *sum*, not
+/// an average — the shard's `lr / total-workers` scaling averages it.
+fn forward_push(shared: &Shared, c: Completed) -> Result<()> {
+    let raw = slab::from_f32s(&c.sum);
+    let wc = shared.up_codec.codec();
+    let mut wire = Vec::with_capacity(shared.up_codec.wire_len(raw.len()));
+    wc.encode(&raw, &mut wire);
+    let srv = shared.shard.owner(c.layer);
+    {
+        let mut conn = lock_or_die(&shared.up_push[srv], "agg.upstream");
+        conn.send(&Message::Push {
+            iter: c.iter,
+            lo: c.layer as u32,
+            hi: c.layer as u32,
+            codec: shared.up_codec,
+            data: wire,
+        })?;
+        match conn.recv()? {
+            Message::PushAck { .. } => {}
+            m => anyhow::bail!("bad upstream push ack: {m:?}"),
+        }
+    }
+    shared.forwarded.fetch_add(1, Ordering::SeqCst);
+    shared.fwd_iter.fetch_max(c.iter + 1, Ordering::SeqCst);
+    Ok(())
+}
+
+/// Assemble the shared downstream reply for `[lo, hi]`: one upstream pull
+/// per owning shard (requesting iteration `up_iter`), stitched back into
+/// ascending layer order, each layer's bytes re-encoded for the
+/// downstream codec — or passed through untouched when the hops agree.
+/// Returns the slab plus the oldest `applied` among the shard replies.
+fn assemble_reply(
+    shared: &Shared,
+    up_iter: u64,
+    lo: u32,
+    hi: u32,
+    down_codec: CodecId,
+) -> Result<(Arc<PooledSlab>, u64)> {
+    let depth = shared.layer_elems.len();
+    let lo_u = (lo as usize).min(depth - 1);
+    let hi_u = (hi as usize).min(depth - 1);
+    // One pull per shard covering the whole range: a shard replies with
+    // only its owned layers, ascending — exactly one cursor per shard in
+    // the stitch below.
+    let servers = shared.shard.servers;
+    let mut shard_replies: Vec<Option<Vec<u8>>> = (0..servers).map(|_| None).collect();
+    let mut applied_min = u64::MAX;
+    for sub in shared.shard.sub_requests(lo_u, hi_u) {
+        let mut conn = lock_or_die(&shared.up_pull[sub.server], "agg.upstream");
+        conn.send(&Message::Pull { iter: up_iter, lo, hi })?;
+        let (rcodec, applied, data) = match conn.recv()? {
+            Message::PullReply { codec, applied, data, .. } => (codec, applied, data),
+            m => anyhow::bail!("bad upstream pull reply: {m:?}"),
+        };
+        drop(conn);
+        anyhow::ensure!(
+            rcodec == shared.up_codec,
+            "upstream reply codec mismatch: got {}, session speaks {}",
+            rcodec.name(),
+            shared.up_codec.name()
+        );
+        applied_min = applied_min.min(applied);
+        shard_replies[sub.server] = Some(data);
+    }
+    let cap: usize = (lo_u..=hi_u)
+        .map(|l| down_codec.wire_len(slab::ELEM * shared.layer_elems[l]))
+        .sum();
+    let mut data = shared.pool.checkout(cap);
+    let wc_up = shared.up_codec.codec();
+    let wc_down = down_codec.codec();
+    let mut offs = vec![0usize; servers];
+    let mut scratch = Vec::new();
+    for l in lo_u..=hi_u {
+        let srv = shared.shard.owner(l);
+        let reply = shard_replies[srv].as_ref().context("missing shard reply")?;
+        let n_up = shared.up_codec.wire_len(slab::ELEM * shared.layer_elems[l]);
+        anyhow::ensure!(
+            offs[srv] + n_up <= reply.len(),
+            "upstream reply too small for layer {l}"
+        );
+        let chunk = &reply[offs[srv]..offs[srv] + n_up];
+        offs[srv] += n_up;
+        if down_codec == shared.up_codec {
+            // Same codec on both hops: byte passthrough, no precision
+            // loss beyond the upstream hop's own.
+            data.extend_from_slice(chunk);
+        } else {
+            // Codec cascade: decode the upstream encoding, re-encode for
+            // the downstream hop (lossy under quantizing codecs).
+            scratch.clear();
+            wc_up.decode(chunk, &mut scratch)?;
+            wc_down.encode(&scratch, &mut data);
+        }
+    }
+    let applied = if applied_min == u64::MAX { up_iter } else { applied_min };
+    Ok((data.freeze(), applied))
+}
+
+/// Serve a downstream pull: admit via the downstream sync policy, derive
+/// the shared-reply key its gate implies, and serve from the single-flight
+/// cache. `Ok(None)` only on shutdown.
+fn serve_pull(
+    shared: &Shared,
+    worker: Option<u32>,
+    iter: u64,
+    lo: u32,
+    hi: u32,
+    codec_id: CodecId,
+) -> Result<Option<(Arc<PooledSlab>, u64)>> {
+    let Some(gate) = shared.sync.admit_pull(worker, iter, &shared.shutting_down) else {
+        return Ok(None);
+    };
+    // Under a barrier gate the key is the iteration (the forwarded pull
+    // parks at the *cloud's* version clock, so the barrier holds
+    // transitively without aggregator-local versions); under a fresh gate
+    // the key — and the requested upstream iteration — is the forwarded-
+    // push clock, so the group's own latest contribution is included and
+    // the shared reply invalidates once per forwarded round.
+    let key_iter = match gate {
+        PullGate::WaitFor { min } => min,
+        PullGate::Fresh => shared.fwd_iter.load(Ordering::SeqCst),
+    };
+    let key = (key_iter, lo, hi, codec_id);
+    let cache = &shared.reply_cache;
+    let mut entries = lock_or_die(&cache.entries, "reply_cache.entries");
+    loop {
+        if shared.shutting_down.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        enum Peek {
+            Hit(Arc<PooledSlab>, u64),
+            Wait,
+            Vacant,
+        }
+        let peek = match entries.get(&key) {
+            Some(ReplyState::Ready(slab, applied)) => Peek::Hit(slab.clone(), *applied),
+            Some(ReplyState::Building) => Peek::Wait,
+            None => Peek::Vacant,
+        };
+        match peek {
+            Peek::Hit(slab, applied) => {
+                cache.hits.fetch_add(1, Ordering::SeqCst);
+                return Ok(Some((slab, applied)));
+            }
+            Peek::Wait => {
+                entries = wait_or_die(&cache.ready, entries, "reply_cache.entries");
+            }
+            Peek::Vacant => {
+                entries.insert(key, ReplyState::Building);
+                drop(entries);
+                let built = assemble_reply(shared, key_iter, lo, hi, codec_id);
+                let mut relocked = lock_or_die(&cache.entries, "reply_cache.entries");
+                let out = match built {
+                    Ok((slab, applied)) => {
+                        cache.builds.fetch_add(1, Ordering::SeqCst);
+                        relocked.insert(key, ReplyState::Ready(slab.clone(), applied));
+                        // Same bounded-cache discipline as the server:
+                        // keep in-flight keys, evict finished rounds.
+                        relocked.retain(|k, v| {
+                            matches!(v, ReplyState::Building) || k.0 + 1 >= key_iter
+                        });
+                        Ok(Some((slab, applied)))
+                    }
+                    Err(e) => {
+                        // Clear the Building marker so waiters don't park
+                        // forever, then fail this session.
+                        relocked.remove(&key);
+                        Err(e)
+                    }
+                };
+                drop(relocked);
+                cache.ready.notify_all();
+                return out;
+            }
+        }
+    }
+}
+
+/// What a received downstream message asks the handler to do once the
+/// receive borrow is released.
+enum Action {
+    Register { id: u32, weight: u32, version: u16, role: &'static str },
+    Reply(Message),
+    ReplyShared { iter: u64, lo: u32, hi: u32, applied: u64, slab: Arc<PooledSlab> },
+    Forward { acks: (u64, u32, u32), done: Vec<Completed> },
+    Close,
+}
+
+fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
+    let mut session_codec = CodecId::Fp32;
+    let mut session_worker: Option<u32> = None;
+    let mut session_weight: u32 = 1;
+    let result = handle_conn_inner(
+        &mut conn,
+        shared,
+        &mut session_codec,
+        &mut session_worker,
+        &mut session_weight,
+    );
+    if let Some(w) = session_worker {
+        // Departure may complete pending layers; a forwarding failure
+        // here is secondary to however the session itself ended.
+        let _ = deregister_identity(shared, w);
+    }
+    result
+}
+
+fn handle_conn_inner(
+    conn: &mut Connection,
+    shared: &Shared,
+    session_codec: &mut CodecId,
+    session_worker: &mut Option<u32>,
+    session_weight: &mut u32,
+) -> Result<()> {
+    loop {
+        let action = {
+            let msg = match conn.recv_ref() {
+                Ok(m) => m,
+                Err(_) => return Ok(()),
+            };
+            match msg {
+                MessageRef::Hello { worker, version } => {
+                    Action::Register { id: worker, weight: 1, version, role: "worker" }
+                }
+                MessageRef::AggHello { role, group, workers, version } => {
+                    // Tiers stack: a sub-aggregator registers downstream
+                    // exactly as it would at a shard.
+                    Action::Register { id: group, weight: workers, version, role: role.name() }
+                }
+                MessageRef::CodecPropose { pref } => {
+                    *session_codec = codec::negotiate(&[pref], &codec::SUPPORTED);
+                    Action::Reply(Message::CodecAgree { codec: *session_codec })
+                }
+                MessageRef::SyncPropose { .. } => Action::Reply(Message::SyncAgree {
+                    mode: shared.sync.mode(),
+                    bound: shared.sync.staleness_bound(),
+                }),
+                MessageRef::Pull { iter, lo, hi } => {
+                    match serve_pull(shared, *session_worker, iter, lo, hi, *session_codec)? {
+                        Some((slab, applied)) => {
+                            Action::ReplyShared { iter, lo, hi, applied, slab }
+                        }
+                        None => Action::Close,
+                    }
+                }
+                MessageRef::Push { iter, lo, hi, codec, data } => {
+                    // Advance the downstream clocks, then fan the gradient
+                    // into the per-layer accumulators.
+                    let _ = shared.sync.on_push(*session_worker, iter);
+                    let done = accumulate_push(
+                        shared,
+                        iter,
+                        lo,
+                        hi,
+                        codec,
+                        data,
+                        *session_weight,
+                    )?;
+                    Action::Forward { acks: (iter, lo, hi), done }
+                }
+                MessageRef::Shutdown => Action::Close,
+                other => {
+                    anyhow::bail!("unexpected message at aggregator: {:?}", other.into_owned())
+                }
+            }
+        };
+        match action {
+            Action::Register { id, weight, version, role } => {
+                conn.send(&Message::HelloAck {
+                    workers: shared.workers,
+                    version: PROTOCOL_VERSION,
+                })?;
+                anyhow::ensure!(
+                    version == PROTOCOL_VERSION,
+                    "protocol version mismatch: {role} {id} speaks \
+                     v{version}, aggregator v{PROTOCOL_VERSION}"
+                );
+                *session_worker = Some(id);
+                *session_weight = weight;
+                if register_identity(shared, id, weight) {
+                    shared.sync.register_worker(id);
+                }
+                shared.connected.fetch_add(1, Ordering::SeqCst);
+            }
+            Action::Reply(m) => conn.send(&m)?,
+            Action::ReplyShared { iter, lo, hi, applied, slab } => {
+                conn.send_ref(MessageRef::PullReply {
+                    iter,
+                    lo,
+                    hi,
+                    applied,
+                    codec: *session_codec,
+                    data: &slab[..],
+                })?;
+            }
+            Action::Forward { acks: (iter, lo, hi), done } => {
+                // Forward completed layers upstream (outside the
+                // accumulator locks), then ack the downstream push — the
+                // ack means the gradient is durably on its way, matching
+                // the blocking-ack contract workers already rely on.
+                for c in done {
+                    forward_push(shared, c)?;
+                }
+                conn.send(&Message::PushAck { iter, lo, hi })?;
+            }
+            Action::Close => return Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ps::server::{ParamServer, ServerConfig};
+    use crate::ps::sync::SyncMode;
+    use std::time::{Duration, Instant};
+
+    fn connect(addr: std::net::SocketAddr) -> Connection {
+        Connection::new(TcpStream::connect(addr).unwrap(), None)
+    }
+
+    fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !cond() {
+            assert!(Instant::now() < deadline, "timed out waiting for {what}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+
+    /// Two layers ({0: [1, 2], 1: [10]}), one cloud shard expecting the
+    /// whole fleet, one aggregator fronting a group of `group_workers`.
+    fn start_tier(
+        fleet: usize,
+        group_workers: u32,
+    ) -> (ParamServer, RegionalAggregator) {
+        let mut layers = HashMap::new();
+        layers.insert(0, vec![1.0f32, 2.0]);
+        layers.insert(1, vec![10.0f32]);
+        let srv =
+            ParamServer::start(ServerConfig { workers: fleet, lr: 0.5 }, layers, None)
+                .unwrap();
+        let agg = RegionalAggregator::start(AggConfig {
+            group: 100,
+            workers: group_workers,
+            upstream_addrs: vec![srv.handle().addr],
+            layer_elems: vec![2, 1],
+            downstream_sync: SyncConfig::default(),
+            upstream_sync: SyncConfig::default(),
+            upstream_codec: CodecId::Fp32,
+            handler_threads: 8,
+        })
+        .unwrap();
+        (srv, agg)
+    }
+
+    fn hello(c: &mut Connection, worker: u32) {
+        c.send(&Message::Hello { worker, version: PROTOCOL_VERSION }).unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::HelloAck { .. }));
+    }
+
+    fn push(c: &mut Connection, iter: u64, lo: u32, hi: u32, grads: &[f32]) {
+        c.send(&Message::Push {
+            iter,
+            lo,
+            hi,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(grads),
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+    }
+
+    /// The fan-in/fan-out contract: the group's pushes reach the cloud as
+    /// ONE combined push per layer carrying the group's weight, group
+    /// pulls share ONE upstream assembly, and the resulting update is
+    /// bit-identical to the flat fleet's.
+    #[test]
+    fn group_pushes_combine_and_pulls_share_one_upstream_round() {
+        let (srv, agg) = start_tier(2, 2);
+        let mut a = connect(agg.addr());
+        let mut b = connect(agg.addr());
+        // Both group members pull iteration 0: one upstream round.
+        for c in [&mut a, &mut b] {
+            c.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+            match c.recv().unwrap() {
+                Message::PullReply { data, .. } => {
+                    assert_eq!(slab::to_f32s(&data), vec![1.0, 2.0, 10.0]);
+                }
+                m => panic!("{m:?}"),
+            }
+        }
+        let st = agg.stats();
+        assert_eq!(st.reply_cache_builds, 1, "group pulls must share one assembly");
+        assert_eq!(st.reply_cache_hits, 1);
+        // A pushes [2, 0 | 3], B pushes [0, 4 | 1]: nothing reaches the
+        // cloud until the group is complete.
+        push(&mut a, 0, 0, 1, &[2.0, 0.0, 3.0]);
+        assert_eq!(srv.snapshot(0).unwrap(), vec![1.0, 2.0], "half a group must not apply");
+        assert_eq!(srv.wire_stats().ingress_bytes, 0, "nothing forwarded yet");
+        push(&mut b, 0, 0, 1, &[0.0, 4.0, 1.0]);
+        // Combined sum [2, 4 | 4] with weight 2 fires the fleet barrier:
+        // w -= (0.5 / 2) * sum — exactly the flat two-worker update.
+        assert_eq!(srv.snapshot(0).unwrap(), vec![0.5, 1.0]);
+        assert_eq!(srv.snapshot(1).unwrap(), vec![9.0]);
+        // One combined push per layer went upstream.
+        assert_eq!(agg.stats().forwarded_pushes, 2);
+        // Cloud ingress: one fp32 slab per layer (12 bytes total), not
+        // one per worker (24).
+        assert_eq!(srv.wire_stats().ingress_bytes, 12);
+    }
+
+    /// Mixed per-hop codecs: int8 downstream sessions are served re-encoded
+    /// replies and their pushes decode-accumulate; the upstream hop stays
+    /// fp32. Values survive within the quantization error.
+    #[test]
+    fn downstream_codec_is_independent_of_the_upstream_hop() {
+        let (srv, agg) = start_tier(1, 1);
+        assert_eq!(agg.upstream_codec(), CodecId::Fp32);
+        let mut c = connect(agg.addr());
+        c.send(&Message::CodecPropose { pref: CodecId::Int8 }).unwrap();
+        match c.recv().unwrap() {
+            Message::CodecAgree { codec } => assert_eq!(codec, CodecId::Int8),
+            m => panic!("{m:?}"),
+        }
+        let wc = CodecId::Int8.codec();
+        c.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+        match c.recv().unwrap() {
+            Message::PullReply { codec, data, .. } => {
+                assert_eq!(codec, CodecId::Int8);
+                assert_eq!(data.len(), wc.wire_len(8) + wc.wire_len(4));
+                let mut raw = Vec::new();
+                wc.decode(&data[..wc.wire_len(8)], &mut raw).unwrap();
+                wc.decode(&data[wc.wire_len(8)..], &mut raw).unwrap();
+                let vals = slab::to_f32s(&raw);
+                assert!((vals[0] - 1.0).abs() < 1e-2, "{vals:?}");
+                assert!((vals[1] - 2.0).abs() < 1e-2, "{vals:?}");
+                assert!((vals[2] - 10.0).abs() < 1e-1, "{vals:?}");
+            }
+            m => panic!("{m:?}"),
+        }
+        // Push an int8 gradient for layer 0; the forwarded combined push
+        // is fp32 and the cloud applies w -= 0.5 * [2, 2].
+        let mut wire = Vec::new();
+        wc.encode(&slab::from_f32s(&[2.0, 2.0]), &mut wire);
+        c.send(&Message::Push { iter: 0, lo: 0, hi: 0, codec: CodecId::Int8, data: wire })
+            .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::PushAck { .. }));
+        let got = srv.snapshot(0).unwrap();
+        assert!((got[0] - 0.0).abs() < 1e-2, "{got:?}");
+        assert!((got[1] - 1.0).abs() < 1e-2, "{got:?}");
+    }
+
+    /// A group member that disconnects mid-iteration shrinks the fan-in
+    /// target: the survivors' accumulated gradients forward instead of
+    /// stranding at the aggregator.
+    #[test]
+    fn departed_group_member_releases_the_fan_in() {
+        let (srv, agg) = start_tier(1, 2);
+        let mut a = connect(agg.addr());
+        let mut b = connect(agg.addr());
+        hello(&mut a, 0);
+        hello(&mut b, 1);
+        // A contributes; the layer waits for B.
+        push(&mut a, 0, 0, 0, &[2.0, 0.0]);
+        assert_eq!(agg.stats().forwarded_pushes, 0);
+        // B departs → target shrinks to 1 → A's gradient forwards, and
+        // the single-worker cloud barrier applies it (lr/1).
+        drop(b);
+        wait_until("survivor's gradient to forward", || agg.stats().forwarded_pushes == 1);
+        wait_until("cloud to apply the released push", || {
+            srv.snapshot(0).unwrap() == vec![0.0, 2.0]
+        });
+    }
+
+    /// BSP group members pulling the next iteration park transitively at
+    /// the cloud barrier — the aggregator forwards the wait instead of
+    /// inventing its own clock.
+    #[test]
+    fn bsp_pulls_park_transitively_at_the_cloud_barrier() {
+        let (_srv, agg) = start_tier(2, 2);
+        let addr = agg.addr();
+        let t = std::thread::spawn(move || {
+            let mut c = connect(addr);
+            c.send(&Message::Pull { iter: 1, lo: 0, hi: 1 }).unwrap();
+            c.recv().unwrap()
+        });
+        // The forwarded pull parks at the cloud (version 0 < 1) while the
+        // group's iteration-0 pushes complete the barrier.
+        let mut a = connect(addr);
+        let mut b = connect(addr);
+        push(&mut a, 0, 0, 1, &[2.0, 2.0, 2.0]);
+        push(&mut b, 0, 0, 1, &[2.0, 2.0, 2.0]);
+        match t.join().unwrap() {
+            Message::PullReply { applied, data, .. } => {
+                assert_eq!(applied, 1);
+                // w -= (0.5/2) * [4, 4, 4].
+                assert_eq!(slab::to_f32s(&data), vec![0.0, 1.0, 9.0]);
+            }
+            m => panic!("{m:?}"),
+        }
+    }
+
+    /// The aggregator refuses to boot against a shard running a different
+    /// upstream sync mode — consistency models have no safe fallback.
+    #[test]
+    fn upstream_sync_mismatch_fails_the_boot() {
+        let mut layers = HashMap::new();
+        layers.insert(0, vec![1.0f32]);
+        let srv =
+            ParamServer::start(ServerConfig { workers: 1, lr: 0.5 }, layers, None).unwrap();
+        let err = RegionalAggregator::start(AggConfig {
+            group: 100,
+            workers: 1,
+            upstream_addrs: vec![srv.handle().addr],
+            layer_elems: vec![1],
+            downstream_sync: SyncConfig::default(),
+            upstream_sync: SyncConfig::new(SyncMode::Asp, 0).unwrap(),
+            upstream_codec: CodecId::Fp32,
+            handler_threads: 4,
+        })
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("sync mode mismatch"), "{err:#}");
+    }
+}

@@ -6,13 +6,21 @@
 //! The DynaComm scheduler plugs in at the worker: pulls and pushes are
 //! issued **per decomposition segment**, overlapping with per-layer PJRT
 //! compute exactly as the paper's execution model prescribes.
+//!
+//! The hierarchical tier ([`agg`], `docs/TOPOLOGY.md`) slots a regional
+//! aggregator between a group of edge workers and the cloud shards: one
+//! combined push and one shared pull per group per shard, with each hop
+//! negotiating its own sync policy and wire codec.
 
+pub mod agg;
 pub mod exec;
+pub(crate) mod reply_cache;
 pub mod server;
 pub mod sharding;
 pub mod sync;
 pub mod worker;
 
+pub use agg::{AggConfig, AggStats, RegionalAggregator};
 pub use exec::{ExecPlan, ExecSegment, ExecSlice, ExecSub, SlabSlice};
 pub use server::{ParamServer, ServerConfig, ServerHandle, ServerOptions, WireStats};
 pub use sharding::ShardMap;

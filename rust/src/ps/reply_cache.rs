@@ -1,0 +1,55 @@
+//! The shared pull-reply broadcast cache (single-flight assembly).
+//!
+//! Extracted from the server so the regional aggregation tier
+//! ([`crate::ps::agg`]) can reuse the exact same seam: every same-key
+//! puller of a segment shares one assembly, concurrent pullers for an
+//! in-flight key park on the condvar instead of duplicating the work, and
+//! finished keys' slabs return to the pool. The cache itself is policy-free
+//! — who builds, what the key means, and when entries are evicted stays
+//! with the caller (`ps/server.rs` and `ps/agg` both implement the
+//! `Building`/`Ready` single-flight dance around it).
+
+use std::collections::HashMap;
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::net::codec::CodecId;
+use crate::net::pool::PooledSlab;
+
+/// State of one reply-cache entry (single-flight assembly).
+pub(crate) enum ReplyState {
+    /// A handler is assembling this reply; others wait on the condvar.
+    Building,
+    /// Assembled (slab + the snapshot's applied iteration); served to
+    /// every subsequent puller as a cheap clone.
+    Ready(Arc<PooledSlab>, u64),
+}
+
+/// The shared pull-reply broadcast cache, keyed by
+/// `(key_iter, lo, hi, codec)` — sessions speaking different codecs need
+/// different reply bytes, but every same-codec puller of a segment still
+/// shares one single-flight assembly. `key_iter` is the requested
+/// iteration under the BSP barrier (byte-identical replies per iteration,
+/// the historical key) and an apply/forward-event counter under
+/// immediate-apply modes (a fresh apply invalidates the broadcast, so
+/// "freshest applied snapshot" and "assemble once per snapshot" coexist).
+pub(crate) struct ReplyCache {
+    pub(crate) entries: Mutex<HashMap<(u64, u32, u32, CodecId), ReplyState>>,
+    /// Signals entry transitions (Building → Ready/removed) and shutdown.
+    pub(crate) ready: Condvar,
+    /// Pulls answered from an already-assembled slab.
+    pub(crate) hits: AtomicU64,
+    /// Successful assemblies (== distinct `(iter, lo, hi)` keys served).
+    pub(crate) builds: AtomicU64,
+}
+
+impl ReplyCache {
+    pub(crate) fn new() -> ReplyCache {
+        ReplyCache {
+            entries: Mutex::new(HashMap::new()),
+            ready: Condvar::new(),
+            hits: AtomicU64::new(0),
+            builds: AtomicU64::new(0),
+        }
+    }
+}

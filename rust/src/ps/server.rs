@@ -12,6 +12,13 @@
 //! immediately, `asp` never gates at all. Replies carry the `applied`
 //! iteration of the snapshot they serve (protocol v4).
 //!
+//! Protocol v5 adds the hierarchical aggregation tier
+//! ([`crate::ps::agg`], `docs/TOPOLOGY.md`): a session may register as a
+//! regional aggregator (`AggHello`) whose combined pushes carry its
+//! group's worker count as barrier weight, and BSP membership is elastic
+//! — an identity that disconnects releases the barrier weight it was
+//! holding instead of stalling the survivors forever.
+//!
 //! Parameters live as little-endian f32 byte slabs — the exact bytes a
 //! `PullReply` carries — so serving a pull is a bulk `extend_from_slice`
 //! with zero f32 conversions; gradient accumulation and SGD read/write the
@@ -52,7 +59,10 @@ use anyhow::{Context, Result};
 
 use crate::net::codec::{self, CodecId, CodecStats, CodecStatsTable};
 use crate::net::pool::{PoolStats, PooledSlab, SlabPool};
-use crate::net::{slab, Connection, Message, MessageRef, ShaperSpec, PROTOCOL_VERSION};
+use crate::net::{
+    slab, Connection, Message, MessageRef, PeerRole, ShaperSpec, PROTOCOL_VERSION,
+};
+use crate::ps::reply_cache::{ReplyCache, ReplyState};
 use crate::ps::sync::{self, PullGate, PushApply, SyncConfig, SyncMode, SyncPolicy};
 use crate::util::sync::{lock_or_die, wait_or_die};
 
@@ -101,6 +111,10 @@ struct LayerSlot {
     /// f32 accumulator for pushed gradient slabs.
     grad_sum: Vec<f32>,
     grad_count: usize,
+    /// Iteration of the gradients currently accumulating — what the
+    /// version clock advances to if a departure releases the barrier
+    /// before the last contribution arrives (`docs/TOPOLOGY.md`).
+    pending_iter: u64,
 }
 
 impl LayerSlot {
@@ -113,42 +127,19 @@ impl LayerSlot {
     }
 }
 
-/// State of one reply-cache entry (single-flight assembly).
-enum ReplyState {
-    /// A handler is assembling this reply; others wait on the condvar.
-    Building,
-    /// Assembled (slab + the snapshot's applied iteration); served to
-    /// every subsequent puller as a cheap clone.
-    Ready(Arc<PooledSlab>, u64),
-}
-
-/// The shared pull-reply broadcast cache, keyed by
-/// `(key_iter, lo, hi, codec)` — sessions speaking different codecs need
-/// different reply bytes, but every same-codec puller of a segment still
-/// shares one single-flight assembly. `key_iter` is the requested
-/// iteration under the BSP barrier (byte-identical replies per iteration,
-/// the historical key) and the shard's apply-event counter under SSP/ASP
-/// (a fresh apply invalidates the broadcast, so "freshest applied
-/// snapshot" and "assemble once per snapshot" coexist).
-struct ReplyCache {
-    entries: Mutex<HashMap<(u64, u32, u32, CodecId), ReplyState>>,
-    /// Signals entry transitions (Building → Ready/removed) and shutdown.
-    ready: Condvar,
-    /// Pulls answered from an already-assembled slab.
-    hits: AtomicU64,
-    /// Successful assemblies (== distinct `(iter, lo, hi)` keys served).
-    builds: AtomicU64,
-}
-
-impl ReplyCache {
-    fn new() -> ReplyCache {
-        ReplyCache {
-            entries: Mutex::new(HashMap::new()),
-            ready: Condvar::new(),
-            hits: AtomicU64::new(0),
-            builds: AtomicU64::new(0),
-        }
-    }
+/// Barrier-weight accounting for registered identities
+/// (`docs/TOPOLOGY.md`). A plain worker registers weight 1 (`Hello`); a
+/// regional aggregator registers its group's worker count (`AggHello`,
+/// protocol v5) and may hold several sessions under one identity (its
+/// pull and push connections), which must count toward the barrier —
+/// and toward departure — exactly once.
+struct Registry {
+    /// identity -> (barrier weight, live sessions sharing the identity).
+    peers: HashMap<u32, (u32, u32)>,
+    /// Total barrier weight of fully departed identities: the BSP barrier
+    /// shrinks by this much so survivors are not stalled forever by a
+    /// peer that hung up mid-iteration.
+    departed: u32,
 }
 
 struct Shared {
@@ -172,6 +163,12 @@ struct Shared {
     pool: Arc<SlabPool>,
     /// Assemble-once broadcast cache for BSP pull replies.
     reply_cache: ReplyCache,
+    /// Registered identities and their barrier weights (`Hello` /
+    /// `AggHello`): elastic BSP membership.
+    registry: Mutex<Registry>,
+    /// Total `Push` payload bytes received — the shard's tensor ingress,
+    /// what the tier bench compares flat vs tiered topologies on.
+    ingress_bytes: AtomicU64,
     /// Per-codec encode/decode counters (bytes saved, wall-clock, max
     /// quantization error) — exported through [`WireStats`].
     codec_stats: CodecStatsTable,
@@ -198,6 +195,9 @@ pub struct WireStats {
     pub reply_cache_builds: u64,
     /// Entries currently cached (bounded: stale iterations are evicted).
     pub reply_cache_entries: usize,
+    /// Total `Push` payload bytes this shard received (tensor ingress) —
+    /// the tier bench's flat-vs-tiered comparison metric.
+    pub ingress_bytes: u64,
     pub pool: PoolStats,
     /// Per-codec counters, indexed by [`CodecId::tag`]: raw vs wire bytes
     /// (bytes saved), encode/decode wall-clock, max quantization error.
@@ -237,6 +237,7 @@ fn wire_stats(shared: &Shared) -> WireStats {
         reply_cache_hits: shared.reply_cache.hits.load(Ordering::SeqCst),
         reply_cache_builds: shared.reply_cache.builds.load(Ordering::SeqCst),
         reply_cache_entries: lock_or_die(&shared.reply_cache.entries, "reply_cache.entries").len(),
+        ingress_bytes: shared.ingress_bytes.load(Ordering::SeqCst),
         pool: shared.pool.stats(),
         codecs: shared.codec_stats.snapshot(),
     }
@@ -282,6 +283,7 @@ impl ParamServer {
                             version: 0,
                             grad_sum: vec![0.0; n],
                             grad_count: 0,
+                            pending_iter: 0,
                         }),
                         Condvar::new(),
                     ),
@@ -302,6 +304,8 @@ impl ParamServer {
             layer_bytes,
             pool: SlabPool::new(),
             reply_cache: ReplyCache::new(),
+            registry: Mutex::new(Registry { peers: HashMap::new(), departed: 0 }),
+            ingress_bytes: AtomicU64::new(0),
             codec_stats: CodecStatsTable::new(),
             shutting_down: AtomicBool::new(false),
             connected: AtomicU32::new(0),
@@ -640,13 +644,91 @@ fn serve_pull(
     pull_reply(shared, key_iter, gate, lo, hi, codec_id)
 }
 
+/// The BSP barrier threshold right now: the configured fleet minus every
+/// fully departed identity's weight, floored at 1 so a shard with only
+/// departures left cannot divide training by zero. Callers read it
+/// *before* taking any `layer.slot` lock (declared order: the registry
+/// sits above the slots).
+fn barrier_target(shared: &Shared) -> usize {
+    let departed = lock_or_die(&shared.registry, "server.registry").departed as usize;
+    shared.cfg.workers.saturating_sub(departed).max(1)
+}
+
+/// Record a registered identity (weight 1 for a `Hello` worker, the group
+/// worker-count for an `AggHello` aggregator). Returns `true` when this is
+/// the identity's first live session — only then does the sync policy see
+/// a registration (an aggregator's pull and push connections share one
+/// clock). A returning identity re-arms the barrier weight it released on
+/// departure (elastic membership).
+fn register_identity(shared: &Shared, id: u32, weight: u32) -> bool {
+    let mut reg = lock_or_die(&shared.registry, "server.registry");
+    match reg.peers.get_mut(&id) {
+        Some(entry) => {
+            entry.1 += 1;
+            false
+        }
+        None => {
+            reg.departed = reg.departed.saturating_sub(weight);
+            reg.peers.insert(id, (weight, 1));
+            true
+        }
+    }
+}
+
+/// A registered session ended. When the identity's *last* session is gone
+/// its weight moves to `departed` (shrinking the BSP barrier), the sync
+/// policy drops its clock, and any barrier the departure just satisfied
+/// fires — a peer that hung up mid-iteration must not stall the
+/// survivors forever (`docs/TOPOLOGY.md`).
+fn deregister_identity(shared: &Shared, id: u32) {
+    let fully_departed = {
+        let mut reg = lock_or_die(&shared.registry, "server.registry");
+        match reg.peers.get_mut(&id) {
+            Some(entry) if entry.1 > 1 => {
+                entry.1 -= 1;
+                false
+            }
+            Some(_) => {
+                let (weight, _) = reg.peers.remove(&id).expect("entry just matched");
+                reg.departed += weight;
+                true
+            }
+            None => false,
+        }
+    };
+    if fully_departed {
+        shared.sync.deregister_worker(id);
+        release_satisfied_barriers(shared);
+    }
+}
+
+/// After a departure shrinks the barrier target, any slot whose
+/// accumulated weight already meets the new target applies its pending
+/// gradients and advances the version clock; every version waiter is
+/// woken either way to re-check its predicate. Only the BSP barrier ever
+/// leaves `grad_count > 0` (immediate modes zero it on every apply), so
+/// this is a no-op under SSP/ASP.
+fn release_satisfied_barriers(shared: &Shared) {
+    let target = barrier_target(shared);
+    let scale = shared.cfg.lr / shared.cfg.workers as f32;
+    for (m, cv) in shared.slots.values() {
+        let mut slot = lock_or_die(m, "layer.slot");
+        if slot.grad_count > 0 && slot.grad_count >= target {
+            slot.apply_sgd(scale);
+            slot.version = slot.pending_iter + 1;
+        }
+        cv.notify_all();
+    }
+}
+
 /// Consume a pushed gradient slab (borrowed straight from the receive
 /// scratch, decoded by the codec the frame is tagged with — per layer, so
 /// the offsets come from the immutable size map) the way the sync policy
-/// decided: `Barrier` accumulates and applies averaged SGD + advances the
-/// BSP clock on the last contribution; `Immediate` applies this gradient
-/// now (scaled `lr / workers`) and bumps the apply-event counter so the
-/// next fresh pull re-assembles.
+/// decided: `Barrier` accumulates `weight` contributions (1 for a worker,
+/// the group size for an aggregator's combined push) and applies averaged
+/// SGD + advances the BSP clock once the barrier target is met;
+/// `Immediate` applies this gradient now (scaled `lr / workers`) and
+/// bumps the apply-event counter so the next fresh pull re-assembles.
 // dynalint: hot-path
 fn apply_push(
     shared: &Shared,
@@ -656,9 +738,14 @@ fn apply_push(
     hi: u32,
     codec_id: CodecId,
     data: &[u8],
+    weight: u32,
 ) -> Result<()> {
     let wc = codec_id.codec();
+    // Read the elastic barrier target before any slot lock (lock order);
+    // `>=` because a shrinking target can leave an accumulator past it.
+    let target = barrier_target(shared);
     let scale = shared.cfg.lr / shared.cfg.workers as f32;
+    shared.ingress_bytes.fetch_add(data.len() as u64, Ordering::SeqCst);
     let mut off = 0usize;
     let (mut raw_total, mut dec_ns) = (0usize, 0u64);
     for l in lo as usize..=hi as usize {
@@ -678,8 +765,9 @@ fn apply_push(
         off += n;
         match apply {
             PushApply::Barrier => {
-                slot.grad_count += 1;
-                if slot.grad_count == shared.cfg.workers {
+                slot.grad_count += weight as usize;
+                slot.pending_iter = iter;
+                if slot.grad_count >= target {
                     // Averaged SGD, then advance the BSP clock.
                     slot.apply_sgd(scale);
                     slot.version = iter + 1;
@@ -710,6 +798,7 @@ fn apply_push(
 /// is released (replies are sent outside the borrow of the recv scratch).
 enum Action {
     Hello { worker: u32, version: u16 },
+    AggHello { role: PeerRole, group: u32, workers: u32, version: u16 },
     Reply(Message),
     ReplyShared { iter: u64, lo: u32, hi: u32, applied: u64, slab: Arc<PooledSlab> },
     Close,
@@ -721,14 +810,25 @@ fn handle_conn(mut conn: Connection, shared: &Shared) -> Result<()> {
     // ones). Replies are encoded with it; pushes are decoded by the codec
     // their frame is tagged with.
     let mut session_codec = CodecId::Fp32;
-    // The worker this session registered as (`Hello`): the identity the
-    // sync policy's per-worker clocks key on. Anonymous sessions are
-    // served but never gate anyone.
+    // The identity this session registered as (`Hello` worker id or
+    // `AggHello` group id): what the sync policy's per-worker clocks and
+    // the barrier-weight registry key on. Anonymous sessions are served
+    // but never gate anyone.
     let mut session_worker: Option<u32> = None;
-    let result = handle_conn_inner(&mut conn, shared, &mut session_codec, &mut session_worker);
-    // However the session ends, its clock must stop gating SSP peers.
+    // Barrier weight of this session's pushes: 1 for a worker, the group
+    // worker-count for a regional aggregator's combined pushes.
+    let mut session_weight: u32 = 1;
+    let result = handle_conn_inner(
+        &mut conn,
+        shared,
+        &mut session_codec,
+        &mut session_worker,
+        &mut session_weight,
+    );
+    // However the session ends, its clock must stop gating SSP peers and
+    // its weight must stop holding the BSP barrier open.
     if let Some(w) = session_worker {
-        shared.sync.deregister_worker(w);
+        deregister_identity(shared, w);
     }
     result
 }
@@ -739,6 +839,7 @@ fn handle_conn_inner(
     shared: &Shared,
     session_codec: &mut CodecId,
     session_worker: &mut Option<u32>,
+    session_weight: &mut u32,
 ) -> Result<()> {
     loop {
         let action = {
@@ -750,6 +851,9 @@ fn handle_conn_inner(
             };
             match msg {
                 MessageRef::Hello { worker, version } => Action::Hello { worker, version },
+                MessageRef::AggHello { role, group, workers, version } => {
+                    Action::AggHello { role, group, workers, version }
+                }
                 MessageRef::CodecPropose { pref } => {
                     // First supported preference wins; fp32 is the
                     // mandatory fallback, so mixed fleets keep training.
@@ -779,7 +883,7 @@ fn handle_conn_inner(
                     // decoded by the frame's own codec tag, applied as the
                     // sync policy decides (barrier vs immediate).
                     let apply = shared.sync.on_push(*session_worker, iter);
-                    apply_push(shared, apply, iter, lo, hi, codec, data)?;
+                    apply_push(shared, apply, iter, lo, hi, codec, data, *session_weight)?;
                     Action::Reply(Message::PushAck { iter, lo, hi })
                 }
                 MessageRef::Shutdown => Action::Close,
@@ -803,7 +907,33 @@ fn handle_conn_inner(
                      v{version}, server v{PROTOCOL_VERSION}"
                 );
                 *session_worker = Some(worker);
-                shared.sync.register_worker(worker);
+                *session_weight = 1;
+                if register_identity(shared, worker, 1) {
+                    shared.sync.register_worker(worker);
+                }
+                shared.connected.fetch_add(1, Ordering::SeqCst);
+            }
+            Action::AggHello { role, group, workers, version } => {
+                // Same contract as `Hello`: always answer with our
+                // version, then refuse a mismatched session.
+                conn.send(&Message::HelloAck {
+                    workers: shared.cfg.workers as u32,
+                    version: PROTOCOL_VERSION,
+                })?;
+                anyhow::ensure!(
+                    version == PROTOCOL_VERSION,
+                    "protocol version mismatch: {} {group} speaks \
+                     v{version}, server v{PROTOCOL_VERSION}",
+                    role.name()
+                );
+                // An aggregator's sessions (pull + push connections)
+                // share one identity: the sync policy sees one clock, the
+                // barrier registry counts the group weight once.
+                *session_worker = Some(group);
+                *session_weight = workers;
+                if register_identity(shared, group, workers) {
+                    shared.sync.register_worker(group);
+                }
                 shared.connected.fetch_add(1, Ordering::SeqCst);
             }
             Action::Reply(m) => conn.send(&m)?,
@@ -1525,5 +1655,133 @@ mod tests {
         // w0 -= (0.5/2) * (2 + 2) = 1; w1 untouched.
         assert_eq!(srv.snapshot(0).unwrap(), vec![0.0, 2.0]);
         assert_eq!(srv.live_handlers(), 2, "clamped cap admits the whole fleet");
+    }
+
+    // ---- Hierarchical aggregation tier (v5: AggHello, weighted pushes,
+    // ---- elastic barrier) ----
+
+    fn agg_hello(c: &mut Connection, group: u32, workers: u32) {
+        c.send(&Message::AggHello {
+            role: PeerRole::Regional,
+            group,
+            workers,
+            version: PROTOCOL_VERSION,
+        })
+        .unwrap();
+        assert!(matches!(c.recv().unwrap(), Message::HelloAck { .. }));
+    }
+
+    /// A regional aggregator's combined push carries its group's barrier
+    /// weight: a fleet of 4 completes with one weight-3 push plus one
+    /// plain worker push, and the ingress counter sees exactly the bytes
+    /// that crossed the cloud boundary.
+    #[test]
+    fn aggregator_push_carries_group_weight() {
+        let srv = start_two_layer(4);
+        let addr = srv.handle().addr;
+        let mut agg = connect(addr);
+        agg_hello(&mut agg, 100, 3);
+        agg.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 0,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&[4.0, 0.0]),
+        })
+        .unwrap();
+        assert!(matches!(agg.recv().unwrap(), Message::PushAck { .. }));
+        // 3 of 4 contributions: the barrier must hold.
+        assert_eq!(srv.snapshot(0).unwrap(), vec![1.0, 2.0]);
+        let mut w = connect(addr);
+        hello(&mut w, 3);
+        w.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 0,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&[4.0, 0.0]),
+        })
+        .unwrap();
+        assert!(matches!(w.recv().unwrap(), Message::PushAck { .. }));
+        // w0 -= (0.5/4) * (4 + 4) = 1.
+        assert_eq!(srv.snapshot(0).unwrap(), vec![0.0, 2.0]);
+        // Two fp32 pushes of 2 f32s each crossed the boundary.
+        assert_eq!(srv.wire_stats().ingress_bytes, 16);
+    }
+
+    /// Extends the SSP deregistration release to BSP: a fleet member that
+    /// hangs up mid-iteration shrinks the barrier target, applying the
+    /// survivors' accumulated gradients instead of parking them forever.
+    #[test]
+    fn bsp_departed_worker_releases_the_barrier() {
+        let srv = start_two_layer(2);
+        let addr = srv.handle().addr;
+        let mut alive = connect(addr);
+        let mut doomed = connect(addr);
+        hello(&mut alive, 0);
+        hello(&mut doomed, 1);
+        alive
+            .send(&Message::Push {
+                iter: 0,
+                lo: 0,
+                hi: 0,
+                codec: CodecId::Fp32,
+                data: slab::from_f32s(&[4.0, 0.0]),
+            })
+            .unwrap();
+        assert!(matches!(alive.recv().unwrap(), Message::PushAck { .. }));
+        // The survivor parks at the barrier for iteration 1.
+        alive.send(&Message::Pull { iter: 1, lo: 0, hi: 0 }).unwrap();
+        wait_until("the survivor to park at the barrier", || srv.pull_waiters() > 0);
+        // Worker 1 dies → target shrinks to 1 → the pending gradient
+        // applies (still scaled by the configured fleet: lr / 2) and the
+        // parked pull is released.
+        drop(doomed);
+        match alive.recv().unwrap() {
+            Message::PullReply { applied, data, .. } => {
+                assert_eq!(applied, 1);
+                assert_eq!(slab::to_f32s(&data), vec![0.0, 2.0]);
+            }
+            m => panic!("{m:?}"),
+        }
+    }
+
+    /// An aggregator's pull and push connections register the same group
+    /// identity: the weight counts once, survives one of the two sessions
+    /// closing, and departs only with the last.
+    #[test]
+    fn same_identity_sessions_count_weight_once() {
+        let srv = start_two_layer(3);
+        let addr = srv.handle().addr;
+        let mut agg_pull = connect(addr);
+        let mut agg_push = connect(addr);
+        agg_hello(&mut agg_pull, 100, 2);
+        agg_hello(&mut agg_push, 100, 2);
+        let mut w = connect(addr);
+        hello(&mut w, 2);
+        w.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 0,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&[4.0, 0.0]),
+        })
+        .unwrap();
+        assert!(matches!(w.recv().unwrap(), Message::PushAck { .. }));
+        assert_eq!(srv.snapshot(0).unwrap(), vec![1.0, 2.0], "1 of 3: barrier holds");
+        // One of the aggregator's two sessions closes: the group is still
+        // live, so the barrier target must not shrink.
+        let live_before = srv.live_handlers();
+        drop(agg_pull);
+        wait_until("the dropped session's handler to exit", || {
+            srv.live_handlers() < live_before
+        });
+        assert_eq!(srv.snapshot(0).unwrap(), vec![1.0, 2.0], "group still registered");
+        // The last session closes: weight 2 departs, target drops to 1,
+        // and the pending gradient applies.
+        drop(agg_push);
+        wait_until("the departed group to release the barrier", || {
+            srv.snapshot(0).unwrap() == vec![0.0, 2.0]
+        });
     }
 }

@@ -171,8 +171,9 @@ pub struct EdgeWorker {
 }
 
 /// Propose a session codec on one shard connection; returns what the
-/// server agreed to (its fallback is always fp32).
-fn propose_codec(conn: &mut Connection, pref: CodecId) -> Result<CodecId> {
+/// server agreed to (its fallback is always fp32). Shared with the
+/// regional aggregator's upstream sessions (`ps::agg`).
+pub(crate) fn propose_codec(conn: &mut Connection, pref: CodecId) -> Result<CodecId> {
     conn.send(&Message::CodecPropose { pref })?;
     match conn.recv()? {
         Message::CodecAgree { codec } => Ok(codec),
@@ -184,8 +185,9 @@ fn propose_codec(conn: &mut Connection, pref: CodecId) -> Result<CodecId> {
 /// server answers with its own, which must match the expected mode — two
 /// consistency models cannot train one job, so a mismatch is a loud
 /// connect failure, not a fallback. Returns the server's authoritative
-/// staleness bound.
-fn propose_sync(conn: &mut Connection, mode: SyncMode, bound: u32) -> Result<u32> {
+/// staleness bound. Shared with the regional aggregator's upstream
+/// sessions (`ps::agg`).
+pub(crate) fn propose_sync(conn: &mut Connection, mode: SyncMode, bound: u32) -> Result<u32> {
     conn.send(&Message::SyncPropose { mode, bound })?;
     match conn.recv()? {
         Message::SyncAgree { mode: got, bound } => {
@@ -204,8 +206,9 @@ fn propose_sync(conn: &mut Connection, mode: SyncMode, bound: u32) -> Result<u32
 /// Bounded retry-with-backoff for the worker→shard TCP connect: workers
 /// and servers boot concurrently, so a worker may dial a shard whose
 /// accept loop is not listening yet. Exponential backoff from 1 ms,
-/// capped at 100 ms per attempt and ~5 s overall.
-fn connect_with_retry(addr: &std::net::SocketAddr) -> Result<TcpStream> {
+/// capped at 100 ms per attempt and ~5 s overall. Shared with the
+/// regional aggregator's upstream sessions (`ps::agg`).
+pub(crate) fn connect_with_retry(addr: &std::net::SocketAddr) -> Result<TcpStream> {
     let deadline = Instant::now() + Duration::from_secs(5);
     let mut backoff = Duration::from_millis(1);
     loop {

@@ -19,6 +19,16 @@
 //! Iteration *throughput* is what relaxing consistency buys; what it
 //! costs (gradient staleness) is bounded by `N` under SSP and unbounded
 //! under ASP, which is why the sweep prints both.
+//!
+//! The **tier dimension** ([`TierSpec`]) overlays the hierarchical
+//! aggregation topology (`ps::agg`, docs/TOPOLOGY.md) on the same
+//! cluster: workers are chunked into groups behind regional aggregators,
+//! each hop with its own sync mode. The fan-in is group-complete by
+//! construction, so a group forwards at its slowest member's pace; the
+//! cloud hop's mode then decides how far a clean group may run ahead of
+//! the straggler's group, and the edge hop's mode how far a fast member
+//! may run ahead of its own group. Cloud ingress shrinks by ~1/group
+//! unconditionally — the throughput trade is what the sweep scores.
 
 use crate::ps::sync::SyncMode;
 
@@ -105,6 +115,91 @@ impl StragglerCluster {
         let it = self.throughput(mode, bound, k_slow);
         it.iters_per_sec() / bsp.iters_per_sec()
     }
+
+    /// Throughput of the hierarchical topology `tier` over a horizon of
+    /// `k_slow` slowest-worker iterations. Workers are chunked into
+    /// groups of `tier.group_size` in `slowdown` order (a trailing
+    /// partial group is fine). Per group:
+    ///
+    /// * the group's forwarding pace is its slowest member (the fan-in is
+    ///   group-complete regardless of the edge-hop mode);
+    /// * the **cloud** hop's mode bounds the group's completed
+    ///   iterations: lockstep with the slowest group under `bsp`,
+    ///   free-running within `cloud_bound` under `ssp`, free under `asp`;
+    /// * the **edge** hop's mode bounds each member against its own
+    ///   group's clock the same way.
+    pub fn tiered_throughput(&self, tier: TierSpec, k_slow: u64) -> TierThroughput {
+        assert!(k_slow >= 1 && tier.group_size >= 1);
+        let k = k_slow as f64;
+        let wall_ms = k * self.t_max();
+        let groups: Vec<&[f64]> = self.slowdown.chunks(tier.group_size).collect();
+        let mut iters = 0.0;
+        let mut max_lead = 0.0f64;
+        for g in &groups {
+            let t_g = g.iter().cloned().fold(f64::MIN, f64::max) * self.iter_ms;
+            let group_done = match tier.cloud_sync {
+                SyncMode::Bsp => k,
+                SyncMode::Ssp => (wall_ms / t_g).min(k + tier.cloud_bound as f64),
+                SyncMode::Asp => wall_ms / t_g,
+            };
+            for s in *g {
+                let free = wall_ms / (s * self.iter_ms);
+                let done = match tier.edge_sync {
+                    SyncMode::Bsp => group_done,
+                    SyncMode::Ssp => free.min(group_done + tier.edge_bound as f64),
+                    SyncMode::Asp => free,
+                };
+                iters += done;
+                max_lead = max_lead.max(done - k);
+            }
+        }
+        TierThroughput {
+            iters,
+            wall_ms,
+            max_lead,
+            cloud_ingress_ratio: groups.len() as f64 / self.slowdown.len() as f64,
+        }
+    }
+}
+
+/// The hierarchical-topology overlay for one tier-sweep cell: group size
+/// plus an independent sync mode (and SSP bound) per hop, mirroring the
+/// real tier's knobs (`--group-size`, `--sync`, `--agg-sync`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierSpec {
+    /// Workers per regional aggregator (1 = every worker its own group —
+    /// a pure relay).
+    pub group_size: usize,
+    /// edge → regional hop mode.
+    pub edge_sync: SyncMode,
+    /// SSP window on the edge hop (ignored elsewhere).
+    pub edge_bound: u32,
+    /// regional → cloud hop mode.
+    pub cloud_sync: SyncMode,
+    /// SSP window on the cloud hop (ignored elsewhere).
+    pub cloud_bound: u32,
+}
+
+/// Outcome of one (cluster, tier) cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierThroughput {
+    /// Cluster-aggregate completed iterations over the horizon.
+    pub iters: f64,
+    /// Horizon wall-clock, ms.
+    pub wall_ms: f64,
+    /// Max iterations any worker ran ahead of the slowest.
+    pub max_lead: f64,
+    /// Pushes crossing the cloud boundary per fleet iteration, relative
+    /// to the flat fleet: `groups / workers` (= `1 / group_size` when the
+    /// fleet divides evenly).
+    pub cloud_ingress_ratio: f64,
+}
+
+impl TierThroughput {
+    /// Completed iterations per second, cluster-aggregate.
+    pub fn iters_per_sec(&self) -> f64 {
+        self.iters / (self.wall_ms / 1e3)
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +268,89 @@ mod tests {
         assert!(s >= 1.5, "ssp speedup {s}");
         let a = c.speedup_vs_bsp(SyncMode::Asp, 0, 4);
         assert!(a >= s);
+    }
+
+    fn tier(gs: usize, edge: SyncMode, eb: u32, cloud: SyncMode, cb: u32) -> TierSpec {
+        TierSpec {
+            group_size: gs,
+            edge_sync: edge,
+            edge_bound: eb,
+            cloud_sync: cloud,
+            cloud_bound: cb,
+        }
+    }
+
+    #[test]
+    fn tiered_bsp_both_hops_matches_flat_bsp_at_any_group_size() {
+        let c = StragglerCluster::one_straggler(10.0, 8, 4.0);
+        let flat = c.throughput(SyncMode::Bsp, 0, 8);
+        for gs in [1usize, 2, 3, 4, 8] {
+            let t = c.tiered_throughput(tier(gs, SyncMode::Bsp, 0, SyncMode::Bsp, 0), 8);
+            assert!(close(t.iters, flat.iters), "gs {gs}: {} vs {}", t.iters, flat.iters);
+            assert!(close(t.max_lead, 0.0));
+        }
+    }
+
+    #[test]
+    fn group_size_one_with_bsp_edge_reduces_to_the_flat_cloud_mode() {
+        // A one-member group is a pure relay: its forwarding pace is its
+        // sole member, so the cloud hop's mode sees exactly the flat
+        // fleet — the overlay must not distort the baseline.
+        let c = StragglerCluster::one_straggler(10.0, 8, 4.0);
+        for mode in SyncMode::ALL {
+            let bound = if mode == SyncMode::Ssp { 8 } else { 0 };
+            let flat = c.throughput(mode, bound, 8);
+            let t = c.tiered_throughput(tier(1, SyncMode::Bsp, 0, mode, bound), 8);
+            assert!(close(t.iters, flat.iters), "{}: {} vs {}", mode.name(), t.iters, flat.iters);
+        }
+    }
+
+    #[test]
+    fn cloud_ingress_shrinks_with_the_group_size() {
+        let c = StragglerCluster::one_straggler(10.0, 8, 4.0);
+        for (gs, expect) in [(1usize, 1.0), (2, 0.5), (4, 0.25), (8, 0.125)] {
+            let t = c.tiered_throughput(tier(gs, SyncMode::Bsp, 0, SyncMode::Bsp, 0), 8);
+            assert!(close(t.cloud_ingress_ratio, expect), "gs {gs}");
+        }
+        // A trailing partial group still counts as a group.
+        let t = c.tiered_throughput(tier(3, SyncMode::Bsp, 0, SyncMode::Bsp, 0), 8);
+        assert!(close(t.cloud_ingress_ratio, 3.0 / 8.0));
+    }
+
+    #[test]
+    fn tiering_contains_the_straggler_to_its_own_group() {
+        // One 4× straggler, groups of 4, BSP edge + SSP cloud: the
+        // straggler's three group-mates are captive behind the group
+        // fan-in, but the clean group runs within the cloud window — the
+        // fleet lands strictly between flat BSP and flat SSP.
+        let c = StragglerCluster::one_straggler(10.0, 8, 4.0);
+        let flat_bsp = c.throughput(SyncMode::Bsp, 0, 8).iters_per_sec();
+        let flat_ssp = c.throughput(SyncMode::Ssp, 8, 8).iters_per_sec();
+        let t = c.tiered_throughput(tier(4, SyncMode::Bsp, 0, SyncMode::Ssp, 8), 8);
+        let tiered = t.iters_per_sec();
+        assert!(
+            flat_bsp < tiered && tiered < flat_ssp,
+            "bsp={flat_bsp} tiered={tiered} ssp={flat_ssp}"
+        );
+        assert!(t.max_lead <= 8.0 + 1e-12, "cloud window broken: {}", t.max_lead);
+    }
+
+    #[test]
+    fn relaxing_the_edge_hop_is_monotone() {
+        let c = StragglerCluster::one_straggler(10.0, 8, 4.0);
+        for cloud in SyncMode::ALL {
+            let cb = if cloud == SyncMode::Ssp { 8 } else { 0 };
+            let bsp = c.tiered_throughput(tier(4, SyncMode::Bsp, 0, cloud, cb), 8);
+            let ssp = c.tiered_throughput(tier(4, SyncMode::Ssp, 2, cloud, cb), 8);
+            let asp = c.tiered_throughput(tier(4, SyncMode::Asp, 0, cloud, cb), 8);
+            assert!(
+                bsp.iters <= ssp.iters + 1e-12 && ssp.iters <= asp.iters + 1e-12,
+                "cloud {}: bsp={} ssp={} asp={}",
+                cloud.name(),
+                bsp.iters,
+                ssp.iters,
+                asp.iters
+            );
+        }
     }
 }

@@ -7,10 +7,11 @@ use std::collections::HashMap;
 
 use anyhow::{Context, Result};
 
-use crate::config::Strategy;
+use crate::config::{Strategy, Tier};
 use crate::net::codec::CodecId;
 use crate::net::{LinkShaper, ShaperSpec};
 use crate::ps::{
+    agg::{AggConfig, RegionalAggregator},
     server::{ParamServer, ServerConfig, ServerOptions},
     sharding::ShardMap,
     sync::{SyncConfig, SyncMode},
@@ -67,6 +68,20 @@ pub struct TrainConfig {
     /// disable): workers carry per-layer quantization-error residuals
     /// into the next iteration's gradient (`net::codec::ef`).
     pub error_feedback: bool,
+    /// Fleet topology (`--tier {flat,regional}`, docs/TOPOLOGY.md):
+    /// `regional` boots `⌈workers / group_size⌉` aggregators (`ps::agg`)
+    /// between the edge fleet and the cloud shards. Workers then speak
+    /// `sync`/`codec` to their group's aggregator; the regional→cloud hop
+    /// runs `agg_sync`/`agg_codec` and the shards are started with
+    /// `agg_sync`.
+    pub tier: Tier,
+    /// Edge workers per regional aggregator (`--group-size`).
+    pub group_size: usize,
+    /// Regional→cloud hop sync mode (`--agg-sync`); shares
+    /// `staleness_bound` when it runs SSP.
+    pub agg_sync: SyncMode,
+    /// Regional→cloud hop wire codec (`--agg-codec`).
+    pub agg_codec: CodecId,
 }
 
 impl Default for TrainConfig {
@@ -91,6 +106,10 @@ impl Default for TrainConfig {
             staleness_bound: 0,
             handler_threads: ServerOptions::default().handler_threads,
             error_feedback: true,
+            tier: Tier::Flat,
+            group_size: 4,
+            agg_sync: SyncMode::Bsp,
+            agg_codec: CodecId::Fp32,
         }
     }
 }
@@ -136,6 +155,14 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
         bytes_per_ms: cfg.bytes_per_ms,
     };
     let sync = SyncConfig::new(cfg.sync, cfg.staleness_bound)?;
+    let agg_sync = SyncConfig::new(
+        cfg.agg_sync,
+        if cfg.agg_sync == SyncMode::Ssp { cfg.staleness_bound } else { 0 },
+    )?;
+    // Under the regional tier the cloud shards speak to aggregators, so
+    // they run the regional→cloud hop's mode; the workers' mode governs
+    // the edge→regional hop at the aggregators instead.
+    let shard_sync = if cfg.tier == Tier::Regional { agg_sync } else { sync };
     let mut servers = Vec::with_capacity(cfg.servers);
     for s in 0..cfg.servers {
         let layers: HashMap<usize, Vec<f32>> = shard
@@ -147,11 +174,38 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
             ServerConfig { workers: cfg.workers, lr: cfg.lr },
             layers,
             Some(downlink),
-            ServerOptions { sync, handler_threads: cfg.handler_threads },
+            ServerOptions { sync: shard_sync, handler_threads: cfg.handler_threads },
         )?);
     }
     let addrs: Vec<std::net::SocketAddr> =
         servers.iter().map(|s| s.handle().addr).collect();
+
+    // Regional tier (ps::agg, docs/TOPOLOGY.md): one aggregator per
+    // group of `group_size` workers, fronting every shard. Each worker
+    // then speaks only to its group's aggregator; the cloud sees one
+    // combined push per group (weighted by the group's worker count, so
+    // the shards' `lr / workers` scaling is unchanged).
+    let mut aggs: Vec<RegionalAggregator> = Vec::new();
+    if cfg.tier == Tier::Regional {
+        anyhow::ensure!(cfg.group_size >= 1, "group_size must be >= 1");
+        let layer_elems: Vec<usize> = init.iter().map(Vec::len).collect();
+        let mut assigned = 0;
+        while assigned < cfg.workers {
+            let chunk = cfg.group_size.min(cfg.workers - assigned);
+            aggs.push(RegionalAggregator::start(AggConfig {
+                // Group identities live past the worker-id space.
+                group: (cfg.workers + aggs.len()) as u32,
+                workers: chunk as u32,
+                upstream_addrs: addrs.clone(),
+                layer_elems: layer_elems.clone(),
+                downstream_sync: sync,
+                upstream_sync: agg_sync,
+                upstream_codec: cfg.agg_codec,
+                handler_threads: cfg.handler_threads,
+            })?);
+            assigned += chunk;
+        }
+    }
 
     let dataset = SyntheticDataset::new(
         cfg.seed,
@@ -164,11 +218,18 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     // client is Rc-based and not Send).
     let mut handles = Vec::with_capacity(cfg.workers);
     for w in 0..cfg.workers {
+        // A tiered worker sees a single "server": its group's aggregator,
+        // which fronts the full layer range and fans its traffic in/out.
+        let worker_addrs = if cfg.tier == Tier::Regional {
+            vec![aggs[w / cfg.group_size].addr()]
+        } else {
+            addrs.clone()
+        };
         let wcfg = WorkerConfig {
             id: w,
             strategy: cfg.strategy,
             artifacts_dir: cfg.artifacts_dir.clone(),
-            server_addrs: addrs.clone(),
+            server_addrs: worker_addrs,
             shaper: Some(LinkShaper::new(
                 cfg.setup_ms,
                 cfg.latency_ms,
@@ -212,6 +273,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
         if params.is_some() {
             final_params = params;
         }
+    }
+    for a in &mut aggs {
+        a.shutdown();
     }
     for s in &mut servers {
         s.shutdown();

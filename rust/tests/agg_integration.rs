@@ -1,0 +1,198 @@
+//! End-to-end hierarchical-tier tests over the real wire path
+//! (`ps::agg`, `docs/TOPOLOGY.md`): two regional aggregators, four edge
+//! workers each, against two cloud shards — with a *different* codec on
+//! each hop (int8 edge→regional, fp16 regional→cloud).
+//!
+//! The model is `sync_integration`'s distributed least-squares problem
+//! (`min_w ‖w − target‖²`), split across two layers so the round-robin
+//! shard striping is actually exercised: the aggregator must stitch each
+//! shared downstream reply from both shards' sub-replies and route each
+//! layer's combined push to its owning shard. The acceptance properties:
+//!
+//! * per-worker strictly decreasing loss, final loss far below initial —
+//!   through two codec conversions (cloud fp32 → fp16 → int8 on the pull
+//!   path, int8 → fp32-sum → fp16 on the push path);
+//! * BSP lockstep end to end: every reply's `applied` equals the
+//!   requested iteration, across both hops;
+//! * fan-in arithmetic: the cloud's ingress counters see one combined
+//!   push per layer per iteration, not one per worker.
+
+use std::collections::HashMap;
+use std::net::TcpStream;
+
+use dynacomm::net::codec::CodecId;
+use dynacomm::net::{slab, Connection, Message, PROTOCOL_VERSION};
+use dynacomm::ps::sync::{SyncConfig, SyncMode};
+use dynacomm::ps::{AggConfig, ParamServer, RegionalAggregator, ServerConfig};
+
+/// Two layers, striped over two shards (layer 0 → shard 0, layer 1 →
+/// shard 1). Uneven sizes so a stitching bug cannot cancel out.
+const LAYER_ELEMS: [usize; 2] = [600, 300];
+const GROUPS: usize = 2;
+const GROUP_SIZE: usize = 4;
+const WORKERS: usize = GROUPS * GROUP_SIZE;
+const ITERS: u64 = 12;
+const LR: f32 = 0.1;
+
+fn target(j: usize) -> f32 {
+    ((j as f32 * 0.7153).sin() * 997.0).fract().clamp(-1.0, 1.0)
+}
+
+fn loss_of(w: &[f32]) -> f32 {
+    w.iter().enumerate().map(|(j, v)| (v - target(j)).powi(2)).sum::<f32>()
+        / w.len() as f32
+}
+
+/// Boot the full tiered fleet: 2 cloud shards (BSP, expecting the total
+/// fleet), 2 regional aggregators (BSP downstream, BSP + fp16 upstream).
+fn start_tier() -> (Vec<ParamServer>, Vec<RegionalAggregator>) {
+    let shards: Vec<ParamServer> = (0..2)
+        .map(|s| {
+            // Shard `s` owns layer `s` (round-robin over 2 layers).
+            let mut layers = HashMap::new();
+            layers.insert(s, vec![0.0f32; LAYER_ELEMS[s]]);
+            ParamServer::start(ServerConfig { workers: WORKERS, lr: LR }, layers, None)
+                .unwrap()
+        })
+        .collect();
+    let upstream_addrs: Vec<_> = shards.iter().map(|s| s.handle().addr).collect();
+    let aggs = (0..GROUPS)
+        .map(|g| {
+            RegionalAggregator::start(AggConfig {
+                // Group ids live past the worker-id space.
+                group: 100 + g as u32,
+                workers: GROUP_SIZE as u32,
+                upstream_addrs: upstream_addrs.clone(),
+                layer_elems: LAYER_ELEMS.to_vec(),
+                downstream_sync: SyncConfig::default(),
+                upstream_sync: SyncConfig::default(),
+                upstream_codec: CodecId::Fp16,
+                handler_threads: GROUP_SIZE + 2,
+            })
+            .unwrap()
+        })
+        .collect();
+    (shards, aggs)
+}
+
+/// Register an edge session at its aggregator: version handshake, BSP
+/// sync agreement, int8 codec negotiation.
+fn register(addr: std::net::SocketAddr, worker: u32) -> Connection {
+    let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+    conn.send(&Message::Hello { worker, version: PROTOCOL_VERSION }).unwrap();
+    match conn.recv().unwrap() {
+        Message::HelloAck { workers, version } => {
+            assert_eq!(version, PROTOCOL_VERSION);
+            assert_eq!(workers, GROUP_SIZE as u32, "the aggregator fronts the group");
+        }
+        m => panic!("{m:?}"),
+    }
+    conn.send(&Message::SyncPropose { mode: SyncMode::Bsp, bound: 0 }).unwrap();
+    match conn.recv().unwrap() {
+        Message::SyncAgree { mode, .. } => assert_eq!(mode, SyncMode::Bsp),
+        m => panic!("{m:?}"),
+    }
+    conn.send(&Message::CodecPropose { pref: CodecId::Int8 }).unwrap();
+    match conn.recv().unwrap() {
+        Message::CodecAgree { codec } => assert_eq!(codec, CodecId::Int8),
+        m => panic!("{m:?}"),
+    }
+    conn
+}
+
+/// One tiered train step: pull both layers through the aggregator (one
+/// int8 reply stitched from both shards), measure loss, push the exact
+/// gradient int8-encoded per layer. Returns (applied, loss).
+fn train_step(conn: &mut Connection, iter: u64) -> (u64, f32) {
+    let wc = CodecId::Int8.codec();
+    conn.send(&Message::Pull { iter, lo: 0, hi: 1 }).unwrap();
+    let (applied, data) = match conn.recv().unwrap() {
+        Message::PullReply { applied, codec, data, .. } => {
+            assert_eq!(codec, CodecId::Int8, "downstream hop speaks int8");
+            (applied, data)
+        }
+        m => panic!("{m:?}"),
+    };
+    // Per-layer int8 chunks, ascending: decode into one flat w.
+    let split = wc.wire_len(slab::ELEM * LAYER_ELEMS[0]);
+    assert_eq!(data.len(), split + wc.wire_len(slab::ELEM * LAYER_ELEMS[1]));
+    let mut raw = Vec::new();
+    wc.decode(&data[..split], &mut raw).unwrap();
+    wc.decode(&data[split..], &mut raw).unwrap();
+    let w = slab::to_f32s(&raw);
+    let loss = loss_of(&w);
+    let grad: Vec<f32> =
+        w.iter().enumerate().map(|(j, v)| 2.0 * (v - target(j))).collect();
+    let mut wire = Vec::new();
+    wc.encode(&slab::from_f32s(&grad[..LAYER_ELEMS[0]]), &mut wire);
+    wc.encode(&slab::from_f32s(&grad[LAYER_ELEMS[0]..]), &mut wire);
+    conn.send(&Message::Push { iter, lo: 0, hi: 1, codec: CodecId::Int8, data: wire })
+        .unwrap();
+    assert!(matches!(conn.recv().unwrap(), Message::PushAck { .. }));
+    (applied, loss)
+}
+
+/// The tiered acceptance test: 2 aggregators × 4 workers × 2 shards with
+/// mixed per-hop codecs converge in BSP lockstep, and the cloud sees the
+/// group-combined traffic, not the per-worker traffic.
+#[test]
+fn tiered_training_converges_with_mixed_per_hop_codecs() {
+    let (shards, aggs) = start_tier();
+    let threads: Vec<_> = (0..WORKERS as u32)
+        .map(|w| {
+            let agg_addr = aggs[w as usize / GROUP_SIZE].addr();
+            std::thread::spawn(move || {
+                let mut conn = register(agg_addr, w);
+                let mut losses = Vec::with_capacity(ITERS as usize);
+                for iter in 0..ITERS {
+                    let (applied, loss) = train_step(&mut conn, iter);
+                    assert_eq!(applied, iter, "worker {w}: BSP lockstep broken");
+                    losses.push(loss);
+                }
+                losses
+            })
+        })
+        .collect();
+    let curves: Vec<Vec<f32>> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+    for (w, losses) in curves.iter().enumerate() {
+        assert_eq!(losses.len(), ITERS as usize);
+        for k in 1..losses.len() {
+            assert!(
+                losses[k] < losses[k - 1],
+                "worker {w} loss did not strictly decrease at iter {k}: {losses:?}"
+            );
+        }
+        assert!(
+            losses[losses.len() - 1] < 0.2 * losses[0],
+            "worker {w} not enough progress: {losses:?}"
+        );
+    }
+    // The barrier makes every worker's curve identical — across groups
+    // too, since both hops run BSP.
+    for c in &curves[1..] {
+        assert_eq!(c, &curves[0], "workers diverged under tiered BSP");
+    }
+    // Fan-in arithmetic at the cloud boundary: each shard's ingress is
+    // GROUPS combined fp16 pushes per iteration of its one owned layer —
+    // a flat fleet would have sent WORKERS pushes instead (4× the bytes).
+    for (s, shard) in shards.iter().enumerate() {
+        let per_push = CodecId::Fp16.wire_len(slab::ELEM * LAYER_ELEMS[s]) as u64;
+        assert_eq!(
+            shard.wire_stats().ingress_bytes,
+            ITERS * GROUPS as u64 * per_push,
+            "shard {s}: cloud ingress must be per-group, not per-worker"
+        );
+    }
+    // Each aggregator assembled one shared reply per iteration and served
+    // the other three group members from it.
+    for (g, agg) in aggs.iter().enumerate() {
+        let st = agg.stats();
+        assert_eq!(st.reply_cache_builds, ITERS, "group {g}: one upstream round/iter");
+        assert_eq!(
+            st.reply_cache_hits,
+            ITERS * (GROUP_SIZE as u64 - 1),
+            "group {g}: the rest of the group must share the assembly"
+        );
+        assert_eq!(st.forwarded_pushes, ITERS * 2, "group {g}: one push per layer/iter");
+    }
+}

@@ -3,7 +3,7 @@
 //! must round-trip everything they produce.
 
 use dynacomm::net::codec::CodecId;
-use dynacomm::net::{Message, PROTOCOL_VERSION};
+use dynacomm::net::{Message, PeerRole, PROTOCOL_VERSION};
 use dynacomm::ps::sync::SyncMode;
 use dynacomm::util::json::Json;
 use dynacomm::util::rng::Rng;
@@ -84,7 +84,13 @@ fn random_message(rng: &mut Rng) -> Message {
     let sync_mode = SyncMode::ALL[rng.below(3)];
     let sync_bound =
         if sync_mode == SyncMode::Ssp { rng.below(1 << 10) as u32 } else { 0 };
-    match rng.below(11) {
+    // v5 registration frames: an edge role always announces exactly one
+    // worker; a regional aggregator any non-zero group size (the decoder
+    // rejects everything else — covered separately below).
+    let role = if rng.bool() { PeerRole::Regional } else { PeerRole::Edge };
+    let agg_workers =
+        if role == PeerRole::Edge { 1 } else { 1 + rng.below(64) as u32 };
+    match rng.below(12) {
         0 => Message::Pull { iter: rng.next_u64(), lo: rng.below(100) as u32, hi: rng.below(100) as u32 },
         1 => Message::PullReply {
             iter: rng.next_u64(),
@@ -108,6 +114,12 @@ fn random_message(rng: &mut Rng) -> Message {
         7 => Message::CodecAgree { codec: CodecId::ALL[rng.below(3)] },
         8 => Message::SyncPropose { mode: sync_mode, bound: sync_bound },
         9 => Message::SyncAgree { mode: sync_mode, bound: sync_bound },
+        10 => Message::AggHello {
+            role,
+            group: rng.below(1 << 10) as u32,
+            workers: agg_workers,
+            version: rng.below(1 << 16) as u16,
+        },
         _ => Message::Shutdown,
     }
 }
@@ -178,6 +190,14 @@ fn exemplar_messages() -> Vec<Message> {
         Message::CodecAgree { codec: CodecId::Int8 },
         Message::SyncPropose { mode: SyncMode::Ssp, bound: 4 },
         Message::SyncAgree { mode: SyncMode::Bsp, bound: 0 },
+        // v5: appended last so the positional mutation offsets above stay
+        // stable across protocol bumps.
+        Message::AggHello {
+            role: PeerRole::Regional,
+            group: 9,
+            workers: 4,
+            version: PROTOCOL_VERSION,
+        },
     ]
 }
 
@@ -188,12 +208,12 @@ fn decoder_rejects_mutations_of_every_frame_tag() {
     let msgs = exemplar_messages();
 
     // Coverage gate: the exemplars span exactly the contiguous tag space
-    // 1..=11 with no duplicates, so adding a frame to the protocol forces
+    // 1..=12 with no duplicates, so adding a frame to the protocol forces
     // an exemplar (and the mutations below) for it.
     let mut tags: Vec<u8> = msgs.iter().map(|m| m.opcode()).collect();
     tags.sort_unstable();
     tags.dedup();
-    assert_eq!(tags, (1u8..=11).collect::<Vec<u8>>());
+    assert_eq!(tags, (1u8..=12).collect::<Vec<u8>>());
 
     for m in &msgs {
         let enc = m.encode();
@@ -239,6 +259,30 @@ fn decoder_rejects_mutations_of_every_frame_tag() {
             "{m:?} with forged negotiation tag decoded"
         );
     }
+    // AggHello (v5) layout: role u8 at payload offset 1, group u32 at 2,
+    // workers u32 at 6 — so enc[5] is the role tag and enc[10..14] the
+    // worker count. Role tag 2 names nothing; a zero worker count and an
+    // edge role announcing a whole group are both malformed.
+    let agg = &msgs[11];
+    assert_eq!(agg.opcode(), 12, "exemplar order drifted");
+    let mut enc = agg.encode();
+    enc[5] = 2;
+    assert!(
+        Message::decode(&enc[4..]).is_err(),
+        "AggHello with unknown role tag decoded"
+    );
+    let mut enc = agg.encode();
+    enc[10..14].fill(0);
+    assert!(
+        Message::decode(&enc[4..]).is_err(),
+        "AggHello with zero worker count decoded"
+    );
+    let mut enc = agg.encode();
+    enc[5] = 0; // edge role, but the exemplar announces 4 workers
+    assert!(
+        Message::decode(&enc[4..]).is_err(),
+        "edge-role AggHello announcing a group decoded"
+    );
 }
 
 /// v4 sync frames under random payload fuzzing: the decoder accepts
