@@ -46,7 +46,7 @@ use dynacomm::net::codec::CodecId;
 use dynacomm::net::{slab, Connection, Message, PROTOCOL_VERSION};
 use dynacomm::ps::sync::{SyncConfig, SyncMode};
 use dynacomm::ps::{
-    AggConfig, ParamServer, RegionalAggregator, ServerConfig, ServerOptions,
+    AggConfig, Checkpoint, ParamServer, RegionalAggregator, ServerConfig, ServerOptions,
 };
 use dynacomm::util::json::Json;
 
@@ -579,6 +579,7 @@ fn main() {
                 upstream_sync: SyncConfig::default(),
                 upstream_codec: CodecId::Fp32,
                 handler_threads: TIER_GROUP_SIZE + 2,
+                io_timeout_ms: 0,
             })
             .unwrap()
         })
@@ -675,6 +676,58 @@ fn main() {
         fleet_ips(secs_tiered)
     );
 
+    // --- Checkpoint matrix: shard checkpoint write / parse / restore-boot
+    // wall-clock (`ps::checkpoint`, docs/FAULTS.md) on the reply-bench
+    // shard shape (LAYERS x LAYER_F32S = 2 MiB of parameters). The write
+    // number includes durability (tmp + fsync + rename); the roundtrip is
+    // asserted byte-identical — the same slab-for-slab guarantee the
+    // restore path promises.
+    let ck_reps = if common::fast_mode() { 3 } else { 10 };
+    let ck_dir = std::env::temp_dir()
+        .join(format!("dynacomm-bench-ckpt-{}", std::process::id()));
+    std::fs::create_dir_all(&ck_dir).unwrap();
+    let ck_path = ck_dir.join("shard-0.ckpt");
+    let ck_path2 = ck_dir.join("shard-0.rewrite.ckpt");
+    let ck_cfg = ServerConfig { workers: WORKERS, lr: 0.1 };
+    let srv = ParamServer::start(ck_cfg, layer_init(), None).unwrap();
+    srv.write_checkpoint(&ck_path).unwrap(); // warm the file + page cache
+    let t = Instant::now();
+    for _ in 0..ck_reps {
+        srv.write_checkpoint(&ck_path).unwrap();
+    }
+    let secs_ck_write = t.elapsed().as_secs_f64() / ck_reps as f64;
+    drop(srv);
+    let ck_bytes = std::fs::metadata(&ck_path).unwrap().len();
+    let t = Instant::now();
+    let mut ck = Checkpoint::read_from(&ck_path).unwrap();
+    for _ in 1..ck_reps {
+        ck = Checkpoint::read_from(&ck_path).unwrap();
+    }
+    let secs_ck_read = t.elapsed().as_secs_f64() / ck_reps as f64;
+    let t = Instant::now();
+    let restored =
+        ParamServer::start_restored(ck_cfg, None, ServerOptions::default(), &ck)
+            .unwrap();
+    let secs_ck_boot = t.elapsed().as_secs_f64();
+    restored.write_checkpoint(&ck_path2).unwrap();
+    assert_eq!(
+        std::fs::read(&ck_path).unwrap(),
+        std::fs::read(&ck_path2).unwrap(),
+        "checkpoint roundtrip must be byte-identical"
+    );
+    drop(restored);
+    let _ = std::fs::remove_dir_all(&ck_dir);
+    let ck_mb = |secs: f64| reply_bytes() as f64 / (1 << 20) as f64 / secs;
+    println!(
+        "  checkpoint matrix ({:.1} MiB params, {ck_bytes} B on disk): write \
+         {:>6.0} MB/s (fsynced)  parse {:>6.0} MB/s  restore boot {:.1} ms  \
+         roundtrip byte-identical",
+        reply_bytes() as f64 / (1 << 20) as f64,
+        ck_mb(secs_ck_write),
+        ck_mb(secs_ck_read),
+        secs_ck_boot * 1e3,
+    );
+
     let json = Json::obj(vec![
         ("workers", Json::Num(WORKERS as f64)),
         ("layers", Json::Num(LAYERS as f64)),
@@ -758,6 +811,17 @@ fn main() {
                     ("ingress_saved_ratio", Json::Num(tier_ratio)),
                 ]),
             ]),
+        ),
+        (
+            "checkpoint_matrix",
+            Json::Arr(vec![Json::obj(vec![
+                ("param_bytes", Json::Num(reply_bytes() as f64)),
+                ("file_bytes", Json::Num(ck_bytes as f64)),
+                ("write_mb_per_s", Json::Num(ck_mb(secs_ck_write))),
+                ("parse_mb_per_s", Json::Num(ck_mb(secs_ck_read))),
+                ("restore_boot_ms", Json::Num(secs_ck_boot * 1e3)),
+                ("roundtrip_byte_identical", Json::Num(1.0)),
+            ])]),
         ),
         ("fast_mode", Json::Num(if common::fast_mode() { 1.0 } else { 0.0 })),
     ]);

@@ -342,11 +342,13 @@ mod tests {
         let text = include_str!("../dynalint.toml")
             .lines()
             .filter(|l| {
-                // Drop the full v5 table; re-pin a minimal one below.
-                let in_frames =
-                    ["PullReply", "PushAck", "Hello", "HelloAck", "Codec", "Sync", "Agg"]
-                        .iter()
-                        .any(|p| l.starts_with(p));
+                // Drop the full v6 table; re-pin a minimal one below.
+                let in_frames = [
+                    "PullReply", "PushAck", "Hello", "HelloAck", "Codec", "Sync",
+                    "Agg", "Snapshot",
+                ]
+                .iter()
+                .any(|p| l.starts_with(p));
                 !in_frames
             })
             .collect::<Vec<_>>()
@@ -405,6 +407,21 @@ mod tests {
         assert_eq!(findings.len(), 1, "{rendered:?}");
         assert!(
             rendered[0].contains("`AggHello` => 12 is not in the manifest frame table"),
+            "{rendered:?}"
+        );
+    }
+
+    /// Same drift for the v6 fault-tolerance frames: a `SnapshotReq`
+    /// with opcode and decoder arms but no manifest entry is exactly one
+    /// missing-manifest-entry finding.
+    #[test]
+    fn undeclared_snapshot_frame_is_a_missing_manifest_entry() {
+        let findings = run_transport(include_str!("../tests/wire_bad_snapshot.rs"));
+        let rendered: Vec<String> = findings.iter().map(|f| f.render()).collect();
+        assert_eq!(findings.len(), 1, "{rendered:?}");
+        assert!(
+            rendered[0]
+                .contains("`SnapshotReq` => 13 is not in the manifest frame table"),
             "{rendered:?}"
         );
     }

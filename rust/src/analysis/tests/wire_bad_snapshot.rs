@@ -1,8 +1,8 @@
-// Fixture: the wire_good protocol plus an undeclared hierarchical-tier
-// frame — `AggHello` has opcode and decoder arms (tag 12, full coverage,
-// aligned version) but no entry in the test manifest's frame table, the
-// exact drift a half-landed protocol bump leaves behind. Exactly one
-// finding: the missing-manifest-entry report for `AggHello`.
+// Fixture: the wire_good protocol plus an undeclared fault-tolerance
+// frame — `SnapshotReq` has opcode and decoder arms (tag 13, full
+// coverage, aligned version) but no entry in the test manifest's frame
+// table, the exact drift a half-landed v6 bump leaves behind. Exactly
+// one finding: the missing-manifest-entry report for `SnapshotReq`.
 // Never compiled — loaded via include_str! by tests.
 
 pub const PROTOCOL_VERSION: u16 = 6;
@@ -13,7 +13,7 @@ impl MessageRef<'_> {
             MessageRef::Pull { .. } => 1,
             MessageRef::Push { .. } => 3,
             MessageRef::Shutdown => 7,
-            MessageRef::AggHello { .. } => 12,
+            MessageRef::SnapshotReq { .. } => 13,
         }
     }
 
@@ -23,7 +23,7 @@ impl MessageRef<'_> {
             1 => MessageRef::Pull { iter: 0 },
             3 => MessageRef::Push { iter: 0 },
             7 => MessageRef::Shutdown,
-            12 => MessageRef::AggHello { role: 1 },
+            13 => MessageRef::SnapshotReq { lo: 0 },
             _ => bail!("unknown opcode {op}"),
         })
     }

@@ -1,9 +1,9 @@
 // Fixture: a consistent three-frame protocol matching the test manifest
-// (Pull = 1, Push = 3, Shutdown = 7, version 5) — unique tags, full
+// (Pull = 1, Push = 3, Shutdown = 7, version 6) — unique tags, full
 // decoder coverage with a bail wildcard, aligned PROTOCOL_VERSION.
 // Never compiled — loaded via include_str! by tests.
 
-pub const PROTOCOL_VERSION: u16 = 5;
+pub const PROTOCOL_VERSION: u16 = 6;
 
 impl MessageRef<'_> {
     pub fn opcode(&self) -> u8 {

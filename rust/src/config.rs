@@ -194,6 +194,13 @@ pub struct SystemConfig {
     /// Regional→cloud hop wire codec (`--agg-codec`); the edge→regional
     /// hop keeps using `codec`.
     pub agg_codec: CodecId,
+    /// Pull/push I/O deadline in ms (`--io-timeout-ms`, `docs/FAULTS.md`):
+    /// armed on every worker→shard and aggregator→cloud socket so a dead
+    /// peer fails the blocked read within the window instead of hanging
+    /// the fleet. 0 (the default) disables. Under BSP the deadline must
+    /// comfortably exceed the slowest straggler's barrier wait, which
+    /// travels over the same sockets.
+    pub io_timeout_ms: u64,
 }
 
 /// Parse a `gain-threshold-ms` spelling: `auto` (case-insensitive) or a
@@ -224,6 +231,7 @@ impl Default for SystemConfig {
             group_size: 4,
             agg_sync: SyncMode::Bsp,
             agg_codec: CodecId::Fp32,
+            io_timeout_ms: 0,
         }
     }
 }
@@ -283,6 +291,7 @@ impl SystemConfig {
             self.agg_codec = CodecId::parse(s)
                 .unwrap_or_else(|| panic!("unknown codec '{s}' (fp32|fp16|int8)"));
         }
+        self.io_timeout_ms = args.usize("io-timeout-ms", self.io_timeout_ms as usize) as u64;
         assert!(self.group_size >= 1, "--group-size must be >= 1");
         self.agg_sync_config().unwrap_or_else(|e| panic!("{e}"));
         self
@@ -347,6 +356,7 @@ impl SystemConfig {
             c.agg_codec = CodecId::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown codec '{s}'"))?;
         }
+        c.io_timeout_ms = num("io_timeout_ms", c.io_timeout_ms as f64) as u64;
         anyhow::ensure!(c.group_size >= 1, "group_size must be >= 1");
         c.agg_sync_config()?;
         Ok(c)
@@ -371,6 +381,7 @@ impl SystemConfig {
             ("group_size", Json::Num(self.group_size as f64)),
             ("agg_sync", Json::Str(self.agg_sync.name().to_string())),
             ("agg_codec", Json::Str(self.agg_codec.name().to_string())),
+            ("io_timeout_ms", Json::Num(self.io_timeout_ms as f64)),
             (
                 "gain_threshold_ms",
                 if self.gain_threshold_ms < 0.0 {
@@ -522,6 +533,23 @@ mod tests {
         // A zero group size is refused at config load.
         let bad = r#"{"tier":"regional","group_size":0}"#;
         assert!(SystemConfig::from_json(&Json::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn io_timeout_roundtrips_flags_and_json() {
+        // Default: no deadline.
+        assert_eq!(SystemConfig::default().io_timeout_ms, 0);
+        // JSON round-trip.
+        let c = SystemConfig { io_timeout_ms: 2_500, ..SystemConfig::default() };
+        let j = c.to_json();
+        let back = SystemConfig::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.io_timeout_ms, 2_500);
+        // Flags overlay.
+        let args = Args::parse(
+            ["--io-timeout-ms", "750"].iter().map(|s| s.to_string()),
+        );
+        assert_eq!(SystemConfig::default().apply_args(&args).io_timeout_ms, 750);
     }
 
     #[test]

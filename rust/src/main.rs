@@ -76,6 +76,15 @@ FLAGS (defaults = the paper's testbed):
                         edge hop keeps --codec)
   --handler-threads N   per-shard handler pool cap; extra connections wait
                         in the accept backlog (backpressure) (train)
+  --io-timeout-ms N     pull/push I/O deadline on worker->shard and
+                        aggregator->cloud sockets, ms; 0 disables. A dead
+                        peer fails the blocked read within the window
+                        (docs/FAULTS.md) (train)
+  --checkpoint-dir DIR  each shard writes shard-{s}.ckpt here periodically
+                        and on shutdown (train)
+  --checkpoint-every-ms N   periodic checkpoint interval, ms (1000) (train)
+  --restore DIR         resume shards byte-identically from the
+                        shard-{s}.ckpt files in DIR (train)
   --no-error-feedback   disable EF-SGD residuals for lossy codecs (train)
   --gain-threshold-ms F skip DynaComm's DP re-plan when the predicted gain
                         is under F ms (0 = re-plan every epoch; `auto`, the
@@ -210,6 +219,11 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.agg_codec =
             dynacomm::net::codec::CodecId::parse(s).context("bad --agg-codec")?;
     }
+    cfg.io_timeout_ms = args.usize("io-timeout-ms", cfg.io_timeout_ms as usize) as u64;
+    cfg.checkpoint_dir = args.get("checkpoint-dir").map(str::to_string);
+    cfg.checkpoint_every_ms =
+        args.usize("checkpoint-every-ms", cfg.checkpoint_every_ms as usize) as u64;
+    cfg.restore_dir = args.get("restore").map(str::to_string);
     if cfg.tier == dynacomm::config::Tier::Regional {
         println!(
             "tier=regional group-size={} agg-sync={} agg-codec={}",

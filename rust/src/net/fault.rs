@@ -1,0 +1,403 @@
+//! Deterministic fault injection for the wire (`docs/FAULTS.md`).
+//!
+//! A [`FaultProxy`] is a frame-aware TCP proxy: it listens on loopback,
+//! forwards every `[u32 len][payload]` frame (`docs/WIRE.md`) between each
+//! accepted client and the real target, and — per frame — may delay it,
+//! sever the connection cleanly between frames, or kill it **mid-frame**
+//! (header plus half the payload, then RST-ish shutdown), exercising every
+//! partial-read path in the transport.
+//!
+//! The schedule is a **pure function** of
+//! `(seed, connection index, direction, frame index, opcode)` — no shared
+//! RNG stream, no timing dependence — so the same seed replays the same
+//! faults no matter how threads interleave, and two runs of the same
+//! scenario can be asserted identical event-for-event
+//! (`tests/churn_integration.rs`). Every decision that fires is recorded
+//! in an event log ordered by `(conn, dir, frame)`.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::util::rng::Rng;
+use crate::util::sync::lock_or_die;
+
+/// What the proxy does to one forwarded frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Forward untouched.
+    Pass,
+    /// Forward after sleeping this many milliseconds.
+    DelayMs(u64),
+    /// Drop the frame and sever the connection between frames — a clean
+    /// peer death at a frame boundary.
+    DropConn,
+    /// Forward the header and half the payload, then sever — a peer dying
+    /// mid-write, the worst case for the receiver's framing.
+    KillMidFrame,
+}
+
+/// Which way a frame was traveling when the decision was made.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Dir {
+    /// Client → target (requests).
+    Up,
+    /// Target → client (replies).
+    Down,
+}
+
+/// One fired (non-`Pass`) decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    /// Accept-order index of the proxied connection.
+    pub conn: u32,
+    pub dir: Dir,
+    /// Frame index within `(conn, dir)`, from 0.
+    pub frame: u64,
+    /// The frame's wire opcode (`docs/WIRE.md`).
+    pub opcode: u8,
+    pub action: FaultAction,
+}
+
+/// The fault schedule's knobs. Probabilities are evaluated in the order
+/// `drop_conn`, `kill_mid_frame`, `delay` from a single uniform draw, so
+/// they must sum to at most 1.
+#[derive(Debug, Clone)]
+pub struct FaultSpec {
+    /// Everything derives from this: same seed, same faults.
+    pub seed: u64,
+    /// Probability a frame severs its connection at the frame boundary.
+    pub drop_conn_p: f64,
+    /// Probability a frame is cut off mid-payload.
+    pub kill_mid_frame_p: f64,
+    /// Probability a frame is delayed.
+    pub delay_p: f64,
+    /// Upper bound (inclusive) on an injected delay, ms.
+    pub delay_max_ms: u64,
+    /// Restrict faults to these opcodes; `None` targets every frame.
+    /// Frames outside the set always pass (and log nothing).
+    pub only_opcodes: Option<Vec<u8>>,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec {
+            seed: 0,
+            drop_conn_p: 0.0,
+            kill_mid_frame_p: 0.0,
+            delay_p: 0.0,
+            delay_max_ms: 0,
+            only_opcodes: None,
+        }
+    }
+}
+
+impl FaultSpec {
+    /// The deterministic per-frame decision — a pure function of the
+    /// spec and the frame's coordinates, usable without a proxy (unit
+    /// tests pin schedules against it).
+    pub fn decide(&self, conn: u32, dir: Dir, frame: u64, opcode: u8) -> FaultAction {
+        if let Some(ops) = &self.only_opcodes {
+            if !ops.contains(&opcode) {
+                return FaultAction::Pass;
+            }
+        }
+        // FNV-1a over the coordinates keys an independent PRNG per frame:
+        // the decision cannot depend on traffic order or thread timing.
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ self.seed;
+        for b in conn
+            .to_le_bytes()
+            .into_iter()
+            .chain([dir as u8, opcode])
+            .chain(frame.to_le_bytes())
+        {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+        let mut rng = Rng::new(h);
+        let x = rng.f64();
+        if x < self.drop_conn_p {
+            FaultAction::DropConn
+        } else if x < self.drop_conn_p + self.kill_mid_frame_p {
+            FaultAction::KillMidFrame
+        } else if x < self.drop_conn_p + self.kill_mid_frame_p + self.delay_p {
+            FaultAction::DelayMs(rng.below(self.delay_max_ms as usize + 1) as u64)
+        } else {
+            FaultAction::Pass
+        }
+    }
+}
+
+/// A running fault proxy in front of one target address.
+pub struct FaultProxy {
+    addr: SocketAddr,
+    shutting_down: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    events: Arc<Mutex<Vec<FaultEvent>>>,
+    /// Live proxied sockets (client side, target side) so shutdown can
+    /// fail every blocked relay read.
+    socks: Arc<Mutex<Vec<TcpStream>>>,
+}
+
+impl FaultProxy {
+    /// Listen on an ephemeral loopback port and relay every accepted
+    /// connection to `target` under `spec`'s schedule.
+    pub fn start(target: SocketAddr, spec: FaultSpec) -> Result<FaultProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0").context("bind fault proxy")?;
+        let addr = listener.local_addr()?;
+        let shutting_down = Arc::new(AtomicBool::new(false));
+        let events = Arc::new(Mutex::new(Vec::new()));
+        let socks = Arc::new(Mutex::new(Vec::new()));
+        let (sd, ev, sk) = (shutting_down.clone(), events.clone(), socks.clone());
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("fault-proxy-{}", addr.port()))
+            .spawn(move || {
+                let spec = Arc::new(spec);
+                let next_conn = AtomicU32::new(0);
+                let mut relays = Vec::new();
+                loop {
+                    let Ok((client, _)) = listener.accept() else { break };
+                    if sd.load(Ordering::SeqCst) {
+                        let _ = client.shutdown(Shutdown::Both);
+                        break;
+                    }
+                    let conn = next_conn.fetch_add(1, Ordering::SeqCst);
+                    let Ok(server) = TcpStream::connect(target) else {
+                        // Target gone (e.g. a killed shard): drop the
+                        // client so its dialer sees the death too.
+                        let _ = client.shutdown(Shutdown::Both);
+                        continue;
+                    };
+                    let pairs = [
+                        (client.try_clone(), server.try_clone(), Dir::Up),
+                        (server.try_clone(), client.try_clone(), Dir::Down),
+                    ];
+                    {
+                        let mut s = lock_or_die(&sk, "fault.socks");
+                        s.push(client);
+                        s.push(server);
+                    }
+                    for (src, dst, dir) in pairs {
+                        let (Ok(src), Ok(dst)) = (src, dst) else { continue };
+                        let (spec, ev) = (spec.clone(), ev.clone());
+                        relays.push(std::thread::spawn(move || {
+                            relay(src, dst, &spec, conn, dir, &ev);
+                        }));
+                    }
+                }
+                for r in relays {
+                    let _ = r.join();
+                }
+            })?;
+        Ok(FaultProxy { addr, shutting_down, accept_thread: Some(accept_thread), events, socks })
+    }
+
+    /// The loopback address clients dial instead of the real target.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Every fired (non-`Pass`) decision so far, ordered by
+    /// `(conn, dir, frame)` — thread interleaving cannot reorder it, so
+    /// same-seed runs compare equal element-for-element.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        let mut ev = lock_or_die(&self.events, "fault.events").clone();
+        ev.sort_by_key(|e| (e.conn, e.dir, e.frame));
+        ev
+    }
+
+    /// Sever every proxied connection and stop accepting.
+    pub fn shutdown(&mut self) {
+        self.shutting_down.store(true, Ordering::SeqCst);
+        for s in lock_or_die(&self.socks, "fault.socks").iter() {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for FaultProxy {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Relay frames one way until EOF, an I/O error, or an injected kill.
+fn relay(
+    mut src: TcpStream,
+    mut dst: TcpStream,
+    spec: &FaultSpec,
+    conn: u32,
+    dir: Dir,
+    events: &Mutex<Vec<FaultEvent>>,
+) {
+    let mut frame = 0u64;
+    let mut payload = Vec::new();
+    loop {
+        let mut hdr = [0u8; 4];
+        if src.read_exact(&mut hdr).is_err() {
+            break;
+        }
+        let len = u32::from_le_bytes(hdr) as usize;
+        payload.resize(len, 0);
+        if src.read_exact(&mut payload).is_err() {
+            break;
+        }
+        let opcode = payload.first().copied().unwrap_or(0);
+        let action = spec.decide(conn, dir, frame, opcode);
+        if action != FaultAction::Pass {
+            lock_or_die(events, "fault.events").push(FaultEvent {
+                conn,
+                dir,
+                frame,
+                opcode,
+                action,
+            });
+        }
+        match action {
+            FaultAction::Pass => {}
+            FaultAction::DelayMs(ms) => std::thread::sleep(Duration::from_millis(ms)),
+            FaultAction::DropConn => {
+                let _ = src.shutdown(Shutdown::Both);
+                let _ = dst.shutdown(Shutdown::Both);
+                return;
+            }
+            FaultAction::KillMidFrame => {
+                let _ = dst.write_all(&hdr);
+                let _ = dst.write_all(&payload[..len / 2]);
+                let _ = src.shutdown(Shutdown::Both);
+                let _ = dst.shutdown(Shutdown::Both);
+                return;
+            }
+        }
+        if dst.write_all(&hdr).is_err() || dst.write_all(&payload).is_err() {
+            break;
+        }
+        frame += 1;
+    }
+    // EOF or error: propagate the close so neither side hangs.
+    let _ = src.shutdown(Shutdown::Both);
+    let _ = dst.shutdown(Shutdown::Both);
+}
+
+/// Group an event log per connection+direction — the stable unit for
+/// cross-run determinism assertions.
+pub fn events_by_stream(events: &[FaultEvent]) -> HashMap<(u32, Dir), Vec<FaultEvent>> {
+    let mut map: HashMap<(u32, Dir), Vec<FaultEvent>> = HashMap::new();
+    for e in events {
+        map.entry((e.conn, e.dir)).or_default().push(*e);
+    }
+    map
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::{Connection, Message, PROTOCOL_VERSION};
+
+    /// The schedule is a pure function: identical coordinates, identical
+    /// decision; a different seed decorrelates.
+    #[test]
+    fn decisions_are_pure_and_seeded()  {
+        let spec = FaultSpec {
+            seed: 7,
+            drop_conn_p: 0.2,
+            kill_mid_frame_p: 0.2,
+            delay_p: 0.3,
+            delay_max_ms: 5,
+            only_opcodes: None,
+        };
+        let mut decisions = Vec::new();
+        for conn in 0..4 {
+            for frame in 0..64 {
+                for op in [1u8, 3, 13] {
+                    let a = spec.decide(conn, Dir::Up, frame, op);
+                    assert_eq!(a, spec.decide(conn, Dir::Up, frame, op));
+                    decisions.push(a);
+                }
+            }
+        }
+        assert!(decisions.iter().any(|a| *a != FaultAction::Pass), "schedule never fired");
+        assert!(decisions.iter().any(|a| *a == FaultAction::Pass), "schedule always fired");
+        let other = FaultSpec { seed: 8, ..spec.clone() };
+        let redrawn: Vec<FaultAction> = (0..4)
+            .flat_map(|c| (0..64).flat_map(move |f| [1u8, 3, 13].map(|op| (c, f, op))))
+            .map(|(c, f, op)| other.decide(c, Dir::Up, f, op))
+            .collect();
+        assert_ne!(decisions, redrawn, "seeds must decorrelate schedules");
+    }
+
+    #[test]
+    fn opcode_filter_masks_everything_else() {
+        let spec = FaultSpec {
+            seed: 1,
+            drop_conn_p: 1.0,
+            only_opcodes: Some(vec![3]),
+            ..FaultSpec::default()
+        };
+        for frame in 0..32 {
+            assert_eq!(spec.decide(0, Dir::Up, frame, 1), FaultAction::Pass);
+            assert_eq!(spec.decide(0, Dir::Up, frame, 3), FaultAction::DropConn);
+        }
+    }
+
+    /// A fault-free proxy is transparent: a framed round-trip through it
+    /// is byte-identical to a direct one.
+    #[test]
+    fn passthrough_proxy_is_transparent() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let target = listener.local_addr().unwrap();
+        let echo = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut conn = Connection::new(s, None);
+            let m = conn.recv().unwrap();
+            conn.send(&m).unwrap();
+        });
+        let mut proxy = FaultProxy::start(target, FaultSpec::default()).unwrap();
+        let mut conn =
+            Connection::new(TcpStream::connect(proxy.addr()).unwrap(), None);
+        let sent = Message::Hello { worker: 9, version: PROTOCOL_VERSION };
+        conn.send(&sent).unwrap();
+        assert_eq!(conn.recv().unwrap(), sent);
+        echo.join().unwrap();
+        assert!(proxy.events().is_empty(), "no faults configured, none may fire");
+        proxy.shutdown();
+    }
+
+    /// A mid-frame kill delivers a truncated frame: the receiver must
+    /// error out (never hang, never misparse) and the event log records
+    /// exactly what fired.
+    #[test]
+    fn mid_frame_kill_truncates_and_logs() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let target = listener.local_addr().unwrap();
+        let srv = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut conn = Connection::new(s, None);
+            conn.recv()
+        });
+        let spec = FaultSpec { kill_mid_frame_p: 1.0, ..FaultSpec::default() };
+        let mut proxy = FaultProxy::start(target, spec).unwrap();
+        let mut conn =
+            Connection::new(TcpStream::connect(proxy.addr()).unwrap(), None);
+        // The send may or may not error (the kill races the local write
+        // buffer); the receiving side MUST error.
+        let _ = conn.send(&Message::Pull { iter: 0, lo: 0, hi: 4 });
+        assert!(srv.join().unwrap().is_err(), "truncated frame must fail the recv");
+        let ev = proxy.events();
+        assert_eq!(ev.len(), 1, "{ev:?}");
+        assert_eq!(ev[0].action, FaultAction::KillMidFrame);
+        assert_eq!(ev[0].opcode, 1, "Pull's opcode");
+        assert_eq!((ev[0].conn, ev[0].dir, ev[0].frame), (0, Dir::Up, 0));
+        proxy.shutdown();
+    }
+}

@@ -8,12 +8,14 @@
 //! negotiation, `docs/PERF.md` the pooling and copy discipline.
 
 pub mod codec;
+pub mod fault;
 pub mod pool;
 pub mod shaper;
 pub mod slab;
 pub mod transport;
 
 pub use codec::{CodecId, CodecStats, WireCodec};
+pub use fault::{FaultAction, FaultEvent, FaultProxy, FaultSpec};
 pub use pool::{PoolStats, PooledSlab, SlabCheckout, SlabPool, SlabSlice};
 pub use shaper::{LinkShaper, ShaperSpec};
 pub use transport::{Connection, Message, MessageRef, PeerRole, RecvMsg, PROTOCOL_VERSION};

@@ -75,8 +75,15 @@ const RECV_RETAIN_MAX: usize = 16 << 20;
 /// v5 adds the hierarchical-tier registration frame: `AggHello` (opcode
 /// 12) identifies an aggregator session and its worker-count weight
 /// (`docs/TOPOLOGY.md`). Every v4 frame is byte-identical under v5, but a
-/// v4 server would reject the unknown opcode, hence the bump.
-pub const PROTOCOL_VERSION: u16 = 5;
+/// v4 server would reject the unknown opcode, hence the bump. v6 adds the
+/// mid-run join surface (`docs/FAULTS.md`): `SnapshotReq` (opcode 13)
+/// asks for the full parameter state of a layer range and `SnapshotReply`
+/// (opcode 14) carries it back with the server's clock and configured
+/// fleet size, so a late worker adopts state and enters the barrier at
+/// the correct weight. Every pre-v6 frame is byte-identical; the bump
+/// exists because a v5 server would reject the join request an elastic
+/// fleet depends on.
+pub const PROTOCOL_VERSION: u16 = 6;
 
 /// The role a peer announces in an [`Message::AggHello`] registration
 /// frame (v5): a plain edge worker, or a regional aggregator acting as one
@@ -164,6 +171,18 @@ pub enum Message {
     /// server's [`PROTOCOL_VERSION`] (sent even on mismatch, so the worker
     /// can name both versions in its error).
     HelloAck { workers: u32, version: u16 },
+    /// Worker → server (v6, after registration): a mid-run joiner asks for
+    /// the full current parameter state of layers `[lo, hi]` — ungated by
+    /// any sync policy, served from whatever the server last applied
+    /// (`docs/FAULTS.md`).
+    SnapshotReq { lo: u32, hi: u32 },
+    /// Server → worker (v6): the snapshot. `iter` is the server's clock —
+    /// the oldest applied iteration among the served layers, i.e. the
+    /// iteration the joiner should enter the fleet at — and `workers` the
+    /// configured fleet size (the barrier denominator), so the joiner can
+    /// size its expectations without a second handshake. The slab carries
+    /// the owned layers' parameters exactly like a `PullReply`.
+    SnapshotReply { iter: u64, lo: u32, hi: u32, workers: u32, codec: CodecId, data: Vec<u8> },
     /// Either direction: tear the connection down.
     Shutdown,
 }
@@ -224,6 +243,17 @@ impl Message {
             Message::HelloAck { workers, version } => {
                 MessageRef::HelloAck { workers: *workers, version: *version }
             }
+            Message::SnapshotReq { lo, hi } => MessageRef::SnapshotReq { lo: *lo, hi: *hi },
+            Message::SnapshotReply { iter, lo, hi, workers, codec, data } => {
+                MessageRef::SnapshotReply {
+                    iter: *iter,
+                    lo: *lo,
+                    hi: *hi,
+                    workers: *workers,
+                    codec: *codec,
+                    data: data.as_slice(),
+                }
+            }
             Message::Shutdown => MessageRef::Shutdown,
         }
     }
@@ -283,6 +313,18 @@ impl Message {
                 buf.extend_from_slice(&workers.to_le_bytes());
                 buf.extend_from_slice(&version.to_le_bytes());
             }
+            Message::SnapshotReq { lo, hi } => {
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&hi.to_le_bytes());
+            }
+            Message::SnapshotReply { iter, lo, hi, workers, codec, data } => {
+                buf.extend_from_slice(&iter.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&hi.to_le_bytes());
+                buf.extend_from_slice(&workers.to_le_bytes());
+                buf.extend_from_slice(&slab_len_field(*codec, data.len()).to_le_bytes());
+                buf.extend_from_slice(data);
+            }
             Message::Shutdown => {}
         }
     }
@@ -316,6 +358,8 @@ pub enum MessageRef<'a> {
     CodecAgree { codec: CodecId },
     SyncPropose { mode: SyncMode, bound: u32 },
     SyncAgree { mode: SyncMode, bound: u32 },
+    SnapshotReq { lo: u32, hi: u32 },
+    SnapshotReply { iter: u64, lo: u32, hi: u32, workers: u32, codec: CodecId, data: &'a [u8] },
 }
 
 impl<'a> MessageRef<'a> {
@@ -333,6 +377,8 @@ impl<'a> MessageRef<'a> {
             MessageRef::SyncPropose { .. } => 10,
             MessageRef::SyncAgree { .. } => 11,
             MessageRef::AggHello { .. } => 12,
+            MessageRef::SnapshotReq { .. } => 13,
+            MessageRef::SnapshotReply { .. } => 14,
         }
     }
 
@@ -351,6 +397,8 @@ impl<'a> MessageRef<'a> {
             MessageRef::CodecAgree { .. } => 1,
             MessageRef::SyncPropose { .. } => 1 + 4,
             MessageRef::SyncAgree { .. } => 1 + 4,
+            MessageRef::SnapshotReq { .. } => 4 + 4,
+            MessageRef::SnapshotReply { data, .. } => 8 + 4 + 4 + 4 + 4 + data.len(),
         }
     }
 
@@ -370,6 +418,21 @@ impl<'a> MessageRef<'a> {
             }
             MessageRef::Push { iter, lo, hi, codec, data } => {
                 encode_tensor_header(buf, iter, lo, hi, None, codec, data.len());
+                return data;
+            }
+            // The v6 snapshot reply is the third tensor frame; its header
+            // differs from the other two (`workers` instead of `applied`,
+            // and it precedes the slab field), so it owns its layout here.
+            MessageRef::SnapshotReply { iter, lo, hi, workers, codec, data } => {
+                let wire_size = SNAPSHOT_REPLY_SLAB_OFF + data.len();
+                buf.clear();
+                buf.extend_from_slice(&(wire_size as u32).to_le_bytes());
+                buf.push(14);
+                buf.extend_from_slice(&iter.to_le_bytes());
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&hi.to_le_bytes());
+                buf.extend_from_slice(&workers.to_le_bytes());
+                buf.extend_from_slice(&slab_len_field(codec, data.len()).to_le_bytes());
                 return data;
             }
             _ => {}
@@ -402,6 +465,10 @@ impl<'a> MessageRef<'a> {
             MessageRef::SyncPropose { mode, bound } | MessageRef::SyncAgree { mode, bound } => {
                 buf.push(mode.tag());
                 buf.extend_from_slice(&bound.to_le_bytes());
+            }
+            MessageRef::SnapshotReq { lo, hi } => {
+                buf.extend_from_slice(&lo.to_le_bytes());
+                buf.extend_from_slice(&hi.to_le_bytes());
             }
             _ => {}
         }
@@ -444,6 +511,13 @@ impl<'a> MessageRef<'a> {
                 let (role, group, workers, version) = r.agg_hello()?;
                 MessageRef::AggHello { role, group, workers, version }
             }
+            13 => MessageRef::SnapshotReq { lo: r.u32()?, hi: r.u32()? },
+            14 => {
+                let (iter, lo, hi, workers) = (r.u64()?, r.u32()?, r.u32()?, r.u32()?);
+                anyhow::ensure!(workers > 0, "snapshot reply with zero fleet size");
+                let (codec, data) = r.slab()?;
+                MessageRef::SnapshotReply { iter, lo, hi, workers, codec, data }
+            }
             _ => bail!("unknown opcode {op}"),
         };
         anyhow::ensure!(r.b.is_empty(), "trailing bytes in frame (op {op})");
@@ -473,6 +547,10 @@ impl<'a> MessageRef<'a> {
             MessageRef::CodecAgree { codec } => Message::CodecAgree { codec },
             MessageRef::SyncPropose { mode, bound } => Message::SyncPropose { mode, bound },
             MessageRef::SyncAgree { mode, bound } => Message::SyncAgree { mode, bound },
+            MessageRef::SnapshotReq { lo, hi } => Message::SnapshotReq { lo, hi },
+            MessageRef::SnapshotReply { iter, lo, hi, workers, codec, data } => {
+                Message::SnapshotReply { iter, lo, hi, workers, codec, data: data.to_vec() }
+            }
         }
     }
 }
@@ -589,6 +667,10 @@ const PUSH_SLAB_OFF: usize = 1 + 8 + 4 + 4 + 4;
 /// Byte offset of the slab inside a `PullReply` frame payload: the `Push`
 /// layout plus the v4 `applied: u64` field before the slab-length field.
 const PULL_REPLY_SLAB_OFF: usize = 1 + 8 + 4 + 4 + 8 + 4;
+
+/// Byte offset of the slab inside a `SnapshotReply` frame payload (v6):
+/// opcode + `iter` + `lo` + `hi` + `workers` + the slab-length field.
+const SNAPSHOT_REPLY_SLAB_OFF: usize = 1 + 8 + 4 + 4 + 4 + 4;
 
 /// Encode a tensor frame's header (length prefix through the slab-length
 /// field) for a slab of `data_len` bytes: the single owner of the
@@ -826,6 +908,21 @@ impl Connection {
         }
     }
 
+    /// Arm (or clear, with `None`) read/write deadlines on the underlying
+    /// socket: any blocking transport call past the deadline fails with a
+    /// timeout error instead of hanging forever on a dead peer
+    /// (`docs/FAULTS.md`). `Some(Duration::ZERO)` is rejected because the
+    /// OS interprets it as "no timeout" — the opposite of what a caller
+    /// passing zero means.
+    pub fn set_io_timeout(&self, timeout: Option<std::time::Duration>) -> Result<()> {
+        anyhow::ensure!(
+            timeout != Some(std::time::Duration::ZERO),
+            "io timeout of zero would disable the deadline; use None"
+        );
+        self.stream.set_read_timeout(timeout).context("set read timeout")?;
+        self.stream.set_write_timeout(timeout).context("set write timeout")
+    }
+
     pub fn try_clone(&self) -> Result<Connection> {
         Ok(Connection {
             stream: self.stream.try_clone()?,
@@ -915,6 +1012,60 @@ mod tests {
             workers: 1,
             version: 0,
         });
+        roundtrip(Message::SnapshotReq { lo: 0, hi: 7 });
+        roundtrip(Message::SnapshotReply {
+            iter: 42,
+            lo: 0,
+            hi: 7,
+            workers: 8,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&[1.0, -0.5]),
+        });
+        roundtrip(Message::SnapshotReply {
+            iter: 0,
+            lo: 3,
+            hi: 3,
+            workers: 1,
+            codec: CodecId::Fp32,
+            data: Vec::new(),
+        });
+    }
+
+    /// The v6 mid-run-join frames: layouts, and the malformed-fleet-size
+    /// rejection rule (a zero `workers` could never weight a barrier).
+    #[test]
+    fn snapshot_frames_pin_layout_and_validate_fleet_size() {
+        // SnapshotReq: opcode + u32 lo + u32 hi.
+        let enc = Message::SnapshotReq { lo: 2, hi: 5 }.encode();
+        assert_eq!(&enc[4..], &[13u8, 2, 0, 0, 0, 5, 0, 0, 0]);
+        // SnapshotReply: opcode + u64 iter + u32 lo + u32 hi + u32 workers
+        // + slab field + slab — `workers` rides where PullReply's
+        // `applied` tail would sit, before the slab field.
+        let data = slab::from_f32s(&[7.0]);
+        let enc = Message::SnapshotReply {
+            iter: 9,
+            lo: 1,
+            hi: 1,
+            workers: 4,
+            codec: CodecId::Fp32,
+            data: data.clone(),
+        }
+        .encode();
+        let mut expect = vec![14u8];
+        expect.extend_from_slice(&9u64.to_le_bytes());
+        expect.extend_from_slice(&1u32.to_le_bytes());
+        expect.extend_from_slice(&1u32.to_le_bytes());
+        expect.extend_from_slice(&4u32.to_le_bytes());
+        expect.extend_from_slice(&(data.len() as u32).to_le_bytes());
+        expect.extend_from_slice(&data);
+        assert_eq!(&enc[4..], &expect[..]);
+        assert_eq!(SNAPSHOT_REPLY_SLAB_OFF, 25);
+        // A zero fleet size is malformed.
+        let mut bad = expect.clone();
+        bad[17..21].copy_from_slice(&0u32.to_le_bytes());
+        assert!(Message::decode(&bad).is_err(), "zero workers accepted");
+        // Truncated frames fail cleanly.
+        assert!(Message::decode(&expect[..12]).is_err());
     }
 
     /// The v5 aggregator registration frame: layout, and the malformed-
@@ -1102,7 +1253,7 @@ mod tests {
     }
 
     fn random_message(rng: &mut Rng) -> Message {
-        match rng.below(12) {
+        match rng.below(14) {
             0 => Message::Pull { iter: rng.below(1 << 20) as u64, lo: 0, hi: 7 },
             1 => {
                 let (codec, data) = random_codec_data(rng);
@@ -1135,6 +1286,18 @@ mod tests {
                     group: rng.below(16) as u32,
                     workers: if regional { 1 + rng.below(64) as u32 } else { 1 },
                     version: rng.below(1 << 16) as u16,
+                }
+            }
+            11 => Message::SnapshotReq { lo: 0, hi: rng.below(16) as u32 },
+            12 => {
+                let (codec, data) = random_codec_data(rng);
+                Message::SnapshotReply {
+                    iter: rng.below(1 << 20) as u64,
+                    lo: 0,
+                    hi: 7,
+                    workers: 1 + rng.below(64) as u32,
+                    codec,
+                    data,
                 }
             }
             _ => Message::Shutdown,
@@ -1292,6 +1455,25 @@ mod tests {
         conn.send(&msg).unwrap();
         assert_eq!(conn.recv().unwrap(), msg);
         t.join().unwrap();
+    }
+
+    /// An armed I/O deadline turns a silent peer into a timeout error
+    /// instead of a forever-blocked `recv`; clearing it and a zero
+    /// duration are both policed.
+    #[test]
+    fn io_timeout_fails_recv_instead_of_hanging() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+        let (_held, _) = listener.accept().unwrap(); // never writes
+        conn.set_io_timeout(Some(std::time::Duration::from_millis(30))).unwrap();
+        let start = std::time::Instant::now();
+        assert!(conn.recv().is_err(), "recv from a silent peer must time out");
+        assert!(start.elapsed() < std::time::Duration::from_secs(5));
+        // Zero means "no timeout" to the OS — reject it loudly.
+        assert!(conn.set_io_timeout(Some(std::time::Duration::ZERO)).is_err());
+        // And None disarms.
+        conn.set_io_timeout(None).unwrap();
     }
 
     /// A scattered push (one part per layer slab, including empty parts)

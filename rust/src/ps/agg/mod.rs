@@ -74,6 +74,13 @@ pub struct AggConfig {
     /// Cap on concurrently live downstream handler threads (clamped to
     /// never sit below `workers`, as on the server).
     pub handler_threads: usize,
+    /// Upstream I/O deadline, ms (`--io-timeout-ms`); 0 disables. Armed,
+    /// a cloud shard that dies mid-reply fails the aggregator's upstream
+    /// recv within the window instead of hanging the whole group
+    /// (`docs/FAULTS.md`). Same BSP caveat as on the worker: forwarded
+    /// pulls park at the cloud barrier through these sockets, so the
+    /// deadline must exceed the slowest straggler's round.
+    pub io_timeout_ms: u64,
 }
 
 /// Aggregator-side observability counters.
@@ -136,6 +143,15 @@ struct Shared {
     up_pull: Vec<Mutex<Connection>>,
     /// Upstream push connections, one per shard.
     up_push: Vec<Mutex<Connection>>,
+    /// Shard addresses, for connections outside the two registered
+    /// sessions: a forwarded `SnapshotReq` dials its own short-lived
+    /// anonymous connection per shard — the shared pull socket may be
+    /// parked at the cloud barrier waiting on the very joiner asking
+    /// for the snapshot (`docs/FAULTS.md`).
+    up_addrs: Vec<std::net::SocketAddr>,
+    /// Pull/push I/O deadline for upstream sockets (0 disables), also
+    /// applied to the on-demand snapshot connections.
+    io_timeout_ms: u64,
     /// The codec every upstream session agreed to.
     up_codec: CodecId,
     pool: Arc<SlabPool>,
@@ -188,9 +204,12 @@ impl RegionalAggregator {
         let mut up_kill = Vec::new();
         for shard_addr in &cfg.upstream_addrs {
             for conns in [&mut up_pull, &mut up_push] {
-                let stream = connect_with_retry(shard_addr)?;
+                // Jitter seed: the group identity — concurrent aggregators
+                // dialing a restarted shard decorrelate deterministically.
+                let stream = connect_with_retry(shard_addr, cfg.group as u64)?;
                 up_kill.push(stream.try_clone()?);
                 let mut conn = Connection::new(stream, None);
+                conn.set_io_timeout(crate::ps::worker::io_timeout_of(cfg.io_timeout_ms))?;
                 conn.send(&Message::AggHello {
                     role: PeerRole::Regional,
                     group: cfg.group,
@@ -249,6 +268,8 @@ impl RegionalAggregator {
             acc,
             up_pull: up_pull.into_iter().map(Mutex::new).collect(),
             up_push: up_push.into_iter().map(Mutex::new).collect(),
+            up_addrs: cfg.upstream_addrs,
+            io_timeout_ms: cfg.io_timeout_ms,
             up_codec,
             pool: SlabPool::new(),
             reply_cache: ReplyCache::new(),
@@ -590,6 +611,87 @@ fn assemble_reply(
     Ok((data.freeze(), applied))
 }
 
+/// Assemble a mid-run joiner's snapshot (`docs/FAULTS.md`): one
+/// `SnapshotReq` per owning shard, stitched and re-encoded exactly like
+/// [`assemble_reply`], tagged with the *oldest* shard clock so the joiner
+/// enters no further ahead than the slowest shard. Each request rides a
+/// fresh **anonymous** upstream connection — the registered pull socket
+/// may be parked at the cloud barrier waiting on the very joiner asking
+/// for the snapshot, and an anonymous session (no `Hello`) never gates —
+/// and rare (once per join), so it bypasses the shared-reply cache.
+fn assemble_snapshot(
+    shared: &Shared,
+    lo: u32,
+    hi: u32,
+    down_codec: CodecId,
+) -> Result<(Arc<PooledSlab>, u64)> {
+    let depth = shared.layer_elems.len();
+    let lo_u = (lo as usize).min(depth - 1);
+    let hi_u = (hi as usize).min(depth - 1);
+    let servers = shared.shard.servers;
+    let mut shard_replies: Vec<Option<Vec<u8>>> = (0..servers).map(|_| None).collect();
+    let mut iter_min = u64::MAX;
+    for sub in shared.shard.sub_requests(lo_u, hi_u) {
+        let addr = shared.up_addrs[sub.server];
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("snapshot connection to shard {addr}"))?;
+        let mut conn = Connection::new(stream, None);
+        conn.set_io_timeout(crate::ps::worker::io_timeout_of(shared.io_timeout_ms))?;
+        if shared.up_codec != CodecId::Fp32 {
+            // The fresh session starts at the fp32 default; align it with
+            // the upstream hop's codec so the stitched bytes match
+            // `assemble_reply`'s precision.
+            conn.send(&Message::CodecPropose { pref: shared.up_codec })?;
+            match conn.recv()? {
+                Message::CodecAgree { codec } if codec == shared.up_codec => {}
+                m => anyhow::bail!("shard {addr} refused snapshot codec: {m:?}"),
+            }
+        }
+        conn.send(&Message::SnapshotReq { lo, hi })?;
+        let (rcodec, iter, data) = match conn.recv()? {
+            Message::SnapshotReply { codec, iter, data, .. } => (codec, iter, data),
+            m => anyhow::bail!("bad upstream snapshot reply: {m:?}"),
+        };
+        drop(conn);
+        anyhow::ensure!(
+            rcodec == shared.up_codec,
+            "upstream snapshot codec mismatch: got {}, session speaks {}",
+            rcodec.name(),
+            shared.up_codec.name()
+        );
+        iter_min = iter_min.min(iter);
+        shard_replies[sub.server] = Some(data);
+    }
+    let cap: usize = (lo_u..=hi_u)
+        .map(|l| down_codec.wire_len(slab::ELEM * shared.layer_elems[l]))
+        .sum();
+    let mut data = shared.pool.checkout(cap);
+    let wc_up = shared.up_codec.codec();
+    let wc_down = down_codec.codec();
+    let mut offs = vec![0usize; servers];
+    let mut scratch = Vec::new();
+    for l in lo_u..=hi_u {
+        let srv = shared.shard.owner(l);
+        let reply = shard_replies[srv].as_ref().context("missing shard snapshot")?;
+        let n_up = shared.up_codec.wire_len(slab::ELEM * shared.layer_elems[l]);
+        anyhow::ensure!(
+            offs[srv] + n_up <= reply.len(),
+            "upstream snapshot too small for layer {l}"
+        );
+        let chunk = &reply[offs[srv]..offs[srv] + n_up];
+        offs[srv] += n_up;
+        if down_codec == shared.up_codec {
+            data.extend_from_slice(chunk);
+        } else {
+            scratch.clear();
+            wc_up.decode(chunk, &mut scratch)?;
+            wc_down.encode(&scratch, &mut data);
+        }
+    }
+    let iter = if iter_min == u64::MAX { 0 } else { iter_min };
+    Ok((data.freeze(), iter))
+}
+
 /// Serve a downstream pull: admit via the downstream sync policy, derive
 /// the shared-reply key its gate implies, and serve from the single-flight
 /// cache. `Ok(None)` only on shutdown.
@@ -676,6 +778,7 @@ enum Action {
     Register { id: u32, weight: u32, version: u16, role: &'static str },
     Reply(Message),
     ReplyShared { iter: u64, lo: u32, hi: u32, applied: u64, slab: Arc<PooledSlab> },
+    ReplySnapshot { iter: u64, lo: u32, hi: u32, slab: Arc<PooledSlab> },
     Forward { acks: (u64, u32, u32), done: Vec<Completed> },
     Close,
 }
@@ -752,6 +855,10 @@ fn handle_conn_inner(
                     )?;
                     Action::Forward { acks: (iter, lo, hi), done }
                 }
+                MessageRef::SnapshotReq { lo, hi } => {
+                    let (slab, iter) = assemble_snapshot(shared, lo, hi, *session_codec)?;
+                    Action::ReplySnapshot { iter, lo, hi, slab }
+                }
                 MessageRef::Shutdown => Action::Close,
                 other => {
                     anyhow::bail!("unexpected message at aggregator: {:?}", other.into_owned())
@@ -783,6 +890,19 @@ fn handle_conn_inner(
                     lo,
                     hi,
                     applied,
+                    codec: *session_codec,
+                    data: &slab[..],
+                })?;
+            }
+            Action::ReplySnapshot { iter, lo, hi, slab } => {
+                // Same malformed-at-0 floor as the shard's reply: the
+                // frame advertises the *group* size — the fleet the
+                // joiner is entering at this hop.
+                conn.send_ref(MessageRef::SnapshotReply {
+                    iter,
+                    lo,
+                    hi,
+                    workers: shared.workers.max(1),
                     codec: *session_codec,
                     data: &slab[..],
                 })?;
@@ -842,6 +962,7 @@ mod tests {
             upstream_sync: SyncConfig::default(),
             upstream_codec: CodecId::Fp32,
             handler_threads: 8,
+            io_timeout_ms: 0,
         })
         .unwrap();
         (srv, agg)
@@ -1011,8 +1132,39 @@ mod tests {
             upstream_sync: SyncConfig::new(SyncMode::Asp, 0).unwrap(),
             upstream_codec: CodecId::Fp32,
             handler_threads: 4,
+            io_timeout_ms: 0,
         })
         .unwrap_err();
         assert!(format!("{err:#}").contains("sync mode mismatch"), "{err:#}");
+    }
+
+    /// A mid-run joiner's `SnapshotReq` at the *aggregator* is forwarded
+    /// to the shards on its own anonymous connection, stitched, and
+    /// served with the shard clock and the group size — even while the
+    /// group's registered pull socket could be parked at the cloud
+    /// barrier.
+    #[test]
+    fn snapshot_req_forwards_through_the_tier() {
+        let (srv, agg) = start_tier(1, 1);
+        let mut w = connect(agg.addr());
+        hello(&mut w, 0);
+        w.send(&Message::Pull { iter: 0, lo: 0, hi: 1 }).unwrap();
+        assert!(matches!(w.recv().unwrap(), Message::PullReply { .. }));
+        push(&mut w, 0, 0, 1, &[2.0, 2.0, 2.0]);
+        wait_until("the combined push to apply upstream", || {
+            srv.snapshot(0).unwrap() == vec![0.0, 1.0]
+        });
+        // The joiner is anonymous: no Hello, no barrier membership.
+        let mut joiner = connect(agg.addr());
+        joiner.send(&Message::SnapshotReq { lo: 0, hi: 1 }).unwrap();
+        match joiner.recv().unwrap() {
+            Message::SnapshotReply { iter, lo, hi, workers, codec, data } => {
+                assert_eq!((iter, lo, hi, workers), (1, 0, 1, 1));
+                assert_eq!(codec, CodecId::Fp32);
+                assert_eq!(slab::to_f32s(&data), vec![0.0, 1.0, 9.0]);
+            }
+            m => panic!("{m:?}"),
+        }
+        drop(srv);
     }
 }

@@ -1,0 +1,369 @@
+//! Shard checkpoint/restore: the crash-restart half of elastic fault
+//! tolerance (`docs/FAULTS.md`).
+//!
+//! A [`Checkpoint`] is the complete durable state of one parameter-server
+//! shard — every owned layer's parameter slab + version clock, plus the
+//! sync policy's per-worker iteration clocks — serialized to a
+//! length-prefixed, checksummed file. A restarted shard started with
+//! `--restore <path>` resumes **byte-identically**: the restored slabs are
+//! the exact bytes the old shard held, so surviving workers reconnect and
+//! training continues instead of resetting.
+//!
+//! ## File format (little-endian throughout)
+//!
+//! ```text
+//! magic           b"DYNACKPT"                      8 bytes
+//! format version  u32                              (currently 1)
+//! sync mode tag   u8                               (SyncMode::tag)
+//! staleness bound u32
+//! clock count     u32
+//!   per clock     worker u32, clock u64
+//! layer count     u32
+//!   per layer     layer u32, version u64, len u32, slab bytes
+//! checksum        u64 FNV-1a over every prior byte
+//! ```
+//!
+//! ## Failure contract
+//!
+//! [`Checkpoint::decode`] parses the **whole file into memory before any
+//! caller state is touched** — a corrupt checkpoint can never partially
+//! apply. Truncation, a checksum mismatch, and an unsupported format
+//! version each fail with a named error (tested per corruption class);
+//! nothing in this module panics on untrusted bytes. Writes go through a
+//! temp file + atomic rename so a crash mid-write leaves the previous
+//! checkpoint intact.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::sync::SyncMode;
+
+/// The on-disk format revision. Bump when the layout changes; decode
+/// refuses other versions by name rather than misparsing.
+pub const CHECKPOINT_FORMAT: u32 = 1;
+
+const MAGIC: &[u8; 8] = b"DYNACKPT";
+
+/// One owned layer's durable state: the parameter slab exactly as the
+/// shard stores it (raw fp32 bytes) and its applied-version clock.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerRecord {
+    pub layer: u32,
+    pub version: u64,
+    pub params: Vec<u8>,
+}
+
+/// A complete shard checkpoint — see the module docs for the format.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Checkpoint {
+    pub sync_mode: SyncMode,
+    pub staleness_bound: u32,
+    /// The sync policy's per-worker iteration clocks (empty under BSP).
+    pub clocks: Vec<(u32, u64)>,
+    /// Owned layers in ascending layer order.
+    pub layers: Vec<LayerRecord>,
+}
+
+/// FNV-1a over `bytes` — dependency-free integrity check. Detects the
+/// single-byte and truncation corruptions a crashed write or bit-rot
+/// produces; this is an integrity checksum, not an authenticity MAC.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+impl Checkpoint {
+    /// Serialize to the checksummed byte format.
+    pub fn encode(&self) -> Vec<u8> {
+        let slab_bytes: usize = self.layers.iter().map(|l| l.params.len()).sum();
+        let mut out = Vec::with_capacity(
+            MAGIC.len() + 4 + 1 + 4 + 4 + self.clocks.len() * 12 + 4
+                + self.layers.len() * 16
+                + slab_bytes
+                + 8,
+        );
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&CHECKPOINT_FORMAT.to_le_bytes());
+        out.push(self.sync_mode.tag());
+        out.extend_from_slice(&self.staleness_bound.to_le_bytes());
+        out.extend_from_slice(&(self.clocks.len() as u32).to_le_bytes());
+        for &(worker, clock) in &self.clocks {
+            out.extend_from_slice(&worker.to_le_bytes());
+            out.extend_from_slice(&clock.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            out.extend_from_slice(&l.layer.to_le_bytes());
+            out.extend_from_slice(&l.version.to_le_bytes());
+            out.extend_from_slice(&(l.params.len() as u32).to_le_bytes());
+            out.extend_from_slice(&l.params);
+        }
+        let sum = fnv1a(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse a checkpoint. The whole buffer is validated (magic, format
+    /// version, checksum, every record length) before a `Checkpoint` is
+    /// returned, so a failed decode leaves the caller with nothing to
+    /// half-apply.
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        anyhow::ensure!(
+            bytes.len() >= MAGIC.len() + 8,
+            "checkpoint truncated: {} bytes is shorter than the fixed header",
+            bytes.len()
+        );
+        anyhow::ensure!(
+            &bytes[..MAGIC.len()] == MAGIC,
+            "checkpoint magic mismatch: not a DynaComm checkpoint file"
+        );
+        let (body, sum_bytes) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(sum_bytes.try_into().unwrap());
+        let computed = fnv1a(body);
+        anyhow::ensure!(
+            stored == computed,
+            "checkpoint checksum mismatch: stored {stored:#018x}, \
+             computed {computed:#018x} — the file is corrupt"
+        );
+        let mut r = Reader { buf: body, pos: MAGIC.len() };
+        let format = r.u32()?;
+        anyhow::ensure!(
+            format == CHECKPOINT_FORMAT,
+            "unsupported checkpoint format version {format} \
+             (this build reads version {CHECKPOINT_FORMAT})"
+        );
+        let mode_tag = r.u8()?;
+        let sync_mode = SyncMode::from_tag(mode_tag).with_context(|| {
+            format!("checkpoint names unknown sync mode tag {mode_tag}")
+        })?;
+        let staleness_bound = r.u32()?;
+        let clock_count = r.u32()? as usize;
+        let mut clocks = Vec::with_capacity(clock_count.min(1 << 20));
+        for _ in 0..clock_count {
+            clocks.push((r.u32()?, r.u64()?));
+        }
+        let layer_count = r.u32()? as usize;
+        let mut layers = Vec::with_capacity(layer_count.min(1 << 20));
+        for _ in 0..layer_count {
+            let layer = r.u32()?;
+            let version = r.u64()?;
+            let len = r.u32()? as usize;
+            layers.push(LayerRecord { layer, version, params: r.take(len)?.to_vec() });
+        }
+        anyhow::ensure!(
+            r.pos == body.len(),
+            "checkpoint truncated: {} trailing bytes after the last layer record",
+            body.len() - r.pos
+        );
+        Ok(Checkpoint { sync_mode, staleness_bound, clocks, layers })
+    }
+
+    /// Write atomically: encode, write to `<path>.tmp`, fsync, rename. A
+    /// crash mid-write leaves any previous checkpoint at `path` intact.
+    pub fn write_to(&self, path: &Path) -> Result<()> {
+        let bytes = self.encode();
+        let tmp = path.with_extension("tmp");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)
+                .with_context(|| format!("creating {}", tmp.display()))?;
+            f.write_all(&bytes)
+                .with_context(|| format!("writing {}", tmp.display()))?;
+            f.sync_all().with_context(|| format!("syncing {}", tmp.display()))?;
+        }
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))
+    }
+
+    /// Read and fully validate a checkpoint file.
+    pub fn read_from(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Checkpoint::decode(&bytes)
+            .with_context(|| format!("restoring checkpoint {}", path.display()))
+    }
+}
+
+/// Bounds-checked little-endian cursor (mirrors the transport decoder's
+/// shape): every read is validated, so corrupt counts fail instead of
+/// panicking.
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.buf.len() - self.pos >= n,
+            "checkpoint truncated: wanted {n} bytes at offset {}, {} remain",
+            self.pos,
+            self.buf.len() - self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            sync_mode: SyncMode::Ssp,
+            staleness_bound: 3,
+            clocks: vec![(0, 7), (2, 9)],
+            layers: vec![
+                LayerRecord { layer: 0, version: 8, params: vec![1, 2, 3, 4] },
+                LayerRecord { layer: 2, version: 7, params: vec![9; 4096] },
+                LayerRecord { layer: 5, version: 8, params: Vec::new() },
+            ],
+        }
+    }
+
+    #[test]
+    fn roundtrips_byte_identically() {
+        let ck = sample();
+        let enc = ck.encode();
+        let back = Checkpoint::decode(&enc).unwrap();
+        assert_eq!(back, ck);
+        assert_eq!(back.encode(), enc, "re-encode is byte-identical");
+    }
+
+    #[test]
+    fn empty_checkpoint_roundtrips() {
+        let ck = Checkpoint {
+            sync_mode: SyncMode::Bsp,
+            staleness_bound: 0,
+            clocks: Vec::new(),
+            layers: Vec::new(),
+        };
+        assert_eq!(Checkpoint::decode(&ck.encode()).unwrap(), ck);
+    }
+
+    #[test]
+    fn every_truncation_is_a_named_truncation_or_checksum_error() {
+        let enc = sample().encode();
+        for cut in 0..enc.len() {
+            let err = Checkpoint::decode(&enc[..cut])
+                .expect_err("strict prefix must not decode");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("truncated") || msg.contains("checksum mismatch"),
+                "cut at {cut}: unnamed error {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn every_flipped_byte_is_a_named_error() {
+        let enc = sample().encode();
+        for i in 0..enc.len() {
+            let mut bad = enc.clone();
+            bad[i] ^= 0x40;
+            let err =
+                Checkpoint::decode(&bad).expect_err("corrupt byte must not decode");
+            let msg = format!("{err:#}");
+            assert!(
+                msg.contains("checksum mismatch") || msg.contains("magic mismatch"),
+                "flip at {i}: unnamed error {msg}"
+            );
+        }
+    }
+
+    #[test]
+    fn wrong_format_version_is_a_named_error() {
+        let ck = sample();
+        let mut enc = ck.encode();
+        // Forge version 99 at offset 8, then re-stamp the checksum so the
+        // version check (not the checksum) is what trips.
+        enc[8..12].copy_from_slice(&99u32.to_le_bytes());
+        let body_len = enc.len() - 8;
+        let sum = fnv1a(&enc[..body_len]);
+        enc[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let msg = format!("{:#}", Checkpoint::decode(&enc).unwrap_err());
+        assert!(msg.contains("unsupported checkpoint format version 99"), "{msg}");
+    }
+
+    #[test]
+    fn forged_record_counts_fail_without_panicking() {
+        let ck = sample();
+        let mut enc = ck.encode();
+        // Clock count lives at offset 8 + 4 + 1 + 4 = 17. Forge it huge
+        // and re-stamp the checksum: the cursor must run out cleanly.
+        enc[17..21].copy_from_slice(&u32::MAX.to_le_bytes());
+        let body_len = enc.len() - 8;
+        let sum = fnv1a(&enc[..body_len]);
+        enc[body_len..].copy_from_slice(&sum.to_le_bytes());
+        let msg = format!("{:#}", Checkpoint::decode(&enc).unwrap_err());
+        assert!(msg.contains("truncated"), "{msg}");
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut enc = sample().encode();
+        let tail = [0u8; 12];
+        enc.extend_from_slice(&tail);
+        assert!(Checkpoint::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn write_read_file_roundtrip_and_atomic_tmp_cleanup() {
+        let dir = std::env::temp_dir().join(format!(
+            "dynacomm-ckpt-test-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shard0.ckpt");
+        let ck = sample();
+        ck.write_to(&path).unwrap();
+        assert!(!path.with_extension("tmp").exists(), "tmp file renamed away");
+        assert_eq!(Checkpoint::read_from(&path).unwrap(), ck);
+        // Overwrite in place with different content.
+        let mut ck2 = ck.clone();
+        ck2.layers[0].params = vec![7, 7, 7, 7];
+        ck2.write_to(&path).unwrap();
+        assert_eq!(Checkpoint::read_from(&path).unwrap(), ck2);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checksum_catches_a_flipped_bit_in_a_big_slab() {
+        let ck = Checkpoint {
+            sync_mode: SyncMode::Asp,
+            staleness_bound: 0,
+            clocks: vec![(1, 1)],
+            layers: vec![LayerRecord {
+                layer: 0,
+                version: 1,
+                params: (0..100_000u32).map(|i| (i % 251) as u8).collect(),
+            }],
+        };
+        let enc = ck.encode();
+        let mut bad = enc.clone();
+        let mid = enc.len() / 2;
+        bad[mid] ^= 1;
+        let msg = format!("{:#}", Checkpoint::decode(&bad).unwrap_err());
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+    }
+}

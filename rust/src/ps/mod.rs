@@ -13,6 +13,7 @@
 //! negotiating its own sync policy and wire codec.
 
 pub mod agg;
+pub mod checkpoint;
 pub mod exec;
 pub(crate) mod reply_cache;
 pub mod server;
@@ -21,6 +22,7 @@ pub mod sync;
 pub mod worker;
 
 pub use agg::{AggConfig, AggStats, RegionalAggregator};
+pub use checkpoint::{Checkpoint, LayerRecord};
 pub use exec::{ExecPlan, ExecSegment, ExecSlice, ExecSub, SlabSlice};
 pub use server::{ParamServer, ServerConfig, ServerHandle, ServerOptions, WireStats};
 pub use sharding::ShardMap;

@@ -50,10 +50,11 @@
 
 use std::collections::HashMap;
 use std::net::{Shutdown, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
@@ -62,6 +63,7 @@ use crate::net::pool::{PoolStats, PooledSlab, SlabPool};
 use crate::net::{
     slab, Connection, Message, MessageRef, PeerRole, ShaperSpec, PROTOCOL_VERSION,
 };
+use crate::ps::checkpoint::{Checkpoint, LayerRecord};
 use crate::ps::reply_cache::{ReplyCache, ReplyState};
 use crate::ps::sync::{self, PullGate, PushApply, SyncConfig, SyncMode, SyncPolicy};
 use crate::util::sync::{lock_or_die, wait_or_die};
@@ -216,6 +218,11 @@ pub struct ParamServer {
     shared: Arc<Shared>,
     listener_thread: Option<JoinHandle<()>>,
     addr: std::net::SocketAddr,
+    /// Periodic checkpoint writer ([`ParamServer::enable_checkpointing`]).
+    checkpoint_thread: Option<JoinHandle<()>>,
+    /// Where the final on-shutdown checkpoint goes (taken once, so a
+    /// `shutdown` followed by `Drop` writes it exactly once).
+    checkpoint_path: Option<PathBuf>,
 }
 
 /// Cheap handle for clients: address + shared-state observability.
@@ -266,33 +273,89 @@ impl ParamServer {
         shaper: Option<ShaperSpec>,
         opts: ServerOptions,
     ) -> Result<ParamServer> {
+        let init = layers
+            .into_iter()
+            .map(|(l, p)| (l, (slab::from_f32s(&p), 0u64)))
+            .collect();
+        ParamServer::start_inner(cfg, init, shaper, opts, &[])
+    }
+
+    /// Start a shard resuming from a [`Checkpoint`] (`--restore <path>`,
+    /// `docs/FAULTS.md`): parameter slabs and version clocks are adopted
+    /// **byte-identically** and the sync policy's per-worker clocks are
+    /// re-imported, so reconnecting workers continue at the iteration the
+    /// checkpoint captured instead of resetting training. The checkpoint's
+    /// sync configuration must match the shard's — resuming an SSP run
+    /// under a different consistency model has no sound meaning.
+    pub fn start_restored(
+        cfg: ServerConfig,
+        shaper: Option<ShaperSpec>,
+        opts: ServerOptions,
+        ck: &Checkpoint,
+    ) -> Result<ParamServer> {
+        anyhow::ensure!(
+            ck.sync_mode == opts.sync.mode
+                && ck.staleness_bound == opts.sync.staleness_bound,
+            "checkpoint was taken under sync {} (bound {}) but the shard is \
+             configured {} (bound {}) — restore with the original sync config",
+            ck.sync_mode.name(),
+            ck.staleness_bound,
+            opts.sync.mode.name(),
+            opts.sync.staleness_bound
+        );
+        let mut init = HashMap::with_capacity(ck.layers.len());
+        for r in &ck.layers {
+            anyhow::ensure!(
+                r.params.len() % slab::ELEM == 0,
+                "restored layer {} slab length {} is not f32-aligned",
+                r.layer,
+                r.params.len()
+            );
+            anyhow::ensure!(
+                init.insert(r.layer as usize, (r.params.clone(), r.version)).is_none(),
+                "checkpoint repeats layer {}",
+                r.layer
+            );
+        }
+        ParamServer::start_inner(cfg, init, shaper, opts, &ck.clocks)
+    }
+
+    fn start_inner(
+        cfg: ServerConfig,
+        layers: HashMap<usize, (Vec<u8>, u64)>,
+        shaper: Option<ShaperSpec>,
+        opts: ServerOptions,
+        clocks: &[(u32, u64)],
+    ) -> Result<ParamServer> {
         opts.sync.validate()?;
         let listener = TcpListener::bind("127.0.0.1:0").context("bind")?;
         let addr = listener.local_addr()?;
         let layer_bytes: HashMap<usize, usize> =
-            layers.iter().map(|(&l, p)| (l, slab::ELEM * p.len())).collect();
+            layers.iter().map(|(&l, (p, _))| (l, p.len())).collect();
         let slots = layers
             .into_iter()
-            .map(|(l, params)| {
-                let n = params.len();
+            .map(|(l, (params, version))| {
+                let n = params.len() / slab::ELEM;
                 (
                     l,
                     (
                         Mutex::new(LayerSlot {
-                            params: slab::from_f32s(&params),
-                            version: 0,
+                            params,
+                            version,
                             grad_sum: vec![0.0; n],
                             grad_count: 0,
-                            pending_iter: 0,
+                            pending_iter: version,
                         }),
                         Condvar::new(),
                     ),
                 )
             })
             .collect();
+        let sync = sync::create(opts.sync);
+        sync.import_clocks(clocks);
         let shared = Arc::new(Shared {
             cfg,
-            sync: sync::create(opts.sync),
+            sync,
             // Never cap below the registered fleet: `workers` handlers can
             // all be parked at the barrier at once, and a smaller pool
             // would wedge training with the rest of the fleet stuck in the
@@ -316,7 +379,13 @@ impl ParamServer {
         let listener_thread = std::thread::Builder::new()
             .name(format!("ps-accept-{}", addr.port()))
             .spawn(move || accept_loop(listener, shared2, shaper))?;
-        Ok(ParamServer { shared, listener_thread: Some(listener_thread), addr })
+        Ok(ParamServer {
+            shared,
+            listener_thread: Some(listener_thread),
+            addr,
+            checkpoint_thread: None,
+            checkpoint_path: None,
+        })
     }
 
     pub fn handle(&self) -> ServerHandle {
@@ -367,6 +436,36 @@ impl ParamServer {
         wire_stats(&self.shared)
     }
 
+    /// Serialize the shard's current durable state — every owned layer's
+    /// parameter slab + version clock plus the sync policy's worker
+    /// clocks — to `path` (atomic tmp+rename write). Each layer is
+    /// captured under its own slot lock; for the byte-identical restore
+    /// guarantee, checkpoint a quiesced shard (shutdown does).
+    pub fn write_checkpoint(&self, path: &Path) -> Result<()> {
+        export_checkpoint(&self.shared).write_to(path)
+    }
+
+    /// Start writing periodic checkpoints of this shard to `path` every
+    /// `every` (plus a final one on shutdown). The writer thread is joined
+    /// by [`ParamServer::shutdown`].
+    pub fn enable_checkpointing(&mut self, path: PathBuf, every: Duration) {
+        let shared = self.shared.clone();
+        let target = path.clone();
+        self.checkpoint_path = Some(path);
+        self.checkpoint_thread = Some(std::thread::spawn(move || {
+            let mut last = Instant::now();
+            while !shared.shutting_down.load(Ordering::SeqCst) {
+                std::thread::sleep(Duration::from_millis(2));
+                if last.elapsed() >= every {
+                    if let Err(e) = export_checkpoint(&shared).write_to(&target) {
+                        crate::debug!("ps", "periodic checkpoint failed: {e:#}");
+                    }
+                    last = Instant::now();
+                }
+            }
+        }));
+    }
+
     /// Drain and stop: wake parked pulls and cache waiters, kill live
     /// worker sockets so blocked reads return, then join the accept loop
     /// (which joins every handler). Condition-based — no timing
@@ -397,6 +496,16 @@ impl ParamServer {
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.listener_thread.take() {
             let _ = t.join();
+        }
+        // Handlers are drained — the shard is quiesced — so the final
+        // checkpoint captures a consistent, restorable state.
+        if let Some(t) = self.checkpoint_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(path) = self.checkpoint_path.take() {
+            if let Err(e) = export_checkpoint(&self.shared).write_to(&path) {
+                crate::debug!("ps", "final checkpoint failed: {e:#}");
+            }
         }
     }
 }
@@ -644,6 +753,32 @@ fn serve_pull(
     pull_reply(shared, key_iter, gate, lo, hi, codec_id)
 }
 
+/// Collect the shard's durable state ([`Checkpoint`]): owned layers in
+/// ascending order (slab + version, each under its slot lock) plus the
+/// sync policy's exported worker clocks.
+fn export_checkpoint(shared: &Shared) -> Checkpoint {
+    let mut ids: Vec<usize> = shared.slots.keys().copied().collect();
+    ids.sort_unstable();
+    let layers = ids
+        .into_iter()
+        .map(|l| {
+            let (m, _) = &shared.slots[&l];
+            let slot = lock_or_die(m, "layer.slot");
+            LayerRecord {
+                layer: l as u32,
+                version: slot.version,
+                params: slot.params.clone(),
+            }
+        })
+        .collect();
+    Checkpoint {
+        sync_mode: shared.sync.mode(),
+        staleness_bound: shared.sync.staleness_bound(),
+        clocks: shared.sync.export_clocks(),
+        layers,
+    }
+}
+
 /// The BSP barrier threshold right now: the configured fleet minus every
 /// fully departed identity's weight, floored at 1 so a shard with only
 /// departures left cannot divide training by zero. Callers read it
@@ -801,6 +936,7 @@ enum Action {
     AggHello { role: PeerRole, group: u32, workers: u32, version: u16 },
     Reply(Message),
     ReplyShared { iter: u64, lo: u32, hi: u32, applied: u64, slab: Arc<PooledSlab> },
+    ReplySnapshot { iter: u64, lo: u32, hi: u32, slab: Arc<PooledSlab> },
     Close,
 }
 
@@ -886,6 +1022,21 @@ fn handle_conn_inner(
                     apply_push(shared, apply, iter, lo, hi, codec, data, *session_weight)?;
                     Action::Reply(Message::PushAck { iter, lo, hi })
                 }
+                MessageRef::SnapshotReq { lo, hi } => {
+                    // Mid-run join (`docs/FAULTS.md`): serve the freshest
+                    // applied state ungated — the joiner is not yet part
+                    // of any barrier, so nothing may park this request —
+                    // with the shard's clock so it enters at the right
+                    // iteration. Rare (once per join), so assembling
+                    // outside the broadcast cache is fine.
+                    match assemble_reply(shared, PullGate::Fresh, lo, hi, *session_codec)
+                    {
+                        Some((slab, applied)) => {
+                            Action::ReplySnapshot { iter: applied, lo, hi, slab }
+                        }
+                        None => Action::Close,
+                    }
+                }
                 MessageRef::Shutdown => Action::Close,
                 other => {
                     anyhow::bail!("unexpected message at server: {:?}", other.into_owned())
@@ -946,6 +1097,18 @@ fn handle_conn_inner(
                     lo,
                     hi,
                     applied,
+                    codec: *session_codec,
+                    data: &slab[..],
+                })?;
+            }
+            Action::ReplySnapshot { iter, lo, hi, slab } => {
+                // Floor at 1: the frame's fleet size is malformed at 0,
+                // matching the barrier-target floor.
+                conn.send_ref(MessageRef::SnapshotReply {
+                    iter,
+                    lo,
+                    hi,
+                    workers: (shared.cfg.workers as u32).max(1),
                     codec: *session_codec,
                     data: &slab[..],
                 })?;
@@ -1783,5 +1946,185 @@ mod tests {
         wait_until("the departed group to release the barrier", || {
             srv.snapshot(0).unwrap() == vec![0.0, 2.0]
         });
+    }
+
+    // ---- Fault tolerance (v6: snapshot join, checkpoint/restore —
+    // ---- docs/FAULTS.md) ----
+
+    fn test_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dynacomm-{name}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A mid-run joiner's `SnapshotReq` is served ungated with the current
+    /// parameters, the shard's clock, and the configured fleet size.
+    #[test]
+    fn snapshot_req_serves_fresh_params_and_the_shard_clock() {
+        let srv = start_two_layer(1);
+        let addr = srv.handle().addr;
+        let mut w = connect(addr);
+        hello(&mut w, 0);
+        w.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 1,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&[2.0, 2.0, 2.0]),
+        })
+        .unwrap();
+        assert!(matches!(w.recv().unwrap(), Message::PushAck { .. }));
+        // A late joiner asks before saying Hello: snapshots are ungated.
+        let mut joiner = connect(addr);
+        joiner.send(&Message::SnapshotReq { lo: 0, hi: 1 }).unwrap();
+        match joiner.recv().unwrap() {
+            Message::SnapshotReply { iter, lo, hi, workers, codec, data } => {
+                assert_eq!((iter, lo, hi, workers), (1, 0, 1, 1));
+                assert_eq!(codec, CodecId::Fp32);
+                assert_eq!(slab::to_f32s(&data), vec![0.0, 1.0, 9.0]);
+            }
+            m => panic!("{m:?}"),
+        }
+    }
+
+    /// Kill-a-shard/restore: the restored shard's slabs, versions, and a
+    /// re-checkpoint are byte-identical, and the resumed clock serves the
+    /// next iteration's pull without parking.
+    #[test]
+    fn checkpoint_restore_resumes_byte_identically() {
+        let dir = test_dir("srv-ckpt-roundtrip");
+        let path = dir.join("shard.ckpt");
+        let mut srv = start_two_layer(1);
+        let addr = srv.handle().addr;
+        let mut w = connect(addr);
+        hello(&mut w, 0);
+        for iter in 0..2 {
+            w.send(&Message::Push {
+                iter,
+                lo: 0,
+                hi: 1,
+                codec: CodecId::Fp32,
+                data: slab::from_f32s(&[1.0, 2.0, 3.0]),
+            })
+            .unwrap();
+            assert!(matches!(w.recv().unwrap(), Message::PushAck { .. }));
+        }
+        let before0 = srv.snapshot(0).unwrap();
+        let before1 = srv.snapshot(1).unwrap();
+        srv.write_checkpoint(&path).unwrap();
+        drop(w);
+        srv.shutdown();
+        drop(srv);
+        let ck = Checkpoint::read_from(&path).unwrap();
+        let restored = ParamServer::start_restored(
+            ServerConfig { workers: 1, lr: 0.5 },
+            None,
+            ServerOptions::default(),
+            &ck,
+        )
+        .unwrap();
+        assert_eq!(restored.snapshot(0).unwrap(), before0);
+        assert_eq!(restored.snapshot(1).unwrap(), before1);
+        // Slab-for-slab byte identity: re-checkpointing the restored
+        // shard reproduces the original file exactly.
+        let path2 = dir.join("shard-again.ckpt");
+        restored.write_checkpoint(&path2).unwrap();
+        assert_eq!(
+            std::fs::read(&path).unwrap(),
+            std::fs::read(&path2).unwrap(),
+            "restored state is byte-identical"
+        );
+        // The version clock resumed: iteration 2's pull is served fresh.
+        let mut r = connect(restored.handle().addr);
+        r.send(&Message::Pull { iter: 2, lo: 0, hi: 1 }).unwrap();
+        match r.recv().unwrap() {
+            Message::PullReply { applied, data, .. } => {
+                assert_eq!(applied, 2);
+                assert_eq!(slab::to_f32s(&data), [before0.clone(), before1].concat());
+            }
+            m => panic!("{m:?}"),
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    /// Restoring under a different consistency model is refused by name.
+    #[test]
+    fn restore_refuses_a_sync_mode_mismatch() {
+        let ck = Checkpoint {
+            sync_mode: SyncMode::Ssp,
+            staleness_bound: 2,
+            clocks: vec![(0, 5)],
+            layers: Vec::new(),
+        };
+        let err = ParamServer::start_restored(
+            ServerConfig { workers: 1, lr: 0.1 },
+            None,
+            ServerOptions::default(),
+            &ck,
+        )
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sync ssp (bound 2)"), "{msg}");
+        assert!(msg.contains("configured bsp"), "{msg}");
+    }
+
+    /// A restored SSP shard re-imports the per-worker clocks, so the
+    /// staleness window resumes where the checkpoint captured it.
+    #[test]
+    fn restored_ssp_shard_resumes_worker_clocks() {
+        let ck = Checkpoint {
+            sync_mode: SyncMode::Ssp,
+            staleness_bound: 1,
+            clocks: vec![(0, 4), (1, 6)],
+            layers: vec![LayerRecord {
+                layer: 0,
+                version: 5,
+                params: slab::from_f32s(&[1.0]),
+            }],
+        };
+        let opts = ServerOptions {
+            sync: SyncConfig::new(SyncMode::Ssp, 1).unwrap(),
+            handler_threads: 4,
+        };
+        let restored = ParamServer::start_restored(
+            ServerConfig { workers: 2, lr: 0.1 },
+            None,
+            opts,
+            &ck,
+        )
+        .unwrap();
+        assert_eq!(restored.slowest_worker_iter(), 4);
+        assert_eq!(restored.snapshot(0).unwrap(), vec![1.0]);
+    }
+
+    /// Periodic checkpointing writes while the shard runs, and shutdown
+    /// writes a final checkpoint capturing the last applied state.
+    #[test]
+    fn periodic_checkpointing_writes_and_shutdown_finalizes() {
+        let dir = test_dir("srv-ckpt-periodic");
+        let path = dir.join("shard.ckpt");
+        let mut srv = start_two_layer(1);
+        srv.enable_checkpointing(path.clone(), Duration::from_millis(5));
+        wait_until("a periodic checkpoint to appear", || path.exists());
+        assert!(Checkpoint::read_from(&path).is_ok());
+        let mut w = connect(srv.handle().addr);
+        hello(&mut w, 0);
+        w.send(&Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 1,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&[2.0, 2.0, 2.0]),
+        })
+        .unwrap();
+        assert!(matches!(w.recv().unwrap(), Message::PushAck { .. }));
+        drop(w);
+        srv.shutdown();
+        let ck = Checkpoint::read_from(&path).unwrap();
+        let l0 = ck.layers.iter().find(|l| l.layer == 0).unwrap();
+        assert_eq!(l0.version, 1, "final checkpoint saw the applied push");
+        assert_eq!(slab::to_f32s(&l0.params), vec![0.0, 1.0]);
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 }

@@ -69,6 +69,14 @@ impl SyncPolicy for AspPolicy {
     fn slowest(&self) -> u64 {
         lock_or_die(&self.clocks, "sync.clocks").slowest().unwrap_or(0)
     }
+
+    fn export_clocks(&self) -> Vec<(u32, u64)> {
+        lock_or_die(&self.clocks, "sync.clocks").export()
+    }
+
+    fn import_clocks(&self, clocks: &[(u32, u64)]) {
+        lock_or_die(&self.clocks, "sync.clocks").import(clocks);
+    }
 }
 
 #[cfg(test)]

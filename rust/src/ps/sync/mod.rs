@@ -208,6 +208,17 @@ pub trait SyncPolicy: Send + Sync {
     /// Wake every parked [`SyncPolicy::admit_pull`] so it can observe the
     /// shutdown flag — called by `ParamServer::shutdown`.
     fn interrupt(&self) {}
+
+    /// Snapshot the per-worker iteration clocks for checkpointing
+    /// (`ps/checkpoint.rs`), sorted by worker id. Policies without clock
+    /// state (BSP gates on layer versions alone) export nothing.
+    fn export_clocks(&self) -> Vec<(u32, u64)> {
+        Vec::new()
+    }
+
+    /// Restore clocks exported by [`SyncPolicy::export_clocks`] — called
+    /// once at restore time, before any session registers.
+    fn import_clocks(&self, _clocks: &[(u32, u64)]) {}
 }
 
 /// Instantiate the policy behind a validated [`SyncConfig`] — the single
@@ -261,6 +272,23 @@ impl ClockTable {
     /// Min clock over registered workers; `None` when none registered.
     pub fn slowest(&self) -> Option<u64> {
         self.clocks.values().copied().min()
+    }
+
+    /// Sorted `(worker, clock)` pairs — the checkpointable view.
+    pub fn export(&self) -> Vec<(u32, u64)> {
+        let mut v: Vec<(u32, u64)> =
+            self.clocks.iter().map(|(&w, &c)| (w, c)).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Restore exported pairs (clocks only ever advance, so a restored
+    /// clock behind a live one is left alone).
+    pub fn import(&mut self, pairs: &[(u32, u64)]) {
+        for &(w, c) in pairs {
+            self.clocks.entry(w).or_insert(0);
+            self.record(w, c);
+        }
     }
 }
 
@@ -318,5 +346,44 @@ mod tests {
         assert!(t.deregister(3));
         assert_eq!(t.slowest(), Some(9));
         assert!(!t.deregister(3));
+    }
+
+    #[test]
+    fn clock_table_export_import_roundtrips() {
+        let mut t = ClockTable::default();
+        t.register(4);
+        t.record(4, 6);
+        t.register(1);
+        t.record(1, 2);
+        let exported = t.export();
+        assert_eq!(exported, vec![(1, 2), (4, 6)], "sorted by worker id");
+        let mut back = ClockTable::default();
+        back.import(&exported);
+        assert_eq!(back.export(), exported);
+        // Import never rewinds a live clock.
+        back.record(1, 9);
+        back.import(&exported);
+        assert_eq!(back.export(), vec![(1, 9), (4, 6)]);
+    }
+
+    #[test]
+    fn policies_export_and_import_their_clocks() {
+        for name in NAMES {
+            let bound = if name == "ssp" { 2 } else { 0 };
+            let p = create_by_name(name, bound).unwrap();
+            p.register_worker(0);
+            let shutdown = AtomicBool::new(false);
+            p.admit_pull(Some(0), 5, &shutdown);
+            let exported = p.export_clocks();
+            if name == "bsp" {
+                assert!(exported.is_empty(), "bsp carries no clock state");
+                continue;
+            }
+            assert_eq!(exported, vec![(0, 5)], "{name}");
+            let fresh = create_by_name(name, bound).unwrap();
+            fresh.import_clocks(&exported);
+            assert_eq!(fresh.export_clocks(), exported, "{name}");
+            assert_eq!(fresh.slowest(), 5, "{name}");
+        }
     }
 }

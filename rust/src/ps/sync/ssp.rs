@@ -112,6 +112,18 @@ impl SyncPolicy for SspPolicy {
         let _clocks = lock_or_die(&self.clocks, "sync.clocks");
         self.advanced.notify_all();
     }
+
+    fn export_clocks(&self) -> Vec<(u32, u64)> {
+        lock_or_die(&self.clocks, "sync.clocks").export()
+    }
+
+    fn import_clocks(&self, clocks: &[(u32, u64)]) {
+        let mut table = lock_or_die(&self.clocks, "sync.clocks");
+        table.import(clocks);
+        drop(table);
+        // Restored clocks can only widen the window — wake any waiter.
+        self.advanced.notify_all();
+    }
 }
 
 #[cfg(test)]

@@ -40,8 +40,9 @@ use crate::net::{Connection, LinkShaper, Message, RecvMsg, PROTOCOL_VERSION};
 use crate::profiler::Profiler;
 use crate::ps::exec::{ExecPlan, SegmentPull, SlabSlice};
 use crate::ps::sharding::ShardMap;
-use crate::ps::sync::SyncMode;
+use crate::ps::sync::{SyncConfig, SyncMode};
 use crate::runtime::{RuntimeClient, Tensor};
+use crate::util::rng::Rng;
 use crate::sched::registry::{self, SchedulerParams};
 use crate::sched::{Decomposition, SchedulePlan, Scheduler};
 
@@ -82,6 +83,14 @@ pub struct WorkerConfig {
     /// carry each layer's quantization error into the next iteration's
     /// gradient instead of dropping it. On by default; no-op under fp32.
     pub error_feedback: bool,
+    /// Pull/push I/O deadline, ms (`--io-timeout-ms`); 0 disables. With a
+    /// deadline armed, a shard that dies mid-reply fails the worker's
+    /// recv within the window instead of blocking forever — the hook
+    /// [`EdgeWorker::reconnect_shard`] recovers from (`docs/FAULTS.md`).
+    /// Leave 0 under BSP unless the deadline comfortably exceeds the
+    /// slowest straggler: barrier waits are served through the same
+    /// sockets.
+    pub io_timeout_ms: u64,
 }
 
 /// Per-run observability, returned to the trainer.
@@ -203,14 +212,34 @@ pub(crate) fn propose_sync(conn: &mut Connection, mode: SyncMode, bound: u32) ->
     }
 }
 
+/// `--io-timeout-ms` to the transport's form: 0 means "no deadline".
+pub(crate) fn io_timeout_of(ms: u64) -> Option<Duration> {
+    (ms > 0).then(|| Duration::from_millis(ms))
+}
+
+/// Deterministic, bounded jitter for one retry-backoff step: uniform in
+/// `[0, backoff]`, drawn from a PRNG seeded by `(seed, attempt)` alone —
+/// the same dialer replays the same schedule (the fault-injection harness
+/// relies on this), while differently-seeded dialers decorrelate instead
+/// of thundering back in lockstep after a shard restart.
+pub(crate) fn retry_jitter(seed: u64, attempt: u32, backoff: Duration) -> Duration {
+    let mut rng = Rng::new(seed.wrapping_mul(0x9e37_79b9_7f4a_7c15) ^ attempt as u64);
+    Duration::from_nanos(rng.below(backoff.as_nanos() as usize + 1) as u64)
+}
+
 /// Bounded retry-with-backoff for the worker→shard TCP connect: workers
-/// and servers boot concurrently, so a worker may dial a shard whose
-/// accept loop is not listening yet. Exponential backoff from 1 ms,
-/// capped at 100 ms per attempt and ~5 s overall. Shared with the
-/// regional aggregator's upstream sessions (`ps::agg`).
-pub(crate) fn connect_with_retry(addr: &std::net::SocketAddr) -> Result<TcpStream> {
+/// and servers boot concurrently (and shards restart mid-run), so a
+/// dialer may hit a shard whose accept loop is not listening yet.
+/// Exponential backoff from 1 ms, capped at 100 ms per attempt and ~5 s
+/// overall, each step stretched by the caller-seeded [`retry_jitter`].
+/// Shared with the regional aggregator's upstream sessions (`ps::agg`).
+pub(crate) fn connect_with_retry(
+    addr: &std::net::SocketAddr,
+    jitter_seed: u64,
+) -> Result<TcpStream> {
     let deadline = Instant::now() + Duration::from_secs(5);
     let mut backoff = Duration::from_millis(1);
+    let mut attempt = 0u32;
     loop {
         match TcpStream::connect(addr) {
             Ok(stream) => return Ok(stream),
@@ -220,11 +249,56 @@ pub(crate) fn connect_with_retry(addr: &std::net::SocketAddr) -> Result<TcpStrea
                         format!("connecting to shard {addr} (retries exhausted)")
                     });
                 }
-                std::thread::sleep(backoff);
+                std::thread::sleep(backoff + retry_jitter(jitter_seed, attempt, backoff));
+                attempt += 1;
                 backoff = (backoff * 2).min(Duration::from_millis(100));
             }
         }
     }
+}
+
+/// (Re-)establish one registered shard session end to end: jittered
+/// bounded-retry dial, `Hello` + protocol-version check both ways, sync
+/// agreement against the session's authoritative bound, codec
+/// re-negotiation (the shard must agree — a reconnect cannot fall back to
+/// fp32, the worker's compiled byte tables are fixed), and the optional
+/// pull/push I/O deadline. The mid-run recovery path of
+/// [`EdgeWorker::reconnect_shard`] and the churn harness
+/// (`tests/churn_integration.rs`).
+pub(crate) fn establish_session(
+    addr: &std::net::SocketAddr,
+    worker: u32,
+    sync: SyncConfig,
+    codec: CodecId,
+    shaper: Option<LinkShaper>,
+    io_timeout: Option<Duration>,
+) -> Result<Connection> {
+    let stream = connect_with_retry(addr, worker as u64)?;
+    let mut conn = Connection::new(stream, shaper);
+    conn.set_io_timeout(io_timeout)?;
+    conn.send(&Message::Hello { worker, version: PROTOCOL_VERSION })?;
+    match conn.recv()? {
+        Message::HelloAck { version, .. } if version == PROTOCOL_VERSION => {}
+        Message::HelloAck { version, .. } => anyhow::bail!(
+            "protocol version mismatch with shard {addr}: \
+             worker speaks v{PROTOCOL_VERSION}, server v{version}"
+        ),
+        m => anyhow::bail!("bad hello ack: {m:?}"),
+    }
+    let got = propose_sync(&mut conn, sync.mode, sync.staleness_bound)?;
+    anyhow::ensure!(
+        got == sync.staleness_bound,
+        "shard {addr} answered staleness bound {got}, session runs {}",
+        sync.staleness_bound
+    );
+    if codec != CodecId::Fp32 {
+        anyhow::ensure!(
+            propose_codec(&mut conn, codec)? == codec,
+            "shard {addr} refused codec {} on reconnect",
+            codec.name()
+        );
+    }
+    Ok(conn)
 }
 
 impl EdgeWorker {
@@ -237,8 +311,9 @@ impl EdgeWorker {
         let shard = ShardMap::new(cfg.server_addrs.len(), depth);
         let mut conns = Vec::with_capacity(cfg.server_addrs.len());
         for addr in &cfg.server_addrs {
-            let stream = connect_with_retry(addr)?;
+            let stream = connect_with_retry(addr, cfg.id as u64)?;
             let mut conn = Connection::new(stream, cfg.shaper.clone());
+            conn.set_io_timeout(io_timeout_of(cfg.io_timeout_ms))?;
             conn.send(&Message::Hello {
                 worker: cfg.id as u32,
                 version: PROTOCOL_VERSION,
@@ -357,6 +432,31 @@ impl EdgeWorker {
     /// The synchronization mode every shard confirmed for this session.
     pub fn sync_mode(&self) -> SyncMode {
         self.sync
+    }
+
+    /// Mid-run recovery: re-dial and fully re-register shard `srv` after
+    /// an I/O failure (shard restart, network partition, tripped
+    /// `--io-timeout-ms` deadline). The replacement session must agree on
+    /// the sync configuration and the already-negotiated codec — the
+    /// compiled byte tables are fixed for the run — so a shard that came
+    /// back different fails loudly instead of training inconsistently.
+    /// The dial itself retries with capped exponential backoff and
+    /// deterministic jitter, bridging the restart window.
+    pub fn reconnect_shard(&mut self, srv: usize) -> Result<()> {
+        anyhow::ensure!(srv < self.conns.len(), "no shard {srv} to reconnect");
+        let addr = self.cfg.server_addrs[srv];
+        let sync = SyncConfig::new(self.sync, self.staleness_bound)?;
+        let conn = establish_session(
+            &addr,
+            self.cfg.id as u32,
+            sync,
+            self.codec,
+            self.cfg.shaper.clone(),
+            io_timeout_of(self.cfg.io_timeout_ms),
+        )
+        .with_context(|| format!("reconnecting worker {} to shard {srv}", self.cfg.id))?;
+        self.conns[srv] = conn;
+        Ok(())
     }
 
     /// The servers' authoritative SSP staleness bound (0 outside SSP).
@@ -863,7 +963,7 @@ mod tests {
                 .ok()
                 .and_then(|l| l.accept().ok())
         });
-        let stream = connect_with_retry(&addr);
+        let stream = connect_with_retry(&addr, 0);
         let accepted = t.join().unwrap();
         // The rebind can race another process grabbing the port; only
         // assert when the listener actually came back.
@@ -880,12 +980,62 @@ mod tests {
         let addr = probe.local_addr().unwrap();
         drop(probe);
         let t0 = Instant::now();
-        let r = connect_with_retry(&addr);
+        let r = connect_with_retry(&addr, 0);
         // Either some other process reused the port (fine), or we erred
         // out within the deadline window.
         if let Err(e) = r {
             assert!(t0.elapsed() < Duration::from_secs(30), "unbounded retry");
             assert!(format!("{e:#}").contains("retries exhausted"), "{e:#}");
+        }
+    }
+
+    /// The satellite contract: jitter is a pure function of
+    /// `(seed, attempt)` and never exceeds the backoff step it stretches.
+    #[test]
+    fn retry_jitter_is_deterministic_and_bounded() {
+        for attempt in 0..32 {
+            for &ms in &[1u64, 2, 8, 100] {
+                let backoff = Duration::from_millis(ms);
+                let a = retry_jitter(42, attempt, backoff);
+                let b = retry_jitter(42, attempt, backoff);
+                assert_eq!(a, b, "same (seed, attempt) must jitter identically");
+                assert!(a <= backoff, "jitter {a:?} exceeds backoff {backoff:?}");
+            }
+        }
+        // Different seeds decorrelate: over 32 attempts at the 100 ms
+        // step, two dialers must not replay the same schedule.
+        let backoff = Duration::from_millis(100);
+        let schedule = |seed| -> Vec<Duration> {
+            (0..32).map(|i| retry_jitter(seed, i, backoff)).collect()
+        };
+        assert_ne!(schedule(1), schedule(2), "seeds must decorrelate dialers");
+    }
+
+    /// One call re-establishes a fully registered session: dial, version
+    /// check, sync agreement, I/O deadline — the worker's mid-run
+    /// reconnect path, exercised against a real shard.
+    #[test]
+    fn establish_session_registers_and_serves() {
+        use crate::ps::server::{ParamServer, ServerConfig};
+        let mut layers = std::collections::HashMap::new();
+        layers.insert(0, vec![1.0f32, 2.0]);
+        let srv =
+            ParamServer::start(ServerConfig { workers: 1, lr: 0.5 }, layers, None).unwrap();
+        let mut conn = establish_session(
+            &srv.handle().addr,
+            7,
+            SyncConfig::default(),
+            CodecId::Fp32,
+            None,
+            io_timeout_of(2_000),
+        )
+        .unwrap();
+        conn.send(&Message::Pull { iter: 0, lo: 0, hi: 0 }).unwrap();
+        match conn.recv().unwrap() {
+            Message::PullReply { data, .. } => {
+                assert_eq!(crate::net::slab::to_f32s(&data), vec![1.0, 2.0]);
+            }
+            m => panic!("{m:?}"),
         }
     }
 }

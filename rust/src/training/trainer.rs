@@ -82,6 +82,21 @@ pub struct TrainConfig {
     pub agg_sync: SyncMode,
     /// Regional→cloud hop wire codec (`--agg-codec`).
     pub agg_codec: CodecId,
+    /// Pull/push I/O deadline, ms (`--io-timeout-ms`, `docs/FAULTS.md`);
+    /// 0 disables. Applied to every worker→shard and aggregator→cloud
+    /// socket so a dead peer fails the blocked read within the window.
+    pub io_timeout_ms: u64,
+    /// Shard checkpointing (`--checkpoint-dir`): each shard `s` writes
+    /// `shard-{s}.ckpt` here every `checkpoint_every_ms` and once more on
+    /// shutdown (`ps::checkpoint`).
+    pub checkpoint_dir: Option<String>,
+    /// Periodic checkpoint interval, ms (`--checkpoint-every-ms`).
+    pub checkpoint_every_ms: u64,
+    /// Resume shards from the `shard-{s}.ckpt` files in this directory
+    /// (`--restore`) instead of the artifact init files; parameters,
+    /// version clocks, and sync clocks pick up byte-identically where the
+    /// checkpoint captured them.
+    pub restore_dir: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -110,6 +125,10 @@ impl Default for TrainConfig {
             group_size: 4,
             agg_sync: SyncMode::Bsp,
             agg_codec: CodecId::Fp32,
+            io_timeout_ms: 0,
+            checkpoint_dir: None,
+            checkpoint_every_ms: 1_000,
+            restore_dir: None,
         }
     }
 }
@@ -165,17 +184,33 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     let shard_sync = if cfg.tier == Tier::Regional { agg_sync } else { sync };
     let mut servers = Vec::with_capacity(cfg.servers);
     for s in 0..cfg.servers {
-        let layers: HashMap<usize, Vec<f32>> = shard
-            .owned_by(s)
-            .into_iter()
-            .map(|l| (l, init[l].clone()))
-            .collect();
-        servers.push(ParamServer::start_with(
-            ServerConfig { workers: cfg.workers, lr: cfg.lr },
-            layers,
-            Some(downlink),
-            ServerOptions { sync: shard_sync, handler_threads: cfg.handler_threads },
-        )?);
+        let scfg = ServerConfig { workers: cfg.workers, lr: cfg.lr };
+        let opts = ServerOptions { sync: shard_sync, handler_threads: cfg.handler_threads };
+        let mut srv = match &cfg.restore_dir {
+            Some(dir) => {
+                let path = std::path::Path::new(dir).join(format!("shard-{s}.ckpt"));
+                let ck = crate::ps::Checkpoint::read_from(&path)
+                    .with_context(|| format!("restoring shard {s}"))?;
+                ParamServer::start_restored(scfg, Some(downlink), opts, &ck)?
+            }
+            None => {
+                let layers: HashMap<usize, Vec<f32>> = shard
+                    .owned_by(s)
+                    .into_iter()
+                    .map(|l| (l, init[l].clone()))
+                    .collect();
+                ParamServer::start_with(scfg, layers, Some(downlink), opts)?
+            }
+        };
+        if let Some(dir) = &cfg.checkpoint_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating checkpoint dir {dir}"))?;
+            srv.enable_checkpointing(
+                std::path::Path::new(dir).join(format!("shard-{s}.ckpt")),
+                std::time::Duration::from_millis(cfg.checkpoint_every_ms.max(1)),
+            );
+        }
+        servers.push(srv);
     }
     let addrs: Vec<std::net::SocketAddr> =
         servers.iter().map(|s| s.handle().addr).collect();
@@ -202,6 +237,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
                 upstream_sync: agg_sync,
                 upstream_codec: cfg.agg_codec,
                 handler_threads: cfg.handler_threads,
+                io_timeout_ms: cfg.io_timeout_ms,
             })?);
             assigned += chunk;
         }
@@ -242,6 +278,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
             sync: cfg.sync,
             staleness_bound: cfg.staleness_bound,
             error_feedback: cfg.error_feedback,
+            io_timeout_ms: cfg.io_timeout_ms,
         };
         let ds = dataset.clone();
         let want_params = w == 0;

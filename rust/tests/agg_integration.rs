@@ -68,6 +68,7 @@ fn start_tier() -> (Vec<ParamServer>, Vec<RegionalAggregator>) {
                 upstream_sync: SyncConfig::default(),
                 upstream_codec: CodecId::Fp16,
                 handler_threads: GROUP_SIZE + 2,
+                io_timeout_ms: 0,
             })
             .unwrap()
         })

@@ -1,0 +1,460 @@
+//! Elastic-fleet churn tests (`docs/FAULTS.md`): the tiered fleet must
+//! survive workers and an aggregator dying and respawning **mid-run**, a
+//! killed shard must restore byte-identically from its checkpoint, and
+//! the fault-injection proxy (`net::fault`) must replay the exact same
+//! schedule for the same seed.
+//!
+//! The model is `sync_integration`'s distributed least-squares problem
+//! (`min_w ‖w − target‖²`) over raw registered connections — every push
+//! strictly contracts every coordinate toward the target, so per-worker
+//! loss must strictly decrease across **every snapshot advance**, churn
+//! or not. Replies are deduplicated by their `applied` clock before that
+//! assertion: during a failover the surviving group may legitimately
+//! outrun a rejoiner by whole rounds, so two consecutive pulls can see
+//! the same snapshot (equal loss, asserted equal), but a *fresher*
+//! snapshot must always mean strictly lower loss — and the snapshot
+//! clock must never rewind.
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use dynacomm::net::codec::CodecId;
+use dynacomm::net::fault::{Dir, FaultEvent, FaultProxy, FaultSpec};
+use dynacomm::net::{slab, Connection, Message, PROTOCOL_VERSION};
+use dynacomm::ps::sync::SyncConfig;
+use dynacomm::ps::{
+    AggConfig, Checkpoint, ParamServer, RegionalAggregator, ServerConfig, ServerOptions,
+};
+
+/// Crosses an int8 chunk boundary (CHUNK = 1024), like `sync_integration`.
+const ELEMS: usize = 1500;
+const GROUPS: usize = 2;
+const GROUP_SIZE: usize = 4;
+const WORKERS: usize = GROUPS * GROUP_SIZE;
+const ITERS: u64 = 14;
+const LR: f32 = 0.1;
+/// The worker victims die right after completing this iteration.
+const WORKER_KILL_AFTER: u64 = 4;
+/// The aggregator victim dies once every worker has completed this many.
+const AGG_KILL_AFTER: u64 = 8;
+
+fn target(j: usize) -> f32 {
+    ((j as f32 * 0.7153).sin() * 997.0).fract().clamp(-1.0, 1.0)
+}
+
+fn loss_of(w: &[f32]) -> f32 {
+    w.iter().enumerate().map(|(j, v)| (v - target(j)).powi(2)).sum::<f32>()
+        / w.len() as f32
+}
+
+fn wait_until(what: &str, mut cond: impl FnMut() -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !cond() {
+        assert!(Instant::now() < deadline, "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// Fallible registration: version handshake only (BSP default needs no
+/// sync agreement). Dialing a dead peer or a closing listener errors —
+/// the caller retries against the currently published address.
+fn try_register(addr: SocketAddr, worker: u32) -> anyhow::Result<Connection> {
+    let mut conn = Connection::new(TcpStream::connect(addr)?, None);
+    conn.send(&Message::Hello { worker, version: PROTOCOL_VERSION })?;
+    match conn.recv()? {
+        Message::HelloAck { version, .. } => {
+            anyhow::ensure!(version == PROTOCOL_VERSION, "version mismatch");
+        }
+        m => anyhow::bail!("bad hello ack: {m:?}"),
+    }
+    Ok(conn)
+}
+
+/// Register against whatever address the harness currently publishes for
+/// this group, retrying until the (re)spawned peer accepts.
+fn register_current(addrs: &Mutex<Vec<SocketAddr>>, group: usize, worker: u32) -> Connection {
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        let addr = addrs.lock().unwrap()[group];
+        match try_register(addr, worker) {
+            Ok(conn) => return conn,
+            Err(_) => {
+                assert!(
+                    Instant::now() < deadline,
+                    "worker {worker} could not rejoin group {group}"
+                );
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+    }
+}
+
+/// One fallible least-squares iteration: pull, measure loss, push the
+/// exact gradient. Any wire error (the peer died mid-step) surfaces to
+/// the caller, which reconnects and retries the same iteration.
+fn try_step(conn: &mut Connection, iter: u64) -> anyhow::Result<(u64, f32)> {
+    conn.send(&Message::Pull { iter, lo: 0, hi: 0 })?;
+    let (applied, data) = match conn.recv()? {
+        Message::PullReply { applied, data, .. } => (applied, data),
+        m => anyhow::bail!("bad pull reply: {m:?}"),
+    };
+    let w = slab::to_f32s(&data);
+    let loss = loss_of(&w);
+    let grad: Vec<f32> =
+        w.iter().enumerate().map(|(j, v)| 2.0 * (v - target(j))).collect();
+    conn.send(&Message::Push {
+        iter,
+        lo: 0,
+        hi: 0,
+        codec: CodecId::Fp32,
+        data: slab::from_f32s(&grad),
+    })?;
+    match conn.recv()? {
+        Message::PushAck { .. } => Ok((applied, loss)),
+        m => anyhow::bail!("bad push ack: {m:?}"),
+    }
+}
+
+fn start_agg(group: u32, shard_addr: SocketAddr) -> RegionalAggregator {
+    RegionalAggregator::start(AggConfig {
+        group,
+        workers: GROUP_SIZE as u32,
+        upstream_addrs: vec![shard_addr],
+        layer_elems: vec![ELEMS],
+        downstream_sync: SyncConfig::default(),
+        upstream_sync: SyncConfig::default(),
+        upstream_codec: CodecId::Fp32,
+        handler_threads: GROUP_SIZE + 2,
+        io_timeout_ms: 0,
+    })
+    .unwrap()
+}
+
+/// Per-worker acceptance: the snapshot clock never rewinds; equal clocks
+/// mean byte-identical parameters (equal loss); a fresher clock means
+/// strictly lower loss; enough distinct snapshots were observed to call
+/// it progress; and the run ends far below where it started.
+fn assert_curve(w: usize, curve: &[(u64, f32)], initial: f32) {
+    assert_eq!(curve.len(), ITERS as usize, "worker {w} skipped iterations");
+    let mut distinct = 1usize;
+    for k in 1..curve.len() {
+        let (pa, pl) = curve[k - 1];
+        let (a, l) = curve[k];
+        assert!(a >= pa, "worker {w}: snapshot clock rewound {pa} -> {a}");
+        if a == pa {
+            assert_eq!(l, pl, "worker {w}: same snapshot {a}, different loss");
+        } else {
+            distinct += 1;
+            assert!(
+                l < pl,
+                "worker {w}: snapshot advanced {pa} -> {a} but loss did not \
+                 strictly decrease: {pl} -> {l}"
+            );
+        }
+    }
+    assert!(
+        distinct >= ITERS as usize / 2,
+        "worker {w} observed only {distinct} distinct snapshots over {ITERS} iters"
+    );
+    let last = curve[curve.len() - 1].1;
+    assert!(
+        last < 0.25 * initial,
+        "worker {w} not enough progress: {last} vs initial {initial}"
+    );
+}
+
+/// The flagship churn run: 8 workers in 2 groups behind regional
+/// aggregators against one BSP cloud shard. Two workers (one per group)
+/// die after completing iteration 4 and rejoin — adopting the tier
+/// snapshot on the way back in — and one whole aggregator is killed and
+/// replaced (fresh group identity) once every worker has finished
+/// iteration 8. Nobody stalls, every curve converges.
+#[test]
+fn fleet_survives_worker_and_aggregator_churn() {
+    let mut layers = HashMap::new();
+    layers.insert(0, vec![0.0f32; ELEMS]);
+    let srv = ParamServer::start_with(
+        ServerConfig { workers: WORKERS, lr: LR },
+        layers,
+        None,
+        ServerOptions::default(),
+    )
+    .unwrap();
+    let shard_addr = srv.handle().addr;
+    let mut aggs = vec![start_agg(101, shard_addr), start_agg(102, shard_addr)];
+    let addrs: Arc<Mutex<Vec<SocketAddr>>> =
+        Arc::new(Mutex::new(aggs.iter().map(|a| a.addr()).collect()));
+    let done: Arc<Vec<AtomicU64>> =
+        Arc::new((0..WORKERS).map(|_| AtomicU64::new(0)).collect());
+    let initial = loss_of(&vec![0.0f32; ELEMS]);
+
+    let threads: Vec<_> = (0..WORKERS)
+        .map(|w| {
+            let addrs = addrs.clone();
+            let done = done.clone();
+            // One victim per group: worker 2 (group 0) and worker 5
+            // (group 1) self-kill after completing WORKER_KILL_AFTER.
+            let kill_after = (w == 2 || w == 5).then_some(WORKER_KILL_AFTER);
+            std::thread::Builder::new()
+                .name(format!("churn-worker-{w}"))
+                .spawn(move || {
+                    let group = w / GROUP_SIZE;
+                    let mut conn = register_current(&addrs, group, w as u32);
+                    let mut curve: Vec<(u64, f32)> = Vec::new();
+                    let mut iter = 0u64;
+                    while iter < ITERS {
+                        match try_step(&mut conn, iter) {
+                            Ok((applied, loss)) => {
+                                curve.push((applied, loss));
+                                done[w].store(iter + 1, Ordering::SeqCst);
+                                if kill_after == Some(iter) {
+                                    // Die between iterations: dropping the
+                                    // session closes the socket, the
+                                    // aggregator's handler sees EOF and
+                                    // departs the identity. (Mid-frame
+                                    // deaths are `net::fault`'s job.)
+                                    drop(conn);
+                                    std::thread::sleep(Duration::from_millis(5));
+                                    // …and rejoin mid-run, adopting the
+                                    // tier snapshot before training on.
+                                    conn = register_current(&addrs, group, w as u32);
+                                    conn.send(&Message::SnapshotReq { lo: 0, hi: 0 })
+                                        .unwrap();
+                                    match conn.recv().unwrap() {
+                                        Message::SnapshotReply {
+                                            workers, data, ..
+                                        } => {
+                                            assert_eq!(workers, GROUP_SIZE as u32);
+                                            let snap = slab::to_f32s(&data);
+                                            assert_eq!(snap.len(), ELEMS);
+                                            assert!(
+                                                loss_of(&snap) < curve[0].1,
+                                                "adopted snapshot no fresher \
+                                                 than the starting parameters"
+                                            );
+                                        }
+                                        m => panic!("bad snapshot reply: {m:?}"),
+                                    }
+                                }
+                                iter += 1;
+                            }
+                            Err(_) => {
+                                // The peer died mid-step (the aggregator
+                                // failover): rejoin and retry this iter.
+                                conn = register_current(&addrs, group, w as u32);
+                            }
+                        }
+                    }
+                    curve
+                })
+                .unwrap()
+        })
+        .collect();
+
+    // Aggregator failover: once the whole fleet is past AGG_KILL_AFTER,
+    // kill group 1's aggregator and replace it under a fresh group
+    // identity — the shard's elastic registry re-arms the departed
+    // barrier weight when the replacement registers.
+    wait_until("the fleet to reach the failover point", || {
+        done.iter().all(|d| d.load(Ordering::SeqCst) >= AGG_KILL_AFTER)
+    });
+    let dead = aggs.remove(1);
+    drop(dead); // severs both hops: downstream recvs and upstream sessions
+    let replacement = start_agg(103, shard_addr);
+    addrs.lock().unwrap()[1] = replacement.addr();
+    aggs.push(replacement);
+
+    let curves: Vec<Vec<(u64, f32)>> =
+        threads.into_iter().map(|t| t.join().unwrap()).collect();
+    for (w, curve) in curves.iter().enumerate() {
+        assert_curve(w, curve, initial);
+    }
+    drop(aggs);
+    drop(srv);
+}
+
+/// Kill a shard, restore it from its checkpoint, and resume: the restored
+/// state must be **byte-identical slab-for-slab** (asserted by
+/// re-checkpointing the restored shard and comparing whole files — slabs,
+/// versions, and worker clocks in one shot) and training must continue
+/// exactly where it stopped, losses still strictly decreasing.
+#[test]
+fn killed_shard_restores_byte_identical_and_resumes() {
+    const SMALL: usize = 256;
+    const FLEET: usize = 2;
+    let dir = std::env::temp_dir()
+        .join(format!("dynacomm-churn-restore-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("shard-0.ckpt");
+    let path2 = dir.join("shard-0.rewrite.ckpt");
+
+    let mut layers = HashMap::new();
+    layers.insert(0, vec![0.0f32; SMALL]);
+    let cfg = ServerConfig { workers: FLEET, lr: LR };
+    let mut srv =
+        ParamServer::start_with(cfg, layers, None, ServerOptions::default()).unwrap();
+    let addr = srv.handle().addr;
+
+    let small_target = |j: usize| target(j);
+    let small_loss = |w: &[f32]| -> f32 {
+        w.iter().enumerate().map(|(j, v)| (v - small_target(j)).powi(2)).sum::<f32>()
+            / w.len() as f32
+    };
+    // Drive both BSP workers from one thread: all pulls for an iteration,
+    // then all pushes — the barrier only ever parks pulls.
+    let mut conns: Vec<Connection> =
+        (0..FLEET as u32).map(|w| try_register(addr, w).unwrap()).collect();
+    let mut losses: Vec<Vec<f32>> = vec![Vec::new(); FLEET];
+    let mut run = |conns: &mut Vec<Connection>,
+                   losses: &mut Vec<Vec<f32>>,
+                   iters: std::ops::Range<u64>| {
+        for iter in iters {
+            let mut grads: Vec<Vec<f32>> = Vec::new();
+            for (w, conn) in conns.iter_mut().enumerate() {
+                conn.send(&Message::Pull { iter, lo: 0, hi: 0 }).unwrap();
+                let data = match conn.recv().unwrap() {
+                    Message::PullReply { applied, data, .. } => {
+                        assert_eq!(applied, iter, "BSP lockstep");
+                        data
+                    }
+                    m => panic!("{m:?}"),
+                };
+                let v = slab::to_f32s(&data);
+                losses[w].push(small_loss(&v));
+                grads.push(
+                    v.iter()
+                        .enumerate()
+                        .map(|(j, x)| 2.0 * (x - small_target(j)))
+                        .collect(),
+                );
+            }
+            for (conn, grad) in conns.iter_mut().zip(&grads) {
+                conn.send(&Message::Push {
+                    iter,
+                    lo: 0,
+                    hi: 0,
+                    codec: CodecId::Fp32,
+                    data: slab::from_f32s(grad),
+                })
+                .unwrap();
+                assert!(matches!(conn.recv().unwrap(), Message::PushAck { .. }));
+            }
+        }
+    };
+    run(&mut conns, &mut losses, 0..3);
+
+    // Checkpoint, then kill the shard with its sessions still open.
+    srv.write_checkpoint(&path).unwrap();
+    let before = srv.snapshot(0).unwrap();
+    drop(conns);
+    srv.shutdown();
+    drop(srv);
+
+    // Restore and prove byte identity: a fresh checkpoint of the restored
+    // shard must reproduce the original file exactly.
+    let ck = Checkpoint::read_from(&path).unwrap();
+    let srv =
+        ParamServer::start_restored(cfg, None, ServerOptions::default(), &ck).unwrap();
+    assert_eq!(srv.snapshot(0).unwrap(), before, "restored parameters differ");
+    srv.write_checkpoint(&path2).unwrap();
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        std::fs::read(&path2).unwrap(),
+        "restored shard did not re-checkpoint byte-identically"
+    );
+
+    // Resume exactly where the fleet stopped: same worker ids, next
+    // iteration, losses still strictly decreasing across the kill.
+    let addr = srv.handle().addr;
+    let mut conns: Vec<Connection> =
+        (0..FLEET as u32).map(|w| try_register(addr, w).unwrap()).collect();
+    run(&mut conns, &mut losses, 3..6);
+    for (w, curve) in losses.iter().enumerate() {
+        assert_eq!(curve.len(), 6);
+        for k in 1..curve.len() {
+            assert!(
+                curve[k] < curve[k - 1],
+                "worker {w} loss did not strictly decrease across the \
+                 restore at iter {k}: {curve:?}"
+            );
+        }
+    }
+    drop(conns);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The fault proxy's schedule is a pure function of the seed: the same
+/// seeded run produces the exact same event log twice, and that log
+/// matches the schedule computed *offline* from [`FaultSpec::decide`]
+/// over the session's known frame sequence.
+#[test]
+fn fault_schedule_is_deterministic_across_runs() {
+    const SMALL: usize = 64;
+    const RUN_ITERS: u64 = 5;
+    let spec = FaultSpec {
+        seed: 42,
+        delay_p: 0.5,
+        delay_max_ms: 2,
+        ..FaultSpec::default()
+    };
+
+    let run = |spec: &FaultSpec| -> (Vec<f32>, Vec<FaultEvent>) {
+        let mut layers = HashMap::new();
+        layers.insert(0, vec![0.0f32; SMALL]);
+        let srv = ParamServer::start_with(
+            ServerConfig { workers: 1, lr: LR },
+            layers,
+            None,
+            ServerOptions::default(),
+        )
+        .unwrap();
+        let mut proxy = FaultProxy::start(srv.handle().addr, spec.clone()).unwrap();
+        let mut conn = try_register(proxy.addr(), 0).unwrap();
+        let mut losses = Vec::new();
+        for iter in 0..RUN_ITERS {
+            let (applied, loss) = try_step(&mut conn, iter).unwrap();
+            assert_eq!(applied, iter, "single-worker BSP is lockstep");
+            losses.push(loss);
+        }
+        drop(conn);
+        let events = proxy.events();
+        proxy.shutdown();
+        drop(srv);
+        (losses, events)
+    };
+
+    let (losses_a, events_a) = run(&spec);
+    let (losses_b, events_b) = run(&spec);
+    assert_eq!(events_a, events_b, "same seed must replay the same schedule");
+    assert_eq!(losses_a, losses_b, "training under replayed faults must agree");
+    for k in 1..losses_a.len() {
+        assert!(losses_a[k] < losses_a[k - 1], "loss must still converge");
+    }
+
+    // The observed log must equal the schedule computed offline from the
+    // session's deterministic frame sequence: up = Hello, then
+    // (Pull, Push) per iteration; down = HelloAck, then
+    // (PullReply, PushAck).
+    let mut expected = Vec::new();
+    let mut sequence = |dir: Dir, opcodes: Vec<u8>| {
+        for (frame, opcode) in opcodes.into_iter().enumerate() {
+            let action = spec.decide(0, dir, frame as u64, opcode);
+            if action != dynacomm::net::fault::FaultAction::Pass {
+                expected.push(FaultEvent { conn: 0, dir, frame: frame as u64, opcode, action });
+            }
+        }
+    };
+    let mut up = vec![5u8];
+    let mut down = vec![6u8];
+    for _ in 0..RUN_ITERS {
+        up.extend([1u8, 3]);
+        down.extend([2u8, 4]);
+    }
+    sequence(Dir::Up, up);
+    sequence(Dir::Down, down);
+    expected.sort_by_key(|e| (e.conn, e.dir, e.frame));
+    assert_eq!(events_a, expected, "observed log diverged from the pure schedule");
+}

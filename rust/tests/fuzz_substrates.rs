@@ -90,7 +90,10 @@ fn random_message(rng: &mut Rng) -> Message {
     let role = if rng.bool() { PeerRole::Regional } else { PeerRole::Edge };
     let agg_workers =
         if role == PeerRole::Edge { 1 } else { 1 + rng.below(64) as u32 };
-    match rng.below(12) {
+    // v6 snapshot frames: the reply always names a non-zero fleet size
+    // (the decoder rejects 0 — covered separately below).
+    let snap_workers = 1 + rng.below(64) as u32;
+    match rng.below(14) {
         0 => Message::Pull { iter: rng.next_u64(), lo: rng.below(100) as u32, hi: rng.below(100) as u32 },
         1 => Message::PullReply {
             iter: rng.next_u64(),
@@ -119,6 +122,18 @@ fn random_message(rng: &mut Rng) -> Message {
             group: rng.below(1 << 10) as u32,
             workers: agg_workers,
             version: rng.below(1 << 16) as u16,
+        },
+        11 => Message::SnapshotReq {
+            lo: rng.below(100) as u32,
+            hi: rng.below(100) as u32,
+        },
+        12 => Message::SnapshotReply {
+            iter: rng.next_u64(),
+            lo: 0,
+            hi: 5,
+            workers: snap_workers,
+            codec,
+            data,
         },
         _ => Message::Shutdown,
     }
@@ -181,7 +196,7 @@ fn exemplar_messages() -> Vec<Message> {
             codec,
             data: data.clone(),
         },
-        Message::Push { iter: 7, lo: 0, hi: 3, codec, data },
+        Message::Push { iter: 7, lo: 0, hi: 3, codec, data: data.clone() },
         Message::PushAck { iter: 7, lo: 0, hi: 3 },
         Message::Hello { worker: 0, version: PROTOCOL_VERSION },
         Message::HelloAck { workers: 1, version: PROTOCOL_VERSION },
@@ -190,14 +205,16 @@ fn exemplar_messages() -> Vec<Message> {
         Message::CodecAgree { codec: CodecId::Int8 },
         Message::SyncPropose { mode: SyncMode::Ssp, bound: 4 },
         Message::SyncAgree { mode: SyncMode::Bsp, bound: 0 },
-        // v5: appended last so the positional mutation offsets above stay
-        // stable across protocol bumps.
+        // v5/v6: appended last so the positional mutation offsets above
+        // stay stable across protocol bumps.
         Message::AggHello {
             role: PeerRole::Regional,
             group: 9,
             workers: 4,
             version: PROTOCOL_VERSION,
         },
+        Message::SnapshotReq { lo: 0, hi: 3 },
+        Message::SnapshotReply { iter: 7, lo: 0, hi: 3, workers: 4, codec, data },
     ]
 }
 
@@ -208,12 +225,12 @@ fn decoder_rejects_mutations_of_every_frame_tag() {
     let msgs = exemplar_messages();
 
     // Coverage gate: the exemplars span exactly the contiguous tag space
-    // 1..=12 with no duplicates, so adding a frame to the protocol forces
+    // 1..=14 with no duplicates, so adding a frame to the protocol forces
     // an exemplar (and the mutations below) for it.
     let mut tags: Vec<u8> = msgs.iter().map(|m| m.opcode()).collect();
     tags.sort_unstable();
     tags.dedup();
-    assert_eq!(tags, (1u8..=12).collect::<Vec<u8>>());
+    assert_eq!(tags, (1u8..=14).collect::<Vec<u8>>());
 
     for m in &msgs {
         let enc = m.encode();
@@ -239,9 +256,10 @@ fn decoder_rejects_mutations_of_every_frame_tag() {
 
     // Bad embedded tags: codec tag 3 and sync mode tag 3 name nothing.
     // Tensor frames carry the codec tag in the top 2 bits of the slab
-    // length field (payload offset 25 for PullReply, 17 for Push — plus
-    // the 4-byte length prefix and 3 for the little-endian MSB).
-    for (m, off) in [(&msgs[1], 25usize), (&msgs[2], 17)] {
+    // length field (payload offset 25 for PullReply, 17 for Push, 21 for
+    // SnapshotReply — plus the 4-byte length prefix and 3 for the
+    // little-endian MSB).
+    for (m, off) in [(&msgs[1], 25usize), (&msgs[2], 17), (&msgs[13], 21)] {
         let mut enc = m.encode();
         enc[4 + off + 3] |= 0xC0;
         assert!(
@@ -282,6 +300,17 @@ fn decoder_rejects_mutations_of_every_frame_tag() {
     assert!(
         Message::decode(&enc[4..]).is_err(),
         "edge-role AggHello announcing a group decoded"
+    );
+    // SnapshotReply (v6) layout: iter u64 at payload offset 1, lo/hi u32
+    // at 9/13, workers u32 at 17 — so enc[21..25] is the fleet size. A
+    // snapshot from an empty fleet is malformed.
+    let snap = &msgs[13];
+    assert_eq!(snap.opcode(), 14, "exemplar order drifted");
+    let mut enc = snap.encode();
+    enc[21..25].fill(0);
+    assert!(
+        Message::decode(&enc[4..]).is_err(),
+        "SnapshotReply with zero fleet size decoded"
     );
 }
 
