@@ -46,7 +46,15 @@ fn main() -> anyhow::Result<()> {
     // (`--group-size`, `--agg-sync`, `--agg-codec`).
     println!(
         "   (tiers: flat direct | regional edge->agg->cloud fan-in — \
-         see docs/TOPOLOGY.md)\n"
+         see docs/TOPOLOGY.md)"
+    );
+    // Observability (`--metrics-addr`, `--trace-out`, docs/OBSERVABILITY.md):
+    // a real `dynacomm train` run can serve Prometheus snapshots of every
+    // wire/sync/scheduler counter and export a Chrome trace of the
+    // pull/compute/push overlap the schedules below only predict.
+    println!(
+        "   (observability: --metrics-addr host:port scrape | --trace-out \
+         trace.json spans — see docs/OBSERVABILITY.md)\n"
     );
 
     let seq_total = sim::simulate_cv(&cv, Strategy::Sequential).total_ms();

@@ -31,6 +31,13 @@
 //! reports the bytes actually crossing the cloud boundary (the shards'
 //! ingress counters), fleet iteration throughput, and the ingress-saved
 //! ratio (target ≥ 3× at group size 4), recorded as `tier_matrix` rows.
+//!
+//! An **obs overhead** leg re-runs the BSP lockstep mix with the
+//! observability plane fully armed — span tracing recording every
+//! server-side segment plus a live scraper polling the Prometheus
+//! endpoint — and asserts the best-of-3 regression vs the disarmed run
+//! stays ≤ 5% (`obs_overhead_pct` in `results/BENCH_wire.json`,
+//! docs/OBSERVABILITY.md).
 
 mod common;
 
@@ -728,6 +735,67 @@ fn main() {
         secs_ck_boot * 1e3,
     );
 
+    // --- Obs overhead: the BSP lockstep mix with the observability plane
+    // fully armed (tracing recording every assemble/apply span, a live
+    // scraper polling the exposition endpoint) vs disarmed. Every metric
+    // update is one relaxed atomic and spans are two clock reads + a ring
+    // write, so the armed run must stay within 5% of baseline.
+    let obs_iters = (reps / 4).max(4) as u64;
+    let run_bsp_batch = |armed: bool| -> f64 {
+        dynacomm::obs::trace::set_enabled(armed);
+        let srv = ParamServer::start(
+            ServerConfig { workers: WORKERS, lr: 0.1 },
+            layer_init(),
+            None,
+        )
+        .unwrap();
+        let addr = srv.handle().addr;
+        let mut scraper = None;
+        let mut msrv = None;
+        let stop_scrape = Arc::new(AtomicBool::new(false));
+        if armed {
+            let m = dynacomm::obs::expo::MetricsServer::bind("127.0.0.1:0").unwrap();
+            let maddr = m.addr();
+            msrv = Some(m);
+            let stop = stop_scrape.clone();
+            scraper = Some(std::thread::spawn(move || {
+                while !stop.load(Ordering::SeqCst) {
+                    let _ = dynacomm::obs::expo::scrape(maddr);
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            }));
+        }
+        drive_bsp(addr, WORKERS, 0, 3); // warm the slab rotation
+        let mut best = f64::INFINITY;
+        for k in 0..3 {
+            let start = 3 + k * obs_iters;
+            best = best.min(drive_bsp(addr, WORKERS, start, start + obs_iters));
+        }
+        stop_scrape.store(true, Ordering::SeqCst);
+        if let Some(t) = scraper {
+            t.join().unwrap();
+        }
+        if let Some(m) = msrv.as_mut() {
+            m.shutdown();
+        }
+        dynacomm::obs::trace::set_enabled(false);
+        drop(srv);
+        best
+    };
+    let best_off = run_bsp_batch(false);
+    let best_on = run_bsp_batch(true);
+    let obs_overhead_pct = 100.0 * (best_on / best_off - 1.0);
+    assert!(
+        obs_overhead_pct <= 5.0,
+        "obs plane cost {obs_overhead_pct:.2}% of BSP lockstep wall-clock \
+         (target <= 5%)"
+    );
+    println!(
+        "  obs overhead ({obs_iters} iters, best of 3, tracing + live \
+         scraper): off {best_off:.3}s  on {best_on:.3}s  \
+         ({obs_overhead_pct:+.2}%, target <= 5%)"
+    );
+
     let json = Json::obj(vec![
         ("workers", Json::Num(WORKERS as f64)),
         ("layers", Json::Num(LAYERS as f64)),
@@ -822,6 +890,23 @@ fn main() {
                 ("restore_boot_ms", Json::Num(secs_ck_boot * 1e3)),
                 ("roundtrip_byte_identical", Json::Num(1.0)),
             ])]),
+        ),
+        ("obs_overhead_pct", Json::Num(obs_overhead_pct)),
+        ("obs_bsp_secs_off", Json::Num(best_off)),
+        ("obs_bsp_secs_on", Json::Num(best_on)),
+        (
+            "obs_metrics_snapshot",
+            Json::Arr(
+                dynacomm::obs::snapshot_pairs()
+                    .into_iter()
+                    .map(|(series, value)| {
+                        Json::obj(vec![
+                            ("series", Json::Str(series)),
+                            ("value", Json::Num(value)),
+                        ])
+                    })
+                    .collect(),
+            ),
         ),
         ("fast_mode", Json::Num(if common::fast_mode() { 1.0 } else { 0.0 })),
     ]);

@@ -1,0 +1,184 @@
+//! Check 5 — metric-catalog discipline.
+//!
+//! Every series registered through the obs macros (`obs_counter!`,
+//! `obs_gauge!`, `obs_histogram!` — the list comes from `[metrics]` in the
+//! manifest) must:
+//!
+//! 1. pass its name as a **string literal**, so the catalog is statically
+//!    enumerable;
+//! 2. be registered at exactly **one lexical call site** — multi-instance
+//!    series share a site (a constructor or closure) and disambiguate via
+//!    labels, never by re-registering the name elsewhere;
+//! 3. carry the namespace **prefix** (`dynacomm_`);
+//! 4. appear verbatim on the **catalog page** (docs/OBSERVABILITY.md), so
+//!    dashboards and runbooks can trust the doc to be exhaustive.
+//!
+//! Macro *definition* sites (`macro_rules! obs_counter { ... }`) do not
+//! match the `name!(` usage pattern and are naturally skipped, as is
+//! anything inside `#[cfg(test)]`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::super::lexer::TokKind;
+use super::super::manifest::Manifest;
+use super::super::report::Finding;
+use super::super::source::SrcFile;
+
+pub fn check(root: &Path, files: &[SrcFile], manifest: &Manifest) -> Vec<Finding> {
+    match std::fs::read_to_string(root.join(&manifest.metrics.doc)) {
+        Ok(doc_text) => check_files(files, &doc_text, manifest),
+        Err(_) => vec![Finding::new(
+            "metrics",
+            &manifest.metrics.doc,
+            0,
+            "metric catalog page is missing — every obs series must be \
+             documented there"
+                .to_string(),
+        )],
+    }
+}
+
+/// Core pass over already-lexed files, with the catalog page supplied as
+/// text so fixture tests can pin their own synthetic doc.
+pub fn check_files(
+    files: &[SrcFile],
+    doc_text: &str,
+    manifest: &Manifest,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // name -> first registration site, for duplicate reporting.
+    let mut seen: BTreeMap<String, (String, u32)> = BTreeMap::new();
+    for file in files {
+        let code = &file.code;
+        if code.len() < 4 {
+            continue;
+        }
+        for i in 0..code.len() - 3 {
+            let is_obs_macro = code[i].kind == TokKind::Ident
+                && manifest.metrics.macros.iter().any(|m| m == &code[i].text);
+            if !is_obs_macro
+                || !code[i + 1].is_punct('!')
+                || !code[i + 2].is_punct('(')
+                || file.in_test(i)
+            {
+                continue;
+            }
+            let name_tok = &code[i + 3];
+            if name_tok.kind != TokKind::Str {
+                out.push(Finding::new(
+                    "metrics",
+                    &file.path,
+                    code[i].line,
+                    format!(
+                        "`{}!` called with a non-literal series name — names \
+                         must be string literals so the catalog stays \
+                         statically checkable",
+                        code[i].text
+                    ),
+                ));
+                continue;
+            }
+            let name = name_tok.text.clone();
+            if let Some((first_file, first_line)) = seen.get(&name) {
+                out.push(Finding::new(
+                    "metrics",
+                    &file.path,
+                    name_tok.line,
+                    format!(
+                        "series `{name}` registered twice (first at \
+                         {first_file}:{first_line}) — multi-instance series \
+                         must share one lexical call site and disambiguate \
+                         via labels"
+                    ),
+                ));
+                continue;
+            }
+            seen.insert(name.clone(), (file.path.clone(), name_tok.line));
+            if !name.starts_with(&manifest.metrics.prefix) {
+                out.push(Finding::new(
+                    "metrics",
+                    &file.path,
+                    name_tok.line,
+                    format!(
+                        "series `{name}` lacks the `{}` namespace prefix",
+                        manifest.metrics.prefix
+                    ),
+                ));
+            }
+            if !doc_text.contains(&name) {
+                out.push(Finding::new(
+                    "metrics",
+                    &file.path,
+                    name_tok.line,
+                    format!(
+                        "series `{name}` is not documented in {}",
+                        manifest.metrics.doc
+                    ),
+                ));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::from_text(include_str!("../dynalint.toml")).unwrap()
+    }
+
+    fn parse(src: &str) -> SrcFile {
+        SrcFile::parse("fixture.rs", src.to_string())
+    }
+
+    #[test]
+    fn good_fixture_is_clean() {
+        let files = vec![parse(include_str!("../tests/metrics_good.rs"))];
+        let doc = "dynacomm_fixture_hits_total dynacomm_fixture_depth \
+                   dynacomm_fixture_latency_ms";
+        let findings = check_files(&files, doc, &manifest());
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn bad_fixture_seeds_exactly_the_three_violations() {
+        let files = vec![parse(include_str!("../tests/metrics_bad.rs"))];
+        // The prefix-violating name IS documented so it trips only the
+        // prefix rule, and the duplicated name is documented and prefixed
+        // so it trips only the duplicate rule: exactly one finding each.
+        let doc = "dynacomm_fixture_hits_total fixture_depth";
+        let findings = check_files(&files, doc, &manifest());
+        assert_eq!(findings.len(), 3, "{findings:?}");
+        assert!(findings[0].message.contains("registered twice"));
+        assert!(findings[1].message.contains("namespace prefix"));
+        assert!(findings[2].message.contains("not documented"));
+        for f in &findings {
+            assert_eq!(f.check, "metrics");
+            assert!(f.line > 0, "findings carry source positions: {f:?}");
+        }
+    }
+
+    #[test]
+    fn non_literal_names_are_flagged_and_test_code_is_skipped() {
+        let src = "fn f() { let _ = obs_counter!(NAME_CONST); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn t() { let _ = obs_counter!(\"zzz_unprefixed\"); }\n\
+                   }\n";
+        let findings = check_files(&[parse(src)], "", &manifest());
+        assert_eq!(findings.len(), 1, "{findings:?}");
+        assert!(findings[0].message.contains("non-literal"));
+    }
+
+    #[test]
+    fn macro_definition_sites_do_not_match() {
+        let src = "macro_rules! obs_counter {\n\
+                       ($name:literal) => { register($name) };\n\
+                   }\n";
+        let findings = check_files(&[parse(src)], "", &manifest());
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+}

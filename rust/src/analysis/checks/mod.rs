@@ -1,8 +1,9 @@
-//! The four dynalint passes. Each is a pure function from parsed sources
+//! The five dynalint passes. Each is a pure function from parsed sources
 //! (plus the manifest) to findings; the runner in [`crate::analysis`]
 //! walks the tree and concatenates their output.
 
 pub mod alloc;
 pub mod locks;
+pub mod metrics;
 pub mod registry;
 pub mod wire;

@@ -195,7 +195,20 @@ pub struct WireManifest {
     pub fuzz: String,
 }
 
-/// The full typed manifest consumed by the four checks.
+/// Metric-catalog expectations: which macros register series, the
+/// namespace prefix every name must carry, and the doc page that must
+/// list every name.
+#[derive(Debug, Clone)]
+pub struct MetricsManifest {
+    /// Catalog page every series name must appear on.
+    pub doc: String,
+    /// Macro names whose first argument is a series name.
+    pub macros: Vec<String>,
+    /// Required namespace prefix (e.g. `dynacomm_`).
+    pub prefix: String,
+}
+
+/// The full typed manifest consumed by the five checks.
 #[derive(Debug, Clone)]
 pub struct Manifest {
     /// Banned call patterns inside hot-path functions. Shape selects the
@@ -218,6 +231,7 @@ pub struct Manifest {
     pub registries: Vec<RegistryEntry>,
     /// File holding the CLI `HELP` banner every registry name must appear in.
     pub help_source: String,
+    pub metrics: MetricsManifest,
 }
 
 impl Manifest {
@@ -309,6 +323,11 @@ impl Manifest {
             },
             registries,
             help_source: str_key("registry", "help_source")?,
+            metrics: MetricsManifest {
+                doc: str_key("metrics", "doc")?,
+                macros: list_key("metrics", "macros")?,
+                prefix: str_key("metrics", "prefix")?,
+            },
         })
     }
 
@@ -374,6 +393,11 @@ doc = "docs/SCHEDULER.md"
 name = "sync"
 source = "rust/src/ps/sync/mod.rs"
 doc = "docs/SYNC.md"
+
+[metrics]
+doc = "docs/OBSERVABILITY.md"
+macros = ["obs_counter", "obs_gauge", "obs_histogram"]
+prefix = "dynacomm_"
 "#;
 
     #[test]
@@ -388,6 +412,9 @@ doc = "docs/SYNC.md"
         assert_eq!(m.wire.frames, vec![("Pull".to_string(), 1), ("Push".to_string(), 3)]);
         assert_eq!(m.registries.len(), 2);
         assert_eq!(m.registries[1].doc, "docs/SYNC.md");
+        assert_eq!(m.metrics.doc, "docs/OBSERVABILITY.md");
+        assert_eq!(m.metrics.macros.len(), 3);
+        assert_eq!(m.metrics.prefix, "dynacomm_");
     }
 
     #[test]
@@ -403,7 +430,8 @@ doc = "docs/SYNC.md"
     fn the_committed_manifest_parses() {
         let text = include_str!("dynalint.toml");
         let m = Manifest::from_text(text).expect("committed manifest is valid");
-        assert_eq!(m.wire.frames.len(), 11, "one frame per v4 opcode");
+        assert_eq!(m.wire.frames.len(), 14, "one frame per v6 opcode");
         assert_eq!(m.registries.len(), 3, "sched, sync, codec");
+        assert_eq!(m.metrics.macros.len(), 3, "counter, gauge, histogram");
     }
 }

@@ -1,6 +1,6 @@
 //! `dynalint` — the in-repo static-analysis pass.
 //!
-//! Four checks over `rust/`, driven by the declarative manifest at
+//! Five checks over `rust/`, driven by the declarative manifest at
 //! `rust/src/analysis/dynalint.toml` (see `docs/ANALYSIS.md`):
 //!
 //! 1. **alloc** — `// dynalint: hot-path` functions stay allocation-free;
@@ -9,7 +9,9 @@
 //! 3. **wire** — the frame table, decoder coverage, `PROTOCOL_VERSION`,
 //!    `docs/WIRE.md`, and the fuzz generators agree;
 //! 4. **registry** — every sched/sync/codec registry entry is in `NAMES`,
-//!    the CLI help banner, and its doc page.
+//!    the CLI help banner, and its doc page;
+//! 5. **metrics** — every obs series name is a unique, `dynacomm_`-prefixed
+//!    string literal documented in `docs/OBSERVABILITY.md`.
 //!
 //! Everything is hand-rolled (lexer included) because the offline build
 //! environment bans crates.io; the analyzer compiles into the library so
@@ -39,7 +41,7 @@ const FIXTURE_DIR: &str = "rust/src/analysis/tests";
 /// Source roots walked for `.rs` files, relative to the repo root.
 const SCAN_ROOTS: [&str; 2] = ["rust/src", "rust/tests"];
 
-/// Run all four checks over the tree rooted at `root` (the directory
+/// Run all five checks over the tree rooted at `root` (the directory
 /// holding `Cargo.toml`).
 pub fn run(root: &Path) -> Result<Report> {
     let started = std::time::Instant::now();
@@ -63,10 +65,11 @@ pub fn run(root: &Path) -> Result<Report> {
     findings.extend(checks::locks::check(&files, &manifest));
     findings.extend(checks::wire::check(root, &files, &manifest));
     findings.extend(checks::registry::check(root, &files, &manifest));
+    findings.extend(checks::metrics::check(root, &files, &manifest));
     Ok(Report {
         findings,
         files_scanned: files.len(),
-        checks_run: vec!["alloc", "locks", "wire", "registry"],
+        checks_run: vec!["alloc", "locks", "wire", "registry", "metrics"],
         elapsed_ms: started.elapsed().as_secs_f64() * 1e3,
     })
 }
@@ -134,7 +137,7 @@ mod tests {
             "walker saw the tree ({} files)",
             report.files_scanned
         );
-        assert_eq!(report.checks_run.len(), 4);
+        assert_eq!(report.checks_run.len(), 5);
     }
 
     #[test]

@@ -5,7 +5,7 @@ use crate::util::json::Json;
 /// One diagnostic from one check.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Finding {
-    /// Check identifier: `alloc`, `locks`, `wire`, or `registry`.
+    /// Check identifier: `alloc`, `locks`, `wire`, `registry`, or `metrics`.
     pub check: &'static str,
     /// Repo-root-relative path with forward slashes.
     pub file: String,

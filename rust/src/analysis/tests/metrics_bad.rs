@@ -1,0 +1,15 @@
+//! Fixture: seeded metric-catalog violations, one per rule the check
+//! enforces — a duplicated series name, a name without the `dynacomm_`
+//! namespace prefix, and a name absent from the catalog page. Never
+//! compiled — lexed by the metrics check's tests via `include_str!`.
+
+pub fn register_everything() {
+    // Fine: literal, prefixed, documented (in the test's synthetic doc).
+    let _ok = obs_counter!("dynacomm_fixture_hits_total");
+    // Violation 1: same series registered at a second lexical site.
+    let _dup = obs_counter!("dynacomm_fixture_hits_total");
+    // Violation 2: documented, but missing the namespace prefix.
+    let _bare = obs_gauge!("fixture_depth");
+    // Violation 3: prefixed, but nowhere on the catalog page.
+    let _undoc = obs_histogram!("dynacomm_fixture_latency_ms");
+}

@@ -1,0 +1,33 @@
+//! Fixture: a well-behaved metrics module. Every obs series name is a
+//! string literal, registered at one lexical site, carries the
+//! `dynacomm_` prefix, and (per the synthetic doc text the unit test
+//! supplies) is documented. Never compiled — lexed by the metrics check's
+//! tests via `include_str!`.
+
+pub struct FixtureCounters {
+    hits: Counter,
+    depth: Gauge,
+    latency: Histogram,
+}
+
+impl FixtureCounters {
+    /// One lexical call site per series; a multi-instance type would take
+    /// a label argument here instead of re-registering the name.
+    pub fn new() -> FixtureCounters {
+        FixtureCounters {
+            hits: obs_counter!("dynacomm_fixture_hits_total"),
+            depth: obs_gauge!("dynacomm_fixture_depth"),
+            latency: obs_histogram!("dynacomm_fixture_latency_ms"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Test-only registrations are exempt: scratch names here must not
+    // force catalog entries.
+    #[test]
+    fn scratch_names_are_fine_in_tests() {
+        let _ = obs_counter!("scratch_only_in_tests");
+    }
+}

@@ -201,6 +201,23 @@ pub struct SystemConfig {
     /// comfortably exceed the slowest straggler's barrier wait, which
     /// travels over the same sockets.
     pub io_timeout_ms: u64,
+    /// Prometheus scrape listener (`--metrics-addr`,
+    /// docs/OBSERVABILITY.md): when set, the trainer serves text-format
+    /// snapshots of the obs registry at this address. Must parse as a
+    /// socket address (`host:port`; port 0 picks an ephemeral one).
+    /// `None` disables the listener.
+    pub metrics_addr: Option<String>,
+    /// Chrome trace-event JSON output path (`--trace-out`): when set,
+    /// span tracing is armed for the run and the per-thread span rings
+    /// are exported here on shutdown. `None` leaves tracing disarmed.
+    pub trace_out: Option<String>,
+}
+
+/// Check a `--metrics-addr` spelling parses as a socket address.
+pub fn validate_metrics_addr(addr: &str) -> anyhow::Result<()> {
+    addr.parse::<std::net::SocketAddr>().map(|_| ()).map_err(|_| {
+        anyhow::anyhow!("bad metrics addr '{addr}' (want host:port, e.g. 127.0.0.1:9461)")
+    })
 }
 
 /// Parse a `gain-threshold-ms` spelling: `auto` (case-insensitive) or a
@@ -232,6 +249,8 @@ impl Default for SystemConfig {
             agg_sync: SyncMode::Bsp,
             agg_codec: CodecId::Fp32,
             io_timeout_ms: 0,
+            metrics_addr: None,
+            trace_out: None,
         }
     }
 }
@@ -292,6 +311,13 @@ impl SystemConfig {
                 .unwrap_or_else(|| panic!("unknown codec '{s}' (fp32|fp16|int8)"));
         }
         self.io_timeout_ms = args.usize("io-timeout-ms", self.io_timeout_ms as usize) as u64;
+        if let Some(a) = args.get("metrics-addr") {
+            validate_metrics_addr(a).unwrap_or_else(|e| panic!("{e}"));
+            self.metrics_addr = Some(a.to_string());
+        }
+        if let Some(p) = args.get("trace-out") {
+            self.trace_out = Some(p.to_string());
+        }
         assert!(self.group_size >= 1, "--group-size must be >= 1");
         self.agg_sync_config().unwrap_or_else(|e| panic!("{e}"));
         self
@@ -357,13 +383,20 @@ impl SystemConfig {
                 .ok_or_else(|| anyhow::anyhow!("unknown codec '{s}'"))?;
         }
         c.io_timeout_ms = num("io_timeout_ms", c.io_timeout_ms as f64) as u64;
+        if let Some(a) = j.get("metrics_addr").and_then(Json::as_str) {
+            validate_metrics_addr(a)?;
+            c.metrics_addr = Some(a.to_string());
+        }
+        if let Some(p) = j.get("trace_out").and_then(Json::as_str) {
+            c.trace_out = Some(p.to_string());
+        }
         anyhow::ensure!(c.group_size >= 1, "group_size must be >= 1");
         c.agg_sync_config()?;
         Ok(c)
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("rtt_ms", Json::Num(self.net.rtt_ms)),
             ("bandwidth_gbps", Json::Num(self.net.bandwidth_gbps)),
             ("delta_t_ms", Json::Num(self.net.delta_t_ms)),
@@ -390,7 +423,16 @@ impl SystemConfig {
                     Json::Num(self.gain_threshold_ms)
                 },
             ),
-        ])
+        ];
+        // The obs knobs are opt-in: unset knobs are omitted entirely so
+        // configs written before they existed round-trip byte-stable.
+        if let Some(a) = &self.metrics_addr {
+            fields.push(("metrics_addr", Json::Str(a.clone())));
+        }
+        if let Some(p) = &self.trace_out {
+            fields.push(("trace_out", Json::Str(p.clone())));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -550,6 +592,36 @@ mod tests {
             ["--io-timeout-ms", "750"].iter().map(|s| s.to_string()),
         );
         assert_eq!(SystemConfig::default().apply_args(&args).io_timeout_ms, 750);
+    }
+
+    #[test]
+    fn obs_knobs_roundtrip_flags_and_json() {
+        // Defaults: no listener, no trace, and the knobs stay out of JSON.
+        let d = SystemConfig::default();
+        assert_eq!(d.metrics_addr, None);
+        assert_eq!(d.trace_out, None);
+        assert!(!d.to_json().to_string().contains("metrics_addr"));
+        // JSON round-trip.
+        let c = SystemConfig {
+            metrics_addr: Some("127.0.0.1:9461".to_string()),
+            trace_out: Some("trace.json".to_string()),
+            ..SystemConfig::default()
+        };
+        let back =
+            SystemConfig::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, c);
+        // Flags overlay.
+        let args = Args::parse(
+            ["--metrics-addr", "0.0.0.0:0", "--trace-out", "t.json"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        let c = SystemConfig::default().apply_args(&args);
+        assert_eq!(c.metrics_addr.as_deref(), Some("0.0.0.0:0"));
+        assert_eq!(c.trace_out.as_deref(), Some("t.json"));
+        // A malformed address is rejected at JSON load, not at bind time.
+        let bad = Json::obj(vec![("metrics_addr", Json::Str("not-an-addr".to_string()))]);
+        assert!(SystemConfig::from_json(&bad).is_err());
     }
 
     #[test]

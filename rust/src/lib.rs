@@ -23,6 +23,7 @@ pub mod config;
 pub mod figures;
 pub mod models;
 pub mod net;
+pub mod obs;
 pub mod profiler;
 pub mod ps;
 pub mod runtime;

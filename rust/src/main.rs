@@ -85,6 +85,12 @@ FLAGS (defaults = the paper's testbed):
   --checkpoint-every-ms N   periodic checkpoint interval, ms (1000) (train)
   --restore DIR         resume shards byte-identically from the
                         shard-{s}.ckpt files in DIR (train)
+  --metrics-addr ADDR   serve Prometheus text-format snapshots of the obs
+                        registry at host:port (port 0 = ephemeral);
+                        docs/OBSERVABILITY.md (train)
+  --trace-out FILE      arm span tracing and write a Chrome trace-event
+                        JSON timeline (chrome://tracing) on shutdown
+                        (train)
   --no-error-feedback   disable EF-SGD residuals for lossy codecs (train)
   --gain-threshold-ms F skip DynaComm's DP re-plan when the predicted gain
                         is under F ms (0 = re-plan every epoch; `auto`, the
@@ -224,6 +230,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.checkpoint_every_ms =
         args.usize("checkpoint-every-ms", cfg.checkpoint_every_ms as usize) as u64;
     cfg.restore_dir = args.get("restore").map(str::to_string);
+    if let Some(a) = args.get("metrics-addr") {
+        dynacomm::config::validate_metrics_addr(a)?;
+        cfg.metrics_addr = Some(a.to_string());
+    }
+    cfg.trace_out = args.get("trace-out").map(str::to_string);
     if cfg.tier == dynacomm::config::Tier::Regional {
         println!(
             "tier=regional group-size={} agg-sync={} agg-codec={}",

@@ -21,9 +21,9 @@
 
 use std::fmt;
 use std::ops::{Deref, DerefMut};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
+use crate::obs::Counter;
 use crate::util::sync::lock_or_die;
 
 /// Buffers retained by a pool beyond this count are dropped instead of
@@ -57,9 +57,13 @@ pub struct PoolStats {
 pub struct SlabPool {
     free: Mutex<Vec<Vec<u8>>>,
     max_retained: usize,
-    checkouts: AtomicU64,
-    recycled: AtomicU64,
-    allocations: AtomicU64,
+    // Per-pool counters live in the unified obs registry (one
+    // `inst="N"`-labelled series per pool); `stats()` reads them back so
+    // the historical getter surface is a thin adapter over one source of
+    // truth (docs/OBSERVABILITY.md).
+    checkouts: Counter,
+    recycled: Counter,
+    allocations: Counter,
 }
 
 impl SlabPool {
@@ -73,9 +77,9 @@ impl SlabPool {
         Arc::new(SlabPool {
             free: Mutex::new(Vec::new()),
             max_retained,
-            checkouts: AtomicU64::new(0),
-            recycled: AtomicU64::new(0),
-            allocations: AtomicU64::new(0),
+            checkouts: crate::obs_counter!("dynacomm_pool_checkouts_total"),
+            recycled: crate::obs_counter!("dynacomm_pool_recycled_total"),
+            allocations: crate::obs_counter!("dynacomm_pool_allocations_total"),
         })
     }
 
@@ -83,7 +87,7 @@ impl SlabPool {
     /// else a fresh allocation (counted).
     // dynalint: hot-path
     fn grab(&self, cap: usize) -> Vec<u8> {
-        self.checkouts.fetch_add(1, Ordering::SeqCst);
+        self.checkouts.inc();
         let mut free = lock_or_die(&self.free, "pool.free");
         let mut best: Option<usize> = None;
         for (i, b) in free.iter().enumerate() {
@@ -100,12 +104,12 @@ impl SlabPool {
         }
         match best {
             Some(i) => {
-                self.recycled.fetch_add(1, Ordering::SeqCst);
+                self.recycled.inc();
                 free.swap_remove(i)
             }
             None => {
                 drop(free);
-                self.allocations.fetch_add(1, Ordering::SeqCst);
+                self.allocations.inc();
                 Vec::with_capacity(cap)
             }
         }
@@ -153,9 +157,9 @@ impl SlabPool {
 
     pub fn stats(&self) -> PoolStats {
         PoolStats {
-            checkouts: self.checkouts.load(Ordering::SeqCst),
-            recycled: self.recycled.load(Ordering::SeqCst),
-            allocations: self.allocations.load(Ordering::SeqCst),
+            checkouts: self.checkouts.get(),
+            recycled: self.recycled.get(),
+            allocations: self.allocations.get(),
             retained: lock_or_die(&self.free, "pool.free").len(),
         }
     }

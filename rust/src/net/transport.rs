@@ -778,6 +778,25 @@ fn prepare_frame_buf(buf: &mut Vec<u8>, len: usize) {
     }
 }
 
+/// Process-global wire counters in the unified obs registry: one relaxed
+/// atomic op per frame/byte-count on the hot path (docs/OBSERVABILITY.md).
+struct NetCounters {
+    tx_frames: crate::obs::Counter,
+    tx_bytes: crate::obs::Counter,
+    rx_frames: crate::obs::Counter,
+    rx_bytes: crate::obs::Counter,
+}
+
+fn net_counters() -> &'static NetCounters {
+    static CELL: std::sync::OnceLock<NetCounters> = std::sync::OnceLock::new();
+    CELL.get_or_init(|| NetCounters {
+        tx_frames: crate::obs_counter!("dynacomm_net_tx_frames_total"),
+        tx_bytes: crate::obs_counter!("dynacomm_net_tx_bytes_total"),
+        rx_frames: crate::obs_counter!("dynacomm_net_rx_frames_total"),
+        rx_bytes: crate::obs_counter!("dynacomm_net_rx_bytes_total"),
+    })
+}
+
 /// A framed, optionally shaped, connection.
 ///
 /// Each direction owns a scratch buffer: `send` encodes the (small) frame
@@ -814,7 +833,12 @@ impl Connection {
         if let Some(shaper) = &self.shaper {
             shaper.delay_for(self.send_buf.len() + payload.len());
         }
-        write_scattered(&mut self.stream, &self.send_buf, &[payload]).context("send")
+        let wire = self.send_buf.len() + payload.len();
+        write_scattered(&mut self.stream, &self.send_buf, &[payload]).context("send")?;
+        let net = net_counters();
+        net.tx_frames.inc();
+        net.tx_bytes.add(wire as u64);
+        Ok(())
     }
 
     /// Send a `Push` whose slab is scattered across `parts` (e.g. one part
@@ -835,7 +859,12 @@ impl Connection {
         if let Some(shaper) = &self.shaper {
             shaper.delay_for(self.send_buf.len() + data_len);
         }
-        write_scattered(&mut self.stream, &self.send_buf, parts).context("send")
+        let wire = self.send_buf.len() + data_len;
+        write_scattered(&mut self.stream, &self.send_buf, parts).context("send")?;
+        let net = net_counters();
+        net.tx_frames.inc();
+        net.tx_bytes.add(wire as u64);
+        Ok(())
     }
 
     /// Receive one message (blocking), owned.
@@ -854,6 +883,9 @@ impl Connection {
         self.stream
             .read_exact(&mut self.recv_buf[..len])
             .context("recv payload")?;
+        let net = net_counters();
+        net.rx_frames.inc();
+        net.rx_bytes.add(4 + len as u64);
         MessageRef::decode(&self.recv_buf[..len])
     }
 
@@ -884,6 +916,9 @@ impl Connection {
         let len = read_frame_len(&mut self.stream)?;
         let mut frame = pool.checkout_filled(len);
         self.stream.read_exact(&mut frame[..]).context("recv payload")?;
+        let net = net_counters();
+        net.rx_frames.inc();
+        net.rx_bytes.add(4 + len as u64);
         // One decode, fully validating the frame.
         let parsed = match MessageRef::decode(&frame[..])? {
             MessageRef::PullReply { iter, lo, hi, applied, codec, data } => {

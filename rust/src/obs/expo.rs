@@ -1,0 +1,144 @@
+//! Exposition: a tiny hand-rolled HTTP/1.1 listener serving Prometheus
+//! text-format snapshots of the whole registry (`--metrics-addr`). No
+//! crates, no routing — every request gets the full scrape body.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::Context;
+
+/// Background scrape endpoint. Binds eagerly (so `127.0.0.1:0` reports the
+/// picked port via [`MetricsServer::addr`]) and serves one request per
+/// connection until dropped or [`MetricsServer::shutdown`].
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    pub fn bind(addr: &str) -> anyhow::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics listener on {addr}"))?;
+        let local = listener.local_addr().context("metrics listener addr")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("obs-expo".into())
+            .spawn(move || serve(listener, stop2))
+            .context("spawning metrics listener thread")?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (resolved port for `:0` binds).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the listener and join its thread. Idempotent.
+    pub fn shutdown(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            self.stop.store(true, Ordering::SeqCst);
+            // Unblock the accept loop with a throwaway connection.
+            let _ = TcpStream::connect(self.addr);
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn serve(listener: TcpListener, stop: Arc<AtomicBool>) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let Ok(mut stream) = conn else { continue };
+        let _ = handle_one(&mut stream);
+    }
+}
+
+fn handle_one(stream: &mut TcpStream) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    // Drain the request head (bounded); the path is ignored — every
+    // request is a scrape.
+    let mut head = [0u8; 4096];
+    let mut seen = 0usize;
+    while seen < head.len() {
+        let n = stream.read(&mut head[seen..])?;
+        if n == 0 {
+            break;
+        }
+        seen += n;
+        if head[..seen].windows(4).any(|w| w == b"\r\n\r\n") {
+            break;
+        }
+    }
+    let body = super::render_prometheus();
+    let response = format!(
+        "HTTP/1.1 200 OK\r\n\
+         Content-Type: text/plain; version=0.0.4\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{}",
+        body.len(),
+        body
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+/// Scrape `addr` once over plain HTTP and return the exposition body.
+/// Used by tests, the CI e2e job, and the bench harness.
+pub fn scrape(addr: SocketAddr) -> anyhow::Result<String> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to metrics endpoint {addr}"))?;
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .context("scrape read timeout")?;
+    stream
+        .write_all(b"GET /metrics HTTP/1.1\r\nHost: dynacomm\r\nConnection: close\r\n\r\n")
+        .context("writing scrape request")?;
+    let mut raw = String::new();
+    stream
+        .read_to_string(&mut raw)
+        .context("reading scrape response")?;
+    let split = raw
+        .find("\r\n\r\n")
+        .context("scrape response missing header/body separator")?;
+    anyhow::ensure!(
+        raw.starts_with("HTTP/1.1 200"),
+        "scrape returned non-200: {}",
+        raw.lines().next().unwrap_or("")
+    );
+    Ok(raw[split + 4..].to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bind_scrape_and_shutdown() {
+        let counter = crate::obs::register_counter("dynacomm_test_expo", "");
+        counter.add(11);
+        let mut srv = MetricsServer::bind("127.0.0.1:0").expect("bind");
+        let body = scrape(srv.addr()).expect("scrape");
+        assert!(body.contains("# TYPE dynacomm_test_expo counter"));
+        assert!(
+            body.lines()
+                .any(|l| l.starts_with("dynacomm_test_expo{") && l.ends_with(" 11")),
+            "series row missing:\n{body}"
+        );
+        srv.shutdown();
+        srv.shutdown(); // idempotent
+        assert!(TcpStream::connect(srv.addr()).is_err() || scrape(srv.addr()).is_err());
+    }
+}

@@ -1,0 +1,482 @@
+//! Unified observability plane: a process-global, dependency-free metrics
+//! registry (counters / gauges / log2-bucket histograms), per-thread span
+//! tracing with Chrome trace-event export ([`trace`]), and a hand-rolled
+//! Prometheus-text scrape endpoint ([`expo`]). See docs/OBSERVABILITY.md.
+//!
+//! Design constraints (docs/OBSERVABILITY.md has the full rationale):
+//!
+//! * **Hot-path cost is one relaxed atomic op.** Handles ([`Counter`],
+//!   [`Gauge`], [`Histogram`]) are `Arc`-backed atomics created once at
+//!   construction time; `inc`/`add`/`set` touch no locks and allocate
+//!   nothing, so `dynalint`'s hot-path allocation check stays clean.
+//! * **Registration is cold and named.** Every series registers through the
+//!   [`obs_counter!`] / [`obs_gauge!`] / [`obs_histogram!`] macros with a
+//!   `'static` string-literal name — the dynalint `metrics` check walks
+//!   those call sites and holds each name to uniqueness, the `dynacomm_`
+//!   prefix, and a docs/OBSERVABILITY.md catalog entry.
+//! * **Instances, not globals.** Components that exist many times per
+//!   process (slab pools, reply caches, codec tables) register one series
+//!   per instance; the registry appends an automatic `inst="N"` label so
+//!   concurrent instances render as distinct Prometheus series, and weak
+//!   registry entries are pruned once the owning instance drops.
+
+pub mod expo;
+pub mod trace;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+
+use crate::util::sync::lock_or_die;
+
+/// Number of histogram buckets: 31 finite log2 bounds plus `+Inf`.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Upper bound of finite bucket `i`: `2^(i-6)`, i.e. 0.015625 … 2^24.
+/// Values are unit-agnostic; ms-scale and byte-scale series both fit.
+pub fn bucket_bound(i: usize) -> f64 {
+    2.0f64.powi(i as i32 - 6)
+}
+
+fn bucket_index(v: f64) -> usize {
+    let mut i = 0;
+    while i < HIST_BUCKETS - 1 && v > bucket_bound(i) {
+        i += 1;
+    }
+    i
+}
+
+/// Lock-free CAS-add of an f64 stored as bits in an `AtomicU64`.
+fn add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Lock-free CAS-max of an f64 stored as bits in an `AtomicU64`.
+fn max_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        if f64::from_bits(cur) >= v {
+            return;
+        }
+        match cell.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Monotone counter. `inc` is a single relaxed `fetch_add`.
+#[derive(Clone, Debug)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time gauge holding an f64 (stored as bits). `set` is a single
+/// relaxed store; `add`/`max` are short CAS loops for the rarer
+/// increment/decrement and high-watermark shapes.
+#[derive(Clone, Debug)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+    pub fn add(&self, delta: f64) {
+        add_f64(&self.0, delta);
+    }
+    pub fn max(&self, v: f64) {
+        max_f64(&self.0, v);
+    }
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Shared histogram state: log2 buckets + count + f64-bits sum.
+#[derive(Debug)]
+pub struct HistCore {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl HistCore {
+    fn new() -> Self {
+        HistCore {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Log2-bucket histogram. `observe` is lock-free: one bucket `fetch_add`,
+/// one count `fetch_add`, one CAS-add for the sum.
+#[derive(Clone, Debug)]
+pub struct Histogram(Arc<HistCore>);
+
+impl Histogram {
+    pub fn observe(&self, v: f64) {
+        self.0.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.0.count.fetch_add(1, Ordering::Relaxed);
+        add_f64(&self.0.sum_bits, v);
+    }
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+    /// Per-bucket (non-cumulative) counts, for tests and snapshots.
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.0.buckets[i].load(Ordering::Relaxed))
+    }
+}
+
+enum Slot {
+    Counter(Weak<AtomicU64>),
+    Gauge(Weak<AtomicU64>),
+    Histogram(Weak<HistCore>),
+}
+
+struct Entry {
+    name: &'static str,
+    labels: String,
+    slot: Slot,
+}
+
+fn registry() -> &'static Mutex<Vec<Entry>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Entry>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Every registration gets a process-unique `inst="N"` label so concurrent
+/// instances of the same component (test servers, per-worker pools) render
+/// as distinct Prometheus series rather than colliding on one name+labels.
+fn full_labels(extra: &str) -> String {
+    static INSTANCES: AtomicUsize = AtomicUsize::new(0);
+    let inst = INSTANCES.fetch_add(1, Ordering::Relaxed);
+    if extra.is_empty() {
+        format!("inst=\"{inst}\"")
+    } else {
+        format!("{extra},inst=\"{inst}\"")
+    }
+}
+
+/// Register a counter series. Prefer the [`obs_counter!`] macro: the
+/// dynalint `metrics` check audits macro call sites for name uniqueness
+/// and docs/OBSERVABILITY.md coverage.
+pub fn register_counter(name: &'static str, labels: &str) -> Counter {
+    let cell = Arc::new(AtomicU64::new(0));
+    lock_or_die(registry(), "obs.registry").push(Entry {
+        name,
+        labels: full_labels(labels),
+        slot: Slot::Counter(Arc::downgrade(&cell)),
+    });
+    Counter(cell)
+}
+
+/// Register a gauge series (see [`register_counter`] for macro guidance).
+pub fn register_gauge(name: &'static str, labels: &str) -> Gauge {
+    let cell = Arc::new(AtomicU64::new(0f64.to_bits()));
+    lock_or_die(registry(), "obs.registry").push(Entry {
+        name,
+        labels: full_labels(labels),
+        slot: Slot::Gauge(Arc::downgrade(&cell)),
+    });
+    Gauge(cell)
+}
+
+/// Register a histogram series (see [`register_counter`] for macro guidance).
+pub fn register_histogram(name: &'static str, labels: &str) -> Histogram {
+    let core = Arc::new(HistCore::new());
+    lock_or_die(registry(), "obs.registry").push(Entry {
+        name,
+        labels: full_labels(labels),
+        slot: Slot::Histogram(Arc::downgrade(&core)),
+    });
+    Histogram(core)
+}
+
+/// Register a counter in the unified metrics registry.
+///
+/// `obs_counter!("dynacomm_x_total")` or
+/// `obs_counter!("dynacomm_x_total", labels)` where `labels` is a
+/// `key="value"` fragment (the registry appends `inst="N"` itself).
+#[macro_export]
+macro_rules! obs_counter {
+    ($name:literal) => {
+        $crate::obs::register_counter($name, "")
+    };
+    ($name:literal, $labels:expr) => {
+        $crate::obs::register_counter($name, &$labels)
+    };
+}
+
+/// Register a gauge in the unified metrics registry (see [`obs_counter!`]).
+#[macro_export]
+macro_rules! obs_gauge {
+    ($name:literal) => {
+        $crate::obs::register_gauge($name, "")
+    };
+    ($name:literal, $labels:expr) => {
+        $crate::obs::register_gauge($name, &$labels)
+    };
+}
+
+/// Register a histogram in the unified metrics registry (see
+/// [`obs_counter!`]).
+#[macro_export]
+macro_rules! obs_histogram {
+    ($name:literal) => {
+        $crate::obs::register_histogram($name, "")
+    };
+    ($name:literal, $labels:expr) => {
+        $crate::obs::register_histogram($name, &$labels)
+    };
+}
+
+enum Sample {
+    Counter(u64),
+    Gauge(f64),
+    Histogram([u64; HIST_BUCKETS], u64, f64),
+}
+
+/// Snapshot the live registry, pruning entries whose owner has dropped.
+fn collect() -> Vec<(&'static str, String, Sample)> {
+    let mut reg = lock_or_die(registry(), "obs.registry");
+    reg.retain(|e| match &e.slot {
+        Slot::Counter(w) | Slot::Gauge(w) => w.strong_count() > 0,
+        Slot::Histogram(w) => w.strong_count() > 0,
+    });
+    let mut out = Vec::with_capacity(reg.len());
+    for e in reg.iter() {
+        let sample = match &e.slot {
+            Slot::Counter(w) => match w.upgrade() {
+                Some(c) => Sample::Counter(c.load(Ordering::Relaxed)),
+                None => continue,
+            },
+            Slot::Gauge(w) => match w.upgrade() {
+                Some(g) => Sample::Gauge(f64::from_bits(g.load(Ordering::Relaxed))),
+                None => continue,
+            },
+            Slot::Histogram(w) => match w.upgrade() {
+                Some(h) => Sample::Histogram(
+                    std::array::from_fn(|i| h.buckets[i].load(Ordering::Relaxed)),
+                    h.count.load(Ordering::Relaxed),
+                    f64::from_bits(h.sum_bits.load(Ordering::Relaxed)),
+                ),
+                None => continue,
+            },
+        };
+        out.push((e.name, e.labels.clone(), sample));
+    }
+    out.sort_by(|a, b| (a.0, &a.1).cmp(&(b.0, &b.1)));
+    out
+}
+
+/// Render the whole registry in Prometheus text exposition format
+/// (`# TYPE` comments plus `name{labels} value` lines; histograms expand
+/// to cumulative `_bucket{le=...}` / `_sum` / `_count` series).
+pub fn render_prometheus() -> String {
+    let mut out = String::new();
+    let mut last_type: Option<&'static str> = None;
+    for (name, labels, sample) in collect() {
+        if last_type != Some(name) {
+            let kind = match sample {
+                Sample::Counter(_) => "counter",
+                Sample::Gauge(_) => "gauge",
+                Sample::Histogram(..) => "histogram",
+            };
+            out.push_str(&format!("# TYPE {name} {kind}\n"));
+            last_type = Some(name);
+        }
+        match sample {
+            Sample::Counter(v) => out.push_str(&format!("{name}{{{labels}}} {v}\n")),
+            Sample::Gauge(v) => out.push_str(&format!("{name}{{{labels}}} {v}\n")),
+            Sample::Histogram(buckets, count, sum) => {
+                let mut cum = 0u64;
+                for (i, b) in buckets.iter().enumerate() {
+                    cum += b;
+                    if i < HIST_BUCKETS - 1 {
+                        let le = bucket_bound(i);
+                        out.push_str(&format!("{name}_bucket{{{labels},le=\"{le}\"}} {cum}\n"));
+                    } else {
+                        out.push_str(&format!("{name}_bucket{{{labels},le=\"+Inf\"}} {cum}\n"));
+                    }
+                }
+                out.push_str(&format!("{name}_sum{{{labels}}} {sum}\n"));
+                out.push_str(&format!("{name}_count{{{labels}}} {count}\n"));
+            }
+        }
+    }
+    out
+}
+
+/// Flat `(series, value)` snapshot for embedding in `WorkerReport` and the
+/// bench JSON: counters and gauges one entry each, histograms contribute
+/// `_count` and `_sum`.
+pub fn snapshot_pairs() -> Vec<(String, f64)> {
+    let mut out = Vec::new();
+    for (name, labels, sample) in collect() {
+        match sample {
+            Sample::Counter(v) => out.push((format!("{name}{{{labels}}}"), v as f64)),
+            Sample::Gauge(v) => out.push((format!("{name}{{{labels}}}"), v)),
+            Sample::Histogram(_, count, sum) => {
+                out.push((format!("{name}_count{{{labels}}}"), count as f64));
+                out.push((format!("{name}_sum{{{labels}}}"), sum));
+            }
+        }
+    }
+    out
+}
+
+/// Sum a series' value across all live instances whose rendered name
+/// matches `name` exactly (labels ignored). Histograms sum their counts.
+pub fn series_total(name: &str) -> f64 {
+    let mut total = 0.0;
+    for (n, _, sample) in collect() {
+        if n == name {
+            total += match sample {
+                Sample::Counter(v) => v as f64,
+                Sample::Gauge(v) => v,
+                Sample::Histogram(_, count, _) => count as f64,
+            };
+        }
+    }
+    total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_inc_add_get() {
+        let c = register_counter("dynacomm_test_ctr", "");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_set_add_max() {
+        let g = register_gauge("dynacomm_test_gauge", "");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        g.add(1.0);
+        assert_eq!(g.get(), 3.5);
+        g.add(-3.5);
+        assert_eq!(g.get(), 0.0);
+        g.max(7.0);
+        g.max(1.0);
+        assert_eq!(g.get(), 7.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_moments() {
+        let h = register_histogram("dynacomm_test_hist", "");
+        // bound(6) = 1.0, so 0.5 lands at index 5, 1.0 at 6, 1.5 at 7.
+        h.observe(0.5);
+        h.observe(1.0);
+        h.observe(1.5);
+        h.observe(1e12); // beyond the last finite bound -> +Inf bucket
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - (3.0 + 1e12)).abs() < 1e-3);
+        let b = h.bucket_counts();
+        assert_eq!(b[5], 1);
+        assert_eq!(b[6], 1);
+        assert_eq!(b[7], 1);
+        assert_eq!(b[HIST_BUCKETS - 1], 1);
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_clamped() {
+        assert_eq!(bucket_index(-1.0), 0);
+        assert_eq!(bucket_index(0.0), 0);
+        let mut prev = 0;
+        let mut v = 0.001;
+        while v < 1e9 {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index regressed at {v}");
+            assert!(i < HIST_BUCKETS);
+            if i < HIST_BUCKETS - 1 {
+                assert!(v <= bucket_bound(i));
+            }
+            if i > 0 {
+                assert!(v > bucket_bound(i - 1));
+            }
+            prev = i;
+            v *= 1.7;
+        }
+    }
+
+    #[test]
+    fn render_has_type_lines_and_distinct_instances() {
+        let a = register_counter("dynacomm_test_render", "shard=\"0\"");
+        let b = register_counter("dynacomm_test_render", "shard=\"0\"");
+        a.inc();
+        b.add(2);
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE dynacomm_test_render counter"));
+        // Same name+labels, two instances: both render thanks to inst="N".
+        let rows: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("dynacomm_test_render{"))
+            .collect();
+        assert!(rows.len() >= 2, "expected two instance rows, got {rows:?}");
+        assert!(rows.iter().all(|r| r.contains("shard=\"0\",inst=\"")));
+    }
+
+    #[test]
+    fn dropped_instances_are_pruned() {
+        let c = register_counter("dynacomm_test_pruned", "");
+        c.inc();
+        assert!(render_prometheus().contains("dynacomm_test_pruned{"));
+        drop(c);
+        assert!(!render_prometheus().contains("dynacomm_test_pruned{"));
+    }
+
+    #[test]
+    fn snapshot_pairs_expands_histograms() {
+        let h = register_histogram("dynacomm_test_snap_hist", "");
+        h.observe(2.0);
+        h.observe(4.0);
+        let pairs = snapshot_pairs();
+        let count = pairs
+            .iter()
+            .find(|(k, _)| k.starts_with("dynacomm_test_snap_hist_count{"))
+            .expect("count entry");
+        let sum = pairs
+            .iter()
+            .find(|(k, _)| k.starts_with("dynacomm_test_snap_hist_sum{"))
+            .expect("sum entry");
+        assert_eq!(count.1, 2.0);
+        assert_eq!(sum.1, 6.0);
+    }
+
+    #[test]
+    fn series_total_sums_instances() {
+        let a = register_counter("dynacomm_test_total", "");
+        let b = register_counter("dynacomm_test_total", "");
+        a.add(3);
+        b.add(4);
+        assert_eq!(series_total("dynacomm_test_total"), 7.0);
+    }
+}

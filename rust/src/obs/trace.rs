@@ -1,0 +1,360 @@
+//! Span tracing: fixed-capacity per-thread ring buffers of completed
+//! begin/end events, exportable as Chrome trace-event JSON
+//! (`chrome://tracing` / Perfetto) so the comms–compute overlap the
+//! scheduler *predicts* is literally visible per iteration. See
+//! docs/OBSERVABILITY.md for the span taxonomy.
+//!
+//! Recording discipline:
+//!
+//! * Tracing is globally armed via [`set_enabled`]; when off, [`span`]
+//!   returns a disarmed guard and costs one relaxed load.
+//! * A [`SpanGuard`] stamps its begin time at construction and records the
+//!   completed `(name, begin, end)` triple into the calling thread's ring
+//!   on drop — only *finished* spans are stored, so exported traces have
+//!   balanced B/E pairs by construction.
+//! * Each ring is single-writer (its thread) and overwrite-oldest at
+//!   capacity ([`RING_CAP`]); readers tolerate in-flight overwrites because
+//!   export happens at quiescent points (end of run / scrape).
+
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::sync::lock_or_die;
+
+/// Default per-thread ring capacity (spans retained per thread).
+pub const RING_CAP: usize = 4096;
+
+/// Span name table: index == the `u32` id passed to [`span`].
+pub const SPAN_NAMES: &[&str] = &[
+    "iteration",
+    "pull-seg",
+    "decode-seg",
+    "fwd-layer",
+    "loss",
+    "bwd-layer",
+    "grad-encode",
+    "push-seg",
+    "assemble",
+    "apply",
+    "agg-fan-in",
+    "agg-fan-out",
+    "agg-forward",
+];
+
+pub const SPAN_ITERATION: u32 = 0;
+pub const SPAN_PULL_SEG: u32 = 1;
+pub const SPAN_DECODE_SEG: u32 = 2;
+pub const SPAN_FWD_LAYER: u32 = 3;
+pub const SPAN_LOSS: u32 = 4;
+pub const SPAN_BWD_LAYER: u32 = 5;
+pub const SPAN_GRAD_ENCODE: u32 = 6;
+pub const SPAN_PUSH_SEG: u32 = 7;
+pub const SPAN_ASSEMBLE: u32 = 8;
+pub const SPAN_APPLY: u32 = 9;
+pub const SPAN_AGG_FAN_IN: u32 = 10;
+pub const SPAN_AGG_FAN_OUT: u32 = 11;
+pub const SPAN_AGG_FORWARD: u32 = 12;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Arm or disarm span recording process-wide (`--trace-out` sets this).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether span recording is currently armed.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Monotone nanoseconds since the first observability event in the process.
+pub fn now_ns() -> u64 {
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+struct SpanSlot {
+    /// Span-name id; `u32::MAX` marks a never-written slot.
+    name: AtomicU32,
+    begin_ns: AtomicU64,
+    end_ns: AtomicU64,
+}
+
+/// Fixed-capacity overwrite-oldest span ring. Public so tests can exercise
+/// the overflow policy directly; production rings are per-thread and
+/// created lazily by [`span`].
+pub struct Ring {
+    cap: usize,
+    head: AtomicUsize,
+    slots: Vec<SpanSlot>,
+}
+
+impl Ring {
+    pub fn new(cap: usize) -> Ring {
+        assert!(cap > 0, "span ring capacity must be positive");
+        Ring {
+            cap,
+            head: AtomicUsize::new(0),
+            slots: (0..cap)
+                .map(|_| SpanSlot {
+                    name: AtomicU32::new(u32::MAX),
+                    begin_ns: AtomicU64::new(0),
+                    end_ns: AtomicU64::new(0),
+                })
+                .collect(),
+        }
+    }
+
+    /// Record one completed span, overwriting the oldest entry at capacity.
+    pub fn record(&self, name: u32, begin_ns: u64, end_ns: u64) {
+        let idx = self.head.fetch_add(1, Ordering::Relaxed) % self.cap;
+        let slot = &self.slots[idx];
+        slot.begin_ns.store(begin_ns, Ordering::Relaxed);
+        slot.end_ns.store(end_ns, Ordering::Relaxed);
+        slot.name.store(name, Ordering::Relaxed);
+    }
+
+    /// Retained spans, oldest first: `(name, begin_ns, end_ns)`.
+    pub fn snapshot(&self) -> Vec<(u32, u64, u64)> {
+        let head = self.head.load(Ordering::Relaxed);
+        let n = head.min(self.cap);
+        let mut out = Vec::with_capacity(n);
+        for k in 0..n {
+            let idx = if head <= self.cap { k } else { (head + k) % self.cap };
+            let slot = &self.slots[idx];
+            let name = slot.name.load(Ordering::Relaxed);
+            if name == u32::MAX {
+                continue;
+            }
+            out.push((
+                name,
+                slot.begin_ns.load(Ordering::Relaxed),
+                slot.end_ns.load(Ordering::Relaxed),
+            ));
+        }
+        out
+    }
+}
+
+fn rings_store() -> &'static Mutex<Vec<(String, Arc<Ring>)>> {
+    static RINGS: OnceLock<Mutex<Vec<(String, Arc<Ring>)>>> = OnceLock::new();
+    RINGS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_RING: Arc<Ring> = register_thread_ring();
+}
+
+fn register_thread_ring() -> Arc<Ring> {
+    let ring = Arc::new(Ring::new(RING_CAP));
+    let name = std::thread::current()
+        .name()
+        .unwrap_or("unnamed")
+        .to_string();
+    lock_or_die(rings_store(), "obs.rings").push((name, ring.clone()));
+    ring
+}
+
+/// RAII span: stamps begin at construction, records `(name, begin, end)`
+/// into the calling thread's ring on drop. Disarmed (free) when tracing is
+/// off. The first span on a thread registers that thread's ring (one
+/// allocation); steady state allocates nothing.
+pub struct SpanGuard {
+    name: u32,
+    begin_ns: u64,
+    armed: bool,
+}
+
+/// Open a span for `name` (one of the `SPAN_*` ids).
+pub fn span(name: u32) -> SpanGuard {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return SpanGuard { name, begin_ns: 0, armed: false };
+    }
+    SpanGuard { name, begin_ns: now_ns(), armed: true }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let end = now_ns();
+        // try_with: a guard dropped during thread teardown (TLS already
+        // destroyed) silently loses its span instead of aborting.
+        let _ = LOCAL_RING.try_with(|r| r.record(self.name, self.begin_ns, end));
+    }
+}
+
+struct TraceEvent {
+    ts_us: f64,
+    /// 0 = end, 1 = begin: at equal timestamps close the previous span
+    /// before opening the next so the per-tid stack stays well nested.
+    phase: u8,
+    /// Tie-break between same-phase events at one timestamp: begins open
+    /// longest-first (outermost first), ends close shortest-first.
+    dur_ns: u64,
+    name: u32,
+}
+
+/// Export every thread's retained spans as Chrome trace-event JSON
+/// (`{"traceEvents": [...]}` with `B`/`E` duration events plus
+/// `thread_name` metadata). Timestamps are microseconds.
+pub fn chrome_trace_json() -> String {
+    let rings = lock_or_die(rings_store(), "obs.rings");
+    let mut out = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    for (tid, (tname, ring)) in rings.iter().enumerate() {
+        let spans = ring.snapshot();
+        if spans.is_empty() {
+            continue;
+        }
+        let mut events = Vec::with_capacity(spans.len() * 2);
+        for (name, begin, end) in spans {
+            let dur = end.saturating_sub(begin);
+            events.push(TraceEvent { ts_us: begin as f64 / 1e3, phase: 1, dur_ns: dur, name });
+            events.push(TraceEvent { ts_us: end as f64 / 1e3, phase: 0, dur_ns: dur, name });
+        }
+        events.sort_by(|a, b| {
+            a.ts_us
+                .partial_cmp(&b.ts_us)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.phase.cmp(&b.phase))
+                .then(if a.phase == 1 {
+                    b.dur_ns.cmp(&a.dur_ns) // begins: longest (outermost) first
+                } else {
+                    a.dur_ns.cmp(&b.dur_ns) // ends: shortest (innermost) first
+                })
+        });
+        if !first {
+            out.push(',');
+        }
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+             \"args\":{{\"name\":\"{tname}\"}}}}"
+        ));
+        for e in events {
+            let ph = if e.phase == 1 { "B" } else { "E" };
+            let sname = SPAN_NAMES
+                .get(e.name as usize)
+                .copied()
+                .unwrap_or("unknown");
+            out.push_str(&format!(
+                ",{{\"name\":\"{sname}\",\"cat\":\"dynacomm\",\"ph\":\"{ph}\",\
+                 \"ts\":{:.3},\"pid\":1,\"tid\":{tid}}}",
+                e.ts_us
+            ));
+        }
+    }
+    out.push_str("]}");
+    out
+}
+
+/// Write the Chrome trace for the whole process to `path` (`--trace-out`).
+pub fn write_chrome_trace(path: &str) -> anyhow::Result<()> {
+    use anyhow::Context;
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating trace dir {}", dir.display()))?;
+        }
+    }
+    std::fs::write(path, chrome_trace_json())
+        .with_context(|| format!("writing chrome trace to {path}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_overflow_drops_oldest() {
+        let r = Ring::new(4);
+        for i in 0..7u32 {
+            r.record(i, i as u64 * 10, i as u64 * 10 + 5);
+        }
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 4);
+        // Oldest three (0, 1, 2) dropped; survivors in oldest-first order.
+        let names: Vec<u32> = snap.iter().map(|s| s.0).collect();
+        assert_eq!(names, vec![3, 4, 5, 6]);
+        assert_eq!(snap[0].1, 30);
+        assert_eq!(snap[3].2, 65);
+    }
+
+    #[test]
+    fn ring_under_capacity_keeps_everything_in_order() {
+        let r = Ring::new(8);
+        r.record(2, 1, 2);
+        r.record(3, 3, 4);
+        assert_eq!(r.snapshot(), vec![(2, 1, 2), (3, 3, 4)]);
+    }
+
+    // Single test for everything that toggles the process-global ENABLED
+    // flag: separate #[test]s would race each other under the parallel
+    // test harness.
+    #[test]
+    fn span_recording_and_chrome_export() {
+        // Disarmed: a guard neither registers a ring nor records a span.
+        set_enabled(false);
+        std::thread::Builder::new()
+            .name("obs-test-disarmed".into())
+            .spawn(|| {
+                let _g = span(SPAN_LOSS);
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        assert!(
+            !lock_or_die(rings_store(), "obs.rings")
+                .iter()
+                .any(|(n, _)| n == "obs-test-disarmed"),
+            "disarmed span must not register a thread ring"
+        );
+
+        // Armed: spans land in the recording thread's ring, completed.
+        set_enabled(true);
+        std::thread::Builder::new()
+            .name("obs-test-armed".into())
+            .spawn(|| {
+                let _outer = span(SPAN_ITERATION);
+                for _ in 0..3 {
+                    let _inner = span(SPAN_FWD_LAYER);
+                }
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        set_enabled(false);
+        {
+            let rings = lock_or_die(rings_store(), "obs.rings");
+            let (_, ring) = rings
+                .iter()
+                .find(|(n, _)| n == "obs-test-armed")
+                .expect("armed thread ring registered");
+            let snap = ring.snapshot();
+            assert_eq!(snap.len(), 4, "outer + 3 inner spans");
+            assert!(snap.iter().all(|s| s.2 >= s.1), "end >= begin");
+        }
+
+        // Export: valid JSON, balanced B/E pairs.
+        let json = chrome_trace_json();
+        let parsed = crate::util::json::Json::parse(&json).expect("valid JSON");
+        let events = parsed
+            .get("traceEvents")
+            .and_then(|e| e.as_arr())
+            .expect("traceEvents array");
+        let mut begins = 0usize;
+        let mut ends = 0usize;
+        for e in events {
+            match e.get("ph").and_then(|p| p.as_str()) {
+                Some("B") => begins += 1,
+                Some("E") => ends += 1,
+                _ => {}
+            }
+        }
+        assert!(begins >= 4, "expected at least the 4 test spans, got {begins}");
+        assert_eq!(begins, ends, "balanced B/E pairs");
+    }
+}

@@ -164,7 +164,9 @@ struct Shared {
     /// that includes the group's own latest contribution and the shared
     /// reply invalidates once per forwarded round.
     fwd_iter: AtomicU64,
-    forwarded: AtomicU64,
+    /// Combined per-layer pushes forwarded upstream
+    /// (`dynacomm_agg_forwarded_pushes_total` in the obs registry).
+    forwarded: crate::obs::Counter,
     shutting_down: AtomicBool,
     connected: AtomicU32,
     /// Live downstream sockets (kill registry, as on the server).
@@ -272,10 +274,10 @@ impl RegionalAggregator {
             io_timeout_ms: cfg.io_timeout_ms,
             up_codec,
             pool: SlabPool::new(),
-            reply_cache: ReplyCache::new(),
+            reply_cache: ReplyCache::new("agg"),
             registry: Mutex::new(Registry { peers: HashMap::new(), departed: 0 }),
             fwd_iter: AtomicU64::new(0),
-            forwarded: AtomicU64::new(0),
+            forwarded: crate::obs_counter!("dynacomm_agg_forwarded_pushes_total"),
             shutting_down: AtomicBool::new(false),
             connected: AtomicU32::new(0),
             conns: Mutex::new(Vec::new()),
@@ -299,9 +301,9 @@ impl RegionalAggregator {
 
     pub fn stats(&self) -> AggStats {
         AggStats {
-            reply_cache_hits: self.shared.reply_cache.hits.load(Ordering::SeqCst),
-            reply_cache_builds: self.shared.reply_cache.builds.load(Ordering::SeqCst),
-            forwarded_pushes: self.shared.forwarded.load(Ordering::SeqCst),
+            reply_cache_hits: self.shared.reply_cache.hits.get(),
+            reply_cache_builds: self.shared.reply_cache.builds.get(),
+            forwarded_pushes: self.shared.forwarded.get(),
             connected: self.shared.connected.load(Ordering::SeqCst),
         }
     }
@@ -485,6 +487,7 @@ fn accumulate_push(
     data: &[u8],
     weight: u32,
 ) -> Result<Vec<Completed>> {
+    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_AGG_FAN_IN);
     let wc = codec_id.codec();
     let target = group_target(shared);
     let mut off = 0usize;
@@ -515,6 +518,7 @@ fn accumulate_push(
 /// ack under that shard's push-connection lock). The push is a *sum*, not
 /// an average — the shard's `lr / total-workers` scaling averages it.
 fn forward_push(shared: &Shared, c: Completed) -> Result<()> {
+    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_AGG_FORWARD);
     let raw = slab::from_f32s(&c.sum);
     let wc = shared.up_codec.codec();
     let mut wire = Vec::with_capacity(shared.up_codec.wire_len(raw.len()));
@@ -534,7 +538,7 @@ fn forward_push(shared: &Shared, c: Completed) -> Result<()> {
             m => anyhow::bail!("bad upstream push ack: {m:?}"),
         }
     }
-    shared.forwarded.fetch_add(1, Ordering::SeqCst);
+    shared.forwarded.inc();
     shared.fwd_iter.fetch_max(c.iter + 1, Ordering::SeqCst);
     Ok(())
 }
@@ -551,6 +555,7 @@ fn assemble_reply(
     hi: u32,
     down_codec: CodecId,
 ) -> Result<(Arc<PooledSlab>, u64)> {
+    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_AGG_FAN_OUT);
     let depth = shared.layer_elems.len();
     let lo_u = (lo as usize).min(depth - 1);
     let hi_u = (hi as usize).min(depth - 1);
@@ -735,7 +740,7 @@ fn serve_pull(
         };
         match peek {
             Peek::Hit(slab, applied) => {
-                cache.hits.fetch_add(1, Ordering::SeqCst);
+                cache.hits.inc();
                 return Ok(Some((slab, applied)));
             }
             Peek::Wait => {
@@ -748,7 +753,7 @@ fn serve_pull(
                 let mut relocked = lock_or_die(&cache.entries, "reply_cache.entries");
                 let out = match built {
                     Ok((slab, applied)) => {
-                        cache.builds.fetch_add(1, Ordering::SeqCst);
+                        cache.builds.inc();
                         relocked.insert(key, ReplyState::Ready(slab.clone(), applied));
                         // Same bounded-cache discipline as the server:
                         // keep in-flight keys, evict finished rounds.

@@ -208,6 +208,7 @@ impl ExecPlan {
     /// `w‖b` gradient slab (the tables know the exact size).
     // dynalint: hot-path
     pub fn checkout_layer(&self, l: usize) -> SlabCheckout {
+        exec_checkouts().inc();
         self.pool.checkout(self.layer_bytes[l])
     }
 
@@ -215,8 +216,16 @@ impl ExecPlan {
     /// codec-encoded wire slab.
     // dynalint: hot-path
     pub fn checkout_layer_wire(&self, l: usize) -> SlabCheckout {
+        exec_checkouts().inc();
         self.pool.checkout(self.wire_layer_bytes[l])
     }
+}
+
+/// Table-presized checkouts served across every `ExecPlan` in the process
+/// (obs registry; cold registration, one relaxed op per checkout).
+fn exec_checkouts() -> &'static crate::obs::Counter {
+    static CELL: std::sync::OnceLock<crate::obs::Counter> = std::sync::OnceLock::new();
+    CELL.get_or_init(|| crate::obs_counter!("dynacomm_exec_checkouts_total"))
 }
 
 #[cfg(test)]

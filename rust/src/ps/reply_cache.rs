@@ -10,11 +10,11 @@
 //! `Building`/`Ready` single-flight dance around it).
 
 use std::collections::HashMap;
-use std::sync::atomic::AtomicU64;
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::net::codec::CodecId;
 use crate::net::pool::PooledSlab;
+use crate::obs::Counter;
 
 /// State of one reply-cache entry (single-flight assembly).
 pub(crate) enum ReplyState {
@@ -37,19 +37,23 @@ pub(crate) struct ReplyCache {
     pub(crate) entries: Mutex<HashMap<(u64, u32, u32, CodecId), ReplyState>>,
     /// Signals entry transitions (Building → Ready/removed) and shutdown.
     pub(crate) ready: Condvar,
-    /// Pulls answered from an already-assembled slab.
-    pub(crate) hits: AtomicU64,
+    /// Pulls answered from an already-assembled slab (obs registry
+    /// series, labelled by owning component).
+    pub(crate) hits: Counter,
     /// Successful assemblies (== distinct `(iter, lo, hi)` keys served).
-    pub(crate) builds: AtomicU64,
+    pub(crate) builds: Counter,
 }
 
 impl ReplyCache {
-    pub(crate) fn new() -> ReplyCache {
+    /// `component` labels this cache's obs series (`"server"` at the
+    /// cloud shard, `"agg"` at the regional aggregator).
+    pub(crate) fn new(component: &str) -> ReplyCache {
+        let lbl = format!("component=\"{component}\"");
         ReplyCache {
             entries: Mutex::new(HashMap::new()),
             ready: Condvar::new(),
-            hits: AtomicU64::new(0),
-            builds: AtomicU64::new(0),
+            hits: crate::obs_counter!("dynacomm_reply_cache_hits_total", lbl),
+            builds: crate::obs_counter!("dynacomm_reply_cache_builds_total", lbl),
         }
     }
 }

@@ -51,7 +51,7 @@
 use std::collections::HashMap;
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -152,8 +152,9 @@ struct Shared {
     /// Cap on live handler threads (see [`ServerOptions`]).
     handler_threads: usize,
     /// Immediate-mode apply events (SSP/ASP): the reply cache's version
-    /// key — a new apply invalidates the shared broadcast.
-    apply_events: AtomicU64,
+    /// key — a new apply invalidates the shared broadcast. Registered as
+    /// `dynacomm_server_apply_events_total` in the obs registry.
+    apply_events: crate::obs::Counter,
     /// Handler threads currently alive (bounded by `handler_threads`).
     live_handlers: AtomicU32,
     /// layer id -> guarded slot (only layers this shard owns).
@@ -169,8 +170,9 @@ struct Shared {
     /// `AggHello`): elastic BSP membership.
     registry: Mutex<Registry>,
     /// Total `Push` payload bytes received — the shard's tensor ingress,
-    /// what the tier bench compares flat vs tiered topologies on.
-    ingress_bytes: AtomicU64,
+    /// what the tier bench compares flat vs tiered topologies on
+    /// (`dynacomm_server_ingress_bytes_total`).
+    ingress_bytes: crate::obs::Counter,
     /// Per-codec encode/decode counters (bytes saved, wall-clock, max
     /// quantization error) — exported through [`WireStats`].
     codec_stats: CodecStatsTable,
@@ -178,7 +180,11 @@ struct Shared {
     connected: AtomicU32,
     /// Pulls currently parked on a version condvar (observability: lets
     /// tests and shutdown reason about parked handlers without sleeping).
-    pull_waiters: AtomicU32,
+    /// An obs-registry gauge: `dynacomm_server_pull_waiters`.
+    pull_waiters: crate::obs::Gauge,
+    /// Pulls successfully served — cache hit or fresh assembly
+    /// (`dynacomm_server_pull_replies_total`).
+    pull_replies: crate::obs::Counter,
     /// Live worker sockets (slot per accepted connection; a handler clears
     /// its slot on exit so fds don't leak across reconnects). Shut down on
     /// drain so blocked `recv`s return deterministically instead of
@@ -241,10 +247,10 @@ impl ServerHandle {
 
 fn wire_stats(shared: &Shared) -> WireStats {
     WireStats {
-        reply_cache_hits: shared.reply_cache.hits.load(Ordering::SeqCst),
-        reply_cache_builds: shared.reply_cache.builds.load(Ordering::SeqCst),
+        reply_cache_hits: shared.reply_cache.hits.get(),
+        reply_cache_builds: shared.reply_cache.builds.get(),
         reply_cache_entries: lock_or_die(&shared.reply_cache.entries, "reply_cache.entries").len(),
-        ingress_bytes: shared.ingress_bytes.load(Ordering::SeqCst),
+        ingress_bytes: shared.ingress_bytes.get(),
         pool: shared.pool.stats(),
         codecs: shared.codec_stats.snapshot(),
     }
@@ -361,18 +367,19 @@ impl ParamServer {
             // would wedge training with the rest of the fleet stuck in the
             // accept backlog (see [`ServerOptions::handler_threads`]).
             handler_threads: opts.handler_threads.max(cfg.workers).max(1),
-            apply_events: AtomicU64::new(0),
+            apply_events: crate::obs_counter!("dynacomm_server_apply_events_total"),
             live_handlers: AtomicU32::new(0),
             slots,
             layer_bytes,
             pool: SlabPool::new(),
-            reply_cache: ReplyCache::new(),
+            reply_cache: ReplyCache::new("server"),
             registry: Mutex::new(Registry { peers: HashMap::new(), departed: 0 }),
-            ingress_bytes: AtomicU64::new(0),
+            ingress_bytes: crate::obs_counter!("dynacomm_server_ingress_bytes_total"),
             codec_stats: CodecStatsTable::new(),
             shutting_down: AtomicBool::new(false),
             connected: AtomicU32::new(0),
-            pull_waiters: AtomicU32::new(0),
+            pull_waiters: crate::obs_gauge!("dynacomm_server_pull_waiters"),
+            pull_replies: crate::obs_counter!("dynacomm_server_pull_replies_total"),
             conns: Mutex::new(Vec::new()),
         });
         let shared2 = shared.clone();
@@ -400,7 +407,7 @@ impl ParamServer {
 
     /// Number of pulls currently parked waiting for a version bump.
     pub fn pull_waiters(&self) -> u32 {
-        self.shared.pull_waiters.load(Ordering::SeqCst)
+        self.shared.pull_waiters.get() as u32
     }
 
     /// The shard's synchronization mode.
@@ -422,7 +429,7 @@ impl ParamServer {
 
     /// Immediate-mode apply events so far (SSP/ASP; 0 under BSP).
     pub fn apply_events(&self) -> u64 {
-        self.shared.apply_events.load(Ordering::SeqCst)
+        self.shared.apply_events.get()
     }
 
     /// Handler threads currently alive (bounded by
@@ -600,6 +607,7 @@ fn assemble_reply(
     hi: u32,
     codec_id: CodecId,
 ) -> Option<(Arc<PooledSlab>, u64)> {
+    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_ASSEMBLE);
     // Pre-size from the immutable size map: one pooled checkout, then pure
     // per-layer codec appends under the slot locks (fp32 encodes as a bulk
     // `extend_from_slice`, so the uncompressed path is unchanged).
@@ -621,9 +629,9 @@ fn assemble_reply(
                 }
                 // Condition-based park: woken by the push that advances
                 // the version, or by shutdown.
-                shared.pull_waiters.fetch_add(1, Ordering::SeqCst);
+                shared.pull_waiters.add(1.0);
                 let woken = wait_or_die(cv, slot, "layer.slot");
-                shared.pull_waiters.fetch_sub(1, Ordering::SeqCst);
+                shared.pull_waiters.add(-1.0);
                 slot = woken;
             }
         }
@@ -682,7 +690,7 @@ fn pull_reply(
         };
         match peek {
             Peek::Hit(slab, applied) => {
-                cache.hits.fetch_add(1, Ordering::SeqCst);
+                cache.hits.inc();
                 return Some((slab, applied));
             }
             Peek::Wait => {
@@ -697,7 +705,7 @@ fn pull_reply(
                 let mut relocked = lock_or_die(&cache.entries, "reply_cache.entries");
                 let out = match built {
                     Some((slab, applied)) => {
-                        cache.builds.fetch_add(1, Ordering::SeqCst);
+                        cache.builds.inc();
                         // dynalint: allow(alloc, Arc refcount bump shares the slab with the cache)
                         relocked.insert(key, ReplyState::Ready(slab.clone(), applied));
                         // In-flight pulls stay within one key of each other
@@ -748,9 +756,13 @@ fn serve_pull(
         PullGate::WaitFor { min } => min,
         // Fresh snapshots change with every apply: key by the apply-event
         // counter so pulls between applies still share one assembly.
-        PullGate::Fresh => shared.apply_events.load(Ordering::SeqCst),
+        PullGate::Fresh => shared.apply_events.get(),
     };
-    pull_reply(shared, key_iter, gate, lo, hi, codec_id)
+    let out = pull_reply(shared, key_iter, gate, lo, hi, codec_id);
+    if out.is_some() {
+        shared.pull_replies.inc();
+    }
+    out
 }
 
 /// Collect the shard's durable state ([`Checkpoint`]): owned layers in
@@ -880,7 +892,8 @@ fn apply_push(
     // `>=` because a shrinking target can leave an accumulator past it.
     let target = barrier_target(shared);
     let scale = shared.cfg.lr / shared.cfg.workers as f32;
-    shared.ingress_bytes.fetch_add(data.len() as u64, Ordering::SeqCst);
+    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_APPLY);
+    shared.ingress_bytes.add(data.len() as u64);
     let mut off = 0usize;
     let (mut raw_total, mut dec_ns) = (0usize, 0u64);
     for l in lo as usize..=hi as usize {
@@ -923,7 +936,7 @@ fn apply_push(
     }
     anyhow::ensure!(off == data.len(), "push payload size mismatch");
     if apply == PushApply::Immediate {
-        shared.apply_events.fetch_add(1, Ordering::SeqCst);
+        shared.apply_events.inc();
     }
     shared.codec_stats.record_decode(codec_id, raw_total, off, dec_ns);
     Ok(())

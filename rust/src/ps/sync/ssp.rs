@@ -17,10 +17,11 @@
 //! `t - bound` — no worker ever trains on parameters more than `bound`
 //! iterations behind its own clock.
 
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
 
 use super::{ClockTable, PullGate, PushApply, SyncMode, SyncPolicy};
+use crate::obs::Gauge;
 use crate::util::sync::{lock_or_die, wait_or_die};
 
 pub struct SspPolicy {
@@ -28,7 +29,12 @@ pub struct SspPolicy {
     clocks: Mutex<ClockTable>,
     /// Signals clock advances (and interrupts) to parked pulls.
     advanced: Condvar,
-    waiters: AtomicU32,
+    /// Pulls currently parked past the window — an obs-registry gauge
+    /// (`waiters()` is a thin adapter over it; docs/OBSERVABILITY.md).
+    waiters: Gauge,
+    /// Mirror of `ClockTable::slowest`, refreshed under `sync.clocks` at
+    /// every clock mutation so scrapes never take the clock lock.
+    slowest_iter: Gauge,
 }
 
 impl SspPolicy {
@@ -37,7 +43,8 @@ impl SspPolicy {
             bound,
             clocks: Mutex::new(ClockTable::default()),
             advanced: Condvar::new(),
-            waiters: AtomicU32::new(0),
+            waiters: crate::obs_gauge!("dynacomm_sync_waiters"),
+            slowest_iter: crate::obs_gauge!("dynacomm_sync_slowest_iter"),
         }
     }
 }
@@ -52,11 +59,17 @@ impl SyncPolicy for SspPolicy {
     }
 
     fn register_worker(&self, worker: u32) {
-        lock_or_die(&self.clocks, "sync.clocks").register(worker);
+        let mut clocks = lock_or_die(&self.clocks, "sync.clocks");
+        clocks.register(worker);
+        self.slowest_iter.set(clocks.slowest().unwrap_or(0) as f64);
     }
 
     fn deregister_worker(&self, worker: u32) {
-        if lock_or_die(&self.clocks, "sync.clocks").deregister(worker) {
+        let mut clocks = lock_or_die(&self.clocks, "sync.clocks");
+        let released = clocks.deregister(worker);
+        self.slowest_iter.set(clocks.slowest().unwrap_or(0) as f64);
+        drop(clocks);
+        if released {
             // A departed straggler must not gate the survivors forever.
             self.advanced.notify_all();
         }
@@ -75,6 +88,7 @@ impl SyncPolicy for SspPolicy {
             if clocks.record(w, iter) {
                 self.advanced.notify_all();
             }
+            self.slowest_iter.set(clocks.slowest().unwrap_or(0) as f64);
         }
         // Anonymous sessions (no Hello) carry no clock and gate nothing;
         // serve them fresh — they cannot participate in the window.
@@ -85,9 +99,9 @@ impl SyncPolicy for SspPolicy {
                 if shutdown.load(Ordering::SeqCst) {
                     return None;
                 }
-                self.waiters.fetch_add(1, Ordering::SeqCst);
+                self.waiters.add(1.0);
                 let woken = wait_or_die(&self.advanced, clocks, "sync.clocks");
-                self.waiters.fetch_sub(1, Ordering::SeqCst);
+                self.waiters.add(-1.0);
                 clocks = woken;
             }
         }
@@ -99,11 +113,11 @@ impl SyncPolicy for SspPolicy {
     }
 
     fn slowest(&self) -> u64 {
-        lock_or_die(&self.clocks, "sync.clocks").slowest().unwrap_or(0)
+        self.slowest_iter.get() as u64
     }
 
     fn waiters(&self) -> u32 {
-        self.waiters.load(Ordering::SeqCst)
+        self.waiters.get() as u32
     }
 
     fn interrupt(&self) {
@@ -120,6 +134,7 @@ impl SyncPolicy for SspPolicy {
     fn import_clocks(&self, clocks: &[(u32, u64)]) {
         let mut table = lock_or_die(&self.clocks, "sync.clocks");
         table.import(clocks);
+        self.slowest_iter.set(table.slowest().unwrap_or(0) as f64);
         drop(table);
         // Restored clocks can only widen the window — wake any waiter.
         self.advanced.notify_all();

@@ -118,6 +118,11 @@ pub struct WorkerReport {
     /// under BSP, bounded by `--staleness-bound` under SSP, and the
     /// measured consistency cost under ASP.
     pub staleness: Vec<u64>,
+    /// Obs-registry snapshot taken at the end of the run (series name with
+    /// labels → value; histograms expand to `_count` / `_sum` rows): the
+    /// same numbers a `--metrics-addr` scrape reports, embedded so the
+    /// trainer and bench JSON carry them without a listener.
+    pub metrics: Vec<(String, f64)>,
 }
 
 /// One recorded plan change, carrying the wall-clock of the re-plan call
@@ -177,6 +182,47 @@ pub struct EdgeWorker {
     /// Max staleness the latest iteration observed (see
     /// [`WorkerReport::staleness`]).
     last_staleness: u64,
+    /// The latest re-plan's predicted (fwd, bwd) pass finish times, ms —
+    /// the overlap audit's baseline (`dynacomm_overlap_drift_ms`,
+    /// docs/OBSERVABILITY.md).
+    last_predicted: Option<(f64, f64)>,
+    /// Worker-side obs-registry instruments.
+    obs: WorkerObs,
+}
+
+/// Worker-side obs-registry instruments (docs/OBSERVABILITY.md),
+/// registered once per worker (each instance carries its own `inst`
+/// label).
+struct WorkerObs {
+    iterations: crate::obs::Counter,
+    iter_ms: crate::obs::Histogram,
+    staleness: crate::obs::Histogram,
+}
+
+impl WorkerObs {
+    fn new() -> WorkerObs {
+        WorkerObs {
+            iterations: crate::obs_counter!("dynacomm_worker_iterations_total"),
+            iter_ms: crate::obs_histogram!("dynacomm_worker_iter_ms"),
+            staleness: crate::obs_histogram!("dynacomm_sync_staleness"),
+        }
+    }
+}
+
+/// Record one overlap-audit sample: the absolute drift (ms) between a
+/// re-plan's predicted pass finish time and the measured span timeline,
+/// as the `dynacomm_overlap_drift_ms` histogram (`pass="fwd"` /
+/// `pass="bwd"`). Public so harnesses without a PJRT runtime (the obs
+/// e2e test) can feed the audit exactly the way [`EdgeWorker::run`] does.
+pub fn record_overlap_drift(fwd_pass: bool, predicted_ms: f64, measured_ms: f64) {
+    static CELL: std::sync::OnceLock<[crate::obs::Histogram; 2]> = std::sync::OnceLock::new();
+    let hists = CELL.get_or_init(|| {
+        let h = |pass: &str| {
+            crate::obs_histogram!("dynacomm_overlap_drift_ms", format!("pass=\"{pass}\""))
+        };
+        [h("fwd"), h("bwd")]
+    });
+    hists[if fwd_pass { 0 } else { 1 }].observe((predicted_ms - measured_ms).abs());
 }
 
 /// Propose a session codec on one shard connection; returns what the
@@ -426,6 +472,8 @@ impl EdgeWorker {
             staleness_bound,
             ef,
             last_staleness: 0,
+            last_predicted: None,
+            obs: WorkerObs::new(),
         })
     }
 
@@ -514,6 +562,10 @@ impl EdgeWorker {
             changed: !sp.reused && sp.plan != self.plan,
             predicted_ms: sp.predicted_ms(),
         };
+        crate::sched::note_replan(sp.reused);
+        // The per-pass predictions seed the overlap audit: the next
+        // iterations' measured fwd/bwd timelines are compared against them.
+        self.last_predicted = Some((sp.predicted_fwd_ms, sp.predicted_bwd_ms));
         if outcome.changed {
             let exec = ExecPlan::compile(
                 &sp.plan,
@@ -554,12 +606,20 @@ impl EdgeWorker {
             }
             let (x, onehot) = next_batch(i);
             let t0 = Instant::now();
-            let (loss, top1) = self.iteration(i, &x, &onehot)?;
-            report.iter_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            let (loss, top1) = {
+                let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_ITERATION);
+                self.iteration(i, &x, &onehot)?
+            };
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.obs.iterations.inc();
+            self.obs.iter_ms.observe(ms);
+            self.obs.staleness.observe(self.last_staleness as f64);
+            report.iter_ms.push(ms);
             report.losses.push(loss);
             report.batch_top1.push(top1);
             report.staleness.push(self.last_staleness);
         }
+        report.metrics = crate::obs::snapshot_pairs();
         Ok(report)
     }
 
@@ -570,6 +630,7 @@ impl EdgeWorker {
     pub fn iteration(&mut self, iter: u64, x: &Tensor, onehot: &Tensor) -> Result<(f32, f64)> {
         let depth = self.depth();
         let exec = self.exec.clone();
+        let t_fwd = Instant::now();
 
         // ---- Forward: puller thread streams segments; main computes. ----
         let (param_tx, param_rx) = mpsc::channel::<(usize, SlabSlice)>();
@@ -585,6 +646,7 @@ impl EdgeWorker {
             .name(format!("puller-{}", self.cfg.id))
             .spawn(move || -> Result<()> {
                 for seg in &exec_pull.fwd {
+                    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_PULL_SEG);
                     let t0 = Instant::now();
                     // Oldest snapshot served across the segment's shards.
                     let mut seg_applied = u64::MAX;
@@ -629,6 +691,9 @@ impl EdgeWorker {
                             // (recycled — the decode path stays
                             // allocation-free once warm), then hand out
                             // raw-offset views of the frozen scratch.
+                            let _sp = crate::obs::trace::span(
+                                crate::obs::trace::SPAN_DECODE_SEG,
+                            );
                             let wc = exec_pull.codec.codec();
                             let mut raw = pull_pool.checkout(sub.bytes);
                             let td = Instant::now();
@@ -681,7 +746,10 @@ impl EdgeWorker {
             }
             let (w, b) = params[l].as_ref().unwrap();
             let t0 = Instant::now();
-            let y = self.runtime.layer_fwd(l, w, b, &acts[l])?;
+            let y = {
+                let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_FWD_LAYER);
+                self.runtime.layer_fwd(l, w, b, &acts[l])?
+            };
             self.profiler.record_fwd(l, t0.elapsed().as_secs_f64() * 1e3);
             acts.push(y);
         }
@@ -707,11 +775,16 @@ impl EdgeWorker {
             );
         }
         self.last_staleness = max_stale;
+        let fwd_ms = t_fwd.elapsed().as_secs_f64() * 1e3;
 
         // ---- Loss head. ----
         let logits = &acts[depth];
-        let (loss, glogits) = self.runtime.loss(logits, onehot)?;
+        let (loss, glogits) = {
+            let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_LOSS);
+            self.runtime.loss(logits, onehot)?
+        };
         let top1 = batch_top1(logits, onehot);
+        let t_bwd = Instant::now();
 
         // ---- Backward: main computes; pusher thread flushes segments. ----
         // Channel carries (index into exec.bwd, the segment's per-layer
@@ -727,6 +800,7 @@ impl EdgeWorker {
             .spawn(move || -> Result<Vec<(usize, f64)>> {
                 let mut stats = Vec::new();
                 while let Ok((si, slabs)) = grad_rx.recv() {
+                    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_PUSH_SEG);
                     let seg = &exec_push.bwd[si];
                     anyhow::ensure!(
                         slabs.len() == seg.hi - seg.lo + 1,
@@ -778,8 +852,11 @@ impl EdgeWorker {
         for l in (0..depth).rev() {
             let (w, b) = params[l].as_ref().unwrap();
             let t0 = Instant::now();
-            let gy_shaped = reshape_like_output(&gy, &self.runtime, l);
-            let (gw, gb, gx) = self.runtime.layer_bwd(l, w, b, &acts[l], &gy_shaped)?;
+            let (gw, gb, gx) = {
+                let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_BWD_LAYER);
+                let gy_shaped = reshape_like_output(&gy, &self.runtime, l);
+                self.runtime.layer_bwd(l, w, b, &acts[l], &gy_shaped)?
+            };
             self.profiler.record_bwd(l, t0.elapsed().as_secs_f64() * 1e3);
             // Flatten the layer's gradient once, into a pooled buffer
             // pre-sized from the plan's byte tables; under a compressing
@@ -791,6 +868,7 @@ impl EdgeWorker {
             pending[l] = Some(if exec.codec == CodecId::Fp32 {
                 flat
             } else {
+                let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_GRAD_ENCODE);
                 let wc = exec.codec.codec();
                 let mut wire = exec.checkout_layer_wire(l);
                 let te = Instant::now();
@@ -831,6 +909,13 @@ impl EdgeWorker {
             .context("pusher failed")?;
         for (bytes, ms) in stats {
             self.profiler.record_push(bytes, ms);
+        }
+        // Overlap audit: drift between the latest re-plan's predicted pass
+        // finish times and the measured timelines (docs/OBSERVABILITY.md).
+        if let Some((pf, pb)) = self.last_predicted {
+            let bwd_ms = t_bwd.elapsed().as_secs_f64() * 1e3;
+            record_overlap_drift(true, pf, fwd_ms);
+            record_overlap_drift(false, pb, bwd_ms);
         }
         Ok((loss, top1))
     }

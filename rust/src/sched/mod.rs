@@ -204,6 +204,32 @@ impl ScheduledPlan {
     }
 }
 
+struct SchedCounters {
+    replans: crate::obs::Counter,
+    reuses: crate::obs::Counter,
+}
+
+fn sched_counters() -> &'static SchedCounters {
+    static CELL: std::sync::OnceLock<SchedCounters> = std::sync::OnceLock::new();
+    CELL.get_or_init(|| SchedCounters {
+        replans: crate::obs_counter!("dynacomm_sched_replans_total"),
+        reuses: crate::obs_counter!("dynacomm_sched_plan_reuses_total"),
+    })
+}
+
+/// Record one scheduler decision in the unified obs registry: a fresh
+/// re-plan or a gain-thresholded cache reuse ([`ScheduledPlan::reused`]).
+/// Called by plan consumers (the edge worker's reschedule path) so every
+/// strategy is counted without each one carrying instrumentation.
+pub fn note_replan(reused: bool) {
+    let c = sched_counters();
+    if reused {
+        c.reuses.inc();
+    } else {
+        c.replans.inc();
+    }
+}
+
 /// A layer-wise communication scheduling strategy.
 ///
 /// Schedulers are stateful (`&mut self`): a strategy may cache its last

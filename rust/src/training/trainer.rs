@@ -97,6 +97,12 @@ pub struct TrainConfig {
     /// version clocks, and sync clocks pick up byte-identically where the
     /// checkpoint captured them.
     pub restore_dir: Option<String>,
+    /// Prometheus scrape listener for the run (`--metrics-addr`,
+    /// docs/OBSERVABILITY.md); `None` disables it.
+    pub metrics_addr: Option<String>,
+    /// Chrome trace-event JSON output path (`--trace-out`): arms span
+    /// tracing for the run and exports the rings here on shutdown.
+    pub trace_out: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -129,6 +135,8 @@ impl Default for TrainConfig {
             checkpoint_dir: None,
             checkpoint_every_ms: 1_000,
             restore_dir: None,
+            metrics_addr: None,
+            trace_out: None,
         }
     }
 }
@@ -152,6 +160,16 @@ pub struct TrainResult {
 
 /// Run a full training job; blocks until all workers finish.
 pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
+    // Observability plane (docs/OBSERVABILITY.md): arm span tracing and
+    // boot the scrape listener before any shard registers its counters so
+    // the first scrape already sees the full namespace.
+    if cfg.trace_out.is_some() {
+        crate::obs::trace::set_enabled(true);
+    }
+    let mut metrics_srv = match &cfg.metrics_addr {
+        Some(addr) => Some(crate::obs::expo::MetricsServer::bind(addr)?),
+        None => None,
+    };
     let manifest = ArtifactManifest::load(&cfg.artifacts_dir)?;
     let depth = manifest.depth();
     let shard = ShardMap::new(cfg.servers, depth);
@@ -316,6 +334,15 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     }
     for s in &mut servers {
         s.shutdown();
+    }
+    // Quiescent point: every span-producing thread has joined or been
+    // shut down, so the ring export is complete and race-free.
+    if let Some(path) = &cfg.trace_out {
+        crate::obs::trace::write_chrome_trace(path)
+            .with_context(|| format!("writing trace to {path}"))?;
+    }
+    if let Some(srv) = metrics_srv.as_mut() {
+        srv.shutdown();
     }
     let final_params = final_params.context("no worker returned params")?;
 
