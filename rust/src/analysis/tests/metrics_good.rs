@@ -12,12 +12,14 @@ pub struct FixtureCounters {
 
 impl FixtureCounters {
     /// One lexical call site per series; a multi-instance type would take
-    /// a label argument here instead of re-registering the name.
+    /// a label argument here instead of re-registering the name. Related
+    /// series share one `Inst` so they join on the `inst` label.
     pub fn new() -> FixtureCounters {
+        let inst = crate::obs::next_inst();
         FixtureCounters {
-            hits: obs_counter!("dynacomm_fixture_hits_total"),
-            depth: obs_gauge!("dynacomm_fixture_depth"),
-            latency: obs_histogram!("dynacomm_fixture_latency_ms"),
+            hits: obs_counter!("dynacomm_fixture_hits_total", "", inst),
+            depth: obs_gauge!("dynacomm_fixture_depth", "", inst),
+            latency: obs_histogram!("dynacomm_fixture_latency_ms", "", inst),
         }
     }
 }

@@ -203,9 +203,9 @@ pub struct SystemConfig {
     pub io_timeout_ms: u64,
     /// Prometheus scrape listener (`--metrics-addr`,
     /// docs/OBSERVABILITY.md): when set, the trainer serves text-format
-    /// snapshots of the obs registry at this address. Must parse as a
-    /// socket address (`host:port`; port 0 picks an ephemeral one).
-    /// `None` disables the listener.
+    /// snapshots of the obs registry at this address. `host:port` — the
+    /// host may be an IP or a resolvable name (`localhost:9461`), and
+    /// port 0 picks an ephemeral one. `None` disables the listener.
     pub metrics_addr: Option<String>,
     /// Chrome trace-event JSON output path (`--trace-out`): when set,
     /// span tracing is armed for the run and the per-thread span rings
@@ -213,11 +213,19 @@ pub struct SystemConfig {
     pub trace_out: Option<String>,
 }
 
-/// Check a `--metrics-addr` spelling parses as a socket address.
+/// Check a `--metrics-addr` spelling is a plausible `host:port`: non-empty
+/// host, valid port. Hostnames (`localhost:9461`) pass — resolution is the
+/// listener's job at bind time, exactly like `TcpListener::bind` — so the
+/// check stays purely syntactic and never touches the resolver.
 pub fn validate_metrics_addr(addr: &str) -> anyhow::Result<()> {
-    addr.parse::<std::net::SocketAddr>().map(|_| ()).map_err(|_| {
-        anyhow::anyhow!("bad metrics addr '{addr}' (want host:port, e.g. 127.0.0.1:9461)")
-    })
+    let ok = addr
+        .rsplit_once(':')
+        .is_some_and(|(host, port)| !host.is_empty() && port.parse::<u16>().is_ok());
+    anyhow::ensure!(
+        ok,
+        "bad metrics addr '{addr}' (want host:port, e.g. 127.0.0.1:9461 or localhost:9461)"
+    );
+    Ok(())
 }
 
 /// Parse a `gain-threshold-ms` spelling: `auto` (case-insensitive) or a
@@ -622,6 +630,12 @@ mod tests {
         // A malformed address is rejected at JSON load, not at bind time.
         let bad = Json::obj(vec![("metrics_addr", Json::Str("not-an-addr".to_string()))]);
         assert!(SystemConfig::from_json(&bad).is_err());
+        // Hostnames are as valid as IPs (resolution happens at bind);
+        // missing hosts and non-numeric ports are not.
+        assert!(validate_metrics_addr("localhost:9461").is_ok());
+        assert!(validate_metrics_addr("[::1]:9461").is_ok());
+        assert!(validate_metrics_addr(":9461").is_err());
+        assert!(validate_metrics_addr("localhost:http").is_err());
     }
 
     #[test]

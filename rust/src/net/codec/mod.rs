@@ -289,18 +289,20 @@ struct CodecCounters {
 impl CodecCounters {
     /// One obs-registry row per codec. Each metric name has exactly one
     /// lexical registration site (the dynalint `metrics` check audits
-    /// that), so the per-codec fan-out happens here via the label.
+    /// that), so the per-codec fan-out happens here via the label; the
+    /// row's series share one `inst` so they join per table entry.
     fn for_codec(codec: &'static str) -> CodecCounters {
         let lbl = format!("codec=\"{codec}\"");
+        let inst = crate::obs::next_inst();
         CodecCounters {
-            raw_bytes: crate::obs_counter!("dynacomm_codec_raw_bytes_total", lbl),
-            wire_bytes: crate::obs_counter!("dynacomm_codec_wire_bytes_total", lbl),
-            bytes_saved: crate::obs_counter!("dynacomm_codec_bytes_saved", lbl),
-            encodes: crate::obs_counter!("dynacomm_codec_encodes_total", lbl),
-            encode_ns: crate::obs_counter!("dynacomm_codec_encode_ns_total", lbl),
-            decodes: crate::obs_counter!("dynacomm_codec_decodes_total", lbl),
-            decode_ns: crate::obs_counter!("dynacomm_codec_decode_ns_total", lbl),
-            max_err: crate::obs_gauge!("dynacomm_codec_max_quant_error", lbl),
+            raw_bytes: crate::obs_counter!("dynacomm_codec_raw_bytes_total", lbl, inst),
+            wire_bytes: crate::obs_counter!("dynacomm_codec_wire_bytes_total", lbl, inst),
+            bytes_saved: crate::obs_counter!("dynacomm_codec_bytes_saved", lbl, inst),
+            encodes: crate::obs_counter!("dynacomm_codec_encodes_total", lbl, inst),
+            encode_ns: crate::obs_counter!("dynacomm_codec_encode_ns_total", lbl, inst),
+            decodes: crate::obs_counter!("dynacomm_codec_decodes_total", lbl, inst),
+            decode_ns: crate::obs_counter!("dynacomm_codec_decode_ns_total", lbl, inst),
+            max_err: crate::obs_gauge!("dynacomm_codec_max_quant_error", lbl, inst),
         }
     }
 

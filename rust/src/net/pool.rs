@@ -74,12 +74,13 @@ impl SlabPool {
 
     /// A pool retaining at most `max_retained` idle buffers.
     pub fn with_max_retained(max_retained: usize) -> Arc<SlabPool> {
+        let inst = crate::obs::next_inst();
         Arc::new(SlabPool {
             free: Mutex::new(Vec::new()),
             max_retained,
-            checkouts: crate::obs_counter!("dynacomm_pool_checkouts_total"),
-            recycled: crate::obs_counter!("dynacomm_pool_recycled_total"),
-            allocations: crate::obs_counter!("dynacomm_pool_allocations_total"),
+            checkouts: crate::obs_counter!("dynacomm_pool_checkouts_total", "", inst),
+            recycled: crate::obs_counter!("dynacomm_pool_recycled_total", "", inst),
+            allocations: crate::obs_counter!("dynacomm_pool_allocations_total", "", inst),
         })
     }
 

@@ -789,11 +789,14 @@ struct NetCounters {
 
 fn net_counters() -> &'static NetCounters {
     static CELL: std::sync::OnceLock<NetCounters> = std::sync::OnceLock::new();
-    CELL.get_or_init(|| NetCounters {
-        tx_frames: crate::obs_counter!("dynacomm_net_tx_frames_total"),
-        tx_bytes: crate::obs_counter!("dynacomm_net_tx_bytes_total"),
-        rx_frames: crate::obs_counter!("dynacomm_net_rx_frames_total"),
-        rx_bytes: crate::obs_counter!("dynacomm_net_rx_bytes_total"),
+    CELL.get_or_init(|| {
+        let inst = crate::obs::next_inst();
+        NetCounters {
+            tx_frames: crate::obs_counter!("dynacomm_net_tx_frames_total", "", inst),
+            tx_bytes: crate::obs_counter!("dynacomm_net_tx_bytes_total", "", inst),
+            rx_frames: crate::obs_counter!("dynacomm_net_rx_frames_total", "", inst),
+            rx_bytes: crate::obs_counter!("dynacomm_net_rx_bytes_total", "", inst),
+        }
     })
 }
 

@@ -127,7 +127,8 @@ mod tests {
 
     #[test]
     fn bind_scrape_and_shutdown() {
-        let counter = crate::obs::register_counter("dynacomm_test_expo", "");
+        let counter =
+            crate::obs::register_counter("dynacomm_test_expo", "", crate::obs::next_inst());
         counter.add(11);
         let mut srv = MetricsServer::bind("127.0.0.1:0").expect("bind");
         let body = scrape(srv.addr()).expect("scrape");

@@ -16,9 +16,13 @@
 //!   prefix, and a docs/OBSERVABILITY.md catalog entry.
 //! * **Instances, not globals.** Components that exist many times per
 //!   process (slab pools, reply caches, codec tables) register one series
-//!   per instance; the registry appends an automatic `inst="N"` label so
-//!   concurrent instances render as distinct Prometheus series, and weak
-//!   registry entries are pruned once the owning instance drops.
+//!   per instance; the registry appends an `inst="N"` label so concurrent
+//!   instances render as distinct Prometheus series, and weak registry
+//!   entries are pruned once the owning instance drops. A constructor that
+//!   registers several related series allocates **one** [`Inst`] via
+//!   [`next_inst`] and passes it to each registration (the macros' third
+//!   argument), so all of an instance's series share an `inst` value and
+//!   can be joined on it.
 
 pub mod expo;
 pub mod trace;
@@ -166,49 +170,62 @@ fn registry() -> &'static Mutex<Vec<Entry>> {
     REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
 }
 
-/// Every registration gets a process-unique `inst="N"` label so concurrent
-/// instances of the same component (test servers, per-worker pools) render
-/// as distinct Prometheus series rather than colliding on one name+labels.
-fn full_labels(extra: &str) -> String {
+/// Process-unique component-instance id, rendered as the `inst="N"`
+/// label. Allocate **one per component instance** (in its constructor)
+/// and pass it to every series that instance registers, so related series
+/// — a pool's checkouts/recycled/allocations, a codec row's eight
+/// counters — share an `inst` value and can be joined on it. Singleton
+/// registrations may let the two-argument macro forms allocate a fresh id
+/// implicitly.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Inst(usize);
+
+/// Allocate a fresh [`Inst`].
+pub fn next_inst() -> Inst {
     static INSTANCES: AtomicUsize = AtomicUsize::new(0);
-    let inst = INSTANCES.fetch_add(1, Ordering::Relaxed);
+    Inst(INSTANCES.fetch_add(1, Ordering::Relaxed))
+}
+
+/// Concurrent instances of one component render as distinct Prometheus
+/// series (rather than colliding on one name+labels) via the `inst` label.
+fn full_labels(extra: &str, inst: Inst) -> String {
     if extra.is_empty() {
-        format!("inst=\"{inst}\"")
+        format!("inst=\"{}\"", inst.0)
     } else {
-        format!("{extra},inst=\"{inst}\"")
+        format!("{extra},inst=\"{}\"", inst.0)
     }
 }
 
 /// Register a counter series. Prefer the [`obs_counter!`] macro: the
 /// dynalint `metrics` check audits macro call sites for name uniqueness
 /// and docs/OBSERVABILITY.md coverage.
-pub fn register_counter(name: &'static str, labels: &str) -> Counter {
+pub fn register_counter(name: &'static str, labels: &str, inst: Inst) -> Counter {
     let cell = Arc::new(AtomicU64::new(0));
     lock_or_die(registry(), "obs.registry").push(Entry {
         name,
-        labels: full_labels(labels),
+        labels: full_labels(labels, inst),
         slot: Slot::Counter(Arc::downgrade(&cell)),
     });
     Counter(cell)
 }
 
 /// Register a gauge series (see [`register_counter`] for macro guidance).
-pub fn register_gauge(name: &'static str, labels: &str) -> Gauge {
+pub fn register_gauge(name: &'static str, labels: &str, inst: Inst) -> Gauge {
     let cell = Arc::new(AtomicU64::new(0f64.to_bits()));
     lock_or_die(registry(), "obs.registry").push(Entry {
         name,
-        labels: full_labels(labels),
+        labels: full_labels(labels, inst),
         slot: Slot::Gauge(Arc::downgrade(&cell)),
     });
     Gauge(cell)
 }
 
 /// Register a histogram series (see [`register_counter`] for macro guidance).
-pub fn register_histogram(name: &'static str, labels: &str) -> Histogram {
+pub fn register_histogram(name: &'static str, labels: &str, inst: Inst) -> Histogram {
     let core = Arc::new(HistCore::new());
     lock_or_die(registry(), "obs.registry").push(Entry {
         name,
-        labels: full_labels(labels),
+        labels: full_labels(labels, inst),
         slot: Slot::Histogram(Arc::downgrade(&core)),
     });
     Histogram(core)
@@ -218,14 +235,21 @@ pub fn register_histogram(name: &'static str, labels: &str) -> Histogram {
 ///
 /// `obs_counter!("dynacomm_x_total")` or
 /// `obs_counter!("dynacomm_x_total", labels)` where `labels` is a
-/// `key="value"` fragment (the registry appends `inst="N"` itself).
+/// `key="value"` fragment (the registry appends `inst="N"` itself). A
+/// constructor registering several related series passes one shared
+/// [`Inst`](crate::obs::Inst) as a third argument —
+/// `obs_counter!("dynacomm_x_total", labels, inst)` — so the instance's
+/// series are joinable on their `inst` label.
 #[macro_export]
 macro_rules! obs_counter {
     ($name:literal) => {
-        $crate::obs::register_counter($name, "")
+        $crate::obs::register_counter($name, "", $crate::obs::next_inst())
     };
     ($name:literal, $labels:expr) => {
-        $crate::obs::register_counter($name, &$labels)
+        $crate::obs::register_counter($name, &$labels, $crate::obs::next_inst())
+    };
+    ($name:literal, $labels:expr, $inst:expr) => {
+        $crate::obs::register_counter($name, &$labels, $inst)
     };
 }
 
@@ -233,10 +257,13 @@ macro_rules! obs_counter {
 #[macro_export]
 macro_rules! obs_gauge {
     ($name:literal) => {
-        $crate::obs::register_gauge($name, "")
+        $crate::obs::register_gauge($name, "", $crate::obs::next_inst())
     };
     ($name:literal, $labels:expr) => {
-        $crate::obs::register_gauge($name, &$labels)
+        $crate::obs::register_gauge($name, &$labels, $crate::obs::next_inst())
+    };
+    ($name:literal, $labels:expr, $inst:expr) => {
+        $crate::obs::register_gauge($name, &$labels, $inst)
     };
 }
 
@@ -245,10 +272,13 @@ macro_rules! obs_gauge {
 #[macro_export]
 macro_rules! obs_histogram {
     ($name:literal) => {
-        $crate::obs::register_histogram($name, "")
+        $crate::obs::register_histogram($name, "", $crate::obs::next_inst())
     };
     ($name:literal, $labels:expr) => {
-        $crate::obs::register_histogram($name, &$labels)
+        $crate::obs::register_histogram($name, &$labels, $crate::obs::next_inst())
+    };
+    ($name:literal, $labels:expr, $inst:expr) => {
+        $crate::obs::register_histogram($name, &$labels, $inst)
     };
 }
 
@@ -369,7 +399,7 @@ mod tests {
 
     #[test]
     fn counter_inc_add_get() {
-        let c = register_counter("dynacomm_test_ctr", "");
+        let c = register_counter("dynacomm_test_ctr", "", next_inst());
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
@@ -377,7 +407,7 @@ mod tests {
 
     #[test]
     fn gauge_set_add_max() {
-        let g = register_gauge("dynacomm_test_gauge", "");
+        let g = register_gauge("dynacomm_test_gauge", "", next_inst());
         g.set(2.5);
         assert_eq!(g.get(), 2.5);
         g.add(1.0);
@@ -391,7 +421,7 @@ mod tests {
 
     #[test]
     fn histogram_buckets_and_moments() {
-        let h = register_histogram("dynacomm_test_hist", "");
+        let h = register_histogram("dynacomm_test_hist", "", next_inst());
         // bound(6) = 1.0, so 0.5 lands at index 5, 1.0 at 6, 1.5 at 7.
         h.observe(0.5);
         h.observe(1.0);
@@ -429,8 +459,8 @@ mod tests {
 
     #[test]
     fn render_has_type_lines_and_distinct_instances() {
-        let a = register_counter("dynacomm_test_render", "shard=\"0\"");
-        let b = register_counter("dynacomm_test_render", "shard=\"0\"");
+        let a = register_counter("dynacomm_test_render", "shard=\"0\"", next_inst());
+        let b = register_counter("dynacomm_test_render", "shard=\"0\"", next_inst());
         a.inc();
         b.add(2);
         let text = render_prometheus();
@@ -446,7 +476,7 @@ mod tests {
 
     #[test]
     fn dropped_instances_are_pruned() {
-        let c = register_counter("dynacomm_test_pruned", "");
+        let c = register_counter("dynacomm_test_pruned", "", next_inst());
         c.inc();
         assert!(render_prometheus().contains("dynacomm_test_pruned{"));
         drop(c);
@@ -455,7 +485,7 @@ mod tests {
 
     #[test]
     fn snapshot_pairs_expands_histograms() {
-        let h = register_histogram("dynacomm_test_snap_hist", "");
+        let h = register_histogram("dynacomm_test_snap_hist", "", next_inst());
         h.observe(2.0);
         h.observe(4.0);
         let pairs = snapshot_pairs();
@@ -472,9 +502,33 @@ mod tests {
     }
 
     #[test]
+    fn shared_inst_joins_related_series() {
+        // One component instance registering several series hands the same
+        // Inst to each, so they render with one joinable inst value.
+        let inst = next_inst();
+        let c = register_counter("dynacomm_test_inst_ctr", "", inst);
+        let h = register_histogram("dynacomm_test_inst_hist", "", inst);
+        c.inc();
+        h.observe(1.0);
+        let text = render_prometheus();
+        let inst_of = |name: &str| -> String {
+            let line = text
+                .lines()
+                .find(|l| l.starts_with(name))
+                .unwrap_or_else(|| panic!("no {name} row"));
+            line[line.find("inst=").unwrap()..line.find('}').unwrap()].to_string()
+        };
+        assert_eq!(
+            inst_of("dynacomm_test_inst_ctr{"),
+            inst_of("dynacomm_test_inst_hist_count{"),
+            "related series of one instance must share inst"
+        );
+    }
+
+    #[test]
     fn series_total_sums_instances() {
-        let a = register_counter("dynacomm_test_total", "");
-        let b = register_counter("dynacomm_test_total", "");
+        let a = register_counter("dynacomm_test_total", "", next_inst());
+        let b = register_counter("dynacomm_test_total", "", next_inst());
         a.add(3);
         b.add(4);
         assert_eq!(series_total("dynacomm_test_total"), 7.0);

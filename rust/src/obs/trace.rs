@@ -12,9 +12,15 @@
 //!   completed `(name, begin, end)` triple into the calling thread's ring
 //!   on drop — only *finished* spans are stored, so exported traces have
 //!   balanced B/E pairs by construction.
-//! * Each ring is single-writer (its thread) and overwrite-oldest at
-//!   capacity ([`RING_CAP`]); readers tolerate in-flight overwrites because
-//!   export happens at quiescent points (end of run / scrape).
+//! * Rings are keyed by **thread name** and overwrite-oldest at capacity
+//!   ([`RING_CAP`]): a later thread with the same name (the worker
+//!   respawns `puller-N` / `pusher-N` every iteration) reuses the existing
+//!   ring instead of registering a new one, so the global store stays
+//!   bounded by the number of distinct thread names over the whole run.
+//!   [`Ring::record`] claims slots with an atomic `fetch_add`, so briefly
+//!   overlapping same-named writers stay safe; readers tolerate in-flight
+//!   overwrites because export happens at quiescent points (end of run /
+//!   scrape).
 
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
@@ -82,8 +88,9 @@ struct SpanSlot {
 }
 
 /// Fixed-capacity overwrite-oldest span ring. Public so tests can exercise
-/// the overflow policy directly; production rings are per-thread and
-/// created lazily by [`span`].
+/// the overflow policy directly; production rings are per thread-name,
+/// created lazily by [`span`] and shared by successive threads that reuse
+/// a name.
 pub struct Ring {
     cap: usize,
     head: AtomicUsize,
@@ -146,20 +153,28 @@ thread_local! {
     static LOCAL_RING: Arc<Ring> = register_thread_ring();
 }
 
+/// Find-or-create the ring for the calling thread's name. Reuse keeps the
+/// store (and trace export) bounded when same-named threads are respawned
+/// every iteration — the puller/pusher pattern — instead of leaking one
+/// ~`RING_CAP`-slot ring per spawn for the lifetime of the process.
 fn register_thread_ring() -> Arc<Ring> {
+    let thread = std::thread::current();
+    let name = thread.name().unwrap_or("unnamed");
+    let mut rings = lock_or_die(rings_store(), "obs.rings");
+    if let Some((_, ring)) = rings.iter().find(|(n, _)| n == name) {
+        return ring.clone();
+    }
     let ring = Arc::new(Ring::new(RING_CAP));
-    let name = std::thread::current()
-        .name()
-        .unwrap_or("unnamed")
-        .to_string();
-    lock_or_die(rings_store(), "obs.rings").push((name, ring.clone()));
+    rings.push((name.to_string(), ring.clone()));
     ring
 }
 
 /// RAII span: stamps begin at construction, records `(name, begin, end)`
 /// into the calling thread's ring on drop. Disarmed (free) when tracing is
-/// off. The first span on a thread registers that thread's ring (one
-/// allocation); steady state allocates nothing.
+/// off. The first span under a given thread *name* registers that name's
+/// ring (one allocation); later spans — including ones on freshly spawned
+/// threads reusing the name — find it by lookup, so steady state allocates
+/// nothing even when worker threads are respawned per iteration.
 pub struct SpanGuard {
     name: u32,
     begin_ns: u64,
@@ -197,6 +212,22 @@ struct TraceEvent {
     name: u32,
 }
 
+/// Escape a string for embedding inside a JSON string literal. Thread
+/// names come from arbitrary `std::thread` builders, so quotes,
+/// backslashes, and control characters must not reach the trace verbatim.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Export every thread's retained spans as Chrome trace-event JSON
 /// (`{"traceEvents": [...]}` with `B`/`E` duration events plus
 /// `thread_name` metadata). Timestamps are microseconds.
@@ -232,7 +263,8 @@ pub fn chrome_trace_json() -> String {
         first = false;
         out.push_str(&format!(
             "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
-             \"args\":{{\"name\":\"{tname}\"}}}}"
+             \"args\":{{\"name\":\"{}\"}}}}",
+            json_escape(tname)
         ));
         for e in events {
             let ph = if e.phase == 1 { "B" } else { "E" };
@@ -322,6 +354,37 @@ mod tests {
                 for _ in 0..3 {
                     let _inner = span(SPAN_FWD_LAYER);
                 }
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+
+        // Respawned same-named threads reuse one ring instead of leaking a
+        // new registration per spawn (the per-iteration puller/pusher
+        // pattern); their spans accumulate in the shared ring.
+        for _ in 0..3 {
+            std::thread::Builder::new()
+                .name("obs-test-reused".into())
+                .spawn(|| {
+                    let _g = span(SPAN_PUSH_SEG);
+                })
+                .unwrap()
+                .join()
+                .unwrap();
+        }
+        {
+            let rings = lock_or_die(rings_store(), "obs.rings");
+            let reused: Vec<_> =
+                rings.iter().filter(|(n, _)| n == "obs-test-reused").collect();
+            assert_eq!(reused.len(), 1, "same-named respawns must share one ring");
+            assert_eq!(reused[0].1.snapshot().len(), 3, "all spawns' spans retained");
+        }
+
+        // A hostile thread name must not break the JSON export below.
+        std::thread::Builder::new()
+            .name("obs-test \"quoted\\name".into())
+            .spawn(|| {
+                let _g = span(SPAN_APPLY);
             })
             .unwrap()
             .join()

@@ -49,11 +49,12 @@ impl ReplyCache {
     /// cloud shard, `"agg"` at the regional aggregator).
     pub(crate) fn new(component: &str) -> ReplyCache {
         let lbl = format!("component=\"{component}\"");
+        let inst = crate::obs::next_inst();
         ReplyCache {
             entries: Mutex::new(HashMap::new()),
             ready: Condvar::new(),
-            hits: crate::obs_counter!("dynacomm_reply_cache_hits_total", lbl),
-            builds: crate::obs_counter!("dynacomm_reply_cache_builds_total", lbl),
+            hits: crate::obs_counter!("dynacomm_reply_cache_hits_total", lbl, inst),
+            builds: crate::obs_counter!("dynacomm_reply_cache_builds_total", lbl, inst),
         }
     }
 }

@@ -359,6 +359,9 @@ impl ParamServer {
             .collect();
         let sync = sync::create(opts.sync);
         sync.import_clocks(clocks);
+        // One inst for all of this server instance's series, so a scrape
+        // can join them per shard.
+        let inst = crate::obs::next_inst();
         let shared = Arc::new(Shared {
             cfg,
             sync,
@@ -367,19 +370,19 @@ impl ParamServer {
             // would wedge training with the rest of the fleet stuck in the
             // accept backlog (see [`ServerOptions::handler_threads`]).
             handler_threads: opts.handler_threads.max(cfg.workers).max(1),
-            apply_events: crate::obs_counter!("dynacomm_server_apply_events_total"),
+            apply_events: crate::obs_counter!("dynacomm_server_apply_events_total", "", inst),
             live_handlers: AtomicU32::new(0),
             slots,
             layer_bytes,
             pool: SlabPool::new(),
             reply_cache: ReplyCache::new("server"),
             registry: Mutex::new(Registry { peers: HashMap::new(), departed: 0 }),
-            ingress_bytes: crate::obs_counter!("dynacomm_server_ingress_bytes_total"),
+            ingress_bytes: crate::obs_counter!("dynacomm_server_ingress_bytes_total", "", inst),
             codec_stats: CodecStatsTable::new(),
             shutting_down: AtomicBool::new(false),
             connected: AtomicU32::new(0),
-            pull_waiters: crate::obs_gauge!("dynacomm_server_pull_waiters"),
-            pull_replies: crate::obs_counter!("dynacomm_server_pull_replies_total"),
+            pull_waiters: crate::obs_gauge!("dynacomm_server_pull_waiters", "", inst),
+            pull_replies: crate::obs_counter!("dynacomm_server_pull_replies_total", "", inst),
             conns: Mutex::new(Vec::new()),
         });
         let shared2 = shared.clone();

@@ -39,12 +39,13 @@ pub struct SspPolicy {
 
 impl SspPolicy {
     pub fn new(bound: u32) -> SspPolicy {
+        let inst = crate::obs::next_inst();
         SspPolicy {
             bound,
             clocks: Mutex::new(ClockTable::default()),
             advanced: Condvar::new(),
-            waiters: crate::obs_gauge!("dynacomm_sync_waiters"),
-            slowest_iter: crate::obs_gauge!("dynacomm_sync_slowest_iter"),
+            waiters: crate::obs_gauge!("dynacomm_sync_waiters", "", inst),
+            slowest_iter: crate::obs_gauge!("dynacomm_sync_slowest_iter", "", inst),
         }
     }
 }
@@ -112,6 +113,12 @@ impl SyncPolicy for SspPolicy {
         PushApply::Immediate
     }
 
+    // Served from the gauge mirror, lock-free: *not* linearizable with
+    // pull gating, which re-derives the minimum under `sync.clocks`, so a
+    // reader racing a clock mutation can see a momentarily stale value —
+    // and the u64→f64 storage rounds above 2^53 iterations. Fine for
+    // scrapes and reports; control decisions must read the table under
+    // the lock (as `admit_pull` does).
     fn slowest(&self) -> u64 {
         self.slowest_iter.get() as u64
     }

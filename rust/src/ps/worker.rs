@@ -201,10 +201,11 @@ struct WorkerObs {
 
 impl WorkerObs {
     fn new() -> WorkerObs {
+        let inst = crate::obs::next_inst();
         WorkerObs {
-            iterations: crate::obs_counter!("dynacomm_worker_iterations_total"),
-            iter_ms: crate::obs_histogram!("dynacomm_worker_iter_ms"),
-            staleness: crate::obs_histogram!("dynacomm_sync_staleness"),
+            iterations: crate::obs_counter!("dynacomm_worker_iterations_total", "", inst),
+            iter_ms: crate::obs_histogram!("dynacomm_worker_iter_ms", "", inst),
+            staleness: crate::obs_histogram!("dynacomm_sync_staleness", "", inst),
         }
     }
 }
@@ -217,8 +218,9 @@ impl WorkerObs {
 pub fn record_overlap_drift(fwd_pass: bool, predicted_ms: f64, measured_ms: f64) {
     static CELL: std::sync::OnceLock<[crate::obs::Histogram; 2]> = std::sync::OnceLock::new();
     let hists = CELL.get_or_init(|| {
+        let inst = crate::obs::next_inst();
         let h = |pass: &str| {
-            crate::obs_histogram!("dynacomm_overlap_drift_ms", format!("pass=\"{pass}\""))
+            crate::obs_histogram!("dynacomm_overlap_drift_ms", format!("pass=\"{pass}\""), inst)
         };
         [h("fwd"), h("bwd")]
     });

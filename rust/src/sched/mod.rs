@@ -211,9 +211,12 @@ struct SchedCounters {
 
 fn sched_counters() -> &'static SchedCounters {
     static CELL: std::sync::OnceLock<SchedCounters> = std::sync::OnceLock::new();
-    CELL.get_or_init(|| SchedCounters {
-        replans: crate::obs_counter!("dynacomm_sched_replans_total"),
-        reuses: crate::obs_counter!("dynacomm_sched_plan_reuses_total"),
+    CELL.get_or_init(|| {
+        let inst = crate::obs::next_inst();
+        SchedCounters {
+            replans: crate::obs_counter!("dynacomm_sched_replans_total", "", inst),
+            reuses: crate::obs_counter!("dynacomm_sched_plan_reuses_total", "", inst),
+        }
     })
 }
 

@@ -112,11 +112,11 @@ fn scraped_total(body: &str, name: &str) -> Option<f64> {
 /// automatic `inst=` tag.
 #[test]
 fn exposition_format_is_wellformed_line_by_line() {
-    let c = obs::register_counter("obstest_expo_events_total", "");
+    let c = obs::register_counter("obstest_expo_events_total", "", obs::next_inst());
     c.add(7);
-    let g = obs::register_gauge("obstest_expo_depth", "shard=\"0\"");
+    let g = obs::register_gauge("obstest_expo_depth", "shard=\"0\"", obs::next_inst());
     g.set(-2.5);
-    let h = obs::register_histogram("obstest_expo_lat_ms", "");
+    let h = obs::register_histogram("obstest_expo_lat_ms", "", obs::next_inst());
     for v in [0.02, 1.0, 300.0, 7e6] {
         h.observe(v);
     }
