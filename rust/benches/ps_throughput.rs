@@ -796,6 +796,63 @@ fn main() {
          ({obs_overhead_pct:+.2}%, target <= 5%)"
     );
 
+    // --- Pull-RTT quantiles: one worker's measured round-trip
+    // distribution with the obs plane armed, interpolated from the log2
+    // buckets by `Histogram::quantile`. The histogram stays alive through
+    // the `obs_metrics_snapshot` dump below, so its `_p50`/`_p99` rows
+    // land in the JSON artifact alongside these explicit columns.
+    dynacomm::obs::trace::set_enabled(true);
+    let rtt_hist = dynacomm::obs::register_histogram(
+        "dynacomm_bench_pull_rtt_ms",
+        "",
+        dynacomm::obs::next_inst(),
+    );
+    {
+        let srv = ParamServer::start(
+            ServerConfig { workers: 1, lr: 0.1 },
+            layer_init(),
+            None,
+        )
+        .unwrap();
+        let mut conn =
+            Connection::new(TcpStream::connect(srv.handle().addr).unwrap(), None);
+        let grad = vec![0.0f32; LAYER_F32S * LAYERS];
+        for iter in 0..obs_iters.max(32) {
+            let t0 = Instant::now();
+            conn.send(&Message::Pull { iter, lo: 0, hi: LAYERS as u32 - 1 })
+                .unwrap();
+            match conn.recv().unwrap() {
+                Message::PullReply { .. } => {}
+                m => panic!("{m:?}"),
+            }
+            rtt_hist.observe(t0.elapsed().as_secs_f64() * 1e3);
+            conn.send(&Message::Push {
+                iter,
+                lo: 0,
+                hi: LAYERS as u32 - 1,
+                codec: CodecId::Fp32,
+                data: slab::from_f32s(&grad),
+            })
+            .unwrap();
+            match conn.recv().unwrap() {
+                Message::PushAck { .. } => {}
+                m => panic!("{m:?}"),
+            }
+        }
+        drop(conn);
+        drop(srv);
+    }
+    dynacomm::obs::trace::set_enabled(false);
+    let rtt_p50 = rtt_hist.quantile(0.5).expect("populated histogram");
+    let rtt_p99 = rtt_hist.quantile(0.99).expect("populated histogram");
+    assert!(
+        rtt_p50 > 0.0 && rtt_p99 >= rtt_p50,
+        "quantiles ordered and positive: p50 {rtt_p50}, p99 {rtt_p99}"
+    );
+    println!(
+        "  pull RTT quantiles (obs armed): p50 {rtt_p50:.3} ms  p99 {rtt_p99:.3} ms"
+    );
+
     let json = Json::obj(vec![
         ("workers", Json::Num(WORKERS as f64)),
         ("layers", Json::Num(LAYERS as f64)),
@@ -894,6 +951,8 @@ fn main() {
         ("obs_overhead_pct", Json::Num(obs_overhead_pct)),
         ("obs_bsp_secs_off", Json::Num(best_off)),
         ("obs_bsp_secs_on", Json::Num(best_on)),
+        ("obs_pull_rtt_p50_ms", Json::Num(rtt_p50)),
+        ("obs_pull_rtt_p99_ms", Json::Num(rtt_p99)),
         (
             "obs_metrics_snapshot",
             Json::Arr(

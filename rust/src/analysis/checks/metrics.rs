@@ -16,6 +16,14 @@
 //! Macro *definition* sites (`macro_rules! obs_counter { ... }`) do not
 //! match the `name!(` usage pattern and are naturally skipped, as is
 //! anything inside `#[cfg(test)]`.
+//!
+//! The **span taxonomy** rides along as the check's second half: every
+//! string entry in the `span_table` const (`SPAN_NAMES` in
+//! `obs::trace`) must be globally unique and documented backtick-quoted
+//! on the same catalog page, so trace viewers and the critical-path
+//! report always resolve to a documented hop name. Only the const's
+//! *definition* site matches (`SPAN_NAMES:` — ident followed by a type
+//! colon); usage sites (`SPAN_NAMES.get(..)`) do not.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -27,7 +35,11 @@ use super::super::source::SrcFile;
 
 pub fn check(root: &Path, files: &[SrcFile], manifest: &Manifest) -> Vec<Finding> {
     match std::fs::read_to_string(root.join(&manifest.metrics.doc)) {
-        Ok(doc_text) => check_files(files, &doc_text, manifest),
+        Ok(doc_text) => {
+            let mut out = check_files(files, &doc_text, manifest);
+            out.extend(check_spans(files, &doc_text, manifest));
+            out
+        }
         Err(_) => vec![Finding::new(
             "metrics",
             &manifest.metrics.doc,
@@ -122,6 +134,70 @@ pub fn check_files(
     out
 }
 
+/// Span-taxonomy half of the check: collect every string entry of the
+/// manifest's `span_table` const across all files, then enforce global
+/// uniqueness and backtick-quoted documentation on the catalog page.
+/// Public (like [`check_files`]) so fixture tests can pin their own doc.
+pub fn check_spans(
+    files: &[SrcFile],
+    doc_text: &str,
+    manifest: &Manifest,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    // span name -> first declaration site, for duplicate reporting.
+    let mut seen: BTreeMap<String, (String, u32)> = BTreeMap::new();
+    for file in files {
+        let code = &file.code;
+        for i in 0..code.len().saturating_sub(1) {
+            // Definition site only: `SPAN_NAMES` followed by the type
+            // colon. Usage sites (`SPAN_NAMES.get`, `SPAN_NAMES.len()`)
+            // have `.` or `;` next and fall through.
+            if code[i].kind != TokKind::Ident
+                || code[i].text != manifest.metrics.span_table
+                || !code[i + 1].is_punct(':')
+            {
+                continue;
+            }
+            // Collect the string entries up to the terminating `;`.
+            let mut j = i + 2;
+            while j < code.len() && !code[j].is_punct(';') {
+                if code[j].kind == TokKind::Str {
+                    let name = code[j].text.clone();
+                    if let Some((first_file, first_line)) = seen.get(&name) {
+                        out.push(Finding::new(
+                            "metrics",
+                            &file.path,
+                            code[j].line,
+                            format!(
+                                "span `{name}` declared twice (first at \
+                                 {first_file}:{first_line}) — span names \
+                                 must be globally unique so trace and \
+                                 critical-path rows are unambiguous"
+                            ),
+                        ));
+                    } else {
+                        seen.insert(name.clone(), (file.path.clone(), code[j].line));
+                        if !doc_text.contains(&format!("`{name}`")) {
+                            out.push(Finding::new(
+                                "metrics",
+                                &file.path,
+                                code[j].line,
+                                format!(
+                                    "span `{name}` is not documented in {} — \
+                                     add it to the span taxonomy table",
+                                    manifest.metrics.doc
+                                ),
+                            ));
+                        }
+                    }
+                }
+                j += 1;
+            }
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -171,6 +247,38 @@ mod tests {
         let findings = check_files(&[parse(src)], "", &manifest());
         assert_eq!(findings.len(), 1, "{findings:?}");
         assert!(findings[0].message.contains("non-literal"));
+    }
+
+    #[test]
+    fn span_taxonomy_good_fixture_is_clean() {
+        let files = vec![parse(include_str!("../tests/spans_good.rs"))];
+        let doc = "| `fixture-iteration` | `fixture-push` | `fixture-apply` |";
+        let findings = check_spans(&files, doc, &manifest());
+        assert!(findings.is_empty(), "{findings:?}");
+    }
+
+    #[test]
+    fn span_taxonomy_bad_fixture_seeds_duplicate_and_undocumented() {
+        let files = vec![parse(include_str!("../tests/spans_bad.rs"))];
+        let doc = "`fixture-iteration`";
+        let findings = check_spans(&files, doc, &manifest());
+        assert_eq!(findings.len(), 2, "{findings:?}");
+        assert!(findings[0].message.contains("declared twice"));
+        assert!(findings[1].message.contains("not documented"));
+        for f in &findings {
+            assert_eq!(f.check, "metrics");
+            assert!(f.line > 0, "findings carry source positions: {f:?}");
+        }
+    }
+
+    #[test]
+    fn span_doc_match_requires_backticks() {
+        // A bare substring match is not documentation: short span names
+        // ("apply", "loss") would collide with ordinary prose.
+        let files = vec![parse(include_str!("../tests/spans_good.rs"))];
+        let doc = "fixture-iteration fixture-push fixture-apply";
+        let findings = check_spans(&files, doc, &manifest());
+        assert_eq!(findings.len(), 3, "{findings:?}");
     }
 
     #[test]

@@ -342,10 +342,10 @@ mod tests {
         let text = include_str!("../dynalint.toml")
             .lines()
             .filter(|l| {
-                // Drop the full v6 table; re-pin a minimal one below.
+                // Drop the full v7 table; re-pin a minimal one below.
                 let in_frames = [
                     "PullReply", "PushAck", "Hello", "HelloAck", "Codec", "Sync",
-                    "Agg", "Snapshot",
+                    "Agg", "Snapshot", "Clock",
                 ]
                 .iter()
                 .any(|p| l.starts_with(p));

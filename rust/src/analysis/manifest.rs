@@ -206,6 +206,10 @@ pub struct MetricsManifest {
     pub macros: Vec<String>,
     /// Required namespace prefix (e.g. `dynacomm_`).
     pub prefix: String,
+    /// Const ident whose string entries form the span-name taxonomy; every
+    /// entry must be globally unique and documented (backtick-quoted) on
+    /// the catalog page.
+    pub span_table: String,
 }
 
 /// The full typed manifest consumed by the five checks.
@@ -327,6 +331,7 @@ impl Manifest {
                 doc: str_key("metrics", "doc")?,
                 macros: list_key("metrics", "macros")?,
                 prefix: str_key("metrics", "prefix")?,
+                span_table: str_key("metrics", "span_table")?,
             },
         })
     }
@@ -398,6 +403,7 @@ doc = "docs/SYNC.md"
 doc = "docs/OBSERVABILITY.md"
 macros = ["obs_counter", "obs_gauge", "obs_histogram"]
 prefix = "dynacomm_"
+span_table = "SPAN_NAMES"
 "#;
 
     #[test]
@@ -430,7 +436,7 @@ prefix = "dynacomm_"
     fn the_committed_manifest_parses() {
         let text = include_str!("dynalint.toml");
         let m = Manifest::from_text(text).expect("committed manifest is valid");
-        assert_eq!(m.wire.frames.len(), 14, "one frame per v6 opcode");
+        assert_eq!(m.wire.frames.len(), 16, "one frame per v7 opcode");
         assert_eq!(m.registries.len(), 3, "sched, sync, codec");
         assert_eq!(m.metrics.macros.len(), 3, "counter, gauge, histogram");
     }

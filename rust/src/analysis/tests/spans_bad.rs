@@ -1,0 +1,8 @@
+//! Fixture: a span taxonomy seeding exactly two violations — one
+//! duplicated name and one name missing from the catalog page.
+
+pub const SPAN_NAMES: &[&str] = &[
+    "fixture-iteration",
+    "fixture-iteration",
+    "fixture-undocumented",
+];

@@ -1,0 +1,14 @@
+//! Fixture: a well-formed span taxonomy. Every name is unique and the
+//! paired doc snippet in the test quotes each one in backticks.
+
+pub const SPAN_NAMES: &[&str] = &[
+    "fixture-iteration",
+    "fixture-push",
+    "fixture-apply",
+];
+
+pub fn lookup(id: usize) -> &'static str {
+    // Usage site: `SPAN_NAMES` followed by `.` must not re-trigger the
+    // definition matcher.
+    SPAN_NAMES.get(id).copied().unwrap_or("?")
+}

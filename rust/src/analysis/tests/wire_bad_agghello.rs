@@ -5,7 +5,7 @@
 // finding: the missing-manifest-entry report for `AggHello`.
 // Never compiled — loaded via include_str! by tests.
 
-pub const PROTOCOL_VERSION: u16 = 6;
+pub const PROTOCOL_VERSION: u16 = 7;
 
 impl MessageRef<'_> {
     pub fn opcode(&self) -> u8 {

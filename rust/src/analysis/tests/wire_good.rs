@@ -3,7 +3,7 @@
 // decoder coverage with a bail wildcard, aligned PROTOCOL_VERSION.
 // Never compiled — loaded via include_str! by tests.
 
-pub const PROTOCOL_VERSION: u16 = 6;
+pub const PROTOCOL_VERSION: u16 = 7;
 
 impl MessageRef<'_> {
     pub fn opcode(&self) -> u8 {

@@ -211,6 +211,12 @@ pub struct SystemConfig {
     /// span tracing is armed for the run and the per-thread span rings
     /// are exported here on shutdown. `None` leaves tracing disarmed.
     pub trace_out: Option<String>,
+    /// Clock-probe cadence in iterations (`--clock-probe-every`,
+    /// docs/OBSERVABILITY.md): every worker re-measures its per-shard
+    /// clock offset this often, on top of the burst every session runs at
+    /// establish. 0 disables the periodic re-probes (the establish burst
+    /// still runs — the merged trace always has an offset per lane).
+    pub clock_probe_every: usize,
 }
 
 /// Check a `--metrics-addr` spelling is a plausible `host:port`: non-empty
@@ -259,6 +265,7 @@ impl Default for SystemConfig {
             io_timeout_ms: 0,
             metrics_addr: None,
             trace_out: None,
+            clock_probe_every: 64,
         }
     }
 }
@@ -326,6 +333,7 @@ impl SystemConfig {
         if let Some(p) = args.get("trace-out") {
             self.trace_out = Some(p.to_string());
         }
+        self.clock_probe_every = args.usize("clock-probe-every", self.clock_probe_every);
         assert!(self.group_size >= 1, "--group-size must be >= 1");
         self.agg_sync_config().unwrap_or_else(|e| panic!("{e}"));
         self
@@ -398,6 +406,7 @@ impl SystemConfig {
         if let Some(p) = j.get("trace_out").and_then(Json::as_str) {
             c.trace_out = Some(p.to_string());
         }
+        c.clock_probe_every = num("clock_probe_every", c.clock_probe_every as f64) as usize;
         anyhow::ensure!(c.group_size >= 1, "group_size must be >= 1");
         c.agg_sync_config()?;
         Ok(c)
@@ -423,6 +432,7 @@ impl SystemConfig {
             ("agg_sync", Json::Str(self.agg_sync.name().to_string())),
             ("agg_codec", Json::Str(self.agg_codec.name().to_string())),
             ("io_timeout_ms", Json::Num(self.io_timeout_ms as f64)),
+            ("clock_probe_every", Json::Num(self.clock_probe_every as f64)),
             (
                 "gain_threshold_ms",
                 if self.gain_threshold_ms < 0.0 {
@@ -608,11 +618,13 @@ mod tests {
         let d = SystemConfig::default();
         assert_eq!(d.metrics_addr, None);
         assert_eq!(d.trace_out, None);
+        assert_eq!(d.clock_probe_every, 64);
         assert!(!d.to_json().to_string().contains("metrics_addr"));
         // JSON round-trip.
         let c = SystemConfig {
             metrics_addr: Some("127.0.0.1:9461".to_string()),
             trace_out: Some("trace.json".to_string()),
+            clock_probe_every: 7,
             ..SystemConfig::default()
         };
         let back =
@@ -620,13 +632,14 @@ mod tests {
         assert_eq!(back, c);
         // Flags overlay.
         let args = Args::parse(
-            ["--metrics-addr", "0.0.0.0:0", "--trace-out", "t.json"]
+            ["--metrics-addr", "0.0.0.0:0", "--trace-out", "t.json", "--clock-probe-every", "5"]
                 .iter()
                 .map(|s| s.to_string()),
         );
         let c = SystemConfig::default().apply_args(&args);
         assert_eq!(c.metrics_addr.as_deref(), Some("0.0.0.0:0"));
         assert_eq!(c.trace_out.as_deref(), Some("t.json"));
+        assert_eq!(c.clock_probe_every, 5);
         // A malformed address is rejected at JSON load, not at bind time.
         let bad = Json::obj(vec![("metrics_addr", Json::Str("not-an-addr".to_string()))]);
         assert!(SystemConfig::from_json(&bad).is_err());

@@ -235,6 +235,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.metrics_addr = Some(a.to_string());
     }
     cfg.trace_out = args.get("trace-out").map(str::to_string);
+    cfg.clock_probe_every = args.usize("clock-probe-every", cfg.clock_probe_every);
     if cfg.tier == dynacomm::config::Tier::Regional {
         println!(
             "tier=regional group-size={} agg-sync={} agg-codec={}",

@@ -18,4 +18,6 @@ pub use codec::{CodecId, CodecStats, WireCodec};
 pub use fault::{FaultAction, FaultEvent, FaultProxy, FaultSpec};
 pub use pool::{PoolStats, PooledSlab, SlabCheckout, SlabPool, SlabSlice};
 pub use shaper::{LinkShaper, ShaperSpec};
-pub use transport::{Connection, Message, MessageRef, PeerRole, RecvMsg, PROTOCOL_VERSION};
+pub use transport::{
+    Connection, Message, MessageRef, PeerRole, RecvMsg, TraceCtx, PROTOCOL_VERSION,
+};

@@ -27,7 +27,11 @@
 //! tier's registration frame ([`crate::ps::agg`], `docs/TOPOLOGY.md`):
 //! `AggHello` carries a [`PeerRole`] plus the number of edge workers the
 //! peer aggregates, so a regional aggregator can register upstream as one
-//! weighted super-worker.
+//! weighted super-worker. Protocol v7 adds the fleet-tracing surface
+//! (`docs/OBSERVABILITY.md`): `Push`/`PullReply` frames may carry a
+//! trailing 13-byte [`TraceCtx`] (trace id + sender span id) after the
+//! slab, and the `ClockProbe`/`ClockReply` frames implement the NTP-style
+//! four-timestamp clock-offset probe ([`crate::obs::clock`]).
 
 use std::io::{IoSlice, Read, Write};
 use std::net::TcpStream;
@@ -82,8 +86,16 @@ const RECV_RETAIN_MAX: usize = 16 << 20;
 /// fleet size, so a late worker adopts state and enters the barrier at
 /// the correct weight. Every pre-v6 frame is byte-identical; the bump
 /// exists because a v5 server would reject the join request an elastic
-/// fleet depends on.
-pub const PROTOCOL_VERSION: u16 = 6;
+/// fleet depends on. v7 adds the fleet-tracing surface: `Push` and
+/// `PullReply` frames may carry a trailing [`TraceCtx`] after the slab
+/// (distributed-trace propagation — the sender's span id becomes the
+/// receiver's remote parent), and `ClockProbe` (opcode 15) /
+/// `ClockReply` (opcode 16) implement the four-timestamp clock-offset
+/// probe. A context-free v6 tensor frame stays byte-identical and is
+/// still accepted for one version per the usual compat rule; the bump
+/// exists because a v6 peer would reject a context-carrying frame as
+/// trailing garbage and the clock frames as unknown opcodes.
+pub const PROTOCOL_VERSION: u16 = 7;
 
 /// The role a peer announces in an [`Message::AggHello`] registration
 /// frame (v5): a plain edge worker, or a regional aggregator acting as one
@@ -119,6 +131,80 @@ impl PeerRole {
             PeerRole::Edge => "edge",
             PeerRole::Regional => "regional",
         }
+    }
+}
+
+/// Distributed-tracing context (v7), carried as a trailing 13-byte block
+/// after the tensor slab of `Push`/`PullReply` frames so the fixed slab
+/// offsets of every pre-v7 consumer stay valid. Layout: `u64 LE trace id`
+/// (hash of run seed + iteration — one id per logical iteration fleet
+/// wide), `u32 LE sender span id`, `u8 flags`. The receiver records its
+/// own span (apply/fan-in/decode) with the sender's span id as remote
+/// parent, which is what lets the merged Chrome trace stitch
+/// worker→agg→shard causality with flow arrows (`docs/OBSERVABILITY.md`).
+///
+/// Flags: bit 0 ([`TraceCtx::FLAG_SAMPLED`]) must be set — a context is
+/// only attached when tracing is armed; bit 1 ([`TraceCtx::FLAG_REPLY`])
+/// marks reply-direction contexts (`PullReply`), whose link is an
+/// arrow-only stitch rather than a containment parent (the server's
+/// assemble span ends before the worker's decode begins). All other bits
+/// are reserved-must-be-zero and rejected by the decoder, as is a context
+/// of any length other than exactly 13 bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    pub trace_id: u64,
+    pub parent_span: u32,
+    pub flags: u8,
+}
+
+impl TraceCtx {
+    /// On-wire size of a trace context: trace id + span id + flags.
+    pub const WIRE_LEN: usize = 8 + 4 + 1;
+    /// The context was recorded by an armed tracer (always set).
+    pub const FLAG_SAMPLED: u8 = 1 << 0;
+    /// Reply-direction context (`PullReply`): stitch an arrow, not a
+    /// containment parent.
+    pub const FLAG_REPLY: u8 = 1 << 1;
+    const KNOWN_FLAGS: u8 = Self::FLAG_SAMPLED | Self::FLAG_REPLY;
+
+    /// A request-direction (`Push`) context.
+    pub fn sampled(trace_id: u64, parent_span: u32) -> TraceCtx {
+        TraceCtx { trace_id, parent_span, flags: Self::FLAG_SAMPLED }
+    }
+
+    /// A reply-direction (`PullReply`) context.
+    pub fn reply(trace_id: u64, parent_span: u32) -> TraceCtx {
+        TraceCtx { trace_id, parent_span, flags: Self::FLAG_SAMPLED | Self::FLAG_REPLY }
+    }
+
+    pub fn is_reply(&self) -> bool {
+        self.flags & Self::FLAG_REPLY != 0
+    }
+
+    /// The exact 13 wire bytes of this context.
+    pub fn to_bytes(&self) -> [u8; Self::WIRE_LEN] {
+        let mut b = [0u8; Self::WIRE_LEN];
+        b[0..8].copy_from_slice(&self.trace_id.to_le_bytes());
+        b[8..12].copy_from_slice(&self.parent_span.to_le_bytes());
+        b[12] = self.flags;
+        b
+    }
+
+    /// Parse and validate exactly [`TraceCtx::WIRE_LEN`] bytes.
+    fn parse(b: &[u8]) -> Result<TraceCtx> {
+        debug_assert_eq!(b.len(), Self::WIRE_LEN);
+        let trace_id = u64::from_le_bytes(b[0..8].try_into().unwrap());
+        let parent_span = u32::from_le_bytes(b[8..12].try_into().unwrap());
+        let flags = b[12];
+        anyhow::ensure!(
+            flags & !Self::KNOWN_FLAGS == 0,
+            "trace context with unknown flag bits {flags:#04x}"
+        );
+        anyhow::ensure!(
+            flags & Self::FLAG_SAMPLED != 0,
+            "trace context without the sampled flag"
+        );
+        Ok(TraceCtx { trace_id, parent_span, flags })
     }
 }
 
@@ -183,6 +269,17 @@ pub enum Message {
     /// size its expectations without a second handshake. The slab carries
     /// the owned layers' parameters exactly like a `PullReply`.
     SnapshotReply { iter: u64, lo: u32, hi: u32, workers: u32, codec: CodecId, data: Vec<u8> },
+    /// Either direction (v7): first leg of the NTP-style four-timestamp
+    /// clock probe ([`crate::obs::clock`]). `t1` is the prober's local
+    /// monotonic clock at send time, echoed back verbatim in the reply so
+    /// the prober never has to correlate in-flight probes.
+    ClockProbe { t1: u64 },
+    /// The probe answer (v7): the echoed `t1`, the responder's clock at
+    /// receive (`t2`) and at send (`t3`). The prober timestamps the
+    /// arrival (`t4`) and computes offset `((t2−t1)+(t3−t4))/2` and
+    /// uncertainty `((t4−t1)−(t3−t2))/2`. Answered immediately and
+    /// ungated by registration or sync state.
+    ClockReply { t1: u64, t2: u64, t3: u64 },
     /// Either direction: tear the connection down.
     Shutdown,
 }
@@ -253,6 +350,10 @@ impl Message {
                     codec: *codec,
                     data: data.as_slice(),
                 }
+            }
+            Message::ClockProbe { t1 } => MessageRef::ClockProbe { t1: *t1 },
+            Message::ClockReply { t1, t2, t3 } => {
+                MessageRef::ClockReply { t1: *t1, t2: *t2, t3: *t3 }
             }
             Message::Shutdown => MessageRef::Shutdown,
         }
@@ -325,6 +426,12 @@ impl Message {
                 buf.extend_from_slice(&slab_len_field(*codec, data.len()).to_le_bytes());
                 buf.extend_from_slice(data);
             }
+            Message::ClockProbe { t1 } => buf.extend_from_slice(&t1.to_le_bytes()),
+            Message::ClockReply { t1, t2, t3 } => {
+                buf.extend_from_slice(&t1.to_le_bytes());
+                buf.extend_from_slice(&t2.to_le_bytes());
+                buf.extend_from_slice(&t3.to_le_bytes());
+            }
             Message::Shutdown => {}
         }
     }
@@ -360,6 +467,8 @@ pub enum MessageRef<'a> {
     SyncAgree { mode: SyncMode, bound: u32 },
     SnapshotReq { lo: u32, hi: u32 },
     SnapshotReply { iter: u64, lo: u32, hi: u32, workers: u32, codec: CodecId, data: &'a [u8] },
+    ClockProbe { t1: u64 },
+    ClockReply { t1: u64, t2: u64, t3: u64 },
 }
 
 impl<'a> MessageRef<'a> {
@@ -379,6 +488,8 @@ impl<'a> MessageRef<'a> {
             MessageRef::AggHello { .. } => 12,
             MessageRef::SnapshotReq { .. } => 13,
             MessageRef::SnapshotReply { .. } => 14,
+            MessageRef::ClockProbe { .. } => 15,
+            MessageRef::ClockReply { .. } => 16,
         }
     }
 
@@ -399,6 +510,8 @@ impl<'a> MessageRef<'a> {
             MessageRef::SyncAgree { .. } => 1 + 4,
             MessageRef::SnapshotReq { .. } => 4 + 4,
             MessageRef::SnapshotReply { data, .. } => 8 + 4 + 4 + 4 + 4 + data.len(),
+            MessageRef::ClockProbe { .. } => 8,
+            MessageRef::ClockReply { .. } => 8 + 8 + 8,
         }
     }
 
@@ -470,27 +583,49 @@ impl<'a> MessageRef<'a> {
                 buf.extend_from_slice(&lo.to_le_bytes());
                 buf.extend_from_slice(&hi.to_le_bytes());
             }
+            MessageRef::ClockProbe { t1 } => buf.extend_from_slice(&t1.to_le_bytes()),
+            MessageRef::ClockReply { t1, t2, t3 } => {
+                buf.extend_from_slice(&t1.to_le_bytes());
+                buf.extend_from_slice(&t2.to_le_bytes());
+                buf.extend_from_slice(&t3.to_le_bytes());
+            }
             _ => {}
         }
         &[]
     }
 
-    /// Decode a frame payload, borrowing the tensor slab from it.
+    /// Decode a frame payload, borrowing the tensor slab from it. A v7
+    /// trailing trace context on `Push`/`PullReply` is validated and
+    /// discarded — v6-era consumers keep working unchanged; trace-aware
+    /// receive paths use [`MessageRef::decode_with_ctx`].
     // dynalint: hot-path
     pub fn decode(payload: &'a [u8]) -> Result<MessageRef<'a>> {
+        Ok(Self::decode_with_ctx(payload)?.0)
+    }
+
+    /// Decode a frame payload, also returning the v7 trace context if the
+    /// frame carried one (only `Push`/`PullReply` can; `None` for a
+    /// context-free v6 tensor frame, which stays accepted this version).
+    // dynalint: hot-path
+    pub fn decode_with_ctx(
+        payload: &'a [u8],
+    ) -> Result<(MessageRef<'a>, Option<TraceCtx>)> {
         anyhow::ensure!(!payload.is_empty(), "empty frame");
         let op = payload[0];
         let mut r = Reader { b: &payload[1..] };
+        let mut ctx = None;
         let msg = match op {
             1 => MessageRef::Pull { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
             2 => {
                 let (iter, lo, hi, applied) = (r.u64()?, r.u32()?, r.u32()?, r.u64()?);
                 let (codec, data) = r.slab()?;
+                ctx = r.trace_ctx()?;
                 MessageRef::PullReply { iter, lo, hi, applied, codec, data }
             }
             3 => {
                 let (iter, lo, hi) = (r.u64()?, r.u32()?, r.u32()?);
                 let (codec, data) = r.slab()?;
+                ctx = r.trace_ctx()?;
                 MessageRef::Push { iter, lo, hi, codec, data }
             }
             4 => MessageRef::PushAck { iter: r.u64()?, lo: r.u32()?, hi: r.u32()? },
@@ -518,10 +653,12 @@ impl<'a> MessageRef<'a> {
                 let (codec, data) = r.slab()?;
                 MessageRef::SnapshotReply { iter, lo, hi, workers, codec, data }
             }
+            15 => MessageRef::ClockProbe { t1: r.u64()? },
+            16 => MessageRef::ClockReply { t1: r.u64()?, t2: r.u64()?, t3: r.u64()? },
             _ => bail!("unknown opcode {op}"),
         };
         anyhow::ensure!(r.b.is_empty(), "trailing bytes in frame (op {op})");
-        Ok(msg)
+        Ok((msg, ctx))
     }
 
     /// Copy into the owned form (the only place the slab is cloned).
@@ -551,6 +688,8 @@ impl<'a> MessageRef<'a> {
             MessageRef::SnapshotReply { iter, lo, hi, workers, codec, data } => {
                 Message::SnapshotReply { iter, lo, hi, workers, codec, data: data.to_vec() }
             }
+            MessageRef::ClockProbe { t1 } => Message::ClockProbe { t1 },
+            MessageRef::ClockReply { t1, t2, t3 } => Message::ClockReply { t1, t2, t3 },
         }
     }
 }
@@ -625,6 +764,22 @@ impl<'a> Reader<'a> {
         Ok((role, group, workers, version))
     }
 
+    /// The optional v7 trace context trailing a tensor frame's slab: no
+    /// remaining bytes means a context-free (v6-compatible) frame; exactly
+    /// [`TraceCtx::WIRE_LEN`] remaining bytes are parsed and validated
+    /// (unknown flag bits and a clear sampled bit are rejected). Any other
+    /// remaining count is left in place for the decoder's trailing-bytes
+    /// rejection — a truncated or padded context never parses.
+    fn trace_ctx(&mut self) -> Result<Option<TraceCtx>> {
+        if self.b.is_empty() {
+            return Ok(None);
+        }
+        if self.b.len() != TraceCtx::WIRE_LEN {
+            return Ok(None);
+        }
+        Ok(Some(TraceCtx::parse(self.take(TraceCtx::WIRE_LEN)?)?))
+    }
+
     /// Length-prefixed byte slab, borrowed — no copy, no per-element work.
     /// The length field's top 2 bits carry the codec tag; the low 30 bits
     /// the byte count, checked against the codec's frame-level invariants
@@ -654,10 +809,19 @@ impl<'a> Reader<'a> {
 pub enum RecvMsg {
     /// Control frames, owned as usual.
     Control(Message),
-    /// A `PullReply` whose slab is a pooled view.
-    PullReply { iter: u64, lo: u32, hi: u32, applied: u64, codec: CodecId, data: SlabSlice },
+    /// A `PullReply` whose slab is a pooled view. `ctx` is the v7 trace
+    /// context when the sender attached one.
+    PullReply {
+        iter: u64,
+        lo: u32,
+        hi: u32,
+        applied: u64,
+        codec: CodecId,
+        data: SlabSlice,
+        ctx: Option<TraceCtx>,
+    },
     /// A `Push` whose slab is a pooled view.
-    Push { iter: u64, lo: u32, hi: u32, codec: CodecId, data: SlabSlice },
+    Push { iter: u64, lo: u32, hi: u32, codec: CodecId, data: SlabSlice, ctx: Option<TraceCtx> },
 }
 
 /// Byte offset of the slab inside a `Push` frame payload: opcode + `iter`
@@ -703,6 +867,17 @@ fn encode_tensor_header(
         buf.extend_from_slice(&applied.to_le_bytes());
     }
     buf.extend_from_slice(&slab_len_field(codec, data_len).to_le_bytes());
+}
+
+/// Widen an encoded frame's `u32 LE` length prefix by `extra` bytes: the
+/// shared tensor-header encoder emits the context-free (v6) length, and
+/// the send paths that append a [`TraceCtx`] trailer patch the prefix to
+/// cover it — one place less for the two layouts to drift apart.
+// dynalint: hot-path
+fn patch_frame_len(buf: &mut [u8], extra: usize) {
+    debug_assert!(buf.len() >= 4);
+    let len = u32::from_le_bytes(buf[0..4].try_into().unwrap()) + extra as u32;
+    buf[0..4].copy_from_slice(&len.to_le_bytes());
 }
 
 /// The virtual part list of a scattered frame: index 0 is the header,
@@ -822,7 +997,13 @@ impl Connection {
 
     /// Send one owned message (delegates to the vectored path).
     pub fn send(&mut self, msg: &Message) -> Result<()> {
-        self.send_ref(msg.wire_ref())
+        self.send_ref_ctx(msg.wire_ref(), None)
+    }
+
+    /// Send one owned message with a v7 trace context appended after the
+    /// slab (tensor frames only; `None` sends the context-free v6 layout).
+    pub fn send_ctx(&mut self, msg: &Message, ctx: Option<TraceCtx>) -> Result<()> {
+        self.send_ref_ctx(msg.wire_ref(), ctx)
     }
 
     /// Send one message with its tensor slab borrowed: the header is
@@ -832,12 +1013,38 @@ impl Connection {
     /// before the bytes hit the socket.
     // dynalint: hot-path
     pub fn send_ref(&mut self, msg: MessageRef<'_>) -> Result<()> {
+        self.send_ref_ctx(msg, None)
+    }
+
+    /// [`Connection::send_ref`] with an optional v7 trace context: the
+    /// frame goes out as `[header][slab][ctx]` — the 13 context bytes ride
+    /// as a third scattered part from a stack buffer, and the length
+    /// prefix (encoded context-free by the shared header encoder) is
+    /// patched to cover them. Attaching a context to a non-tensor frame is
+    /// a caller bug (only `Push`/`PullReply` carry one on the wire).
+    // dynalint: hot-path
+    pub fn send_ref_ctx(&mut self, msg: MessageRef<'_>, ctx: Option<TraceCtx>) -> Result<()> {
         let payload = msg.encode_header_into(&mut self.send_buf);
+        let ctx_bytes;
+        let trailer: &[u8] = match ctx {
+            Some(c) => {
+                debug_assert!(
+                    matches!(msg, MessageRef::Push { .. } | MessageRef::PullReply { .. }),
+                    "trace context on a non-tensor frame (op {})",
+                    msg.opcode()
+                );
+                patch_frame_len(&mut self.send_buf, TraceCtx::WIRE_LEN);
+                ctx_bytes = c.to_bytes();
+                &ctx_bytes
+            }
+            None => &[],
+        };
         if let Some(shaper) = &self.shaper {
-            shaper.delay_for(self.send_buf.len() + payload.len());
+            shaper.delay_for(self.send_buf.len() + payload.len() + trailer.len());
         }
-        let wire = self.send_buf.len() + payload.len();
-        write_scattered(&mut self.stream, &self.send_buf, &[payload]).context("send")?;
+        let wire = self.send_buf.len() + payload.len() + trailer.len();
+        write_scattered(&mut self.stream, &self.send_buf, &[payload, trailer])
+            .context("send")?;
         let net = net_counters();
         net.tx_frames.inc();
         net.tx_bytes.add(wire as u64);
@@ -847,7 +1054,8 @@ impl Connection {
     /// Send a `Push` whose slab is scattered across `parts` (e.g. one part
     /// per layer, straight from the pooled per-layer gradient slabs). The
     /// frame on the wire is byte-identical to sending the concatenation —
-    /// without ever materializing it.
+    /// without ever materializing it. A v7 trace context, when given,
+    /// rides as one more scattered part after the slab.
     // dynalint: hot-path
     pub fn send_push_parts(
         &mut self,
@@ -856,14 +1064,30 @@ impl Connection {
         hi: u32,
         codec: CodecId,
         parts: &[&[u8]],
+        ctx: Option<TraceCtx>,
     ) -> Result<()> {
         let data_len: usize = parts.iter().map(|p| p.len()).sum();
         encode_tensor_header(&mut self.send_buf, iter, lo, hi, None, codec, data_len);
+        let ctx_bytes;
+        let trailer: &[u8] = match ctx {
+            Some(c) => {
+                patch_frame_len(&mut self.send_buf, TraceCtx::WIRE_LEN);
+                ctx_bytes = c.to_bytes();
+                &ctx_bytes
+            }
+            None => &[],
+        };
         if let Some(shaper) = &self.shaper {
-            shaper.delay_for(self.send_buf.len() + data_len);
+            shaper.delay_for(self.send_buf.len() + data_len + trailer.len());
         }
-        let wire = self.send_buf.len() + data_len;
+        let wire = self.send_buf.len() + data_len + trailer.len();
         write_scattered(&mut self.stream, &self.send_buf, parts).context("send")?;
+        if !trailer.is_empty() {
+            // The context rides as a tail write of the same frame (the
+            // patched length prefix already covers it); appending it to
+            // the caller's part list would need a heap copy of the table.
+            self.stream.write_all(trailer).context("send")?;
+        }
         let net = net_counters();
         net.tx_frames.inc();
         net.tx_bytes.add(wire as u64);
@@ -881,6 +1105,14 @@ impl Connection {
     /// server's `Push` handling).
     // dynalint: hot-path
     pub fn recv_ref(&mut self) -> Result<MessageRef<'_>> {
+        Ok(self.recv_ref_ctx()?.0)
+    }
+
+    /// [`Connection::recv_ref`] that also surfaces the v7 trace context
+    /// when the sender attached one (trace-aware endpoints: the server's
+    /// and aggregator's frame loops).
+    // dynalint: hot-path
+    pub fn recv_ref_ctx(&mut self) -> Result<(MessageRef<'_>, Option<TraceCtx>)> {
         let len = read_frame_len(&mut self.stream)?;
         prepare_frame_buf(&mut self.recv_buf, len);
         self.stream
@@ -889,7 +1121,7 @@ impl Connection {
         let net = net_counters();
         net.rx_frames.inc();
         net.rx_bytes.add(4 + len as u64);
-        MessageRef::decode(&self.recv_buf[..len])
+        MessageRef::decode_with_ctx(&self.recv_buf[..len])
     }
 
     /// Receive one message (blocking), reading the frame straight into a
@@ -922,8 +1154,11 @@ impl Connection {
         let net = net_counters();
         net.rx_frames.inc();
         net.rx_bytes.add(4 + len as u64);
-        // One decode, fully validating the frame.
-        let parsed = match MessageRef::decode(&frame[..])? {
+        // One decode, fully validating the frame (the v7 trace context
+        // included — the slab still sits at its fixed opcode offset, the
+        // context trails it).
+        let (msg, ctx) = MessageRef::decode_with_ctx(&frame[..])?;
+        let parsed = match msg {
             MessageRef::PullReply { iter, lo, hi, applied, codec, data } => {
                 Parsed::Tensor { op: 2, iter, lo, hi, applied, codec, len: data.len() }
             }
@@ -936,10 +1171,10 @@ impl Connection {
             Parsed::Tensor { op, iter, lo, hi, applied, codec, len } => {
                 Ok(if op == 2 {
                     let data = SlabSlice::new(frame.freeze(), PULL_REPLY_SLAB_OFF, len);
-                    RecvMsg::PullReply { iter, lo, hi, applied, codec, data }
+                    RecvMsg::PullReply { iter, lo, hi, applied, codec, data, ctx }
                 } else {
                     let data = SlabSlice::new(frame.freeze(), PUSH_SLAB_OFF, len);
-                    RecvMsg::Push { iter, lo, hi, codec, data }
+                    RecvMsg::Push { iter, lo, hi, codec, data, ctx }
                 })
             }
             Parsed::Control(msg) => Ok(RecvMsg::Control(msg)),
@@ -1067,6 +1302,173 @@ mod tests {
             codec: CodecId::Fp32,
             data: Vec::new(),
         });
+        roundtrip(Message::ClockProbe { t1: 0 });
+        roundtrip(Message::ClockProbe { t1: u64::MAX });
+        roundtrip(Message::ClockReply { t1: 1, t2: 2, t3: 3 });
+        roundtrip(Message::ClockReply { t1: u64::MAX, t2: 0, t3: u64::MAX });
+    }
+
+    /// The v7 clock frames: fixed layouts (a probe is opcode + u64 t1, a
+    /// reply echoes t1 and adds t2/t3), and truncation fails cleanly.
+    #[test]
+    fn clock_frames_pin_layout() {
+        let enc = Message::ClockProbe { t1: 0x0102030405060708 }.encode();
+        let mut expect = vec![15u8];
+        expect.extend_from_slice(&0x0102030405060708u64.to_le_bytes());
+        assert_eq!(&enc[4..], &expect[..]);
+        let enc = Message::ClockReply { t1: 7, t2: 9, t3: 11 }.encode();
+        let mut expect = vec![16u8];
+        expect.extend_from_slice(&7u64.to_le_bytes());
+        expect.extend_from_slice(&9u64.to_le_bytes());
+        expect.extend_from_slice(&11u64.to_le_bytes());
+        assert_eq!(&enc[4..], &expect[..]);
+        assert!(Message::decode(&enc[4..enc.len() - 3]).is_err(), "truncated reply");
+        assert!(Message::decode(&[15u8, 1, 2]).is_err(), "truncated probe");
+    }
+
+    /// Append a v7 trace context to an encoded frame, refreshing the
+    /// length prefix — the reference construction the send paths must
+    /// match.
+    fn with_ctx(mut enc: Vec<u8>, ctx: TraceCtx) -> Vec<u8> {
+        enc.extend_from_slice(&ctx.to_bytes());
+        let frame_len = (enc.len() - 4) as u32;
+        enc[..4].copy_from_slice(&frame_len.to_le_bytes());
+        enc
+    }
+
+    /// The v7 trace context: rides after the slab of `Push`/`PullReply`,
+    /// roundtrips through the ctx-aware decoder, stays invisible to the
+    /// v6-style decoder, and context-free frames still decode (the compat
+    /// rule).
+    #[test]
+    fn trace_context_roundtrips_after_the_slab() {
+        let data = slab::from_f32s(&[1.0, -2.0, 4.5]);
+        let push =
+            Message::Push { iter: 3, lo: 0, hi: 1, codec: CodecId::Fp32, data: data.clone() };
+        let ctx = TraceCtx::sampled(0xDEAD_BEEF_CAFE_F00D, 41);
+        let enc = with_ctx(push.encode(), ctx);
+        let (msg, got) = MessageRef::decode_with_ctx(&enc[4..]).unwrap();
+        assert_eq!(msg.into_owned(), push);
+        assert_eq!(got, Some(ctx));
+        // The v6-style decoder validates and discards the context.
+        assert_eq!(Message::decode(&enc[4..]).unwrap(), push);
+        // Context-free v6 frames stay accepted: ctx comes back None.
+        let enc = push.encode();
+        let (msg, got) = MessageRef::decode_with_ctx(&enc[4..]).unwrap();
+        assert_eq!(msg.into_owned(), push);
+        assert_eq!(got, None);
+        // Reply-direction context on a PullReply.
+        let reply = Message::PullReply {
+            iter: 3,
+            lo: 0,
+            hi: 1,
+            applied: 2,
+            codec: CodecId::Fp32,
+            data,
+        };
+        let ctx = TraceCtx::reply(77, 12);
+        assert!(ctx.is_reply());
+        let enc = with_ctx(reply.encode(), ctx);
+        let (msg, got) = MessageRef::decode_with_ctx(&enc[4..]).unwrap();
+        assert_eq!(msg.into_owned(), reply);
+        assert_eq!(got, Some(ctx));
+    }
+
+    /// Malformed trace contexts are rejected: unknown flag bits, a clear
+    /// sampled bit, wrong trailing lengths, and contexts on frames that
+    /// cannot carry one.
+    #[test]
+    fn decode_rejects_malformed_trace_context() {
+        let push = Message::Push {
+            iter: 0,
+            lo: 0,
+            hi: 0,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&[1.0]),
+        };
+        // Unknown flag bits (0xAA has bits 3/5/7 set).
+        let bad = TraceCtx { trace_id: 1, parent_span: 1, flags: 0xAA };
+        assert!(Message::decode(&with_ctx(push.encode(), bad)[4..]).is_err());
+        // Sampled bit clear: a context would never be attached unsampled.
+        let bad = TraceCtx { trace_id: 1, parent_span: 1, flags: 0 };
+        assert!(Message::decode(&with_ctx(push.encode(), bad)[4..]).is_err());
+        let bad = TraceCtx { trace_id: 1, parent_span: 1, flags: TraceCtx::FLAG_REPLY };
+        assert!(Message::decode(&with_ctx(push.encode(), bad)[4..]).is_err());
+        // A truncated (12-byte) and padded (14-byte) context both reject
+        // as trailing garbage.
+        let ok = TraceCtx::sampled(1, 1);
+        let mut enc = with_ctx(push.encode(), ok);
+        enc.truncate(enc.len() - 1);
+        let frame_len = (enc.len() - 4) as u32;
+        enc[..4].copy_from_slice(&frame_len.to_le_bytes());
+        assert!(Message::decode(&enc[4..]).is_err(), "12-byte context accepted");
+        let mut enc = with_ctx(push.encode(), ok);
+        enc.push(0);
+        let frame_len = (enc.len() - 4) as u32;
+        enc[..4].copy_from_slice(&frame_len.to_le_bytes());
+        assert!(Message::decode(&enc[4..]).is_err(), "14-byte context accepted");
+        // Non-tensor frames never carry a context: 13 trailing bytes on a
+        // Pull are trailing garbage even when they parse as a context.
+        let mut enc = Message::Pull { iter: 1, lo: 0, hi: 0 }.encode();
+        enc.extend_from_slice(&ok.to_bytes());
+        let frame_len = (enc.len() - 4) as u32;
+        enc[..4].copy_from_slice(&frame_len.to_le_bytes());
+        assert!(Message::decode(&enc[4..]).is_err(), "context on a Pull accepted");
+    }
+
+    /// The ctx-aware send paths emit `[header][slab][ctx]` byte-identical
+    /// to the reference construction, over a real socket, for both the
+    /// borrowed-slab and the scattered-parts writers — and the pooled
+    /// receiver surfaces the context.
+    #[test]
+    fn ctx_send_paths_match_reference_over_tcp() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let mut conn = Connection::new(s, None);
+            let pool = crate::net::pool::SlabPool::new();
+            // First frame: pooled receive surfaces the context.
+            let first = match conn.recv_pooled(&pool).unwrap() {
+                RecvMsg::Push { iter, codec, data, ctx, .. } => {
+                    assert_eq!(iter, 5);
+                    assert_eq!(codec, CodecId::Fp32);
+                    (data[..].to_vec(), ctx)
+                }
+                m => panic!("{m:?}"),
+            };
+            // Second frame: scattered parts + context.
+            let second = match conn.recv_pooled(&pool).unwrap() {
+                RecvMsg::Push { data, ctx, .. } => (data[..].to_vec(), ctx),
+                m => panic!("{m:?}"),
+            };
+            // Third: a ctx-carrying PullReply through recv_ref_ctx.
+            let (msg, ctx) = conn.recv_ref_ctx().unwrap();
+            let third = (msg.into_owned(), ctx);
+            (first, second, third)
+        });
+        let data = slab::from_f32s(&[2.0; 64]);
+        let ctx = TraceCtx::sampled(99, 7);
+        let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
+        let push =
+            Message::Push { iter: 5, lo: 0, hi: 1, codec: CodecId::Fp32, data: data.clone() };
+        conn.send_ctx(&push, Some(ctx)).unwrap();
+        let (a, b) = data.split_at(128);
+        conn.send_push_parts(5, 0, 1, CodecId::Fp32, &[a, b], Some(ctx)).unwrap();
+        let reply_ctx = TraceCtx::reply(99, 13);
+        let reply = Message::PullReply {
+            iter: 5,
+            lo: 0,
+            hi: 1,
+            applied: 5,
+            codec: CodecId::Fp32,
+            data: data.clone(),
+        };
+        conn.send_ctx(&reply, Some(reply_ctx)).unwrap();
+        let (first, second, third) = t.join().unwrap();
+        assert_eq!(first, (data.clone(), Some(ctx)));
+        assert_eq!(second, (data.clone(), Some(ctx)));
+        assert_eq!(third, (reply, Some(reply_ctx)));
     }
 
     /// The v6 mid-run-join frames: layouts, and the malformed-fleet-size
@@ -1291,7 +1693,7 @@ mod tests {
     }
 
     fn random_message(rng: &mut Rng) -> Message {
-        match rng.below(14) {
+        match rng.below(16) {
             0 => Message::Pull { iter: rng.below(1 << 20) as u64, lo: 0, hi: 7 },
             1 => {
                 let (codec, data) = random_codec_data(rng);
@@ -1338,6 +1740,12 @@ mod tests {
                     data,
                 }
             }
+            13 => Message::ClockProbe { t1: rng.below(1 << 30) as u64 },
+            14 => Message::ClockReply {
+                t1: rng.below(1 << 30) as u64,
+                t2: rng.below(1 << 30) as u64,
+                t3: rng.below(1 << 30) as u64,
+            },
             _ => Message::Shutdown,
         }
     }
@@ -1529,7 +1937,7 @@ mod tests {
         let b: Vec<u8> = Vec::new();
         let c = slab::from_f32s(&[-2.5; 77]);
         let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
-        conn.send_push_parts(11, 0, 2, CodecId::Fp32, &[&a, &b, &c]).unwrap();
+        conn.send_push_parts(11, 0, 2, CodecId::Fp32, &[&a, &b, &c], None).unwrap();
         let mut expect = a.clone();
         expect.extend_from_slice(&c);
         assert_eq!(
@@ -1616,7 +2024,7 @@ mod tests {
             parts.push(&empty);
         }
         let mut conn = Connection::new(TcpStream::connect(addr).unwrap(), None);
-        conn.send_push_parts(0, 0, 49, CodecId::Fp32, &parts).unwrap();
+        conn.send_push_parts(0, 0, 49, CodecId::Fp32, &parts, None).unwrap();
         let expect: Vec<u8> = layers.concat();
         match t.join().unwrap() {
             Message::Push { data, .. } => assert_eq!(data, expect),

@@ -1,0 +1,200 @@
+//! Clock alignment: NTP-style four-timestamp probes over the fleet's
+//! existing TCP sessions, so the merged trace ([`super::trace`]) can put
+//! every node's spans on one corrected timeline.
+//!
+//! A probe is one `ClockProbe`/`ClockReply` exchange (wire v7, opcodes
+//! 15/16 — see docs/WIRE.md): the prober stamps `t1` at send, the
+//! responder echoes it with its own receive (`t2`) and send (`t3`)
+//! stamps, and the prober stamps `t4` at receipt. Standard NTP algebra
+//! then gives
+//!
+//! ```text
+//! offset      = ((t2 - t1) + (t3 - t4)) / 2     (peer clock - local clock)
+//! uncertainty = ((t4 - t1) - (t3 - t2)) / 2     (half the pure RTT)
+//! ```
+//!
+//! under the usual symmetric-path assumption; the uncertainty is the
+//! half-RTT error bound that assumption leaves. Probes run at session
+//! establish and periodically after ([`probe_and_note`] keeps the
+//! minimum-uncertainty sample of a burst, the classic NTP filter), and
+//! measured offsets land in a process-global per-peer store consumed by
+//! trace export ([`node_offset_ns`]) and exposed as the
+//! `dynacomm_clock_offset_us` / `dynacomm_clock_uncertainty_us` gauges.
+
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::Context;
+
+use crate::net::{Connection, Message, MessageRef};
+use crate::obs::Gauge;
+use crate::util::sync::lock_or_die;
+
+/// One four-timestamp clock measurement against a peer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClockSample {
+    /// Estimated `peer_clock - local_clock`, nanoseconds.
+    pub offset_ns: i64,
+    /// Error bound on the offset (half the pure round-trip), nanoseconds.
+    pub uncertainty_ns: i64,
+}
+
+/// NTP offset/uncertainty from the four timestamps: `t1` probe send and
+/// `t4` reply receive on the local clock, `t2` probe receive and `t3`
+/// reply send on the peer's clock (all nanoseconds).
+pub fn sample_from(t1: u64, t2: u64, t3: u64, t4: u64) -> ClockSample {
+    let (t1, t2, t3, t4) = (t1 as i64, t2 as i64, t3 as i64, t4 as i64);
+    ClockSample {
+        offset_ns: ((t2 - t1) + (t3 - t4)) / 2,
+        // Clamped: a peer that reports t3 < t2 (can't happen with honest
+        // clocks) must not produce a negative error bound.
+        uncertainty_ns: ((t4 - t1) - (t3 - t2)).max(0) / 2,
+    }
+}
+
+/// Run one probe over an established session. The caller must be at a
+/// lock-step point in its request/reply protocol (no other request in
+/// flight), which is exactly where workers and aggregators call it:
+/// right after session establish and between iterations.
+pub fn probe(conn: &mut Connection) -> anyhow::Result<ClockSample> {
+    let t1 = super::trace::now_ns();
+    conn.send(&Message::ClockProbe { t1 }).context("sending clock probe")?;
+    let reply = conn.recv_ref().context("receiving clock reply")?;
+    let t4 = super::trace::now_ns();
+    match reply {
+        MessageRef::ClockReply { t1: echoed, t2, t3 } => {
+            anyhow::ensure!(
+                echoed == t1,
+                "clock reply echoes t1={echoed}, probe sent t1={t1}"
+            );
+            Ok(sample_from(t1, t2, t3, t4))
+        }
+        other => anyhow::bail!("expected ClockReply to clock probe, got opcode {}", other.opcode()),
+    }
+}
+
+/// Probe `rounds` times and record the minimum-uncertainty sample for
+/// `node` (the NTP sample filter: the tightest round-trip bounds the
+/// offset best). Returns the kept sample.
+pub fn probe_and_note(
+    conn: &mut Connection,
+    node: &str,
+    rounds: usize,
+) -> anyhow::Result<ClockSample> {
+    let mut best: Option<ClockSample> = None;
+    for _ in 0..rounds.max(1) {
+        let s = probe(conn)?;
+        if best.map_or(true, |b| s.uncertainty_ns < b.uncertainty_ns) {
+            best = Some(s);
+        }
+    }
+    let best = best.expect("rounds.max(1) probes ran");
+    note_node_offset(node, best.offset_ns, best.uncertainty_ns);
+    Ok(best)
+}
+
+/// Per-peer clock state: the latest accepted offset plus the pair of
+/// gauges that exposes it. Gauges live here for the process lifetime, so
+/// the series survive between scrapes.
+struct PeerClock {
+    node: String,
+    offset_ns: i64,
+    offset_us: Gauge,
+    uncertainty_us: Gauge,
+}
+
+fn store() -> &'static Mutex<Vec<PeerClock>> {
+    static PEERS: OnceLock<Mutex<Vec<PeerClock>>> = OnceLock::new();
+    PEERS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Record a measured clock offset for `node`, creating the peer's gauge
+/// pair on first sight and updating it after. Called by
+/// [`probe_and_note`]; tests and the trainer (which aggregates offsets
+/// reported by workers) call it directly.
+pub fn note_node_offset(node: &str, offset_ns: i64, uncertainty_ns: i64) {
+    let mut peers = lock_or_die(store(), "obs.clock");
+    let idx = match peers.iter().position(|p| p.node == node) {
+        Some(i) => i,
+        None => {
+            let inst = crate::obs::next_inst();
+            let labels = format!("peer=\"{node}\"");
+            peers.push(PeerClock {
+                node: node.to_string(),
+                offset_ns: 0,
+                offset_us: crate::obs_gauge!("dynacomm_clock_offset_us", labels, inst),
+                uncertainty_us: crate::obs_gauge!("dynacomm_clock_uncertainty_us", labels, inst),
+            });
+            peers.len() - 1
+        }
+    };
+    let peer = &mut peers[idx];
+    peer.offset_ns = offset_ns;
+    peer.offset_us.set(offset_ns as f64 / 1e3);
+    peer.uncertainty_us.set(uncertainty_ns as f64 / 1e3);
+}
+
+/// The latest measured offset for `node` (0 if never probed): what trace
+/// export subtracts from that node's lane to land it on the prober's
+/// timeline.
+pub fn node_offset_ns(node: &str) -> i64 {
+    lock_or_die(store(), "obs.clock")
+        .iter()
+        .find(|p| p.node == node)
+        .map(|p| p.offset_ns)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ntp_algebra_recovers_offset_and_rtt() {
+        // Peer clock runs 500ns ahead; 40ns out, 60ns back on the wire.
+        // t1=1000, t2=(1000+40)+500, t3=t2+10 (peer hold), and
+        // t4=1000+40+10+60 back on the local clock.
+        let s = sample_from(1_000, 1_540, 1_550, 1_110);
+        // offset = ((1540-1000) + (1550-1110))/2 = 490: the true 500 minus
+        // the (40-60)/2 path-asymmetry error, inside the uncertainty.
+        assert_eq!(s.offset_ns, 490);
+        // uncertainty = ((1110-1000) - 10)/2 = half the pure 100ns RTT.
+        assert_eq!(s.uncertainty_ns, 50);
+
+        // Negative offset (peer behind) comes out signed.
+        let s = sample_from(2_000, 1_600, 1_610, 3_010);
+        assert!(s.offset_ns < 0, "peer behind must yield negative offset");
+        assert_eq!(s.uncertainty_ns, 500);
+
+        // A dishonest t3 < t2 clamps to a non-negative bound.
+        let s = sample_from(0, 100, 50, 10);
+        assert!(s.uncertainty_ns >= 0);
+    }
+
+    #[test]
+    fn offsets_update_in_place_and_export_gauges() {
+        note_node_offset("clock-test-a", 7_000, 2_000);
+        note_node_offset("clock-test-b", -3_000, 1_000);
+        assert_eq!(node_offset_ns("clock-test-a"), 7_000);
+        assert_eq!(node_offset_ns("clock-test-b"), -3_000);
+        assert_eq!(node_offset_ns("clock-test-never-probed"), 0);
+
+        // Re-noting the same peer updates the entry instead of duplicating.
+        note_node_offset("clock-test-a", 9_000, 500);
+        assert_eq!(node_offset_ns("clock-test-a"), 9_000);
+        let text = crate::obs::render_prometheus();
+        let rows: Vec<&str> = text
+            .lines()
+            .filter(|l| {
+                l.starts_with("dynacomm_clock_offset_us{") && l.contains("peer=\"clock-test-a\"")
+            })
+            .collect();
+        assert_eq!(rows.len(), 1, "one series per peer, updated in place: {rows:?}");
+        assert!(rows[0].ends_with(" 9"), "9000ns -> 9us: {}", rows[0]);
+        assert!(
+            text.lines().any(|l| l.starts_with("dynacomm_clock_uncertainty_us{")
+                && l.contains("peer=\"clock-test-a\"")
+                && l.ends_with(" 0.5")),
+            "uncertainty gauge in us:\n{text}"
+        );
+    }
+}

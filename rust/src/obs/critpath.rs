@@ -1,0 +1,426 @@
+//! Critical-path analysis: an offline pass over the merged fleet trace
+//! ([`super::trace::chrome_trace_json`]) that answers the question the
+//! scheduler's predictions only approximate — *which hop actually
+//! dominated each iteration?*
+//!
+//! The analyzer works by exhaustive gap accounting rather than longest
+//! path in a DAG: each worker-lane `iteration` span defines a window, the
+//! window is split at every boundary of a candidate span, and each
+//! elementary segment is charged to the most-explanatory covering
+//! category (compute beats encode/decode beats remote server/aggregator
+//! work beats raw wire wait beats idle). Candidates are the iteration
+//! node's own spans plus every remote span whose parent/flow link chain
+//! roots in that node, so a shard `apply` that ran on another process
+//! lane is charged to the worker iteration that caused it. Because every
+//! segment is charged to exactly one hop, the per-hop breakdown sums to
+//! the iteration wall time *identically* — if it doesn't, the trace
+//! itself is malformed.
+//!
+//! Output: a per-iteration breakdown, a fleet-level table
+//! ([`Report::table`]), a machine-readable JSON report
+//! ([`Report::to_json`], what CI parses), and
+//! `dynacomm_critical_path_ms{hop=}` gauges holding the mean
+//! per-iteration milliseconds charged to each hop — the signal the
+//! adaptive control plane (ROADMAP) consumes.
+
+use std::collections::HashMap;
+
+use anyhow::Context;
+
+use crate::obs::Gauge;
+use crate::util::json::Json;
+
+/// Hop categories, lowest priority first: a segment covered by several
+/// span kinds is charged to the highest-priority cover. Compute outranks
+/// everything — while the model is computing, nothing else blocks the
+/// iteration; that is the overlap DynaComm exists to create. Remote hops
+/// outrank the wire spans that contain them (the uncovered remainder of a
+/// `push-seg`/`pull-seg` is genuine wire wait), and `idle` is the
+/// uncovered remainder of the window itself.
+const HOPS: &[&str] = &[
+    "idle",
+    "pull-wire",
+    "push-wire",
+    "agg-fan-out",
+    "agg-fan-in",
+    "agg-forward",
+    "assemble",
+    "apply",
+    "decode",
+    "encode",
+    "compute",
+];
+
+/// Map a span name from the trace to its hop category (`None`: the span
+/// does not participate in attribution — e.g. `iteration` itself).
+fn hop_of(span_name: &str) -> Option<usize> {
+    let hop = match span_name {
+        "fwd-layer" | "loss" | "bwd-layer" => "compute",
+        "grad-encode" => "encode",
+        "decode-seg" => "decode",
+        "apply" => "apply",
+        "assemble" => "assemble",
+        "agg-forward" => "agg-forward",
+        "agg-fan-in" => "agg-fan-in",
+        "agg-fan-out" => "agg-fan-out",
+        "push-seg" => "push-wire",
+        "pull-seg" => "pull-wire",
+        _ => return None,
+    };
+    HOPS.iter().position(|h| *h == hop)
+}
+
+#[derive(Debug, Clone)]
+struct Span {
+    name: String,
+    node: String,
+    begin_us: f64,
+    end_us: f64,
+    id: u32,
+    parent: u32,
+    flow_in: u32,
+}
+
+/// One worker iteration's gap-accounted breakdown. `hops` is parallel to
+/// [`HOPS`] (microseconds charged); the entries sum to `wall_us` exactly.
+#[derive(Debug, Clone)]
+pub struct IterBreakdown {
+    pub node: String,
+    pub begin_us: f64,
+    pub wall_us: f64,
+    pub hops_us: Vec<f64>,
+}
+
+/// Fleet critical-path report. Holding it keeps the
+/// `dynacomm_critical_path_ms{hop=}` gauges alive in the registry.
+pub struct Report {
+    pub iterations: Vec<IterBreakdown>,
+    _gauges: Vec<Gauge>,
+}
+
+/// Parse a merged Chrome trace and compute the per-iteration critical-path
+/// breakdown. Registers/updates the `dynacomm_critical_path_ms` gauges
+/// (mean per-iteration milliseconds per hop); drop the report to retire
+/// them.
+pub fn analyze(trace_json: &str) -> anyhow::Result<Report> {
+    let parsed = Json::parse(trace_json)
+        .map_err(|e| anyhow::anyhow!("parsing trace JSON: {e}"))?;
+    let events = parsed
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .context("trace has no traceEvents array")?;
+
+    // Pass 1: pid -> node name from process_name metadata.
+    let mut node_of_pid: HashMap<u64, String> = HashMap::new();
+    for e in events {
+        if e.get("ph").and_then(|p| p.as_str()) == Some("M")
+            && e.get("name").and_then(|n| n.as_str()) == Some("process_name")
+        {
+            if let (Some(pid), Some(name)) = (
+                e.get("pid").and_then(|p| p.as_f64()),
+                e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str()),
+            ) {
+                node_of_pid.insert(pid as u64, name.to_string());
+            }
+        }
+    }
+
+    // Pass 2: pair B/E per (pid, tid) lane into completed spans. Lanes are
+    // well nested by construction of the exporter, so a stack suffices.
+    let mut stacks: HashMap<(u64, u64), Vec<Span>> = HashMap::new();
+    let mut spans: Vec<Span> = Vec::new();
+    for e in events {
+        let ph = e.get("ph").and_then(|p| p.as_str()).unwrap_or("");
+        if ph != "B" && ph != "E" {
+            continue;
+        }
+        let pid = e.get("pid").and_then(|p| p.as_f64()).unwrap_or(0.0) as u64;
+        let tid = e.get("tid").and_then(|t| t.as_f64()).unwrap_or(0.0) as u64;
+        let ts = e.get("ts").and_then(|t| t.as_f64()).context("event missing ts")?;
+        let stack = stacks.entry((pid, tid)).or_default();
+        if ph == "B" {
+            let arg = |k: &str| {
+                e.get("args").and_then(|a| a.get(k)).and_then(|v| v.as_f64()).unwrap_or(0.0)
+                    as u32
+            };
+            stack.push(Span {
+                name: e.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string(),
+                node: node_of_pid.get(&pid).cloned().unwrap_or_else(|| "local".to_string()),
+                begin_us: ts,
+                end_us: ts,
+                id: arg("id"),
+                parent: arg("parent"),
+                flow_in: arg("flow_in"),
+            });
+        } else {
+            let mut s = stack.pop().with_context(|| {
+                format!("unbalanced E event at ts={ts} in lane ({pid},{tid})")
+            })?;
+            s.end_us = ts;
+            spans.push(s);
+        }
+    }
+    anyhow::ensure!(
+        stacks.values().all(|s| s.is_empty()),
+        "trace has unclosed B events; export only at quiescent points"
+    );
+
+    // Link chains: resolve each span to the node its parent/flow chain
+    // roots in, so remote work is charged to the iteration that caused it.
+    let by_id: HashMap<u32, usize> = spans
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.id != 0)
+        .map(|(i, s)| (s.id, i))
+        .collect();
+    let root_node = |mut i: usize| -> String {
+        for _ in 0..32 {
+            let s = &spans[i];
+            let up = if s.parent != 0 { s.parent } else { s.flow_in };
+            match by_id.get(&up) {
+                Some(&j) if up != 0 => i = j,
+                _ => break,
+            }
+        }
+        spans[i].node.clone()
+    };
+    let owner: Vec<String> = (0..spans.len()).map(root_node).collect();
+
+    // Gap-account every worker-lane iteration window.
+    let mut iterations = Vec::new();
+    for (i, it) in spans.iter().enumerate() {
+        if it.name != "iteration" {
+            continue;
+        }
+        let node = &it.node;
+        let (w0, w1) = (it.begin_us, it.end_us);
+        // A node's own spans participate regardless of their links — a
+        // worker's pull-seg flows *from* the remote assemble that produced
+        // the reply, which must not re-own the worker's wire wait to the
+        // shard. Remote spans participate when their chain roots here.
+        let candidates: Vec<(usize, f64, f64)> = spans
+            .iter()
+            .enumerate()
+            .filter(|(j, s)| {
+                *j != i
+                    && (&s.node == node || &owner[*j] == node)
+                    && s.end_us > w0
+                    && s.begin_us < w1
+            })
+            .filter_map(|(_, s)| {
+                hop_of(&s.name).map(|h| (h, s.begin_us.max(w0), s.end_us.min(w1)))
+            })
+            .collect();
+        let mut cuts: Vec<f64> = vec![w0, w1];
+        for &(_, b, e) in &candidates {
+            cuts.push(b);
+            cuts.push(e);
+        }
+        cuts.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        cuts.dedup();
+        let mut hops_us = vec![0.0; HOPS.len()];
+        for w in cuts.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if b <= a {
+                continue;
+            }
+            let mid = (a + b) / 2.0;
+            let hop = candidates
+                .iter()
+                .filter(|&&(_, cb, ce)| cb <= mid && mid < ce)
+                .map(|&(h, _, _)| h)
+                .max()
+                .unwrap_or(0); // uncovered -> idle
+            hops_us[hop] += b - a;
+        }
+        iterations.push(IterBreakdown {
+            node: node.clone(),
+            begin_us: w0,
+            wall_us: w1 - w0,
+            hops_us,
+        });
+    }
+    iterations.sort_by(|a, b| {
+        a.begin_us
+            .partial_cmp(&b.begin_us)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.node.cmp(&b.node))
+    });
+
+    // Summary gauges: mean per-iteration milliseconds charged to each hop.
+    let n = iterations.len().max(1) as f64;
+    let mut gauges = Vec::with_capacity(HOPS.len());
+    let inst = crate::obs::next_inst();
+    for (h, hop) in HOPS.iter().enumerate() {
+        let total_us: f64 = iterations.iter().map(|it| it.hops_us[h]).sum();
+        let g = crate::obs_gauge!(
+            "dynacomm_critical_path_ms",
+            format!("hop=\"{hop}\""),
+            inst
+        );
+        g.set(total_us / n / 1e3);
+        gauges.push(g);
+    }
+
+    Ok(Report { iterations, _gauges: gauges })
+}
+
+impl Report {
+    /// Human-readable per-hop table: total ms charged across iterations,
+    /// share of total wall time, and mean ms per iteration.
+    pub fn table(&self) -> String {
+        let wall_us: f64 = self.iterations.iter().map(|it| it.wall_us).sum();
+        let n = self.iterations.len().max(1) as f64;
+        let mut out = format!(
+            "critical path over {} iteration(s), total wall {:.3} ms\n\
+             {:<12} {:>10} {:>8} {:>12}\n",
+            self.iterations.len(),
+            wall_us / 1e3,
+            "hop",
+            "total ms",
+            "share",
+            "mean ms/it"
+        );
+        for (h, hop) in HOPS.iter().enumerate().rev() {
+            let total: f64 = self.iterations.iter().map(|it| it.hops_us[h]).sum();
+            if total == 0.0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "{:<12} {:>10.3} {:>7.1}% {:>12.3}\n",
+                hop,
+                total / 1e3,
+                100.0 * total / wall_us.max(f64::MIN_POSITIVE),
+                total / n / 1e3
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable report (what `obs-e2e` CI parses): per-iteration
+    /// breakdowns plus per-hop totals, all microseconds.
+    pub fn to_json(&self) -> String {
+        let iters: Vec<Json> = self
+            .iterations
+            .iter()
+            .map(|it| {
+                let hops = Json::Obj(
+                    HOPS.iter()
+                        .enumerate()
+                        .map(|(h, hop)| (hop.to_string(), Json::Num(it.hops_us[h])))
+                        .collect(),
+                );
+                Json::obj(vec![
+                    ("node", Json::Str(it.node.clone())),
+                    ("begin_us", Json::Num(it.begin_us)),
+                    ("wall_us", Json::Num(it.wall_us)),
+                    ("hops_us", hops),
+                ])
+            })
+            .collect();
+        let totals = Json::Obj(
+            HOPS.iter()
+                .enumerate()
+                .map(|(h, hop)| {
+                    let t: f64 = self.iterations.iter().map(|it| it.hops_us[h]).sum();
+                    (hop.to_string(), Json::Num(t))
+                })
+                .collect(),
+        );
+        Json::obj(vec![
+            ("iterations", Json::Arr(iters)),
+            ("totals", totals),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a minimal merged-trace JSON: worker-0 lane with one iteration
+    /// [0, 1000]us containing compute [0,100]+[400,600] and push-seg
+    /// [100,400] (span id 7); shard lane with apply [200,300] whose parent
+    /// is the push-seg.
+    fn synthetic_trace() -> String {
+        let b = |name: &str, ts: f64, pid: u32, tid: u32, id: u32, parent: u32| {
+            format!(
+                "{{\"name\":\"{name}\",\"cat\":\"dynacomm\",\"ph\":\"B\",\"ts\":{ts},\
+                 \"pid\":{pid},\"tid\":{tid},\
+                 \"args\":{{\"id\":{id},\"parent\":{parent},\"flow_in\":0}}}}"
+            )
+        };
+        let e = |name: &str, ts: f64, pid: u32, tid: u32| {
+            format!(
+                "{{\"name\":\"{name}\",\"cat\":\"dynacomm\",\"ph\":\"E\",\"ts\":{ts},\
+                 \"pid\":{pid},\"tid\":{tid}}}"
+            )
+        };
+        let events = [
+            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":1,\
+             \"args\":{\"name\":\"shard-9400\"}}"
+                .to_string(),
+            "{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":2,\
+             \"args\":{\"name\":\"worker-0\"}}"
+                .to_string(),
+            b("iteration", 0.0, 2, 0, 1, 0),
+            b("fwd-layer", 0.0, 2, 0, 2, 0),
+            e("fwd-layer", 100.0, 2, 0),
+            b("push-seg", 100.0, 2, 0, 7, 0),
+            e("push-seg", 400.0, 2, 0),
+            b("bwd-layer", 400.0, 2, 0, 3, 0),
+            e("bwd-layer", 600.0, 2, 0),
+            e("iteration", 1000.0, 2, 0),
+            b("apply", 200.0, 1, 1, 9, 7),
+            e("apply", 300.0, 1, 1),
+        ];
+        format!("{{\"traceEvents\":[{}]}}", events.join(","))
+    }
+
+    #[test]
+    fn gap_accounting_sums_to_wall_time_and_charges_remote_hops() {
+        let report = analyze(&synthetic_trace()).expect("analyze");
+        assert_eq!(report.iterations.len(), 1);
+        let it = &report.iterations[0];
+        assert_eq!(it.node, "worker-0");
+        assert_eq!(it.wall_us, 1000.0);
+        let sum: f64 = it.hops_us.iter().sum();
+        assert!((sum - it.wall_us).abs() < 1e-6, "breakdown sums exactly: {sum}");
+        let hop = |name: &str| it.hops_us[HOPS.iter().position(|h| *h == name).unwrap()];
+        // compute [0,100]+[400,600]; push-seg remainder [100,200]+[300,400];
+        // shard apply [200,300] charged through its cross-lane parent link;
+        // nothing covers [600,1000].
+        assert_eq!(hop("compute"), 300.0);
+        assert_eq!(hop("push-wire"), 200.0);
+        assert_eq!(hop("apply"), 100.0);
+        assert_eq!(hop("idle"), 400.0);
+
+        // Both renderings produce consumable output.
+        let json = Json::parse(&report.to_json()).expect("report JSON parses");
+        let totals = json.get("totals").expect("totals");
+        assert_eq!(totals.get("apply").and_then(|v| v.as_f64()), Some(100.0));
+        let table = report.table();
+        assert!(table.contains("push-wire"), "table lists hops:\n{table}");
+
+        // Summary gauges: mean per-iteration ms per hop.
+        let text = crate::obs::render_prometheus();
+        assert!(
+            text.lines().any(|l| l.starts_with("dynacomm_critical_path_ms{")
+                && l.contains("hop=\"apply\"")
+                && l.ends_with(" 0.1")),
+            "100us apply over one iteration -> 0.1ms:\n{text}"
+        );
+    }
+
+    #[test]
+    fn malformed_traces_are_rejected() {
+        assert!(analyze("not json").is_err());
+        assert!(analyze("{\"traceEvents\":42}").is_err());
+        // Unbalanced B without E.
+        let unbalanced = "{\"traceEvents\":[{\"name\":\"iteration\",\"ph\":\"B\",\
+                          \"ts\":0,\"pid\":1,\"tid\":0,\"args\":{\"id\":1,\"parent\":0,\
+                          \"flow_in\":0}}]}";
+        assert!(analyze(unbalanced).is_err());
+    }
+}

@@ -1,13 +1,20 @@
 //! Exposition: a tiny hand-rolled HTTP/1.1 listener serving Prometheus
 //! text-format snapshots of the whole registry (`--metrics-addr`). No
-//! crates, no routing — every request gets the full scrape body.
+//! crates; routing is exact-path: `/metrics` scrapes, `/healthz` reports
+//! liveness, anything else is a 404.
+//!
+//! The trainer also federates member snapshots here: end-of-run
+//! `snapshot_pairs()` from each worker are re-exported from the trainer's
+//! endpoint with a `node="worker-N"` label prepended, so one scrape sees
+//! the whole fleet (docs/OBSERVABILITY.md, "Fleet federation").
 
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Context;
 
@@ -27,9 +34,10 @@ impl MetricsServer {
         let local = listener.local_addr().context("metrics listener addr")?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let started = Instant::now();
         let handle = std::thread::Builder::new()
             .name("obs-expo".into())
-            .spawn(move || serve(listener, stop2))
+            .spawn(move || serve(listener, stop2, started))
             .context("spawning metrics listener thread")?;
         Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
     }
@@ -56,20 +64,88 @@ impl Drop for MetricsServer {
     }
 }
 
-fn serve(listener: TcpListener, stop: Arc<AtomicBool>) {
+/// Member snapshots re-exported from this process's scrape endpoint,
+/// keyed by node name. Replace-on-re-note per node; process-global so a
+/// re-bound server keeps previously noted members.
+fn federated() -> &'static Mutex<BTreeMap<String, Vec<(String, f64)>>> {
+    static STORE: OnceLock<Mutex<BTreeMap<String, Vec<(String, f64)>>>> = OnceLock::new();
+    STORE.get_or_init(|| Mutex::new(BTreeMap::new()))
+}
+
+/// Record (or replace) a member node's metrics snapshot for federation.
+/// `pairs` are rendered-series pairs as produced by
+/// [`crate::obs::snapshot_pairs`]; scrapes re-emit each with a
+/// `node="{node}"` label prepended to the series' label set.
+pub fn note_federated(node: &str, pairs: Vec<(String, f64)>) {
+    crate::util::sync::lock_or_die(federated(), "obs.federated").insert(node.to_string(), pairs);
+}
+
+/// Render the federation store as exposition rows. Series names arrive
+/// already rendered (`name{labels}`), so the node label is spliced in as
+/// the first label rather than re-deriving the set.
+fn render_federated() -> String {
+    let mut out = String::new();
+    let store = crate::util::sync::lock_or_die(federated(), "obs.federated");
+    for (node, pairs) in store.iter() {
+        for (series, value) in pairs {
+            match series.find('{') {
+                Some(brace) if series.ends_with("{}") => {
+                    out.push_str(&format!("{}{{node=\"{node}\"}} {value}\n", &series[..brace]));
+                }
+                Some(brace) => {
+                    let (name, labels) = series.split_at(brace + 1);
+                    out.push_str(&format!("{name}node=\"{node}\",{labels} {value}\n"));
+                }
+                // Bare series name (no labels rendered at all).
+                None => out.push_str(&format!("{series}{{node=\"{node}\"}} {value}\n")),
+            }
+        }
+    }
+    out
+}
+
+fn serve(listener: TcpListener, stop: Arc<AtomicBool>, started: Instant) {
     for conn in listener.incoming() {
         if stop.load(Ordering::SeqCst) {
             break;
         }
         let Ok(mut stream) = conn else { continue };
-        let _ = handle_one(&mut stream);
+        let _ = handle_one(&mut stream, started);
     }
 }
 
-fn handle_one(stream: &mut TcpStream) -> std::io::Result<()> {
+/// First line of an HTTP/1.x request head → the request path (query
+/// string stripped), or `/` when the head is malformed.
+fn request_path(head: &[u8]) -> &str {
+    let line = match head.iter().position(|&b| b == b'\r' || b == b'\n') {
+        Some(end) => &head[..end],
+        None => head,
+    };
+    let line = std::str::from_utf8(line).unwrap_or("");
+    let path = line.split(' ').nth(1).unwrap_or("/");
+    path.split('?').next().unwrap_or("/")
+}
+
+fn write_response(
+    stream: &mut TcpStream,
+    status: &str,
+    content_type: &str,
+    body: &str,
+) -> std::io::Result<()> {
+    let response = format!(
+        "HTTP/1.1 {status}\r\n\
+         Content-Type: {content_type}\r\n\
+         Content-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+fn handle_one(stream: &mut TcpStream, started: Instant) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(500)))?;
-    // Drain the request head (bounded); the path is ignored — every
-    // request is a scrape.
+    // Drain the request head (bounded).
     let mut head = [0u8; 4096];
     let mut seen = 0usize;
     while seen < head.len() {
@@ -82,29 +158,48 @@ fn handle_one(stream: &mut TcpStream) -> std::io::Result<()> {
             break;
         }
     }
-    let body = super::render_prometheus();
-    let response = format!(
-        "HTTP/1.1 200 OK\r\n\
-         Content-Type: text/plain; version=0.0.4\r\n\
-         Content-Length: {}\r\n\
-         Connection: close\r\n\r\n{}",
-        body.len(),
-        body
-    );
-    stream.write_all(response.as_bytes())?;
-    stream.flush()
+    match request_path(&head[..seen]) {
+        "/metrics" => {
+            let mut body = super::render_prometheus();
+            body.push_str(&render_federated());
+            write_response(stream, "200 OK", "text/plain; version=0.0.4", &body)
+        }
+        "/healthz" => {
+            // Liveness probe: uptime plus how many series a scrape would
+            // currently render (local registry + federated members).
+            let series = super::snapshot_pairs().len()
+                + crate::util::sync::lock_or_die(federated(), "obs.federated")
+                    .values()
+                    .map(Vec::len)
+                    .sum::<usize>();
+            let body = format!(
+                "{{\"uptime_s\":{:.3},\"series\":{series}}}\n",
+                started.elapsed().as_secs_f64()
+            );
+            write_response(stream, "200 OK", "application/json", &body)
+        }
+        _ => write_response(stream, "404 Not Found", "text/plain", "not found\n"),
+    }
 }
 
 /// Scrape `addr` once over plain HTTP and return the exposition body.
 /// Used by tests, the CI e2e job, and the bench harness.
 pub fn scrape(addr: SocketAddr) -> anyhow::Result<String> {
+    let (status, body) = http_get(addr, "/metrics")?;
+    anyhow::ensure!(status == 200, "scrape returned non-200: {status}");
+    Ok(body)
+}
+
+/// One GET over plain HTTP; returns `(status code, body)`. Public so the
+/// integration tests and CI e2e can hit `/healthz` and probe 404s.
+pub fn http_get(addr: SocketAddr, path: &str) -> anyhow::Result<(u16, String)> {
     let mut stream = TcpStream::connect(addr)
         .with_context(|| format!("connecting to metrics endpoint {addr}"))?;
     stream
         .set_read_timeout(Some(Duration::from_secs(5)))
         .context("scrape read timeout")?;
     stream
-        .write_all(b"GET /metrics HTTP/1.1\r\nHost: dynacomm\r\nConnection: close\r\n\r\n")
+        .write_all(format!("GET {path} HTTP/1.1\r\nHost: dynacomm\r\nConnection: close\r\n\r\n").as_bytes())
         .context("writing scrape request")?;
     let mut raw = String::new();
     stream
@@ -113,12 +208,12 @@ pub fn scrape(addr: SocketAddr) -> anyhow::Result<String> {
     let split = raw
         .find("\r\n\r\n")
         .context("scrape response missing header/body separator")?;
-    anyhow::ensure!(
-        raw.starts_with("HTTP/1.1 200"),
-        "scrape returned non-200: {}",
-        raw.lines().next().unwrap_or("")
-    );
-    Ok(raw[split + 4..].to_string())
+    let status: u16 = raw
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .context("scrape response missing status code")?;
+    Ok((status, raw[split + 4..].to_string()))
 }
 
 #[cfg(test)]
@@ -141,5 +236,95 @@ mod tests {
         srv.shutdown();
         srv.shutdown(); // idempotent
         assert!(TcpStream::connect(srv.addr()).is_err() || scrape(srv.addr()).is_err());
+    }
+
+    #[test]
+    fn healthz_and_unknown_paths() {
+        let _g = crate::obs::register_gauge("dynacomm_test_healthz", "", crate::obs::next_inst());
+        let srv = MetricsServer::bind("127.0.0.1:0").expect("bind");
+        let (status, body) = http_get(srv.addr(), "/healthz").expect("healthz");
+        assert_eq!(status, 200);
+        let json = crate::util::json::Json::parse(&body).expect("healthz body is JSON");
+        assert!(json.get("uptime_s").and_then(|v| v.as_f64()).expect("uptime_s") >= 0.0);
+        assert!(json.get("series").and_then(|v| v.as_f64()).expect("series") >= 1.0);
+        let (status, _) = http_get(srv.addr(), "/nope").expect("404 path");
+        assert_eq!(status, 404);
+        let (status, _) = http_get(srv.addr(), "/").expect("root path");
+        assert_eq!(status, 404);
+    }
+
+    #[test]
+    fn federated_rows_carry_node_label() {
+        let counter =
+            crate::obs::register_counter("dynacomm_test_fed_local", "", crate::obs::next_inst());
+        counter.add(3);
+        note_federated(
+            "worker-7",
+            vec![
+                ("dynacomm_test_fed_member{inst=\"0\"}".to_string(), 42.0),
+                ("dynacomm_test_fed_bare".to_string(), 1.0),
+            ],
+        );
+        let srv = MetricsServer::bind("127.0.0.1:0").expect("bind");
+        let body = scrape(srv.addr()).expect("scrape");
+        assert!(
+            body.contains("dynacomm_test_fed_member{node=\"worker-7\",inst=\"0\"} 42"),
+            "federated row missing node label:\n{body}"
+        );
+        assert!(
+            body.contains("dynacomm_test_fed_bare{node=\"worker-7\"} 1"),
+            "bare federated row missing:\n{body}"
+        );
+        // Replace-on-re-note: a fresh snapshot fully supersedes the old one.
+        note_federated(
+            "worker-7",
+            vec![("dynacomm_test_fed_member{inst=\"0\"}".to_string(), 43.0)],
+        );
+        let body = scrape(srv.addr()).expect("rescrape");
+        assert!(body.contains("dynacomm_test_fed_member{node=\"worker-7\",inst=\"0\"} 43"));
+        assert!(!body.contains("dynacomm_test_fed_bare{node=\"worker-7\"}"));
+    }
+
+    /// A live scrape racing instance churn (drop + re-register) must never
+    /// panic the listener or render a torn series: every non-comment line
+    /// is a complete `name{labels} value` row with a parseable value.
+    #[test]
+    fn scrape_under_instance_churn() {
+        let srv = MetricsServer::bind("127.0.0.1:0").expect("bind");
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let churn = std::thread::spawn(move || {
+            while !stop2.load(Ordering::Relaxed) {
+                let c = crate::obs::register_counter(
+                    "dynacomm_test_churn",
+                    "",
+                    crate::obs::next_inst(),
+                );
+                c.add(1);
+                // Dropping the handle kills the weak registry entry; the
+                // next registration takes a fresh inst id.
+            }
+        });
+        for _ in 0..50 {
+            let body = scrape(srv.addr()).expect("scrape during churn");
+            for line in body.lines() {
+                if line.starts_with('#') || line.is_empty() {
+                    continue;
+                }
+                let (series, value) = line
+                    .rsplit_once(' ')
+                    .unwrap_or_else(|| panic!("torn series row: {line:?}"));
+                assert!(
+                    value.parse::<f64>().is_ok(),
+                    "unparseable value in row: {line:?}"
+                );
+                assert!(
+                    !series.contains('{') || series.contains('}'),
+                    "unterminated label set: {line:?}"
+                );
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        churn.join().expect("churn thread");
     }
 }

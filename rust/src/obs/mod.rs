@@ -24,6 +24,8 @@
 //!   argument), so all of an instance's series share an `inst` value and
 //!   can be joined on it.
 
+pub mod clock;
+pub mod critpath;
 pub mod expo;
 pub mod trace;
 
@@ -151,6 +153,41 @@ impl Histogram {
     pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
         std::array::from_fn(|i| self.0.buckets[i].load(Ordering::Relaxed))
     }
+    /// Estimated `q`-quantile (see [`quantile_from`]); `None` when empty.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        quantile_from(&self.bucket_counts(), q)
+    }
+}
+
+/// Estimate the `q`-quantile (`0.0..=1.0`) of a log2-bucket distribution
+/// by linear interpolation inside the covering bucket: the estimate is
+/// exact at bucket boundaries and off by at most one bucket width within
+/// one. Mass in the `+Inf` bucket clamps to the last finite bound — there
+/// is nothing to interpolate toward. `None` when the histogram is empty.
+pub fn quantile_from(buckets: &[u64; HIST_BUCKETS], q: f64) -> Option<f64> {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let rank = q.clamp(0.0, 1.0) * total as f64;
+    let mut cum = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let prev = cum as f64;
+        cum += c;
+        if cum as f64 >= rank {
+            if i == HIST_BUCKETS - 1 {
+                return Some(bucket_bound(HIST_BUCKETS - 2));
+            }
+            let lo = if i == 0 { 0.0 } else { bucket_bound(i - 1) };
+            let hi = bucket_bound(i);
+            let frac = ((rank - prev) / c as f64).clamp(0.0, 1.0);
+            return Some(lo + (hi - lo) * frac);
+        }
+    }
+    Some(bucket_bound(HIST_BUCKETS - 2))
 }
 
 enum Slot {
@@ -361,19 +398,30 @@ pub fn render_prometheus() -> String {
 
 /// Flat `(series, value)` snapshot for embedding in `WorkerReport` and the
 /// bench JSON: counters and gauges one entry each, histograms contribute
-/// `_count` and `_sum`.
+/// `_count`, `_sum`, and interpolated `_p50` / `_p99` quantile estimates.
+/// Entries come back in deterministic rendered-name sort order (collect()
+/// already orders by `(name, labels)`; the final sort also fixes the
+/// relative order of one histogram's expanded suffixes) so scrapes and
+/// `BENCH_wire.json` metric blocks diff cleanly across runs.
 pub fn snapshot_pairs() -> Vec<(String, f64)> {
     let mut out = Vec::new();
     for (name, labels, sample) in collect() {
         match sample {
             Sample::Counter(v) => out.push((format!("{name}{{{labels}}}"), v as f64)),
             Sample::Gauge(v) => out.push((format!("{name}{{{labels}}}"), v)),
-            Sample::Histogram(_, count, sum) => {
+            Sample::Histogram(buckets, count, sum) => {
                 out.push((format!("{name}_count{{{labels}}}"), count as f64));
                 out.push((format!("{name}_sum{{{labels}}}"), sum));
+                if let (Some(p50), Some(p99)) =
+                    (quantile_from(&buckets, 0.50), quantile_from(&buckets, 0.99))
+                {
+                    out.push((format!("{name}_p50{{{labels}}}"), p50));
+                    out.push((format!("{name}_p99{{{labels}}}"), p99));
+                }
             }
         }
     }
+    out.sort_by(|a, b| a.0.cmp(&b.0));
     out
 }
 
@@ -499,6 +547,67 @@ mod tests {
             .expect("sum entry");
         assert_eq!(count.1, 2.0);
         assert_eq!(sum.1, 6.0);
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates_within_a_bucket() {
+        let h = register_histogram("dynacomm_test_quant", "", next_inst());
+        assert_eq!(h.quantile(0.5), None, "empty histogram has no quantiles");
+        for v in [0.5, 1.0, 2.0, 4.0] {
+            h.observe(v);
+        }
+        // Ranks that land on bucket boundaries are exact (each observation
+        // sits on its bucket's upper bound)...
+        assert_eq!(h.quantile(0.25), Some(0.5));
+        assert_eq!(h.quantile(1.0), Some(4.0));
+        // ...and interior ranks stay within one log2 boundary of the
+        // exact order statistic.
+        let p50 = h.quantile(0.5).unwrap();
+        assert!((0.5..=2.0).contains(&p50), "p50 within one bucket of exact: {p50}");
+        // Mass inside one bucket interpolates linearly across it: 100
+        // samples of 0.75 live in (0.5, 1.0], so every quantile estimate
+        // is within that bucket — one boundary of the exact 0.75.
+        let u = register_histogram("dynacomm_test_quant_uniform", "", next_inst());
+        for _ in 0..100 {
+            u.observe(0.75);
+        }
+        let p50 = u.quantile(0.5).unwrap();
+        assert!((p50 - 0.75).abs() <= 0.25, "within one bucket boundary: {p50}");
+        // +Inf-bucket mass clamps to the last finite bound.
+        let inf = register_histogram("dynacomm_test_quant_inf", "", next_inst());
+        inf.observe(1e12);
+        assert_eq!(inf.quantile(0.99), Some(bucket_bound(HIST_BUCKETS - 2)));
+    }
+
+    #[test]
+    fn snapshot_pairs_is_sorted_and_stable() {
+        // Register deliberately out of order; snapshots come back in
+        // rendered-name sort order, stable across calls. (Assertions on
+        // specific series filter to this test's own prefix — the registry
+        // is process-global and other tests mutate it concurrently.)
+        let _b = register_counter("dynacomm_test_sortz", "", next_inst());
+        let _a = register_counter("dynacomm_test_sorta", "", next_inst());
+        let h = register_histogram("dynacomm_test_sorth", "", next_inst());
+        h.observe(1.0);
+        let keys = |pairs: &[(String, f64)]| -> Vec<String> {
+            pairs
+                .iter()
+                .map(|(k, _)| k.clone())
+                .filter(|k| k.starts_with("dynacomm_test_sort"))
+                .collect()
+        };
+        let p1 = snapshot_pairs();
+        let all: Vec<&String> = p1.iter().map(|(k, _)| k).collect();
+        assert!(all.windows(2).all(|w| w[0] <= w[1]), "whole snapshot sorted");
+        let k1 = keys(&p1);
+        let k2 = keys(&snapshot_pairs());
+        assert_eq!(k1, k2, "same registrations, same order");
+        assert_eq!(k1.len(), 6, "2 counters + count/sum/p50/p99: {k1:?}");
+        // Histogram expansion carries the interpolated quantiles.
+        assert!(k1.iter().any(|k| k.starts_with("dynacomm_test_sorth_p50{")));
+        assert!(k1.iter().any(|k| k.starts_with("dynacomm_test_sorth_p99{")));
+        assert!(k1[0].starts_with("dynacomm_test_sorta{"), "sorta before sorth/sortz: {k1:?}");
+        assert!(k1[5].starts_with("dynacomm_test_sortz{"), "sortz last: {k1:?}");
     }
 
     #[test]

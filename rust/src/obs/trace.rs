@@ -21,7 +21,19 @@
 //!   overlapping same-named writers stay safe; readers tolerate in-flight
 //!   overwrites because export happens at quiescent points (end of run /
 //!   scrape).
+//!
+//! Fleet tracing (wire v7) extends the model with three per-span links:
+//! every armed span draws a process-unique **span id**, and a receiver
+//! that decodes a [`crate::net::TraceCtx`] stores the sender's span id as
+//! either a **remote parent** (request direction — the child nests inside
+//! the parent's window) or a **flow source** (reply direction — an arrow
+//! without containment). Threads adopt a **node** label
+//! ([`adopt_node`]: `worker-0`, `agg-1`, `shard-9400`), which becomes a
+//! per-node process lane in the merged Chrome trace; export corrects each
+//! lane's timestamps by the clock offset [`crate::obs::clock`] measured
+//! for that node and stitches cross-lane links as flow (`s`/`f`) arrows.
 
+use std::cell::{Cell, RefCell};
 use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
@@ -74,10 +86,107 @@ pub fn enabled() -> bool {
     ENABLED.load(Ordering::Relaxed)
 }
 
-/// Monotone nanoseconds since the first observability event in the process.
+/// Monotone nanoseconds since the first observability event in the
+/// process, plus the calling thread's injected clock skew (zero outside
+/// tests — [`set_node_skew_ns`]). The skew knob is what makes the offset
+/// probe and the export-time correction testable in a single process,
+/// where every thread otherwise shares one physical clock.
 pub fn now_ns() -> u64 {
     static START: OnceLock<Instant> = OnceLock::new();
-    START.get_or_init(Instant::now).elapsed().as_nanos() as u64
+    let base = START.get_or_init(Instant::now).elapsed().as_nanos() as i64;
+    let skew = THREAD_SKEW_NS.with(|s| s.get());
+    (base + skew).max(0) as u64
+}
+
+/// Monotonically increasing process-unique span ids; 0 means "no span",
+/// so the counter starts at 1.
+static NEXT_SPAN_ID: AtomicU32 = AtomicU32::new(1);
+
+fn next_span_id() -> u32 {
+    NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// The run seed mixed into every trace id ([`trace_id_for`]); the trainer
+/// sets it once at startup so concurrent runs' traces never collide.
+static RUN_SEED: AtomicU64 = AtomicU64::new(0);
+
+pub fn set_run_seed(seed: u64) {
+    RUN_SEED.store(seed, Ordering::Relaxed);
+}
+
+/// The fleet-wide trace id of one logical iteration: an FNV-1a hash of
+/// the run seed and the iteration number, carried on every v7 trace
+/// context that iteration's frames emit.
+pub fn trace_id_for(iter: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in RUN_SEED
+        .load(Ordering::Relaxed)
+        .to_le_bytes()
+        .into_iter()
+        .chain(iter.to_le_bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+thread_local! {
+    /// The node lane this thread records into ("" until [`adopt_node`]).
+    static THREAD_NODE: RefCell<String> = RefCell::new(String::new());
+    /// Injected clock skew for this thread's [`now_ns`] reads.
+    static THREAD_SKEW_NS: Cell<i64> = Cell::new(0);
+}
+
+/// Per-node injected clock skews ([`set_node_skew_ns`]), applied to a
+/// thread when it adopts the node.
+fn skew_store() -> &'static Mutex<Vec<(String, i64)>> {
+    static SKEWS: OnceLock<Mutex<Vec<(String, i64)>>> = OnceLock::new();
+    SKEWS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Inject a clock skew for every thread that adopts `node` from now on
+/// (test knob: a single-process fleet has no real skew to measure, so the
+/// e2e injects one and asserts the probe finds it and export removes it).
+pub fn set_node_skew_ns(node: &str, skew_ns: i64) {
+    let mut skews = lock_or_die(skew_store(), "obs.skews");
+    if let Some(entry) = skews.iter_mut().find(|(n, _)| n == node) {
+        entry.1 = skew_ns;
+    } else {
+        skews.push((node.to_string(), skew_ns));
+    }
+}
+
+fn node_skew_ns(node: &str) -> i64 {
+    lock_or_die(skew_store(), "obs.skews")
+        .iter()
+        .find(|(n, _)| n == node)
+        .map(|(_, s)| *s)
+        .unwrap_or(0)
+}
+
+/// Label the calling thread as part of `node` (e.g. `worker-0`,
+/// `agg-1`, `shard-9400`): its ring is grouped into that node's process
+/// lane in the merged trace, and any injected skew for the node starts
+/// applying to this thread's clock reads. Cold path — called once per
+/// thread spawn, before its first span.
+pub fn adopt_node(node: &str) {
+    THREAD_SKEW_NS.with(|s| s.set(node_skew_ns(node)));
+    THREAD_NODE.with(|n| *n.borrow_mut() = node.to_string());
+    // Force ring registration under the adopted node, or re-label an
+    // already-registered ring (same-named respawns adopt before spanning).
+    let thread = std::thread::current();
+    let name = thread.name().unwrap_or("unnamed").to_string();
+    let mut rings = lock_or_die(rings_store(), "obs.rings");
+    if let Some(entry) = rings.iter_mut().find(|e| e.thread == name) {
+        entry.node = node.to_string();
+    } else {
+        rings.push(RingEntry {
+            thread: name,
+            node: node.to_string(),
+            ring: Arc::new(Ring::new(RING_CAP)),
+        });
+    }
 }
 
 struct SpanSlot {
@@ -85,6 +194,26 @@ struct SpanSlot {
     name: AtomicU32,
     begin_ns: AtomicU64,
     end_ns: AtomicU64,
+    /// Process-unique span id (0 for spans recorded without one).
+    id: AtomicU32,
+    /// Remote parent span id (0 = none): containment link — this span
+    /// nests inside the parent's window.
+    parent: AtomicU32,
+    /// Flow-source span id (0 = none): arrow-only link, no containment
+    /// claim (reply-direction stitches).
+    flow_in: AtomicU32,
+}
+
+/// One retained span with its fleet-tracing links, as returned by
+/// [`Ring::snapshot_linked`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRec {
+    pub name: u32,
+    pub begin_ns: u64,
+    pub end_ns: u64,
+    pub id: u32,
+    pub parent: u32,
+    pub flow_in: u32,
 }
 
 /// Fixed-capacity overwrite-oldest span ring. Public so tests can exercise
@@ -108,6 +237,9 @@ impl Ring {
                     name: AtomicU32::new(u32::MAX),
                     begin_ns: AtomicU64::new(0),
                     end_ns: AtomicU64::new(0),
+                    id: AtomicU32::new(0),
+                    parent: AtomicU32::new(0),
+                    flow_in: AtomicU32::new(0),
                 })
                 .collect(),
         }
@@ -115,15 +247,40 @@ impl Ring {
 
     /// Record one completed span, overwriting the oldest entry at capacity.
     pub fn record(&self, name: u32, begin_ns: u64, end_ns: u64) {
+        self.record_linked(name, begin_ns, end_ns, 0, 0, 0);
+    }
+
+    /// [`Ring::record`] with the fleet-tracing links: the span's own id
+    /// plus its remote-parent and flow-source span ids (0 = none each).
+    pub fn record_linked(
+        &self,
+        name: u32,
+        begin_ns: u64,
+        end_ns: u64,
+        id: u32,
+        parent: u32,
+        flow_in: u32,
+    ) {
         let idx = self.head.fetch_add(1, Ordering::Relaxed) % self.cap;
         let slot = &self.slots[idx];
         slot.begin_ns.store(begin_ns, Ordering::Relaxed);
         slot.end_ns.store(end_ns, Ordering::Relaxed);
+        slot.id.store(id, Ordering::Relaxed);
+        slot.parent.store(parent, Ordering::Relaxed);
+        slot.flow_in.store(flow_in, Ordering::Relaxed);
         slot.name.store(name, Ordering::Relaxed);
     }
 
     /// Retained spans, oldest first: `(name, begin_ns, end_ns)`.
     pub fn snapshot(&self) -> Vec<(u32, u64, u64)> {
+        self.snapshot_linked()
+            .into_iter()
+            .map(|s| (s.name, s.begin_ns, s.end_ns))
+            .collect()
+    }
+
+    /// Retained spans with their fleet-tracing links, oldest first.
+    pub fn snapshot_linked(&self) -> Vec<SpanRec> {
         let head = self.head.load(Ordering::Relaxed);
         let n = head.min(self.cap);
         let mut out = Vec::with_capacity(n);
@@ -134,18 +291,29 @@ impl Ring {
             if name == u32::MAX {
                 continue;
             }
-            out.push((
+            out.push(SpanRec {
                 name,
-                slot.begin_ns.load(Ordering::Relaxed),
-                slot.end_ns.load(Ordering::Relaxed),
-            ));
+                begin_ns: slot.begin_ns.load(Ordering::Relaxed),
+                end_ns: slot.end_ns.load(Ordering::Relaxed),
+                id: slot.id.load(Ordering::Relaxed),
+                parent: slot.parent.load(Ordering::Relaxed),
+                flow_in: slot.flow_in.load(Ordering::Relaxed),
+            });
         }
         out
     }
 }
 
-fn rings_store() -> &'static Mutex<Vec<(String, Arc<Ring>)>> {
-    static RINGS: OnceLock<Mutex<Vec<(String, Arc<Ring>)>>> = OnceLock::new();
+/// One registered thread ring: the thread name that keys it, the node
+/// lane it exports under ("" until [`adopt_node`]), and the ring itself.
+struct RingEntry {
+    thread: String,
+    node: String,
+    ring: Arc<Ring>,
+}
+
+fn rings_store() -> &'static Mutex<Vec<RingEntry>> {
+    static RINGS: OnceLock<Mutex<Vec<RingEntry>>> = OnceLock::new();
     RINGS.get_or_init(|| Mutex::new(Vec::new()))
 }
 
@@ -160,12 +328,16 @@ thread_local! {
 fn register_thread_ring() -> Arc<Ring> {
     let thread = std::thread::current();
     let name = thread.name().unwrap_or("unnamed");
+    let node = THREAD_NODE.with(|n| n.borrow().clone());
     let mut rings = lock_or_die(rings_store(), "obs.rings");
-    if let Some((_, ring)) = rings.iter().find(|(n, _)| n == name) {
-        return ring.clone();
+    if let Some(entry) = rings.iter_mut().find(|e| e.thread == name) {
+        if entry.node.is_empty() && !node.is_empty() {
+            entry.node = node;
+        }
+        return entry.ring.clone();
     }
     let ring = Arc::new(Ring::new(RING_CAP));
-    rings.push((name.to_string(), ring.clone()));
+    rings.push(RingEntry { thread: name.to_string(), node, ring: ring.clone() });
     ring
 }
 
@@ -179,14 +351,49 @@ pub struct SpanGuard {
     name: u32,
     begin_ns: u64,
     armed: bool,
+    id: u32,
+    parent: u32,
+    flow_in: u32,
 }
 
-/// Open a span for `name` (one of the `SPAN_*` ids).
+/// Open a span for `name` (one of the `SPAN_*` ids). Armed spans draw a
+/// process-unique id — the value a v7 trace context carries to the peer.
 pub fn span(name: u32) -> SpanGuard {
     if !ENABLED.load(Ordering::Relaxed) {
-        return SpanGuard { name, begin_ns: 0, armed: false };
+        return SpanGuard { name, begin_ns: 0, armed: false, id: 0, parent: 0, flow_in: 0 };
     }
-    SpanGuard { name, begin_ns: now_ns(), armed: true }
+    SpanGuard {
+        name,
+        begin_ns: now_ns(),
+        armed: true,
+        id: next_span_id(),
+        parent: 0,
+        flow_in: 0,
+    }
+}
+
+impl SpanGuard {
+    /// This span's process-unique id (0 when tracing is disarmed) — what
+    /// a sender puts in the [`crate::net::TraceCtx`] it emits under this
+    /// span.
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// Adopt a remote sender's span id as this span's parent (request
+    /// direction: this span runs inside the sender's window — a worker's
+    /// push-seg contains the aggregator's fan-in contains the shard's
+    /// apply).
+    pub fn set_remote_parent(&mut self, span_id: u32) {
+        self.parent = span_id;
+    }
+
+    /// Record an arrow-only stitch from a remote span (reply direction:
+    /// the server's assemble caused this decode, but the windows do not
+    /// nest).
+    pub fn set_flow_from(&mut self, span_id: u32) {
+        self.flow_in = span_id;
+    }
 }
 
 impl Drop for SpanGuard {
@@ -197,7 +404,9 @@ impl Drop for SpanGuard {
         let end = now_ns();
         // try_with: a guard dropped during thread teardown (TLS already
         // destroyed) silently loses its span instead of aborting.
-        let _ = LOCAL_RING.try_with(|r| r.record(self.name, self.begin_ns, end));
+        let _ = LOCAL_RING.try_with(|r| {
+            r.record_linked(self.name, self.begin_ns, end, self.id, self.parent, self.flow_in)
+        });
     }
 }
 
@@ -210,6 +419,9 @@ struct TraceEvent {
     /// longest-first (outermost first), ends close shortest-first.
     dur_ns: u64,
     name: u32,
+    id: u32,
+    parent: u32,
+    flow_in: u32,
 }
 
 /// Escape a string for embedding inside a JSON string literal. Thread
@@ -228,23 +440,96 @@ fn json_escape(s: &str) -> String {
     out
 }
 
-/// Export every thread's retained spans as Chrome trace-event JSON
-/// (`{"traceEvents": [...]}` with `B`/`E` duration events plus
-/// `thread_name` metadata). Timestamps are microseconds.
+/// Export every thread's retained spans as ONE merged Chrome trace
+/// (`{"traceEvents": [...]}`): per-node **process lanes** (pid per node,
+/// `process_name` metadata; threads that never adopted a node export under
+/// the `local` lane), `B`/`E` duration events whose timestamps are
+/// **offset-corrected** by the node's measured clock offset
+/// ([`crate::obs::clock::node_offset_ns`]), span-link `args`
+/// (`id`/`parent`/`flow_in`) on `B` events, and flow (`s`/`f`) arrows
+/// stitching every cross-process link whose source span is present.
+/// Timestamps are microseconds.
 pub fn chrome_trace_json() -> String {
-    let rings = lock_or_die(rings_store(), "obs.rings");
+    use std::collections::HashMap;
+    struct Lane {
+        thread: String,
+        node: String,
+        offset_ns: i64,
+        spans: Vec<SpanRec>,
+    }
+    // Snapshot under the lock, render outside it.
+    let lanes: Vec<Lane> = {
+        let rings = lock_or_die(rings_store(), "obs.rings");
+        rings
+            .iter()
+            .filter_map(|e| {
+                let spans = e.ring.snapshot_linked();
+                if spans.is_empty() {
+                    return None;
+                }
+                let node =
+                    if e.node.is_empty() { "local".to_string() } else { e.node.clone() };
+                let offset_ns = crate::obs::clock::node_offset_ns(&node);
+                Some(Lane { thread: e.thread.clone(), node, offset_ns, spans })
+            })
+            .collect()
+    };
+    // One pid per node, assigned in sorted order so lane layout is stable
+    // across runs regardless of thread registration order.
+    let mut nodes: Vec<String> = lanes.iter().map(|l| l.node.clone()).collect();
+    nodes.sort();
+    nodes.dedup();
+    let pid_of = |node: &str| nodes.iter().position(|n| n == node).unwrap_or(0) + 1;
+    // Where every span id lives, for flow-arrow endpoints: id -> (pid,
+    // tid, corrected begin us).
+    let mut at: HashMap<u32, (usize, usize, f64)> = HashMap::new();
+    for (tid, lane) in lanes.iter().enumerate() {
+        let pid = pid_of(&lane.node);
+        for s in &lane.spans {
+            if s.id != 0 {
+                at.insert(s.id, (pid, tid, (s.begin_ns as i64 - lane.offset_ns) as f64 / 1e3));
+            }
+        }
+    }
     let mut out = String::from("{\"traceEvents\":[");
     let mut first = true;
-    for (tid, (tname, ring)) in rings.iter().enumerate() {
-        let spans = ring.snapshot();
-        if spans.is_empty() {
-            continue;
+    for node in &nodes {
+        if !first {
+            out.push(',');
         }
-        let mut events = Vec::with_capacity(spans.len() * 2);
-        for (name, begin, end) in spans {
-            let dur = end.saturating_sub(begin);
-            events.push(TraceEvent { ts_us: begin as f64 / 1e3, phase: 1, dur_ns: dur, name });
-            events.push(TraceEvent { ts_us: end as f64 / 1e3, phase: 0, dur_ns: dur, name });
+        first = false;
+        out.push_str(&format!(
+            "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{},\
+             \"args\":{{\"name\":\"{}\"}}}}",
+            pid_of(node),
+            json_escape(node)
+        ));
+    }
+    for (tid, lane) in lanes.iter().enumerate() {
+        let pid = pid_of(&lane.node);
+        let mut events = Vec::with_capacity(lane.spans.len() * 2);
+        for s in &lane.spans {
+            let begin = s.begin_ns as i64 - lane.offset_ns;
+            let end = s.end_ns as i64 - lane.offset_ns;
+            let dur = (end - begin).max(0) as u64;
+            events.push(TraceEvent {
+                ts_us: begin as f64 / 1e3,
+                phase: 1,
+                dur_ns: dur,
+                name: s.name,
+                id: s.id,
+                parent: s.parent,
+                flow_in: s.flow_in,
+            });
+            events.push(TraceEvent {
+                ts_us: end as f64 / 1e3,
+                phase: 0,
+                dur_ns: dur,
+                name: s.name,
+                id: s.id,
+                parent: s.parent,
+                flow_in: s.flow_in,
+            });
         }
         events.sort_by(|a, b| {
             a.ts_us
@@ -257,26 +542,51 @@ pub fn chrome_trace_json() -> String {
                     a.dur_ns.cmp(&b.dur_ns) // ends: shortest (innermost) first
                 })
         });
-        if !first {
-            out.push(',');
-        }
-        first = false;
         out.push_str(&format!(
-            "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+            ",{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":{tid},\
              \"args\":{{\"name\":\"{}\"}}}}",
-            json_escape(tname)
+            json_escape(&lane.thread)
         ));
         for e in events {
-            let ph = if e.phase == 1 { "B" } else { "E" };
             let sname = SPAN_NAMES
                 .get(e.name as usize)
                 .copied()
                 .unwrap_or("unknown");
-            out.push_str(&format!(
-                ",{{\"name\":\"{sname}\",\"cat\":\"dynacomm\",\"ph\":\"{ph}\",\
-                 \"ts\":{:.3},\"pid\":1,\"tid\":{tid}}}",
-                e.ts_us
-            ));
+            if e.phase == 1 {
+                out.push_str(&format!(
+                    ",{{\"name\":\"{sname}\",\"cat\":\"dynacomm\",\"ph\":\"B\",\
+                     \"ts\":{:.3},\"pid\":{pid},\"tid\":{tid},\
+                     \"args\":{{\"id\":{},\"parent\":{},\"flow_in\":{}}}}}",
+                    e.ts_us, e.id, e.parent, e.flow_in
+                ));
+            } else {
+                out.push_str(&format!(
+                    ",{{\"name\":\"{sname}\",\"cat\":\"dynacomm\",\"ph\":\"E\",\
+                     \"ts\":{:.3},\"pid\":{pid},\"tid\":{tid}}}",
+                    e.ts_us
+                ));
+            }
+        }
+        // Flow arrows: one s/f pair per resolvable link. Arrow ids must be
+        // unique per arrow, and a span can carry both a parent and a
+        // flow_in link, so the id is the child span id with a kind bit.
+        for s in &lane.spans {
+            let child_ts = (s.begin_ns as i64 - lane.offset_ns) as f64 / 1e3;
+            for (kind, src) in [(0u64, s.parent), (1u64, s.flow_in)] {
+                if src == 0 {
+                    continue;
+                }
+                let Some(&(spid, stid, sts)) = at.get(&src) else { continue };
+                let arrow = (s.id as u64) << 1 | kind;
+                out.push_str(&format!(
+                    ",{{\"name\":\"ctx\",\"cat\":\"dynacomm\",\"ph\":\"s\",\
+                     \"id\":{arrow},\"ts\":{sts:.3},\"pid\":{spid},\"tid\":{stid}}}"
+                ));
+                out.push_str(&format!(
+                    ",{{\"name\":\"ctx\",\"cat\":\"dynacomm\",\"ph\":\"f\",\"bp\":\"e\",\
+                     \"id\":{arrow},\"ts\":{child_ts:.3},\"pid\":{pid},\"tid\":{tid}}}"
+                ));
+            }
         }
     }
     out.push_str("]}");
@@ -341,7 +651,7 @@ mod tests {
         assert!(
             !lock_or_die(rings_store(), "obs.rings")
                 .iter()
-                .any(|(n, _)| n == "obs-test-disarmed"),
+                .any(|e| e.thread == "obs-test-disarmed"),
             "disarmed span must not register a thread ring"
         );
 
@@ -375,10 +685,56 @@ mod tests {
         {
             let rings = lock_or_die(rings_store(), "obs.rings");
             let reused: Vec<_> =
-                rings.iter().filter(|(n, _)| n == "obs-test-reused").collect();
+                rings.iter().filter(|e| e.thread == "obs-test-reused").collect();
             assert_eq!(reused.len(), 1, "same-named respawns must share one ring");
-            assert_eq!(reused[0].1.snapshot().len(), 3, "all spawns' spans retained");
+            assert_eq!(reused[0].ring.snapshot().len(), 3, "all spawns' spans retained");
         }
+
+        // Fleet links: a thread that adopts a node records spans with
+        // process-unique ids and remote links, its clock readings shift by
+        // the node's injected skew, and its ring carries the node label.
+        set_node_skew_ns("obs-test-node", 5_000_000);
+        let before_ns = now_ns();
+        let skewed_ns = std::thread::Builder::new()
+            .name("obs-test-linked".into())
+            .spawn(|| {
+                adopt_node("obs-test-node");
+                let parent = span(SPAN_PUSH_SEG);
+                let parent_id = parent.id();
+                assert_ne!(parent_id, 0, "armed spans draw a nonzero id");
+                drop(parent);
+                let mut child = span(SPAN_APPLY);
+                assert!(child.id() > parent_id, "span ids increase monotonically");
+                child.set_remote_parent(parent_id);
+                drop(child);
+                let mut decode = span(SPAN_DECODE_SEG);
+                decode.set_flow_from(parent_id);
+                drop(decode);
+                now_ns()
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        assert!(
+            skewed_ns >= before_ns + 4_000_000,
+            "injected +5ms skew must surface in the adopting thread's clock \
+             ({skewed_ns} vs {before_ns})"
+        );
+        let (raw_push_begin, push_id) = {
+            let rings = lock_or_die(rings_store(), "obs.rings");
+            let entry = rings
+                .iter()
+                .find(|e| e.thread == "obs-test-linked")
+                .expect("linked thread ring registered");
+            assert_eq!(entry.node, "obs-test-node", "adopt_node labels the ring");
+            let snap = entry.ring.snapshot_linked();
+            assert_eq!(snap.len(), 3);
+            assert_eq!(snap[1].parent, snap[0].id, "remote parent recorded");
+            assert_eq!(snap[2].flow_in, snap[0].id, "flow source recorded");
+            assert_eq!(snap[0].parent, 0);
+            assert_eq!(snap[0].flow_in, 0);
+            (snap[0].begin_ns, snap[0].id)
+        };
 
         // A hostile thread name must not break the JSON export below.
         std::thread::Builder::new()
@@ -392,16 +748,18 @@ mod tests {
         set_enabled(false);
         {
             let rings = lock_or_die(rings_store(), "obs.rings");
-            let (_, ring) = rings
+            let entry = rings
                 .iter()
-                .find(|(n, _)| n == "obs-test-armed")
+                .find(|e| e.thread == "obs-test-armed")
                 .expect("armed thread ring registered");
-            let snap = ring.snapshot();
+            let snap = entry.ring.snapshot();
             assert_eq!(snap.len(), 4, "outer + 3 inner spans");
             assert!(snap.iter().all(|s| s.2 >= s.1), "end >= begin");
         }
 
-        // Export: valid JSON, balanced B/E pairs.
+        // Export: valid JSON, balanced B/E pairs, per-node process lanes,
+        // offset-corrected timestamps, flow arrows for both link kinds.
+        crate::obs::clock::note_node_offset("obs-test-node", 5_000_000, 50_000);
         let json = chrome_trace_json();
         let parsed = crate::util::json::Json::parse(&json).expect("valid JSON");
         let events = parsed
@@ -410,14 +768,42 @@ mod tests {
             .expect("traceEvents array");
         let mut begins = 0usize;
         let mut ends = 0usize;
+        let mut flow_s = 0usize;
+        let mut flow_f = 0usize;
+        let mut node_pid = None;
         for e in events {
             match e.get("ph").and_then(|p| p.as_str()) {
                 Some("B") => begins += 1,
                 Some("E") => ends += 1,
+                Some("s") => flow_s += 1,
+                Some("f") => flow_f += 1,
+                Some("M") => {
+                    if e.get("name").and_then(|n| n.as_str()) == Some("process_name")
+                        && e.get("args").and_then(|a| a.get("name")).and_then(|n| n.as_str())
+                            == Some("obs-test-node")
+                    {
+                        node_pid = e.get("pid").and_then(|p| p.as_f64());
+                    }
+                }
                 _ => {}
             }
         }
         assert!(begins >= 4, "expected at least the 4 test spans, got {begins}");
         assert_eq!(begins, ends, "balanced B/E pairs");
+        assert!(flow_s >= 2 && flow_s == flow_f, "parent + flow_in arrows stitched");
+        let node_pid = node_pid.expect("adopted node gets its own process lane");
+        // The push-seg B event in the node lane is offset-corrected: its
+        // exported timestamp is the raw (skewed) begin minus the measured
+        // 5ms offset.
+        let want_us = (raw_push_begin as i64 - 5_000_000) as f64 / 1e3;
+        let corrected = events.iter().any(|e| {
+            e.get("ph").and_then(|p| p.as_str()) == Some("B")
+                && e.get("pid").and_then(|p| p.as_f64()) == Some(node_pid)
+                && e.get("args").and_then(|a| a.get("id")).and_then(|i| i.as_f64())
+                    == Some(push_id as f64)
+                && (e.get("ts").and_then(|t| t.as_f64()).unwrap_or(f64::MIN) - want_us).abs()
+                    < 1.0
+        });
+        assert!(corrected, "node-lane timestamps must subtract the measured offset");
     }
 }

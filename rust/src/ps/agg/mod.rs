@@ -39,7 +39,7 @@ use anyhow::{Context, Result};
 
 use crate::net::codec::{self, CodecId};
 use crate::net::pool::{PooledSlab, SlabPool};
-use crate::net::{slab, Connection, Message, MessageRef, PeerRole, PROTOCOL_VERSION};
+use crate::net::{slab, Connection, Message, MessageRef, PeerRole, TraceCtx, PROTOCOL_VERSION};
 use crate::ps::reply_cache::{ReplyCache, ReplyState};
 use crate::ps::sharding::ShardMap;
 use crate::ps::sync::{self, PullGate, SyncConfig, SyncPolicy};
@@ -126,6 +126,9 @@ struct Completed {
 
 struct Shared {
     workers: u32,
+    /// This aggregator's node name in the merged fleet trace
+    /// (`agg-{group}`): the process lane its handler spans land on.
+    node: String,
     /// The downstream hop's synchronization policy.
     sync: Box<dyn SyncPolicy>,
     handler_threads: usize,
@@ -254,6 +257,14 @@ impl RegionalAggregator {
                 }
             }
         }
+        // Align clocks with every upstream shard at establish
+        // (docs/OBSERVABILITY.md): the merged fleet trace corrects each
+        // shard lane onto this process's timeline with these offsets.
+        for (conn, shard_addr) in up_pull.iter_mut().zip(&cfg.upstream_addrs) {
+            let shard_node = format!("shard-{}", shard_addr.port());
+            crate::obs::clock::probe_and_note(conn, &shard_node, 3)
+                .with_context(|| format!("clock probe against shard {shard_addr}"))?;
+        }
 
         let acc = cfg
             .layer_elems
@@ -262,6 +273,7 @@ impl RegionalAggregator {
             .collect();
         let shared = Arc::new(Shared {
             workers: cfg.workers,
+            node: format!("agg-{}", cfg.group),
             sync: sync::create(cfg.downstream_sync),
             handler_threads: cfg.handler_threads.max(cfg.workers as usize).max(1),
             live_handlers: AtomicU32::new(0),
@@ -385,16 +397,29 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             let _ = stream.shutdown(Shutdown::Both);
             break;
         }
-        let shared = shared.clone();
+        let shared2 = shared.clone();
+        let node2 = shared.node.clone();
         shared.live_handlers.fetch_add(1, Ordering::SeqCst);
-        handlers.push(std::thread::spawn(move || {
-            let conn = Connection::new(stream, None);
-            if let Err(e) = handle_conn(conn, &shared) {
-                crate::debug!("agg", "handler exit: {e:#}");
+        let spawned = std::thread::Builder::new()
+            .name(format!("{}-h{}", shared.node, conn_id))
+            .spawn(move || {
+                crate::obs::trace::adopt_node(&node2);
+                let conn = Connection::new(stream, None);
+                if let Err(e) = handle_conn(conn, &shared2) {
+                    crate::debug!("agg", "handler exit: {e:#}");
+                }
+                lock_or_die(&shared2.conns, "agg.conns")[conn_id] = None;
+                shared2.live_handlers.fetch_sub(1, Ordering::SeqCst);
+            });
+        match spawned {
+            Ok(h) => handlers.push(h),
+            Err(_) => {
+                // Spawn failed: the closure never ran, so undo its
+                // bookkeeping here.
+                lock_or_die(&shared.conns, "agg.conns")[conn_id] = None;
+                shared.live_handlers.fetch_sub(1, Ordering::SeqCst);
             }
-            lock_or_die(&shared.conns, "agg.conns")[conn_id] = None;
-            shared.live_handlers.fetch_sub(1, Ordering::SeqCst);
-        }));
+        }
     }
     for h in handlers {
         let _ = h.join();
@@ -460,7 +485,9 @@ fn deregister_identity(shared: &Shared, id: u32) -> Result<()> {
             }
         }
         for c in done {
-            forward_push(shared, c)?;
+            // No originating push frame here — the trigger was a
+            // departure, not a traced message — so no remote parent.
+            forward_push(shared, c, None)?;
         }
     }
     Ok(())
@@ -486,8 +513,16 @@ fn accumulate_push(
     codec_id: CodecId,
     data: &[u8],
     weight: u32,
+    ctx: Option<TraceCtx>,
 ) -> Result<Vec<Completed>> {
-    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_AGG_FAN_IN);
+    let mut sp = crate::obs::trace::span(crate::obs::trace::SPAN_AGG_FAN_IN);
+    if let Some(c) = ctx {
+        if !c.is_reply() {
+            // The downstream push is ack-synchronous, so this fan-in nests
+            // inside the sender's push window: a containment parent.
+            sp.set_remote_parent(c.parent_span);
+        }
+    }
     let wc = codec_id.codec();
     let target = group_target(shared);
     let mut off = 0usize;
@@ -517,22 +552,40 @@ fn accumulate_push(
 /// sum with the upstream codec and push it to the owning shard (send +
 /// ack under that shard's push-connection lock). The push is a *sum*, not
 /// an average — the shard's `lr / total-workers` scaling averages it.
-fn forward_push(shared: &Shared, c: Completed) -> Result<()> {
-    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_AGG_FORWARD);
+fn forward_push(shared: &Shared, c: Completed, ctx: Option<TraceCtx>) -> Result<()> {
+    let mut sp = crate::obs::trace::span(crate::obs::trace::SPAN_AGG_FORWARD);
+    if let Some(x) = ctx {
+        if !x.is_reply() {
+            // Parented to the downstream push that completed the fan-in:
+            // that worker still holds its push window open waiting for the
+            // ack this forward precedes.
+            sp.set_remote_parent(x.parent_span);
+        }
+    }
     let raw = slab::from_f32s(&c.sum);
     let wc = shared.up_codec.codec();
     let mut wire = Vec::with_capacity(shared.up_codec.wire_len(raw.len()));
     wc.encode(&raw, &mut wire);
     let srv = shared.shard.owner(c.layer);
     {
+        // The shard's apply span parents to THIS forward span, not the
+        // edge worker's push — the trace mirrors the two-hop topology.
+        let up_ctx = if sp.id() != 0 {
+            Some(TraceCtx::sampled(crate::obs::trace::trace_id_for(c.iter), sp.id()))
+        } else {
+            None
+        };
         let mut conn = lock_or_die(&shared.up_push[srv], "agg.upstream");
-        conn.send(&Message::Push {
-            iter: c.iter,
-            lo: c.layer as u32,
-            hi: c.layer as u32,
-            codec: shared.up_codec,
-            data: wire,
-        })?;
+        conn.send_ctx(
+            &Message::Push {
+                iter: c.iter,
+                lo: c.layer as u32,
+                hi: c.layer as u32,
+                codec: shared.up_codec,
+                data: wire,
+            },
+            up_ctx,
+        )?;
         match conn.recv()? {
             Message::PushAck { .. } => {}
             m => anyhow::bail!("bad upstream push ack: {m:?}"),
@@ -547,15 +600,17 @@ fn forward_push(shared: &Shared, c: Completed) -> Result<()> {
 /// per owning shard (requesting iteration `up_iter`), stitched back into
 /// ascending layer order, each layer's bytes re-encoded for the
 /// downstream codec — or passed through untouched when the hops agree.
-/// Returns the slab plus the oldest `applied` among the shard replies.
+/// Returns the slab plus the oldest `applied` among the shard replies and
+/// the fan-out span's id (0 untraced) — the reply-direction trace context
+/// every downstream reply sharing this assembly points back at.
 fn assemble_reply(
     shared: &Shared,
     up_iter: u64,
     lo: u32,
     hi: u32,
     down_codec: CodecId,
-) -> Result<(Arc<PooledSlab>, u64)> {
-    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_AGG_FAN_OUT);
+) -> Result<(Arc<PooledSlab>, u64, u32)> {
+    let mut sp = crate::obs::trace::span(crate::obs::trace::SPAN_AGG_FAN_OUT);
     let depth = shared.layer_elems.len();
     let lo_u = (lo as usize).min(depth - 1);
     let hi_u = (hi as usize).min(depth - 1);
@@ -565,13 +620,23 @@ fn assemble_reply(
     let servers = shared.shard.servers;
     let mut shard_replies: Vec<Option<Vec<u8>>> = (0..servers).map(|_| None).collect();
     let mut applied_min = u64::MAX;
+    let mut flow_from: Option<u32> = None;
     for sub in shared.shard.sub_requests(lo_u, hi_u) {
         let mut conn = lock_or_die(&shared.up_pull[sub.server], "agg.upstream");
         conn.send(&Message::Pull { iter: up_iter, lo, hi })?;
-        let (rcodec, applied, data) = match conn.recv()? {
-            Message::PullReply { codec, applied, data, .. } => (codec, applied, data),
-            m => anyhow::bail!("bad upstream pull reply: {m:?}"),
+        let (msg, up_ctx) = conn.recv_ref_ctx()?;
+        let (rcodec, applied, data) = match msg {
+            MessageRef::PullReply { codec, applied, data, .. } => {
+                (codec, applied, data.to_vec())
+            }
+            m => anyhow::bail!("bad upstream pull reply: {:?}", m.into_owned()),
         };
+        if flow_from.is_none() {
+            // First shard reply stitches the upstream assemble → this
+            // fan-out arrow (one arrow per assembly is enough to walk the
+            // chain; reply windows do not nest, hence flow not parent).
+            flow_from = up_ctx.filter(|c| c.is_reply()).map(|c| c.parent_span);
+        }
         drop(conn);
         anyhow::ensure!(
             rcodec == shared.up_codec,
@@ -613,7 +678,10 @@ fn assemble_reply(
         }
     }
     let applied = if applied_min == u64::MAX { up_iter } else { applied_min };
-    Ok((data.freeze(), applied))
+    if let Some(f) = flow_from {
+        sp.set_flow_from(f);
+    }
+    Ok((data.freeze(), applied, sp.id()))
 }
 
 /// Assemble a mid-run joiner's snapshot (`docs/FAULTS.md`): one
@@ -707,7 +775,7 @@ fn serve_pull(
     lo: u32,
     hi: u32,
     codec_id: CodecId,
-) -> Result<Option<(Arc<PooledSlab>, u64)>> {
+) -> Result<Option<(Arc<PooledSlab>, u64, u32)>> {
     let Some(gate) = shared.sync.admit_pull(worker, iter, &shared.shutting_down) else {
         return Ok(None);
     };
@@ -729,19 +797,21 @@ fn serve_pull(
             return Ok(None);
         }
         enum Peek {
-            Hit(Arc<PooledSlab>, u64),
+            Hit(Arc<PooledSlab>, u64, u32),
             Wait,
             Vacant,
         }
         let peek = match entries.get(&key) {
-            Some(ReplyState::Ready(slab, applied)) => Peek::Hit(slab.clone(), *applied),
+            Some(ReplyState::Ready(slab, applied, aspan)) => {
+                Peek::Hit(slab.clone(), *applied, *aspan)
+            }
             Some(ReplyState::Building) => Peek::Wait,
             None => Peek::Vacant,
         };
         match peek {
-            Peek::Hit(slab, applied) => {
+            Peek::Hit(slab, applied, aspan) => {
                 cache.hits.inc();
-                return Ok(Some((slab, applied)));
+                return Ok(Some((slab, applied, aspan)));
             }
             Peek::Wait => {
                 entries = wait_or_die(&cache.ready, entries, "reply_cache.entries");
@@ -752,15 +822,15 @@ fn serve_pull(
                 let built = assemble_reply(shared, key_iter, lo, hi, codec_id);
                 let mut relocked = lock_or_die(&cache.entries, "reply_cache.entries");
                 let out = match built {
-                    Ok((slab, applied)) => {
+                    Ok((slab, applied, aspan)) => {
                         cache.builds.inc();
-                        relocked.insert(key, ReplyState::Ready(slab.clone(), applied));
+                        relocked.insert(key, ReplyState::Ready(slab.clone(), applied, aspan));
                         // Same bounded-cache discipline as the server:
                         // keep in-flight keys, evict finished rounds.
                         relocked.retain(|k, v| {
                             matches!(v, ReplyState::Building) || k.0 + 1 >= key_iter
                         });
-                        Ok(Some((slab, applied)))
+                        Ok(Some((slab, applied, aspan)))
                     }
                     Err(e) => {
                         // Clear the Building marker so waiters don't park
@@ -782,9 +852,21 @@ fn serve_pull(
 enum Action {
     Register { id: u32, weight: u32, version: u16, role: &'static str },
     Reply(Message),
-    ReplyShared { iter: u64, lo: u32, hi: u32, applied: u64, slab: Arc<PooledSlab> },
+    ReplyShared {
+        iter: u64,
+        lo: u32,
+        hi: u32,
+        applied: u64,
+        slab: Arc<PooledSlab>,
+        /// Span id of the fan-out assembly serving this reply (0 =
+        /// untraced): sent as the reply-direction trace context.
+        aspan: u32,
+    },
     ReplySnapshot { iter: u64, lo: u32, hi: u32, slab: Arc<PooledSlab> },
-    Forward { acks: (u64, u32, u32), done: Vec<Completed> },
+    Forward { acks: (u64, u32, u32), done: Vec<Completed>, ctx: Option<TraceCtx> },
+    /// Answer a clock probe: `t1` echoed, `t2` stamped at decode; `t3` is
+    /// stamped at the send itself so it excludes handler queueing.
+    ReplyClock { t1: u64, t2: u64 },
     Close,
 }
 
@@ -816,7 +898,7 @@ fn handle_conn_inner(
 ) -> Result<()> {
     loop {
         let action = {
-            let msg = match conn.recv_ref() {
+            let (msg, ctx) = match conn.recv_ref_ctx() {
                 Ok(m) => m,
                 Err(_) => return Ok(()),
             };
@@ -839,8 +921,8 @@ fn handle_conn_inner(
                 }),
                 MessageRef::Pull { iter, lo, hi } => {
                     match serve_pull(shared, *session_worker, iter, lo, hi, *session_codec)? {
-                        Some((slab, applied)) => {
-                            Action::ReplyShared { iter, lo, hi, applied, slab }
+                        Some((slab, applied, aspan)) => {
+                            Action::ReplyShared { iter, lo, hi, applied, slab, aspan }
                         }
                         None => Action::Close,
                     }
@@ -857,8 +939,15 @@ fn handle_conn_inner(
                         codec,
                         data,
                         *session_weight,
+                        ctx,
                     )?;
-                    Action::Forward { acks: (iter, lo, hi), done }
+                    Action::Forward { acks: (iter, lo, hi), done, ctx }
+                }
+                MessageRef::ClockProbe { t1 } => {
+                    // Answered ungated — a probe must never park at a
+                    // barrier, or it would measure the sync policy instead
+                    // of the clock.
+                    Action::ReplyClock { t1, t2: crate::obs::trace::now_ns() }
                 }
                 MessageRef::SnapshotReq { lo, hi } => {
                     let (slab, iter) = assemble_snapshot(shared, lo, hi, *session_codec)?;
@@ -889,15 +978,26 @@ fn handle_conn_inner(
                 shared.connected.fetch_add(1, Ordering::SeqCst);
             }
             Action::Reply(m) => conn.send(&m)?,
-            Action::ReplyShared { iter, lo, hi, applied, slab } => {
-                conn.send_ref(MessageRef::PullReply {
-                    iter,
-                    lo,
-                    hi,
-                    applied,
-                    codec: *session_codec,
-                    data: &slab[..],
-                })?;
+            Action::ReplyShared { iter, lo, hi, applied, slab, aspan } => {
+                // When traced, the reply carries an arrow-only context
+                // pointing at the fan-out assembly it shares (reply
+                // windows do not nest inside the puller's).
+                let ctx = if aspan != 0 {
+                    Some(TraceCtx::reply(crate::obs::trace::trace_id_for(iter), aspan))
+                } else {
+                    None
+                };
+                conn.send_ref_ctx(
+                    MessageRef::PullReply {
+                        iter,
+                        lo,
+                        hi,
+                        applied,
+                        codec: *session_codec,
+                        data: &slab[..],
+                    },
+                    ctx,
+                )?;
             }
             Action::ReplySnapshot { iter, lo, hi, slab } => {
                 // Same malformed-at-0 floor as the shard's reply: the
@@ -912,15 +1012,22 @@ fn handle_conn_inner(
                     data: &slab[..],
                 })?;
             }
-            Action::Forward { acks: (iter, lo, hi), done } => {
+            Action::Forward { acks: (iter, lo, hi), done, ctx } => {
                 // Forward completed layers upstream (outside the
                 // accumulator locks), then ack the downstream push — the
                 // ack means the gradient is durably on its way, matching
                 // the blocking-ack contract workers already rely on.
                 for c in done {
-                    forward_push(shared, c)?;
+                    forward_push(shared, c, ctx)?;
                 }
                 conn.send(&Message::PushAck { iter, lo, hi })?;
+            }
+            Action::ReplyClock { t1, t2 } => {
+                conn.send(&Message::ClockReply {
+                    t1,
+                    t2,
+                    t3: crate::obs::trace::now_ns(),
+                })?;
             }
             Action::Close => return Ok(()),
         }

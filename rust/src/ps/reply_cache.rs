@@ -20,9 +20,11 @@ use crate::obs::Counter;
 pub(crate) enum ReplyState {
     /// A handler is assembling this reply; others wait on the condvar.
     Building,
-    /// Assembled (slab + the snapshot's applied iteration); served to
-    /// every subsequent puller as a cheap clone.
-    Ready(Arc<PooledSlab>, u64),
+    /// Assembled: slab + the snapshot's applied iteration + the span id of
+    /// the assembly that built it (0 when tracing is disarmed). The span
+    /// id rides along so cache-hit replies still carry a valid v7 trace
+    /// context pointing at the assembly they reuse.
+    Ready(Arc<PooledSlab>, u64, u32),
 }
 
 /// The shared pull-reply broadcast cache, keyed by

@@ -61,7 +61,7 @@ use anyhow::{Context, Result};
 use crate::net::codec::{self, CodecId, CodecStats, CodecStatsTable};
 use crate::net::pool::{PoolStats, PooledSlab, SlabPool};
 use crate::net::{
-    slab, Connection, Message, MessageRef, PeerRole, ShaperSpec, PROTOCOL_VERSION,
+    slab, Connection, Message, MessageRef, PeerRole, ShaperSpec, TraceCtx, PROTOCOL_VERSION,
 };
 use crate::ps::checkpoint::{Checkpoint, LayerRecord};
 use crate::ps::reply_cache::{ReplyCache, ReplyState};
@@ -528,6 +528,12 @@ impl Drop for ParamServer {
 
 fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<ShaperSpec>) {
     let mut handlers = Vec::new();
+    // The shard's node lane in the merged fleet trace: derived from the
+    // bound port, so no config plumbing is needed to tell shards apart.
+    let node = format!(
+        "shard-{}",
+        listener.local_addr().map(|a| a.port()).unwrap_or(0)
+    );
     loop {
         // Bounded handler pool: never hold more than `handler_threads`
         // live handlers. At the cap, stop accepting — further connections
@@ -577,18 +583,33 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
             let _ = stream.shutdown(Shutdown::Both);
             break;
         }
-        let shared = shared.clone();
+        let shared2 = shared.clone();
         let shaper = shaper.map(|s| s.build());
+        let node2 = node.clone();
         shared.live_handlers.fetch_add(1, Ordering::SeqCst);
-        handlers.push(std::thread::spawn(move || {
-            let conn = Connection::new(stream, shaper);
-            if let Err(e) = handle_conn(conn, &shared) {
-                crate::debug!("ps", "handler exit: {e:#}");
+        // Named handler threads so their span rings key stably and group
+        // into the shard's node lane in the merged trace.
+        let spawned = std::thread::Builder::new()
+            .name(format!("{node}-h{conn_id}"))
+            .spawn(move || {
+                crate::obs::trace::adopt_node(&node2);
+                let conn = Connection::new(stream, shaper);
+                if let Err(e) = handle_conn(conn, &shared2) {
+                    crate::debug!("ps", "handler exit: {e:#}");
+                }
+                // Free the registry slot (drops the duplicate fd) for reuse.
+                lock_or_die(&shared2.conns, "server.conns")[conn_id] = None;
+                shared2.live_handlers.fetch_sub(1, Ordering::SeqCst);
+            });
+        match spawned {
+            Ok(h) => handlers.push(h),
+            Err(e) => {
+                // The closure never ran: undo its bookkeeping here.
+                crate::debug!("ps", "handler spawn failed: {e}");
+                lock_or_die(&shared.conns, "server.conns")[conn_id] = None;
+                shared.live_handlers.fetch_sub(1, Ordering::SeqCst);
             }
-            // Free the registry slot (drops the duplicate fd) for reuse.
-            lock_or_die(&shared.conns, "server.conns")[conn_id] = None;
-            shared.live_handlers.fetch_sub(1, Ordering::SeqCst);
-        }));
+        }
     }
     for h in handlers {
         let _ = h.join();
@@ -600,8 +621,10 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>, shaper: Option<Shaper
 /// the sync policy's `gate`: `WaitFor` parks on the version condvars until
 /// the clock gets there (the BSP barrier), `Fresh` encodes whatever is
 /// applied right now. Returns the slab plus the snapshot's `applied`
-/// iteration (the min applied version among the served layers), or `None`
-/// when shutdown interrupts the wait.
+/// iteration (the min applied version among the served layers) and the
+/// assembly's span id (0 when tracing is disarmed; the reply-direction
+/// trace context points at it), or `None` when shutdown interrupts the
+/// wait.
 // dynalint: hot-path
 fn assemble_reply(
     shared: &Shared,
@@ -609,8 +632,8 @@ fn assemble_reply(
     lo: u32,
     hi: u32,
     codec_id: CodecId,
-) -> Option<(Arc<PooledSlab>, u64)> {
-    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_ASSEMBLE);
+) -> Option<(Arc<PooledSlab>, u64, u32)> {
+    let sp = crate::obs::trace::span(crate::obs::trace::SPAN_ASSEMBLE);
     // Pre-size from the immutable size map: one pooled checkout, then pure
     // per-layer codec appends under the slot locks (fp32 encodes as a bulk
     // `extend_from_slice`, so the uncompressed path is unchanged).
@@ -655,7 +678,7 @@ fn assemble_reply(
     shared
         .codec_stats
         .record_encode(codec_id, raw_total, data.len(), enc_ns, max_err);
-    Some((data.freeze(), applied))
+    Some((data.freeze(), applied, sp.id()))
 }
 
 /// Serve a pull from the shared broadcast cache, assembling at most once
@@ -669,11 +692,11 @@ fn pull_reply(
     lo: u32,
     hi: u32,
     codec_id: CodecId,
-) -> Option<(Arc<PooledSlab>, u64)> {
+) -> Option<(Arc<PooledSlab>, u64, u32)> {
     /// Snapshot of a cache entry's state, owned (no borrow spans the
     /// condvar wait or the insert below).
     enum Peek {
-        Hit(Arc<PooledSlab>, u64),
+        Hit(Arc<PooledSlab>, u64, u32),
         Wait,
         Vacant,
     }
@@ -687,14 +710,16 @@ fn pull_reply(
         }
         let peek = match entries.get(&key) {
             // dynalint: allow(alloc, Arc refcount bump on the cached slab, not a byte copy)
-            Some(ReplyState::Ready(slab, applied)) => Peek::Hit(slab.clone(), *applied),
+            Some(ReplyState::Ready(slab, applied, aspan)) => {
+                Peek::Hit(slab.clone(), *applied, *aspan)
+            }
             Some(ReplyState::Building) => Peek::Wait,
             None => Peek::Vacant,
         };
         match peek {
-            Peek::Hit(slab, applied) => {
+            Peek::Hit(slab, applied, aspan) => {
                 cache.hits.inc();
-                return Some((slab, applied));
+                return Some((slab, applied, aspan));
             }
             Peek::Wait => {
                 // Another handler is assembling this exact reply; wait for
@@ -707,10 +732,10 @@ fn pull_reply(
                 let built = assemble_reply(shared, gate, lo, hi, codec_id);
                 let mut relocked = lock_or_die(&cache.entries, "reply_cache.entries");
                 let out = match built {
-                    Some((slab, applied)) => {
+                    Some((slab, applied, aspan)) => {
                         cache.builds.inc();
                         // dynalint: allow(alloc, Arc refcount bump shares the slab with the cache)
-                        relocked.insert(key, ReplyState::Ready(slab.clone(), applied));
+                        relocked.insert(key, ReplyState::Ready(slab.clone(), applied, aspan));
                         // In-flight pulls stay within one key of each other
                         // (BSP: one iteration; SSP/ASP: one apply event);
                         // drop finished keys' slabs back to the pool so the
@@ -723,7 +748,7 @@ fn pull_reply(
                         relocked.retain(|k, v| {
                             matches!(v, ReplyState::Building) || k.0 + 1 >= key_iter
                         });
-                        Some((slab, applied))
+                        Some((slab, applied, aspan))
                     }
                     None => {
                         // Interrupted by shutdown: clear the Building
@@ -751,7 +776,7 @@ fn serve_pull(
     lo: u32,
     hi: u32,
     codec_id: CodecId,
-) -> Option<(Arc<PooledSlab>, u64)> {
+) -> Option<(Arc<PooledSlab>, u64, u32)> {
     let gate = shared.sync.admit_pull(worker, iter, &shared.shutting_down)?;
     let key_iter = match gate {
         // The barrier makes replies byte-identical per iteration — the
@@ -889,13 +914,21 @@ fn apply_push(
     codec_id: CodecId,
     data: &[u8],
     weight: u32,
+    ctx: Option<TraceCtx>,
 ) -> Result<()> {
     let wc = codec_id.codec();
     // Read the elastic barrier target before any slot lock (lock order);
     // `>=` because a shrinking target can leave an accumulator past it.
     let target = barrier_target(shared);
     let scale = shared.cfg.lr / shared.cfg.workers as f32;
-    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_APPLY);
+    let mut sp = crate::obs::trace::span(crate::obs::trace::SPAN_APPLY);
+    if let Some(c) = ctx {
+        if !c.is_reply() {
+            // Push direction is ack-synchronous, so this apply nests
+            // inside the sender's span window: a containment parent.
+            sp.set_remote_parent(c.parent_span);
+        }
+    }
     shared.ingress_bytes.add(data.len() as u64);
     let mut off = 0usize;
     let (mut raw_total, mut dec_ns) = (0usize, 0u64);
@@ -951,8 +984,20 @@ enum Action {
     Hello { worker: u32, version: u16 },
     AggHello { role: PeerRole, group: u32, workers: u32, version: u16 },
     Reply(Message),
-    ReplyShared { iter: u64, lo: u32, hi: u32, applied: u64, slab: Arc<PooledSlab> },
+    ReplyShared {
+        iter: u64,
+        lo: u32,
+        hi: u32,
+        applied: u64,
+        slab: Arc<PooledSlab>,
+        /// Span id of the assembly serving this reply (0 = untraced):
+        /// sent as the reply-direction trace context.
+        aspan: u32,
+    },
     ReplySnapshot { iter: u64, lo: u32, hi: u32, slab: Arc<PooledSlab> },
+    /// Answer a clock probe: `t1` echoed, `t2` stamped at decode; `t3` is
+    /// stamped at the send itself so it excludes handler queueing.
+    ReplyClock { t1: u64, t2: u64 },
     Close,
 }
 
@@ -995,7 +1040,7 @@ fn handle_conn_inner(
 ) -> Result<()> {
     loop {
         let action = {
-            let msg = match conn.recv_ref() {
+            let (msg, ctx) = match conn.recv_ref_ctx() {
                 Ok(m) => m,
                 // Peer hung up (or shutdown killed the socket): normal
                 // teardown.
@@ -1023,8 +1068,8 @@ fn handle_conn_inner(
                 }
                 MessageRef::Pull { iter, lo, hi } => {
                     match serve_pull(shared, *session_worker, iter, lo, hi, *session_codec) {
-                        Some((slab, applied)) => {
-                            Action::ReplyShared { iter, lo, hi, applied, slab }
+                        Some((slab, applied, aspan)) => {
+                            Action::ReplyShared { iter, lo, hi, applied, slab, aspan }
                         }
                         // Shutting down: no reply, drop the session.
                         None => Action::Close,
@@ -1033,10 +1078,18 @@ fn handle_conn_inner(
                 MessageRef::Push { iter, lo, hi, codec, data } => {
                     // Gradients are consumed borrowed — no payload copy —
                     // decoded by the frame's own codec tag, applied as the
-                    // sync policy decides (barrier vs immediate).
+                    // sync policy decides (barrier vs immediate). The
+                    // frame's trace context (if any) parents the apply
+                    // span to the sender's push/forward span.
                     let apply = shared.sync.on_push(*session_worker, iter);
-                    apply_push(shared, apply, iter, lo, hi, codec, data, *session_weight)?;
+                    apply_push(shared, apply, iter, lo, hi, codec, data, *session_weight, ctx)?;
                     Action::Reply(Message::PushAck { iter, lo, hi })
+                }
+                MessageRef::ClockProbe { t1 } => {
+                    // Answered ungated — a probe must never park at a
+                    // barrier, or it would measure the sync policy instead
+                    // of the clock.
+                    Action::ReplyClock { t1, t2: crate::obs::trace::now_ns() }
                 }
                 MessageRef::SnapshotReq { lo, hi } => {
                     // Mid-run join (`docs/FAULTS.md`): serve the freshest
@@ -1047,7 +1100,7 @@ fn handle_conn_inner(
                     // outside the broadcast cache is fine.
                     match assemble_reply(shared, PullGate::Fresh, lo, hi, *session_codec)
                     {
-                        Some((slab, applied)) => {
+                        Some((slab, applied, _)) => {
                             Action::ReplySnapshot { iter: applied, lo, hi, slab }
                         }
                         None => Action::Close,
@@ -1104,18 +1157,28 @@ fn handle_conn_inner(
                 shared.connected.fetch_add(1, Ordering::SeqCst);
             }
             Action::Reply(m) => conn.send(&m)?,
-            Action::ReplyShared { iter, lo, hi, applied, slab } => {
+            Action::ReplyShared { iter, lo, hi, applied, slab, aspan } => {
                 // The cached slab goes out borrowed, scatter-gather — the
                 // broadcast bytes are written once per worker but copied
-                // zero times.
-                conn.send_ref(MessageRef::PullReply {
-                    iter,
-                    lo,
-                    hi,
-                    applied,
-                    codec: *session_codec,
-                    data: &slab[..],
-                })?;
+                // zero times. When traced, the reply carries an arrow-only
+                // context pointing at the assembly span (reply windows do
+                // not nest inside the puller's).
+                let ctx = if aspan != 0 {
+                    Some(TraceCtx::reply(crate::obs::trace::trace_id_for(iter), aspan))
+                } else {
+                    None
+                };
+                conn.send_ref_ctx(
+                    MessageRef::PullReply {
+                        iter,
+                        lo,
+                        hi,
+                        applied,
+                        codec: *session_codec,
+                        data: &slab[..],
+                    },
+                    ctx,
+                )?;
             }
             Action::ReplySnapshot { iter, lo, hi, slab } => {
                 // Floor at 1: the frame's fleet size is malformed at 0,
@@ -1127,6 +1190,13 @@ fn handle_conn_inner(
                     workers: (shared.cfg.workers as u32).max(1),
                     codec: *session_codec,
                     data: &slab[..],
+                })?;
+            }
+            Action::ReplyClock { t1, t2 } => {
+                conn.send(&Message::ClockReply {
+                    t1,
+                    t2,
+                    t3: crate::obs::trace::now_ns(),
                 })?;
             }
             Action::Close => return Ok(()),

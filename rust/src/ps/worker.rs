@@ -36,7 +36,7 @@ use crate::config::Strategy;
 use crate::net::codec::ef::ErrorFeedback;
 use crate::net::codec::{CodecId, CodecStats, CodecStatsTable};
 use crate::net::pool::{SlabCheckout, SlabPool};
-use crate::net::{Connection, LinkShaper, Message, RecvMsg, PROTOCOL_VERSION};
+use crate::net::{Connection, LinkShaper, Message, RecvMsg, TraceCtx, PROTOCOL_VERSION};
 use crate::profiler::Profiler;
 use crate::ps::exec::{ExecPlan, SegmentPull, SlabSlice};
 use crate::ps::sharding::ShardMap;
@@ -91,6 +91,12 @@ pub struct WorkerConfig {
     /// slowest straggler: barrier waits are served through the same
     /// sockets.
     pub io_timeout_ms: u64,
+    /// Re-probe the per-shard clock offsets every this many iterations
+    /// (`--clock-probe-every`; 0 disables periodic probing). A burst
+    /// always runs at connect, so the merged fleet trace has an offset
+    /// for every peer lane (`docs/OBSERVABILITY.md`); periodic re-probes
+    /// track drift on long runs.
+    pub clock_probe_every: usize,
 }
 
 /// Per-run observability, returned to the trainer.
@@ -458,7 +464,7 @@ impl EdgeWorker {
         };
         let exec =
             Arc::new(ExecPlan::compile(&plan, &layer_bytes, shard, pool.clone(), codec));
-        Ok(EdgeWorker {
+        let mut worker = EdgeWorker {
             cfg,
             runtime,
             conns,
@@ -476,7 +482,25 @@ impl EdgeWorker {
             last_staleness: 0,
             last_predicted: None,
             obs: WorkerObs::new(),
-        })
+        };
+        // Align clocks with every peer at establish (docs/OBSERVABILITY.md):
+        // a short burst, keeping the minimum-uncertainty sample per peer.
+        worker.probe_clocks(3)?;
+        Ok(worker)
+    }
+
+    /// Re-measure the per-peer clock offsets over the registered sessions
+    /// (a burst of `rounds` NTP-style probes each, the tightest round-trip
+    /// kept). Callable only at lock-step points — between iterations or
+    /// right after connect — where no pull/push is in flight on these
+    /// sockets. Peers are named by their dialed port (`shard-{port}`),
+    /// matching the lane name a shard derives for itself.
+    pub fn probe_clocks(&mut self, rounds: usize) -> Result<()> {
+        for (conn, addr) in self.conns.iter_mut().zip(&self.cfg.server_addrs) {
+            crate::obs::clock::probe_and_note(conn, &format!("shard-{}", addr.port()), rounds)
+                .with_context(|| format!("clock probe against {addr}"))?;
+        }
+        Ok(())
     }
 
     /// The synchronization mode every shard confirmed for this session.
@@ -589,7 +613,18 @@ impl EdgeWorker {
         mut next_batch: impl FnMut(u64) -> (Tensor, Tensor),
     ) -> Result<WorkerReport> {
         let mut report = WorkerReport::default();
+        // This worker's lane in the merged fleet trace: the main thread
+        // and the per-iteration puller/pusher threads all record onto it.
+        crate::obs::trace::adopt_node(&format!("worker-{}", self.cfg.id));
         for i in 0..iters {
+            if self.cfg.clock_probe_every > 0
+                && i > 0
+                && (i as usize) % self.cfg.clock_probe_every == 0
+            {
+                // Between iterations the sessions are lock-step idle: a
+                // probe frame cannot interleave with a pull or push.
+                self.probe_clocks(1)?;
+            }
             if i > 0 && (i as usize) % self.cfg.reschedule_every == 0 {
                 if let Some(r) = self.reschedule() {
                     report.sched_ms.push(r.sched_ms);
@@ -644,11 +679,13 @@ impl EdgeWorker {
         let exec_pull = exec.clone();
         let pull_pool = self.pool.clone();
         let pull_stats = self.codec_stats.clone();
+        let pull_node = format!("worker-{}", self.cfg.id);
         let puller = std::thread::Builder::new()
             .name(format!("puller-{}", self.cfg.id))
             .spawn(move || -> Result<()> {
+                crate::obs::trace::adopt_node(&pull_node);
                 for seg in &exec_pull.fwd {
-                    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_PULL_SEG);
+                    let mut sp = crate::obs::trace::span(crate::obs::trace::SPAN_PULL_SEG);
                     let t0 = Instant::now();
                     // Oldest snapshot served across the segment's shards.
                     let mut seg_applied = u64::MAX;
@@ -664,7 +701,14 @@ impl EdgeWorker {
                         // is consumed.
                         let (rcodec, applied, data) =
                             match puller_conns[sub.server].recv_pooled(&pull_pool)? {
-                                RecvMsg::PullReply { codec, applied, data, .. } => {
+                                RecvMsg::PullReply { codec, applied, data, ctx, .. } => {
+                                    if let Some(c) = ctx.filter(|c| c.is_reply()) {
+                                        // Stitch the serving assembly into
+                                        // this segment's lane: an arrow,
+                                        // not a parent — reply windows do
+                                        // not nest inside the puller's.
+                                        sp.set_flow_from(c.parent_span);
+                                    }
                                     (codec, applied, data)
                                 }
                                 m => anyhow::bail!("bad pull reply: {m:?}"),
@@ -797,12 +841,14 @@ impl EdgeWorker {
             pusher_conns.push(c.try_clone()?);
         }
         let exec_push = exec.clone();
+        let push_node = format!("worker-{}", self.cfg.id);
         let pusher = std::thread::Builder::new()
             .name(format!("pusher-{}", self.cfg.id))
             .spawn(move || -> Result<Vec<(usize, f64)>> {
+                crate::obs::trace::adopt_node(&push_node);
                 let mut stats = Vec::new();
                 while let Ok((si, slabs)) = grad_rx.recv() {
-                    let _sp = crate::obs::trace::span(crate::obs::trace::SPAN_PUSH_SEG);
+                    let sp = crate::obs::trace::span(crate::obs::trace::SPAN_PUSH_SEG);
                     let seg = &exec_push.bwd[si];
                     anyhow::ensure!(
                         slabs.len() == seg.hi - seg.lo + 1,
@@ -827,12 +873,25 @@ impl EdgeWorker {
                             );
                             parts.push(&s[..]);
                         }
+                        // The receiver (shard apply / aggregator fan-in)
+                        // records its span with this segment span as its
+                        // remote parent: the push is ack-synchronous, so
+                        // the receiver's work nests inside this window.
+                        let ctx = if sp.id() != 0 {
+                            Some(TraceCtx::sampled(
+                                crate::obs::trace::trace_id_for(iter),
+                                sp.id(),
+                            ))
+                        } else {
+                            None
+                        };
                         pusher_conns[sub.server].send_push_parts(
                             iter,
                             seg.lo as u32,
                             seg.hi as u32,
                             exec_push.codec,
                             &parts,
+                            ctx,
                         )?;
                         match pusher_conns[sub.server].recv()? {
                             Message::PushAck { .. } => {}

@@ -101,8 +101,15 @@ pub struct TrainConfig {
     /// docs/OBSERVABILITY.md); `None` disables it.
     pub metrics_addr: Option<String>,
     /// Chrome trace-event JSON output path (`--trace-out`): arms span
-    /// tracing for the run and exports the rings here on shutdown.
+    /// tracing for the run and exports the merged fleet trace here on
+    /// shutdown — one file, one process lane per node, offset-corrected
+    /// timestamps, flow arrows across lanes (docs/OBSERVABILITY.md). A
+    /// critical-path report (`{path}.critpath.json` + a printed breakdown
+    /// table) is derived from it in the same pass.
     pub trace_out: Option<String>,
+    /// Worker clock-probe cadence, iterations (`--clock-probe-every`;
+    /// 0 keeps only the establish-time burst).
+    pub clock_probe_every: usize,
 }
 
 impl Default for TrainConfig {
@@ -137,6 +144,7 @@ impl Default for TrainConfig {
             restore_dir: None,
             metrics_addr: None,
             trace_out: None,
+            clock_probe_every: 64,
         }
     }
 }
@@ -166,6 +174,9 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     if cfg.trace_out.is_some() {
         crate::obs::trace::set_enabled(true);
     }
+    // One trace id per logical iteration fleet-wide: every node hashes the
+    // same run seed, so cross-process span links agree on their trace ids.
+    crate::obs::trace::set_run_seed(cfg.seed);
     let mut metrics_srv = match &cfg.metrics_addr {
         Some(addr) => Some(crate::obs::expo::MetricsServer::bind(addr)?),
         None => None,
@@ -297,6 +308,7 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
             staleness_bound: cfg.staleness_bound,
             error_feedback: cfg.error_feedback,
             io_timeout_ms: cfg.io_timeout_ms,
+            clock_probe_every: cfg.clock_probe_every,
         };
         let ds = dataset.clone();
         let want_params = w == 0;
@@ -319,11 +331,15 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
 
     let mut per_worker = Vec::with_capacity(cfg.workers);
     let mut final_params = None;
-    for h in handles {
+    for (w, h) in handles.into_iter().enumerate() {
         let (report, params) = h
             .join()
             .map_err(|_| anyhow::anyhow!("worker thread panicked"))?
             .context("worker failed")?;
+        // Federation (docs/OBSERVABILITY.md): re-export each member's
+        // end-of-run metrics snapshot from the trainer's scrape endpoint,
+        // relabelled with its node, so one scrape sees the whole fleet.
+        crate::obs::expo::note_federated(&format!("worker-{w}"), report.metrics.clone());
         per_worker.push(report);
         if params.is_some() {
             final_params = params;
@@ -340,6 +356,17 @@ pub fn train(cfg: &TrainConfig) -> Result<TrainResult> {
     if let Some(path) = &cfg.trace_out {
         crate::obs::trace::write_chrome_trace(path)
             .with_context(|| format!("writing trace to {path}"))?;
+        // Critical-path pass over the merged trace (obs::critpath): the
+        // per-hop breakdown lands next to the trace as JSON, prints as a
+        // table, and registers the `dynacomm_critical_path_ms` gauges.
+        let trace = std::fs::read_to_string(path)
+            .with_context(|| format!("re-reading trace {path}"))?;
+        let report = crate::obs::critpath::analyze(&trace)
+            .with_context(|| format!("critical-path analysis of {path}"))?;
+        let report_path = format!("{path}.critpath.json");
+        std::fs::write(&report_path, report.to_json().to_string())
+            .with_context(|| format!("writing critical-path report {report_path}"))?;
+        print!("{}", report.table());
     }
     if let Some(srv) = metrics_srv.as_mut() {
         srv.shutdown();

@@ -93,7 +93,7 @@ fn random_message(rng: &mut Rng) -> Message {
     // v6 snapshot frames: the reply always names a non-zero fleet size
     // (the decoder rejects 0 — covered separately below).
     let snap_workers = 1 + rng.below(64) as u32;
-    match rng.below(14) {
+    match rng.below(16) {
         0 => Message::Pull { iter: rng.next_u64(), lo: rng.below(100) as u32, hi: rng.below(100) as u32 },
         1 => Message::PullReply {
             iter: rng.next_u64(),
@@ -134,6 +134,13 @@ fn random_message(rng: &mut Rng) -> Message {
             workers: snap_workers,
             codec,
             data,
+        },
+        // v7 clock frames: all three timestamps are opaque u64 nanos.
+        13 => Message::ClockProbe { t1: rng.next_u64() },
+        14 => Message::ClockReply {
+            t1: rng.next_u64(),
+            t2: rng.next_u64(),
+            t3: rng.next_u64(),
         },
         _ => Message::Shutdown,
     }
@@ -215,6 +222,9 @@ fn exemplar_messages() -> Vec<Message> {
         },
         Message::SnapshotReq { lo: 0, hi: 3 },
         Message::SnapshotReply { iter: 7, lo: 0, hi: 3, workers: 4, codec, data },
+        // v7: the clock-alignment pair, again appended last.
+        Message::ClockProbe { t1: 17 },
+        Message::ClockReply { t1: 17, t2: 19, t3: 23 },
     ]
 }
 
@@ -225,12 +235,12 @@ fn decoder_rejects_mutations_of_every_frame_tag() {
     let msgs = exemplar_messages();
 
     // Coverage gate: the exemplars span exactly the contiguous tag space
-    // 1..=14 with no duplicates, so adding a frame to the protocol forces
+    // 1..=16 with no duplicates, so adding a frame to the protocol forces
     // an exemplar (and the mutations below) for it.
     let mut tags: Vec<u8> = msgs.iter().map(|m| m.opcode()).collect();
     tags.sort_unstable();
     tags.dedup();
-    assert_eq!(tags, (1u8..=14).collect::<Vec<u8>>());
+    assert_eq!(tags, (1u8..=16).collect::<Vec<u8>>());
 
     for m in &msgs {
         let enc = m.encode();

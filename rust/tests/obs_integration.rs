@@ -24,17 +24,24 @@
 
 use std::collections::HashMap;
 use std::net::TcpStream;
-use std::sync::{Arc, Barrier};
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::Duration;
 
 use dynacomm::net::codec::CodecId;
-use dynacomm::net::{slab, Connection, Message, PROTOCOL_VERSION};
+use dynacomm::net::{slab, Connection, Message, MessageRef, TraceCtx, PROTOCOL_VERSION};
 use dynacomm::obs;
 use dynacomm::obs::expo::{scrape, MetricsServer};
-use dynacomm::obs::trace;
+use dynacomm::obs::{clock, critpath, trace};
+use dynacomm::ps::sync::SyncConfig;
 use dynacomm::ps::worker::record_overlap_drift;
-use dynacomm::ps::{ParamServer, ServerConfig, ServerOptions};
+use dynacomm::ps::{AggConfig, ParamServer, RegionalAggregator, ServerConfig, ServerOptions};
 use dynacomm::util::json::Json;
+
+/// Both artifact-writing tests export the full-process trace to the same
+/// `results/obs_trace.json`, and the harness runs tests in parallel —
+/// serialize the writes. (Every export is a full-process snapshot of
+/// completed spans, so either ordering leaves valid JSON on disk.)
+static ARTIFACT_LOCK: Mutex<()> = Mutex::new(());
 
 const ELEMS: usize = 1500;
 const LR: f32 = 0.1;
@@ -205,6 +212,14 @@ fn chrome_trace_export_is_valid_balanced_and_monotone() {
         let name = e.get("name").and_then(Json::as_str).unwrap().to_string();
         match ph {
             "M" => continue, // thread_name metadata carries no ts
+            // Flow arrows (v7 cross-process links, possibly recorded by a
+            // concurrently running test in this process-global export):
+            // their ts sits at their endpoints' begins, outside this
+            // per-lane monotonicity contract.
+            "s" | "f" => {
+                assert_eq!(name, "ctx", "flow arrows are named ctx");
+                continue;
+            }
             "B" | "E" => {
                 assert!(
                     trace::SPAN_NAMES.contains(&name.as_str()),
@@ -366,6 +381,7 @@ fn obs_e2e_scrape_mid_run_and_trace_artifact() {
     }
     puller.join().unwrap();
 
+    let _artifact = ARTIFACT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/results/obs_trace.json");
     trace::write_chrome_trace(path).unwrap();
     let text = std::fs::read_to_string(path).unwrap();
@@ -385,4 +401,325 @@ fn obs_e2e_scrape_mid_run_and_trace_artifact() {
     // The server side traced its own half of the run too.
     assert!(spans.iter().any(|(_, n, ..)| n == "assemble"));
     assert!(spans.iter().any(|(_, n, ..)| n == "apply"));
+}
+
+const FLEET_WORKERS: usize = 2;
+const FLEET_ITERS: u64 = 6;
+/// Skew injected into the shard's clock (75 ms): large against the 5 ms
+/// containment slop below, so the assertions only pass if the probe
+/// measured it and the export removed it.
+const FLEET_SKEW_NS: i64 = 75_000_000;
+
+/// One completed span from the exported trace, with its fleet links.
+struct LSpan {
+    pid: u64,
+    node: String,
+    name: String,
+    begin: f64,
+    end: f64,
+    id: u32,
+    parent: u32,
+}
+
+/// Pair every `B`/`E` into completed spans (per-lane stack — the export
+/// is well nested by construction) and index them by span id.
+fn linked_spans(events: &[Json]) -> (Vec<LSpan>, HashMap<u32, usize>) {
+    let mut node_of_pid: HashMap<u64, String> = HashMap::new();
+    for e in events {
+        if e.get("ph").and_then(Json::as_str) == Some("M")
+            && e.get("name").and_then(Json::as_str) == Some("process_name")
+        {
+            let pid = e.get("pid").and_then(Json::as_f64).unwrap() as u64;
+            let name =
+                e.get("args").and_then(|a| a.get("name")).and_then(Json::as_str).unwrap();
+            node_of_pid.insert(pid, name.to_string());
+        }
+    }
+    let mut stacks: HashMap<(u64, u64), Vec<LSpan>> = HashMap::new();
+    let mut spans = Vec::new();
+    for e in events {
+        let ph = e.get("ph").and_then(Json::as_str).unwrap_or("");
+        if ph != "B" && ph != "E" {
+            continue;
+        }
+        let pid = e.get("pid").and_then(Json::as_f64).unwrap() as u64;
+        let tid = e.get("tid").and_then(Json::as_f64).unwrap() as u64;
+        let ts = e.get("ts").and_then(Json::as_f64).unwrap();
+        if ph == "B" {
+            let arg = |k: &str| {
+                e.get("args").and_then(|a| a.get(k)).and_then(Json::as_f64).unwrap_or(0.0)
+                    as u32
+            };
+            stacks.entry((pid, tid)).or_default().push(LSpan {
+                pid,
+                node: node_of_pid.get(&pid).cloned().unwrap_or_default(),
+                name: e.get("name").and_then(Json::as_str).unwrap().to_string(),
+                begin: ts,
+                end: ts,
+                id: arg("id"),
+                parent: arg("parent"),
+            });
+        } else {
+            let mut s = stacks
+                .get_mut(&(pid, tid))
+                .and_then(Vec::pop)
+                .expect("balanced B/E per lane");
+            s.end = ts;
+            spans.push(s);
+        }
+    }
+    let by_id = spans
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.id != 0)
+        .map(|(i, s)| (s.id, i))
+        .collect();
+    (spans, by_id)
+}
+
+/// One traced fleet train step against the aggregator: pull (flow-linked
+/// to the reply's fan-out context), a deliberate compute span, push
+/// carrying this worker's v7 trace context.
+fn fleet_step(conn: &mut Connection, iter: u64) {
+    let data = {
+        let mut sp = trace::span(trace::SPAN_PULL_SEG);
+        conn.send(&Message::Pull { iter, lo: 0, hi: 0 }).unwrap();
+        let (msg, ctx) = conn.recv_ref_ctx().unwrap();
+        let data = match msg {
+            MessageRef::PullReply { data, .. } => data.to_vec(),
+            m => panic!("{:?}", m.into_owned()),
+        };
+        if let Some(c) = ctx.filter(TraceCtx::is_reply) {
+            sp.set_flow_from(c.parent_span);
+        }
+        data
+    };
+    let grad: Vec<f32> = {
+        let _fwd = trace::span(trace::SPAN_FWD_LAYER);
+        // Deliberate compute floor: keeps each iteration's wall time well
+        // above scheduling noise so the 10% breakdown check is stable.
+        std::thread::sleep(Duration::from_millis(8));
+        slab::to_f32s(&data)
+            .iter()
+            .enumerate()
+            .map(|(j, v)| 2.0 * (v - target(j)))
+            .collect()
+    };
+    let mut sp = trace::span(trace::SPAN_PUSH_SEG);
+    let ctx = (sp.id() != 0)
+        .then(|| TraceCtx::sampled(trace::trace_id_for(iter), sp.id()));
+    conn.send_ctx(
+        &Message::Push {
+            iter,
+            lo: 0,
+            hi: 0,
+            codec: CodecId::Fp32,
+            data: slab::from_f32s(&grad),
+        },
+        ctx,
+    )
+    .unwrap();
+    assert!(matches!(conn.recv().unwrap(), Message::PushAck { .. }));
+    drop(sp);
+}
+
+/// The fleet-tracing acceptance scenario: 2 workers x 1 aggregator x 1
+/// shard over loopback, shard clock skewed by 75 ms. Asserts the three
+/// v7 contracts end to end:
+///
+/// * every iteration's combined push reaches the shard as an `apply`
+///   span whose parent chain (apply -> agg-forward -> worker push-seg)
+///   crosses process lanes, with a flow arrow (`s`/`f`) stitching it;
+/// * offset-corrected timestamps keep every parent-linked child span
+///   inside its parent's window despite the injected skew;
+/// * the critical-path breakdown of every iteration sums to its wall
+///   time, and the wall time matches the externally measured iteration
+///   time within 10%.
+#[test]
+fn fleet_trace_e2e_flow_links_skew_correction_and_critical_path() {
+    trace::set_enabled(true);
+    trace::set_run_seed(0xF1EE7);
+    let shard = {
+        let mut layers = HashMap::new();
+        layers.insert(0, vec![0.0f32; ELEMS]);
+        ParamServer::start(
+            ServerConfig { workers: FLEET_WORKERS, lr: LR },
+            layers,
+            None,
+        )
+        .unwrap()
+    };
+    let shard_node = format!("shard-{}", shard.handle().addr.port());
+    // Inject the skew BEFORE the aggregator boots: its upstream connect
+    // probes the shard at session establish, and the shard's handler
+    // threads adopt the (now skewed) node when the sessions arrive.
+    trace::set_node_skew_ns(&shard_node, FLEET_SKEW_NS);
+    let mut agg = RegionalAggregator::start(AggConfig {
+        group: 200,
+        workers: FLEET_WORKERS as u32,
+        upstream_addrs: vec![shard.handle().addr],
+        layer_elems: vec![ELEMS],
+        downstream_sync: SyncConfig::default(),
+        upstream_sync: SyncConfig::default(),
+        upstream_codec: CodecId::Fp32,
+        handler_threads: FLEET_WORKERS + 2,
+        io_timeout_ms: 0,
+    })
+    .unwrap();
+    let off = clock::node_offset_ns(&shard_node);
+    assert!(
+        (off - FLEET_SKEW_NS).abs() < 10_000_000,
+        "boot-time probe measured the injected skew: got {off} ns"
+    );
+
+    let gate = Arc::new(Barrier::new(FLEET_WORKERS));
+    let handles: Vec<_> = (0..FLEET_WORKERS)
+        .map(|w| {
+            let addr = agg.addr();
+            let gate = gate.clone();
+            std::thread::Builder::new()
+                .name(format!("fleet-worker-{w}"))
+                .spawn(move || {
+                    trace::adopt_node(&format!("worker-{w}"));
+                    let mut conn = register(addr, w as u32);
+                    clock::probe_and_note(&mut conn, "agg-200", 3).unwrap();
+                    let mut measured_us = Vec::new();
+                    for iter in 0..FLEET_ITERS {
+                        gate.wait();
+                        let t0 = std::time::Instant::now();
+                        {
+                            let _it = trace::span(trace::SPAN_ITERATION);
+                            fleet_step(&mut conn, iter);
+                        }
+                        measured_us.push(t0.elapsed().as_secs_f64() * 1e6);
+                    }
+                    measured_us
+                })
+                .unwrap()
+        })
+        .collect();
+    let measured: Vec<Vec<f64>> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    // Same-process peers: the worker->aggregator offset is genuinely ~0,
+    // so the per-peer gauges tell the skewed shard apart from the agg.
+    assert!(
+        clock::node_offset_ns("agg-200").abs() < 10_000_000,
+        "unskewed peer's measured offset stays near zero"
+    );
+    agg.shutdown();
+    drop(shard);
+
+    let _artifact = ARTIFACT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/results/obs_trace.json");
+    trace::write_chrome_trace(path).unwrap();
+    let text = std::fs::read_to_string(path).unwrap();
+    let json = Json::parse(&text).expect("fleet trace is valid JSON");
+    let events = json.get("traceEvents").and_then(Json::as_arr).unwrap();
+    let (spans, by_id) = linked_spans(events);
+
+    // (1) Cross-process causality: each iteration's apply span on the
+    // shard lane walks apply -> agg-forward -> worker push-seg through
+    // its parent links, across distinct process lanes.
+    let chained_applies: Vec<&LSpan> = spans
+        .iter()
+        .filter(|s| s.name == "apply" && s.node == shard_node)
+        .filter(|s| {
+            let mut cur: &LSpan = s;
+            for _ in 0..8 {
+                let Some(&j) = by_id.get(&cur.parent) else { return false };
+                cur = &spans[j];
+                if cur.name == "push-seg" && cur.node.starts_with("worker-") {
+                    return cur.pid != s.pid;
+                }
+            }
+            false
+        })
+        .collect();
+    assert!(
+        chained_applies.len() >= FLEET_ITERS as usize,
+        "every iteration's apply chains back to a worker push across lanes: \
+         {} of {FLEET_ITERS}",
+        chained_applies.len()
+    );
+    // ...and each such link is rendered as a flow arrow: the `s` at the
+    // parent's begin and the bound `f` at the apply's begin share the
+    // apply's parent-kind arrow id.
+    let arrow_ids = |ph: &str| -> Vec<u64> {
+        events
+            .iter()
+            .filter(|e| {
+                e.get("ph").and_then(Json::as_str) == Some(ph)
+                    && e.get("name").and_then(Json::as_str) == Some("ctx")
+            })
+            .map(|e| e.get("id").and_then(Json::as_f64).unwrap() as u64)
+            .collect()
+    };
+    let (starts, finishes) = (arrow_ids("s"), arrow_ids("f"));
+    for a in &chained_applies {
+        let arrow = (a.id as u64) << 1;
+        assert!(starts.contains(&arrow), "flow start for apply span {}", a.id);
+        assert!(finishes.contains(&arrow), "flow finish for apply span {}", a.id);
+    }
+
+    // (2) Skew correction: every parent-linked child sits inside its
+    // parent's window after offset correction. 5 ms of slop for probe
+    // error — 15x smaller than the injected 75 ms skew.
+    const SLOP_US: f64 = 5_000.0;
+    let mut checked = 0usize;
+    for s in &spans {
+        let Some(&j) = by_id.get(&s.parent) else { continue };
+        let p = &spans[j];
+        assert!(
+            s.begin >= p.begin - SLOP_US && s.end <= p.end + SLOP_US,
+            "{} [{:.0}, {:.0}]us escapes its parent {} [{:.0}, {:.0}]us",
+            s.name,
+            s.begin,
+            s.end,
+            p.name,
+            p.begin,
+            p.end
+        );
+        checked += 1;
+    }
+    assert!(
+        checked >= 3 * FLEET_ITERS as usize,
+        "fan-in/forward/apply links all containment-checked: {checked}"
+    );
+
+    // (3) Critical path: exact per-iteration accounting, and the span
+    // windows agree with the externally measured wall times.
+    let report = critpath::analyze(&text).expect("critical-path analysis");
+    let report_path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/results/obs_trace.json.critpath.json"
+    );
+    std::fs::write(report_path, report.to_json()).unwrap();
+    assert_eq!(
+        report.iterations.len(),
+        FLEET_WORKERS * FLEET_ITERS as usize,
+        "one breakdown per worker iteration"
+    );
+    for it in &report.iterations {
+        let sum: f64 = it.hops_us.iter().sum();
+        assert!(
+            (sum - it.wall_us).abs() < 1.0,
+            "breakdown sums to wall time: {sum} vs {}",
+            it.wall_us
+        );
+    }
+    for (w, worker_measured) in measured.iter().enumerate() {
+        let node = format!("worker-{w}");
+        let rep: Vec<_> =
+            report.iterations.iter().filter(|it| it.node == node).collect();
+        assert_eq!(rep.len(), FLEET_ITERS as usize, "{node} iterations reported");
+        // Report iterations are begin-sorted, so they pair with the
+        // worker's own measurements in order.
+        for (it, &m_us) in rep.iter().zip(worker_measured) {
+            assert!(
+                (it.wall_us - m_us).abs() <= 0.10 * m_us,
+                "{node}: traced wall {:.0}us vs measured {m_us:.0}us",
+                it.wall_us
+            );
+        }
+    }
 }
